@@ -1,0 +1,74 @@
+//! Budget sweep: how the HBM envelope shapes the precision plan and the
+//! serving outcome (modeled engine, qwen30b-sim at paper scale).
+//!
+//! Sweeps the device budget from "barely fits all-cold" to "everything
+//! hot", printing the derived per-layer hot capacity, achieved hi-tier
+//! traffic share, throughput, and migration volume.
+//!
+//! ```bash
+//! cargo run --release --example budget_sweep
+//! ```
+
+use dynaexq::bench::Table;
+use dynaexq::config::{DeviceConfig, ModelPreset, ServingConfig};
+use dynaexq::serving::backend::DynaExqBackend;
+use dynaexq::serving::engine::{Engine, EngineConfig};
+use dynaexq::workload::WorkloadProfile;
+use dynaexq::Coordinator;
+
+fn main() -> anyhow::Result<()> {
+    let preset = ModelPreset::qwen30b_sim();
+    let dev = DeviceConfig::default();
+    let w = WorkloadProfile::text();
+    let mut table = Table::new(&[
+        "budget GB", "n_hi/layer", "hot frac", "hi-tier traffic %",
+        "tok/s (modeled)", "migrated GB",
+    ]);
+    for budget_gb in [28.0, 30.0, 33.0, 36.0, 42.0, 48.0] {
+        let mut cfg = ServingConfig::default();
+        cfg.hbm_budget_bytes = (budget_gb * 1e9) as usize;
+        let plan = match Coordinator::plan_for(&preset, &cfg) {
+            Ok(p) => p,
+            Err(e) => {
+                println!("{budget_gb} GB: infeasible ({e})");
+                continue;
+            }
+        };
+        let backend = DynaExqBackend::new(&preset, &cfg, &dev)
+            .map_err(anyhow::Error::msg)?;
+        let mut engine = Engine::new(
+            &preset,
+            &w,
+            Box::new(backend),
+            &dev,
+            EngineConfig { max_batch: 8, seed: 3, track_activation: false },
+        );
+        for _ in 0..4 {
+            engine.serve_uniform(&w, 8, 128, 16);
+        }
+        table.row(&[
+            format!("{budget_gb:.0}"),
+            format!("{}", plan.n_hi_per_layer),
+            format!("{:.2}", plan.hot_fraction(&preset)),
+            format!("{:.1}", engine.backend.hi_fraction() * 100.0),
+            format!("{:.0}", engine.metrics.throughput()),
+            format!(
+                "{:.2}",
+                engine.backend.migrated_bytes() as f64 / 1e9
+            ),
+        ]);
+    }
+    println!(
+        "== budget sweep: qwen30b-sim under a shrinking HBM envelope ==\n{}",
+        table.render()
+    );
+    println!(
+        "(hot capacity and hi-tier traffic share grow with the envelope — \
+         that is the quality lever; modeled throughput *drops* slightly \
+         because fp16 experts move more bytes per call than int4 in the \
+         bandwidth-bound regime, exactly why static-int4 has the lowest \
+         latency in the paper's Fig. 6. The plan is budget-feasible by \
+         construction at every point.)"
+    );
+    Ok(())
+}

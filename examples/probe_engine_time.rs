@@ -1,0 +1,13 @@
+use dynaexq::experiments::helpers::engine;
+use dynaexq::workload::WorkloadProfile;
+use std::time::Instant;
+fn main() {
+    let w = WorkloadProfile::text();
+    let mut e = engine("qwen30b-sim", "static", "text", 1, false).unwrap();
+    let t0 = Instant::now();
+    e.serve_uniform(&w, 8, 2048, 16);
+    println!("serve 8x2048 prompt: {:.2}s wall", t0.elapsed().as_secs_f64());
+    let t0 = Instant::now();
+    e.serve_uniform(&w, 32, 512, 64);
+    println!("serve 32x512+64: {:.2}s wall", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,40 @@
+//! Calibration probe: prints the routing-sampler statistics the paper's
+//! Tables 1–2 and Figure 2 depend on, for the current profile parameters.
+use dynaexq::util::XorShiftRng;
+use dynaexq::workload::{RoutingSampler, WorkloadProfile};
+use std::collections::HashSet;
+
+fn main() {
+    for (zg, zl, mix) in [(1.8, 1.2, 0.85), (1.6, 1.2, 0.85), (2.0, 1.0, 0.85)] {
+        let mut p = WorkloadProfile::text();
+        p.zipf_global = zg; p.zipf_local = zl; p.local_mix = mix;
+        for (e, k, label) in [(128usize, 8usize, "q30"), (512, 10, "q80"), (16, 2, "phi")] {
+            let s = RoutingSampler::new(&p, 4, e, k);
+            let mut rng = XorShiftRng::new(9);
+            let mut counts = vec![0u64; e];
+            for tag in 0..300u64 { for _ in 0..16 { for x in s.sample_topk(&mut rng, tag, 0) { counts[x]+=1; } } }
+            let total: u64 = counts.iter().sum();
+            let mut sorted = counts.clone(); sorted.sort_unstable_by(|a,b| b.cmp(a));
+            let tophead: u64 = sorted[..(e/8).max(1)].iter().sum();
+            let union_decode = |b: u64| -> f64 {
+                let mut rng = XorShiftRng::new(77);
+                let mut acc = 0.0;
+                for _ in 0..30 {
+                    let mut u = HashSet::new();
+                    for tag in 0..b { u.extend(s.sample_topk(&mut rng, tag, 0)); }
+                    acc += u.len() as f64;
+                }
+                acc / 30.0 / e as f64
+            };
+            let prefill = |b: u64, t: usize| -> f64 {
+                let mut rng = XorShiftRng::new(5);
+                let mut u = HashSet::new();
+                for tag in 0..b { for _ in 0..t { u.extend(s.sample_topk(&mut rng, 900+tag, 0)); } }
+                u.len() as f64 / e as f64
+            };
+            println!("zg={zg} zl={zl} mix={mix} {label}: skew(top12.5%)={:.2} d1={:.3} d8={:.3} d32={:.3} pre1={:.3} pre8={:.3} pre32={:.3}",
+                tophead as f64/total as f64, union_decode(1), union_decode(8), union_decode(32),
+                prefill(1,512), prefill(8,512), prefill(32,512));
+        }
+    }
+}

@@ -1,0 +1,6 @@
+"""Build-time compile path: JAX model (L2) + Pallas kernels (L1) + AOT export.
+
+Nothing in this package is imported at serving time; ``make artifacts`` runs
+``python -m compile.aot`` once and the rust coordinator consumes only the
+emitted HLO text + manifest.
+"""

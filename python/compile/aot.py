@@ -1,0 +1,204 @@
+"""AOT export: lower every L2 op × (token bucket, precision, model variant)
+to HLO **text** + a manifest the rust runtime parses.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out ../artifacts``  (from python/)
+"""
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_units():
+    """Yield (name, fn, arg_specs, meta) for every AOT unit."""
+    D, F, V, S = configs.D_MODEL, configs.FF_DIM, configs.VOCAB, configs.S_MAX
+    units = []
+
+    for t in configs.TOKEN_BUCKETS:
+        units.append((
+            f"embed_t{t}",
+            model.embed,
+            [spec((t,), I32), spec((V, D))],
+            {"op": "embed", "tokens": t},
+        ))
+        units.append((
+            f"lm_head_t{t}",
+            model.lm_head,
+            [spec((t, D)), spec((D,)), spec((D, V))],
+            {"op": "lm_head", "tokens": t},
+        ))
+
+    for t in configs.TOKEN_BUCKETS:
+        if t < 4:
+            continue  # prefill prompts are ≥4 tokens
+        units.append((
+            f"attn_prefill_t{t}",
+            model.block_attn_prefill,
+            [spec((t, D)), spec((D,))] + [spec((D, D))] * 4,
+            {"op": "attn_prefill", "tokens": t},
+        ))
+
+    for b in configs.BATCH_BUCKETS:
+        units.append((
+            f"attn_decode_b{b}",
+            model.block_attn_decode,
+            [spec((b, D)), spec((D,))] + [spec((D, D))] * 4
+            + [spec((b, S, D)), spec((b, S, D)), spec((b,), I32)],
+            {"op": "attn_decode", "batch": b, "s_max": S},
+        ))
+
+    for preset in configs.PRESETS.values():
+        e, k = preset.n_experts, preset.top_k
+        def mk_router(k=k):
+            def fn(x, g, wr):
+                return model.moe_router(x, g, wr, top_k=k)
+            return fn
+        for t in configs.TOKEN_BUCKETS:
+            name = f"router_{preset.router_key}_t{t}"
+            if any(u[0] == name for u in units):
+                continue  # two presets may share a router shape
+            units.append((
+                name,
+                mk_router(),
+                [spec((t, D)), spec((D,)), spec((D, e))],
+                {"op": "router", "tokens": t, "experts": e, "top_k": k},
+            ))
+
+    for t in configs.EXPERT_TOKEN_BUCKETS:
+        units.append((
+            f"expert_fp16_t{t}",
+            model.expert_ffn_fp16,
+            [spec((t, D)), spec((D, F)), spec((D, F)), spec((F, D))],
+            {"op": "expert_ffn", "tokens": t, "precision": "fp16"},
+        ))
+        for bits in (4, 2):
+            pack = 2 if bits == 4 else 4
+            def mk_q(bits=bits):
+                def fn(x, w1p, s1, w3p, s3, w2p, s2):
+                    return model.expert_ffn_quant(
+                        x, w1p, s1, w3p, s3, w2p, s2, bits=bits
+                    )
+                return fn
+            units.append((
+                f"expert_int{bits}_t{t}",
+                mk_q(),
+                [
+                    spec((t, D)),
+                    spec((D // pack, F), jnp.uint8), spec((F,)),
+                    spec((D // pack, F), jnp.uint8), spec((F,)),
+                    spec((F // pack, D), jnp.uint8), spec((D,)),
+                ],
+                {"op": "expert_ffn", "tokens": t, "precision": f"int{bits}"},
+            ))
+    return units
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile-path sources; lets `make artifacts` no-op."""
+    h = hashlib.sha256()
+    pkg = os.path.dirname(__file__)
+    for root, _, files in sorted(os.walk(pkg)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="emit only units whose name contains this substring")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    fp = source_fingerprint()
+    stamp = os.path.join(args.out, "fingerprint.txt")
+    if args.only is None and os.path.exists(stamp):
+        with open(stamp) as fh:
+            if fh.read().strip() == fp:
+                print(f"artifacts up to date (fingerprint {fp})")
+                return 0
+
+    units = build_units()
+    manifest = [
+        "#dims\td={} f={} v={} s_max={} heads={}".format(
+            configs.D_MODEL, configs.FF_DIM, configs.VOCAB,
+            configs.S_MAX, configs.N_HEADS,
+        )
+    ]
+    for name, fn, arg_specs, meta in units:
+        if args.only and args.only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as fh:
+            fh.write(text)
+        kv = ";".join(f"{k}={v}" for k, v in sorted(meta.items()))
+        manifest.append(f"{name}\t{fname}\t{kv}")
+        print(f"  lowered {name} ({len(text)} chars)")
+    if args.only is None:
+        with open(os.path.join(args.out, "manifest.txt"), "w") as fh:
+            fh.write("\n".join(manifest) + "\n")
+        write_quant_golden(args.out)
+        with open(stamp, "w") as fh:
+            fh.write(fp + "\n")
+        print(f"wrote {len(units)} units + manifest to {args.out}")
+    return 0
+
+
+def golden_matrix(k: int, n: int):
+    """Deterministic test matrix computed identically in python and rust
+    (integer Weyl sequence → [-1, 1) f32); see rust/tests/quant_golden.rs."""
+    import numpy as np
+
+    idx = np.arange(k * n, dtype=np.uint64)
+    h = (idx * np.uint64(2654435761)) % np.uint64(2**32)
+    w = (h.astype(np.float64) / 2**31) - 1.0
+    return w.astype(np.float32).reshape(k, n)
+
+
+def write_quant_golden(out_dir: str) -> None:
+    """Cross-language golden file: packed int4/int2 + scales of the golden
+    matrix. rust's model::quant must reproduce it bit-exactly."""
+    from . import quant
+
+    w = golden_matrix(64, 16)
+    with open(os.path.join(out_dir, "quant_golden.bin"), "wb") as fh:
+        for bits in (4, 2):
+            packed, scales = quant.quantize(w, bits)
+            fh.write(packed.tobytes())
+            fh.write(scales.astype("<f4").tobytes())
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,69 @@
+"""Model/core dimension presets shared by the AOT pipeline and tests.
+
+The three simulated models reproduce the *routing-relevant* structure of the
+paper's evaluation targets (Table 3): expert count, top-k, shared experts.
+Core tensor dims are shared across models so that the expensive executables
+(attention, expert FFN, embed, lm_head) compile once and are reused; only the
+router (whose shape depends on the expert count / top-k) is per-model.
+"""
+
+from dataclasses import dataclass, field
+
+
+# --- Core dims shared by every simulated model -----------------------------
+D_MODEL = 64          # hidden size
+N_HEADS = 4
+HEAD_DIM = D_MODEL // N_HEADS
+FF_DIM = 128          # per-expert FFN dim
+VOCAB = 256           # byte-level tokenizer
+S_MAX = 512           # KV-cache capacity per sequence (decode executables)
+
+# Token-count buckets. Ops that consume a flat token axis compile once per
+# bucket; the rust runtime pads to the next bucket.
+TOKEN_BUCKETS = (1, 4, 16, 64, 256)
+# Batch buckets for the decode-step attention executable.
+BATCH_BUCKETS = (1, 4, 8)
+# Token buckets for the per-expert FFN (tokens gathered for one expert).
+EXPERT_TOKEN_BUCKETS = (1, 4, 16, 64)
+
+
+@dataclass(frozen=True)
+class ModelPreset:
+    """Routing structure of one simulated MoE model (paper Table 3)."""
+
+    name: str
+    n_layers: int           # executed layers in this reproduction
+    n_experts: int          # experts per MoE layer
+    top_k: int
+    n_shared: int           # always-on shared experts per layer
+    hi_bits: int            # precision of the "hot" tier (16 == fp)
+    lo_bits: int            # precision of the "cold" tier
+    paper_layers: int = 0   # layer count of the paper's real model (metadata)
+
+    @property
+    def router_key(self) -> str:
+        return f"e{self.n_experts}k{self.top_k}"
+
+
+PRESETS = {
+    # Qwen3-30B-A3B: 48 layers, 128 experts, top-8, hot=FP16 / cold=INT4
+    "qwen30b-sim": ModelPreset(
+        name="qwen30b-sim", n_layers=4, n_experts=128, top_k=8,
+        n_shared=0, hi_bits=16, lo_bits=4, paper_layers=48,
+    ),
+    # Qwen3-Next-80B: 48 layers, 512 experts, top-10, 1 shared,
+    # hot=INT4 / cold=INT2 (the paper serves the 80B model from an Int4 base)
+    "qwen80b-sim": ModelPreset(
+        name="qwen80b-sim", n_layers=4, n_experts=512, top_k=10,
+        n_shared=1, hi_bits=4, lo_bits=2, paper_layers=48,
+    ),
+    # Phi-3.5-MoE: 32 layers, 16 experts, top-2, hot=FP16 / cold=INT4
+    "phi-sim": ModelPreset(
+        name="phi-sim", n_layers=4, n_experts=16, top_k=2,
+        n_shared=0, hi_bits=16, lo_bits=4, paper_layers=32,
+    ),
+}
+
+
+def bits_name(bits: int) -> str:
+    return "fp16" if bits == 16 else f"int{bits}"

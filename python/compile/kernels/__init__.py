@@ -1,0 +1,3 @@
+"""L1: Pallas kernels for the mixed-precision expert GEMM hot spot."""
+
+from .moe_gemm import fmatmul, qmatmul, vmem_bytes  # noqa: F401

@@ -1,0 +1,129 @@
+"""L1 Pallas kernels: the mixed-precision expert GEMM hot spot.
+
+The paper's hot path is a grouped, mixed-precision expert GEMM on CUDA
+(dequantize int4/int2 tiles into shared memory, feed tensor cores). The TPU
+rethink (DESIGN.md §3):
+
+* packed sub-byte weight tiles stream HBM→VMEM via the BlockSpec grid — the
+  analogue of threadblock tiling over PCIe/HBM;
+* the kernel unpacks a ``(block_k/pack, block_n)`` packed tile into a
+  ``(block_k, block_n)`` f32 tile *in VMEM*, applies per-output-channel
+  scales, and feeds the MXU with an f32-accumulating ``jnp.dot``
+  (``preferred_element_type``) — the analogue of dequant-into-shared-memory
+  + WMMA;
+* ``block_n`` is kept a multiple of the 128-lane MXU dimension when the
+  problem is large enough.
+
+Kernels are lowered with ``interpret=True`` everywhere: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so interpret mode is both the correctness
+path and what ships in the AOT artifacts (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Packing contract — must match quant.py and rust model/quant.rs.
+# int2 uses half-integer levels (bias 1.5): {-1.5,-0.5,0.5,1.5}·scale.
+_BIAS = {4: 8.0, 2: 1.5}
+_PACK = {4: 2, 2: 4}
+
+# MXU-friendly default tile for the output-channel axis.
+DEFAULT_BLOCK_N = 128
+
+
+def _unpack_tile(wp, bits):
+    """Unpack a packed uint8[K/pack, BN] tile → f32[K, BN] (bias removed).
+
+    Unpacking happens in VMEM on the already-staged tile; the interleave is
+    expressed as stack+reshape, which Mosaic lowers to cheap lane shuffles.
+    """
+    pack, bias = _PACK[bits], _BIAS[bits]
+    mask = (1 << bits) - 1
+    parts = [((wp >> (bits * j)) & mask) for j in range(pack)]
+    # parts[j][k] is logical row k*pack+j → interleave on a new axis 1.
+    stacked = jnp.stack(parts, axis=1)  # [K/pack, pack, BN]
+    kp, _, bn = stacked.shape
+    return stacked.reshape(kp * pack, bn).astype(jnp.float32) - float(bias)
+
+
+def _qmm_kernel(x_ref, wp_ref, s_ref, o_ref, *, bits):
+    """One grid step: o[:, nb] = x @ dequant(wp[:, nb])."""
+    x = x_ref[...]                      # [T, K]       (resident across grid)
+    w = _unpack_tile(wp_ref[...], bits)  # [K, BN]     (streamed per step)
+    w = w * s_ref[...][None, :]          # scale per output channel
+    o_ref[...] = jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def _mm_kernel(x_ref, w_ref, o_ref):
+    """Full-precision tile matmul (the fp16-tier expert path)."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block_n(n: int) -> int:
+    return n if n < DEFAULT_BLOCK_N else DEFAULT_BLOCK_N
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def qmatmul(x, w_packed, scales, *, bits):
+    """``x[T, K] @ dequant(w_packed[K/pack, N], scales[N])`` → f32[T, N].
+
+    The quantized-GEMM Pallas kernel: grid over output-channel blocks; the
+    activation tile stays in VMEM, packed weight tiles stream in.
+    """
+    t, k = x.shape
+    kp, n = w_packed.shape
+    assert kp * _PACK[bits] == k, (kp, k, bits)
+    bn = _pick_block_n(n)
+    assert n % bn == 0, (n, bn)
+    grid = (n // bn,)
+    return pl.pallas_call(
+        functools.partial(_qmm_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, k), lambda i: (0, 0)),          # x: resident
+            pl.BlockSpec((kp, bn), lambda i: (0, i)),        # weights: stream
+            pl.BlockSpec((bn,), lambda i: (i,)),             # scales
+        ],
+        out_specs=pl.BlockSpec((t, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        interpret=True,
+    )(x, w_packed, scales)
+
+
+@jax.jit
+def fmatmul(x, w):
+    """Full-precision Pallas tile matmul ``x[T, K] @ w[K, N]`` → f32[T, N]."""
+    t, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    bn = _pick_block_n(n)
+    assert n % bn == 0, (n, bn)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((t, k), lambda i: (0, 0)),
+            pl.BlockSpec((k, bn), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((t, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def vmem_bytes(t: int, k: int, n: int, bits: int) -> int:
+    """Estimated VMEM footprint of one grid step (perf analysis, DESIGN §7).
+
+    activation tile + packed weight tile + unpacked f32 tile + scales + out.
+    """
+    bn = _pick_block_n(n)
+    pack = _PACK.get(bits, 1)
+    act = t * k * 4
+    wpacked = (k // pack) * bn * (1 if bits != 16 else 4)
+    wunpacked = k * bn * 4 if bits != 16 else 0
+    return act + wpacked + wunpacked + bn * 4 + t * bn * 4

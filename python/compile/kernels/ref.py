@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the L1 kernels.
+
+Every Pallas kernel in this package has a reference implementation here with
+identical semantics; pytest (python/tests/test_kernels.py) asserts
+``assert_allclose`` between kernel and oracle across a hypothesis sweep of
+shapes and bit-widths.
+"""
+
+import jax.numpy as jnp
+
+_BIAS = {4: 8.0, 2: 1.5}
+_PACK = {4: 2, 2: 4}
+
+
+def unpack_ref(w_packed, bits):
+    """Unpack uint8[K/pack, N] → f32[K, N] with the bias removed."""
+    pack, bias = _PACK[bits], _BIAS[bits]
+    mask = (1 << bits) - 1
+    kp, n = w_packed.shape
+    parts = [
+        ((w_packed >> (bits * j)) & mask).astype(jnp.float32) - float(bias)
+        for j in range(pack)
+    ]
+    return jnp.stack(parts, axis=1).reshape(kp * pack, n)
+
+
+def dequant_ref(w_packed, scales, bits):
+    """f32[K, N] ≈ original weights."""
+    return unpack_ref(w_packed, bits) * scales[None, :]
+
+
+def qmatmul_ref(x, w_packed, scales, *, bits):
+    """Oracle for kernels.moe_gemm.qmatmul."""
+    return jnp.dot(
+        x, dequant_ref(w_packed, scales, bits),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def fmatmul_ref(x, w):
+    """Oracle for kernels.moe_gemm.fmatmul."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)

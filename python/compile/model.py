@@ -1,0 +1,215 @@
+"""L2: the MoE transformer forward pass as composable JAX ops.
+
+Each function here is one AOT unit: ``aot.py`` lowers it (per token bucket /
+precision / model variant) to HLO text that the rust runtime loads and
+executes. The rust coordinator owns control flow *between* ops — routing
+dispatch, expert gather/scatter, residual combine across the MoE experts, the
+KV cache, layer iteration — so that expert precision can change at runtime
+without recompiling anything.
+
+Conventions:
+* all activations are f32 (the "fp16 tier" executes as f32 on the CPU PJRT
+  plugin; tier semantics, not IEEE format, are what the paper's mechanism
+  needs — see DESIGN.md §2);
+* every op takes its weights as arguments (nothing is baked into the HLO), so
+  one executable serves all layers/experts of a given shape;
+* ops return tuples (lowered with ``return_tuple=True``; rust unwraps).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .kernels import fmatmul, qmatmul
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x, g, eps=1e-6):
+    """RMSNorm over the last axis with learned gain ``g``."""
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+# --------------------------------------------------------------------------
+# AOT ops
+# --------------------------------------------------------------------------
+
+
+def embed(tokens, table):
+    """tokens i32[T] → hidden f32[T, D] (table f32[V, D])."""
+    return (jnp.take(table, tokens, axis=0),)
+
+
+def block_attn_prefill(x, g, wq, wk, wv, wo):
+    """Pre-norm causal MHA over a full prompt.
+
+    x f32[T, D] → (x + attn_out f32[T, D], k f32[T, D], v f32[T, D]).
+    k/v are returned flat so rust can place them into the KV cache.
+    """
+    t, d = x.shape
+    h, hd = configs.N_HEADS, configs.HEAD_DIM
+    xn = rmsnorm(x, g)
+    q = (xn @ wq).reshape(t, h, hd)
+    k = xn @ wk
+    v = xn @ wv
+    kh = k.reshape(t, h, hd)
+    vh = v.reshape(t, h, hd)
+    scores = jnp.einsum("thd,shd->hts", q, kh) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(causal[None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hts,shd->thd", probs, vh).reshape(t, d) @ wo
+    return (x + out, k, v)
+
+
+def block_attn_decode(x, g, wq, wk, wv, wo, k_cache, v_cache, pos):
+    """Pre-norm MHA for one decode step over a batch.
+
+    x f32[B, D]; k_cache/v_cache f32[B, S, D]; pos i32[B] (#valid rows, i.e.
+    the slot this token writes). Returns (x + out, k_cache', v_cache').
+    """
+    b, d = x.shape
+    s = k_cache.shape[1]
+    h, hd = configs.N_HEADS, configs.HEAD_DIM
+    xn = rmsnorm(x, g)
+    q = (xn @ wq).reshape(b, h, hd)
+    k_new = xn @ wk  # [B, D]
+    v_new = xn @ wv
+
+    def upd(cache, new, p):
+        return jax.lax.dynamic_update_slice(cache, new[None, :], (p, 0))
+
+    k_cache = jax.vmap(upd)(k_cache, k_new, pos)
+    v_cache = jax.vmap(upd)(v_cache, v_new, pos)
+
+    kh = k_cache.reshape(b, s, h, hd)
+    vh = v_cache.reshape(b, s, h, hd)
+    scores = jnp.einsum("bhd,bshd->bhs", q, kh) / jnp.sqrt(float(hd))
+    valid = jnp.arange(s)[None, :] <= pos[:, None]  # [B, S]
+    scores = jnp.where(valid[:, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", probs, vh).reshape(b, d) @ wo
+    return (x + out, k_cache, v_cache)
+
+
+def _topk_iterative(logits, k):
+    """Top-k via k rounds of argmax + mask.
+
+    ``jax.lax.top_k`` lowers to a dedicated `topk(..., largest=true)` HLO
+    instruction that the xla crate's HLO-text parser (xla_extension 0.5.1)
+    rejects; iterative argmax lowers to plain reduce/select ops that
+    round-trip cleanly. k ≤ 10 and E ≤ 512 here, so the unrolled loop is
+    cheap. Ties resolve to the lowest index, like lax.top_k.
+    """
+    t, e = logits.shape
+    iota = jnp.arange(e)[None, :]
+    x = logits
+    vals, idxs = [], []
+    for _ in range(k):
+        i = jnp.argmax(x, axis=-1)              # [T]
+        v = jnp.max(x, axis=-1)                 # [T]
+        vals.append(v)
+        idxs.append(i)
+        x = jnp.where(iota == i[:, None], -jnp.inf, x)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def moe_router(x, g, wr, *, top_k):
+    """Pre-norm router: x f32[T, D], wr f32[D, E] →
+    (xn f32[T, D], idx i32[T, k], weights f32[T, k]).
+
+    ``xn`` is the normalized expert input; rust gathers its rows per selected
+    expert, invokes the per-precision expert executable, and scatter-adds
+    ``weights``-scaled outputs back onto the residual ``x``.
+    """
+    xn = rmsnorm(x, g)
+    logits = xn @ wr
+    vals, idx = _topk_iterative(logits, top_k)
+    w = jax.nn.softmax(vals, axis=-1)
+    return (xn, idx.astype(jnp.int32), w)
+
+
+def expert_ffn_fp16(x, w1, w3, w2):
+    """Full-precision SwiGLU expert: f32[T, D] → f32[T, D] (L1 fmatmul)."""
+    h1 = fmatmul(x, w1)
+    h3 = fmatmul(x, w3)
+    h = jax.nn.silu(h1) * h3
+    return (fmatmul(h, w2),)
+
+
+def expert_ffn_quant(x, w1p, s1, w3p, s3, w2p, s2, *, bits):
+    """Quantized SwiGLU expert via the L1 fused dequant-GEMM kernel."""
+    h1 = qmatmul(x, w1p, s1, bits=bits)
+    h3 = qmatmul(x, w3p, s3, bits=bits)
+    h = jax.nn.silu(h1) * h3
+    return (qmatmul(h, w2p, s2, bits=bits),)
+
+
+def lm_head(x, g, wout):
+    """Final norm + projection to logits: f32[T, D] → f32[T, V]."""
+    return (rmsnorm(x, g) @ wout,)
+
+
+# --------------------------------------------------------------------------
+# Whole-model reference (tests + quality oracle; never exported)
+# --------------------------------------------------------------------------
+
+
+def reference_forward(params, tokens, *, top_k, bits_per_expert=None):
+    """Pure-jnp single-sequence forward used by python tests as the oracle
+    for the rust engine's layer orchestration.
+
+    ``params`` matches the weight layout produced by tests/helpers;
+    ``bits_per_expert[layer][e]`` optionally selects 16/4/2 per expert
+    (mirroring what VER does at runtime).
+    """
+    from . import quant as qt
+    import numpy as np
+
+    x = jnp.take(params["embed"], tokens, axis=0)
+    n_layers = len(params["layers"])
+    for li in range(n_layers):
+        lp = params["layers"][li]
+        x, _, _ = block_attn_prefill(
+            x, lp["attn_g"], lp["wq"], lp["wk"], lp["wv"], lp["wo"]
+        )
+        xn, idx, w = moe_router(x, lp["moe_g"], lp["wr"], top_k=top_k)
+        t = x.shape[0]
+        y = jnp.zeros_like(x)
+        for ti in range(t):
+            acc = jnp.zeros((x.shape[1],), dtype=jnp.float32)
+            for kk in range(top_k):
+                e = int(idx[ti, kk])
+                ew = lp["experts"][e]
+                bits = 16
+                if bits_per_expert is not None:
+                    bits = bits_per_expert[li][e]
+                if bits == 16:
+                    (out,) = expert_ffn_fp16(
+                        xn[ti : ti + 1], ew["w1"], ew["w3"], ew["w2"]
+                    )
+                else:
+                    packed = {
+                        m: qt.quantize(np.asarray(ew[m]), bits)
+                        for m in ("w1", "w3", "w2")
+                    }
+                    (out,) = expert_ffn_quant(
+                        xn[ti : ti + 1],
+                        packed["w1"][0], packed["w1"][1],
+                        packed["w3"][0], packed["w3"][1],
+                        packed["w2"][0], packed["w2"][1],
+                        bits=bits,
+                    )
+                acc = acc + w[ti, kk] * out[0]
+            for se in lp.get("shared", []):
+                (out,) = expert_ffn_fp16(
+                    xn[ti : ti + 1], se["w1"], se["w3"], se["w2"]
+                )
+                acc = acc + out[0]
+            y = y.at[ti].set(acc)
+        x = x + y
+    (logits,) = lm_head(x, params["final_g"], params["wout"])
+    return logits

@@ -1,0 +1,115 @@
+"""L1 kernel performance analysis: VMEM footprint + MXU utilization
+estimates for the Pallas dequant-GEMM at deployment (paper-scale) shapes.
+
+Interpret-mode timings are CPU-numpy and not a TPU proxy (see the session
+rules), so the perf pass analyses *structure*: per-grid-step VMEM residency
+against the ~16 MB budget, arithmetic intensity against the bandwidth
+roofline, and the dequant overhead of sub-byte tiles.
+
+Run: ``python -m compile.perf_analysis`` (from python/). The numbers are
+recorded in DESIGN.md §7 / EXPERIMENTS.md §Perf; pytest asserts the VMEM
+budget invariants in tests/test_perf_analysis.py.
+"""
+
+from dataclasses import dataclass
+
+# TPU-v4-class parameters used for the estimates (per core).
+VMEM_BYTES = 16 * 2**20          # ~16 MB usable VMEM
+HBM_BW = 1.2e12                  # ~1.2 TB/s
+MXU_FLOPS = 137e12               # ~137 bf16 TFLOP/s
+
+
+@dataclass(frozen=True)
+class KernelConfig:
+    """One qmatmul/fmatmul invocation shape."""
+
+    name: str
+    t: int        # activation rows
+    k: int        # contraction dim
+    n: int        # output channels
+    bits: int     # 16 = full precision
+    block_n: int  # output-channel tile
+
+    @property
+    def pack(self) -> int:
+        return {16: 1, 4: 2, 2: 4}[self.bits]
+
+    def vmem_step_bytes(self) -> int:
+        """Per-grid-step VMEM residency.
+
+        activation tile (resident) + packed weight tile (streamed) +
+        unpacked f32 tile (scratch) + scales + output tile.
+        """
+        act = self.t * self.k * 4
+        wpacked = (self.k // self.pack) * self.block_n * (
+            4 if self.bits == 16 else 1
+        )
+        wunpacked = 0 if self.bits == 16 else self.k * self.block_n * 4
+        scales = 0 if self.bits == 16 else self.block_n * 4
+        out = self.t * self.block_n * 4
+        return act + wpacked + wunpacked + scales + out
+
+    def flops(self) -> float:
+        return 2.0 * self.t * self.k * self.n
+
+    def hbm_bytes(self) -> float:
+        """HBM traffic: activation once, packed weights once, output once."""
+        w_bytes = self.k * self.n * (2 if self.bits == 16 else 1 / self.pack)
+        return self.t * self.k * 4 + w_bytes + self.t * self.n * 4
+
+    def arithmetic_intensity(self) -> float:
+        return self.flops() / self.hbm_bytes()
+
+    def mxu_utilization_estimate(self) -> float:
+        """Roofline estimate: achieved/peak FLOPs given HBM bandwidth.
+
+        util = min(1, AI / (MXU_FLOPS / HBM_BW)) — the classic roofline
+        ridge point; the MoE decode regime (small t) is bandwidth-bound,
+        which is exactly why low-bit expert weights speed up decode.
+        """
+        ridge = MXU_FLOPS / HBM_BW
+        return min(1.0, self.arithmetic_intensity() / ridge)
+
+    def dequant_overhead_ops(self) -> float:
+        """Extra elementwise ops per matmul FLOP for sub-byte unpack:
+        shift+mask+sub+mul per weight element, amortized over 2·t FLOPs
+        per element."""
+        if self.bits == 16:
+            return 0.0
+        return 4.0 / (2.0 * self.t)
+
+
+def deployment_configs():
+    """Kernel shapes at the paper models' logical dims."""
+    return [
+        # qwen30b expert (d=2048, ff=768): decode (t=1..8) and prefill tiles
+        KernelConfig("q30 w1 decode t1 int4", 1, 2048, 768, 4, 128),
+        KernelConfig("q30 w1 decode t8 int4", 8, 2048, 768, 4, 128),
+        KernelConfig("q30 w1 prefill t256 fp16", 256, 2048, 768, 16, 128),
+        KernelConfig("q30 w1 prefill t256 int4", 256, 2048, 768, 4, 128),
+        # qwen80b expert at int2
+        KernelConfig("q80 w1 decode t1 int2", 1, 2048, 512, 2, 128),
+        KernelConfig("q80 w1 prefill t256 int2", 256, 2048, 512, 2, 128),
+        # phi expert (d=4096, ff=6400)
+        KernelConfig("phi w1 decode t4 int4", 4, 4096, 6400, 4, 128),
+        KernelConfig("phi w1 prefill t256 fp16", 256, 4096, 6400, 16, 128),
+    ]
+
+
+def report() -> str:
+    lines = [
+        f"{'config':<28} {'VMEM/step':>10} {'AI':>7} {'MXU util':>9} "
+        f"{'dequant ovh':>12}"
+    ]
+    for c in deployment_configs():
+        lines.append(
+            f"{c.name:<28} {c.vmem_step_bytes() / 2**20:>8.2f}MB "
+            f"{c.arithmetic_intensity():>7.1f} "
+            f"{c.mxu_utilization_estimate():>8.1%} "
+            f"{c.dequant_overhead_ops():>11.2f}x"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

@@ -1,0 +1,79 @@
+"""Symmetric per-output-channel weight quantization (int4 / int2) + sub-byte
+packing.
+
+The packed layout is the contract between the build-time weight preparation
+(here, mirrored bit-exactly by rust `model/quant.rs`) and the L1 Pallas
+dequant-GEMM kernel:
+
+* weights ``W[K, N]`` are quantized per output channel ``n`` to the level set
+  ``{(u - bias) * s : u = 0..2^bits-1}`` with ``s[n] = max|W[:, n]| / qmax``:
+  - int4: integer levels, ``bias = 8``,  ``qmax = 7``  (q ∈ [-8, 7])
+  - int2: **half-integer** levels, ``bias = 1.5``, ``qmax = 1.5``
+    (levels {-1.5, -0.5, +0.5, +1.5}·s — symmetric, all four levels used;
+    integer int2 levels waste one level and clip +absmax to absmax/2)
+* stored codes ``u`` are unsigned values in ``[0, 2^bits - 1]``
+* packing is along the **contraction axis K** (little-endian within a byte):
+  int4 → byte ``b[k, n] = (u[2k+1, n] << 4) | u[2k, n]``
+  int2 → byte ``b[k, n] = u[4k+3]<<6 | u[4k+2]<<4 | u[4k+1]<<2 | u[4k]``
+
+Dequantization: ``W ≈ (u - bias) * s[n]``.
+"""
+
+import numpy as np
+
+INT4 = dict(bits=4, pack=2, qmax=7.0, bias=8.0)
+INT2 = dict(bits=2, pack=4, qmax=1.5, bias=1.5)
+
+
+def spec(bits: int) -> dict:
+    if bits == 4:
+        return INT4
+    if bits == 2:
+        return INT2
+    raise ValueError(f"unsupported bit-width {bits}")
+
+
+def quantize(w: np.ndarray, bits: int):
+    """Quantize ``w[K, N]`` → (packed uint8[K/pack, N], scales f32[N]).
+
+    K must be divisible by the pack factor (2 for int4, 4 for int2).
+    """
+    s = spec(bits)
+    w = np.asarray(w, dtype=np.float32)
+    k, n = w.shape
+    if k % s["pack"]:
+        raise ValueError(f"K={k} not divisible by pack={s['pack']}")
+    absmax = np.abs(w).max(axis=0)
+    scales = np.where(absmax > 0, absmax / s["qmax"], 1.0).astype(np.float32)
+    umax = (1 << s["bits"]) - 1
+    u = np.clip(np.round(w / scales + s["bias"]), 0, umax).astype(np.uint8)
+    packed = np.zeros((k // s["pack"], n), dtype=np.uint8)
+    for j in range(s["pack"]):
+        packed |= u[j :: s["pack"], :] << (s["bits"] * j)
+    return packed, scales
+
+
+def unpack(packed: np.ndarray, bits: int) -> np.ndarray:
+    """Unpack uint8[K/pack, N] → f32[K, N] (bias removed, unscaled)."""
+    s = spec(bits)
+    kp, n = packed.shape
+    out = np.zeros((kp * s["pack"], n), dtype=np.float32)
+    mask = (1 << s["bits"]) - 1
+    for j in range(s["pack"]):
+        out[j :: s["pack"], :] = ((packed >> (s["bits"] * j)) & mask).astype(
+            np.float32
+        ) - s["bias"]
+    return out
+
+
+def dequantize(packed: np.ndarray, scales: np.ndarray, bits: int) -> np.ndarray:
+    """Reconstruct f32[K, N] from a packed representation."""
+    return unpack(packed, bits) * scales[None, :]
+
+
+def quant_error(w: np.ndarray, bits: int) -> float:
+    """Relative Frobenius reconstruction error (diagnostics / tests)."""
+    packed, scales = quantize(w, bits)
+    wq = dequantize(packed, scales, bits)
+    denom = np.linalg.norm(w) or 1.0
+    return float(np.linalg.norm(w - wq) / denom)

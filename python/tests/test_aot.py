@@ -1,0 +1,69 @@
+"""AOT pipeline: unit inventory, HLO-text emission, manifest format."""
+
+import os
+
+import jax
+import pytest
+
+from compile import aot, configs
+
+
+def test_unit_inventory_complete():
+    units = aot.build_units()
+    names = {u[0] for u in units}
+    # every bucket × op the rust engine resolves must exist
+    for t in configs.TOKEN_BUCKETS:
+        assert f"embed_t{t}" in names
+        assert f"lm_head_t{t}" in names
+    for b in configs.BATCH_BUCKETS:
+        assert f"attn_decode_b{b}" in names
+    for t in configs.EXPERT_TOKEN_BUCKETS:
+        for prec in ("fp16", "int4", "int2"):
+            assert f"expert_{prec}_t{t}" in names
+    for preset in configs.PRESETS.values():
+        for t in configs.TOKEN_BUCKETS:
+            assert f"router_{preset.router_key}_t{t}" in names
+    # no duplicates
+    assert len(names) == len(units)
+
+
+def test_units_have_metadata():
+    for name, _fn, _specs, meta in aot.build_units():
+        assert "op" in meta, name
+        assert meta["op"] in {
+            "embed", "lm_head", "attn_prefill", "attn_decode", "router",
+            "expert_ffn",
+        }
+
+
+@pytest.mark.parametrize("unit_name", ["expert_int4_t1", "router_e16k2_t1"])
+def test_hlo_text_emission(unit_name):
+    """Lower one unit and verify the HLO text is parseable-looking and
+    contains no `topk` instruction (which xla_extension 0.5.1 rejects)."""
+    units = {u[0]: u for u in aot.build_units()}
+    name, fn, specs, _meta = units[unit_name]
+    lowered = jax.jit(fn).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    assert " topk(" not in text, "lax.top_k leaked into the HLO"
+
+
+def test_fingerprint_changes_with_source(tmp_path):
+    fp1 = aot.source_fingerprint()
+    assert len(fp1) == 16
+    assert fp1 == aot.source_fingerprint(), "deterministic"
+
+
+def test_artifacts_dir_matches_manifest():
+    """If artifacts were built, every manifest entry's file must exist."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest = os.path.join(art, "manifest.txt")
+    if not os.path.exists(manifest):
+        pytest.skip("artifacts not built")
+    with open(manifest) as fh:
+        for line in fh:
+            if line.startswith("#") or not line.strip():
+                continue
+            _name, fname, _kv = line.split("\t")
+            assert os.path.exists(os.path.join(art, fname)), fname

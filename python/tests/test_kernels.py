@@ -1,0 +1,104 @@
+"""L1 Pallas kernels vs pure-jnp oracles — the core correctness signal.
+
+Hypothesis sweeps shapes, bit-widths and magnitudes; every case asserts
+``assert_allclose`` between the interpret-mode Pallas kernel and ``ref.py``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+from compile.kernels import moe_gemm, ref
+
+
+def rand_packed(rng, k, n, bits):
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    packed, scales = quant.quantize(w, bits)
+    return w, jnp.asarray(packed), jnp.asarray(scales)
+
+
+@pytest.mark.parametrize("bits", [4, 2])
+@pytest.mark.parametrize("t,k,n", [(1, 64, 128), (16, 64, 128), (4, 128, 64)])
+def test_qmatmul_matches_ref(bits, t, k, n):
+    rng = np.random.default_rng(bits * 100 + t)
+    x = jnp.asarray(rng.normal(size=(t, k)).astype(np.float32))
+    _, packed, scales = rand_packed(rng, k, n, bits)
+    out = moe_gemm.qmatmul(x, packed, scales, bits=bits)
+    exp = ref.qmatmul_ref(x, packed, scales, bits=bits)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [4, 2])
+def test_qmatmul_matches_numpy_dequant(bits):
+    """Against an independent numpy reconstruction (not jnp ref)."""
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(8, 64)).astype(np.float32)
+    w = rng.normal(size=(64, 128)).astype(np.float32)
+    packed, scales = quant.quantize(w, bits)
+    wq = quant.dequantize(packed, scales, bits)
+    out = moe_gemm.qmatmul(
+        jnp.asarray(x), jnp.asarray(packed), jnp.asarray(scales), bits=bits
+    )
+    np.testing.assert_allclose(np.asarray(out), x @ wq, rtol=1e-4, atol=1e-4)
+
+
+def test_fmatmul_matches_ref():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(16, 64)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(64, 128)).astype(np.float32))
+    out = moe_gemm.fmatmul(x, w)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.fmatmul_ref(x, w)), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_unpack_tile_matches_ref():
+    rng = np.random.default_rng(5)
+    for bits in (4, 2):
+        _, packed, _ = rand_packed(rng, 32, 16, bits)
+        a = moe_gemm._unpack_tile(packed, bits)
+        b = ref.unpack_ref(packed, bits)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.sampled_from([1, 2, 4, 8, 16]),
+    k=st.sampled_from([4, 8, 64, 128]),
+    n=st.sampled_from([8, 16, 64, 128, 256]),
+    bits=st.sampled_from([4, 2]),
+    amp=st.floats(0.01, 8.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qmatmul_property_sweep(t, k, n, bits, amp, seed):
+    """Any bucket-compatible shape/scale: kernel ≡ oracle."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.normal(size=(t, k)) * amp).astype(np.float32))
+    w = (rng.normal(size=(k, n)) * amp).astype(np.float32)
+    packed, scales = quant.quantize(w, bits)
+    out = moe_gemm.qmatmul(
+        x, jnp.asarray(packed), jnp.asarray(scales), bits=bits
+    )
+    exp = ref.qmatmul_ref(
+        x, jnp.asarray(packed), jnp.asarray(scales), bits=bits
+    )
+    # Pallas-interpret and jnp may reduce the contraction in different
+    # orders; tolerance scales with the dot-product magnitude ~ amp²·√k.
+    tol = 1e-5 * (amp * amp) * float(k)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(exp), rtol=2e-4, atol=max(tol, 1e-5)
+    )
+    assert out.shape == (t, n)
+    assert out.dtype == jnp.float32
+
+
+def test_vmem_estimate_sane():
+    """Perf-analysis helper: quantized tiles need less VMEM for weights."""
+    v_fp = moe_gemm.vmem_bytes(64, 64, 128, 16)
+    v_i4 = moe_gemm.vmem_bytes(64, 64, 128, 4)
+    assert v_fp > 0 and v_i4 > 0
+    # packed weight tile is 8x smaller, but the unpacked f32 tile dominates;
+    # the estimate must include it (honest accounting)
+    assert v_i4 >= 64 * 128 * 4

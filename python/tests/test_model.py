@@ -1,0 +1,178 @@
+"""L2 model ops: shapes, semantics, and cross-op consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model, quant
+
+D = configs.D_MODEL
+F = configs.FF_DIM
+V = configs.VOCAB
+S = configs.S_MAX
+
+
+def rng_arrays(seed, *shapes):
+    rng = np.random.default_rng(seed)
+    return [
+        jnp.asarray(rng.normal(size=s).astype(np.float32) / np.sqrt(s[-1]))
+        for s in shapes
+    ]
+
+
+def test_embed_gathers():
+    table = jnp.arange(V * D, dtype=jnp.float32).reshape(V, D)
+    (x,) = model.embed(jnp.asarray([3, 0, 3], dtype=jnp.int32), table)
+    assert x.shape == (3, D)
+    np.testing.assert_array_equal(np.asarray(x[0]), np.asarray(table[3]))
+    np.testing.assert_array_equal(np.asarray(x[0]), np.asarray(x[2]))
+
+
+def test_rmsnorm_unit_scale():
+    x = jnp.ones((2, D)) * 5.0
+    g = jnp.ones(D)
+    out = model.rmsnorm(x, g)
+    np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-5)
+
+
+def test_attn_prefill_causality():
+    """Changing a later token must not affect earlier outputs."""
+    t = 8
+    g = jnp.ones(D)
+    wq, wk, wv, wo = rng_arrays(1, (D, D), (D, D), (D, D), (D, D))
+    x1, = rng_arrays(2, (t, D))
+    x2 = x1.at[t - 1].set(x1[t - 1] + 1.0)
+    (o1, k1, v1) = model.block_attn_prefill(x1, g, wq, wk, wv, wo)
+    (o2, _, _) = model.block_attn_prefill(x2, g, wq, wk, wv, wo)
+    np.testing.assert_allclose(
+        np.asarray(o1[: t - 1]), np.asarray(o2[: t - 1]), rtol=1e-5, atol=1e-6
+    )
+    assert k1.shape == (t, D)
+    assert v1.shape == (t, D)
+    # the perturbed position must differ
+    assert not np.allclose(np.asarray(o1[t - 1]), np.asarray(o2[t - 1]))
+
+
+def test_attn_decode_matches_prefill():
+    """Decoding token t with a cache of tokens 0..t-1 must equal the t-th
+    row of a full prefill — the KV-cache contract the rust engine relies on."""
+    t = 6
+    g = jnp.ones(D)
+    wq, wk, wv, wo = rng_arrays(3, (D, D), (D, D), (D, D), (D, D))
+    x, = rng_arrays(4, (t, D))
+    (o_pre, k_pre, v_pre) = model.block_attn_prefill(x, g, wq, wk, wv, wo)
+
+    # decode the last token against the cached first t-1
+    k_cache = jnp.zeros((1, S, D)).at[0, : t - 1].set(k_pre[: t - 1])
+    v_cache = jnp.zeros((1, S, D)).at[0, : t - 1].set(v_pre[: t - 1])
+    pos = jnp.asarray([t - 1], dtype=jnp.int32)
+    (o_dec, k2, v2) = model.block_attn_decode(
+        x[t - 1 : t], g, wq, wk, wv, wo, k_cache, v_cache, pos
+    )
+    np.testing.assert_allclose(
+        np.asarray(o_dec[0]), np.asarray(o_pre[t - 1]), rtol=1e-4, atol=1e-5
+    )
+    # the decode step must have written k/v of the new token at position t-1
+    np.testing.assert_allclose(
+        np.asarray(k2[0, t - 1]), np.asarray(k_pre[t - 1]), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_router_topk_semantics():
+    t, e, k = 4, 16, 3
+    g = jnp.ones(D)
+    x, = rng_arrays(5, (t, D))
+    wr = jnp.zeros((D, e)).at[:, 5].set(1.0).at[:, 9].set(0.6).at[:, 2].set(0.3)
+    xn, idx, w = model.moe_router(x, g, wr, top_k=k)
+    assert xn.shape == (t, D)
+    assert idx.shape == (t, k)
+    assert w.shape == (t, k)
+    np.testing.assert_allclose(np.asarray(w.sum(axis=-1)), 1.0, rtol=1e-5)
+    # weights sorted descending (vals from iterative argmax)
+    assert np.all(np.diff(np.asarray(w), axis=-1) <= 1e-6)
+
+
+def test_router_iterative_topk_equals_lax_topk():
+    rng = np.random.default_rng(11)
+    logits = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32))
+    vals, idx = model._topk_iterative(logits, 5)
+    lv, li = jax.lax.top_k(logits, 5)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(lv), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(li))
+
+
+def test_expert_ffn_quant_close_to_fp():
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.normal(size=(4, D)).astype(np.float32))
+    w1 = rng.normal(size=(D, F)).astype(np.float32) * 0.2
+    w3 = rng.normal(size=(D, F)).astype(np.float32) * 0.2
+    w2 = rng.normal(size=(F, D)).astype(np.float32) * 0.2
+    (y_fp,) = model.expert_ffn_fp16(
+        x, jnp.asarray(w1), jnp.asarray(w3), jnp.asarray(w2)
+    )
+    outs = {}
+    for bits in (4, 2):
+        q1 = quant.quantize(w1, bits)
+        q3 = quant.quantize(w3, bits)
+        q2 = quant.quantize(w2, bits)
+        (y_q,) = model.expert_ffn_quant(
+            x,
+            jnp.asarray(q1[0]), jnp.asarray(q1[1]),
+            jnp.asarray(q3[0]), jnp.asarray(q3[1]),
+            jnp.asarray(q2[0]), jnp.asarray(q2[1]),
+            bits=bits,
+        )
+        rel = np.linalg.norm(np.asarray(y_q - y_fp)) / np.linalg.norm(
+            np.asarray(y_fp)
+        )
+        outs[bits] = rel
+    assert outs[4] < 0.35, f"int4 expert too far from fp: {outs[4]}"
+    assert outs[4] < outs[2], "int4 must beat int2"
+
+
+def test_lm_head_shape():
+    x, = rng_arrays(17, (5, D))
+    g = jnp.ones(D)
+    wout, = rng_arrays(18, (D, V))
+    (logits,) = model.lm_head(x, g, wout)
+    assert logits.shape == (5, V)
+
+
+@pytest.mark.slow
+def test_reference_forward_runs():
+    """Whole-model pure-jnp oracle (tiny config) executes and is finite."""
+    rng = np.random.default_rng(23)
+    n_experts, top_k, layers = 4, 2, 1
+    mk = lambda *s: jnp.asarray(  # noqa: E731
+        rng.normal(size=s).astype(np.float32) / np.sqrt(s[-1])
+    )
+    params = {
+        "embed": mk(V, D),
+        "final_g": jnp.ones(D),
+        "wout": mk(D, V),
+        "layers": [
+            {
+                "attn_g": jnp.ones(D),
+                "wq": mk(D, D), "wk": mk(D, D), "wv": mk(D, D), "wo": mk(D, D),
+                "moe_g": jnp.ones(D),
+                "wr": mk(D, n_experts),
+                "experts": [
+                    {"w1": mk(D, F), "w3": mk(D, F), "w2": mk(F, D)}
+                    for _ in range(n_experts)
+                ],
+            }
+            for _ in range(layers)
+        ],
+    }
+    tokens = jnp.asarray([1, 2, 3, 4], dtype=jnp.int32)
+    logits = model.reference_forward(params, tokens, top_k=top_k)
+    assert logits.shape == (4, V)
+    assert bool(jnp.isfinite(logits).all())
+    # mixed per-expert precision also runs
+    bits = [[16, 4, 2, 16]]
+    logits_q = model.reference_forward(
+        params, tokens, top_k=top_k, bits_per_expert=bits
+    )
+    assert bool(jnp.isfinite(logits_q).all())
+    assert not np.allclose(np.asarray(logits), np.asarray(logits_q))

@@ -1,0 +1,44 @@
+"""Perf-analysis invariants (DESIGN.md §7 L1 targets)."""
+
+from compile.perf_analysis import (
+    VMEM_BYTES,
+    KernelConfig,
+    deployment_configs,
+    report,
+)
+
+
+def test_all_deployment_configs_fit_vmem():
+    """Target: per-grid-step VMEM residency ≤ 16 MB for every shape."""
+    for c in deployment_configs():
+        assert c.vmem_step_bytes() <= VMEM_BYTES, c.name
+
+
+def test_prefill_is_compute_bound_decode_bandwidth_bound():
+    decode = KernelConfig("d", 1, 2048, 768, 4, 128)
+    prefill = KernelConfig("p", 256, 2048, 768, 16, 128)
+    assert decode.mxu_utilization_estimate() < 0.2
+    assert prefill.mxu_utilization_estimate() > 0.5
+
+
+def test_lower_bits_lower_hbm_traffic():
+    fp = KernelConfig("f", 8, 2048, 768, 16, 128)
+    i4 = KernelConfig("4", 8, 2048, 768, 4, 128)
+    i2 = KernelConfig("2", 8, 2048, 768, 2, 128)
+    assert i2.hbm_bytes() < i4.hbm_bytes() < fp.hbm_bytes()
+    # and therefore higher roofline utilization in the decode regime
+    assert i2.arithmetic_intensity() > fp.arithmetic_intensity()
+
+
+def test_dequant_overhead_amortizes_with_tokens():
+    t1 = KernelConfig("a", 1, 2048, 768, 4, 128)
+    t64 = KernelConfig("b", 64, 2048, 768, 4, 128)
+    assert t64.dequant_overhead_ops() < t1.dequant_overhead_ops()
+    # at t=64 the unpack cost is ≤ 2·matmul-FLOPs target of DESIGN §7
+    assert t64.dequant_overhead_ops() < 2.0
+
+
+def test_report_renders():
+    r = report()
+    assert "MXU util" in r
+    assert len(r.splitlines()) == len(deployment_configs()) + 1

@@ -1,0 +1,126 @@
+"""Quantization/packing contract tests (mirrored by rust model/quant.rs)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+
+
+@pytest.mark.parametrize("bits,pack", [(4, 2), (2, 4)])
+def test_pack_unpack_roundtrip_codes(bits, pack):
+    """Every level within ±qmax·s survives quantize→dequantize exactly.
+
+    (int4's u=0 level sits at −8s, below −qmax·s = −7s; including it would
+    shift the derived scale, so the symmetric level set is tested.)
+    """
+    s = 0.37
+    spec = quant.spec(bits)
+    umax = (1 << bits) - 1
+    levels = np.array(
+        [
+            (u - spec["bias"]) * s
+            for u in range(umax + 1)
+            if abs(u - spec["bias"]) <= spec["qmax"]
+        ],
+        dtype=np.float32,
+    )
+    reps = -(-pack * 4 // len(levels))  # enough rows, divisible by pack
+    w = np.tile(levels, reps)[: len(levels) * reps, None].astype(np.float32)
+    k = (w.shape[0] // pack) * pack
+    w = w[:k]
+    packed, scales = quant.quantize(w, bits)
+    wq = quant.dequantize(packed, scales, bits)
+    np.testing.assert_allclose(wq, w, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(scales, [s], rtol=1e-6)
+
+
+def test_int4_known_bytes():
+    """Pin the little-endian nibble layout (mirrored in rust quant.rs)."""
+    # K=2, N=1: w = [-7s, 7s] → absmax 7s → scale s;
+    # u = [round(-7+8), round(7+8)] = [1, 15] → byte = 15<<4 | 1 = 0xF1
+    s = 0.5
+    w = np.array([[-7 * s], [7 * s]], dtype=np.float32)
+    packed, scales = quant.quantize(w, 4)
+    assert packed.shape == (1, 1)
+    assert packed[0, 0] == 0xF1
+    np.testing.assert_allclose(scales, [s], rtol=1e-6)
+
+
+def test_int2_known_bytes():
+    """int2 half-integer levels: u ∈ {0..3}, 4 codes per byte."""
+    s = 1.0
+    w = np.array([[-1.5 * s], [-0.5 * s], [0.5 * s], [1.5 * s]], np.float32)
+    packed, scales = quant.quantize(w, 2)
+    assert packed.shape == (1, 1)
+    # u = [0,1,2,3] little-endian → 3<<6 | 2<<4 | 1<<2 | 0 = 0xE4
+    assert packed[0, 0] == 0xE4
+    np.testing.assert_allclose(scales, [s], rtol=1e-6)
+
+
+def test_zero_column_scale_is_one():
+    w = np.zeros((8, 3), dtype=np.float32)
+    packed, scales = quant.quantize(w, 4)
+    np.testing.assert_allclose(scales, 1.0)
+    np.testing.assert_allclose(quant.dequantize(packed, scales, 4), 0.0)
+
+
+@pytest.mark.parametrize("bits", [4, 2])
+def test_error_bounded_by_half_step(bits):
+    """|w - wq| ≤ scale/2 per element (except clipping, which absmax scaling
+    avoids for int4; int2's half-integer levels also avoid it)."""
+    rng = np.random.default_rng(7)
+    w = rng.normal(size=(32, 16)).astype(np.float32)
+    packed, scales = quant.quantize(w, bits)
+    wq = quant.dequantize(packed, scales, bits)
+    assert np.all(np.abs(w - wq) <= scales[None, :] * 0.5 + 1e-6)
+
+
+@pytest.mark.parametrize("bits", [4, 2])
+def test_int4_better_than_int2(bits):
+    rng = np.random.default_rng(3)
+    w = rng.normal(size=(64, 64)).astype(np.float32)
+    assert quant.quant_error(w, 4) < quant.quant_error(w, 2)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    k=st.sampled_from([4, 8, 16, 64, 128]),
+    n=st.integers(1, 32),
+    bits=st.sampled_from([4, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_roundtrip_error_bound_property(k, n, bits, seed):
+    """Property: reconstruction error ≤ half a quantization step, any shape."""
+    rng = np.random.default_rng(seed)
+    w = (rng.normal(size=(k, n)) * rng.uniform(0.01, 10)).astype(np.float32)
+    packed, scales = quant.quantize(w, bits)
+    assert packed.dtype == np.uint8
+    assert packed.shape == (k // quant.spec(bits)["pack"], n)
+    wq = quant.dequantize(packed, scales, bits)
+    assert np.all(np.abs(w - wq) <= scales[None, :] * 0.5 + 1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.sampled_from([8, 16, 32]),
+    bits=st.sampled_from([4, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_deterministic(k, bits, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(k, 5)).astype(np.float32)
+    p1, s1 = quant.quantize(w, bits)
+    p2, s2 = quant.quantize(w.copy(), bits)
+    np.testing.assert_array_equal(p1, p2)
+    np.testing.assert_array_equal(s1, s2)
+
+
+def test_bad_bits_rejected():
+    with pytest.raises(ValueError):
+        quant.spec(3)
+
+
+def test_bad_k_rejected():
+    with pytest.raises(ValueError):
+        quant.quantize(np.zeros((3, 2), np.float32), 4)

@@ -1,0 +1,16 @@
+//! Ablations A1–A6 (DESIGN.md §6): hysteresis, EMA alpha / update interval,
+//! blocking vs non-blocking transitions, pool granularity, static
+//! mixed-precision map under shift, reactive vs long-horizon policy.
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("DYNAEXQ_FULL").is_err();
+    use dynaexq::experiments::ablations as a;
+    println!("{}", a::a1_hysteresis(fast)?);
+    println!("{}", a::a2_ema_alpha(fast)?);
+    println!("{}", a::a3_blocking(fast)?);
+    println!("{}", a::a4_pool_granularity(fast)?);
+    println!("{}", a::a5_static_map_shift(fast)?);
+    println!("{}", a::a6_reactive_vs_policy(fast)?);
+    println!("{}", a::a7_load_sweep(fast)?);
+    Ok(())
+}

@@ -1,0 +1,9 @@
+//! Paper Figure 10: TTFT vs prompt length (batch 8).
+//! Thin wrapper over `dynaexq::experiments` — the same code path as
+//! `dynaexq report --exp f10`. Set DYNAEXQ_FULL=1 for the full sweep.
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("DYNAEXQ_FULL").is_err();
+    println!("{}", dynaexq::experiments::latency::figure10_prompt_sweep(fast)?);
+    Ok(())
+}

@@ -1,0 +1,9 @@
+//! Paper Figure 1: GPU waiting latency vs number of prompt tokens.
+//! Thin wrapper over `dynaexq::experiments` — the same code path as
+//! `dynaexq report --exp f1`. Set DYNAEXQ_FULL=1 for the full sweep.
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("DYNAEXQ_FULL").is_err();
+    println!("{}", dynaexq::experiments::waiting::figure1_waiting(fast)?);
+    Ok(())
+}

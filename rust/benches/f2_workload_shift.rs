@@ -1,0 +1,9 @@
+//! Paper Figure 2: workload-dependent hot sets (heavy tail + disjoint top-10).
+//! Thin wrapper over `dynaexq::experiments` — the same code path as
+//! `dynaexq report --exp f2`. Set DYNAEXQ_FULL=1 for the full sweep.
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("DYNAEXQ_FULL").is_err();
+    println!("{}", dynaexq::experiments::shift::figure2_shift(fast)?);
+    Ok(())
+}

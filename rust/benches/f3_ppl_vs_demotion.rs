@@ -1,0 +1,9 @@
+//! Paper Figure 3: perplexity vs demoted cold experts per layer (numeric).
+//! Thin wrapper over `dynaexq::experiments` — the same code path as
+//! `dynaexq report --exp f3`. Set DYNAEXQ_FULL=1 for the full sweep.
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("DYNAEXQ_FULL").is_err();
+    println!("{}", dynaexq::experiments::quality_exp::figure3_demotion(fast)?);
+    Ok(())
+}

@@ -1,0 +1,8 @@
+//! Paper Figure 7: TPOP (avg/P99) vs batch size, three models × methods.
+//! Same code path as `dynaexq report --exp f7`. DYNAEXQ_FULL=1 for full sweep.
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("DYNAEXQ_FULL").is_err();
+    println!("{}", dynaexq::experiments::latency::figure_batch_sweep("f7", fast)?);
+    Ok(())
+}

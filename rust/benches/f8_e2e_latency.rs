@@ -1,0 +1,8 @@
+//! Paper Figure 8: end-to-end latency vs batch size, three models × methods.
+//! Same code path as `dynaexq report --exp f8`. DYNAEXQ_FULL=1 for full sweep.
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("DYNAEXQ_FULL").is_err();
+    println!("{}", dynaexq::experiments::latency::figure_batch_sweep("f8", fast)?);
+    Ok(())
+}

@@ -1,0 +1,8 @@
+//! Paper Figure 9: end-to-end throughput (tokens/s) vs batch size, three models × methods.
+//! Same code path as `dynaexq report --exp f9`. DYNAEXQ_FULL=1 for full sweep.
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("DYNAEXQ_FULL").is_err();
+    println!("{}", dynaexq::experiments::latency::figure_batch_sweep("f9", fast)?);
+    Ok(())
+}

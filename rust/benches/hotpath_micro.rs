@@ -1,0 +1,151 @@
+//! Microbenchmarks of the L3 hot path (perf pass, DESIGN.md §7):
+//! handle resolution, routing recording, policy update, pool ops, and one
+//! real PJRT expert execution.
+
+use std::sync::Arc;
+
+use dynaexq::bench::Bench;
+use dynaexq::config::{DeviceConfig, ModelPreset, ServingConfig};
+use dynaexq::coordinator::{BlockPool, Coordinator};
+use dynaexq::util::XorShiftRng;
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench::new(3, 30);
+    let preset = ModelPreset::qwen30b_sim();
+    let cfg = ServingConfig::default();
+    let dev = DeviceConfig::default();
+    let coord = Coordinator::new(&preset, &cfg, &dev).map_err(anyhow::Error::msg)?;
+
+    // 1. stable-handle resolution (the per-expert hot-path read)
+    let r = bench.run("resolve × 10k", || {
+        for e in 0..128usize {
+            for l in 0..48usize {
+                std::hint::black_box(coord.resolve(l, e % 128));
+            }
+        }
+        for _ in 0..(10_000 - 128 * 48) {
+            std::hint::black_box(coord.resolve(0, 7));
+        }
+    });
+    println!("{}   ({:.1} ns/resolve)", r.line(), r.mean_s * 1e9 / 1e4);
+
+    // 2. routing recording (per-iteration router trace ingestion)
+    let experts: Vec<usize> = (0..256).map(|i| i % 128).collect();
+    let r = bench.run("record_routing 256 sel × 48 layers", || {
+        for l in 0..48 {
+            coord.record_routing(l, &experts);
+        }
+    });
+    println!("{}", r.line());
+
+    // 3. full policy update (48 layers × 128 experts)
+    let mut now = 1.0;
+    let r = bench.run("policy tick (48×128)", || {
+        now += 1.0;
+        std::hint::black_box(coord.tick(now));
+    });
+    println!("{}", r.line());
+
+    // 4. pool alloc/free
+    let pool = BlockPool::new("bench", 128 << 20, 1 << 20);
+    let r = bench.run("pool alloc+free × 1k", || {
+        for _ in 0..1000 {
+            let a = pool.alloc(1 << 20).unwrap();
+            pool.free(a);
+        }
+    });
+    println!("{}   ({:.1} ns/pair)", r.line(), r.mean_s * 1e9 / 1e3);
+
+    // 5. real PJRT expert execution (the numeric hot path)
+    if let Ok(rt) = dynaexq::runtime::Runtime::load_default() {
+        let rt = Arc::new(rt);
+        let mut rng = XorShiftRng::new(1);
+        let d = dynaexq::config::D_MODEL;
+        let f = dynaexq::config::FF_DIM;
+        let x: Vec<f32> = (0..16 * d).map(|_| rng.normal_f32()).collect();
+        let w: Vec<f32> = (0..d * f).map(|_| rng.normal_f32() * 0.1).collect();
+        let w2: Vec<f32> = (0..f * d).map(|_| rng.normal_f32() * 0.1).collect();
+        let xl = dynaexq::runtime::lit_f32(&x, &[16, d as i64])?;
+        let w1l = dynaexq::runtime::lit_f32(&w, &[d as i64, f as i64])?;
+        let w3l = dynaexq::runtime::lit_f32(&w, &[d as i64, f as i64])?;
+        let w2l = dynaexq::runtime::lit_f32(&w2, &[f as i64, d as i64])?;
+        rt.executable("expert_fp16_t16")?; // compile outside timing
+        let r = bench.run("PJRT expert_fp16_t16 execute", || {
+            std::hint::black_box(
+                rt.execute_refs("expert_fp16_t16", &[&xl, &w1l, &w3l, &w2l])
+                    .unwrap(),
+            );
+        });
+        println!("{}", r.line());
+
+        let q = dynaexq::model::quant::quantize(
+            &w,
+            d,
+            f,
+            dynaexq::model::Precision::Int4,
+        );
+        let q2 = dynaexq::model::quant::quantize(
+            &w2,
+            f,
+            d,
+            dynaexq::model::Precision::Int4,
+        );
+        let args = [
+            dynaexq::runtime::lit_u8(&q.data, &[(d / 2) as i64, f as i64])?,
+            dynaexq::runtime::lit_f32(&q.scales, &[f as i64])?,
+            dynaexq::runtime::lit_u8(&q.data, &[(d / 2) as i64, f as i64])?,
+            dynaexq::runtime::lit_f32(&q.scales, &[f as i64])?,
+            dynaexq::runtime::lit_u8(&q2.data, &[(f / 2) as i64, d as i64])?,
+            dynaexq::runtime::lit_f32(&q2.scales, &[d as i64])?,
+        ];
+        rt.executable("expert_int4_t16")?;
+        let r = bench.run("PJRT expert_int4_t16 execute", || {
+            std::hint::black_box(
+                rt.execute_refs(
+                    "expert_int4_t16",
+                    &[&xl, &args[0], &args[1], &args[2], &args[3], &args[4], &args[5]],
+                )
+                .unwrap(),
+            );
+        });
+        println!("{}", r.line());
+
+        // 6. buffer-based execution: weights staged on device once, only
+        //    the activation moves per call (the perf-pass optimization).
+        let wb1 = rt.buffer_f32(&w, &[d, f])?;
+        let wb3 = rt.buffer_f32(&w, &[d, f])?;
+        let wb2 = rt.buffer_f32(&w2, &[f, d])?;
+        let r = bench.run("PJRT expert_fp16_t16 execute_b (staged w)", || {
+            let xb = rt.buffer_f32(&x, &[16, d]).unwrap();
+            std::hint::black_box(
+                rt.execute_buffers(
+                    "expert_fp16_t16",
+                    &[&xb, &wb1, &wb3, &wb2],
+                )
+                .unwrap(),
+            );
+        });
+        println!("{}", r.line());
+
+        let qw1 = rt.buffer_u8(&q.data, &[d / 2, f])?;
+        let qs1 = rt.buffer_f32(&q.scales, &[f])?;
+        let qw3 = rt.buffer_u8(&q.data, &[d / 2, f])?;
+        let qs3 = rt.buffer_f32(&q.scales, &[f])?;
+        let qw2 = rt.buffer_u8(&q2.data, &[f / 2, d])?;
+        let qs2 = rt.buffer_f32(&q2.scales, &[d])?;
+        let r = bench.run("PJRT expert_int4_t16 execute_b (staged w)", || {
+            let xb = rt.buffer_f32(&x, &[16, d]).unwrap();
+            std::hint::black_box(
+                rt.execute_buffers(
+                    "expert_int4_t16",
+                    &[&xb, &qw1, &qs1, &qw3, &qs3, &qw2, &qs2],
+                )
+                .unwrap(),
+            );
+        });
+        println!("{}", r.line());
+    } else {
+        println!("(artifacts missing — skipping PJRT microbenches)");
+    }
+    Ok(())
+}

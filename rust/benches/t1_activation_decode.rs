@@ -1,0 +1,9 @@
+//! Paper Table 1: expert activation ratio (%) in decode vs batch size.
+//! Thin wrapper over `dynaexq::experiments` — the same code path as
+//! `dynaexq report --exp t1`. Set DYNAEXQ_FULL=1 for the full sweep.
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("DYNAEXQ_FULL").is_err();
+    println!("{}", dynaexq::experiments::activation::table1_decode(fast)?);
+    Ok(())
+}

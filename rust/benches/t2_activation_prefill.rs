@@ -1,0 +1,9 @@
+//! Paper Table 2: expert activation ratio (%) in prefill vs batch size.
+//! Thin wrapper over `dynaexq::experiments` — the same code path as
+//! `dynaexq report --exp t2`. Set DYNAEXQ_FULL=1 for the full sweep.
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("DYNAEXQ_FULL").is_err();
+    println!("{}", dynaexq::experiments::activation::table2_prefill(fast)?);
+    Ok(())
+}

@@ -1,0 +1,9 @@
+//! Paper Table 4: quality across models and methods (numeric proxy suite).
+//! Thin wrapper over `dynaexq::experiments` — the same code path as
+//! `dynaexq report --exp t4`. Set DYNAEXQ_FULL=1 for the full sweep.
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("DYNAEXQ_FULL").is_err();
+    println!("{}", dynaexq::experiments::quality_exp::table4_quality(fast)?);
+    Ok(())
+}

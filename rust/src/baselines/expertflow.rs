@@ -1,0 +1,282 @@
+//! ExpertFlow-like expert offloading/prefetching baseline.
+//!
+//! Structure (after ExpertFlow [27] / ProMoE / MoE-Infinity): GPU memory is
+//! an expert **cache** under the same HBM envelope; experts execute at full
+//! working precision (the model's base tier). A history-based prefetcher
+//! keeps recently routed experts warm, but a routed expert that is not
+//! resident must be fetched over PCIe **on the critical path** — the
+//! forward pass waits for the fetch event. When activation densifies
+//! (prefill, large batch), the per-iteration working set exceeds what the
+//! overlap window can stage and waiting time becomes visible (paper Fig. 1
+//! and the structural limitation of §2.2).
+//!
+//! This is a faithful reproduction of the *mechanism class*, not of
+//! ExpertFlow's exact policy (see DESIGN.md §2 substitutions): cache-aware
+//! LRU eviction + temporal-locality prefetch ("keep what the last
+//! iterations routed"), which is the regime where all such systems share
+//! the same failure mode.
+
+use std::collections::HashMap;
+
+use crate::config::{DeviceConfig, ModelPreset, ServingConfig};
+use crate::model::Precision;
+use crate::serving::backend::ResidencyBackend;
+use crate::sim::{LogicalDims, Stream};
+
+/// LRU expert cache + prefetcher + PCIe fetch stream.
+pub struct ExpertFlowBackend {
+    precision: Precision,
+    /// Max experts resident simultaneously (HBM envelope / expert bytes).
+    capacity: usize,
+    expert_bytes: usize,
+    secs_per_byte: f64,
+    /// (layer, expert) → last-use tick; presence == resident *or* in
+    /// flight; `ready_at` gates use.
+    resident: HashMap<(usize, usize), CacheEntry>,
+    /// Monotone use counter for LRU.
+    tick: u64,
+    /// PCIe fetch stream (demand fetches and prefetches share bandwidth).
+    stream: Stream,
+    /// Per-layer expert sets routed in the previous iteration.
+    history: Vec<Vec<usize>>,
+    n_layers: usize,
+    /// Stats.
+    pub demand_fetches: u64,
+    pub prefetches: u64,
+    pub hits: u64,
+    pub stall_s: f64,
+    migrated: u64,
+}
+
+struct CacheEntry {
+    last_use: u64,
+    /// Modeled time the weights are fully on-device.
+    ready_at: f64,
+}
+
+impl ExpertFlowBackend {
+    pub fn new(
+        preset: &ModelPreset,
+        cfg: &ServingConfig,
+        dev: &DeviceConfig,
+    ) -> Self {
+        let dims = LogicalDims::for_preset(preset);
+        // Offloading serves the base-precision model (fp16; int4 base for
+        // the 80B model) and caches as many experts as the envelope allows.
+        let precision = preset.hi;
+        let expert_bytes = dims.expert_bytes(precision);
+        let avail = cfg.hbm_budget_bytes.saturating_sub(cfg.fixed_bytes);
+        let capacity = (avail / expert_bytes).max(1);
+        let n_layers = preset.n_layers_logical();
+        Self {
+            precision,
+            capacity,
+            expert_bytes,
+            secs_per_byte: 1.0 / dev.pcie_bytes_per_s,
+            resident: HashMap::new(),
+            tick: 0,
+            stream: Stream::new(),
+            history: vec![Vec::new(); n_layers],
+            n_layers,
+            demand_fetches: 0,
+            prefetches: 0,
+            hits: 0,
+            stall_s: 0.0,
+            migrated: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Evict least-recently-used entries until one slot is free.
+    fn make_room(&mut self) {
+        while self.resident.len() >= self.capacity {
+            let victim = self
+                .resident
+                .iter()
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(&k, _)| k);
+            match victim {
+                Some(k) => {
+                    self.resident.remove(&k);
+                }
+                None => break,
+            }
+        }
+    }
+
+    fn fetch(&mut self, key: (usize, usize), now_s: f64) -> f64 {
+        self.make_room();
+        let done = self
+            .stream
+            .schedule(now_s, self.expert_bytes as f64 * self.secs_per_byte);
+        self.migrated += self.expert_bytes as u64;
+        self.tick += 1;
+        self.resident.insert(
+            key,
+            CacheEntry { last_use: self.tick, ready_at: done },
+        );
+        done
+    }
+}
+
+impl ResidencyBackend for ExpertFlowBackend {
+    fn name(&self) -> &'static str {
+        "expertflow"
+    }
+
+    fn record_routing(&mut self, layer: usize, experts: &[usize]) {
+        let mut set = experts.to_vec();
+        set.sort_unstable();
+        set.dedup();
+        self.history[layer % self.n_layers] = set;
+    }
+
+    fn resolve(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        now_s: f64,
+    ) -> (Precision, f64) {
+        let key = (layer, expert);
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(entry) = self.resident.get_mut(&key) {
+            entry.last_use = tick;
+            // In flight (prefetch or an earlier demand fetch): wait for the
+            // remaining transfer time only.
+            let stall = (entry.ready_at - now_s).max(0.0);
+            if stall == 0.0 {
+                self.hits += 1;
+            } else {
+                self.stall_s += stall;
+            }
+            return (self.precision, stall);
+        }
+        // Miss → demand fetch on the critical path.
+        self.demand_fetches += 1;
+        let done = self.fetch(key, now_s);
+        let stall = (done - now_s).max(0.0);
+        self.stall_s += stall;
+        (self.precision, stall)
+    }
+
+    fn tick(&mut self, now_s: f64) -> f64 {
+        // Prefetch pass: keep the previous iteration's routed experts warm
+        // for every layer (temporal locality). Prefetches ride the same
+        // PCIe stream — they contend with demand fetches, which is exactly
+        // the bandwidth pressure the paper describes.
+        for layer in 0..self.n_layers {
+            let wanted = self.history[layer].clone();
+            for e in wanted {
+                let key = (layer, e);
+                if !self.resident.contains_key(&key) {
+                    self.prefetches += 1;
+                    self.fetch(key, now_s);
+                }
+            }
+        }
+        0.0
+    }
+
+    fn migrated_bytes(&self) -> u64 {
+        self.migrated
+    }
+
+    fn hi_fraction(&self) -> f64 {
+        1.0 // everything executes at base precision
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend(cap_override: Option<usize>) -> ExpertFlowBackend {
+        let preset = ModelPreset::qwen30b_sim();
+        let cfg = ServingConfig::default();
+        let dev = DeviceConfig::default();
+        let mut b = ExpertFlowBackend::new(&preset, &cfg, &dev);
+        if let Some(c) = cap_override {
+            b.capacity = c;
+        }
+        b
+    }
+
+    #[test]
+    fn capacity_reflects_envelope() {
+        let b = backend(None);
+        // 48 GB budget − fixed, fp16 experts ≈ 9.4 MB → thousands of slots
+        assert!(b.capacity() > 100);
+        assert!(b.capacity() < 10_000);
+    }
+
+    #[test]
+    fn first_touch_stalls_second_hit_free() {
+        let mut b = backend(None);
+        let (p, stall1) = b.resolve(0, 7, 0.0);
+        assert_eq!(p, Precision::Fp16);
+        assert!(stall1 > 0.0, "cold miss must stall");
+        let later = stall1 + 1.0;
+        let (_, stall2) = b.resolve(0, 7, later);
+        assert_eq!(stall2, 0.0, "resident hit is free");
+        assert_eq!(b.demand_fetches, 1);
+        assert_eq!(b.hits, 1);
+    }
+
+    #[test]
+    fn lru_eviction_under_pressure() {
+        let mut b = backend(Some(2));
+        b.resolve(0, 1, 0.0);
+        b.resolve(0, 2, 10.0);
+        b.resolve(0, 3, 20.0); // evicts (0,1)
+        assert_eq!(b.resident.len(), 2);
+        let (_, stall) = b.resolve(0, 1, 1000.0);
+        assert!(stall > 0.0, "evicted expert must refetch");
+    }
+
+    #[test]
+    fn prefetch_hides_latency_when_working_set_fits() {
+        let mut b = backend(None);
+        // iteration 1: route experts 0..8 at layer 0 (stalls)
+        let mut now = 0.0;
+        for e in 0..8 {
+            let (_, s) = b.resolve(0, e, now);
+            now += s + 1e-3;
+        }
+        b.record_routing(0, &(0..8).collect::<Vec<_>>());
+        b.tick(now);
+        // iteration 2 (same experts, later): all warm
+        let later = now + 10.0;
+        for e in 0..8 {
+            let (_, s) = b.resolve(0, e, later);
+            assert_eq!(s, 0.0, "expert {e} should be prefetched");
+        }
+    }
+
+    #[test]
+    fn dense_activation_overwhelms_cache() {
+        // Working set ≫ capacity → every iteration pays fetch stalls even
+        // with prefetch (the paper's structural limitation).
+        let mut b = backend(Some(16));
+        let mut now = 0.0;
+        let mut total_stall = 0.0;
+        for iter in 0..5 {
+            let experts: Vec<usize> =
+                (0..64).map(|i| (i + iter) % 128).collect();
+            for &e in &experts {
+                let (_, s) = b.resolve(0, e, now);
+                total_stall += s;
+                now += s + 1e-4;
+            }
+            b.record_routing(0, &experts);
+            b.tick(now);
+        }
+        // 9.4 MB fp16 experts over 25 GB/s PCIe ≈ 0.38 ms each; hundreds
+        // of refetches must accumulate visible waiting time.
+        assert!(b.demand_fetches > 100, "fetches {}", b.demand_fetches);
+        assert!(total_stall > 0.05, "stall {total_stall}");
+    }
+}

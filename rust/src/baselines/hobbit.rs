@@ -1,0 +1,194 @@
+//! HOBBIT-like reactive mixed-precision offloading baseline.
+//!
+//! HOBBIT [29] replaces cache-miss experts with lower-precision versions to
+//! avoid loading latency: every expert has a low-precision version always
+//! available, a bounded high-precision cache holds recently used experts,
+//! and a *miss* executes the low tier immediately while the high tier is
+//! fetched in the background (reactively, on every miss — no long-horizon
+//! hotness estimate, no hysteresis, no admission windows).
+//!
+//! Versus DynaExq this isolates the value of the *policy*: both systems
+//! never stall, both respect the same budget; they differ in who occupies
+//! the high-precision slots. Reactive LRU chases the most recent working
+//! set and churns under dense/shifting routing; DynaExq's EMA top-n with
+//! hysteresis keeps long-horizon hot experts pinned. Experiment A6.
+
+use std::collections::HashMap;
+
+use crate::config::{DeviceConfig, ModelPreset, ServingConfig};
+use crate::model::Precision;
+use crate::serving::backend::ResidencyBackend;
+use crate::sim::{LogicalDims, Stream};
+
+/// Reactive hi-tier LRU cache with lo-tier fallback.
+pub struct HobbitBackend {
+    hi: Precision,
+    lo: Precision,
+    /// Hi-version slots the envelope affords (same math as DynaExq's plan).
+    capacity: usize,
+    hi_bytes: usize,
+    secs_per_byte: f64,
+    /// (layer, expert) → entry; usable once `ready_at` passes.
+    cache: HashMap<(usize, usize), Entry>,
+    tick: u64,
+    stream: Stream,
+    migrated: u64,
+    resolves: u64,
+    hi_resolves: u64,
+}
+
+struct Entry {
+    last_use: u64,
+    ready_at: f64,
+}
+
+impl HobbitBackend {
+    pub fn new(
+        preset: &ModelPreset,
+        cfg: &ServingConfig,
+        dev: &DeviceConfig,
+    ) -> Result<Self, String> {
+        let dims = LogicalDims::for_preset(preset);
+        // Identical envelope math to DynaExq's budget plan: lo versions of
+        // all experts resident, remaining slack buys hi slots.
+        let plan = crate::coordinator::Coordinator::plan_for(preset, cfg)?;
+        let capacity = plan.n_hi_per_layer * preset.n_layers_logical();
+        Ok(Self {
+            hi: preset.hi,
+            lo: preset.lo,
+            capacity: capacity.max(1),
+            hi_bytes: dims.expert_bytes(preset.hi),
+            secs_per_byte: 1.0 / dev.pcie_bytes_per_s,
+            cache: HashMap::new(),
+            tick: 0,
+            stream: Stream::new(),
+            migrated: 0,
+            resolves: 0,
+            hi_resolves: 0,
+        })
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn evict_to_fit(&mut self) {
+        while self.cache.len() >= self.capacity {
+            let victim = self
+                .cache
+                .iter()
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(&k, _)| k);
+            match victim {
+                Some(k) => {
+                    self.cache.remove(&k);
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+impl ResidencyBackend for HobbitBackend {
+    fn name(&self) -> &'static str {
+        "hobbit"
+    }
+
+    fn record_routing(&mut self, _layer: usize, _experts: &[usize]) {}
+
+    fn resolve(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        now_s: f64,
+    ) -> (Precision, f64) {
+        self.resolves += 1;
+        self.tick += 1;
+        let tick = self.tick;
+        let key = (layer, expert);
+        if let Some(e) = self.cache.get_mut(&key) {
+            e.last_use = tick;
+            if e.ready_at <= now_s {
+                self.hi_resolves += 1;
+                return (self.hi, 0.0); // hi hit, never a stall
+            }
+            // still in flight → run the lo fallback now
+            return (self.lo, 0.0);
+        }
+        // Miss: run lo immediately, fetch hi reactively in the background.
+        self.evict_to_fit();
+        let done = self
+            .stream
+            .schedule(now_s, self.hi_bytes as f64 * self.secs_per_byte);
+        self.migrated += self.hi_bytes as u64;
+        self.cache.insert(key, Entry { last_use: tick, ready_at: done });
+        (self.lo, 0.0)
+    }
+
+    fn tick(&mut self, _now_s: f64) -> f64 {
+        0.0
+    }
+
+    fn migrated_bytes(&self) -> u64 {
+        self.migrated
+    }
+
+    fn hi_fraction(&self) -> f64 {
+        if self.resolves == 0 {
+            0.0
+        } else {
+            self.hi_resolves as f64 / self.resolves as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> HobbitBackend {
+        HobbitBackend::new(
+            &ModelPreset::qwen30b_sim(),
+            &ServingConfig::default(),
+            &DeviceConfig::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn never_stalls() {
+        let mut b = backend();
+        for e in 0..200 {
+            let (_, stall) = b.resolve(0, e % 128, e as f64 * 1e-4);
+            assert_eq!(stall, 0.0);
+        }
+    }
+
+    #[test]
+    fn miss_runs_lo_then_hi_after_fetch() {
+        let mut b = backend();
+        let (p1, _) = b.resolve(0, 5, 0.0);
+        assert_eq!(p1, Precision::Int4, "cold miss → lo fallback");
+        // long after the fetch completes → hi
+        let (p2, _) = b.resolve(0, 5, 10.0);
+        assert_eq!(p2, Precision::Fp16);
+        assert!(b.migrated_bytes() > 0);
+    }
+
+    #[test]
+    fn reactive_churn_under_rotation() {
+        // rotating working set larger than capacity → every touch migrates
+        let mut b = backend();
+        b.capacity = 8;
+        let before = |b: &HobbitBackend| b.migrated_bytes();
+        let mut last = before(&b);
+        for round in 0..4u64 {
+            for e in 0..16usize {
+                b.resolve(0, (e + round as usize) % 32, round as f64);
+            }
+            let now = b.migrated_bytes();
+            assert!(now > last, "reactive policy keeps fetching");
+            last = now;
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Comparator systems the paper evaluates against, plus two extensions.
+//!
+//! * static PTQ lives in [`crate::serving::backend::StaticBackend`] (it is
+//!   trivial — uniform precision, no transitions);
+//! * [`expertflow`] — the offloading/prefetching comparator (paper §5.3);
+//! * [`static_map`] — offline-calibrated per-expert mixed-precision map
+//!   (MxMoE/MoPEQ-class; the static alternative Observation 2 targets);
+//! * [`hobbit`] — reactive mixed-precision offloading (HOBBIT-class;
+//!   isolates the value of DynaExq's long-horizon policy).
+
+pub mod expertflow;
+pub mod hobbit;
+pub mod static_map;
+
+pub use expertflow::ExpertFlowBackend;
+pub use hobbit::HobbitBackend;
+pub use static_map::StaticMapBackend;

@@ -1,0 +1,146 @@
+//! Static per-expert mixed-precision map (MxMoE / MoPEQ-class baseline).
+//!
+//! The strongest *static* alternative to DynaExq: an offline calibration
+//! pass measures expert traffic on a calibration workload and fixes the
+//! top-n experts per layer at the high tier — forever. No transitions, no
+//! transfers, same memory budget as DynaExq.
+//!
+//! This is the baseline the paper's Observation 2 is aimed at: when the
+//! serving workload matches calibration it performs like DynaExq, but
+//! under workload shift the map "spends scarce memory budget on experts
+//! that contribute little traffic ... while over-compressing the experts
+//! that dominate execution". Experiment A5 quantifies exactly that.
+
+use crate::model::Precision;
+use crate::serving::backend::ResidencyBackend;
+
+/// Fixed per-(layer, expert) precision assignment.
+pub struct StaticMapBackend {
+    n_experts: usize,
+    map: Vec<Precision>, // [layer × expert]
+    resolves: u64,
+    hi_resolves: u64,
+    hi: Precision,
+}
+
+impl StaticMapBackend {
+    /// Build from an explicit hot set per layer.
+    pub fn from_hot_sets(
+        n_layers: usize,
+        n_experts: usize,
+        hi: Precision,
+        lo: Precision,
+        hot_sets: &[Vec<usize>],
+    ) -> Self {
+        let mut map = vec![lo; n_layers * n_experts];
+        for (layer, hot) in hot_sets.iter().enumerate().take(n_layers) {
+            for &e in hot {
+                map[layer * n_experts + e] = hi;
+            }
+        }
+        Self { n_experts, map, resolves: 0, hi_resolves: 0, hi }
+    }
+
+    /// Offline calibration: take per-(layer, expert) traffic counts and
+    /// pin the top-`n_hi` per layer at the high tier.
+    pub fn calibrated(
+        n_layers: usize,
+        n_experts: usize,
+        hi: Precision,
+        lo: Precision,
+        counts: &[Vec<u64>],
+        n_hi: usize,
+    ) -> Self {
+        let hot_sets: Vec<Vec<usize>> = counts
+            .iter()
+            .map(|layer_counts| {
+                let mut idx: Vec<usize> = (0..layer_counts.len()).collect();
+                idx.sort_by_key(|&e| std::cmp::Reverse(layer_counts[e]));
+                idx.truncate(n_hi);
+                idx
+            })
+            .collect();
+        Self::from_hot_sets(n_layers, n_experts, hi, lo, &hot_sets)
+    }
+
+    /// The hot set of one layer (tests/diagnostics).
+    pub fn hot_set(&self, layer: usize) -> Vec<usize> {
+        (0..self.n_experts)
+            .filter(|&e| self.map[layer * self.n_experts + e] == self.hi)
+            .collect()
+    }
+}
+
+impl ResidencyBackend for StaticMapBackend {
+    fn name(&self) -> &'static str {
+        "static-map"
+    }
+
+    fn record_routing(&mut self, _layer: usize, _experts: &[usize]) {}
+
+    fn resolve(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        _now_s: f64,
+    ) -> (Precision, f64) {
+        let p = self.map[layer * self.n_experts + expert];
+        self.resolves += 1;
+        if p == self.hi {
+            self.hi_resolves += 1;
+        }
+        (p, 0.0)
+    }
+
+    fn tick(&mut self, _now_s: f64) -> f64 {
+        0.0
+    }
+
+    fn migrated_bytes(&self) -> u64 {
+        0
+    }
+
+    fn hi_fraction(&self) -> f64 {
+        if self.resolves == 0 {
+            0.0
+        } else {
+            self.hi_resolves as f64 / self.resolves as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_pins_top_n() {
+        let counts = vec![vec![5u64, 100, 2, 50], vec![1, 1, 99, 1]];
+        let mut b = StaticMapBackend::calibrated(
+            2, 4, Precision::Fp16, Precision::Int4, &counts, 2,
+        );
+        assert_eq!(b.hot_set(0), vec![1, 3]);
+        assert_eq!(b.resolve(0, 1, 0.0).0, Precision::Fp16);
+        assert_eq!(b.resolve(0, 0, 0.0).0, Precision::Int4);
+        assert_eq!(b.resolve(1, 2, 0.0).0, Precision::Fp16);
+        assert_eq!(b.migrated_bytes(), 0);
+    }
+
+    #[test]
+    fn hi_fraction_tracks_traffic_match() {
+        let counts = vec![vec![100u64, 0, 0, 0]];
+        let mut b = StaticMapBackend::calibrated(
+            1, 4, Precision::Fp16, Precision::Int4, &counts, 1,
+        );
+        // traffic on the calibrated expert → high hi_fraction
+        for _ in 0..10 {
+            b.resolve(0, 0, 0.0);
+        }
+        assert_eq!(b.hi_fraction(), 1.0);
+        // shifted traffic → hi_fraction collapses
+        for _ in 0..10 {
+            b.resolve(0, 3, 0.0);
+        }
+        assert_eq!(b.hi_fraction(), 0.5);
+    }
+}

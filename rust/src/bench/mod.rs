@@ -1,0 +1,173 @@
+//! Mini benchmark harness (criterion is not in the offline crate set).
+//!
+//! Statistically honest for its purpose: explicit warmup, N timed
+//! iterations, mean/median/p99 reporting with no hidden adaptivity. Paper
+//! experiment harnesses (`benches/*.rs`) use [`Bench`] for wall-clock
+//! micro-measurements and print their tables directly.
+
+use std::time::Instant;
+
+use crate::util::{mean, percentile};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<40} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}",
+            self.name,
+            self.iters,
+            human(self.mean_s),
+            human(self.p50_s),
+            human(self.p99_s),
+        )
+    }
+}
+
+/// Human-readable seconds.
+pub fn human(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// The harness.
+pub struct Bench {
+    warmup: usize,
+    iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup: 3, iters: 20 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        assert!(iters > 0);
+        Self { warmup, iters }
+    }
+
+    /// Time `f` (whole-call granularity).
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_s: mean(&samples),
+            p50_s: percentile(&samples, 50.0),
+            p99_s: percentile(&samples, 99.0),
+            min_s: min,
+        }
+    }
+}
+
+/// Fixed-width table printer for experiment harnesses.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let b = Bench::new(1, 5);
+        let mut n = 0u64;
+        let r = b.run("spin", || {
+            n += 1;
+            std::hint::black_box(n);
+        });
+        assert_eq!(n, 6); // 1 warmup + 5 timed
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.p99_s >= r.p50_s || r.p50_s - r.p99_s < 1e-9);
+    }
+
+    #[test]
+    fn human_units() {
+        assert_eq!(human(2.0), "2.000 s");
+        assert_eq!(human(2e-3), "2.000 ms");
+        assert_eq!(human(2e-6), "2.000 µs");
+        assert_eq!(human(2e-9), "2.0 ns");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "bbbb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["333".into(), "4".into()]);
+        let s = t.render();
+        assert!(s.contains("333"));
+        assert_eq!(s.lines().count(), 4);
+    }
+}

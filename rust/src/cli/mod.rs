@@ -1,0 +1,99 @@
+//! Hand-rolled CLI argument parsing (clap is not in the offline crate set).
+//!
+//! Grammar: `dynaexq <subcommand> [--flag value]... [--switch]...`
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (after argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(sub) = it.next() {
+            if sub.starts_with('-') {
+                return Err(format!("expected subcommand, got flag {sub}"));
+            }
+            out.subcommand = sub;
+        }
+        while let Some(arg) = it.next() {
+            let Some(name) = arg.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument {arg:?}"));
+            };
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                }
+                _ => out.switches.push(name.to_string()),
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Option<T> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn full_grammar() {
+        let a = parse("report --exp t1 --batch 32 --verbose");
+        assert_eq!(a.subcommand, "report");
+        assert_eq!(a.get("exp"), Some("t1"));
+        assert_eq!(a.get_parse::<usize>("batch"), Some(32));
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+        assert_eq!(a.get_or("model", "qwen30b-sim"), "qwen30b-sim");
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("serve --fast");
+        assert!(a.has("fast"));
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(
+            Args::parse(["serve".into(), "oops".into()]).is_err()
+        );
+    }
+
+    #[test]
+    fn empty_ok() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.subcommand, "");
+    }
+}

@@ -1,0 +1,55 @@
+//! Minimal `key=value` / `key=value;key=value` parsing used by the artifact
+//! manifest and CLI overrides (the offline crate set has no serde/TOML).
+
+use std::collections::HashMap;
+
+/// Parse `a=1;b=x` (or comma-separated) into a map. Empty segments ignored.
+pub fn parse_kv(s: &str) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    for part in s.split([';', ',']) {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((k, v)) = part.split_once('=') {
+            m.insert(k.trim().to_string(), v.trim().to_string());
+        }
+    }
+    m
+}
+
+/// Fetch + parse a typed value from a kv map.
+pub fn get_parse<T: std::str::FromStr>(
+    m: &HashMap<String, String>,
+    key: &str,
+) -> Option<T> {
+    m.get(key).and_then(|v| v.parse().ok())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mixed_separators() {
+        let m = parse_kv("op=router;tokens=16,experts=128");
+        assert_eq!(m["op"], "router");
+        assert_eq!(get_parse::<usize>(&m, "tokens"), Some(16));
+        assert_eq!(get_parse::<usize>(&m, "experts"), Some(128));
+    }
+
+    #[test]
+    fn ignores_garbage() {
+        let m = parse_kv(";;a=1;novalue;  b = 2 ");
+        assert_eq!(m.len(), 2);
+        assert_eq!(m["a"], "1");
+        assert_eq!(m["b"], "2");
+    }
+
+    #[test]
+    fn missing_key_none() {
+        let m = parse_kv("a=1");
+        assert_eq!(get_parse::<usize>(&m, "zz"), None);
+        assert_eq!(get_parse::<usize>(&m, "a"), Some(1));
+    }
+}

@@ -1,0 +1,237 @@
+//! Configuration: model presets (mirroring `python/compile/configs.py`),
+//! serving/policy parameters, and the simulated device.
+//!
+//! A tiny `key=value` text format (see [`kv`]) replaces serde/TOML (not in
+//! the offline crate set); presets cover the paper's three evaluation models.
+
+pub mod kv;
+
+use crate::model::Precision;
+
+/// Core tensor dims — must match `python/compile/configs.py`.
+pub const D_MODEL: usize = 64;
+pub const N_HEADS: usize = 4;
+pub const HEAD_DIM: usize = D_MODEL / N_HEADS;
+pub const FF_DIM: usize = 128;
+pub const VOCAB: usize = 256;
+pub const S_MAX: usize = 512;
+
+/// Token-count buckets compiled for flat-token ops.
+pub const TOKEN_BUCKETS: &[usize] = &[1, 4, 16, 64, 256];
+/// Batch buckets compiled for the decode-step attention op.
+pub const BATCH_BUCKETS: &[usize] = &[1, 4, 8];
+/// Token buckets compiled for the per-expert FFN op.
+pub const EXPERT_TOKEN_BUCKETS: &[usize] = &[1, 4, 16, 64];
+
+/// Routing structure of one simulated MoE model (paper Table 3).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelPreset {
+    pub name: &'static str,
+    /// Executed transformer layers in this reproduction.
+    pub n_layers: usize,
+    /// Experts per MoE layer.
+    pub n_experts: usize,
+    /// Router top-k.
+    pub top_k: usize,
+    /// Always-on shared experts per layer (run at the high tier).
+    pub n_shared: usize,
+    /// Precision of the hot tier.
+    pub hi: Precision,
+    /// Precision of the cold tier.
+    pub lo: Precision,
+    /// Layer count of the paper's real model (reporting metadata only).
+    pub paper_layers: usize,
+}
+
+impl ModelPreset {
+    /// Qwen3-30B-A3B analogue: 128 experts, top-8, FP16 hot / INT4 cold.
+    pub fn qwen30b_sim() -> Self {
+        Self {
+            name: "qwen30b-sim",
+            n_layers: 4,
+            n_experts: 128,
+            top_k: 8,
+            n_shared: 0,
+            hi: Precision::Fp16,
+            lo: Precision::Int4,
+            paper_layers: 48,
+        }
+    }
+
+    /// Qwen3-Next-80B analogue: 512 experts, top-10, one shared expert,
+    /// INT4 hot / INT2 cold (the paper serves the 80B from an Int4 base).
+    pub fn qwen80b_sim() -> Self {
+        Self {
+            name: "qwen80b-sim",
+            n_layers: 4,
+            n_experts: 512,
+            top_k: 10,
+            n_shared: 1,
+            hi: Precision::Int4,
+            lo: Precision::Int2,
+            paper_layers: 48,
+        }
+    }
+
+    /// Phi-3.5-MoE analogue: 16 experts, top-2, FP16 hot / INT4 cold.
+    pub fn phi_sim() -> Self {
+        Self {
+            name: "phi-sim",
+            n_layers: 4,
+            n_experts: 16,
+            top_k: 2,
+            n_shared: 0,
+            hi: Precision::Fp16,
+            lo: Precision::Int4,
+            paper_layers: 32,
+        }
+    }
+
+    /// All presets, in the paper's table order.
+    pub fn all() -> Vec<Self> {
+        vec![Self::qwen30b_sim(), Self::qwen80b_sim(), Self::phi_sim()]
+    }
+
+    /// Look up a preset by name.
+    pub fn by_name(name: &str) -> Option<Self> {
+        Self::all().into_iter().find(|p| p.name == name)
+    }
+
+    /// Router artifact key (`e{experts}k{topk}`), matching aot.py.
+    pub fn router_key(&self) -> String {
+        format!("e{}k{}", self.n_experts, self.top_k)
+    }
+
+    /// A copy whose logical layer count equals the *executed* layer count —
+    /// used when a Coordinator manages the numeric (small) model directly.
+    pub fn executed_scale(&self) -> Self {
+        let mut p = self.clone();
+        p.paper_layers = p.n_layers;
+        p
+    }
+
+    /// Bytes of one expert's weights at `p` (three matrices + scales),
+    /// matching the packed layout of `model::quant`.
+    pub fn expert_bytes(&self, p: Precision) -> usize {
+        crate::model::expert_bytes(p)
+    }
+}
+
+/// Policy + mechanism parameters of the DynaExq control loop (§3).
+#[derive(Clone, Debug)]
+pub struct ServingConfig {
+    /// EMA smoothing factor α ∈ [0, 1): `S ← αS + (1−α)c`.
+    pub ema_alpha: f64,
+    /// Update interval T_u in modeled milliseconds.
+    pub update_interval_ms: f64,
+    /// Hysteresis margin: a candidate must beat the weakest resident's score
+    /// by this relative margin to trigger a swap (0 disables hysteresis).
+    pub hysteresis_margin: f64,
+    /// Max concurrent in-flight promotions (admission/backpressure).
+    pub max_inflight_promotions: usize,
+    /// Hard HBM envelope in bytes (the paper's 48 GB A6000).
+    pub hbm_budget_bytes: usize,
+    /// Reserved bytes for non-expert state (KV cache, activations,
+    /// non-expert params, runtime) — `M_fixed` of §3.3.
+    pub fixed_bytes: usize,
+    /// Force the per-layer hot capacity instead of deriving it from the
+    /// budget (quality sweeps, Fig. 3).
+    pub n_hi_override: Option<usize>,
+    /// Maximum decode steps per scheduling quantum.
+    pub max_batch: usize,
+    /// If true, transitions block the forward pass (ablation A3).
+    pub blocking_transitions: bool,
+    /// Pool block granularity in bytes (ablation A4).
+    pub pool_block_bytes: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            ema_alpha: 0.8,
+            update_interval_ms: 50.0,
+            hysteresis_margin: 0.1,
+            max_inflight_promotions: 64,
+            hbm_budget_bytes: 48_000_000_000, // RTX A6000: 48 GB
+            // non-expert params + KV cache + activations + runtime
+            fixed_bytes: 14_000_000_000,
+            max_batch: 32,
+            blocking_transitions: false,
+            pool_block_bytes: 0, // 0 → derived from expert size
+            n_hi_override: None,
+        }
+    }
+}
+
+/// Simulated device (A6000-class, DESIGN.md §2): used by `sim::Device`.
+#[derive(Clone, Debug)]
+pub struct DeviceConfig {
+    /// Host↔device bandwidth in bytes/s (PCIe 4.0 x16 ≈ 25 GB/s effective).
+    pub pcie_bytes_per_s: f64,
+    /// Device memory bandwidth in bytes/s (A6000 ≈ 768 GB/s).
+    pub hbm_bytes_per_s: f64,
+    /// Achieved dense compute throughput in FLOP/s. The A6000 peaks at
+    /// ≈155 fp16 TFLOPs, but the paper serves through a PyTorch/HF
+    /// Transformers stack whose MoE path reaches a small fraction of peak;
+    /// 15 TFLOP/s effective keeps modeled latencies in the paper's regime
+    /// (its Fig. 10 TTFTs are seconds, not milliseconds).
+    pub flops_per_s: f64,
+    /// Fixed per-kernel launch overhead in seconds (eager-mode dispatch).
+    pub launch_overhead_s: f64,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        Self {
+            pcie_bytes_per_s: 25e9,
+            hbm_bytes_per_s: 768e9,
+            flops_per_s: 15e12,
+            launch_overhead_s: 30e-6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_structure() {
+        let q30 = ModelPreset::qwen30b_sim();
+        assert_eq!(q30.n_experts, 128);
+        assert_eq!(q30.top_k, 8);
+        let q80 = ModelPreset::qwen80b_sim();
+        assert_eq!(q80.n_experts, 512);
+        assert_eq!(q80.top_k, 10);
+        assert_eq!(q80.n_shared, 1);
+        assert_eq!(q80.hi, Precision::Int4);
+        assert_eq!(q80.lo, Precision::Int2);
+        let phi = ModelPreset::phi_sim();
+        assert_eq!(phi.n_experts, 16);
+        assert_eq!(phi.top_k, 2);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for p in ModelPreset::all() {
+            assert_eq!(ModelPreset::by_name(p.name).unwrap(), p);
+        }
+        assert!(ModelPreset::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn router_keys_match_aot() {
+        assert_eq!(ModelPreset::qwen30b_sim().router_key(), "e128k8");
+        assert_eq!(ModelPreset::qwen80b_sim().router_key(), "e512k10");
+        assert_eq!(ModelPreset::phi_sim().router_key(), "e16k2");
+    }
+
+    #[test]
+    fn dims_match_python() {
+        assert_eq!(D_MODEL, 64);
+        assert_eq!(FF_DIM, 128);
+        assert_eq!(VOCAB, 256);
+        assert_eq!(S_MAX, 512);
+        assert_eq!(TOKEN_BUCKETS, &[1, 4, 16, 64, 256]);
+    }
+}

@@ -1,0 +1,265 @@
+//! Budget model and OOM safety (§3.3).
+//!
+//! A [`BudgetTracker`] enforces the hard HBM envelope: `M_total` usable
+//! bytes, `M_fixed` reserved for non-expert state (KV cache, activations,
+//! runtime), and the remainder split between high- and low-precision expert
+//! residency. Every promotion must pass `try_reserve` **before** entering
+//! the transition pipeline; a successful reservation guarantees the
+//! subsequent pool allocation cannot OOM. Reservation/release are atomic
+//! (CAS loops) so the migration worker and the policy thread never race the
+//! envelope.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::config::ModelPreset;
+use crate::model::expert_bytes;
+
+/// Atomic byte-budget tracker with explicit reserve/release.
+#[derive(Debug)]
+pub struct BudgetTracker {
+    /// Cap for high-precision expert residency (`M_exp_hi_cap`).
+    hi_cap: usize,
+    /// Cap for low-precision expert residency.
+    lo_cap: usize,
+    hi_used: AtomicUsize,
+    lo_used: AtomicUsize,
+    /// Diagnostics.
+    pub failed_reservations: AtomicUsize,
+}
+
+impl BudgetTracker {
+    pub fn new(hi_cap: usize, lo_cap: usize) -> Self {
+        Self {
+            hi_cap,
+            lo_cap,
+            hi_used: AtomicUsize::new(0),
+            lo_used: AtomicUsize::new(0),
+            failed_reservations: AtomicUsize::new(0),
+        }
+    }
+
+    fn try_reserve_in(used: &AtomicUsize, cap: usize, bytes: usize) -> bool {
+        let mut cur = used.load(Ordering::Relaxed);
+        loop {
+            if cur + bytes > cap {
+                return false;
+            }
+            match used.compare_exchange_weak(
+                cur,
+                cur + bytes,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Reserve `bytes` of high-precision capacity; false if it would exceed
+    /// the cap (the promotion must then be deferred — never forced).
+    pub fn try_reserve_hi(&self, bytes: usize) -> bool {
+        let ok = Self::try_reserve_in(&self.hi_used, self.hi_cap, bytes);
+        if !ok {
+            self.failed_reservations.fetch_add(1, Ordering::Relaxed);
+        }
+        ok
+    }
+
+    /// Release previously reserved high-precision bytes.
+    pub fn release_hi(&self, bytes: usize) {
+        let prev = self.hi_used.fetch_sub(bytes, Ordering::AcqRel);
+        debug_assert!(prev >= bytes, "release_hi underflow");
+    }
+
+    pub fn try_reserve_lo(&self, bytes: usize) -> bool {
+        let ok = Self::try_reserve_in(&self.lo_used, self.lo_cap, bytes);
+        if !ok {
+            self.failed_reservations.fetch_add(1, Ordering::Relaxed);
+        }
+        ok
+    }
+
+    pub fn release_lo(&self, bytes: usize) {
+        let prev = self.lo_used.fetch_sub(bytes, Ordering::AcqRel);
+        debug_assert!(prev >= bytes, "release_lo underflow");
+    }
+
+    pub fn hi_used(&self) -> usize {
+        self.hi_used.load(Ordering::Relaxed)
+    }
+
+    pub fn lo_used(&self) -> usize {
+        self.lo_used.load(Ordering::Relaxed)
+    }
+
+    pub fn hi_cap(&self) -> usize {
+        self.hi_cap
+    }
+
+    pub fn lo_cap(&self) -> usize {
+        self.lo_cap
+    }
+
+    /// Invariant check (used by tests and debug assertions).
+    pub fn within_envelope(&self) -> bool {
+        self.hi_used() <= self.hi_cap && self.lo_used() <= self.lo_cap
+    }
+}
+
+/// Budget initialization (§3.1): derive per-layer high-precision capacity
+/// `n_hi` from the envelope.
+///
+/// Feasibility by construction: with `n_hi` hot experts per layer,
+/// `fixed + Σ_layers [n_hi·B_hi + (E − n_hi)·B_lo] ≤ M_total` (shared
+/// experts are always hot and accounted separately).
+#[derive(Clone, Debug)]
+pub struct BudgetPlan {
+    /// Per-layer cap on concurrently hi-resident experts.
+    pub n_hi_per_layer: usize,
+    /// Cap for the high-precision pool in bytes (across layers).
+    pub hi_pool_bytes: usize,
+    /// Cap for the low-precision pool in bytes.
+    pub lo_pool_bytes: usize,
+    pub hi_expert_bytes: usize,
+    pub lo_expert_bytes: usize,
+}
+
+impl BudgetPlan {
+    /// Compute the plan for `preset` under `(total, fixed)` bytes.
+    ///
+    /// Returns an error if even all-cold residency does not fit — the
+    /// envelope is then infeasible for this model (the paper's systems
+    /// would refuse to start).
+    pub fn derive(
+        preset: &ModelPreset,
+        total_bytes: usize,
+        fixed_bytes: usize,
+    ) -> Result<Self, String> {
+        let b_hi = expert_bytes(preset.hi);
+        let b_lo = expert_bytes(preset.lo);
+        let layers = preset.n_layers;
+        let e = preset.n_experts;
+        // Shared experts are pinned at the hi tier, always resident.
+        let shared = layers * preset.n_shared * b_hi;
+        let baseline = fixed_bytes + shared + layers * e * b_lo;
+        if baseline > total_bytes {
+            return Err(format!(
+                "infeasible envelope: all-cold residency needs {baseline} \
+                 bytes but budget is {total_bytes}"
+            ));
+        }
+        let slack = total_bytes - baseline;
+        let per_swap = b_hi - b_lo; // promoting one expert frees its lo copy
+        let n_hi = (slack / (layers * per_swap)).min(e);
+        Ok(Self {
+            n_hi_per_layer: n_hi,
+            hi_pool_bytes: layers * (n_hi + preset.n_shared) * b_hi,
+            lo_pool_bytes: layers * e * b_lo,
+            hi_expert_bytes: b_hi,
+            lo_expert_bytes: b_lo,
+        })
+    }
+
+    /// Fraction of experts resident at the hot tier.
+    pub fn hot_fraction(&self, preset: &ModelPreset) -> f64 {
+        self.n_hi_per_layer as f64 / preset.n_experts as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::Prop;
+
+    #[test]
+    fn reserve_release_roundtrip() {
+        let b = BudgetTracker::new(100, 50);
+        assert!(b.try_reserve_hi(60));
+        assert!(!b.try_reserve_hi(41));
+        assert!(b.try_reserve_hi(40));
+        b.release_hi(60);
+        assert_eq!(b.hi_used(), 40);
+        assert!(b.within_envelope());
+        assert_eq!(
+            b.failed_reservations.load(Ordering::Relaxed),
+            1
+        );
+    }
+
+    #[test]
+    fn plan_feasible_by_construction() {
+        let preset = ModelPreset::qwen30b_sim();
+        // scaled-down envelope sized against the *small* executed model
+        let total = 20 << 20;
+        let fixed = 8 << 20;
+        let plan = BudgetPlan::derive(&preset, total, fixed).unwrap();
+        let b_hi = plan.hi_expert_bytes;
+        let b_lo = plan.lo_expert_bytes;
+        let used = fixed
+            + preset.n_layers
+                * (plan.n_hi_per_layer * b_hi
+                    + (preset.n_experts - plan.n_hi_per_layer) * b_lo);
+        assert!(used <= total, "plan must fit: {used} > {total}");
+        assert!(plan.n_hi_per_layer > 0);
+        assert!(plan.n_hi_per_layer < preset.n_experts);
+    }
+
+    #[test]
+    fn plan_rejects_infeasible() {
+        let preset = ModelPreset::qwen30b_sim();
+        assert!(BudgetPlan::derive(&preset, 1 << 20, 1 << 19).is_err());
+    }
+
+    #[test]
+    fn tighter_budget_fewer_hot_experts() {
+        let preset = ModelPreset::qwen30b_sim();
+        let p1 = BudgetPlan::derive(&preset, 20 << 20, 8 << 20).unwrap();
+        let p2 = BudgetPlan::derive(&preset, 17 << 20, 8 << 20).unwrap();
+        assert!(p2.n_hi_per_layer < p1.n_hi_per_layer);
+    }
+
+    #[test]
+    fn shared_experts_accounted() {
+        let mut p80 = ModelPreset::qwen80b_sim();
+        p80.n_layers = 2;
+        let plan = BudgetPlan::derive(&p80, 64 << 20, 4 << 20).unwrap();
+        // hi pool must have room for shared experts even at n_hi = 0
+        assert!(
+            plan.hi_pool_bytes
+                >= p80.n_layers * p80.n_shared * plan.hi_expert_bytes
+        );
+    }
+
+    #[test]
+    fn prop_concurrent_reservations_never_exceed_cap() {
+        let mut prop = Prop::new("budget_concurrent");
+        prop.run(10, |rng| {
+            let cap = 10_000 + rng.below(10_000);
+            let b = std::sync::Arc::new(BudgetTracker::new(cap, 0));
+            let mut handles = Vec::new();
+            for t in 0..4 {
+                let b = b.clone();
+                let seed = rng.next_u64();
+                handles.push(std::thread::spawn(move || {
+                    let mut r = crate::util::XorShiftRng::new(seed ^ t);
+                    let mut held = Vec::new();
+                    for _ in 0..200 {
+                        let sz = 1 + r.below(500);
+                        if b.try_reserve_hi(sz) {
+                            held.push(sz);
+                        }
+                        if !held.is_empty() && r.below(3) == 0 {
+                            b.release_hi(held.swap_remove(0));
+                        }
+                        assert!(b.hi_used() <= cap + 4 * 500);
+                    }
+                    held.into_iter().sum::<usize>()
+                }));
+            }
+            let held: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+            assert_eq!(b.hi_used(), held);
+            assert!(b.hi_used() <= cap);
+        });
+    }
+}

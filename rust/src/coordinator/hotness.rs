@@ -1,0 +1,176 @@
+//! Hotness estimation (§3.5).
+//!
+//! Per-(layer, expert) counters accumulate router selections during the
+//! current update interval `T_u`; at each interval boundary a smoothed score
+//! is updated with an exponential moving average
+//! `S ← α·S + (1−α)·c` and the counters reset. Time-based intervals keep
+//! the estimate stable under varying batch composition and prompt lengths.
+//! Only router outputs are used — no labels, no quality signals.
+
+/// EMA hotness estimator over all experts of all layers.
+#[derive(Debug, Clone)]
+pub struct HotnessEstimator {
+    n_experts: usize,
+    alpha: f64,
+    counts: Vec<u64>,
+    scores: Vec<f64>,
+    intervals: u64,
+}
+
+impl HotnessEstimator {
+    pub fn new(n_layers: usize, n_experts: usize, alpha: f64) -> Self {
+        assert!((0.0..1.0).contains(&alpha), "alpha must be in [0,1)");
+        Self {
+            n_experts,
+            alpha,
+            counts: vec![0; n_layers * n_experts],
+            scores: vec![0.0; n_layers * n_experts],
+            intervals: 0,
+        }
+    }
+
+    /// Record one router selection of `(layer, expert)`.
+    #[inline]
+    pub fn record(&mut self, layer: usize, expert: usize) {
+        self.counts[layer * self.n_experts + expert] += 1;
+    }
+
+    /// Record a batch of selections for one layer.
+    pub fn record_layer(&mut self, layer: usize, experts: &[usize]) {
+        let base = layer * self.n_experts;
+        for &e in experts {
+            self.counts[base + e] += 1;
+        }
+    }
+
+    /// Interval boundary: fold counters into the EMA and reset them.
+    pub fn end_interval(&mut self) {
+        for i in 0..self.scores.len() {
+            self.scores[i] =
+                self.alpha * self.scores[i] + (1.0 - self.alpha) * self.counts[i] as f64;
+            self.counts[i] = 0;
+        }
+        self.intervals += 1;
+    }
+
+    /// Smoothed score of one expert.
+    pub fn score(&self, layer: usize, expert: usize) -> f64 {
+        self.scores[layer * self.n_experts + expert]
+    }
+
+    /// All scores of one layer.
+    pub fn layer_scores(&self, layer: usize) -> &[f64] {
+        &self.scores[layer * self.n_experts..(layer + 1) * self.n_experts]
+    }
+
+    /// Raw in-interval count (diagnostics).
+    pub fn raw_count(&self, layer: usize, expert: usize) -> u64 {
+        self.counts[layer * self.n_experts + expert]
+    }
+
+    pub fn intervals(&self) -> u64 {
+        self.intervals
+    }
+
+    /// Indices of the top-n experts of a layer by score (stable order:
+    /// score desc, index asc — determinism matters for reproducibility).
+    pub fn top_n(&self, layer: usize, n: usize) -> Vec<usize> {
+        let scores = self.layer_scores(layer);
+        let mut idx: Vec<usize> = (0..scores.len()).collect();
+        idx.sort_by(|&a, &b| {
+            scores[b]
+                .partial_cmp(&scores[a])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        idx.truncate(n);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::Prop;
+
+    #[test]
+    fn ema_update_formula() {
+        let mut h = HotnessEstimator::new(1, 4, 0.5);
+        h.record(0, 1);
+        h.record(0, 1);
+        h.end_interval();
+        assert_eq!(h.score(0, 1), 1.0); // 0.5·0 + 0.5·2
+        h.end_interval();
+        assert_eq!(h.score(0, 1), 0.5); // decays with no traffic
+        assert_eq!(h.raw_count(0, 1), 0);
+    }
+
+    #[test]
+    fn top_n_orders_by_score_then_index() {
+        let mut h = HotnessEstimator::new(1, 5, 0.0);
+        h.record_layer(0, &[3, 3, 3, 1, 1, 4]);
+        h.end_interval();
+        assert_eq!(h.top_n(0, 3), vec![3, 1, 4]);
+        // tie between 0 and 2 (both zero) → lower index first
+        assert_eq!(h.top_n(0, 5), vec![3, 1, 4, 0, 2]);
+    }
+
+    #[test]
+    fn layers_independent() {
+        let mut h = HotnessEstimator::new(2, 3, 0.0);
+        h.record(0, 0);
+        h.record(1, 2);
+        h.end_interval();
+        assert_eq!(h.score(0, 0), 1.0);
+        assert_eq!(h.score(0, 2), 0.0);
+        assert_eq!(h.score(1, 2), 1.0);
+    }
+
+    #[test]
+    fn prop_scores_converge_to_rate() {
+        // Property: constant per-interval traffic c converges to score c.
+        let mut prop = Prop::new("hotness_convergence");
+        prop.run(20, |rng| {
+            let alpha = rng.range_f64(0.0, 0.95);
+            let c = 1 + rng.below(50);
+            let mut h = HotnessEstimator::new(1, 1, alpha);
+            for _ in 0..200 {
+                for _ in 0..c {
+                    h.record(0, 0);
+                }
+                h.end_interval();
+            }
+            let s = h.score(0, 0);
+            assert!(
+                (s - c as f64).abs() < 1e-6 + c as f64 * alpha.powi(150),
+                "alpha={alpha} c={c} s={s}"
+            );
+        });
+    }
+
+    #[test]
+    fn prop_higher_alpha_slower_response() {
+        let mut prop = Prop::new("hotness_alpha_response");
+        prop.run(20, |rng| {
+            let a_slow = rng.range_f64(0.7, 0.95);
+            let a_fast = rng.range_f64(0.0, 0.5);
+            let mut hs = HotnessEstimator::new(1, 1, a_slow);
+            let mut hf = HotnessEstimator::new(1, 1, a_fast);
+            // Immediate response to a fresh burst: S = (1−α)·c, so lower α
+            // reacts harder...
+            for h in [&mut hs, &mut hf] {
+                for _ in 0..10 {
+                    h.record(0, 0);
+                }
+                h.end_interval();
+            }
+            assert!(hf.score(0, 0) > hs.score(0, 0));
+            // ...while higher α retains proportionally more through silence
+            // (S decays by factor α per empty interval).
+            let (s0, f0) = (hs.score(0, 0), hf.score(0, 0));
+            hs.end_interval();
+            hf.end_interval();
+            assert!(hs.score(0, 0) / s0 > hf.score(0, 0) / f0 - 1e-12);
+        });
+    }
+}

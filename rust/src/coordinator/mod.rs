@@ -1,0 +1,419 @@
+//! The DynaExq coordinator (§3): online, budget-constrained precision
+//! allocation, wired from four mechanisms —
+//!
+//! * [`ver`] — stable expert handles + residency state machine,
+//! * [`pools`] + [`budget`] — deterministic memory with admission control,
+//! * [`pipeline`] — non-blocking promotions/demotions on a migration stream,
+//! * [`hotness`] + [`policy`] — EMA traffic estimation and the
+//!   budget-feasible top-n rule with hysteresis.
+//!
+//! The engine calls [`Coordinator::record_routing`] with router outputs,
+//! [`Coordinator::resolve`] on the hot path, and [`Coordinator::tick`] at
+//! iteration boundaries; everything else happens off the critical path.
+
+pub mod budget;
+pub mod hotness;
+pub mod pipeline;
+pub mod policy;
+pub mod pools;
+pub mod ver;
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+pub use budget::{BudgetPlan, BudgetTracker};
+pub use hotness::HotnessEstimator;
+pub use pipeline::{Admission, StageFn, TransitionKind, TransitionPipeline};
+pub use policy::{plan_layer, LayerPlan};
+pub use pools::{BlockPool, PoolAlloc};
+pub use ver::{ExpertKey, HandleTable, Residency};
+
+use crate::config::{DeviceConfig, ModelPreset, ServingConfig};
+use crate::model::Precision;
+use crate::sim::LogicalDims;
+
+/// Summary of one policy update (returned by [`Coordinator::tick`]).
+#[derive(Debug, Default, Clone)]
+pub struct UpdateReport {
+    pub ran: bool,
+    pub promotions_submitted: usize,
+    pub demotions_submitted: usize,
+    pub deferred: usize,
+    pub published: usize,
+}
+
+/// The runtime-side of DynaExq for one model.
+pub struct Coordinator {
+    pub preset: ModelPreset,
+    pub cfg: ServingConfig,
+    pub plan: BudgetPlan,
+    pub handles: Arc<HandleTable>,
+    pub budget: Arc<BudgetTracker>,
+    pub pool_hi: Arc<BlockPool>,
+    pub pool_lo: Arc<BlockPool>,
+    pub pipeline: TransitionPipeline,
+    hotness: std::sync::Mutex<HotnessEstimator>,
+    next_update_s: std::sync::Mutex<f64>,
+}
+
+impl Coordinator {
+    /// Build a coordinator with paper-scale (logical) byte accounting and a
+    /// no-op stager (used by modeled-timing experiments; the numeric engine
+    /// passes a real stager via [`Coordinator::with_stager`]).
+    pub fn new(
+        preset: &ModelPreset,
+        cfg: &ServingConfig,
+        dev: &DeviceConfig,
+    ) -> Result<Self, String> {
+        Self::with_stager(preset, cfg, dev, Arc::new(|_, _| Vec::new()))
+    }
+
+    /// Build with a custom staging function (assembles prepared host bytes
+    /// for a given expert/precision on the background worker).
+    pub fn with_stager(
+        preset: &ModelPreset,
+        cfg: &ServingConfig,
+        dev: &DeviceConfig,
+        stager: Arc<StageFn>,
+    ) -> Result<Self, String> {
+        let dims = LogicalDims::for_preset(preset);
+        let plan = Self::derive_logical_plan(preset, &dims, cfg)?;
+        let handles = Arc::new(HandleTable::new(
+            preset.n_layers_logical(),
+            preset.n_experts,
+            preset.lo,
+        ));
+        let budget = Arc::new(BudgetTracker::new(
+            plan.hi_pool_bytes,
+            plan.lo_pool_bytes,
+        ));
+        let block_hi = if cfg.pool_block_bytes > 0 {
+            cfg.pool_block_bytes
+        } else {
+            plan.hi_expert_bytes
+        };
+        let block_lo = if cfg.pool_block_bytes > 0 {
+            cfg.pool_block_bytes
+        } else {
+            plan.lo_expert_bytes
+        };
+        let pool_hi = Arc::new(BlockPool::new(
+            "pool_hi",
+            plan.hi_pool_bytes + block_hi - 1,
+            block_hi,
+        ));
+        let pool_lo = Arc::new(BlockPool::new(
+            "pool_lo",
+            plan.lo_pool_bytes + block_lo - 1,
+            block_lo,
+        ));
+
+        // Cold boot: every routed expert resident-lo; shared experts pinned
+        // hot (their buffers come from pool_hi but are never transitioned).
+        let layers = preset.n_layers_logical();
+        for l in 0..layers {
+            for e in 0..preset.n_experts {
+                let a = pool_lo
+                    .alloc(plan.lo_expert_bytes)
+                    .ok_or("lo pool underprovisioned")?;
+                if !budget.try_reserve_lo(plan.lo_expert_bytes) {
+                    return Err("lo budget underprovisioned".into());
+                }
+                handles.entry(ExpertKey::new(l, e)).active_alloc = Some(a);
+            }
+            for _ in 0..preset.n_shared {
+                pool_hi
+                    .alloc(plan.hi_expert_bytes)
+                    .ok_or("hi pool lacks shared-expert room")?;
+                if !budget.try_reserve_hi(plan.hi_expert_bytes) {
+                    return Err("hi budget lacks shared-expert room".into());
+                }
+            }
+        }
+
+        let dims_for_bytes = dims.clone();
+        let pipeline = TransitionPipeline::new(
+            handles.clone(),
+            budget.clone(),
+            pool_hi.clone(),
+            pool_lo.clone(),
+            preset.hi,
+            preset.lo,
+            1.0 / dev.pcie_bytes_per_s,
+            Box::new(move |p| dims_for_bytes.expert_bytes(p)),
+            cfg.max_inflight_promotions,
+            stager,
+        );
+        Ok(Self {
+            preset: preset.clone(),
+            cfg: cfg.clone(),
+            plan,
+            handles,
+            budget,
+            pool_hi,
+            pool_lo,
+            pipeline,
+            hotness: std::sync::Mutex::new(HotnessEstimator::new(
+                layers,
+                preset.n_experts,
+                cfg.ema_alpha,
+            )),
+            next_update_s: std::sync::Mutex::new(
+                cfg.update_interval_ms / 1e3,
+            ),
+        })
+    }
+
+    /// Public access to budget initialization (used by experiments to
+    /// translate the paper-scale plan onto the executed model).
+    pub fn plan_for(
+        preset: &ModelPreset,
+        cfg: &ServingConfig,
+    ) -> Result<BudgetPlan, String> {
+        let dims = LogicalDims::for_preset(preset);
+        Self::derive_logical_plan(preset, &dims, cfg)
+    }
+
+    /// Budget initialization at logical (paper) scale.
+    fn derive_logical_plan(
+        preset: &ModelPreset,
+        dims: &LogicalDims,
+        cfg: &ServingConfig,
+    ) -> Result<BudgetPlan, String> {
+        let b_hi = dims.expert_bytes(preset.hi);
+        let b_lo = dims.expert_bytes(preset.lo);
+        let layers = preset.n_layers_logical();
+        let shared = layers * preset.n_shared * b_hi;
+        let baseline =
+            cfg.fixed_bytes + shared + layers * preset.n_experts * b_lo;
+        if baseline > cfg.hbm_budget_bytes {
+            return Err(format!(
+                "infeasible envelope: all-cold needs {baseline}B > budget \
+                 {}B",
+                cfg.hbm_budget_bytes
+            ));
+        }
+        let slack = cfg.hbm_budget_bytes - baseline;
+        let n_hi = cfg
+            .n_hi_override
+            .unwrap_or(slack / (layers * (b_hi - b_lo)))
+            .min(preset.n_experts);
+        Ok(BudgetPlan {
+            n_hi_per_layer: n_hi,
+            hi_pool_bytes: layers * (n_hi + preset.n_shared) * b_hi,
+            lo_pool_bytes: layers * preset.n_experts * b_lo,
+            hi_expert_bytes: b_hi,
+            lo_expert_bytes: b_lo,
+        })
+    }
+
+    /// HOT PATH: the precision the forward pass must execute expert
+    /// `(layer, expert)` with. One atomic load via the stable handle.
+    #[inline]
+    pub fn resolve(&self, layer: usize, expert: usize) -> Precision {
+        self.handles.resolve(ExpertKey::new(layer, expert))
+    }
+
+    /// Feed router trace: `experts` are the top-k ids selected for each
+    /// token at `layer` this iteration.
+    pub fn record_routing(&self, layer: usize, experts: &[usize]) {
+        self.hotness.lock().unwrap().record_layer(layer, experts);
+    }
+
+    /// Iteration boundary: publish finished transitions; if the update
+    /// interval elapsed, fold counters and reschedule residency.
+    pub fn tick(&self, now_s: f64) -> UpdateReport {
+        let mut report = UpdateReport::default();
+        report.published = self.pipeline.poll(now_s).len();
+
+        {
+            let mut next = self.next_update_s.lock().unwrap();
+            if now_s < *next {
+                return report;
+            }
+            *next = now_s + self.cfg.update_interval_ms / 1e3;
+        }
+        report.ran = true;
+
+        let mut hot = self.hotness.lock().unwrap();
+        hot.end_interval();
+        let layers = self.preset.n_layers_logical();
+        // Promoting/demoting sets come from the (small) in-flight list —
+        // the published residency from the lock-free handle table — so the
+        // update path never sweeps per-entry state mutexes.
+        let mut promoting: Vec<Vec<usize>> = vec![Vec::new(); layers];
+        for k in self.pipeline.promoting_keys() {
+            promoting[k.layer as usize].push(k.expert as usize);
+        }
+        let mut demoting: Vec<Vec<usize>> = vec![Vec::new(); layers];
+        for k in self.pipeline.demoting_keys() {
+            demoting[k.layer as usize].push(k.expert as usize);
+        }
+        for l in 0..layers {
+            let mut current: HashSet<usize> = self
+                .handles
+                .hi_set(l, self.preset.hi)
+                .into_iter()
+                .collect();
+            for &e in &promoting[l] {
+                current.insert(e);
+            }
+            for &e in &demoting[l] {
+                current.remove(&e);
+            }
+            let plan = plan_layer(
+                hot.layer_scores(l),
+                &current,
+                self.plan.n_hi_per_layer,
+                self.cfg.hysteresis_margin,
+            );
+            // Demotions first: their eviction grows the feasible set.
+            for &e in &plan.demote {
+                match self.pipeline.submit(
+                    ExpertKey::new(l, e),
+                    TransitionKind::Demote,
+                    now_s,
+                ) {
+                    Admission::Admitted { .. } => {
+                        report.demotions_submitted += 1
+                    }
+                    Admission::Deferred => report.deferred += 1,
+                    Admission::Redundant => {}
+                }
+            }
+            for &e in &plan.promote {
+                match self.pipeline.submit(
+                    ExpertKey::new(l, e),
+                    TransitionKind::Promote,
+                    now_s,
+                ) {
+                    Admission::Admitted { .. } => {
+                        report.promotions_submitted += 1
+                    }
+                    Admission::Deferred => report.deferred += 1,
+                    Admission::Redundant => {}
+                }
+            }
+        }
+        report
+    }
+
+    /// Smoothed hotness score (diagnostics/benches).
+    pub fn hotness_score(&self, layer: usize, expert: usize) -> f64 {
+        self.hotness.lock().unwrap().score(layer, expert)
+    }
+
+    /// Top-n hottest experts of a layer (diagnostics/benches).
+    pub fn hottest(&self, layer: usize, n: usize) -> Vec<usize> {
+        self.hotness.lock().unwrap().top_n(layer, n)
+    }
+}
+
+impl ModelPreset {
+    /// Layers used for residency/accounting: the paper model's layer count
+    /// (the executed small model maps its layers onto the first few).
+    pub fn n_layers_logical(&self) -> usize {
+        self.paper_layers.max(self.n_layers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coord(preset: ModelPreset) -> Coordinator {
+        let cfg = ServingConfig::default();
+        let dev = DeviceConfig::default();
+        Coordinator::new(&preset, &cfg, &dev).unwrap()
+    }
+
+    #[test]
+    fn boots_all_cold_within_envelope() {
+        let c = coord(ModelPreset::qwen30b_sim());
+        assert!(c.plan.n_hi_per_layer > 0);
+        assert!(c.plan.n_hi_per_layer < 128);
+        assert!(c.budget.within_envelope());
+        assert_eq!(c.resolve(0, 0), Precision::Int4);
+    }
+
+    #[test]
+    fn hot_traffic_promotes_within_budget() {
+        let c = coord(ModelPreset::phi_sim());
+        let n_hi = c.plan.n_hi_per_layer;
+        // drive traffic to experts 0..3 of layer 0
+        for _ in 0..100 {
+            c.record_routing(0, &[0, 1, 2, 3]);
+        }
+        let r = c.tick(1.0); // past the 50 ms update interval
+        assert!(r.ran);
+        assert!(r.promotions_submitted > 0);
+        // only the four trafficked experts are promotion candidates (idle
+        // experts are never promoted), and capacity bounds the rest
+        assert!(r.promotions_submitted <= n_hi.max(4).min(4));
+        // let transfers complete
+        c.pipeline.wait_staged();
+        c.tick(1e3);
+        for e in 0..4.min(n_hi) {
+            assert_eq!(c.resolve(0, e), Precision::Fp16, "expert {e}");
+        }
+        assert!(c.budget.within_envelope());
+    }
+
+    #[test]
+    fn update_interval_gates_policy() {
+        let c = coord(ModelPreset::phi_sim());
+        c.record_routing(0, &[0]);
+        let r = c.tick(0.01); // before T_u
+        assert!(!r.ran);
+        let r = c.tick(0.06);
+        assert!(r.ran);
+    }
+
+    #[test]
+    fn workload_shift_swaps_hot_set() {
+        let mut cfg = ServingConfig::default();
+        cfg.hysteresis_margin = 0.0;
+        cfg.ema_alpha = 0.0; // fully reactive for the test
+        cfg.max_inflight_promotions = 1024;
+        cfg.n_hi_override = Some(2); // force displacement on shift
+        let dev = DeviceConfig::default();
+        let preset = ModelPreset::phi_sim();
+        let c = Coordinator::new(&preset, &cfg, &dev).unwrap();
+        assert_eq!(c.plan.n_hi_per_layer, 2);
+
+        // phase 1: experts {0,1} hot
+        for _ in 0..50 {
+            c.record_routing(0, &[0, 1]);
+        }
+        c.tick(0.1);
+        c.pipeline.wait_staged();
+        c.tick(10.0);
+        assert_eq!(c.resolve(0, 0), Precision::Fp16);
+        assert_eq!(c.resolve(0, 1), Precision::Fp16);
+
+        // phase 2: shift to {8, 9} — must displace {0, 1}
+        for step in 0..20 {
+            for _ in 0..50 {
+                c.record_routing(0, &[8, 9]);
+            }
+            c.tick(10.0 + step as f64);
+            c.pipeline.wait_staged();
+        }
+        c.tick(1e4);
+        assert_eq!(c.resolve(0, 8), Precision::Fp16);
+        assert_eq!(c.resolve(0, 9), Precision::Fp16);
+        assert_eq!(c.resolve(0, 0), Precision::Int4);
+        assert_eq!(c.resolve(0, 1), Precision::Int4);
+        assert!(c.budget.within_envelope());
+    }
+
+    #[test]
+    fn infeasible_budget_refused() {
+        let mut cfg = ServingConfig::default();
+        cfg.hbm_budget_bytes = 1 << 20;
+        let dev = DeviceConfig::default();
+        assert!(
+            Coordinator::new(&ModelPreset::qwen30b_sim(), &cfg, &dev).is_err()
+        );
+    }
+}

@@ -1,0 +1,569 @@
+//! Non-blocking transition pipeline (§3.4).
+//!
+//! Promotions/demotions run off the token critical path:
+//!
+//! * **Admission** — a transition is accepted only if the [`BudgetTracker`]
+//!   reservation and the destination pool allocation both succeed
+//!   (backpressure: otherwise it is deferred, and the forward pass keeps
+//!   using the currently published version).
+//! * **Staging** — a real background worker thread assembles the prepared
+//!   weight bytes into a staging buffer (the pinned-host-memory copy of the
+//!   paper; `avoid on-the-fly repacking` — bytes were packed offline).
+//! * **Modeled transfer** — the copy is scheduled on the dedicated
+//!   migration [`Stream`], disjoint from the compute stream; its completion
+//!   event is the modeled time at which the version is materialized.
+//! * **Publication** — at the first `poll(now)` past the completion event
+//!   (and with staging done), the stable handle is atomically switched and
+//!   the old version's storage is queued for eviction. Evictions are
+//!   drained *before* admissions when the budget is tight.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::model::Precision;
+use crate::sim::Stream;
+
+use super::budget::BudgetTracker;
+use super::pools::{BlockPool, PoolAlloc};
+use super::ver::{ExpertKey, HandleTable, Residency};
+
+/// Direction of a precision transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransitionKind {
+    /// lo → hi (copy high-precision version to the device).
+    Promote,
+    /// hi → lo (copy low-precision version back; §3.2 "Demoting").
+    Demote,
+}
+
+/// Outcome of a submission attempt.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Admission {
+    Admitted { job: u64, done_at: f64 },
+    /// Budget or pool capacity unavailable — retry after evictions.
+    Deferred,
+    /// Expert already transitioning or already at the target tier.
+    Redundant,
+}
+
+/// Builds the staged bytes for (expert, precision). The numeric engine
+/// assembles real packed weights; the modeled engine supplies byte counts
+/// only. Runs on the background worker thread.
+pub type StageFn = dyn Fn(ExpertKey, Precision) -> Vec<u8> + Send + Sync;
+
+struct StageJob {
+    #[allow(dead_code)] // job identity kept for tracing/debugging
+    id: u64,
+    key: ExpertKey,
+    precision: Precision,
+}
+
+struct Inflight {
+    #[allow(dead_code)] // job identity kept for tracing/debugging
+    id: u64,
+    key: ExpertKey,
+    kind: TransitionKind,
+    target: Precision,
+    /// Modeled migration-stream completion time.
+    done_at: f64,
+    /// Device bytes reserved in the hi budget (promotions).
+    hi_bytes: usize,
+    staged: Arc<AtomicBool>,
+    new_alloc: PoolAlloc,
+}
+
+/// A deferred reclamation of a superseded version's storage.
+struct Eviction {
+    alloc: PoolAlloc,
+    pool_hi: bool,
+    hi_bytes: usize,
+}
+
+/// Counters exposed for the benches/metrics.
+#[derive(Debug, Default)]
+pub struct PipelineStats {
+    pub promotions: AtomicU64,
+    pub demotions: AtomicU64,
+    pub deferred: AtomicU64,
+    pub published: AtomicU64,
+    pub evictions: AtomicU64,
+    pub migrated_bytes: AtomicU64,
+}
+
+/// The transition pipeline. One per engine.
+pub struct TransitionPipeline {
+    handles: Arc<HandleTable>,
+    budget: Arc<BudgetTracker>,
+    pool_hi: Arc<BlockPool>,
+    pool_lo: Arc<BlockPool>,
+    /// Modeled PCIe seconds per byte (from the cost model).
+    secs_per_byte: f64,
+    /// Device bytes of one expert at each tier at *logical* scale.
+    bytes_of: Box<dyn Fn(Precision) -> usize + Send + Sync>,
+    hi: Precision,
+    lo: Precision,
+    max_inflight: usize,
+
+    migration: Mutex<Stream>,
+    inflight: Mutex<Vec<Inflight>>,
+    evictions: Mutex<VecDeque<Eviction>>,
+    next_id: AtomicU64,
+    pub stats: PipelineStats,
+
+    stage_tx: Option<Sender<(StageJob, Arc<AtomicBool>)>>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl TransitionPipeline {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        handles: Arc<HandleTable>,
+        budget: Arc<BudgetTracker>,
+        pool_hi: Arc<BlockPool>,
+        pool_lo: Arc<BlockPool>,
+        hi: Precision,
+        lo: Precision,
+        secs_per_byte: f64,
+        bytes_of: Box<dyn Fn(Precision) -> usize + Send + Sync>,
+        max_inflight: usize,
+        stager: Arc<StageFn>,
+    ) -> Self {
+        let (tx, rx): (
+            Sender<(StageJob, Arc<AtomicBool>)>,
+            Receiver<(StageJob, Arc<AtomicBool>)>,
+        ) = channel();
+        let worker = std::thread::Builder::new()
+            .name("dynaexq-migration".into())
+            .spawn(move || {
+                // Background staging worker: the host side of stream_mig.
+                while let Ok((job, flag)) = rx.recv() {
+                    let bytes = stager(job.key, job.precision);
+                    std::hint::black_box(&bytes);
+                    flag.store(true, Ordering::Release);
+                }
+            })
+            .expect("spawn migration worker");
+        Self {
+            handles,
+            budget,
+            pool_hi,
+            pool_lo,
+            secs_per_byte,
+            bytes_of,
+            hi,
+            lo,
+            max_inflight,
+            migration: Mutex::new(Stream::new()),
+            inflight: Mutex::new(Vec::new()),
+            evictions: Mutex::new(VecDeque::new()),
+            next_id: AtomicU64::new(1),
+            stats: PipelineStats::default(),
+            stage_tx: Some(tx),
+            worker: Some(worker),
+        }
+    }
+
+    /// Submit a transition at modeled time `now`.
+    pub fn submit(
+        &self,
+        key: ExpertKey,
+        kind: TransitionKind,
+        now: f64,
+    ) -> Admission {
+        // Reclaim superseded buffers first — eviction priority under
+        // pressure increases the feasible set for this admission.
+        self.drain_evictions();
+
+        if self.inflight.lock().unwrap().len() >= self.max_inflight {
+            self.stats.deferred.fetch_add(1, Ordering::Relaxed);
+            return Admission::Deferred;
+        }
+
+        let (target, hi_bytes) = match kind {
+            TransitionKind::Promote => (self.hi, (self.bytes_of)(self.hi)),
+            TransitionKind::Demote => (self.lo, 0),
+        };
+
+        {
+            let entry = self.handles.entry(key);
+            let cur = self.handles.resolve(key);
+            let busy = matches!(
+                entry.residency,
+                Residency::Promoting | Residency::Demoting
+            );
+            if busy || cur == target {
+                return Admission::Redundant;
+            }
+        }
+
+        // Admission control: budget reservation before anything else.
+        if kind == TransitionKind::Promote && !self.budget.try_reserve_hi(hi_bytes)
+        {
+            self.stats.deferred.fetch_add(1, Ordering::Relaxed);
+            return Admission::Deferred;
+        }
+
+        // Destination pool allocation (guaranteed to fit post-reservation
+        // as pools are sized to the caps, but handle failure defensively).
+        let pool = match kind {
+            TransitionKind::Promote => &self.pool_hi,
+            TransitionKind::Demote => &self.pool_lo,
+        };
+        let dev_bytes = (self.bytes_of)(target);
+        let Some(new_alloc) = pool.alloc(dev_bytes) else {
+            if kind == TransitionKind::Promote {
+                self.budget.release_hi(hi_bytes);
+            }
+            self.stats.deferred.fetch_add(1, Ordering::Relaxed);
+            return Admission::Deferred;
+        };
+
+        // Mark the entry and enqueue staging + modeled transfer.
+        {
+            let mut entry = self.handles.entry(key);
+            entry.residency = match kind {
+                TransitionKind::Promote => Residency::Promoting,
+                TransitionKind::Demote => Residency::Demoting,
+            };
+            entry.pending_alloc = Some(new_alloc);
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let staged = Arc::new(AtomicBool::new(false));
+        if let Some(tx) = &self.stage_tx {
+            tx.send((
+                StageJob { id, key, precision: target },
+                staged.clone(),
+            ))
+            .expect("migration worker alive");
+        }
+        let done_at = {
+            let mut mig = self.migration.lock().unwrap();
+            mig.schedule(now, dev_bytes as f64 * self.secs_per_byte)
+        };
+        self.stats
+            .migrated_bytes
+            .fetch_add(dev_bytes as u64, Ordering::Relaxed);
+        match kind {
+            TransitionKind::Promote => {
+                self.stats.promotions.fetch_add(1, Ordering::Relaxed)
+            }
+            TransitionKind::Demote => {
+                self.stats.demotions.fetch_add(1, Ordering::Relaxed)
+            }
+        };
+        self.inflight.lock().unwrap().push(Inflight {
+            id,
+            key,
+            kind,
+            target,
+            done_at,
+            hi_bytes,
+            staged,
+            new_alloc,
+        });
+        Admission::Admitted { job: id, done_at }
+    }
+
+    /// Publish every transition whose modeled completion event has fired
+    /// (and whose staging is done). Returns the published expert keys.
+    /// Called at iteration boundaries by the engine — the forward pass
+    /// itself never waits on this.
+    pub fn poll(&self, now: f64) -> Vec<(ExpertKey, Precision)> {
+        let mut published = Vec::new();
+        let mut inflight = self.inflight.lock().unwrap();
+        let mut i = 0;
+        while i < inflight.len() {
+            let ready = inflight[i].done_at <= now
+                && inflight[i].staged.load(Ordering::Acquire);
+            if !ready {
+                i += 1;
+                continue;
+            }
+            let job = inflight.swap_remove(i);
+            let mut entry = self.handles.entry(job.key);
+            // Publish-then-switch: new version becomes visible atomically...
+            let old_alloc = entry.active_alloc.take();
+            entry.active_alloc = Some(job.new_alloc);
+            entry.pending_alloc = None;
+            entry.residency = match job.kind {
+                TransitionKind::Promote => Residency::ResidentHi,
+                TransitionKind::Demote => Residency::ResidentLo,
+            };
+            drop(entry);
+            self.handles.publish(job.key, job.target);
+            self.stats.published.fetch_add(1, Ordering::Relaxed);
+            // ...then the superseded version is reclaimed in the background.
+            if let Some(alloc) = old_alloc {
+                self.evictions.lock().unwrap().push_back(Eviction {
+                    alloc,
+                    pool_hi: job.kind == TransitionKind::Demote,
+                    hi_bytes: if job.kind == TransitionKind::Demote {
+                        (self.bytes_of)(self.hi)
+                    } else {
+                        0
+                    },
+                });
+            }
+            let _ = job.hi_bytes; // released on the eviction of the hi buffer
+            published.push((job.key, job.target));
+        }
+        drop(inflight);
+        self.drain_evictions();
+        published
+    }
+
+    /// Reclaim superseded buffers (the eviction queue of §3.4).
+    pub fn drain_evictions(&self) {
+        let mut q = self.evictions.lock().unwrap();
+        while let Some(ev) = q.pop_front() {
+            if ev.pool_hi {
+                self.pool_hi.free(ev.alloc);
+                self.budget.release_hi(ev.hi_bytes);
+            } else {
+                self.pool_lo.free(ev.alloc);
+            }
+            self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Modeled time at which all queued migration work completes.
+    pub fn migration_tail(&self) -> f64 {
+        self.migration.lock().unwrap().tail()
+    }
+
+    /// Total modeled migration busy time (bandwidth accounting).
+    pub fn migration_busy(&self) -> f64 {
+        self.migration.lock().unwrap().busy()
+    }
+
+    /// Number of in-flight transitions.
+    pub fn inflight_count(&self) -> usize {
+        self.inflight.lock().unwrap().len()
+    }
+
+    /// Experts currently being promoted (policy planning input — avoids
+    /// scanning every entry's state mutex on the update path).
+    pub fn promoting_keys(&self) -> Vec<ExpertKey> {
+        self.inflight
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|j| j.kind == TransitionKind::Promote)
+            .map(|j| j.key)
+            .collect()
+    }
+
+    /// Experts currently being demoted.
+    pub fn demoting_keys(&self) -> Vec<ExpertKey> {
+        self.inflight
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|j| j.kind == TransitionKind::Demote)
+            .map(|j| j.key)
+            .collect()
+    }
+
+    /// Test helper: block until all submitted staging jobs finish.
+    pub fn wait_staged(&self) {
+        loop {
+            let all = self
+                .inflight
+                .lock()
+                .unwrap()
+                .iter()
+                .all(|j| j.staged.load(Ordering::Acquire));
+            if all {
+                return;
+            }
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Drop for TransitionPipeline {
+    fn drop(&mut self) {
+        drop(self.stage_tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::expert_bytes;
+
+    fn mk_pipeline(
+        n_experts: usize,
+        n_hi_slots: usize,
+    ) -> (Arc<HandleTable>, Arc<BudgetTracker>, TransitionPipeline) {
+        let hi = Precision::Fp16;
+        let lo = Precision::Int4;
+        let handles = Arc::new(HandleTable::new(1, n_experts, lo));
+        let b_hi = expert_bytes(hi);
+        let b_lo = expert_bytes(lo);
+        let budget = Arc::new(BudgetTracker::new(
+            n_hi_slots * b_hi,
+            n_experts * b_lo,
+        ));
+        let pool_hi = Arc::new(BlockPool::new("hi", n_hi_slots * b_hi, b_hi));
+        let pool_lo = Arc::new(BlockPool::new("lo", n_experts * b_lo, b_lo));
+        // mark lo allocations for the boot state
+        for e in 0..n_experts {
+            let a = pool_lo.alloc(b_lo).unwrap();
+            budget.try_reserve_lo(b_lo);
+            handles.entry(ExpertKey::new(0, e)).active_alloc = Some(a);
+        }
+        let p = TransitionPipeline::new(
+            handles.clone(),
+            budget.clone(),
+            pool_hi,
+            pool_lo,
+            hi,
+            lo,
+            1e-9, // 1 GB/s → easy math
+            Box::new(expert_bytes),
+            8,
+            Arc::new(|_, _| Vec::new()),
+        );
+        (handles, budget, p)
+    }
+
+    #[test]
+    fn promotion_publishes_after_completion_event() {
+        let (handles, _b, p) = mk_pipeline(4, 2);
+        let k = ExpertKey::new(0, 1);
+        let adm = p.submit(k, TransitionKind::Promote, 0.0);
+        let done_at = match adm {
+            Admission::Admitted { done_at, .. } => done_at,
+            other => panic!("expected admission, got {other:?}"),
+        };
+        // before the event: still lo, forward path unaffected
+        assert_eq!(handles.resolve(k), Precision::Int4);
+        p.wait_staged();
+        assert!(p.poll(done_at / 2.0).is_empty());
+        assert_eq!(handles.resolve(k), Precision::Int4);
+        // after the event: published
+        let pubs = p.poll(done_at);
+        assert_eq!(pubs, vec![(k, Precision::Fp16)]);
+        assert_eq!(handles.resolve(k), Precision::Fp16);
+    }
+
+    #[test]
+    fn admission_respects_budget_cap() {
+        let (_h, b, p) = mk_pipeline(8, 2);
+        let a1 = p.submit(ExpertKey::new(0, 0), TransitionKind::Promote, 0.0);
+        let a2 = p.submit(ExpertKey::new(0, 1), TransitionKind::Promote, 0.0);
+        assert!(matches!(a1, Admission::Admitted { .. }));
+        assert!(matches!(a2, Admission::Admitted { .. }));
+        // third promotion exceeds the 2-slot cap → deferred, no reservation
+        let a3 = p.submit(ExpertKey::new(0, 2), TransitionKind::Promote, 0.0);
+        assert_eq!(a3, Admission::Deferred);
+        assert!(b.within_envelope());
+    }
+
+    #[test]
+    fn demotion_frees_hi_capacity() {
+        let (h, b, p) = mk_pipeline(8, 1);
+        let k0 = ExpertKey::new(0, 0);
+        let adm = p.submit(k0, TransitionKind::Promote, 0.0);
+        let t1 = match adm {
+            Admission::Admitted { done_at, .. } => done_at,
+            _ => panic!(),
+        };
+        p.wait_staged();
+        p.poll(t1);
+        assert_eq!(h.resolve(k0), Precision::Fp16);
+        // cap full → next promote deferred
+        assert_eq!(
+            p.submit(ExpertKey::new(0, 1), TransitionKind::Promote, t1),
+            Admission::Deferred
+        );
+        // demote k0, publish, evict → capacity returns
+        let t2 = match p.submit(k0, TransitionKind::Demote, t1) {
+            Admission::Admitted { done_at, .. } => done_at,
+            other => panic!("{other:?}"),
+        };
+        p.wait_staged();
+        p.poll(t2);
+        assert_eq!(h.resolve(k0), Precision::Int4);
+        assert_eq!(b.hi_used(), 0);
+        assert!(matches!(
+            p.submit(ExpertKey::new(0, 1), TransitionKind::Promote, t2),
+            Admission::Admitted { .. }
+        ));
+    }
+
+    #[test]
+    fn redundant_transitions_rejected() {
+        let (_h, _b, p) = mk_pipeline(4, 2);
+        let k = ExpertKey::new(0, 0);
+        // already lo → demote is redundant
+        assert_eq!(p.submit(k, TransitionKind::Demote, 0.0), Admission::Redundant);
+        let _ = p.submit(k, TransitionKind::Promote, 0.0);
+        // already promoting → redundant
+        assert_eq!(
+            p.submit(k, TransitionKind::Promote, 0.0),
+            Admission::Redundant
+        );
+    }
+
+    #[test]
+    fn migration_stream_serializes_transfers() {
+        let (_h, _b, p) = mk_pipeline(4, 2);
+        let t1 = match p.submit(ExpertKey::new(0, 0), TransitionKind::Promote, 0.0)
+        {
+            Admission::Admitted { done_at, .. } => done_at,
+            _ => panic!(),
+        };
+        let t2 = match p.submit(ExpertKey::new(0, 1), TransitionKind::Promote, 0.0)
+        {
+            Admission::Admitted { done_at, .. } => done_at,
+            _ => panic!(),
+        };
+        // second transfer queues behind the first on stream_mig
+        let per = expert_bytes(Precision::Fp16) as f64 * 1e-9;
+        assert!((t1 - per).abs() < 1e-12);
+        assert!((t2 - 2.0 * per).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inflight_cap_backpressure() {
+        let hi = Precision::Fp16;
+        let lo = Precision::Int4;
+        let handles = Arc::new(HandleTable::new(1, 8, lo));
+        let b_hi = expert_bytes(hi);
+        let budget = Arc::new(BudgetTracker::new(8 * b_hi, 0));
+        let pool_hi = Arc::new(BlockPool::new("hi", 8 * b_hi, b_hi));
+        let pool_lo = Arc::new(BlockPool::new("lo", 8, 1));
+        let p = TransitionPipeline::new(
+            handles,
+            budget,
+            pool_hi,
+            pool_lo,
+            hi,
+            lo,
+            1e-9,
+            Box::new(expert_bytes),
+            2, // cap
+            Arc::new(|_, _| Vec::new()),
+        );
+        assert!(matches!(
+            p.submit(ExpertKey::new(0, 0), TransitionKind::Promote, 0.0),
+            Admission::Admitted { .. }
+        ));
+        assert!(matches!(
+            p.submit(ExpertKey::new(0, 1), TransitionKind::Promote, 0.0),
+            Admission::Admitted { .. }
+        ));
+        assert_eq!(
+            p.submit(ExpertKey::new(0, 2), TransitionKind::Promote, 0.0),
+            Admission::Deferred
+        );
+    }
+}

@@ -1,0 +1,293 @@
+//! Online scheduling policy (§3.5): budget-feasible top-n selection with
+//! hysteresis.
+//!
+//! Per layer, the target high-precision set is the top-`n_hi` experts by
+//! smoothed hotness — budget-feasible by construction since `n_hi` comes
+//! from [`super::budget::BudgetPlan`]. Two refinements keep the transition
+//! rate predictable:
+//!
+//! * **idle experts are never promoted** (score ≤ 0 carries no traffic —
+//!   promoting it wastes PCIe bandwidth for zero quality benefit);
+//! * **hysteresis**: an outsider must beat the weakest resident by an
+//!   additive margin *scaled by the mean resident score*. The paper allows
+//!   an additive threshold or a rank slack; a purely relative margin is
+//!   useless when the weakest resident's score has decayed to ≈ 0 (any
+//!   candidate passes), which is exactly when churn storms start.
+
+use std::collections::HashSet;
+
+/// One layer's residency delta for the transition pipeline.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LayerPlan {
+    pub promote: Vec<usize>,
+    pub demote: Vec<usize>,
+}
+
+impl LayerPlan {
+    pub fn is_empty(&self) -> bool {
+        self.promote.is_empty() && self.demote.is_empty()
+    }
+}
+
+/// Compute the target delta for one layer.
+///
+/// * `scores` — smoothed hotness per expert
+/// * `current` — experts currently hi-resident (or promoting)
+/// * `n_hi` — budget-feasible capacity
+/// * `margin` — hysteresis margin (fraction of the mean resident score;
+///   0 disables hysteresis)
+///
+/// Swaps are paired strongest-candidate vs weakest-resident; a swap is
+/// emitted only if `S[cand] > S[weak] + margin · mean(S[residents])`.
+/// Capacity shrink (current > n_hi) demotes the weakest unconditionally.
+pub fn plan_layer(
+    scores: &[f64],
+    current: &HashSet<usize>,
+    n_hi: usize,
+    margin: f64,
+) -> LayerPlan {
+    let mut plan = LayerPlan::default();
+    let order = {
+        let mut idx: Vec<usize> = (0..scores.len()).collect();
+        idx.sort_by(|&a, &b| {
+            scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b))
+        });
+        idx
+    };
+
+    // Residents weakest-first for pairing.
+    let mut residents: Vec<usize> = current.iter().copied().collect();
+    residents.sort_by(|&a, &b| {
+        scores[a].partial_cmp(&scores[b]).unwrap().then(b.cmp(&a))
+    });
+
+    // Shrink to capacity first (eviction-priority under tight budget).
+    while residents.len() > n_hi {
+        let weakest = residents.remove(0);
+        plan.demote.push(weakest);
+    }
+
+    // Fill spare capacity with the hottest *trafficked* outsiders.
+    let mut members: HashSet<usize> = residents.iter().copied().collect();
+    for &e in &order {
+        if members.len() >= n_hi {
+            break;
+        }
+        if scores[e] <= 0.0 {
+            break; // order is sorted: everything after is idle too
+        }
+        if !members.contains(&e) {
+            members.insert(e);
+            plan.promote.push(e);
+        }
+    }
+
+    // Hysteresis swaps: strongest outsider vs weakest resident.
+    let mean_resident = if members.is_empty() {
+        0.0
+    } else {
+        members.iter().map(|&e| scores[e]).sum::<f64>() / members.len() as f64
+    };
+    let threshold = margin * mean_resident;
+    let mut out: Vec<usize> = order
+        .iter()
+        .copied()
+        .filter(|&e| !members.contains(&e) && scores[e] > 0.0)
+        .collect();
+    let mut weak: Vec<usize> = residents
+        .iter()
+        .copied()
+        .filter(|e| members.contains(e))
+        .collect();
+    while let (Some(&cand), Some(&w)) = (out.first(), weak.first()) {
+        if scores[cand] > scores[w] + threshold + f64::EPSILON {
+            plan.promote.push(cand);
+            plan.demote.push(w);
+            out.remove(0);
+            weak.remove(0);
+        } else {
+            break;
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::Prop;
+
+    fn set(xs: &[usize]) -> HashSet<usize> {
+        xs.iter().copied().collect()
+    }
+
+    #[test]
+    fn fills_empty_capacity_with_top_n() {
+        let scores = [5.0, 1.0, 9.0, 3.0];
+        let p = plan_layer(&scores, &set(&[]), 2, 0.5);
+        assert_eq!(p.promote, vec![2, 0]);
+        assert!(p.demote.is_empty());
+    }
+
+    #[test]
+    fn idle_experts_never_promoted() {
+        let scores = [5.0, 0.0, 0.0, 0.0];
+        let p = plan_layer(&scores, &set(&[]), 3, 0.0);
+        assert_eq!(p.promote, vec![0], "zero-score experts stay cold");
+    }
+
+    #[test]
+    fn stable_when_current_is_top_n() {
+        let scores = [5.0, 1.0, 9.0, 3.0];
+        let p = plan_layer(&scores, &set(&[0, 2]), 2, 0.1);
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn hysteresis_blocks_marginal_swap() {
+        // residents {0, 2}: mean score 6 → threshold 1.2 at margin 0.2.
+        // outsider 3 (4.0) vs weakest resident 0 (3.0): 4.0 < 4.2 blocked
+        let scores = [3.0, 1.0, 9.0, 4.0];
+        let p = plan_layer(&scores, &set(&[0, 2]), 2, 0.2);
+        assert!(p.is_empty());
+        // a clear winner (5.0 > 4.2) swaps
+        let scores2 = [3.0, 1.0, 9.0, 5.0];
+        let p2 = plan_layer(&scores2, &set(&[0, 2]), 2, 0.2);
+        assert_eq!(p2.promote, vec![3]);
+        assert_eq!(p2.demote, vec![0]);
+    }
+
+    #[test]
+    fn zero_margin_is_plain_top_n() {
+        let scores = [3.0, 1.0, 9.0, 3.1];
+        let p = plan_layer(&scores, &set(&[0, 2]), 2, 0.0);
+        assert_eq!(p.promote, vec![3]);
+        assert_eq!(p.demote, vec![0]);
+    }
+
+    #[test]
+    fn capacity_shrink_demotes_weakest() {
+        let scores = [5.0, 1.0, 9.0, 3.0];
+        let p = plan_layer(&scores, &set(&[0, 2, 3]), 1, 0.0);
+        assert_eq!(p.demote, vec![3, 0]); // weakest first
+        assert!(p.promote.is_empty());
+    }
+
+    #[test]
+    fn zero_capacity_demotes_all() {
+        let scores = [5.0, 1.0];
+        let p = plan_layer(&scores, &set(&[0, 1]), 0, 0.0);
+        assert_eq!(p.demote.len(), 2);
+        assert!(p.promote.is_empty());
+    }
+
+    #[test]
+    fn prop_plan_respects_capacity_and_disjointness() {
+        let mut prop = Prop::new("policy_capacity");
+        prop.run(100, |rng| {
+            let e = 4 + rng.below(60);
+            let scores: Vec<f64> = (0..e).map(|_| rng.next_f64() * 10.0).collect();
+            let n_hi = rng.below(e + 1);
+            let mut current = HashSet::new();
+            for i in 0..e {
+                if rng.below(3) == 0 {
+                    current.insert(i);
+                }
+            }
+            let margin = rng.range_f64(0.0, 0.5);
+            let p = plan_layer(&scores, &current, n_hi, margin);
+
+            // promote/demote disjoint
+            let ps: HashSet<_> = p.promote.iter().collect();
+            let ds: HashSet<_> = p.demote.iter().collect();
+            assert!(ps.is_disjoint(&ds));
+            // promotions come from outside, demotions from inside
+            for x in &p.promote {
+                assert!(!current.contains(x));
+                assert!(scores[*x] > 0.0, "idle experts never promoted");
+            }
+            for x in &p.demote {
+                assert!(current.contains(x));
+            }
+            // the resulting set never exceeds capacity (unless it already
+            // did — shrink handles that)
+            let mut after = current.clone();
+            for x in &p.demote {
+                after.remove(x);
+            }
+            for x in &p.promote {
+                after.insert(*x);
+            }
+            assert!(after.len() <= n_hi.max(current.len()));
+        });
+    }
+
+    #[test]
+    fn prop_zero_margin_selects_exact_top_n() {
+        let mut prop = Prop::new("policy_topn_exact");
+        prop.run(50, |rng| {
+            let e = 4 + rng.below(40);
+            // distinct positive scores (idle-skip rule needs > 0)
+            let mut scores: Vec<f64> = (1..=e).map(|i| i as f64).collect();
+            rng.shuffle(&mut scores);
+            let n_hi = rng.below(e + 1);
+            let mut current = HashSet::new();
+            for i in 0..e {
+                if rng.below(2) == 0 {
+                    current.insert(i);
+                }
+            }
+            let p = plan_layer(&scores, &current, n_hi, 0.0);
+            let mut after = current.clone();
+            for x in &p.demote {
+                after.remove(x);
+            }
+            for x in &p.promote {
+                after.insert(*x);
+            }
+            // after == true top-n
+            let mut idx: Vec<usize> = (0..e).collect();
+            idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+            let want: HashSet<usize> = idx[..n_hi].iter().copied().collect();
+            assert_eq!(after, want);
+        });
+    }
+
+    #[test]
+    fn prop_hysteresis_reduces_churn() {
+        // With noisy scores around a boundary, margin > 0 must produce
+        // fewer cumulative transitions than margin = 0.
+        let mut prop = Prop::new("policy_churn");
+        prop.run(20, |rng| {
+            let e = 16;
+            let n_hi = 4;
+            let base: Vec<f64> = (0..e).map(|i| 10.0 - i as f64 * 0.1).collect();
+            let mut cur0: HashSet<usize> = (0..n_hi).collect();
+            let mut cur1: HashSet<usize> = (0..n_hi).collect();
+            let mut churn0 = 0;
+            let mut churn1 = 0;
+            for _ in 0..50 {
+                let noisy: Vec<f64> = base
+                    .iter()
+                    .map(|b| (b + rng.normal() * 0.3).max(0.01))
+                    .collect();
+                let p0 = plan_layer(&noisy, &cur0, n_hi, 0.0);
+                let p1 = plan_layer(&noisy, &cur1, n_hi, 0.3);
+                churn0 += p0.promote.len();
+                churn1 += p1.promote.len();
+                for x in &p0.demote {
+                    cur0.remove(x);
+                }
+                cur0.extend(&p0.promote);
+                for x in &p1.demote {
+                    cur1.remove(x);
+                }
+                cur1.extend(&p1.promote);
+            }
+            assert!(
+                churn1 <= churn0,
+                "hysteresis churn {churn1} > plain {churn0}"
+            );
+        });
+    }
+}

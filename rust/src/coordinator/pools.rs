@@ -1,0 +1,245 @@
+//! Partitioned, fixed-granularity device-memory pools (§3.3).
+//!
+//! Expert weights live in dedicated pools (`pool_hi`, `pool_lo`) disjoint
+//! from the KV-cache region. Each pool hands out fixed-size blocks from a
+//! constant-time free list — allocation and reclamation are pointer
+//! operations that never touch a general-purpose allocator, so background
+//! transitions cannot inject allocator jitter into the token critical path,
+//! and the address space cannot fragment.
+
+use std::sync::Mutex;
+
+/// A block allocation; freeing requires returning it to the same pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolAlloc {
+    /// First block index.
+    pub first_block: usize,
+    /// Number of contiguous-or-not blocks composed into this allocation.
+    pub n_blocks: usize,
+    /// Logical payload bytes.
+    pub bytes: usize,
+}
+
+/// Counters for fragmentation / latency analysis (ablation A4).
+#[derive(Debug, Default, Clone)]
+pub struct PoolStats {
+    pub allocs: u64,
+    pub frees: u64,
+    pub failures: u64,
+    pub peak_blocks_used: usize,
+}
+
+struct PoolInner {
+    free: Vec<usize>, // LIFO free list of block ids
+    blocks_used: usize,
+    /// block id → next block id for multi-block allocations
+    next: Vec<usize>,
+    stats: PoolStats,
+}
+
+/// A fixed-granularity block pool.
+pub struct BlockPool {
+    name: &'static str,
+    block_bytes: usize,
+    n_blocks: usize,
+    inner: Mutex<PoolInner>,
+}
+
+const NO_BLOCK: usize = usize::MAX;
+
+impl BlockPool {
+    /// Create a pool of `capacity_bytes / block_bytes` blocks.
+    ///
+    /// `block_bytes` is chosen by the caller to balance internal
+    /// fragmentation vs. bookkeeping — DynaExq aligns it to the expert size
+    /// so one expert == one block in the common case.
+    pub fn new(name: &'static str, capacity_bytes: usize, block_bytes: usize) -> Self {
+        assert!(block_bytes > 0);
+        let n_blocks = capacity_bytes / block_bytes;
+        Self {
+            name,
+            block_bytes,
+            n_blocks,
+            inner: Mutex::new(PoolInner {
+                free: (0..n_blocks).rev().collect(),
+                blocks_used: 0,
+                next: vec![NO_BLOCK; n_blocks],
+                stats: PoolStats::default(),
+            }),
+        }
+    }
+
+    /// Allocate `bytes` (composed from ⌈bytes/block⌉ blocks). O(#blocks of
+    /// this allocation); returns None when the pool is exhausted (the caller
+    /// must have failed admission earlier — see BudgetTracker).
+    pub fn alloc(&self, bytes: usize) -> Option<PoolAlloc> {
+        let need = crate::util::ceil_div(bytes.max(1), self.block_bytes);
+        let mut g = self.inner.lock().unwrap();
+        if g.free.len() < need {
+            g.stats.failures += 1;
+            return None;
+        }
+        let first = g.free.pop().unwrap();
+        let mut prev = first;
+        for _ in 1..need {
+            let b = g.free.pop().unwrap();
+            g.next[prev] = b;
+            prev = b;
+        }
+        g.next[prev] = NO_BLOCK;
+        g.blocks_used += need;
+        g.stats.allocs += 1;
+        let used = g.blocks_used;
+        g.stats.peak_blocks_used = g.stats.peak_blocks_used.max(used);
+        Some(PoolAlloc { first_block: first, n_blocks: need, bytes })
+    }
+
+    /// Return an allocation's blocks to the free list. O(n_blocks).
+    pub fn free(&self, alloc: PoolAlloc) {
+        let mut g = self.inner.lock().unwrap();
+        let mut b = alloc.first_block;
+        let mut returned = 0;
+        while b != NO_BLOCK && returned < alloc.n_blocks {
+            let nxt = g.next[b];
+            g.next[b] = NO_BLOCK;
+            g.free.push(b);
+            returned += 1;
+            b = nxt;
+        }
+        debug_assert_eq!(returned, alloc.n_blocks, "{}: chain broken", self.name);
+        g.blocks_used -= returned;
+        g.stats.frees += 1;
+    }
+
+    pub fn blocks_free(&self) -> usize {
+        self.inner.lock().unwrap().free.len()
+    }
+
+    pub fn blocks_used(&self) -> usize {
+        self.inner.lock().unwrap().blocks_used
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn block_bytes(&self) -> usize {
+        self.block_bytes
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.inner.lock().unwrap().stats.clone()
+    }
+
+    /// Invariant: used + free == capacity (no leaked blocks).
+    pub fn consistent(&self) -> bool {
+        let g = self.inner.lock().unwrap();
+        g.blocks_used + g.free.len() == self.n_blocks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::Prop;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let p = BlockPool::new("t", 1024, 256);
+        assert_eq!(p.capacity_blocks(), 4);
+        let a = p.alloc(256).unwrap();
+        let b = p.alloc(512).unwrap(); // 2 blocks
+        assert_eq!(p.blocks_used(), 3);
+        p.free(a);
+        p.free(b);
+        assert_eq!(p.blocks_used(), 0);
+        assert!(p.consistent());
+    }
+
+    #[test]
+    fn exhaustion_fails_cleanly() {
+        let p = BlockPool::new("t", 1024, 256);
+        let _a = p.alloc(1024).unwrap();
+        assert!(p.alloc(1).is_none());
+        assert_eq!(p.stats().failures, 1);
+    }
+
+    #[test]
+    fn zero_byte_alloc_takes_one_block() {
+        let p = BlockPool::new("t", 1024, 256);
+        let a = p.alloc(0).unwrap();
+        assert_eq!(a.n_blocks, 1);
+        p.free(a);
+    }
+
+    #[test]
+    fn peak_tracking() {
+        let p = BlockPool::new("t", 2048, 256);
+        let a = p.alloc(1024).unwrap();
+        p.free(a);
+        let _b = p.alloc(256).unwrap();
+        assert_eq!(p.stats().peak_blocks_used, 4);
+    }
+
+    #[test]
+    fn prop_never_leaks_blocks() {
+        // Property: any interleaving of allocs/frees conserves blocks and
+        // double-free cannot occur via the chain encoding.
+        let mut prop = Prop::new("pool_conservation");
+        prop.run(40, |rng| {
+            let blocks = 8 + rng.below(32);
+            let bb = 64 + rng.below(512);
+            let p = BlockPool::new("prop", blocks * bb, bb);
+            let mut live: Vec<PoolAlloc> = Vec::new();
+            for _ in 0..300 {
+                if rng.below(2) == 0 {
+                    let sz = 1 + rng.below(bb * 4);
+                    if let Some(a) = p.alloc(sz) {
+                        live.push(a);
+                    }
+                } else if !live.is_empty() {
+                    let i = rng.below(live.len());
+                    p.free(live.swap_remove(i));
+                }
+                assert!(p.consistent());
+                let used: usize = live.iter().map(|a| a.n_blocks).sum();
+                assert_eq!(p.blocks_used(), used);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_concurrent_alloc_free() {
+        let mut prop = Prop::new("pool_concurrent");
+        prop.run(5, |rng| {
+            let p = std::sync::Arc::new(BlockPool::new("c", 64 * 256, 256));
+            let mut hs = Vec::new();
+            for t in 0..4 {
+                let p = p.clone();
+                let seed = rng.next_u64() ^ t;
+                hs.push(std::thread::spawn(move || {
+                    let mut r = crate::util::XorShiftRng::new(seed);
+                    let mut live = Vec::new();
+                    for _ in 0..500 {
+                        if r.below(2) == 0 {
+                            if let Some(a) = p.alloc(1 + r.below(512)) {
+                                live.push(a);
+                            }
+                        } else if !live.is_empty() {
+                            let i = r.below(live.len());
+                            p.free(live.swap_remove(i));
+                        }
+                    }
+                    for a in live {
+                        p.free(a);
+                    }
+                }));
+            }
+            for h in hs {
+                h.join().unwrap();
+            }
+            assert_eq!(p.blocks_used(), 0);
+            assert!(p.consistent());
+        });
+    }
+}

@@ -1,0 +1,232 @@
+//! Versioned Expert Residency (VER, §3.2).
+//!
+//! Each expert owns an *entry* with metadata for all supported versions and
+//! exports a **stable handle**: immutable in identity, holding an atomic
+//! pointer to the currently active (fully materialized) version. The compute
+//! path resolves the handle with one atomic load; transitions publish by
+//! swapping the pointer — publish-then-switch — so no kernel ever observes a
+//! partially populated version.
+//!
+//! The single invariant enforced here: **a handle always resolves to a
+//! complete, resident weight version.**
+
+use std::sync::atomic::{AtomicU8, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::model::Precision;
+
+use super::pools::PoolAlloc;
+
+/// Flat expert identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ExpertKey {
+    pub layer: u16,
+    pub expert: u16,
+}
+
+impl ExpertKey {
+    pub fn new(layer: usize, expert: usize) -> Self {
+        Self { layer: layer as u16, expert: expert as u16 }
+    }
+
+    pub fn flat(&self, n_experts: usize) -> usize {
+        self.layer as usize * n_experts + self.expert as usize
+    }
+}
+
+/// Residency states of an expert entry (§3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Residency {
+    /// High-precision version resident; handle points to it.
+    ResidentHi,
+    /// Only the low-precision version resident; handle points to it.
+    ResidentLo,
+    /// High-precision version in flight; handle still points to lo.
+    Promoting,
+    /// Low-precision version in flight (replacing hi); handle points to hi.
+    Demoting,
+}
+
+/// Per-entry transition bookkeeping (guarded; off the compute path).
+#[derive(Debug)]
+pub struct EntryState {
+    pub residency: Residency,
+    /// Allocation backing the *active* version.
+    pub active_alloc: Option<PoolAlloc>,
+    /// Allocation backing an in-flight (not yet published) version.
+    pub pending_alloc: Option<PoolAlloc>,
+    /// Id of the in-flight transition job, if any.
+    pub pending_job: Option<u64>,
+}
+
+fn enc(p: Precision) -> u8 {
+    match p {
+        Precision::Int2 => 0,
+        Precision::Int4 => 1,
+        Precision::Fp16 => 2,
+    }
+}
+
+fn dec(v: u8) -> Precision {
+    match v {
+        0 => Precision::Int2,
+        1 => Precision::Int4,
+        _ => Precision::Fp16,
+    }
+}
+
+/// The handle table: one stable slot per expert.
+///
+/// `active[i]` is the published precision of expert `i`'s current version —
+/// the `active_ptr` of the paper (our device "pointers" are (expert,
+/// precision) pairs resolved against the prepared weight store; the
+/// indirection and publish atomicity are identical). `state[i]` carries
+/// the transition state machine, touched only by the scheduler/pipeline.
+pub struct HandleTable {
+    n_experts: usize,
+    n_layers: usize,
+    active: Vec<AtomicU8>,
+    resolves: AtomicU64,
+    state: Vec<Mutex<EntryState>>,
+}
+
+impl HandleTable {
+    /// All experts start Resident-Lo at `lo` precision (cold boot).
+    pub fn new(n_layers: usize, n_experts: usize, lo: Precision) -> Self {
+        let n = n_layers * n_experts;
+        Self {
+            n_experts,
+            n_layers,
+            active: (0..n).map(|_| AtomicU8::new(enc(lo))).collect(),
+            resolves: AtomicU64::new(0),
+            state: (0..n)
+                .map(|_| {
+                    Mutex::new(EntryState {
+                        residency: Residency::ResidentLo,
+                        active_alloc: None,
+                        pending_alloc: None,
+                        pending_job: None,
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+
+    /// HOT PATH: resolve a stable handle to the active version's precision.
+    /// One atomic load; never blocks, never observes a partial version.
+    #[inline]
+    pub fn resolve(&self, key: ExpertKey) -> Precision {
+        self.resolves.fetch_add(1, Ordering::Relaxed);
+        dec(self.active[key.flat(self.n_experts)].load(Ordering::Acquire))
+    }
+
+    /// Number of hot-path resolves so far (overhead accounting).
+    pub fn resolve_count(&self) -> u64 {
+        self.resolves.load(Ordering::Relaxed)
+    }
+
+    /// PUBLISH: atomically switch the active version. Called by the
+    /// transition pipeline only after the new version is fully materialized.
+    pub fn publish(&self, key: ExpertKey, p: Precision) {
+        self.active[key.flat(self.n_experts)].store(enc(p), Ordering::Release);
+    }
+
+    /// Lock an entry's transition state (never taken on the compute path).
+    pub fn entry(&self, key: ExpertKey) -> std::sync::MutexGuard<'_, EntryState> {
+        self.state[key.flat(self.n_experts)].lock().unwrap()
+    }
+
+    /// Snapshot of the hi-resident set of one layer (diagnostics/tests).
+    pub fn hi_set(&self, layer: usize, hi: Precision) -> Vec<usize> {
+        (0..self.n_experts)
+            .filter(|&e| {
+                dec(self.active[layer * self.n_experts + e].load(Ordering::Acquire))
+                    == hi
+            })
+            .collect()
+    }
+
+    /// Count of experts currently in a given residency state.
+    pub fn count_residency(&self, r: Residency) -> usize {
+        self.state
+            .iter()
+            .filter(|s| s.lock().unwrap().residency == r)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::Prop;
+
+    #[test]
+    fn cold_boot_all_lo() {
+        let t = HandleTable::new(2, 8, Precision::Int4);
+        for l in 0..2 {
+            for e in 0..8 {
+                assert_eq!(t.resolve(ExpertKey::new(l, e)), Precision::Int4);
+            }
+        }
+        assert_eq!(t.count_residency(Residency::ResidentLo), 16);
+        assert_eq!(t.resolve_count(), 16);
+    }
+
+    #[test]
+    fn publish_switches_resolution() {
+        let t = HandleTable::new(1, 4, Precision::Int4);
+        let k = ExpertKey::new(0, 2);
+        t.publish(k, Precision::Fp16);
+        assert_eq!(t.resolve(k), Precision::Fp16);
+        assert_eq!(t.resolve(ExpertKey::new(0, 1)), Precision::Int4);
+        assert_eq!(t.hi_set(0, Precision::Fp16), vec![2]);
+    }
+
+    #[test]
+    fn flat_indexing() {
+        let k = ExpertKey::new(3, 7);
+        assert_eq!(k.flat(16), 3 * 16 + 7);
+    }
+
+    #[test]
+    fn prop_resolve_always_sees_complete_version() {
+        // Property: under concurrent publishing, resolve() only ever
+        // returns one of the two published precisions — never a torn value.
+        let mut prop = Prop::new("ver_publish_atomicity");
+        prop.run(5, |_rng| {
+            let t = std::sync::Arc::new(HandleTable::new(1, 4, Precision::Int2));
+            let k = ExpertKey::new(0, 1);
+            let stop = std::sync::Arc::new(std::sync::atomic::AtomicU8::new(0));
+            let writer = {
+                let t = t.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    for i in 0..20_000u32 {
+                        t.publish(
+                            k,
+                            if i % 2 == 0 { Precision::Fp16 } else { Precision::Int2 },
+                        );
+                    }
+                    stop.store(1, Ordering::Release);
+                })
+            };
+            let t2 = t.clone();
+            let reader = std::thread::spawn(move || {
+                while stop.load(Ordering::Acquire) == 0 {
+                    let p = t2.resolve(k);
+                    assert!(p == Precision::Fp16 || p == Precision::Int2);
+                }
+            });
+            writer.join().unwrap();
+            reader.join().unwrap();
+        });
+    }
+}

@@ -1,0 +1,140 @@
+//! Tables 1–2: expert activation ratio (%) vs batch size, decode & prefill.
+//!
+//! Paper shape: ratios rise steeply with batch; prefill ≫ decode; at
+//! batch 1 decode the ratio is ≈ top_k / n_experts.
+
+use std::collections::HashSet;
+
+use anyhow::Result;
+
+use crate::bench::Table;
+use crate::util::XorShiftRng;
+use crate::workload::{RoutingSampler, WorkloadProfile};
+
+use super::helpers::{engine, preset, BATCHES};
+
+const MODELS: &[&str] = &["qwen30b-sim", "qwen80b-sim", "phi-sim"];
+
+/// Prefill activation = fraction of a layer's experts touched while a
+/// *batch* of prompts prefills together in one iteration (the paper's
+/// Table 2 regime), measured as the union across the batch.
+fn prefill_union_ratio(
+    model: &str,
+    batch: usize,
+    prompt_len: usize,
+    rounds: usize,
+) -> Result<f64> {
+    let p = preset(model)?;
+    let w = WorkloadProfile::text();
+    let s = RoutingSampler::new(&w, p.n_layers_logical(), p.n_experts, p.top_k);
+    let mut rng = XorShiftRng::new(0x7e57 ^ batch as u64);
+    let mut acc = 0.0;
+    let mut samples = 0;
+    let mut tag_base = 0u64;
+    for _ in 0..rounds {
+        for layer in 0..4 {
+            let mut union: HashSet<usize> = HashSet::new();
+            for req in 0..batch as u64 {
+                for _ in 0..prompt_len {
+                    union.extend(s.sample_topk(&mut rng, tag_base + req, layer));
+                }
+            }
+            acc += union.len() as f64 / p.n_experts as f64;
+            samples += 1;
+        }
+        tag_base += batch as u64;
+    }
+    Ok(acc / samples as f64)
+}
+
+fn activation_row(
+    model: &str,
+    batches: &[usize],
+    prefill: bool,
+    fast: bool,
+) -> Result<Vec<String>> {
+    let mut cells = vec![model.to_string()];
+    for &b in batches {
+        let ratio = if prefill {
+            let prompt = if fast { 256 } else { 512 };
+            prefill_union_ratio(model, b, prompt, if fast { 1 } else { 2 })?
+        } else {
+            let mut e = engine(model, "static", "text", 7 + b as u64, true)?;
+            let rounds = if fast { 2 } else { 4 };
+            let w = WorkloadProfile::text();
+            for _ in 0..rounds {
+                e.serve_uniform(&w, b, 16, 16);
+            }
+            e.activation.decode_avg()
+        };
+        cells.push(format!("{:.1}", ratio * 100.0));
+    }
+    Ok(cells)
+}
+
+/// Table 1: decode-stage activation ratio (%).
+pub fn table1_decode(fast: bool) -> Result<String> {
+    let batches = if fast { &BATCHES[..4] } else { BATCHES };
+    let mut headers = vec!["Model"];
+    let labels: Vec<String> =
+        batches.iter().map(|b| format!("bs={b}")).collect();
+    headers.extend(labels.iter().map(String::as_str));
+    let mut t = Table::new(&headers);
+    for m in MODELS {
+        t.row(&activation_row(m, batches, false, fast)?);
+    }
+    Ok(format!(
+        "== Table 1: expert activation ratio (%) in decode stage ==\n{}",
+        t.render()
+    ))
+}
+
+/// Table 2: prefill-stage activation ratio (%).
+pub fn table2_prefill(fast: bool) -> Result<String> {
+    let batches = if fast { &BATCHES[..4] } else { BATCHES };
+    let mut headers = vec!["Model"];
+    let labels: Vec<String> =
+        batches.iter().map(|b| format!("bs={b}")).collect();
+    headers.extend(labels.iter().map(String::as_str));
+    let mut t = Table::new(&headers);
+    for m in MODELS {
+        t.row(&activation_row(m, batches, true, fast)?);
+    }
+    Ok(format!(
+        "== Table 2: expert activation ratio (%) in prefill stage ==\n{}",
+        t.render()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_ratio_grows_with_batch() {
+        let row = activation_row("qwen30b-sim", &[1, 16], false, true).unwrap();
+        let r1: f64 = row[1].parse().unwrap();
+        let r16: f64 = row[2].parse().unwrap();
+        // batch 1 ≈ top_k/E = 6.3%; batch 16 far denser
+        assert!(r1 < 12.0, "batch-1 decode ratio {r1}");
+        assert!(r16 > 2.0 * r1, "batch-16 {r16} vs batch-1 {r1}");
+    }
+
+    #[test]
+    fn prefill_much_denser_than_decode() {
+        let pre = activation_row("phi-sim", &[2], true, true).unwrap();
+        let dec = activation_row("phi-sim", &[2], false, true).unwrap();
+        let p: f64 = pre[1].parse().unwrap();
+        let d: f64 = dec[1].parse().unwrap();
+        assert!(p > 1.5 * d, "prefill {p}% vs decode {d}%");
+    }
+
+    #[test]
+    fn prefill_union_grows_with_batch() {
+        // Table 2 shape: batched prefill densifies with batch size.
+        let r1 = prefill_union_ratio("qwen30b-sim", 1, 256, 1).unwrap();
+        let r8 = prefill_union_ratio("qwen30b-sim", 8, 256, 1).unwrap();
+        assert!(r8 > r1, "bs8 {r8} vs bs1 {r1}");
+        assert!(r1 > 0.3 && r1 < 0.7, "bs1 prefill ratio {r1}");
+    }
+}

@@ -1,0 +1,129 @@
+//! Shared construction helpers for the experiment harnesses.
+
+use anyhow::{anyhow, Result};
+
+use crate::baselines::ExpertFlowBackend;
+use crate::config::{DeviceConfig, ModelPreset, ServingConfig};
+use crate::serving::backend::{DynaExqBackend, ResidencyBackend, StaticBackend};
+use crate::serving::engine::{Engine, EngineConfig};
+use crate::workload::WorkloadProfile;
+
+/// Methods compared across the paper's performance experiments.
+pub const METHODS: &[&str] = &["static", "dynaexq", "expertflow"];
+
+/// The paper's batch-size sweep.
+pub const BATCHES: &[usize] = &[1, 2, 4, 8, 16, 32];
+
+pub fn preset(model: &str) -> Result<ModelPreset> {
+    ModelPreset::by_name(model)
+        .ok_or_else(|| anyhow!("unknown model {model:?}"))
+}
+
+pub fn profile(workload: &str) -> Result<WorkloadProfile> {
+    WorkloadProfile::by_name(workload)
+        .ok_or_else(|| anyhow!("unknown workload {workload:?}"))
+}
+
+/// Build a residency backend for a method name.
+pub fn backend(
+    method: &str,
+    preset: &ModelPreset,
+    cfg: &ServingConfig,
+    dev: &DeviceConfig,
+) -> Result<Box<dyn ResidencyBackend>> {
+    Ok(match method {
+        "static" => Box::new(StaticBackend::for_preset(preset)),
+        "dynaexq" => Box::new(
+            DynaExqBackend::new(preset, cfg, dev).map_err(|e| anyhow!(e))?,
+        ),
+        "expertflow" => Box::new(ExpertFlowBackend::new(preset, cfg, dev)),
+        other => return Err(anyhow!("unknown method {other:?}")),
+    })
+}
+
+/// Build a modeled engine for (model, method, workload).
+pub fn engine(
+    model: &str,
+    method: &str,
+    workload: &str,
+    seed: u64,
+    track_activation: bool,
+) -> Result<Engine> {
+    let p = preset(model)?;
+    let w = profile(workload)?;
+    let cfg = ServingConfig::default();
+    let dev = DeviceConfig::default();
+    let b = backend(method, &p, &cfg, &dev)?;
+    Ok(Engine::new(
+        &p,
+        &w,
+        b,
+        &dev,
+        EngineConfig { max_batch: 32, seed, track_activation },
+    ))
+}
+
+/// Warm an adaptive method to steady state before measuring (the paper
+/// measures converged serving, not cold start).
+pub fn warm(engine: &mut Engine, workload: &WorkloadProfile, rounds: usize) {
+    for _ in 0..rounds {
+        engine.serve_uniform(workload, 8, 128, 16);
+    }
+    // discard warmup metrics
+    engine.metrics = Default::default();
+    engine.activation = Default::default();
+}
+
+/// One self-contained serving session (CLI `serve`).
+pub fn serve_session(
+    model: &str,
+    method: &str,
+    workload: &str,
+    batch: usize,
+    prompt: usize,
+    output: usize,
+    rounds: usize,
+) -> Result<String> {
+    let w = profile(workload)?;
+    let mut e = engine(model, method, workload, 0xC0FFEE, true)?;
+    warm(&mut e, &w, 2);
+    for _ in 0..rounds {
+        e.serve_uniform(&w, batch, prompt, output);
+    }
+    Ok(format!(
+        "model {model} | method {method} | workload {workload} | \
+         batch {batch} prompt {prompt} output {output} × {rounds} rounds\n\
+         {}\nactivation: prefill {:.1}% decode {:.1}% | hi-tier {:.1}% | \
+         migrated {:.1} GB | wait p99 {:.4}s",
+        e.metrics.summary(),
+        e.activation.prefill_avg() * 100.0,
+        e.activation.decode_avg() * 100.0,
+        e.backend.hi_fraction() * 100.0,
+        e.backend.migrated_bytes() as f64 / 1e9,
+        e.metrics.wait.p99(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_factory_covers_methods() {
+        let p = preset("phi-sim").unwrap();
+        let cfg = ServingConfig::default();
+        let dev = DeviceConfig::default();
+        for m in METHODS {
+            let b = backend(m, &p, &cfg, &dev).unwrap();
+            assert!(!b.name().is_empty());
+        }
+        assert!(backend("nope", &p, &cfg, &dev).is_err());
+    }
+
+    #[test]
+    fn serve_session_produces_report() {
+        let s =
+            serve_session("phi-sim", "static", "text", 2, 32, 4, 1).unwrap();
+        assert!(s.contains("tok/s"));
+    }
+}

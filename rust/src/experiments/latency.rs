@@ -1,0 +1,162 @@
+//! Figures 6–10: TTFT / TPOP / end-to-end latency / throughput vs batch
+//! size, and TTFT vs prompt length.
+//!
+//! Paper shape: static quantization lowest (no weight movement), ExpertFlow
+//! highest with the gap widening as batch/prompt grows (densification →
+//! transfer pressure → visible waiting), DynaExq in between and close to
+//! static; throughput 1.42–2.73× over ExpertFlow at batch 32.
+
+use anyhow::Result;
+
+use crate::bench::Table;
+use crate::metrics::ServingMetrics;
+use crate::workload::WorkloadProfile;
+
+use super::helpers::{engine, warm, BATCHES, METHODS};
+
+const MODELS: &[&str] = &["qwen30b-sim", "qwen80b-sim", "phi-sim"];
+
+/// Run one (model, method, batch, prompt, output) config and return its
+/// converged metrics.
+pub fn run_config(
+    model: &str,
+    method: &str,
+    batch: usize,
+    prompt: usize,
+    output: usize,
+    fast: bool,
+) -> Result<ServingMetrics> {
+    let w = WorkloadProfile::text();
+    let mut e = engine(model, method, "text", 0x5EED ^ batch as u64, false)?;
+    warm(&mut e, &w, if fast { 1 } else { 2 });
+    let rounds = if fast { 1 } else { 2 };
+    for _ in 0..rounds {
+        e.serve_uniform(&w, batch, prompt, output);
+    }
+    Ok(e.metrics.clone())
+}
+
+/// Figures 6 (TTFT), 7 (TPOP), 8 (E2E latency), 9 (throughput): batch sweep.
+pub fn figure_batch_sweep(which: &str, fast: bool) -> Result<String> {
+    let (title, extract): (&str, fn(&ServingMetrics) -> String) = match which {
+        "f6" => ("Figure 6: TTFT (avg/p99 s) vs batch size", |m| {
+            format!("{:.2}/{:.2}", m.ttft.avg(), m.ttft.p99())
+        }),
+        "f7" => ("Figure 7: TPOP (avg/p99 s) vs batch size", |m| {
+            format!("{:.4}/{:.4}", m.tpop.avg(), m.tpop.p99())
+        }),
+        "f8" => ("Figure 8: end-to-end latency (avg/p99 s) vs batch size", |m| {
+            format!("{:.2}/{:.2}", m.e2e.avg(), m.e2e.p99())
+        }),
+        "f9" => ("Figure 9: end-to-end throughput (tokens/s) vs batch size", |m| {
+            format!("{:.0}", m.throughput())
+        }),
+        other => anyhow::bail!("unknown sweep {other:?}"),
+    };
+    let batches = if fast { &BATCHES[..4] } else { BATCHES };
+    let (prompt, output) = if fast { (128, 16) } else { (512, 64) };
+    let mut out = format!("== {title} (prompt {prompt}, output {output}) ==\n");
+    for model in MODELS {
+        let mut headers = vec!["method"];
+        let labels: Vec<String> =
+            batches.iter().map(|b| format!("bs={b}")).collect();
+        headers.extend(labels.iter().map(String::as_str));
+        let mut t = Table::new(&headers);
+        for method in METHODS {
+            let mut cells = vec![method.to_string()];
+            for &b in batches {
+                let m = run_config(model, method, b, prompt, output, fast)?;
+                cells.push(extract(&m));
+            }
+            t.row(&cells);
+        }
+        out.push_str(&format!("-- {model} --\n{}", t.render()));
+    }
+    if which == "f9" {
+        // headline: DynaExq / ExpertFlow speedup at the largest batch
+        let b = *batches.last().unwrap();
+        for model in MODELS {
+            let dy = run_config(model, "dynaexq", b, prompt, output, fast)?
+                .throughput();
+            let ef = run_config(model, "expertflow", b, prompt, output, fast)?
+                .throughput();
+            out.push_str(&format!(
+                "{model}: DynaExq/ExpertFlow throughput at bs={b}: {:.2}x\n",
+                dy / ef
+            ));
+        }
+    }
+    Ok(out)
+}
+
+/// Figure 10: TTFT (avg/p99) vs prompt length at batch 8.
+pub fn figure10_prompt_sweep(fast: bool) -> Result<String> {
+    let sweep: &[usize] = if fast {
+        &[128, 512, 1024]
+    } else {
+        &[64, 128, 256, 512, 1024, 2048, 4096]
+    };
+    let mut out = String::from(
+        "== Figure 10: TTFT (avg/p99 s) vs prompt length (batch 8) ==\n",
+    );
+    for model in MODELS {
+        let mut headers = vec!["method"];
+        let labels: Vec<String> =
+            sweep.iter().map(|t| format!("{t}tok")).collect();
+        headers.extend(labels.iter().map(String::as_str));
+        let mut t = Table::new(&headers);
+        for method in METHODS {
+            let mut cells = vec![method.to_string()];
+            for &len in sweep {
+                let m = run_config(model, method, 8, len, 4, fast)?;
+                cells.push(format!(
+                    "{:.2}/{:.2}",
+                    m.ttft.avg(),
+                    m.ttft.p99()
+                ));
+            }
+            t.row(&cells);
+        }
+        out.push_str(&format!("-- {model} --\n{}", t.render()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_static_dynaexq_expertflow() {
+        // The paper's headline ordering at a non-trivial batch.
+        let st = run_config("qwen30b-sim", "static", 8, 128, 8, true).unwrap();
+        let dy = run_config("qwen30b-sim", "dynaexq", 8, 128, 8, true).unwrap();
+        let ef =
+            run_config("qwen30b-sim", "expertflow", 8, 128, 8, true).unwrap();
+        assert!(
+            st.ttft.avg() <= dy.ttft.avg() * 1.05,
+            "static {} ≤ dynaexq {}",
+            st.ttft.avg(),
+            dy.ttft.avg()
+        );
+        assert!(
+            dy.ttft.avg() < ef.ttft.avg(),
+            "dynaexq {} < expertflow {}",
+            dy.ttft.avg(),
+            ef.ttft.avg()
+        );
+        assert!(dy.throughput() > ef.throughput());
+    }
+
+    #[test]
+    fn expertflow_gap_widens_with_batch() {
+        let gap = |b: usize| {
+            let dy =
+                run_config("qwen30b-sim", "dynaexq", b, 64, 8, true).unwrap();
+            let ef = run_config("qwen30b-sim", "expertflow", b, 64, 8, true)
+                .unwrap();
+            ef.ttft.avg() / dy.ttft.avg()
+        };
+        assert!(gap(16) > gap(1), "gap(16)={} gap(1)={}", gap(16), gap(1));
+    }
+}

@@ -1,0 +1,144 @@
+//! Paper experiment harnesses.
+//!
+//! One function per table/figure of the paper's evaluation (DESIGN.md §5
+//! maps each to its workload and modules). Both the CLI (`dynaexq report`)
+//! and the bench targets (`cargo bench`) call into this module so every
+//! number in EXPERIMENTS.md has exactly one implementation.
+
+pub mod ablations;
+pub mod activation;
+pub mod helpers;
+pub mod latency;
+pub mod quality_exp;
+pub mod shift;
+pub mod waiting;
+
+use anyhow::{bail, Result};
+
+use crate::cli::Args;
+
+/// `dynaexq serve` — one modeled serving session.
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "qwen30b-sim");
+    let method = args.get_or("method", "dynaexq");
+    let workload = args.get_or("workload", "text");
+    let batch = args.get_parse::<usize>("batch").unwrap_or(8);
+    let prompt = args.get_parse::<usize>("prompt").unwrap_or(512);
+    let output = args.get_parse::<usize>("output").unwrap_or(64);
+    let rounds = args.get_parse::<usize>("rounds").unwrap_or(4);
+    let report =
+        helpers::serve_session(model, method, workload, batch, prompt, output, rounds)?;
+    println!("{report}");
+    Ok(())
+}
+
+/// `dynaexq report --exp <id>` — regenerate a paper table/figure.
+pub fn cmd_report(args: &Args) -> Result<()> {
+    let exp = args.get_or("exp", "all");
+    let fast = args.has("fast");
+    let run = |id: &str| -> Result<String> {
+        Ok(match id {
+            "t1" => activation::table1_decode(fast)?,
+            "t2" => activation::table2_prefill(fast)?,
+            "t4" => quality_exp::table4_quality(fast)?,
+            "f1" => waiting::figure1_waiting(fast)?,
+            "f2" => shift::figure2_shift(fast)?,
+            "f3" => quality_exp::figure3_demotion(fast)?,
+            "f6" => latency::figure_batch_sweep("f6", fast)?,
+            "f7" => latency::figure_batch_sweep("f7", fast)?,
+            "f8" => latency::figure_batch_sweep("f8", fast)?,
+            "f9" => latency::figure_batch_sweep("f9", fast)?,
+            "f10" => latency::figure10_prompt_sweep(fast)?,
+            "a1" => ablations::a1_hysteresis(fast)?,
+            "a2" => ablations::a2_ema_alpha(fast)?,
+            "a3" => ablations::a3_blocking(fast)?,
+            "a4" => ablations::a4_pool_granularity(fast)?,
+            "a5" => ablations::a5_static_map_shift(fast)?,
+            "a6" => ablations::a6_reactive_vs_policy(fast)?,
+            "a7" => ablations::a7_load_sweep(fast)?,
+            other => bail!("unknown experiment {other:?}"),
+        })
+    };
+    if exp == "all" {
+        for id in [
+            "t1", "t2", "f1", "f2", "f3", "t4", "f6", "f7", "f8", "f9",
+            "f10", "a1", "a2", "a3", "a4", "a5", "a6", "a7",
+        ] {
+            println!("{}", run(id)?);
+        }
+    } else {
+        println!("{}", run(exp)?);
+    }
+    Ok(())
+}
+
+/// `dynaexq quality` — a single numeric quality run.
+pub fn cmd_quality(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "phi-sim");
+    let method = args.get_or("method", "dynaexq");
+    let prompts = args.get_parse::<usize>("prompts").unwrap_or(8);
+    let prompt_len = args.get_parse::<usize>("prompt-len").unwrap_or(64);
+    let workload = args.get_or("workload", "text");
+    let r = quality_exp::run_quality(model, method, workload, prompts, prompt_len)?;
+    println!(
+        "{model}/{method}/{workload}: ppl {:.3}  KL {:.5}  relerr {:.4}  \
+         agree {:.3}  ({} prompts)",
+        r.perplexity, r.kl_vs_fp16, r.rel_err_vs_fp16, r.agreement_vs_fp16, r.prompts
+    );
+    Ok(())
+}
+
+/// `dynaexq trace` — routing-trace statistics, recording, and replay.
+pub fn cmd_trace(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "qwen30b-sim");
+    let workload = args.get_or("workload", "text");
+    let iters = args.get_parse::<usize>("iters").unwrap_or(500);
+
+    if let Some(path) = args.get("record") {
+        // Synthesize + persist a router trace for offline experiments.
+        let p = helpers::preset(model)?;
+        let w = helpers::profile(workload)?;
+        let batch = args.get_parse::<usize>("batch").unwrap_or(8);
+        let trace = crate::workload::traces::synthesize(
+            &w,
+            p.n_layers_logical(),
+            p.n_experts,
+            p.top_k,
+            batch,
+            iters,
+            args.get_parse::<u64>("seed").unwrap_or(1),
+        );
+        trace.save(std::path::Path::new(path))?;
+        println!(
+            "recorded {} selections over {} iterations to {path}",
+            trace.selections(),
+            iters
+        );
+        return Ok(());
+    }
+    if let Some(path) = args.get("replay") {
+        // Replay a trace through a residency backend; report its behaviour.
+        let p = helpers::preset(model)?;
+        let method = args.get_or("method", "dynaexq");
+        let cfg = crate::config::ServingConfig::default();
+        let dev = crate::config::DeviceConfig::default();
+        let mut backend = helpers::backend(method, &p, &cfg, &dev)?;
+        let trace =
+            crate::workload::Trace::load(std::path::Path::new(path))?;
+        let tick_s = args
+            .get_parse::<f64>("tick-ms")
+            .unwrap_or(cfg.update_interval_ms)
+            / 1e3;
+        let end = trace.replay(backend.as_mut(), tick_s);
+        println!(
+            "replayed {} selections through {method}: modeled {end:.2}s, \
+             hi-tier {:.1}%, migrated {:.2} GB",
+            trace.selections(),
+            backend.hi_fraction() * 100.0,
+            backend.migrated_bytes() as f64 / 1e9,
+        );
+        return Ok(());
+    }
+    println!("{}", shift::trace_stats(model, workload, iters)?);
+    Ok(())
+}

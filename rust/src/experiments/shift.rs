@@ -1,0 +1,139 @@
+//! Figure 2: expert activation counts under different workloads — a small
+//! hot set dominates cumulative activations, and the top-10 hot sets of
+//! text/math/code are (near-)disjoint.
+
+use std::collections::HashSet;
+
+use anyhow::Result;
+
+use crate::bench::Table;
+use crate::util::XorShiftRng;
+use crate::workload::{RoutingSampler, WorkloadProfile};
+
+use super::helpers::preset;
+
+/// Cumulative per-expert counts for one workload at `layer`.
+pub fn cumulative_counts(
+    model: &str,
+    workload: &WorkloadProfile,
+    layer: usize,
+    iters: usize,
+) -> Result<Vec<u64>> {
+    let p = preset(model)?;
+    let s = RoutingSampler::new(
+        workload,
+        p.n_layers_logical(),
+        p.n_experts,
+        p.top_k,
+    );
+    let mut rng = XorShiftRng::new(workload.seed ^ 0xACE);
+    let mut counts = vec![0u64; p.n_experts];
+    for tag in 0..iters as u64 {
+        for _ in 0..8 {
+            for e in s.sample_topk(&mut rng, tag, layer) {
+                counts[e] += 1;
+            }
+        }
+    }
+    Ok(counts)
+}
+
+fn top_n(counts: &[u64], n: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..counts.len()).collect();
+    idx.sort_by_key(|&e| std::cmp::Reverse(counts[e]));
+    idx.truncate(n);
+    idx
+}
+
+/// Figure 2 harness: per-workload hot heads + pairwise overlap + skew.
+pub fn figure2_shift(fast: bool) -> Result<String> {
+    let iters = if fast { 200 } else { 1000 };
+    let layer = 15 % 48; // the paper plots layer 15 of Qwen3-MoE-30B
+    let mut out = String::from(
+        "== Figure 2: expert activation counts across workloads \
+         (qwen30b-sim, layer 15) ==\n",
+    );
+    let mut tops: Vec<(String, Vec<usize>, Vec<u64>)> = Vec::new();
+    for w in WorkloadProfile::all() {
+        let counts = cumulative_counts("qwen30b-sim", &w, layer, iters)?;
+        let top = top_n(&counts, 10);
+        let total: u64 = counts.iter().sum();
+        let top_share: u64 = top.iter().map(|&e| counts[e]).sum();
+        out.push_str(&format!(
+            "{:<6} top-10 experts {:?}  (top-10 share {:.1}% of traffic)\n",
+            w.name,
+            top,
+            top_share as f64 / total as f64 * 100.0
+        ));
+        tops.push((w.name.to_string(), top, counts));
+    }
+    let mut t = Table::new(&["pair", "top-10 overlap"]);
+    for i in 0..tops.len() {
+        for j in i + 1..tops.len() {
+            let a: HashSet<_> = tops[i].1.iter().collect();
+            let b: HashSet<_> = tops[j].1.iter().collect();
+            t.row(&[
+                format!("{}/{}", tops[i].0, tops[j].0),
+                format!("{}", a.intersection(&b).count()),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+    Ok(out)
+}
+
+/// `dynaexq trace` backing: routing statistics of one workload.
+pub fn trace_stats(model: &str, workload: &str, iters: usize) -> Result<String> {
+    let w = WorkloadProfile::by_name(workload)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload {workload:?}"))?;
+    let counts = cumulative_counts(model, &w, 0, iters)?;
+    let total: u64 = counts.iter().sum();
+    let mut sorted = counts.clone();
+    sorted.sort_unstable_by(|a, b| b.cmp(a));
+    let cum_at = |frac: f64| -> f64 {
+        let n = ((counts.len() as f64) * frac).ceil() as usize;
+        sorted[..n].iter().sum::<u64>() as f64 / total as f64 * 100.0
+    };
+    Ok(format!(
+        "workload {workload} on {model}: {} selections over {} experts\n\
+         traffic share: top-5% experts {:.1}%  top-10% {:.1}%  top-25% {:.1}%\n\
+         hottest 10: {:?}",
+        total,
+        counts.len(),
+        cum_at(0.05),
+        cum_at(0.10),
+        cum_at(0.25),
+        top_n(&counts, 10),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hot_sets_disjoint_across_workloads() {
+        let mut tops = Vec::new();
+        for w in WorkloadProfile::all() {
+            let c = cumulative_counts("qwen30b-sim", &w, 15, 150).unwrap();
+            tops.push(top_n(&c, 10).into_iter().collect::<HashSet<_>>());
+        }
+        let overlap = tops[0].intersection(&tops[1]).count()
+            + tops[0].intersection(&tops[2]).count()
+            + tops[1].intersection(&tops[2]).count();
+        assert!(overlap <= 3, "total pairwise overlap {overlap}");
+    }
+
+    #[test]
+    fn traffic_heavy_tailed() {
+        let w = WorkloadProfile::text();
+        let c = cumulative_counts("qwen30b-sim", &w, 15, 150).unwrap();
+        let total: u64 = c.iter().sum();
+        let top = top_n(&c, 13); // ~10% of 128
+        let share: u64 = top.iter().map(|&e| c[e]).sum();
+        assert!(
+            share as f64 > 0.3 * total as f64,
+            "top-10% carries {share}/{total}"
+        );
+    }
+}

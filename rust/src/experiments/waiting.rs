@@ -1,0 +1,63 @@
+//! Figure 1: GPU waiting latency vs number of prompt tokens (ExpertFlow).
+//!
+//! Paper shape: waiting time grows with prompt length as prefill activation
+//! densifies and swap traffic saturates PCIe; DynaExq/static show zero.
+
+use anyhow::Result;
+
+use crate::bench::Table;
+use crate::workload::WorkloadProfile;
+
+use super::helpers::{engine, warm};
+
+pub const TOKEN_SWEEP: &[usize] = &[128, 256, 512, 1024, 2048, 4096];
+
+/// Mean per-prefill waiting seconds for (method, prompt_len).
+pub fn waiting_at(method: &str, prompt_len: usize, fast: bool) -> Result<f64> {
+    let w = WorkloadProfile::text();
+    let mut e = engine("qwen30b-sim", method, "text", 11, false)?;
+    warm(&mut e, &w, if fast { 1 } else { 2 });
+    e.serve_uniform(&w, 8, prompt_len, 4);
+    Ok(e.metrics.wait.avg())
+}
+
+/// Figure 1 harness.
+pub fn figure1_waiting(fast: bool) -> Result<String> {
+    let sweep = if fast { &TOKEN_SWEEP[..4] } else { TOKEN_SWEEP };
+    let mut headers = vec!["method"];
+    let labels: Vec<String> =
+        sweep.iter().map(|t| format!("{t} tok")).collect();
+    headers.extend(labels.iter().map(String::as_str));
+    let mut t = Table::new(&headers);
+    for method in ["expertflow", "dynaexq", "static"] {
+        let mut cells = vec![method.to_string()];
+        for &len in sweep {
+            cells.push(format!("{:.3}s", waiting_at(method, len, fast)?));
+        }
+        t.row(&cells);
+    }
+    Ok(format!(
+        "== Figure 1: GPU waiting latency vs number of tokens \
+         (qwen30b-sim, batch 8) ==\n{}",
+        t.render()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expertflow_waits_grow_with_tokens() {
+        let short = waiting_at("expertflow", 128, true).unwrap();
+        let long = waiting_at("expertflow", 1024, true).unwrap();
+        assert!(long > short, "long {long} vs short {short}");
+        assert!(long > 0.0);
+    }
+
+    #[test]
+    fn dynaexq_never_waits() {
+        assert_eq!(waiting_at("dynaexq", 512, true).unwrap(), 0.0);
+        assert_eq!(waiting_at("static", 512, true).unwrap(), 0.0);
+    }
+}

@@ -1,0 +1,49 @@
+//! # DynaExq
+//!
+//! Runtime-aware mixed-precision serving for Mixture-of-Experts inference
+//! under a hard HBM envelope — a reproduction of *"Dynamic Expert
+//! Quantization for Scalable Mixture-of-Experts Inference"* (cs.PF 2025).
+//!
+//! DynaExq treats single-GPU MoE serving as an **online, budget-constrained
+//! precision allocation** problem: experts that dominate runtime traffic are
+//! kept resident at a high-precision tier, the rest fall back to a
+//! low-precision tier, and precision transitions (promotions / demotions)
+//! happen asynchronously through stable expert handles so the forward pass
+//! always executes on a fully materialized expert version.
+//!
+//! ## Layering (see DESIGN.md)
+//!
+//! * **L3 (this crate)** — the coordinator: serving engine, continuous
+//!   batcher, [`coordinator::ver`] (versioned expert residency),
+//!   deterministic [`coordinator::pools`], [`coordinator::budget`],
+//!   the non-blocking [`coordinator::pipeline`], and the online
+//!   [`coordinator::policy`] (hotness EMA + budget-feasible top-n +
+//!   hysteresis).
+//! * **L2/L1 (python, build-time only)** — the JAX MoE model and Pallas
+//!   dequant-GEMM kernels, AOT-lowered to HLO text under `artifacts/`,
+//!   loaded and executed by [`runtime`] via the PJRT CPU client.
+//!
+//! The GPU (an RTX A6000-class device in the paper) is substituted by the
+//! [`sim`] cost model — capacities, PCIe bandwidth and stream overlap are
+//! modeled in bytes/seconds while all numerics execute for real on CPU.
+
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod quality;
+pub mod runtime;
+pub mod serving;
+pub mod sim;
+pub mod testutil;
+pub mod util;
+pub mod workload;
+
+pub use config::{DeviceConfig, ModelPreset, ServingConfig};
+pub use coordinator::Coordinator;
+pub use serving::engine::Engine;
+pub use serving::numeric::NumericEngine;

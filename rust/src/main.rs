@@ -1,0 +1,66 @@
+//! DynaExq CLI: the leader entrypoint.
+//!
+//! Subcommands:
+//! * `serve`   — run a modeled serving session and print metrics
+//! * `report`  — regenerate one paper table/figure (`--exp t1|t2|f1|f2|f3|
+//!   t4|f6|f7|f8|f9|f10|a1|a2|a3|a4`)
+//! * `quality` — numeric quality run for one model/method
+//! * `trace`   — dump routing-trace statistics for a workload
+//!
+//! Run `dynaexq help` for flags.
+
+use dynaexq::cli::Args;
+use dynaexq::experiments;
+
+const HELP: &str = "\
+dynaexq — runtime-aware mixed-precision MoE serving (paper reproduction)
+
+USAGE:
+    dynaexq <subcommand> [--flag value]...
+
+SUBCOMMANDS:
+    serve    Run a modeled serving session.
+               --model qwen30b-sim|qwen80b-sim|phi-sim   (default qwen30b-sim)
+               --method dynaexq|static|expertflow        (default dynaexq)
+               --workload text|math|code                 (default text)
+               --batch N (default 8)  --prompt N (default 512)
+               --output N (default 64) --rounds N (default 4)
+    report   Regenerate a paper table/figure.
+               --exp t1|t2|t4|f1|f2|f3|f6..f10|a1..a7|all  [--fast]
+    quality  Numeric quality run (real PJRT execution).
+               --model ... --method fp16|static|dynaexq
+               --prompts N (default 8) --prompt-len N (default 64)
+    trace    Router traces: statistics, recording, replay.
+               --model ... --workload ... --iters N
+               --record out.dxtr [--batch B --seed S]
+               --replay in.dxtr [--method dynaexq|static|expertflow]
+    help     This text.
+";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_str() {
+        "serve" => experiments::cmd_serve(&args),
+        "report" => experiments::cmd_report(&args),
+        "quality" => experiments::cmd_quality(&args),
+        "trace" => experiments::cmd_trace(&args),
+        "help" | "" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,130 @@
+//! Serving metrics: streaming latency collectors (TTFT / TPOP / E2E),
+//! throughput, and migration counters — average and P99, matching what the
+//! paper reports in §5.3.
+
+use crate::util::{mean, percentile};
+
+/// A named latency series (seconds).
+#[derive(Debug, Clone, Default)]
+pub struct LatencySeries {
+    samples: Vec<f64>,
+}
+
+impl LatencySeries {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        self.samples.push(seconds);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn avg(&self) -> f64 {
+        mean(&self.samples)
+    }
+
+    pub fn p50(&self) -> f64 {
+        percentile(&self.samples, 50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        percentile(&self.samples, 99.0)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(0.0, f64::max)
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+/// Full serving-run metrics, one per experiment run.
+#[derive(Debug, Clone, Default)]
+pub struct ServingMetrics {
+    /// Time-to-first-token per request.
+    pub ttft: LatencySeries,
+    /// Time-per-output-token per decode step.
+    pub tpop: LatencySeries,
+    /// End-to-end request latency.
+    pub e2e: LatencySeries,
+    /// Modeled GPU waiting time attributable to expert transfers.
+    pub wait: LatencySeries,
+    /// Tokens generated (decode) across the run.
+    pub decode_tokens: u64,
+    /// Tokens ingested (prefill) across the run.
+    pub prefill_tokens: u64,
+    /// Modeled run duration in seconds.
+    pub duration_s: f64,
+}
+
+impl ServingMetrics {
+    /// End-to-end throughput in tokens/s (prefill + decode).
+    pub fn throughput(&self) -> f64 {
+        if self.duration_s <= 0.0 {
+            return 0.0;
+        }
+        (self.prefill_tokens + self.decode_tokens) as f64 / self.duration_s
+    }
+
+    /// Decode-only throughput in tokens/s.
+    pub fn decode_throughput(&self) -> f64 {
+        if self.duration_s <= 0.0 {
+            return 0.0;
+        }
+        self.decode_tokens as f64 / self.duration_s
+    }
+
+    /// One-line summary for reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "ttft avg {:.3}s p99 {:.3}s | tpop avg {:.4}s p99 {:.4}s | \
+             e2e avg {:.3}s p99 {:.3}s | {:.1} tok/s",
+            self.ttft.avg(),
+            self.ttft.p99(),
+            self.tpop.avg(),
+            self.tpop.p99(),
+            self.e2e.avg(),
+            self.e2e.p99(),
+            self.throughput()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_stats() {
+        let mut s = LatencySeries::new();
+        for i in 1..=100 {
+            s.record(i as f64);
+        }
+        assert_eq!(s.count(), 100);
+        assert!((s.avg() - 50.5).abs() < 1e-9);
+        assert_eq!(s.p99(), 99.0);
+        assert_eq!(s.max(), 100.0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let mut m = ServingMetrics::default();
+        m.decode_tokens = 300;
+        m.prefill_tokens = 700;
+        m.duration_s = 10.0;
+        assert!((m.throughput() - 100.0).abs() < 1e-9);
+        assert!((m.decode_throughput() - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_duration_safe() {
+        let m = ServingMetrics::default();
+        assert_eq!(m.throughput(), 0.0);
+    }
+}

@@ -1,0 +1,110 @@
+//! Synthetic MoE model: precision tiers, host-side weight store, and the
+//! rust mirror of the python quantizer.
+//!
+//! The paper prepares expert weights **offline** into kernel-ready high- and
+//! low-precision layouts kept in pinned host memory; promotion copies the
+//! prepared bytes host→device without on-the-fly repacking (§4). This module
+//! is that preparation step: deterministic seeded weights for the three
+//! simulated models, pre-quantized at every tier the model's config uses.
+
+pub mod quant;
+pub mod weights;
+
+pub use weights::{ExpertWeights, LayerWeights, ModelWeights};
+
+use crate::config::{D_MODEL, FF_DIM};
+
+/// Precision tier of an expert version.
+///
+/// `Fp16` *executes* as f32 on the CPU PJRT plugin (tier semantics are what
+/// the mechanism needs), but is *accounted* at 2 bytes/param so memory
+/// budgets keep the paper's ratios.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Precision {
+    Int2,
+    Int4,
+    Fp16,
+}
+
+impl Precision {
+    /// Bits per weight.
+    pub fn bits(self) -> usize {
+        match self {
+            Precision::Fp16 => 16,
+            Precision::Int4 => 4,
+            Precision::Int2 => 2,
+        }
+    }
+
+    /// Packing factor along the contraction axis (values per byte).
+    pub fn pack(self) -> usize {
+        match self {
+            Precision::Fp16 => 1,
+            Precision::Int4 => 2,
+            Precision::Int2 => 4,
+        }
+    }
+
+    /// Artifact-name component (`fp16` / `int4` / `int2`), matching aot.py.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Precision::Fp16 => "fp16",
+            Precision::Int4 => "int4",
+            Precision::Int2 => "int2",
+        }
+    }
+
+    pub fn from_tag(tag: &str) -> Option<Self> {
+        match tag {
+            "fp16" => Some(Precision::Fp16),
+            "int4" => Some(Precision::Int4),
+            "int2" => Some(Precision::Int2),
+            _ => None,
+        }
+    }
+}
+
+/// Parameter count of one expert (w1 [D,F] + w3 [D,F] + w2 [F,D]).
+pub const EXPERT_PARAMS: usize = 3 * D_MODEL * FF_DIM;
+
+/// Accounted bytes of one expert's weights at precision `p`
+/// (packed weights + per-output-channel scales for the int tiers).
+pub fn expert_bytes(p: Precision) -> usize {
+    match p {
+        Precision::Fp16 => EXPERT_PARAMS * 2,
+        _ => {
+            let scales = (FF_DIM + FF_DIM + D_MODEL) * 4;
+            EXPERT_PARAMS / p.pack() + scales
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_ordering_matches_fidelity() {
+        assert!(Precision::Fp16 > Precision::Int4);
+        assert!(Precision::Int4 > Precision::Int2);
+    }
+
+    #[test]
+    fn tags_roundtrip() {
+        for p in [Precision::Fp16, Precision::Int4, Precision::Int2] {
+            assert_eq!(Precision::from_tag(p.tag()), Some(p));
+        }
+        assert_eq!(Precision::from_tag("int8"), None);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        // 24576 params: fp16 = 49152; int4 = 12288 + 1280; int2 = 6144 + 1280
+        assert_eq!(EXPERT_PARAMS, 24576);
+        assert_eq!(expert_bytes(Precision::Fp16), 49152);
+        assert_eq!(expert_bytes(Precision::Int4), 13568);
+        assert_eq!(expert_bytes(Precision::Int2), 7424);
+        assert!(expert_bytes(Precision::Fp16) > expert_bytes(Precision::Int4));
+        assert!(expert_bytes(Precision::Int4) > expert_bytes(Precision::Int2));
+    }
+}

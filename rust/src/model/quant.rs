@@ -1,0 +1,202 @@
+//! Rust mirror of `python/compile/quant.py` — **bit-exact** packing contract.
+//!
+//! * per-output-channel symmetric scales: `s[n] = max|W[:, n]| / qmax`
+//! * stored codes `u = clip(round(w/s + bias), 0, 2^bits − 1)`
+//!   - int4: integer levels, bias 8, qmax 7
+//!   - int2: half-integer levels, bias 1.5, qmax 1.5
+//!     (levels {−1.5, −0.5, +0.5, +1.5}·s)
+//! * packed little-endian along the contraction axis K
+//!   (int4: `b[k,n] = u[2k+1]<<4 | u[2k]`; int2: four codes per byte)
+//!
+//! The layout is what the L1 Pallas dequant-GEMM consumes; the pinned byte
+//! patterns in the tests here match `python/tests/test_quant.py` exactly.
+
+use super::Precision;
+
+/// Quantization parameters per tier.
+fn params(p: Precision) -> (usize, f32, f32) {
+    // (bits, qmax, bias)
+    match p {
+        Precision::Int4 => (4, 7.0, 8.0),
+        Precision::Int2 => (2, 1.5, 1.5),
+        Precision::Fp16 => panic!("fp16 tier is not packed"),
+    }
+}
+
+/// Packed quantized matrix: `data[K/pack, N]` row-major + `scales[N]`.
+#[derive(Clone, Debug)]
+pub struct PackedMatrix {
+    pub data: Vec<u8>,
+    pub scales: Vec<f32>,
+    /// Logical (unpacked) contraction dim.
+    pub k: usize,
+    pub n: usize,
+    pub precision: Precision,
+}
+
+impl PackedMatrix {
+    /// Packed byte rows (K / pack).
+    pub fn rows(&self) -> usize {
+        self.k / self.precision.pack()
+    }
+
+    /// Total payload bytes (packed data + scales).
+    pub fn bytes(&self) -> usize {
+        self.data.len() + self.scales.len() * 4
+    }
+}
+
+/// Quantize a row-major `w[K, N]` at tier `p` (Int4 or Int2).
+pub fn quantize(w: &[f32], k: usize, n: usize, p: Precision) -> PackedMatrix {
+    assert_eq!(w.len(), k * n);
+    let (bits, qmax, bias) = params(p);
+    let pack = p.pack();
+    assert_eq!(k % pack, 0, "K={k} not divisible by pack={pack}");
+    let umax = (1u32 << bits) - 1;
+
+    // per-output-channel scales
+    let mut scales = vec![0f32; n];
+    for col in 0..n {
+        let mut absmax = 0f32;
+        for row in 0..k {
+            absmax = absmax.max(w[row * n + col].abs());
+        }
+        scales[col] = if absmax > 0.0 { absmax / qmax } else { 1.0 };
+    }
+
+    let mut data = vec![0u8; (k / pack) * n];
+    for row in 0..k {
+        for col in 0..n {
+            let q = (w[row * n + col] / scales[col] + bias).round();
+            let u = q.clamp(0.0, umax as f32) as u8;
+            let byte_row = row / pack;
+            let shift = bits * (row % pack);
+            data[byte_row * n + col] |= u << shift;
+        }
+    }
+    PackedMatrix { data, scales, k, n, precision: p }
+}
+
+/// Dequantize back to row-major f32 (tests + the quality oracle).
+pub fn dequantize(m: &PackedMatrix) -> Vec<f32> {
+    let (bits, _, bias) = params(m.precision);
+    let pack = m.precision.pack();
+    let mask = ((1u32 << bits) - 1) as u8;
+    let mut out = vec![0f32; m.k * m.n];
+    for row in 0..m.k {
+        let byte_row = row / pack;
+        let shift = bits * (row % pack);
+        for col in 0..m.n {
+            let u = (m.data[byte_row * m.n + col] >> shift) & mask;
+            out[row * m.n + col] = (u as f32 - bias) * m.scales[col];
+        }
+    }
+    out
+}
+
+/// Relative Frobenius reconstruction error.
+pub fn quant_error(w: &[f32], k: usize, n: usize, p: Precision) -> f64 {
+    let m = quantize(w, k, n, p);
+    let wq = dequantize(&m);
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for i in 0..w.len() {
+        let d = (w[i] - wq[i]) as f64;
+        num += d * d;
+        den += (w[i] as f64) * (w[i] as f64);
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        (num / den).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::Prop;
+
+    #[test]
+    fn int4_pinned_byte_matches_python() {
+        // test_quant.py::test_int4_known_bytes — w = [-7s, 7s]:
+        // absmax = 7s → scale s; u = [round(-7+8), round(7+8)] = [1, 15]
+        // → byte = 15<<4 | 1 = 0xF1
+        let s = 0.5f32;
+        let w = [-7.0 * s, 7.0 * s];
+        let m = quantize(&w, 2, 1, Precision::Int4);
+        assert_eq!(m.data, vec![0xF1]);
+        assert!((m.scales[0] - s).abs() < 1e-6);
+    }
+
+    #[test]
+    fn int2_pinned_byte_matches_python() {
+        // test_quant.py::test_int2_known_bytes — u=[0,1,2,3] → 0xE4
+        let w = [-1.5f32, -0.5, 0.5, 1.5];
+        let m = quantize(&w, 4, 1, Precision::Int2);
+        assert_eq!(m.data, vec![0xE4]);
+        assert!((m.scales[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_column_scale_one() {
+        let w = vec![0f32; 8 * 3];
+        let m = quantize(&w, 8, 3, Precision::Int4);
+        assert!(m.scales.iter().all(|&s| s == 1.0));
+        assert!(dequantize(&m).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn prop_error_bounded_by_half_step() {
+        // property: |w − wq| ≤ s/2 + eps elementwise, any shape/seed/tier
+        let mut prop = Prop::new("quant_half_step");
+        prop.run(60, |rng| {
+            let k = *[4usize, 8, 16, 64].iter().nth(rng.below(4)).unwrap();
+            let n = 1 + rng.below(24);
+            let p = if rng.below(2) == 0 { Precision::Int4 } else { Precision::Int2 };
+            let amp = rng.range_f64(0.01, 10.0) as f32;
+            let w: Vec<f32> =
+                (0..k * n).map(|_| rng.normal_f32() * amp).collect();
+            let m = quantize(&w, k, n, p);
+            let wq = dequantize(&m);
+            for row in 0..k {
+                for col in 0..n {
+                    let d = (w[row * n + col] - wq[row * n + col]).abs();
+                    assert!(
+                        d <= m.scales[col] * 0.5 + 1e-5,
+                        "tier {:?} k={k} n={n} d={d} s={}",
+                        p,
+                        m.scales[col]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_int4_beats_int2() {
+        let mut prop = Prop::new("quant_tier_order");
+        prop.run(20, |rng| {
+            let w: Vec<f32> = (0..64 * 16).map(|_| rng.normal_f32()).collect();
+            let e4 = quant_error(&w, 64, 16, Precision::Int4);
+            let e2 = quant_error(&w, 64, 16, Precision::Int2);
+            assert!(e4 < e2, "int4 {e4} should beat int2 {e2}");
+        });
+    }
+
+    #[test]
+    fn bytes_accounting_matches_model() {
+        let w = vec![0.1f32; crate::config::D_MODEL * crate::config::FF_DIM];
+        let m4 = quantize(
+            &w,
+            crate::config::D_MODEL,
+            crate::config::FF_DIM,
+            Precision::Int4,
+        );
+        assert_eq!(
+            m4.bytes(),
+            crate::config::D_MODEL * crate::config::FF_DIM / 2
+                + crate::config::FF_DIM * 4
+        );
+    }
+}

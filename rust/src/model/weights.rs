@@ -1,0 +1,215 @@
+//! Deterministic synthetic weights + the pinned-host-memory weight store.
+//!
+//! All weight versions are prepared **offline** (at engine construction):
+//! full-precision f32, plus packed Int4/Int2 versions for every expert, so
+//! runtime promotion is a pure copy of prepared bytes — exactly the paper's
+//! "avoid on-the-fly repacking during promotion" rule (§3.4).
+
+use crate::config::{ModelPreset, D_MODEL, FF_DIM, VOCAB};
+use crate::util::XorShiftRng;
+
+use super::quant::{quantize, PackedMatrix};
+use super::Precision;
+
+/// One expert's prepared weight versions (host copies).
+#[derive(Clone, Debug)]
+pub struct ExpertWeights {
+    /// Row-major f32: w1 [D, F], w3 [D, F], w2 [F, D].
+    pub w1: Vec<f32>,
+    pub w3: Vec<f32>,
+    pub w2: Vec<f32>,
+    /// Packed versions, prepared offline: (w1, w3, w2) per tier.
+    pub int4: [PackedMatrix; 3],
+    pub int2: [PackedMatrix; 3],
+}
+
+impl ExpertWeights {
+    fn generate(rng: &mut XorShiftRng) -> Self {
+        let std_in = 1.0 / (D_MODEL as f32).sqrt();
+        let std_out = 1.0 / (FF_DIM as f32).sqrt();
+        let gen = |rng: &mut XorShiftRng, n: usize, std: f32| -> Vec<f32> {
+            (0..n).map(|_| rng.normal_f32() * std).collect()
+        };
+        let w1 = gen(rng, D_MODEL * FF_DIM, std_in);
+        let w3 = gen(rng, D_MODEL * FF_DIM, std_in);
+        let w2 = gen(rng, FF_DIM * D_MODEL, std_out);
+        let q = |w: &[f32], k: usize, n: usize, p: Precision| quantize(w, k, n, p);
+        Self {
+            int4: [
+                q(&w1, D_MODEL, FF_DIM, Precision::Int4),
+                q(&w3, D_MODEL, FF_DIM, Precision::Int4),
+                q(&w2, FF_DIM, D_MODEL, Precision::Int4),
+            ],
+            int2: [
+                q(&w1, D_MODEL, FF_DIM, Precision::Int2),
+                q(&w3, D_MODEL, FF_DIM, Precision::Int2),
+                q(&w2, FF_DIM, D_MODEL, Precision::Int2),
+            ],
+            w1,
+            w3,
+            w2,
+        }
+    }
+
+    /// The packed version at tier `p` (panics for Fp16 — use the f32 fields).
+    pub fn packed(&self, p: Precision) -> &[PackedMatrix; 3] {
+        match p {
+            Precision::Int4 => &self.int4,
+            Precision::Int2 => &self.int2,
+            Precision::Fp16 => panic!("fp16 has no packed form"),
+        }
+    }
+}
+
+/// Per-layer weights: attention, router, experts, shared experts.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub attn_g: Vec<f32>,  // [D]
+    pub wq: Vec<f32>,      // [D, D]
+    pub wk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub wo: Vec<f32>,
+    pub moe_g: Vec<f32>,   // [D]
+    pub wr: Vec<f32>,      // [D, E]
+    pub experts: Vec<ExpertWeights>,
+    pub shared: Vec<ExpertWeights>,
+}
+
+/// Whole-model host weight store ("pinned host memory").
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub preset: ModelPreset,
+    pub embed: Vec<f32>,   // [V, D]
+    pub layers: Vec<LayerWeights>,
+    pub final_g: Vec<f32>, // [D]
+    pub wout: Vec<f32>,    // [D, V]
+}
+
+impl ModelWeights {
+    /// Generate the full model deterministically from `seed`.
+    ///
+    /// Router columns get a small per-expert bias spread so routing is
+    /// naturally skewed (the paper's heavy-tailed utilization, Obs. 2);
+    /// *which* experts are hot still depends on the input distribution,
+    /// which is what shifts across workload profiles.
+    pub fn generate(preset: &ModelPreset, seed: u64) -> Self {
+        let mut rng = XorShiftRng::new(seed);
+        let d_std = 1.0 / (D_MODEL as f32).sqrt();
+        let gen = |rng: &mut XorShiftRng, n: usize, std: f32| -> Vec<f32> {
+            (0..n).map(|_| rng.normal_f32() * std).collect()
+        };
+        let ones = |n: usize| vec![1.0f32; n];
+
+        let embed = gen(&mut rng, VOCAB * D_MODEL, 1.0);
+        let mut layers = Vec::with_capacity(preset.n_layers);
+        for _ in 0..preset.n_layers {
+            let mut wr = gen(&mut rng, D_MODEL * preset.n_experts, d_std * 2.0);
+            // Per-expert router gain: a heavy-ish tail over experts.
+            for e in 0..preset.n_experts {
+                let gain = 1.0 + 1.5 * rng.next_f32() * rng.next_f32();
+                for row in 0..D_MODEL {
+                    wr[row * preset.n_experts + e] *= gain;
+                }
+            }
+            layers.push(LayerWeights {
+                attn_g: ones(D_MODEL),
+                wq: gen(&mut rng, D_MODEL * D_MODEL, d_std),
+                wk: gen(&mut rng, D_MODEL * D_MODEL, d_std),
+                wv: gen(&mut rng, D_MODEL * D_MODEL, d_std),
+                wo: gen(&mut rng, D_MODEL * D_MODEL, d_std),
+                moe_g: ones(D_MODEL),
+                wr,
+                experts: (0..preset.n_experts)
+                    .map(|_| ExpertWeights::generate(&mut rng))
+                    .collect(),
+                shared: (0..preset.n_shared)
+                    .map(|_| ExpertWeights::generate(&mut rng))
+                    .collect(),
+            });
+        }
+        Self {
+            preset: preset.clone(),
+            embed,
+            layers,
+            final_g: ones(D_MODEL),
+            wout: gen(&mut rng, D_MODEL * VOCAB, d_std),
+        }
+    }
+
+    /// Total prepared host bytes across all versions (diagnostics).
+    pub fn host_bytes(&self) -> usize {
+        let per_expert = super::EXPERT_PARAMS * 4
+            + super::expert_bytes(Precision::Int4)
+            + super::expert_bytes(Precision::Int2);
+        let experts: usize = self
+            .layers
+            .iter()
+            .map(|l| (l.experts.len() + l.shared.len()) * per_expert)
+            .sum();
+        experts + (self.embed.len() + self.wout.len()) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_preset() -> ModelPreset {
+        let mut p = ModelPreset::phi_sim();
+        p.n_layers = 2;
+        p
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let p = tiny_preset();
+        let a = ModelWeights::generate(&p, 11);
+        let b = ModelWeights::generate(&p, 11);
+        assert_eq!(a.layers[0].wq, b.layers[0].wq);
+        assert_eq!(
+            a.layers[1].experts[3].int4[0].data,
+            b.layers[1].experts[3].int4[0].data
+        );
+        let c = ModelWeights::generate(&p, 12);
+        assert_ne!(a.layers[0].wq, c.layers[0].wq);
+    }
+
+    #[test]
+    fn shapes() {
+        let p = tiny_preset();
+        let m = ModelWeights::generate(&p, 1);
+        assert_eq!(m.embed.len(), VOCAB * D_MODEL);
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.layers[0].experts.len(), p.n_experts);
+        assert_eq!(m.layers[0].wr.len(), D_MODEL * p.n_experts);
+        let e = &m.layers[0].experts[0];
+        assert_eq!(e.w1.len(), D_MODEL * FF_DIM);
+        assert_eq!(e.int4[0].rows(), D_MODEL / 2);
+        assert_eq!(e.int2[2].rows(), FF_DIM / 4);
+    }
+
+    #[test]
+    fn shared_experts_present_for_80b() {
+        let mut p = ModelPreset::qwen80b_sim();
+        p.n_layers = 1;
+        p.n_experts = 8; // shrink for test speed
+        let m = ModelWeights::generate(&p, 5);
+        assert_eq!(m.layers[0].shared.len(), 1);
+    }
+
+    #[test]
+    fn packed_versions_reconstruct() {
+        let p = tiny_preset();
+        let m = ModelWeights::generate(&p, 3);
+        let e = &m.layers[0].experts[0];
+        let wq4 = super::super::quant::dequantize(&e.int4[0]);
+        // int4 reconstruction should be close-ish
+        let mut err = 0f64;
+        let mut den = 0f64;
+        for i in 0..e.w1.len() {
+            err += ((e.w1[i] - wq4[i]) as f64).powi(2);
+            den += (e.w1[i] as f64).powi(2);
+        }
+        assert!((err / den).sqrt() < 0.2);
+    }
+}

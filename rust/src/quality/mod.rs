@@ -1,0 +1,163 @@
+//! Quality metrics: perplexity and logit fidelity.
+//!
+//! The paper's six LLM benchmarks are substituted (DESIGN.md §2) by a
+//! proxy suite computed on *really executed* numerics: teacher-forced
+//! perplexity on synthetic prompts, plus KL divergence and relative error
+//! of logits against the FP16 reference. Table 4's claim is the ordering
+//! FP16 ≥ DynaExq > static-low-bit with DynaExq recovering most of the
+//! gap; these metrics expose exactly that ordering.
+
+use crate::config::VOCAB;
+
+/// Numerically stable log-softmax of one row.
+fn log_softmax(row: &[f32]) -> Vec<f64> {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let logsum: f64 = row
+        .iter()
+        .map(|&x| ((x as f64) - max).exp())
+        .sum::<f64>()
+        .ln()
+        + max;
+    row.iter().map(|&x| x as f64 - logsum).collect()
+}
+
+/// Teacher-forced perplexity of `tokens` under `[T, VOCAB]` logits
+/// (position t predicts token t+1).
+pub fn perplexity(logits: &[f32], tokens: &[i32]) -> f64 {
+    let t = tokens.len();
+    assert_eq!(logits.len(), t * VOCAB);
+    if t < 2 {
+        return f64::NAN;
+    }
+    let mut nll = 0.0;
+    for pos in 0..t - 1 {
+        let row = &logits[pos * VOCAB..(pos + 1) * VOCAB];
+        let ls = log_softmax(row);
+        nll -= ls[tokens[pos + 1] as usize];
+    }
+    (nll / (t - 1) as f64).exp()
+}
+
+/// Mean KL(ref ‖ hyp) across rows of two `[T, VOCAB]` logit matrices.
+pub fn logit_kl(reference: &[f32], hypothesis: &[f32]) -> f64 {
+    assert_eq!(reference.len(), hypothesis.len());
+    let rows = reference.len() / VOCAB;
+    let mut total = 0.0;
+    for r in 0..rows {
+        let p = log_softmax(&reference[r * VOCAB..(r + 1) * VOCAB]);
+        let q = log_softmax(&hypothesis[r * VOCAB..(r + 1) * VOCAB]);
+        let mut kl = 0.0;
+        for v in 0..VOCAB {
+            kl += p[v].exp() * (p[v] - q[v]);
+        }
+        total += kl;
+    }
+    total / rows as f64
+}
+
+/// Relative L2 error between two logit matrices.
+pub fn logit_rel_err(reference: &[f32], hypothesis: &[f32]) -> f64 {
+    assert_eq!(reference.len(), hypothesis.len());
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..reference.len() {
+        let d = (reference[i] - hypothesis[i]) as f64;
+        num += d * d;
+        den += (reference[i] as f64).powi(2);
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        (num / den).sqrt()
+    }
+}
+
+/// Greedy-token agreement rate between reference and hypothesis logits —
+/// the closest analogue of task "accuracy" the proxy suite can measure.
+pub fn greedy_agreement(reference: &[f32], hypothesis: &[f32]) -> f64 {
+    let rows = reference.len() / VOCAB;
+    let mut agree = 0;
+    for r in 0..rows {
+        let argmax = |xs: &[f32]| {
+            let mut b = 0;
+            for (i, &x) in xs.iter().enumerate() {
+                if x > xs[b] {
+                    b = i;
+                }
+            }
+            b
+        };
+        if argmax(&reference[r * VOCAB..(r + 1) * VOCAB])
+            == argmax(&hypothesis[r * VOCAB..(r + 1) * VOCAB])
+        {
+            agree += 1;
+        }
+    }
+    agree as f64 / rows as f64
+}
+
+/// Aggregated quality of one method on one workload.
+#[derive(Debug, Clone, Default)]
+pub struct QualityReport {
+    pub perplexity: f64,
+    pub kl_vs_fp16: f64,
+    pub rel_err_vs_fp16: f64,
+    pub agreement_vs_fp16: f64,
+    pub prompts: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShiftRng;
+
+    fn rand_logits(rng: &mut XorShiftRng, rows: usize) -> Vec<f32> {
+        (0..rows * VOCAB).map(|_| rng.normal_f32() * 2.0).collect()
+    }
+
+    #[test]
+    fn perplexity_uniform_is_vocab() {
+        let t = 16;
+        let logits = vec![0f32; t * VOCAB];
+        let tokens: Vec<i32> = (0..t as i32).collect();
+        let ppl = perplexity(&logits, &tokens);
+        assert!((ppl - VOCAB as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn perplexity_confident_is_low() {
+        let t = 8;
+        let tokens: Vec<i32> = (0..t as i32).collect();
+        let mut logits = vec![0f32; t * VOCAB];
+        for pos in 0..t - 1 {
+            logits[pos * VOCAB + tokens[pos + 1] as usize] = 50.0;
+        }
+        assert!(perplexity(&logits, &tokens) < 1.001);
+    }
+
+    #[test]
+    fn kl_zero_for_identical() {
+        let mut rng = XorShiftRng::new(1);
+        let l = rand_logits(&mut rng, 4);
+        assert!(logit_kl(&l, &l).abs() < 1e-9);
+        assert_eq!(logit_rel_err(&l, &l), 0.0);
+        assert_eq!(greedy_agreement(&l, &l), 1.0);
+    }
+
+    #[test]
+    fn kl_positive_and_grows_with_noise() {
+        let mut rng = XorShiftRng::new(2);
+        let l = rand_logits(&mut rng, 8);
+        let perturb = |l: &[f32], amp: f32, rng: &mut XorShiftRng| -> Vec<f32> {
+            l.iter().map(|&x| x + rng.normal_f32() * amp).collect()
+        };
+        let small = perturb(&l, 0.05, &mut rng);
+        let large = perturb(&l, 1.0, &mut rng);
+        let kl_s = logit_kl(&l, &small);
+        let kl_l = logit_kl(&l, &large);
+        assert!(kl_s > 0.0);
+        assert!(kl_l > kl_s);
+        assert!(logit_rel_err(&l, &large) > logit_rel_err(&l, &small));
+        assert!(greedy_agreement(&l, &small) >= greedy_agreement(&l, &large));
+    }
+}

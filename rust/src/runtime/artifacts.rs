@@ -1,0 +1,154 @@
+//! Artifact manifest: the contract emitted by `python -m compile.aot`.
+//!
+//! Format (tab-separated, one AOT unit per line):
+//! ```text
+//! #dims	d=64 f=128 v=256 s_max=512 heads=4
+//! expert_int4_t16	expert_int4_t16.hlo.txt	op=expert_ffn;precision=int4;tokens=16
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::kv::parse_kv;
+
+/// One AOT unit: a named HLO-text file plus its metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub meta: HashMap<String, String>,
+}
+
+impl ArtifactMeta {
+    pub fn op(&self) -> &str {
+        self.meta.get("op").map(String::as_str).unwrap_or("")
+    }
+
+    pub fn usize_meta(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.parse().ok())
+    }
+}
+
+/// Parsed manifest: all units + the core dims they were compiled for.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub units: HashMap<String, ArtifactMeta>,
+    pub dims: HashMap<String, String>,
+}
+
+impl Manifest {
+    /// Load `manifest.txt` from the artifact directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut units = HashMap::new();
+        let mut dims = HashMap::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("#dims") {
+                for part in rest.split_whitespace() {
+                    if let Some((k, v)) = part.split_once('=') {
+                        dims.insert(k.to_string(), v.to_string());
+                    }
+                }
+                continue;
+            }
+            if line.starts_with('#') {
+                continue;
+            }
+            let mut cols = line.split('\t');
+            let (name, file, kv) = match (cols.next(), cols.next(), cols.next()) {
+                (Some(n), Some(f), Some(k)) => (n, f, k),
+                _ => bail!("manifest line {} malformed: {line:?}", ln + 1),
+            };
+            units.insert(
+                name.to_string(),
+                ArtifactMeta {
+                    name: name.to_string(),
+                    file: dir.join(file),
+                    meta: parse_kv(kv),
+                },
+            );
+        }
+        if units.is_empty() {
+            bail!("manifest has no units");
+        }
+        Ok(Self { units, dims })
+    }
+
+    /// Sanity-check the manifest dims against this crate's compiled-in dims.
+    pub fn check_dims(&self) -> Result<()> {
+        let want = [
+            ("d", crate::config::D_MODEL),
+            ("f", crate::config::FF_DIM),
+            ("v", crate::config::VOCAB),
+            ("s_max", crate::config::S_MAX),
+            ("heads", crate::config::N_HEADS),
+        ];
+        for (k, v) in want {
+            match self.dims.get(k).and_then(|s| s.parse::<usize>().ok()) {
+                Some(got) if got == v => {}
+                Some(got) => bail!(
+                    "artifact dim mismatch: {k}={got} but crate expects {v}; \
+                     re-run `make artifacts`"
+                ),
+                None => bail!("manifest missing dim {k}"),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.units
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "#dims\td=64 f=128 v=256 s_max=512 heads=4\n\
+        embed_t1\tembed_t1.hlo.txt\top=embed;tokens=1\n\
+        expert_int4_t16\texpert_int4_t16.hlo.txt\top=expert_ffn;precision=int4;tokens=16\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.units.len(), 2);
+        m.check_dims().unwrap();
+        let u = m.get("expert_int4_t16").unwrap();
+        assert_eq!(u.op(), "expert_ffn");
+        assert_eq!(u.usize_meta("tokens"), Some(16));
+        assert_eq!(u.file, Path::new("/a/expert_int4_t16.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_bad_dims() {
+        let text = "#dims\td=32 f=128 v=256 s_max=512 heads=4\nx\tx.hlo\top=x\n";
+        let m = Manifest::parse(text, Path::new("/a")).unwrap();
+        assert!(m.check_dims().is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(Manifest::parse("#dims\td=64\n", Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn missing_unit_is_error() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+}

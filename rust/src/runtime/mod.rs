@@ -1,0 +1,288 @@
+//! PJRT runtime: loads AOT artifacts (HLO text) and executes them on the
+//! CPU client. This is the only module that touches the `xla` crate.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Executables compile lazily on first use and
+//! are cached for the life of the process (one compiled executable per
+//! (op, precision, bucket) — precision switching never recompiles).
+
+pub mod artifacts;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+pub use artifacts::{ArtifactMeta, Manifest};
+
+/// Cumulative runtime counters (observability + perf accounting).
+#[derive(Debug, Default)]
+pub struct RuntimeStats {
+    pub compiles: AtomicU64,
+    pub executions: AtomicU64,
+    pub exec_nanos: AtomicU64,
+}
+
+impl RuntimeStats {
+    pub fn snapshot(&self) -> (u64, u64, f64) {
+        (
+            self.compiles.load(Ordering::Relaxed),
+            self.executions.load(Ordering::Relaxed),
+            self.exec_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+        )
+    }
+}
+
+/// The PJRT runtime: client + manifest + lazy executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    #[allow(dead_code)] // artifact root, kept for diagnostics
+    dir: PathBuf,
+    exes: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    pub stats: RuntimeStats,
+}
+
+impl Runtime {
+    /// Load the artifact directory (checks manifest dims against the crate).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        manifest.check_dims()?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Self {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            exes: Mutex::new(HashMap::new()),
+            stats: RuntimeStats::default(),
+        })
+    }
+
+    /// Default artifact dir: `$DYNAEXQ_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("DYNAEXQ_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(Path::new(&dir))
+    }
+
+    /// Fetch (compiling + caching on first use) an executable by unit name.
+    pub fn executable(
+        &self,
+        name: &str,
+    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self.manifest.get(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.file.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| {
+            anyhow::anyhow!("parsing {}: {e:?}", meta.file.display())
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.client.compile(&comp).map_err(|e| {
+            anyhow::anyhow!("compiling {name}: {e:?}")
+        })?);
+        self.stats.compiles.fetch_add(1, Ordering::Relaxed);
+        self.exes.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a unit with literal args; returns the flattened output tuple
+    /// (units are lowered with `return_tuple=True`).
+    pub fn execute(
+        &self,
+        name: &str,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = args.iter().collect();
+        self.execute_refs(name, &refs)
+    }
+
+    /// Execute with borrowed literal args (avoids moving cached weight
+    /// literals on the hot path).
+    pub fn execute_refs(
+        &self,
+        name: &str,
+        args: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let t0 = std::time::Instant::now();
+        let result = exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} result: {e:?}"))?;
+        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .exec_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        lit.to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {name}: {e:?}"))
+    }
+
+    /// Execute with device-resident buffer args (hot path: weight buffers
+    /// staged once via [`Runtime::buffer_f32`]/[`Runtime::buffer_u8`] skip
+    /// the per-call literal→device transfer).
+    pub fn execute_buffers(
+        &self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let t0 = std::time::Instant::now();
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} result: {e:?}"))?;
+        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .exec_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        lit.to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {name}: {e:?}"))
+    }
+
+    /// Stage an f32 tensor on the device.
+    pub fn buffer_f32(
+        &self,
+        data: &[f32],
+        dims: &[usize],
+    ) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("buffer_f32 {dims:?}: {e:?}"))
+    }
+
+    /// Stage an i32 tensor on the device.
+    pub fn buffer_i32(
+        &self,
+        data: &[i32],
+        dims: &[usize],
+    ) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("buffer_i32 {dims:?}: {e:?}"))
+    }
+
+    /// Stage a packed u8 tensor on the device.
+    ///
+    /// Two crate quirks force the shape of this API:
+    /// * `buffer_from_host_raw_bytes` passes `ElementType as i32` where the
+    ///   C API expects `PrimitiveType` values (U8 → discriminant 5 → S64!),
+    ///   so the raw-bytes path would mis-type the buffer;
+    /// * `buffer_from_host_literal` (the workaround) zero-copies: the
+    ///   buffer aliases the literal's storage, so the literal must stay
+    ///   alive — [`U8Buffer`] owns both.
+    pub fn buffer_u8(&self, data: &[u8], dims: &[usize]) -> Result<U8Buffer> {
+        let idims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        let lit = lit_u8(data, &idims)?;
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .map_err(|e| anyhow::anyhow!("buffer_u8 {dims:?}: {e:?}"))?;
+        Ok(U8Buffer { _keepalive: lit, buf })
+    }
+
+    /// Number of compiled (cached) executables.
+    pub fn compiled_count(&self) -> usize {
+        self.exes.lock().unwrap().len()
+    }
+
+    /// Pre-compile a set of units (warmup; avoids first-request jitter).
+    pub fn warmup<'a, I: IntoIterator<Item = &'a str>>(&self, names: I) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+}
+
+/// A device-staged u8 buffer owning the host literal it may alias.
+pub struct U8Buffer {
+    _keepalive: xla::Literal,
+    pub buf: xla::PjRtBuffer,
+}
+
+impl std::ops::Deref for U8Buffer {
+    type Target = xla::PjRtBuffer;
+
+    fn deref(&self) -> &xla::PjRtBuffer {
+        &self.buf
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal construction / extraction helpers
+// ---------------------------------------------------------------------------
+
+/// f32 literal with shape `dims`.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    debug_assert_eq!(
+        data.len() as i64,
+        dims.iter().product::<i64>(),
+        "shape/data mismatch"
+    );
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("lit_f32 reshape {dims:?}: {e:?}"))
+}
+
+/// i32 literal with shape `dims`.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("lit_i32 reshape {dims:?}: {e:?}"))
+}
+
+/// u8 literal with shape `dims` (packed quantized weights).
+///
+/// `Literal::vec1` lacks a u8 impl, so this goes through the untyped-bytes
+/// constructor with an explicit U8 element type.
+pub fn lit_u8(data: &[u8], dims: &[i64]) -> Result<xla::Literal> {
+    let udims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::U8,
+        &udims,
+        data,
+    )
+    .map_err(|e| anyhow::anyhow!("lit_u8 {dims:?}: {e:?}"))
+}
+
+/// 1-D i32 literal.
+pub fn lit_i32_1d(data: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Extract an f32 vec from a literal.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("to_f32: {e:?}"))
+}
+
+/// Extract an i32 vec from a literal.
+pub fn to_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>()
+        .map_err(|e| anyhow::anyhow!("to_i32: {e:?}"))
+}
+
+/// Stage a literal on the device (caller keeps the literal alive if the
+/// client chooses zero-copy semantics).
+impl Runtime {
+    pub fn buffer_from_literal(
+        &self,
+        lit: &xla::Literal,
+    ) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow::anyhow!("buffer_from_literal: {e:?}"))
+    }
+}

@@ -1,0 +1,308 @@
+//! Residency backends: how each serving method decides expert precision
+//! and what it costs on the critical path.
+//!
+//! The engine is method-agnostic: it asks the backend which precision an
+//! expert executes at *now* and how many seconds of critical-path stall the
+//! resolution incurred (0 for DynaExq and static PTQ; fetch-wait time for
+//! offloading systems when the expert is not resident).
+
+use crate::config::{DeviceConfig, ModelPreset, ServingConfig};
+use crate::coordinator::Coordinator;
+use crate::model::Precision;
+
+/// A serving method's residency behaviour.
+pub trait ResidencyBackend: Send {
+    fn name(&self) -> &'static str;
+
+    /// Router outputs for one iteration at `layer` (one entry per
+    /// (token, k) selection, duplicates included).
+    fn record_routing(&mut self, layer: usize, experts: &[usize]);
+
+    /// Precision the expert executes at plus critical-path stall seconds.
+    fn resolve(&mut self, layer: usize, expert: usize, now_s: f64)
+        -> (Precision, f64);
+
+    /// Iteration boundary; returns an additional forced stall (only the
+    /// blocking-transition ablation returns non-zero).
+    fn tick(&mut self, now_s: f64) -> f64;
+
+    /// Total bytes moved host→device so far (modeled).
+    fn migrated_bytes(&self) -> u64;
+
+    /// Fraction of resolutions served at the high tier (diagnostics).
+    fn hi_fraction(&self) -> f64 {
+        0.0
+    }
+
+    /// Drive all pending residency work to completion and freeze the
+    /// precision map (quality harnesses measure a *converged, pinned*
+    /// configuration, like the paper's per-window pinning). Returns the
+    /// modeled time at which the system is quiescent.
+    fn quiesce(&mut self, now_s: f64) -> f64 {
+        now_s
+    }
+
+    /// Calibration counts, if this backend records them (CountingBackend).
+    fn counts_view(&self) -> Option<&[Vec<u64>]> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DynaExq
+// ---------------------------------------------------------------------------
+
+/// The paper's system: coordinator-driven online precision allocation.
+pub struct DynaExqBackend {
+    pub coord: Coordinator,
+    blocking: bool,
+    resolves: u64,
+    hi_resolves: u64,
+}
+
+impl DynaExqBackend {
+    pub fn new(
+        preset: &ModelPreset,
+        cfg: &ServingConfig,
+        dev: &DeviceConfig,
+    ) -> Result<Self, String> {
+        Ok(Self {
+            coord: Coordinator::new(preset, cfg, dev)?,
+            blocking: cfg.blocking_transitions,
+            resolves: 0,
+            hi_resolves: 0,
+        })
+    }
+
+    pub fn from_coordinator(coord: Coordinator, blocking: bool) -> Self {
+        Self { coord, blocking, resolves: 0, hi_resolves: 0 }
+    }
+}
+
+impl ResidencyBackend for DynaExqBackend {
+    fn name(&self) -> &'static str {
+        "dynaexq"
+    }
+
+    fn record_routing(&mut self, layer: usize, experts: &[usize]) {
+        self.coord.record_routing(layer, experts);
+    }
+
+    fn resolve(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        _now_s: f64,
+    ) -> (Precision, f64) {
+        // Stable-handle resolution: one atomic load, never a stall.
+        let p = self.coord.resolve(layer, expert);
+        self.resolves += 1;
+        if p == self.coord.preset.hi {
+            self.hi_resolves += 1;
+        }
+        (p, 0.0)
+    }
+
+    fn tick(&mut self, now_s: f64) -> f64 {
+        let report = self.coord.tick(now_s);
+        if self.blocking && report.ran {
+            // Ablation A3: synchronize the forward pass with the migration
+            // stream, as a transition design without VER would.
+            self.coord.pipeline.wait_staged();
+            let stall =
+                (self.coord.pipeline.migration_tail() - now_s).max(0.0);
+            self.coord.pipeline.poll(now_s + stall);
+            return stall;
+        }
+        0.0
+    }
+
+    fn migrated_bytes(&self) -> u64 {
+        self.coord
+            .pipeline
+            .stats
+            .migrated_bytes
+            .load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    fn hi_fraction(&self) -> f64 {
+        if self.resolves == 0 {
+            0.0
+        } else {
+            self.hi_resolves as f64 / self.resolves as f64
+        }
+    }
+
+    fn quiesce(&mut self, now_s: f64) -> f64 {
+        // Alternate policy updates and migration-event publication until
+        // the target residency is materialized, then advance far enough
+        // that no further update fires mid-measurement.
+        let interval = self.coord.cfg.update_interval_ms / 1e3;
+        let mut now = now_s;
+        for _ in 0..8 {
+            now += interval + 1e-9;
+            self.coord.tick(now);
+            self.coord.pipeline.wait_staged();
+            now = now.max(self.coord.pipeline.migration_tail());
+            self.coord.pipeline.poll(now);
+        }
+        now
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Static PTQ
+// ---------------------------------------------------------------------------
+
+/// Uniform static quantization: every expert at `precision`, forever.
+/// No transfers, no transitions — the paper's lowest-latency baseline.
+pub struct StaticBackend {
+    precision: Precision,
+}
+
+impl StaticBackend {
+    pub fn new(precision: Precision) -> Self {
+        Self { precision }
+    }
+
+    /// The paper's budget-driven choice: Int4 where it fits, Int2 for the
+    /// 80B model (§5.3).
+    pub fn for_preset(preset: &ModelPreset) -> Self {
+        Self::new(preset.lo)
+    }
+}
+
+impl ResidencyBackend for StaticBackend {
+    fn name(&self) -> &'static str {
+        "static-ptq"
+    }
+
+    fn record_routing(&mut self, _layer: usize, _experts: &[usize]) {}
+
+    fn resolve(
+        &mut self,
+        _layer: usize,
+        _expert: usize,
+        _now_s: f64,
+    ) -> (Precision, f64) {
+        (self.precision, 0.0)
+    }
+
+    fn tick(&mut self, _now_s: f64) -> f64 {
+        0.0
+    }
+
+    fn migrated_bytes(&self) -> u64 {
+        0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Counting (calibration) backend
+// ---------------------------------------------------------------------------
+
+/// Fixed-precision backend that records per-(layer, expert) routing counts
+/// — the offline calibration pass used to build static mixed-precision
+/// maps (baseline A5) and for trace analysis.
+pub struct CountingBackend {
+    precision: Precision,
+    counts: Vec<Vec<u64>>,
+}
+
+impl CountingBackend {
+    pub fn new(n_layers: usize, n_experts: usize, precision: Precision) -> Self {
+        Self { precision, counts: vec![vec![0; n_experts]; n_layers] }
+    }
+
+    /// The recorded traffic counts (consumed after the calibration run).
+    pub fn counts(&self) -> &[Vec<u64>] {
+        &self.counts
+    }
+}
+
+impl ResidencyBackend for CountingBackend {
+    fn name(&self) -> &'static str {
+        "counting"
+    }
+
+    fn record_routing(&mut self, layer: usize, experts: &[usize]) {
+        let n = self.counts.len();
+        let row = &mut self.counts[layer % n];
+        for &e in experts {
+            row[e] += 1;
+        }
+    }
+
+    fn resolve(
+        &mut self,
+        _layer: usize,
+        _expert: usize,
+        _now_s: f64,
+    ) -> (Precision, f64) {
+        (self.precision, 0.0)
+    }
+
+    fn tick(&mut self, _now_s: f64) -> f64 {
+        0.0
+    }
+
+    fn migrated_bytes(&self) -> u64 {
+        0
+    }
+
+    fn counts_view(&self) -> Option<&[Vec<u64>]> {
+        Some(&self.counts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counting_backend_accumulates() {
+        let mut b = CountingBackend::new(2, 4, Precision::Fp16);
+        b.record_routing(0, &[1, 1, 3]);
+        b.record_routing(1, &[0]);
+        assert_eq!(b.counts()[0], vec![0, 2, 0, 1]);
+        assert_eq!(b.counts()[1], vec![1, 0, 0, 0]);
+        assert_eq!(b.resolve(0, 0, 0.0).0, Precision::Fp16);
+    }
+
+    #[test]
+    fn static_backend_never_stalls_or_migrates() {
+        let mut b = StaticBackend::for_preset(&ModelPreset::qwen30b_sim());
+        for i in 0..100 {
+            let (p, stall) = b.resolve(i % 4, i, i as f64);
+            assert_eq!(p, Precision::Int4);
+            assert_eq!(stall, 0.0);
+        }
+        assert_eq!(b.tick(5.0), 0.0);
+        assert_eq!(b.migrated_bytes(), 0);
+    }
+
+    #[test]
+    fn static_80b_uses_int2() {
+        let b = StaticBackend::for_preset(&ModelPreset::qwen80b_sim());
+        assert_eq!(b.precision, Precision::Int2);
+    }
+
+    #[test]
+    fn dynaexq_backend_promotes_hot_experts() {
+        let preset = ModelPreset::phi_sim();
+        let cfg = ServingConfig::default();
+        let dev = DeviceConfig::default();
+        let mut b = DynaExqBackend::new(&preset, &cfg, &dev).unwrap();
+        for _ in 0..200 {
+            b.record_routing(0, &[1, 2]);
+        }
+        assert_eq!(b.tick(1.0), 0.0, "non-blocking by default");
+        b.coord.pipeline.wait_staged();
+        b.tick(100.0);
+        let (p, stall) = b.resolve(0, 1, 100.0);
+        assert_eq!(p, Precision::Fp16);
+        assert_eq!(stall, 0.0);
+        assert!(b.hi_fraction() > 0.0);
+        assert!(b.migrated_bytes() > 0);
+    }
+}

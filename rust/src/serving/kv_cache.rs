@@ -1,0 +1,132 @@
+//! Per-request KV cache for the numeric engine.
+//!
+//! Each sequence owns `[S_MAX, D]` K and V buffers per layer; the decode
+//! executable consumes/produces padded `[B, S_MAX, D]` snapshots that the
+//! batch assembler gathers from and scatters back to these buffers. In the
+//! budget model this storage lives inside `M_fixed` (§3.3), disjoint from
+//! the expert pools.
+
+use crate::config::{D_MODEL, S_MAX};
+
+/// KV state of one sequence.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    n_layers: usize,
+    /// Per layer, row-major `[S_MAX, D]`.
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    len: usize,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize) -> Self {
+        Self {
+            n_layers,
+            k: (0..n_layers).map(|_| vec![0.0; S_MAX * D_MODEL]).collect(),
+            v: (0..n_layers).map(|_| vec![0.0; S_MAX * D_MODEL]).collect(),
+            len: 0,
+        }
+    }
+
+    /// Current context length (tokens with valid K/V rows).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    /// Install prefill K/V (`rows` tokens, row-major `[rows, D]`) at layer.
+    pub fn write_prefill(&mut self, layer: usize, k: &[f32], v: &[f32], rows: usize) {
+        assert!(rows <= S_MAX, "prompt exceeds S_MAX");
+        assert!(k.len() >= rows * D_MODEL && v.len() >= rows * D_MODEL);
+        self.k[layer][..rows * D_MODEL].copy_from_slice(&k[..rows * D_MODEL]);
+        self.v[layer][..rows * D_MODEL].copy_from_slice(&v[..rows * D_MODEL]);
+    }
+
+    /// Mark the context length after prefill (call once per request).
+    pub fn set_len(&mut self, len: usize) {
+        assert!(len <= S_MAX);
+        self.len = len;
+    }
+
+    /// Copy this sequence's K/V of `layer` into row `row` of a padded
+    /// batch snapshot `[batch, S_MAX, D]`.
+    pub fn gather_into(&self, layer: usize, snapshot_k: &mut [f32], snapshot_v: &mut [f32], row: usize) {
+        let stride = S_MAX * D_MODEL;
+        snapshot_k[row * stride..(row + 1) * stride]
+            .copy_from_slice(&self.k[layer]);
+        snapshot_v[row * stride..(row + 1) * stride]
+            .copy_from_slice(&self.v[layer]);
+    }
+
+    /// Write back row `row` of an updated batch snapshot.
+    pub fn scatter_from(&mut self, layer: usize, snapshot_k: &[f32], snapshot_v: &[f32], row: usize) {
+        let stride = S_MAX * D_MODEL;
+        self.k[layer]
+            .copy_from_slice(&snapshot_k[row * stride..(row + 1) * stride]);
+        self.v[layer]
+            .copy_from_slice(&snapshot_v[row * stride..(row + 1) * stride]);
+    }
+
+    /// The decode step appended one token (after all layers scattered).
+    pub fn advance(&mut self) {
+        assert!(self.len < S_MAX, "KV cache full");
+        self.len += 1;
+    }
+
+    /// Raw K rows (tests).
+    pub fn k_row(&self, layer: usize, pos: usize) -> &[f32] {
+        &self.k[layer][pos * D_MODEL..(pos + 1) * D_MODEL]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_rows_land_in_place() {
+        let mut c = KvCache::new(2);
+        let k: Vec<f32> = (0..3 * D_MODEL).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..3 * D_MODEL).map(|i| -(i as f32)).collect();
+        c.write_prefill(1, &k, &v, 3);
+        c.set_len(3);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.k_row(1, 2)[0], (2 * D_MODEL) as f32);
+        assert_eq!(c.k_row(0, 2)[0], 0.0, "other layers untouched");
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut c = KvCache::new(1);
+        let k: Vec<f32> = (0..D_MODEL).map(|i| i as f32).collect();
+        c.write_prefill(0, &k, &k, 1);
+        c.set_len(1);
+        let stride = S_MAX * D_MODEL;
+        let mut snap_k = vec![0.0; 2 * stride];
+        let mut snap_v = vec![0.0; 2 * stride];
+        c.gather_into(0, &mut snap_k, &mut snap_v, 1);
+        assert_eq!(snap_k[stride], 0.0);
+        assert_eq!(snap_k[stride + 1], 1.0);
+        // mutate + scatter back
+        snap_k[stride] = 99.0;
+        c.scatter_from(0, &snap_k, &snap_v, 1);
+        assert_eq!(c.k_row(0, 0)[0], 99.0);
+        c.advance();
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "S_MAX")]
+    fn overlong_prefill_rejected() {
+        let mut c = KvCache::new(1);
+        let k = vec![0.0; (S_MAX + 1) * D_MODEL];
+        c.write_prefill(0, &k, &k, S_MAX + 1);
+    }
+}

@@ -1,0 +1,23 @@
+//! Serving: the request loop, batcher, KV cache, and the two engines —
+//!
+//! * [`engine::Engine`] — the **modeled** serving engine: full continuous-
+//!   batching loop over the device cost model (paper-scale dims), used by
+//!   every performance experiment (TTFT/TPOP/latency/throughput sweeps).
+//!   Routing comes from the workload sampler; numerics are not executed.
+//! * [`numeric::NumericEngine`] — the **numeric** engine: real PJRT
+//!   execution of the small simulated model (prefill + decode, KV cache,
+//!   expert gather/scatter), used by every quality experiment and the
+//!   end-to-end example. Timing is *also* tracked against the cost model so
+//!   quality runs report both.
+//!
+//! Both engines drive residency through the same [`backend::ResidencyBackend`]
+//! abstraction, which is where DynaExq and the two baselines plug in.
+
+pub mod backend;
+pub mod engine;
+pub mod kv_cache;
+pub mod numeric;
+
+pub use backend::ResidencyBackend;
+pub use engine::{Engine, EngineConfig};
+pub use numeric::NumericEngine;

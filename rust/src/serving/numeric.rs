@@ -1,0 +1,537 @@
+//! The numeric engine: real PJRT execution of the simulated MoE model.
+//!
+//! Drives prefill + batched decode through the AOT executables (embed,
+//! attention, router, per-precision expert FFN, lm_head), with the rust
+//! side owning everything the paper's coordinator owns: routing dispatch,
+//! per-expert gather/scatter, residual combine, KV-cache management, and —
+//! through the [`ResidencyBackend`] — the precision each expert executes
+//! at. Used by every quality experiment and the end-to-end example.
+//!
+//! The modeled clock still advances (via the cost model at paper-scale
+//! dims) so the backend's time-based policies (update intervals, migration
+//! completion events) behave exactly as in the modeled engine.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{
+    ModelPreset, BATCH_BUCKETS, D_MODEL, EXPERT_TOKEN_BUCKETS, FF_DIM, S_MAX,
+    TOKEN_BUCKETS, VOCAB,
+};
+use crate::model::{ModelWeights, Precision};
+use crate::runtime::{to_f32, to_i32, Runtime};
+use crate::sim::CostModel;
+use crate::util::next_bucket;
+
+use super::backend::ResidencyBackend;
+use super::kv_cache::KvCache;
+
+/// One sequence being decoded.
+pub struct SeqState {
+    pub kv: KvCache,
+    pub last_token: i32,
+    pub tag: u64,
+    pub generated: Vec<i32>,
+}
+
+/// Output of a full generate call.
+pub struct GenOutput {
+    /// Greedy-decoded tokens.
+    pub tokens: Vec<i32>,
+    /// Teacher-forced logits over the prompt, row-major `[T, VOCAB]`.
+    pub prompt_logits: Vec<f32>,
+}
+
+/// Cached device-resident weight buffers for one expert at one tier
+/// (staged once; per-call uploads carry only activations — the perf-pass
+/// optimization recorded in EXPERIMENTS.md §Perf).
+enum ExpertLits {
+    Fp([xla::PjRtBuffer; 3]),
+    /// packed-weight/scale triples; U8Buffer keeps the aliased host
+    /// literal alive (see runtime::buffer_u8)
+    Quant(
+        crate::runtime::U8Buffer,
+        xla::PjRtBuffer,
+        crate::runtime::U8Buffer,
+        xla::PjRtBuffer,
+        crate::runtime::U8Buffer,
+        xla::PjRtBuffer,
+    ),
+}
+
+/// The engine.
+pub struct NumericEngine {
+    rt: Arc<Runtime>,
+    pub weights: Arc<ModelWeights>,
+    pub backend: Box<dyn ResidencyBackend>,
+    pub preset: ModelPreset,
+    cost: CostModel,
+    clock_s: f64,
+    // cached device-resident weights ------------------------------------
+    embed_table: xla::PjRtBuffer,
+    final_g: xla::PjRtBuffer,
+    wout: xla::PjRtBuffer,
+    layer_lits: Vec<LayerLits>,
+    expert_lits: HashMap<(usize, usize, Precision), ExpertLits>,
+    shared_lits: Vec<Vec<[xla::PjRtBuffer; 3]>>,
+}
+
+struct LayerLits {
+    attn_g: xla::PjRtBuffer,
+    wq: xla::PjRtBuffer,
+    wk: xla::PjRtBuffer,
+    wv: xla::PjRtBuffer,
+    wo: xla::PjRtBuffer,
+    moe_g: xla::PjRtBuffer,
+    wr: xla::PjRtBuffer,
+}
+
+impl NumericEngine {
+    /// Build the engine. `backend` must be configured for the *executed*
+    /// layer count (`preset.executed_scale()` when using a Coordinator).
+    pub fn new(
+        rt: Arc<Runtime>,
+        weights: Arc<ModelWeights>,
+        backend: Box<dyn ResidencyBackend>,
+    ) -> Result<Self> {
+        let preset = weights.preset.clone();
+        let d = D_MODEL;
+        let layer_lits = weights
+            .layers
+            .iter()
+            .map(|l| -> Result<LayerLits> {
+                Ok(LayerLits {
+                    attn_g: rt.buffer_f32(&l.attn_g, &[d])?,
+                    wq: rt.buffer_f32(&l.wq, &[d, d])?,
+                    wk: rt.buffer_f32(&l.wk, &[d, d])?,
+                    wv: rt.buffer_f32(&l.wv, &[d, d])?,
+                    wo: rt.buffer_f32(&l.wo, &[d, d])?,
+                    moe_g: rt.buffer_f32(&l.moe_g, &[d])?,
+                    wr: rt.buffer_f32(&l.wr, &[d, preset.n_experts])?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let shared_lits = weights
+            .layers
+            .iter()
+            .map(|l| {
+                l.shared
+                    .iter()
+                    .map(|e| {
+                        Ok([
+                            rt.buffer_f32(&e.w1, &[d, FF_DIM])?,
+                            rt.buffer_f32(&e.w3, &[d, FF_DIM])?,
+                            rt.buffer_f32(&e.w2, &[FF_DIM, d])?,
+                        ])
+                    })
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let cost = CostModel::new(&preset, crate::config::DeviceConfig::default());
+        Ok(Self {
+            embed_table: rt.buffer_f32(&weights.embed, &[VOCAB, d])?,
+            final_g: rt.buffer_f32(&weights.final_g, &[d])?,
+            wout: rt.buffer_f32(&weights.wout, &[d, VOCAB])?,
+            layer_lits,
+            expert_lits: HashMap::new(),
+            shared_lits,
+            rt,
+            weights,
+            backend,
+            preset,
+            cost,
+            clock_s: 0.0,
+        })
+    }
+
+    pub fn now(&self) -> f64 {
+        self.clock_s
+    }
+
+    /// Converge + freeze the backend's residency map (quality harnesses
+    /// measure a pinned configuration, mirroring the paper's window
+    /// pinning). Advances the modeled clock to the quiescent point.
+    pub fn quiesce(&mut self) {
+        self.clock_s = self.backend.quiesce(self.clock_s);
+    }
+
+    /// Calibration counts, when driven by a `CountingBackend`.
+    pub fn backend_counts(&self) -> Option<&[Vec<u64>]> {
+        self.backend.counts_view()
+    }
+
+    fn expert_lit(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        p: Precision,
+    ) -> Result<&ExpertLits> {
+        let key = (layer, expert, p);
+        if !self.expert_lits.contains_key(&key) {
+            let e = &self.weights.layers[layer].experts[expert];
+            let d = D_MODEL;
+            let f = FF_DIM;
+            let lits = match p {
+                Precision::Fp16 => ExpertLits::Fp([
+                    self.rt.buffer_f32(&e.w1, &[d, f])?,
+                    self.rt.buffer_f32(&e.w3, &[d, f])?,
+                    self.rt.buffer_f32(&e.w2, &[f, d])?,
+                ]),
+                _ => {
+                    let q = e.packed(p);
+                    let pk = p.pack();
+                    ExpertLits::Quant(
+                        self.rt.buffer_u8(&q[0].data, &[d / pk, f])?,
+                        self.rt.buffer_f32(&q[0].scales, &[f])?,
+                        self.rt.buffer_u8(&q[1].data, &[d / pk, f])?,
+                        self.rt.buffer_f32(&q[1].scales, &[f])?,
+                        self.rt.buffer_u8(&q[2].data, &[f / pk, d])?,
+                        self.rt.buffer_f32(&q[2].scales, &[d])?,
+                    )
+                }
+            };
+            self.expert_lits.insert(key, lits);
+        }
+        Ok(self.expert_lits.get(&key).unwrap())
+    }
+
+    /// Run one expert FFN over `rows` (flat `[n, D]`); returns `[n, D]`.
+    fn run_expert_rows(
+        &mut self,
+        layer: usize,
+        expert: ExpertRef,
+        p: Precision,
+        rows: &[f32],
+        n: usize,
+    ) -> Result<Vec<f32>> {
+        debug_assert_eq!(rows.len(), n * D_MODEL);
+        let mut out = Vec::with_capacity(n * D_MODEL);
+        let max_b = *EXPERT_TOKEN_BUCKETS.last().unwrap();
+        let mut start = 0;
+        while start < n {
+            let chunk = (n - start).min(max_b);
+            let tb = next_bucket(EXPERT_TOKEN_BUCKETS, chunk);
+            let mut x = vec![0f32; tb * D_MODEL];
+            x[..chunk * D_MODEL].copy_from_slice(
+                &rows[start * D_MODEL..(start + chunk) * D_MODEL],
+            );
+            let xl = self.rt.buffer_f32(&x, &[tb, D_MODEL])?;
+            let name = format!("expert_{}_t{tb}", p.tag());
+            let result = match expert {
+                ExpertRef::Routed(e) => {
+                    // split borrows: stage buffers without holding &mut
+                    self.expert_lit(layer, e, p)?;
+                    let lits = self.expert_lits.get(&(layer, e, p)).unwrap();
+                    match lits {
+                        ExpertLits::Fp([w1, w3, w2]) => self
+                            .rt
+                            .execute_buffers(&name, &[&xl, w1, w3, w2])?,
+                        ExpertLits::Quant(w1, s1, w3, s3, w2, s2) => {
+                            self.rt.execute_buffers(
+                                &name,
+                                &[&xl, w1, s1, w3, s3, w2, s2],
+                            )?
+                        }
+                    }
+                }
+                ExpertRef::Shared(s) => {
+                    let w = &self.shared_lits[layer][s];
+                    self.rt.execute_buffers(
+                        &format!("expert_fp16_t{tb}"),
+                        &[&xl, &w[0], &w[1], &w[2]],
+                    )?
+                }
+            };
+            let y = to_f32(&result[0])?;
+            out.extend_from_slice(&y[..chunk * D_MODEL]);
+            start += chunk;
+        }
+        Ok(out)
+    }
+
+    /// MoE block: route, dispatch to experts (through the backend's
+    /// precision decisions), combine. `x` is the padded `[tb, D]` hidden
+    /// state *after* attention; only the first `t` rows are real.
+    fn moe_block(
+        &mut self,
+        layer: usize,
+        x: &mut [f32],
+        tb: usize,
+        t: usize,
+        tag: u64,
+    ) -> Result<()> {
+        let ll = &self.layer_lits[layer];
+        let xl = self.rt.buffer_f32(&x[..tb * D_MODEL], &[tb, D_MODEL])?;
+        let name =
+            format!("router_{}_t{tb}", self.preset.router_key());
+        let out = self
+            .rt
+            .execute_buffers(&name, &[&xl, &ll.moe_g, &ll.wr])?;
+        let xn = to_f32(&out[0])?;
+        let idx = to_i32(&out[1])?;
+        let wts = to_f32(&out[2])?;
+        let k = self.preset.top_k;
+
+        // Group real-token rows by expert.
+        let mut groups: HashMap<usize, Vec<(usize, f32)>> = HashMap::new();
+        let mut routed = Vec::with_capacity(t * k);
+        for row in 0..t {
+            for kk in 0..k {
+                let e = idx[row * k + kk] as usize;
+                let w = wts[row * k + kk];
+                groups.entry(e).or_default().push((row, w));
+                routed.push(e);
+            }
+        }
+        self.backend.record_routing(layer, &routed);
+        let _ = tag;
+
+        let mut expert_ids: Vec<usize> = groups.keys().copied().collect();
+        expert_ids.sort_unstable(); // determinism
+        for e in expert_ids {
+            let items = &groups[&e];
+            let (prec, stall) = self.backend.resolve(layer, e, self.clock_s);
+            self.clock_s += stall;
+            self.clock_s += self.cost.expert_time(items.len(), prec);
+            let mut rows = Vec::with_capacity(items.len() * D_MODEL);
+            for &(row, _) in items {
+                rows.extend_from_slice(&xn[row * D_MODEL..(row + 1) * D_MODEL]);
+            }
+            let y = self.run_expert_rows(
+                layer,
+                ExpertRef::Routed(e),
+                prec,
+                &rows,
+                items.len(),
+            )?;
+            for (i, &(row, w)) in items.iter().enumerate() {
+                for dcol in 0..D_MODEL {
+                    x[row * D_MODEL + dcol] += w * y[i * D_MODEL + dcol];
+                }
+            }
+        }
+
+        // Shared experts: every token, pinned hi tier.
+        for s in 0..self.preset.n_shared {
+            self.clock_s += self.cost.expert_time(t, self.preset.hi);
+            let y = self.run_expert_rows(
+                layer,
+                ExpertRef::Shared(s),
+                Precision::Fp16,
+                &xn[..t * D_MODEL],
+                t,
+            )?;
+            for row in 0..t {
+                for dcol in 0..D_MODEL {
+                    x[row * D_MODEL + dcol] += y[row * D_MODEL + dcol];
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Prefill one prompt; returns (kv, prompt logits `[T, VOCAB]`).
+    pub fn prefill(
+        &mut self,
+        prompt: &[i32],
+        tag: u64,
+    ) -> Result<(KvCache, Vec<f32>)> {
+        let t = prompt.len();
+        if t < 4 {
+            bail!("prompt must be ≥ 4 tokens (prefill buckets)");
+        }
+        let max_t = *TOKEN_BUCKETS.last().unwrap();
+        if t > max_t {
+            bail!("numeric prefill capped at {max_t} tokens (got {t})");
+        }
+        let tb = next_bucket(TOKEN_BUCKETS, t);
+        let mut tokens = prompt.to_vec();
+        tokens.resize(tb, 0);
+
+        self.clock_s += self.cost.embed_time(t);
+        let tok_buf = self.rt.buffer_i32(&tokens, &[tb])?;
+        let out = self.rt.execute_buffers(
+            &format!("embed_t{tb}"),
+            &[&tok_buf, &self.embed_table],
+        )?;
+        let mut x = to_f32(&out[0])?;
+
+        let mut kv = KvCache::new(self.preset.n_layers);
+        for layer in 0..self.preset.n_layers {
+            self.clock_s += self.cost.attn_prefill_time(t)
+                + self.cost.router_time(t);
+            let ll = &self.layer_lits[layer];
+            let xl = self.rt.buffer_f32(&x, &[tb, D_MODEL])?;
+            let out = self.rt.execute_buffers(
+                &format!("attn_prefill_t{tb}"),
+                &[&xl, &ll.attn_g, &ll.wq, &ll.wk, &ll.wv, &ll.wo],
+            )?;
+            x = to_f32(&out[0])?;
+            let kx = to_f32(&out[1])?;
+            let vx = to_f32(&out[2])?;
+            kv.write_prefill(layer, &kx, &vx, t);
+            self.moe_block(layer, &mut x, tb, t, tag)?;
+        }
+        kv.set_len(t);
+
+        self.clock_s += self.cost.lm_head_time(t);
+        let xb = self.rt.buffer_f32(&x, &[tb, D_MODEL])?;
+        let out = self.rt.execute_buffers(
+            &format!("lm_head_t{tb}"),
+            &[&xb, &self.final_g, &self.wout],
+        )?;
+        let logits = to_f32(&out[0])?;
+        let stall = self.backend.tick(self.clock_s);
+        self.clock_s += stall;
+        Ok((kv, logits[..t * VOCAB].to_vec()))
+    }
+
+    /// One lockstep decode step over up to 8 sequences; appends one token
+    /// to each.
+    pub fn decode_step(&mut self, seqs: &mut [SeqState]) -> Result<Vec<i32>> {
+        let b = seqs.len();
+        if b == 0 {
+            return Ok(Vec::new());
+        }
+        let max_b = *BATCH_BUCKETS.last().unwrap();
+        if b > max_b {
+            bail!("decode batch capped at {max_b} (got {b})");
+        }
+        let bb = next_bucket(BATCH_BUCKETS, b);
+        let tb = next_bucket(TOKEN_BUCKETS, b);
+
+        // Embedding of each sequence's last token.
+        let mut tokens: Vec<i32> = seqs.iter().map(|s| s.last_token).collect();
+        tokens.resize(tb, 0);
+        self.clock_s += self.cost.embed_time(b);
+        let tok_buf = self.rt.buffer_i32(&tokens, &[tb])?;
+        let out = self.rt.execute_buffers(
+            &format!("embed_t{tb}"),
+            &[&tok_buf, &self.embed_table],
+        )?;
+        let xe = to_f32(&out[0])?;
+        let mut xb = vec![0f32; bb * D_MODEL];
+        xb[..b * D_MODEL].copy_from_slice(&xe[..b * D_MODEL]);
+
+        let stride = S_MAX * D_MODEL;
+        let mut pos: Vec<i32> = seqs.iter().map(|s| s.kv.len() as i32).collect();
+        pos.resize(bb, 0);
+        let mean_ctx =
+            seqs.iter().map(|s| s.kv.len()).sum::<usize>() / b;
+
+        let mut snap_k = vec![0f32; bb * stride];
+        let mut snap_v = vec![0f32; bb * stride];
+        for layer in 0..self.preset.n_layers {
+            self.clock_s += self.cost.attn_decode_time(b, mean_ctx)
+                + self.cost.router_time(b);
+            snap_k[b * stride..].fill(0.0);
+            snap_v[b * stride..].fill(0.0);
+            for (row, s) in seqs.iter().enumerate() {
+                s.kv.gather_into(layer, &mut snap_k, &mut snap_v, row);
+            }
+            let ll = &self.layer_lits[layer];
+            let dims3 = [bb, S_MAX, D_MODEL];
+            let xbb = self.rt.buffer_f32(&xb, &[bb, D_MODEL])?;
+            let kb = self.rt.buffer_f32(&snap_k, &dims3)?;
+            let vb = self.rt.buffer_f32(&snap_v, &dims3)?;
+            let pb = self.rt.buffer_i32(&pos, &[bb])?;
+            let out = self.rt.execute_buffers(
+                &format!("attn_decode_b{bb}"),
+                &[&xbb, &ll.attn_g, &ll.wq, &ll.wk, &ll.wv, &ll.wo, &kb, &vb, &pb],
+            )?;
+            xb = to_f32(&out[0])?;
+            let new_k = to_f32(&out[1])?;
+            let new_v = to_f32(&out[2])?;
+            for (row, s) in seqs.iter_mut().enumerate() {
+                s.kv.scatter_from(layer, &new_k, &new_v, row);
+            }
+            // MoE over the batch rows, padded to the token bucket.
+            let mut xt = vec![0f32; tb * D_MODEL];
+            xt[..b * D_MODEL].copy_from_slice(&xb[..b * D_MODEL]);
+            // all rows share no tag; use per-seq tags via majority — routing
+            // dispatch happens per row anyway, tag only matters for modeled
+            // sampling, which the numeric engine does not use.
+            self.moe_block(layer, &mut xt, tb, b, seqs[0].tag)?;
+            xb[..b * D_MODEL].copy_from_slice(&xt[..b * D_MODEL]);
+        }
+        for s in seqs.iter_mut() {
+            s.kv.advance();
+        }
+
+        self.clock_s += self.cost.lm_head_time(b);
+        let mut xt = vec![0f32; tb * D_MODEL];
+        xt[..b * D_MODEL].copy_from_slice(&xb[..b * D_MODEL]);
+        let xtb = self.rt.buffer_f32(&xt, &[tb, D_MODEL])?;
+        let out = self.rt.execute_buffers(
+            &format!("lm_head_t{tb}"),
+            &[&xtb, &self.final_g, &self.wout],
+        )?;
+        let logits = to_f32(&out[0])?;
+        let mut next = Vec::with_capacity(b);
+        for (row, s) in seqs.iter_mut().enumerate() {
+            let slice = &logits[row * VOCAB..(row + 1) * VOCAB];
+            let tok = argmax(slice) as i32;
+            s.last_token = tok;
+            s.generated.push(tok);
+            next.push(tok);
+        }
+        let stall = self.backend.tick(self.clock_s);
+        self.clock_s += stall;
+        Ok(next)
+    }
+
+    /// Full request: prefill + greedy decode.
+    pub fn generate(
+        &mut self,
+        prompt: &[i32],
+        output_len: usize,
+        tag: u64,
+    ) -> Result<GenOutput> {
+        let (kv, prompt_logits) = self.prefill(prompt, tag)?;
+        let last = *prompt.last().context("empty prompt")?;
+        let mut seqs = vec![SeqState {
+            kv,
+            last_token: last,
+            tag,
+            generated: Vec::new(),
+        }];
+        for _ in 0..output_len {
+            self.decode_step(&mut seqs)?;
+        }
+        Ok(GenOutput {
+            tokens: seqs.pop().unwrap().generated,
+            prompt_logits,
+        })
+    }
+}
+
+/// Which expert weights to run.
+#[derive(Clone, Copy, Debug)]
+enum ExpertRef {
+    Routed(usize),
+    Shared(usize),
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[1.0, 5.0, 3.0]), 1);
+        assert_eq!(argmax(&[-1.0, -5.0]), 0);
+        assert_eq!(argmax(&[2.0, 2.0]), 0, "first wins ties");
+    }
+}

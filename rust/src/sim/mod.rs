@@ -1,0 +1,20 @@
+//! Device simulation: the A6000-class GPU substituted by a cost model.
+//!
+//! The paper's performance phenomena — transfer stalls, overlap windows,
+//! PCIe saturation, migration/compute contention — are functions of bytes,
+//! bandwidths and stream overlap. This module models exactly those:
+//!
+//! * [`CostModel`] — per-op compute times and host↔device transfer times at
+//!   the **paper-scale logical dims** (Qwen3-30B/80B, Phi-3.5-MoE, Table 3),
+//!   so modeled latencies have the paper's shape;
+//! * [`Stream`] — an ordered timeline (compute stream vs. migration stream)
+//!   with event-based completion, the CUDA-stream analogue;
+//! * numerics still execute for real via the PJRT runtime (quality is
+//!   *measured*, never modeled) — see DESIGN.md §2 for the substitution
+//!   argument.
+
+pub mod cost;
+pub mod stream;
+
+pub use cost::{CostModel, LogicalDims};
+pub use stream::{Clock, Stream};

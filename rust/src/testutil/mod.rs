@@ -1,0 +1,4 @@
+//! Test support: a seeded property-test driver (proptest is not in the
+//! offline crate set) and shared fixtures.
+
+pub mod prop;

@@ -1,0 +1,81 @@
+//! Minimal property-test driver.
+//!
+//! `proptest` is unavailable offline; this driver covers the part that
+//! matters for invariant testing — many randomized cases from a
+//! deterministic per-property seed, with the failing case's seed printed so
+//! a failure reproduces exactly (`Prop::with_seed`). No shrinking.
+
+use crate::util::XorShiftRng;
+
+/// A named property; the name hashes into the base seed so adding a
+/// property never perturbs the cases another property sees.
+pub struct Prop {
+    name: String,
+    base_seed: u64,
+}
+
+impl Prop {
+    pub fn new(name: &str) -> Self {
+        // FNV-1a over the name → stable per-property seed
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in name.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        // Env override lets CI diversify runs: DYNAEXQ_PROP_SEED=n
+        let extra = std::env::var("DYNAEXQ_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse::<u64>().ok())
+            .unwrap_or(0);
+        Self { name: name.to_string(), base_seed: h ^ extra }
+    }
+
+    /// Run `cases` randomized cases. On panic, the case seed is printed.
+    pub fn run<F: FnMut(&mut XorShiftRng)>(&mut self, cases: u32, mut f: F) {
+        for i in 0..cases {
+            let seed = self.base_seed.wrapping_add(i as u64);
+            let mut rng = XorShiftRng::new(seed);
+            let result = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| f(&mut rng)),
+            );
+            if let Err(e) = result {
+                eprintln!(
+                    "property '{}' failed at case {i} (seed {seed}); \
+                     reproduce with Prop::with_seed({seed})",
+                    self.name
+                );
+                std::panic::resume_unwind(e);
+            }
+        }
+    }
+
+    /// Re-run a single failing case by seed.
+    pub fn with_seed<F: FnOnce(&mut XorShiftRng)>(seed: u64, f: F) {
+        let mut rng = XorShiftRng::new(seed);
+        f(&mut rng);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut n = 0;
+        Prop::new("counter").run(17, |_| n += 1);
+        assert_eq!(n, 17);
+    }
+
+    #[test]
+    fn deterministic_per_name() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        Prop::new("same").run(5, |r| a.push(r.next_u64()));
+        Prop::new("same").run(5, |r| b.push(r.next_u64()));
+        assert_eq!(a, b);
+        let mut c = Vec::new();
+        Prop::new("different").run(5, |r| c.push(r.next_u64()));
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,82 @@
+//! Small shared utilities: deterministic RNG, bucket selection, math.
+
+pub mod rng;
+
+pub use rng::XorShiftRng;
+
+/// Round `n` up to the smallest bucket ≥ `n`; falls back to the largest
+/// bucket (callers must then split the work — see the engine's chunking).
+pub fn next_bucket(buckets: &[usize], n: usize) -> usize {
+    debug_assert!(!buckets.is_empty());
+    for &b in buckets {
+        if b >= n {
+            return b;
+        }
+    }
+    *buckets.last().unwrap()
+}
+
+/// Integer ceil-div.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Mean of an f64 slice (0.0 when empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// p-th percentile (nearest-rank: `⌈p/100·n⌉`-th smallest) of an unsorted
+/// slice; 0.0 when empty.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+    v[rank.clamp(1, v.len()) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        let b = [1, 4, 16, 64];
+        assert_eq!(next_bucket(&b, 1), 1);
+        assert_eq!(next_bucket(&b, 2), 4);
+        assert_eq!(next_bucket(&b, 16), 16);
+        assert_eq!(next_bucket(&b, 17), 64);
+        assert_eq!(next_bucket(&b, 1000), 64); // caller chunks
+    }
+
+    #[test]
+    fn ceil_div_works() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 99.0), 99.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn mean_empty() {
+        assert_eq!(mean(&[]), 0.0);
+        assert!((mean(&[1.0, 2.0, 3.0]) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,26 @@
+//! Workload synthesis: token streams for the numeric engine and routing
+//! traces for the modeled engine.
+//!
+//! The paper's three evaluation workloads (WikiText = text, GSM8K = math,
+//! HumanEval = code) are substituted by three profiles with:
+//!
+//! * **distinct byte distributions** — so the numeric engine's *real*
+//!   router develops workload-specific hot sets organically;
+//! * **distinct expert-popularity permutations** — so the modeled engine's
+//!   sampled routing reproduces the paper's long-horizon skew (Fig. 2:
+//!   heavy-tailed cumulative counts, disjoint top-10 across workloads);
+//! * **request-local routing correlation** — tokens within one request
+//!   prefer a request-specific rotation of the popularity ranking, which
+//!   reproduces densification: one prompt touches few experts repeatedly,
+//!   while a batch of independent requests unions into a much larger
+//!   working set (Tables 1–2).
+
+pub mod profile;
+pub mod request;
+pub mod sampler;
+pub mod traces;
+
+pub use profile::WorkloadProfile;
+pub use request::{Request, RequestGenerator};
+pub use sampler::RoutingSampler;
+pub use traces::{Trace, TraceEvent};

@@ -1,0 +1,161 @@
+//! Workload profiles (text / math / code analogues).
+
+use crate::util::XorShiftRng;
+
+/// One synthetic workload.
+#[derive(Clone, Debug)]
+pub struct WorkloadProfile {
+    pub name: &'static str,
+    /// Identity seed: derives per-layer expert-popularity permutations and
+    /// the byte distribution.
+    pub seed: u64,
+    /// Zipf exponent of the *global* (long-horizon) expert popularity.
+    pub zipf_global: f64,
+    /// Zipf exponent of the *request-local* preference (sharper).
+    pub zipf_local: f64,
+    /// Probability a token's routing draw uses the request-local ranking.
+    pub local_mix: f64,
+    /// Workload index (0, 1, 2): offsets this workload's popularity
+    /// ranking by `idx · E/3` within the shared per-layer permutation, so
+    /// the top-10 hot sets of distinct workloads are disjoint **by
+    /// construction** (the paper's Fig. 2 observation).
+    pub workload_idx: usize,
+    /// Unnormalized byte weights for prompt synthesis (numeric engine).
+    pub byte_weights: Vec<f64>,
+}
+
+fn byte_dist(ranges: &[(u8, u8, f64)]) -> Vec<f64> {
+    let mut w = vec![0.01; 256]; // small floor: every byte possible
+    for &(lo, hi, weight) in ranges {
+        for b in lo..=hi {
+            w[b as usize] = weight;
+        }
+    }
+    w
+}
+
+impl WorkloadProfile {
+    /// WikiText analogue: prose bytes.
+    pub fn text() -> Self {
+        Self {
+            name: "text",
+            workload_idx: 0,
+            seed: 0x7e47,
+            zipf_global: 1.8,
+            zipf_local: 1.2,
+            local_mix: 0.85,
+            byte_weights: byte_dist(&[
+                (b'a', b'z', 8.0),
+                (b'A', b'Z', 1.0),
+                (b' ', b' ', 12.0),
+                (b'.', b'.', 1.0),
+                (b',', b',', 1.0),
+            ]),
+        }
+    }
+
+    /// GSM8K analogue: digits and arithmetic.
+    pub fn math() -> Self {
+        Self {
+            name: "math",
+            workload_idx: 1,
+            seed: 0x3a7b,
+            zipf_global: 1.8,
+            zipf_local: 1.2,
+            local_mix: 0.85,
+            byte_weights: byte_dist(&[
+                (b'0', b'9', 10.0),
+                (b'+', b'+', 3.0),
+                (b'-', b'-', 3.0),
+                (b'*', b'*', 3.0),
+                (b'/', b'/', 3.0),
+                (b'=', b'=', 4.0),
+                (b'(', b')', 2.0),
+                (b' ', b' ', 8.0),
+                (b'a', b'z', 1.5),
+            ]),
+        }
+    }
+
+    /// HumanEval analogue: code-ish bytes.
+    pub fn code() -> Self {
+        Self {
+            name: "code",
+            workload_idx: 2,
+            seed: 0xc0de,
+            zipf_global: 1.8,
+            zipf_local: 1.2,
+            local_mix: 0.85,
+            byte_weights: byte_dist(&[
+                (b'a', b'z', 5.0),
+                (b'_', b'_', 4.0),
+                (b'{', b'}', 3.0),
+                (b'(', b')', 4.0),
+                (b';', b';', 3.0),
+                (b'=', b'=', 3.0),
+                (b'<', b'>', 2.0),
+                (b'0', b'9', 2.0),
+                (b' ', b' ', 6.0),
+                (b'\n', b'\n', 3.0),
+            ]),
+        }
+    }
+
+    pub fn all() -> Vec<Self> {
+        vec![Self::text(), Self::math(), Self::code()]
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        Self::all().into_iter().find(|p| p.name == name)
+    }
+
+    /// Sample a prompt of `len` bytes (numeric engine input).
+    pub fn sample_prompt(&self, rng: &mut XorShiftRng, len: usize) -> Vec<i32> {
+        (0..len)
+            .map(|_| rng.weighted(&self.byte_weights) as i32)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_distinct() {
+        let (t, m, c) = (
+            WorkloadProfile::text(),
+            WorkloadProfile::math(),
+            WorkloadProfile::code(),
+        );
+        assert_ne!(t.seed, m.seed);
+        assert_ne!(m.seed, c.seed);
+        assert_ne!(t.byte_weights, m.byte_weights);
+    }
+
+    #[test]
+    fn prompt_sampling_follows_distribution() {
+        let p = WorkloadProfile::math();
+        let mut rng = XorShiftRng::new(1);
+        let prompt = p.sample_prompt(&mut rng, 4000);
+        assert_eq!(prompt.len(), 4000);
+        let digits = prompt
+            .iter()
+            .filter(|&&b| (b as u8).is_ascii_digit())
+            .count();
+        let letters = prompt
+            .iter()
+            .filter(|&&b| (b as u8).is_ascii_lowercase())
+            .count();
+        assert!(digits > letters, "math workload should be digit-heavy");
+        assert!(prompt.iter().all(|&b| (0..256).contains(&b)));
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for p in WorkloadProfile::all() {
+            assert_eq!(WorkloadProfile::by_name(p.name).unwrap().seed, p.seed);
+        }
+        assert!(WorkloadProfile::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,120 @@
+//! Serving requests and generators.
+
+use crate::util::XorShiftRng;
+
+use super::profile::WorkloadProfile;
+
+/// One inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Token ids of the prompt (numeric engine) — empty in modeled runs
+    /// where only `prompt_len` matters.
+    pub prompt: Vec<i32>,
+    pub prompt_len: usize,
+    /// Number of tokens to generate.
+    pub output_len: usize,
+    /// Modeled arrival time in seconds.
+    pub arrival_s: f64,
+    /// Workload the request belongs to (routing statistics tag).
+    pub workload: &'static str,
+}
+
+/// Generates request batches for experiments.
+pub struct RequestGenerator {
+    profile: WorkloadProfile,
+    rng: XorShiftRng,
+    next_id: u64,
+    /// If true, synthesize concrete prompt tokens (numeric engine).
+    pub materialize_tokens: bool,
+}
+
+impl RequestGenerator {
+    pub fn new(profile: WorkloadProfile, seed: u64) -> Self {
+        Self {
+            profile,
+            rng: XorShiftRng::new(seed),
+            next_id: 0,
+            materialize_tokens: false,
+        }
+    }
+
+    pub fn profile(&self) -> &WorkloadProfile {
+        &self.profile
+    }
+
+    /// Switch profiles mid-stream (workload shift experiments).
+    pub fn set_profile(&mut self, profile: WorkloadProfile) {
+        self.profile = profile;
+    }
+
+    /// One request with fixed lengths, arriving at `arrival_s`.
+    pub fn request(
+        &mut self,
+        prompt_len: usize,
+        output_len: usize,
+        arrival_s: f64,
+    ) -> Request {
+        let id = self.next_id;
+        self.next_id += 1;
+        let prompt = if self.materialize_tokens {
+            self.profile.sample_prompt(&mut self.rng, prompt_len)
+        } else {
+            Vec::new()
+        };
+        Request {
+            id,
+            prompt,
+            prompt_len,
+            output_len,
+            arrival_s,
+            workload: self.profile.name,
+        }
+    }
+
+    /// A batch of `n` identical-shape requests arriving together.
+    pub fn batch(
+        &mut self,
+        n: usize,
+        prompt_len: usize,
+        output_len: usize,
+        arrival_s: f64,
+    ) -> Vec<Request> {
+        (0..n)
+            .map(|_| self.request(prompt_len, output_len, arrival_s))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_monotone() {
+        let mut g = RequestGenerator::new(WorkloadProfile::text(), 7);
+        let a = g.request(16, 4, 0.0);
+        let b = g.request(16, 4, 0.0);
+        assert_eq!(b.id, a.id + 1);
+        assert!(a.prompt.is_empty(), "tokens off by default");
+    }
+
+    #[test]
+    fn materialized_prompts() {
+        let mut g = RequestGenerator::new(WorkloadProfile::math(), 7);
+        g.materialize_tokens = true;
+        let r = g.request(64, 8, 0.5);
+        assert_eq!(r.prompt.len(), 64);
+        assert_eq!(r.prompt_len, 64);
+        assert_eq!(r.arrival_s, 0.5);
+        assert_eq!(r.workload, "math");
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let mut g = RequestGenerator::new(WorkloadProfile::code(), 7);
+        let b = g.batch(8, 32, 16, 1.0);
+        assert_eq!(b.len(), 8);
+        assert!(b.iter().all(|r| r.prompt_len == 32 && r.output_len == 16));
+    }
+}

@@ -1,0 +1,288 @@
+//! Modeled routing: topic-clustered Zipf expert sampling.
+//!
+//! Used by the modeled engine (performance experiments) where running the
+//! real router at batch 32 × 4K tokens would be wasteful: routing outcomes
+//! are *sampled* from a workload-derived distribution instead, preserving
+//! the statistics those experiments measure. Quality experiments never use
+//! this path — they run the real router.
+//!
+//! Generative model (calibrated against the paper's Tables 1–2 / Fig. 2):
+//!
+//! * each workload owns a per-layer expert-popularity permutation;
+//! * each **request** gets a deterministic *topic rotation* of that
+//!   ranking, drawn Zipf-skewed toward the head — requests cluster on
+//!   popular topics, so long-horizon traffic is heavy-tailed and the
+//!   workload's top experts are stable (Fig. 2);
+//! * a token's draw is, with probability `local_mix`, a sharp Zipf pick
+//!   from a **truncated window** of the request's rotated ranking (tokens
+//!   of one request reuse a small expert set → prefill of one prompt stays
+//!   ≈ window-sized), otherwise a pick from the workload-global Zipf;
+//! * unions across *distinct* requests grow fast (different rotations) —
+//!   activation densifies with batch size exactly as in Table 1.
+
+use crate::util::XorShiftRng;
+
+use super::profile::WorkloadProfile;
+
+/// Per-(workload, layer) expert sampler.
+pub struct RoutingSampler {
+    n_experts: usize,
+    top_k: usize,
+    local_mix: f64,
+    /// Request-local window size (experts a single request draws from).
+    window: usize,
+    /// Topic-rotation skew (how strongly requests cluster on hot topics).
+    topic_zipf: f64,
+    seed: u64,
+    /// Global popularity: perm[rank] = expert id (rank 0 = hottest).
+    perms: Vec<Vec<usize>>,
+    cdf_global: Vec<f64>,
+    /// Local CDF truncated to the window.
+    cdf_local: Vec<f64>,
+    cdf_topic: Vec<f64>,
+}
+
+fn zipf_cdf(n: usize, s: f64) -> Vec<f64> {
+    let mut w: Vec<f64> = (1..=n).map(|r| 1.0 / (r as f64).powf(s)).collect();
+    let total: f64 = w.iter().sum();
+    let mut acc = 0.0;
+    for x in &mut w {
+        acc += *x / total;
+        *x = acc;
+    }
+    w
+}
+
+fn draw_rank(rng: &mut XorShiftRng, cdf: &[f64]) -> usize {
+    let u = rng.next_f64();
+    cdf.partition_point(|&c| c < u).min(cdf.len() - 1)
+}
+
+impl RoutingSampler {
+    pub fn new(
+        profile: &WorkloadProfile,
+        n_layers: usize,
+        n_experts: usize,
+        top_k: usize,
+    ) -> Self {
+        // A *shared* base permutation per layer (same for every workload),
+        // rotated by `workload_idx · E/3`: each workload's popularity head
+        // lands on a disjoint expert block — the paper's Fig. 2 shows the
+        // top-10 hot sets of text/math/code are entirely disjoint.
+        let offset = (profile.workload_idx * n_experts / 3) % n_experts.max(1);
+        let perms = (0..n_layers)
+            .map(|l| {
+                let mut base: Vec<usize> = (0..n_experts).collect();
+                let mut r =
+                    XorShiftRng::new(0x5EED ^ ((l as u64 + 1) * 0x9E37_79B9));
+                r.shuffle(&mut base);
+                base.rotate_left(offset);
+                base
+            })
+            .collect();
+        // Window ≈ a quarter of the expert pool, at least 2·top_k.
+        let window = (n_experts / 4).max(2 * top_k).min(n_experts);
+        Self {
+            n_experts,
+            top_k,
+            local_mix: profile.local_mix,
+            window,
+            topic_zipf: 1.0,
+            seed: profile.seed,
+            perms,
+            cdf_global: zipf_cdf(n_experts, profile.zipf_global),
+            cdf_local: zipf_cdf(window, profile.zipf_local),
+            cdf_topic: zipf_cdf(n_experts, 1.0),
+        }
+    }
+
+    /// Deterministic topic rotation of a request (stable across steps and
+    /// layers, Zipf-skewed toward the ranking head).
+    fn rotation(&self, request_tag: u64) -> usize {
+        let mut r = XorShiftRng::new(
+            self.seed ^ request_tag.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        draw_rank(&mut r, &self.cdf_topic)
+    }
+
+    /// Top-k expert ids for one token of request `request_tag` at `layer`.
+    pub fn sample_topk(
+        &self,
+        rng: &mut XorShiftRng,
+        request_tag: u64,
+        layer: usize,
+    ) -> Vec<usize> {
+        let perm = &self.perms[layer % self.perms.len()];
+        let rot = self.rotation(request_tag);
+        let mut picked = Vec::with_capacity(self.top_k);
+        let mut attempts = 0;
+        while picked.len() < self.top_k && attempts < self.top_k * 20 {
+            attempts += 1;
+            let e = if rng.next_f64() < self.local_mix {
+                let rank = draw_rank(rng, &self.cdf_local);
+                perm[(rot + rank) % self.n_experts]
+            } else {
+                perm[draw_rank(rng, &self.cdf_global)]
+            };
+            if !picked.contains(&e) {
+                picked.push(e);
+            }
+        }
+        // Degenerate fallback: fill with the first unpicked experts.
+        let mut next = 0;
+        while picked.len() < self.top_k {
+            if !picked.contains(&next) {
+                picked.push(next);
+            }
+            next += 1;
+        }
+        picked
+    }
+
+    /// The globally hottest `n` experts of a layer (ground truth for tests).
+    pub fn global_top(&self, layer: usize, n: usize) -> Vec<usize> {
+        self.perms[layer % self.perms.len()][..n].to_vec()
+    }
+
+    pub fn top_k(&self) -> usize {
+        self.top_k
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Override calibration knobs (ablations/tests).
+    pub fn set_topic_zipf(&mut self, s: f64) {
+        self.topic_zipf = s;
+        self.cdf_topic = zipf_cdf(self.n_experts, s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::Prop;
+    use std::collections::HashSet;
+
+    fn sampler(profile: WorkloadProfile) -> RoutingSampler {
+        RoutingSampler::new(&profile, 4, 128, 8)
+    }
+
+    #[test]
+    fn topk_distinct_and_in_range() {
+        let s = sampler(WorkloadProfile::text());
+        let mut rng = XorShiftRng::new(5);
+        for tag in 0..100 {
+            let picks = s.sample_topk(&mut rng, tag, 0);
+            assert_eq!(picks.len(), 8);
+            let set: HashSet<_> = picks.iter().collect();
+            assert_eq!(set.len(), 8, "picks must be distinct");
+            assert!(picks.iter().all(|&e| e < 128));
+        }
+    }
+
+    #[test]
+    fn cumulative_counts_heavy_tailed() {
+        // Fig. 2 property: a small hot set dominates cumulative counts.
+        let s = sampler(WorkloadProfile::text());
+        let mut rng = XorShiftRng::new(9);
+        let mut counts = vec![0u64; 128];
+        for tag in 0..500 {
+            for _ in 0..32 {
+                for e in s.sample_topk(&mut rng, tag, 0) {
+                    counts[e] += 1;
+                }
+            }
+        }
+        let total: u64 = counts.iter().sum();
+        let mut sorted = counts.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let top16: u64 = sorted[..16].iter().sum();
+        assert!(
+            top16 as f64 > 0.35 * total as f64,
+            "top-12.5% of experts should carry >35% of traffic ({} / {})",
+            top16,
+            total
+        );
+    }
+
+    #[test]
+    fn workloads_have_disjoint_hot_heads() {
+        // Fig. 2 property: top-10 hot sets disjoint across workloads.
+        let mut tops = Vec::new();
+        for p in WorkloadProfile::all() {
+            let s = sampler(p);
+            let mut rng = XorShiftRng::new(1);
+            let mut counts = vec![0u64; 128];
+            for tag in 0..400 {
+                for e in s.sample_topk(&mut rng, tag, 0) {
+                    counts[e] += 1;
+                }
+            }
+            let mut idx: Vec<usize> = (0..128).collect();
+            idx.sort_by_key(|&e| std::cmp::Reverse(counts[e]));
+            tops.push(idx[..10].iter().copied().collect::<HashSet<_>>());
+        }
+        let i01 = tops[0].intersection(&tops[1]).count();
+        let i02 = tops[0].intersection(&tops[2]).count();
+        let i12 = tops[1].intersection(&tops[2]).count();
+        assert!(
+            i01 + i02 + i12 <= 3,
+            "hot heads should be (near-)disjoint: {i01} {i02} {i12}"
+        );
+    }
+
+    #[test]
+    fn within_request_narrower_than_across() {
+        // Densification property: one request's tokens reuse few experts;
+        // many requests union into a much larger set.
+        let s = sampler(WorkloadProfile::code());
+        let mut rng = XorShiftRng::new(3);
+        let mut one_request = HashSet::new();
+        for _ in 0..256 {
+            one_request.extend(s.sample_topk(&mut rng, 42, 0));
+        }
+        let mut many_requests = HashSet::new();
+        for tag in 0..256 {
+            many_requests.extend(s.sample_topk(&mut rng, tag, 0));
+        }
+        assert!(
+            one_request.len() + 10 < many_requests.len(),
+            "one req {} vs many {}",
+            one_request.len(),
+            many_requests.len()
+        );
+        // and the one-request set is window-bounded (+ global spillover)
+        assert!(one_request.len() < s.window() + 40);
+    }
+
+    #[test]
+    fn rotation_stable_per_request() {
+        let s = sampler(WorkloadProfile::text());
+        assert_eq!(s.rotation(7), s.rotation(7));
+        // different requests usually rotate differently
+        let distinct: HashSet<usize> =
+            (0..50).map(|t| s.rotation(t)).collect();
+        assert!(distinct.len() > 10);
+    }
+
+    #[test]
+    fn prop_zipf_cdf_valid() {
+        let mut prop = Prop::new("zipf_cdf");
+        prop.run(20, |rng| {
+            let n = 2 + rng.below(500);
+            let s = rng.range_f64(0.1, 3.0);
+            let cdf = zipf_cdf(n, s);
+            assert_eq!(cdf.len(), n);
+            assert!((cdf[n - 1] - 1.0).abs() < 1e-9);
+            for i in 1..n {
+                assert!(cdf[i] >= cdf[i - 1]);
+            }
+        });
+    }
+}

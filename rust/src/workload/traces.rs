@@ -1,0 +1,280 @@
+//! Router-trace recording and replay.
+//!
+//! DynaExq's policy consumes *router traces* — sequences of per-iteration
+//! (layer, expert) selections. This module gives them a durable form: a
+//! compact binary format for capturing traces from either engine, and a
+//! replayer that feeds a recorded trace back through any
+//! [`ResidencyBackend`] (offline policy experiments: replay production
+//! traffic against candidate configurations without re-running the model).
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "DXTR" | u32 version | u32 n_layers | u32 n_experts
+//! per iteration: u32 layer | u32 count | count × u32 expert
+//! (layer == u32::MAX marks an iteration boundary / tick)
+//! ```
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"DXTR";
+const VERSION: u32 = 1;
+const TICK_MARK: u32 = u32::MAX;
+
+/// One recorded routing event.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TraceEvent {
+    /// Router selections for one layer within an iteration.
+    Routing { layer: u32, experts: Vec<u32> },
+    /// Iteration boundary (the engine's tick).
+    Tick,
+}
+
+/// An in-memory trace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub n_layers: u32,
+    pub n_experts: u32,
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn new(n_layers: usize, n_experts: usize) -> Self {
+        Self {
+            n_layers: n_layers as u32,
+            n_experts: n_experts as u32,
+            events: Vec::new(),
+        }
+    }
+
+    pub fn record(&mut self, layer: usize, experts: &[usize]) {
+        self.events.push(TraceEvent::Routing {
+            layer: layer as u32,
+            experts: experts.iter().map(|&e| e as u32).collect(),
+        });
+    }
+
+    pub fn tick(&mut self) {
+        self.events.push(TraceEvent::Tick);
+    }
+
+    /// Total routing selections recorded.
+    pub fn selections(&self) -> usize {
+        self.events
+            .iter()
+            .map(|e| match e {
+                TraceEvent::Routing { experts, .. } => experts.len(),
+                TraceEvent::Tick => 0,
+            })
+            .sum()
+    }
+
+    /// Serialize to the binary format.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&self.n_layers.to_le_bytes())?;
+        w.write_all(&self.n_experts.to_le_bytes())?;
+        for ev in &self.events {
+            match ev {
+                TraceEvent::Routing { layer, experts } => {
+                    w.write_all(&layer.to_le_bytes())?;
+                    w.write_all(&(experts.len() as u32).to_le_bytes())?;
+                    for e in experts {
+                        w.write_all(&e.to_le_bytes())?;
+                    }
+                }
+                TraceEvent::Tick => {
+                    w.write_all(&TICK_MARK.to_le_bytes())?;
+                    w.write_all(&0u32.to_le_bytes())?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse from the binary format (validates layer/expert ranges).
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Self> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic).context("trace: missing magic")?;
+        if &magic != MAGIC {
+            bail!("trace: bad magic {magic:?}");
+        }
+        let mut u32buf = [0u8; 4];
+        let mut read_u32 = |r: &mut R| -> Result<u32> {
+            r.read_exact(&mut u32buf)?;
+            Ok(u32::from_le_bytes(u32buf))
+        };
+        let version = read_u32(r)?;
+        if version != VERSION {
+            bail!("trace: unsupported version {version}");
+        }
+        let n_layers = read_u32(r)?;
+        let n_experts = read_u32(r)?;
+        let mut events = Vec::new();
+        loop {
+            let layer = match read_u32(r) {
+                Ok(v) => v,
+                Err(_) => break, // EOF
+            };
+            let count = read_u32(r)?;
+            if layer == TICK_MARK {
+                events.push(TraceEvent::Tick);
+                continue;
+            }
+            if layer >= n_layers {
+                bail!("trace: layer {layer} out of range ({n_layers})");
+            }
+            let mut experts = Vec::with_capacity(count as usize);
+            for _ in 0..count {
+                let e = read_u32(r)?;
+                if e >= n_experts {
+                    bail!("trace: expert {e} out of range ({n_experts})");
+                }
+                experts.push(e);
+            }
+            events.push(TraceEvent::Routing { layer, experts });
+        }
+        Ok(Self { n_layers, n_experts, events })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        self.write_to(&mut f)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        Self::read_from(&mut f)
+    }
+
+    /// Replay through a residency backend at `seconds_per_tick` cadence;
+    /// returns the modeled end time.
+    pub fn replay(
+        &self,
+        backend: &mut dyn crate::serving::backend::ResidencyBackend,
+        seconds_per_tick: f64,
+    ) -> f64 {
+        let mut now = 0.0;
+        let mut scratch: Vec<usize> = Vec::new();
+        for ev in &self.events {
+            match ev {
+                TraceEvent::Routing { layer, experts } => {
+                    scratch.clear();
+                    scratch.extend(experts.iter().map(|&e| e as usize));
+                    backend.record_routing(*layer as usize, &scratch);
+                    for &e in &scratch {
+                        backend.resolve(*layer as usize, e, now);
+                    }
+                }
+                TraceEvent::Tick => {
+                    now += seconds_per_tick;
+                    now += backend.tick(now);
+                }
+            }
+        }
+        now
+    }
+}
+
+/// Capture a trace from the modeled routing sampler (synthetic trace
+/// generation for offline experiments).
+pub fn synthesize(
+    profile: &super::WorkloadProfile,
+    n_layers: usize,
+    n_experts: usize,
+    top_k: usize,
+    batch: usize,
+    iterations: usize,
+    seed: u64,
+) -> Trace {
+    let sampler =
+        super::RoutingSampler::new(profile, n_layers, n_experts, top_k);
+    let mut rng = crate::util::XorShiftRng::new(seed);
+    let mut trace = Trace::new(n_layers, n_experts);
+    for it in 0..iterations {
+        for layer in 0..n_layers {
+            let mut all = Vec::with_capacity(batch * top_k);
+            for b in 0..batch as u64 {
+                all.extend(sampler.sample_topk(
+                    &mut rng,
+                    it as u64 * 131 + b,
+                    layer,
+                ));
+            }
+            trace.record(layer, &all);
+        }
+        trace.tick();
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Precision;
+    use crate::serving::backend::{CountingBackend, ResidencyBackend};
+    use crate::workload::WorkloadProfile;
+
+    #[test]
+    fn roundtrip_binary() {
+        let mut t = Trace::new(4, 16);
+        t.record(0, &[1, 5, 5]);
+        t.tick();
+        t.record(3, &[15]);
+        t.tick();
+        let mut buf = Vec::new();
+        t.write_to(&mut buf).unwrap();
+        let t2 = Trace::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(t, t2);
+        assert_eq!(t2.selections(), 4);
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        assert!(Trace::read_from(&mut &b"XXXX"[..]).is_err());
+        // out-of-range expert
+        let mut t = Trace::new(1, 4);
+        t.record(0, &[9]); // invalid but recordable
+        let mut buf = Vec::new();
+        t.write_to(&mut buf).unwrap();
+        assert!(Trace::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn replay_feeds_backend() {
+        let mut t = Trace::new(2, 8);
+        t.record(0, &[1, 1, 2]);
+        t.tick();
+        t.record(1, &[7]);
+        t.tick();
+        let mut b = CountingBackend::new(2, 8, Precision::Fp16);
+        let end = t.replay(&mut b, 0.5);
+        assert_eq!(end, 1.0);
+        assert_eq!(b.counts_view().unwrap()[0][1], 2);
+        assert_eq!(b.counts_view().unwrap()[1][7], 1);
+    }
+
+    #[test]
+    fn synthesized_trace_statistics() {
+        let t = synthesize(&WorkloadProfile::text(), 4, 128, 8, 8, 10, 1);
+        assert_eq!(t.selections(), 10 * 4 * 8 * 8);
+        assert_eq!(
+            t.events.iter().filter(|e| **e == TraceEvent::Tick).count(),
+            10
+        );
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = synthesize(&WorkloadProfile::math(), 2, 16, 2, 4, 5, 3);
+        let path = std::env::temp_dir().join("dynaexq_trace_test.dxtr");
+        t.save(&path).unwrap();
+        let t2 = Trace::load(&path).unwrap();
+        assert_eq!(t, t2);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,165 @@
+//! Integration: system-level invariants of the coordinator under sustained
+//! randomized serving — the properties §3 declares non-negotiable:
+//!
+//! (C1) budget feasibility at every instant,
+//! (C2) the forward path never blocks,
+//! (C3) a handle always resolves to a complete version,
+//! plus pool conservation and pipeline liveness.
+
+use dynaexq::config::{DeviceConfig, ModelPreset, ServingConfig};
+use dynaexq::coordinator::Coordinator;
+use dynaexq::model::Precision;
+use dynaexq::testutil::prop::Prop;
+use dynaexq::util::XorShiftRng;
+
+fn random_preset(rng: &mut XorShiftRng) -> ModelPreset {
+    let mut p = match rng.below(3) {
+        0 => ModelPreset::qwen30b_sim(),
+        1 => ModelPreset::qwen80b_sim(),
+        _ => ModelPreset::phi_sim(),
+    };
+    // shrink the logical layer count to keep the property loop fast
+    p.paper_layers = 2 + rng.below(3);
+    p.n_layers = p.paper_layers;
+    p
+}
+
+#[test]
+fn prop_budget_envelope_never_violated_under_chaotic_traffic() {
+    let mut prop = Prop::new("coord_envelope_chaos");
+    prop.run(8, |rng| {
+        let preset = random_preset(rng);
+        let mut cfg = ServingConfig::default();
+        cfg.update_interval_ms = 1.0;
+        cfg.hysteresis_margin = rng.range_f64(0.0, 0.3);
+        cfg.ema_alpha = rng.range_f64(0.0, 0.9);
+        cfg.n_hi_override = Some(1 + rng.below(preset.n_experts.min(16)));
+        let c = Coordinator::new(&preset, &cfg, &DeviceConfig::default())
+            .unwrap();
+        let mut now = 0.0;
+        for _ in 0..200 {
+            // chaotic routing: random layer, random experts, random burst
+            let layer = rng.below(preset.n_layers);
+            let burst: Vec<usize> = (0..1 + rng.below(24))
+                .map(|_| rng.below(preset.n_experts))
+                .collect();
+            c.record_routing(layer, &burst);
+            now += rng.range_f64(0.0, 0.01);
+            c.tick(now);
+            // invariants, every step
+            assert!(c.budget.within_envelope(), "C1 violated");
+            assert!(c.pool_hi.consistent(), "hi pool leaked");
+            assert!(c.pool_lo.consistent(), "lo pool leaked");
+        }
+        // liveness: with traffic stopped, scores decay, the policy stops
+        // submitting, and every in-flight transition publishes.
+        for i in 0..12 {
+            now += 1e3 * (i + 1) as f64;
+            c.tick(now);
+            c.pipeline.wait_staged();
+        }
+        c.tick(now + 1e6);
+        assert_eq!(c.pipeline.inflight_count(), 0, "pipeline stuck");
+        assert!(c.budget.within_envelope());
+    });
+}
+
+#[test]
+fn prop_resolution_always_valid_during_transitions() {
+    // C3: resolve() must return one of the model's two tiers at every
+    // moment, including while promotions/demotions are in flight.
+    let mut prop = Prop::new("coord_resolution_valid");
+    prop.run(6, |rng| {
+        let preset = random_preset(rng);
+        let mut cfg = ServingConfig::default();
+        cfg.update_interval_ms = 0.5;
+        cfg.n_hi_override = Some(2);
+        let c = Coordinator::new(&preset, &cfg, &DeviceConfig::default())
+            .unwrap();
+        let mut now = 0.0;
+        for step in 0..150 {
+            let hot = step % preset.n_experts;
+            for _ in 0..20 {
+                c.record_routing(0, &[hot]);
+            }
+            now += 0.001;
+            c.tick(now);
+            for e in 0..preset.n_experts.min(8) {
+                let p = c.resolve(0, e);
+                assert!(
+                    p == preset.hi || p == preset.lo,
+                    "resolved invalid tier {p:?}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn hi_set_size_respects_capacity_after_convergence() {
+    let preset = ModelPreset::phi_sim().executed_scale();
+    let mut cfg = ServingConfig::default();
+    cfg.n_hi_override = Some(3);
+    cfg.update_interval_ms = 1.0;
+    cfg.hysteresis_margin = 0.0;
+    let c = Coordinator::new(&preset, &cfg, &DeviceConfig::default()).unwrap();
+    let mut now = 0.0;
+    let mut rng = XorShiftRng::new(4);
+    for _ in 0..100 {
+        let sel: Vec<usize> = (0..8).map(|_| rng.below(16)).collect();
+        for l in 0..preset.n_layers {
+            c.record_routing(l, &sel);
+        }
+        now += 0.002;
+        c.tick(now);
+        c.pipeline.wait_staged();
+    }
+    // quiesce: corrective demotions from the last update must publish
+    // before the steady-state capacity claim is checked.
+    for i in 0..12 {
+        now += 1.0 * (i + 1) as f64;
+        c.tick(now);
+        c.pipeline.wait_staged();
+    }
+    for l in 0..preset.n_layers {
+        let hi = c.handles.hi_set(l, Precision::Fp16);
+        assert!(hi.len() <= 3, "layer {l} hi set {hi:?} exceeds capacity");
+    }
+}
+
+#[test]
+fn demoted_expert_storage_is_reclaimed() {
+    let preset = ModelPreset::phi_sim().executed_scale();
+    let mut cfg = ServingConfig::default();
+    cfg.n_hi_override = Some(2);
+    cfg.update_interval_ms = 1.0;
+    cfg.ema_alpha = 0.0;
+    cfg.hysteresis_margin = 0.0;
+    let c = Coordinator::new(&preset, &cfg, &DeviceConfig::default()).unwrap();
+    let boot_hi_used = c.budget.hi_used();
+
+    // promote {0,1}, then fully shift to {2,3} several times
+    let mut now = 0.0;
+    for phase in 0..6 {
+        let pair = [(phase * 2) % 16, (phase * 2 + 1) % 16];
+        for _ in 0..50 {
+            c.record_routing(0, &pair);
+        }
+        for _ in 0..6 {
+            now += 0.002;
+            c.tick(now);
+            c.pipeline.wait_staged();
+        }
+    }
+    c.tick(now + 1e3);
+    c.pipeline.wait_staged();
+    c.tick(now + 2e3);
+    // hi usage must be bounded by capacity × layers regardless of churn
+    let cap_bytes = 2 * c.plan.hi_expert_bytes * preset.n_layers + boot_hi_used;
+    assert!(
+        c.budget.hi_used() <= cap_bytes,
+        "hi usage {} exceeds churn-independent cap {}",
+        c.budget.hi_used(),
+        cap_bytes
+    );
+}

@@ -1,0 +1,139 @@
+//! Integration: the numeric engine — full MoE forward through real PJRT
+//! execution, across precision tiers, with KV-cache-consistent decode.
+
+use std::sync::Arc;
+
+use dynaexq::config::{DeviceConfig, ModelPreset, ServingConfig, VOCAB};
+use dynaexq::model::{ModelWeights, Precision};
+use dynaexq::quality::{logit_rel_err, perplexity};
+use dynaexq::runtime::Runtime;
+use dynaexq::serving::backend::{DynaExqBackend, StaticBackend};
+use dynaexq::serving::numeric::{NumericEngine, SeqState};
+use dynaexq::workload::WorkloadProfile;
+
+fn small_preset() -> ModelPreset {
+    let mut p = ModelPreset::phi_sim().executed_scale();
+    p.n_layers = 2;
+    p
+}
+
+fn engine_with(preset: &ModelPreset, precision: Precision) -> NumericEngine {
+    let rt = Arc::new(Runtime::load_default().expect("artifacts present"));
+    let weights = Arc::new(ModelWeights::generate(preset, 42));
+    NumericEngine::new(rt, weights, Box::new(StaticBackend::new(precision)))
+        .unwrap()
+}
+
+#[test]
+fn prefill_produces_logits_and_kv() {
+    let preset = small_preset();
+    let mut e = engine_with(&preset, Precision::Fp16);
+    let prompt: Vec<i32> = (0..12).map(|i| (i * 7) % 256).collect();
+    let (kv, logits) = e.prefill(&prompt, 0).unwrap();
+    assert_eq!(kv.len(), 12);
+    assert_eq!(kv.n_layers(), 2);
+    assert_eq!(logits.len(), 12 * VOCAB);
+    assert!(logits.iter().all(|x| x.is_finite()));
+    let ppl = perplexity(&logits, &prompt);
+    assert!(ppl.is_finite() && ppl > 1.0);
+}
+
+#[test]
+fn decode_steps_extend_generation() {
+    let preset = small_preset();
+    let mut e = engine_with(&preset, Precision::Fp16);
+    let prompt: Vec<i32> = (0..8).collect();
+    let (kv, _) = e.prefill(&prompt, 0).unwrap();
+    let mut seqs = vec![SeqState {
+        kv,
+        last_token: 7,
+        tag: 0,
+        generated: Vec::new(),
+    }];
+    for _ in 0..5 {
+        let next = e.decode_step(&mut seqs).unwrap();
+        assert_eq!(next.len(), 1);
+        assert!((0..VOCAB as i32).contains(&next[0]));
+    }
+    assert_eq!(seqs[0].generated.len(), 5);
+    assert_eq!(seqs[0].kv.len(), 8 + 5);
+}
+
+#[test]
+fn batched_decode_matches_single_sequence() {
+    // Greedy decode of the same prompt must be identical whether the
+    // sequence runs alone or inside a batch (padding/batching correctness).
+    let preset = small_preset();
+    let mut e1 = engine_with(&preset, Precision::Fp16);
+    let prompt: Vec<i32> = (0..16).map(|i| (i * 13) % 256).collect();
+    let out_single = e1.generate(&prompt, 6, 0).unwrap();
+
+    let mut e2 = engine_with(&preset, Precision::Fp16);
+    let (kv_a, _) = e2.prefill(&prompt, 0).unwrap();
+    let other: Vec<i32> = (0..16).map(|i| (i * 29 + 5) % 256).collect();
+    let (kv_b, _) = e2.prefill(&other, 1).unwrap();
+    let mut seqs = vec![
+        SeqState { kv: kv_a, last_token: *prompt.last().unwrap(), tag: 0, generated: Vec::new() },
+        SeqState { kv: kv_b, last_token: *other.last().unwrap(), tag: 1, generated: Vec::new() },
+    ];
+    for _ in 0..6 {
+        e2.decode_step(&mut seqs).unwrap();
+    }
+    assert_eq!(
+        seqs[0].generated, out_single.tokens,
+        "batching must not change greedy decoding"
+    );
+}
+
+#[test]
+fn quantized_tiers_degrade_gracefully() {
+    // relerr(int2) > relerr(int4) > 0 against the fp16 logits, and all
+    // remain finite — the foundation of the Table 4 / Fig. 3 experiments.
+    let preset = small_preset();
+    let prompt: Vec<i32> = WorkloadProfile::text()
+        .sample_prompt(&mut dynaexq::util::XorShiftRng::new(3), 24);
+    let run = |prec: Precision| {
+        let mut e = engine_with(&preset, prec);
+        let (_, logits) = e.prefill(&prompt, 0).unwrap();
+        logits
+    };
+    let fp = run(Precision::Fp16);
+    let i4 = run(Precision::Int4);
+    let i2 = run(Precision::Int2);
+    let e4 = logit_rel_err(&fp, &i4);
+    let e2 = logit_rel_err(&fp, &i2);
+    assert!(e4 > 0.0, "int4 must differ from fp16");
+    assert!(e2 > e4, "int2 ({e2}) must be worse than int4 ({e4})");
+    assert!(e4 < 0.5, "int4 should stay close to fp16 ({e4})");
+}
+
+#[test]
+fn dynaexq_backend_runs_mixed_precision() {
+    let preset = small_preset();
+    let rt = Arc::new(Runtime::load_default().unwrap());
+    let weights = Arc::new(ModelWeights::generate(&preset, 42));
+    let mut cfg = ServingConfig::default();
+    cfg.n_hi_override = Some(4); // 4 of 16 experts hot
+    cfg.update_interval_ms = 1.0;
+    let backend =
+        DynaExqBackend::new(&preset, &cfg, &DeviceConfig::default()).unwrap();
+    let mut e = NumericEngine::new(rt, weights, Box::new(backend)).unwrap();
+    let w = WorkloadProfile::text();
+    let mut rng = dynaexq::util::XorShiftRng::new(5);
+    // warm: promote hot experts
+    for i in 0..3 {
+        let prompt = w.sample_prompt(&mut rng, 32);
+        e.prefill(&prompt, i).unwrap();
+    }
+    let t = e.now() + 60.0;
+    e.backend.tick(t);
+    // post-warm resolution mixes tiers
+    assert!(e.backend.hi_fraction() >= 0.0);
+    let prompt = w.sample_prompt(&mut rng, 32);
+    let (_, logits) = e.prefill(&prompt, 99).unwrap();
+    assert!(logits.iter().all(|x| x.is_finite()));
+    assert!(
+        e.backend.migrated_bytes() > 0,
+        "hot traffic must have triggered promotions"
+    );
+}

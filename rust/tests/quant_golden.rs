@@ -1,0 +1,69 @@
+//! Cross-language quantization contract: the rust quantizer must reproduce
+//! the python quantizer's packed bytes and scales **bit-exactly** (the
+//! prepared host weights feed HLO kernels compiled from the python side —
+//! any drift would silently corrupt every quantized expert).
+//!
+//! `make artifacts` writes `artifacts/quant_golden.bin` (python side); this
+//! test regenerates the same golden matrix in rust and compares.
+
+use dynaexq::model::quant::quantize;
+use dynaexq::model::Precision;
+
+/// Matches `python/compile/aot.py::golden_matrix` exactly: integer Weyl
+/// sequence computed in f64, cast to f32.
+fn golden_matrix(k: usize, n: usize) -> Vec<f32> {
+    (0..k * n)
+        .map(|i| {
+            let h = (i as u64).wrapping_mul(2654435761) % (1u64 << 32);
+            ((h as f64) / (1u64 << 31) as f64 - 1.0) as f32
+        })
+        .collect()
+}
+
+#[test]
+fn rust_quantizer_matches_python_bit_exactly() {
+    let dir = std::env::var("DYNAEXQ_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    let path = std::path::Path::new(&dir).join("quant_golden.bin");
+    let golden = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(_) => {
+            eprintln!("skipping: {} missing (run `make artifacts`)", path.display());
+            return;
+        }
+    };
+    let (k, n) = (64usize, 16usize);
+    let w = golden_matrix(k, n);
+
+    let mut offset = 0;
+    for p in [Precision::Int4, Precision::Int2] {
+        let m = quantize(&w, k, n, p);
+        let packed_len = (k / p.pack()) * n;
+        assert_eq!(
+            &golden[offset..offset + packed_len],
+            &m.data[..],
+            "{:?}: packed bytes diverge from python",
+            p
+        );
+        offset += packed_len;
+        let scale_bytes = n * 4;
+        let py_scales: Vec<f32> = golden[offset..offset + scale_bytes]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(py_scales, m.scales, "{:?}: scales diverge", p);
+        offset += scale_bytes;
+    }
+    assert_eq!(offset, golden.len(), "golden file length mismatch");
+}
+
+#[test]
+fn golden_matrix_is_deterministic_and_bounded() {
+    let w = golden_matrix(64, 16);
+    assert_eq!(w, golden_matrix(64, 16));
+    assert!(w.iter().all(|&x| (-1.0..1.0).contains(&x)));
+    // non-trivial spread
+    let max = w.iter().cloned().fold(f32::MIN, f32::max);
+    let min = w.iter().cloned().fold(f32::MAX, f32::min);
+    assert!(max > 0.9 && min < -0.9);
+}

@@ -1,0 +1,196 @@
+//! Integration: the AOT bridge — load HLO-text artifacts, compile on the
+//! PJRT CPU client, execute, and check numerics against hand-computed
+//! expectations. This is the riskiest seam in the stack, so it gets its own
+//! test file that runs against the real `artifacts/` directory.
+
+use std::path::Path;
+
+use dynaexq::config::{D_MODEL, VOCAB};
+use dynaexq::runtime::{lit_f32, lit_i32, to_f32, to_i32, Runtime};
+
+fn runtime() -> Runtime {
+    let dir = std::env::var("DYNAEXQ_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    assert!(
+        Path::new(&dir).join("manifest.txt").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    Runtime::load(Path::new(&dir)).expect("runtime load")
+}
+
+#[test]
+fn embed_gathers_rows() {
+    let rt = runtime();
+    // table[v, d] = v * 1000 + d  → row 5 is recognizable
+    let table: Vec<f32> = (0..VOCAB * D_MODEL)
+        .map(|i| ((i / D_MODEL) * 1000 + (i % D_MODEL)) as f32)
+        .collect();
+    let tokens = [5i32];
+    let out = rt
+        .execute(
+            "embed_t1",
+            &[
+                lit_i32(&tokens, &[1]).unwrap(),
+                lit_f32(&table, &[VOCAB as i64, D_MODEL as i64]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let x = to_f32(&out[0]).unwrap();
+    assert_eq!(x.len(), D_MODEL);
+    assert_eq!(x[0], 5000.0);
+    assert_eq!(x[63], 5063.0);
+}
+
+#[test]
+fn expert_fp16_matches_host_math() {
+    let rt = runtime();
+    // x = e_0 (one-hot) → h1 = w1 row 0, h3 = w3 row 0; choose w1 rows so
+    // silu() saturates: silu(large) ≈ large.
+    let f = dynaexq::config::FF_DIM;
+    let d = D_MODEL;
+    let x = {
+        let mut v = vec![0f32; d];
+        v[0] = 1.0;
+        v
+    };
+    let w1 = vec![10.0f32; d * f]; // h1 = 10 (silu(10) ≈ 9.999546)
+    let w3 = vec![0.5f32; d * f];  // h3 = 0.5
+    let w2 = {
+        // w2[f, d]: only column 0 nonzero = 1/f → y[0] = mean(h)
+        let mut v = vec![0f32; f * d];
+        for row in 0..f {
+            v[row * d] = 1.0 / f as f32;
+        }
+        v
+    };
+    let out = rt
+        .execute(
+            "expert_fp16_t1",
+            &[
+                lit_f32(&x, &[1, d as i64]).unwrap(),
+                lit_f32(&w1, &[d as i64, f as i64]).unwrap(),
+                lit_f32(&w3, &[d as i64, f as i64]).unwrap(),
+                lit_f32(&w2, &[f as i64, d as i64]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let y = to_f32(&out[0]).unwrap();
+    let silu10 = 10.0 / (1.0 + (-10.0f32).exp());
+    let expect = silu10 * 0.5;
+    assert!((y[0] - expect).abs() < 1e-4, "y0={} expect={}", y[0], expect);
+    assert!(y[1].abs() < 1e-6);
+}
+
+#[test]
+fn router_top_k_selects_biased_expert() {
+    let rt = runtime();
+    let d = D_MODEL;
+    let e = 16usize; // phi-sim router e16k2
+    let x = vec![1.0f32; d];
+    let g = vec![1.0f32; d];
+    // wr: expert 7 gets weight 1 everywhere → logit = sum(xn); others 0
+    let mut wr = vec![0f32; d * e];
+    for row in 0..d {
+        wr[row * e + 7] = 1.0;
+        wr[row * e + 3] = 0.5;
+    }
+    let out = rt
+        .execute(
+            "router_e16k2_t1",
+            &[
+                lit_f32(&x, &[1, d as i64]).unwrap(),
+                lit_f32(&g, &[d as i64]).unwrap(),
+                lit_f32(&wr, &[d as i64, e as i64]).unwrap(),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 3); // (xn, idx, weights)
+    let idx = to_i32(&out[1]).unwrap();
+    let w = to_f32(&out[2]).unwrap();
+    assert_eq!(idx[0], 7, "top-1 should be the biased expert");
+    assert_eq!(idx[1], 3);
+    assert!(w[0] > w[1]);
+    assert!((w[0] + w[1] - 1.0).abs() < 1e-5, "softmax normalizes");
+}
+
+#[test]
+fn quantized_expert_matches_rust_dequant_reference() {
+    use dynaexq::model::quant::{dequantize, quantize};
+    use dynaexq::model::Precision;
+    use dynaexq::util::XorShiftRng;
+
+    let rt = runtime();
+    let d = D_MODEL;
+    let f = dynaexq::config::FF_DIM;
+    let mut rng = XorShiftRng::new(99);
+    let gen = |rng: &mut XorShiftRng, n: usize| -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32() * 0.2).collect()
+    };
+    let (w1, w3, w2) = (gen(&mut rng, d * f), gen(&mut rng, d * f), gen(&mut rng, f * d));
+    let x = gen(&mut rng, 4 * d);
+
+    for p in [Precision::Int4, Precision::Int2] {
+        let q1 = quantize(&w1, d, f, p);
+        let q3 = quantize(&w3, d, f, p);
+        let q2 = quantize(&w2, f, d, p);
+        let name = format!("expert_{}_t4", p.tag());
+        let out = rt
+            .execute(
+                &name,
+                &[
+                    lit_f32(&x, &[4, d as i64]).unwrap(),
+                    dynaexq::runtime::lit_u8(&q1.data, &[(d / p.pack()) as i64, f as i64]).unwrap(),
+                    lit_f32(&q1.scales, &[f as i64]).unwrap(),
+                    dynaexq::runtime::lit_u8(&q3.data, &[(d / p.pack()) as i64, f as i64]).unwrap(),
+                    lit_f32(&q3.scales, &[f as i64]).unwrap(),
+                    dynaexq::runtime::lit_u8(&q2.data, &[(f / p.pack()) as i64, d as i64]).unwrap(),
+                    lit_f32(&q2.scales, &[d as i64]).unwrap(),
+                ],
+            )
+            .unwrap();
+        let y = to_f32(&out[0]).unwrap();
+
+        // host reference: dequantize + SwiGLU in f32
+        let dw1 = dequantize(&q1);
+        let dw3 = dequantize(&q3);
+        let dw2 = dequantize(&q2);
+        let matmul = |x: &[f32], w: &[f32], t: usize, k: usize, n: usize| {
+            let mut out = vec![0f32; t * n];
+            for ti in 0..t {
+                for ki in 0..k {
+                    let xv = x[ti * k + ki];
+                    for ni in 0..n {
+                        out[ti * n + ni] += xv * w[ki * n + ni];
+                    }
+                }
+            }
+            out
+        };
+        let h1 = matmul(&x, &dw1, 4, d, f);
+        let h3 = matmul(&x, &dw3, 4, d, f);
+        let h: Vec<f32> = h1
+            .iter()
+            .zip(&h3)
+            .map(|(&a, &b)| (a / (1.0 + (-a).exp())) * b)
+            .collect();
+        let want = matmul(&h, &dw2, 4, f, d);
+        for i in 0..y.len() {
+            assert!(
+                (y[i] - want[i]).abs() < 1e-3,
+                "{name} i={i}: got {} want {}",
+                y[i],
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn executable_cache_hits() {
+    let rt = runtime();
+    rt.executable("embed_t1").unwrap();
+    rt.executable("embed_t1").unwrap();
+    let (compiles, _, _) = rt.stats.snapshot();
+    assert_eq!(compiles, 1);
+    assert_eq!(rt.compiled_count(), 1);
+}

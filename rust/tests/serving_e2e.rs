@@ -1,0 +1,83 @@
+//! Integration: modeled serving end to end — all three methods, all three
+//! models — asserting the paper's headline orderings hold through the full
+//! engine (not just in unit-scale fixtures).
+
+use dynaexq::experiments::helpers::{engine, warm};
+use dynaexq::experiments::latency::run_config;
+use dynaexq::workload::WorkloadProfile;
+
+#[test]
+fn all_models_all_methods_serve() {
+    for model in ["qwen30b-sim", "qwen80b-sim", "phi-sim"] {
+        for method in ["static", "dynaexq", "expertflow"] {
+            let mut e = engine(model, method, "text", 1, false).unwrap();
+            e.serve_uniform(&WorkloadProfile::text(), 2, 32, 4);
+            assert_eq!(e.metrics.e2e.count(), 2, "{model}/{method}");
+            assert!(e.metrics.throughput() > 0.0, "{model}/{method}");
+        }
+    }
+}
+
+#[test]
+fn headline_throughput_ratio_in_band() {
+    // Paper: DynaExq achieves 1.42×–2.73× over ExpertFlow at batch 32.
+    // The modeled testbed should land in a comparable winners-and-factors
+    // band (allow slack: this is a simulator, not their A6000).
+    let dy = run_config("qwen30b-sim", "dynaexq", 32, 256, 32, true)
+        .unwrap()
+        .throughput();
+    let ef = run_config("qwen30b-sim", "expertflow", 32, 256, 32, true)
+        .unwrap()
+        .throughput();
+    let ratio = dy / ef;
+    assert!(
+        ratio > 1.2,
+        "DynaExq must clearly beat ExpertFlow at batch 32 (got {ratio:.2}x)"
+    );
+}
+
+#[test]
+fn static_baseline_is_fastest_dynaexq_close() {
+    let st = run_config("phi-sim", "static", 8, 128, 16, true).unwrap();
+    let dy = run_config("phi-sim", "dynaexq", 8, 128, 16, true).unwrap();
+    let ef = run_config("phi-sim", "expertflow", 8, 128, 16, true).unwrap();
+    assert!(st.e2e.avg() <= dy.e2e.avg() * 1.1);
+    assert!(dy.e2e.avg() < ef.e2e.avg());
+    // DynaExq should sit much closer to static than to ExpertFlow
+    let gap_static = dy.e2e.avg() / st.e2e.avg();
+    let gap_ef = ef.e2e.avg() / dy.e2e.avg();
+    assert!(
+        gap_ef > gap_static,
+        "dynaexq/static {gap_static:.2} vs expertflow/dynaexq {gap_ef:.2}"
+    );
+}
+
+#[test]
+fn warmup_reduces_dynaexq_latency() {
+    // Cold start pays for promotions in hi-tier misses (quality) but never
+    // in stalls; latency should not degrade after convergence.
+    let mut e = engine("qwen30b-sim", "dynaexq", "text", 5, false).unwrap();
+    let w = WorkloadProfile::text();
+    e.serve_uniform(&w, 8, 128, 16);
+    let cold = e.metrics.e2e.avg();
+    warm(&mut e, &w, 2);
+    e.serve_uniform(&w, 8, 128, 16);
+    let hot = e.metrics.e2e.avg();
+    // hot experts run at fp16 (slower per-op than int4) so latency may rise
+    // slightly, but must stay within the static/expertflow envelope
+    assert!(hot < cold * 1.5, "warm {hot} vs cold {cold}");
+    assert_eq!(e.metrics.wait.max(), 0.0, "never stalls, warm or cold");
+}
+
+#[test]
+fn p99_tail_ordering() {
+    let dy = run_config("qwen30b-sim", "dynaexq", 16, 256, 16, true).unwrap();
+    let ef =
+        run_config("qwen30b-sim", "expertflow", 16, 256, 16, true).unwrap();
+    assert!(
+        dy.ttft.p99() < ef.ttft.p99(),
+        "DynaExq P99 TTFT {} must beat ExpertFlow {}",
+        dy.ttft.p99(),
+        ef.ttft.p99()
+    );
+}
