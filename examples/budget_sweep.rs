@@ -11,10 +11,10 @@
 
 use dynaexq::bench::Table;
 use dynaexq::config::{DeviceConfig, ModelPreset, ServingConfig};
-use dynaexq::serving::backend::DynaExqBackend;
 use dynaexq::serving::engine::{Engine, EngineConfig};
 use dynaexq::workload::WorkloadProfile;
 use dynaexq::Coordinator;
+use dynaexq::{BackendCtx, BackendRegistry};
 
 fn main() -> anyhow::Result<()> {
     let preset = ModelPreset::qwen30b_sim();
@@ -34,12 +34,13 @@ fn main() -> anyhow::Result<()> {
                 continue;
             }
         };
-        let backend = DynaExqBackend::new(&preset, &cfg, &dev)
+        let backend = BackendRegistry::with_builtins()
+            .build("dynaexq", &BackendCtx::new(&preset, &cfg, &dev))
             .map_err(anyhow::Error::msg)?;
         let mut engine = Engine::new(
             &preset,
             &w,
-            Box::new(backend),
+            backend,
             &dev,
             EngineConfig { max_batch: 8, seed: 3, track_activation: false },
         );

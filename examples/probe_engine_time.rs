@@ -1,13 +1,20 @@
-use dynaexq::experiments::helpers::engine;
-use dynaexq::workload::WorkloadProfile;
+//! Wall-clock probe of the modeled engine on the session API (how long a
+//! big closed batch takes to *simulate*, not the modeled latency).
+use dynaexq::ServeSession;
 use std::time::Instant;
 fn main() {
-    let w = WorkloadProfile::text();
-    let mut e = engine("qwen30b-sim", "static", "text", 1, false).unwrap();
+    let mut s = ServeSession::builder()
+        .model("qwen30b-sim")
+        .method("static")
+        .workload("text")
+        .seed(1)
+        .track_activation(false)
+        .build()
+        .unwrap();
     let t0 = Instant::now();
-    e.serve_uniform(&w, 8, 2048, 16);
+    s.serve_closed(8, 2048, 16).unwrap();
     println!("serve 8x2048 prompt: {:.2}s wall", t0.elapsed().as_secs_f64());
     let t0 = Instant::now();
-    e.serve_uniform(&w, 32, 512, 64);
+    s.serve_closed(32, 512, 64).unwrap();
     println!("serve 32x512+64: {:.2}s wall", t0.elapsed().as_secs_f64());
 }

@@ -11,10 +11,10 @@ use dynaexq::config::{DeviceConfig, ModelPreset, ServingConfig};
 use dynaexq::model::ModelWeights;
 use dynaexq::quality::perplexity;
 use dynaexq::runtime::Runtime;
-use dynaexq::serving::backend::DynaExqBackend;
 use dynaexq::serving::numeric::NumericEngine;
 use dynaexq::util::XorShiftRng;
 use dynaexq::workload::WorkloadProfile;
+use dynaexq::{BackendCtx, BackendRegistry};
 
 fn main() -> anyhow::Result<()> {
     // 1. The model: Phi-3.5-MoE analogue (16 experts/layer, top-2),
@@ -37,9 +37,13 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = ServingConfig::default();
     cfg.n_hi_override = Some(4);
     cfg.update_interval_ms = 5.0;
-    let backend = DynaExqBackend::new(&preset, &cfg, &DeviceConfig::default())
+    let backend = BackendRegistry::with_builtins()
+        .build(
+            "dynaexq",
+            &BackendCtx::new(&preset, &cfg, &DeviceConfig::default()),
+        )
         .map_err(anyhow::Error::msg)?;
-    let mut engine = NumericEngine::new(rt, weights, Box::new(backend))?;
+    let mut engine = NumericEngine::new(rt, weights, backend)?;
 
     // 4. Serve: a few text-workload requests, real execution end to end.
     let workload = WorkloadProfile::text();

@@ -16,10 +16,10 @@ use dynaexq::config::{DeviceConfig, ModelPreset, ServingConfig};
 use dynaexq::model::ModelWeights;
 use dynaexq::quality::perplexity;
 use dynaexq::runtime::Runtime;
-use dynaexq::serving::backend::DynaExqBackend;
 use dynaexq::serving::numeric::{NumericEngine, SeqState};
 use dynaexq::util::XorShiftRng;
 use dynaexq::workload::WorkloadProfile;
+use dynaexq::{BackendCtx, BackendRegistry};
 
 const PROMPT_LEN: usize = 48;
 const OUTPUT_LEN: usize = 16;
@@ -48,9 +48,13 @@ fn main() -> anyhow::Result<()> {
         cfg.n_hi_override.unwrap(),
         preset.n_experts
     );
-    let backend = DynaExqBackend::new(&preset, &cfg, &DeviceConfig::default())
+    let backend = BackendRegistry::with_builtins()
+        .build(
+            "dynaexq",
+            &BackendCtx::new(&preset, &cfg, &DeviceConfig::default()),
+        )
         .map_err(anyhow::Error::msg)?;
-    let mut engine = NumericEngine::new(rt, weights, Box::new(backend))?;
+    let mut engine = NumericEngine::new(rt, weights, backend)?;
 
     let mut tag = 0u64;
     let wall0 = Instant::now();

@@ -5,8 +5,8 @@ use anyhow::{anyhow, Result};
 use crate::bench::{Bench, Table};
 use crate::config::{DeviceConfig, ModelPreset, ServingConfig};
 use crate::coordinator::BlockPool;
-use crate::serving::backend::DynaExqBackend;
 use crate::serving::engine::{Engine, EngineConfig};
+use crate::serving::registry::{BackendCtx, BackendRegistry};
 use crate::workload::WorkloadProfile;
 
 fn dynaexq_engine(
@@ -15,11 +15,13 @@ fn dynaexq_engine(
     seed: u64,
 ) -> Result<Engine> {
     let dev = DeviceConfig::default();
-    let b = DynaExqBackend::new(preset, &cfg, &dev).map_err(|e| anyhow!(e))?;
+    let b = BackendRegistry::with_builtins()
+        .build("dynaexq", &BackendCtx::new(preset, &cfg, &dev))
+        .map_err(|e| anyhow!(e))?;
     Ok(Engine::new(
         preset,
         &WorkloadProfile::text(),
-        Box::new(b),
+        b,
         &dev,
         EngineConfig { max_batch: 32, seed, track_activation: false },
     ))
@@ -190,7 +192,6 @@ pub fn a4_pool_granularity(fast: bool) -> Result<String> {
 /// calibration workload but misallocates its high-precision budget when
 /// the workload shifts; DynaExq re-converges online.
 pub fn a5_static_map_shift(fast: bool) -> Result<String> {
-    use crate::baselines::StaticMapBackend;
     use crate::experiments::quality_exp::{logical_n_hi, QualityFixture};
     use crate::quality::logit_kl;
 
@@ -200,6 +201,11 @@ pub fn a5_static_map_shift(fast: bool) -> Result<String> {
     let calib = WorkloadProfile::text();
     let shifted = WorkloadProfile::code();
     let counts = fixture.calibrate_counts(&calib, n_prompts, prompt_len)?;
+    let registry = BackendRegistry::with_builtins();
+    // The map's hot capacity matches DynaExq's paper-scale plan; its counts
+    // come from the real (numeric) calibration pass above.
+    let mut map_cfg = ServingConfig::default();
+    map_cfg.n_hi_override = Some(n_hi);
 
     let mut t = Table::new(&["method", "KL on text (calib)", "KL on code (shift)"]);
     let mut rows: Vec<(String, f64, f64)> = Vec::new();
@@ -208,21 +214,21 @@ pub fn a5_static_map_shift(fast: bool) -> Result<String> {
         for w in [&calib, &shifted] {
             let (ref_logits, _) =
                 fixture.eval("fp16", w, n_prompts, prompt_len, None)?;
-            let (hyp, _) = match method {
-                "static-map" => {
-                    let b = StaticMapBackend::calibrated(
-                        fixture.exec_preset.n_layers,
-                        fixture.exec_preset.n_experts,
-                        fixture.exec_preset.hi,
-                        fixture.exec_preset.lo,
-                        &counts,
-                        n_hi,
-                    );
-                    fixture.eval_backend(
-                        Box::new(b), false, w, n_prompts, prompt_len,
-                    )?
-                }
-                m => fixture.eval(m, w, n_prompts, prompt_len, Some(n_hi))?,
+            let (hyp, _) = if method == "static-map" {
+                let b = registry
+                    .build(
+                        method,
+                        &BackendCtx::new(
+                            &fixture.exec_preset,
+                            &map_cfg,
+                            &DeviceConfig::default(),
+                        )
+                        .with_counts(&counts),
+                    )
+                    .map_err(|e| anyhow!(e))?;
+                fixture.eval_backend(b, false, w, n_prompts, prompt_len)?
+            } else {
+                fixture.eval(method, w, n_prompts, prompt_len, Some(n_hi))?
             };
             let kl = ref_logits
                 .iter()
@@ -264,29 +270,18 @@ pub fn a5_static_map_shift(fast: bool) -> Result<String> {
 /// long-horizon policy: same envelope, same never-stall contract —
 /// different occupants of the hi-precision slots.
 pub fn a6_reactive_vs_policy(fast: bool) -> Result<String> {
-    use crate::baselines::HobbitBackend;
-
     let rounds = if fast { 3 } else { 8 };
     let preset = ModelPreset::qwen30b_sim();
     let cfg = ServingConfig::default();
     let dev = DeviceConfig::default();
+    let registry = BackendRegistry::with_builtins();
     let mut t = Table::new(&[
         "policy", "hi-tier traffic %", "migrated GB", "tpop p99",
     ]);
     for which in ["dynaexq", "hobbit"] {
-        let backend: Box<dyn crate::serving::backend::ResidencyBackend> =
-            match which {
-                "dynaexq" => Box::new(
-                    crate::serving::backend::DynaExqBackend::new(
-                        &preset, &cfg, &dev,
-                    )
-                    .map_err(|e| anyhow!(e))?,
-                ),
-                _ => Box::new(
-                    HobbitBackend::new(&preset, &cfg, &dev)
-                        .map_err(|e| anyhow!(e))?,
-                ),
-            };
+        let backend = registry
+            .build(which, &BackendCtx::new(&preset, &cfg, &dev))
+            .map_err(|e| anyhow!(e))?;
         let mut e = Engine::new(
             &preset,
             &WorkloadProfile::text(),

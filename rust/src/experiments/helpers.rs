@@ -1,15 +1,24 @@
 //! Shared construction helpers for the experiment harnesses.
+//!
+//! All backend construction routes through the
+//! [`BackendRegistry`](crate::serving::registry::BackendRegistry); these
+//! helpers only add the experiment-harness conveniences (name → preset /
+//! profile lookups, warmup, one-call sessions).
 
 use anyhow::{anyhow, Result};
 
-use crate::baselines::ExpertFlowBackend;
 use crate::config::{DeviceConfig, ModelPreset, ServingConfig};
-use crate::serving::backend::{DynaExqBackend, ResidencyBackend, StaticBackend};
+use crate::serving::backend::ResidencyBackend;
 use crate::serving::engine::{Engine, EngineConfig};
+use crate::serving::registry::{BackendCtx, BackendRegistry};
+use crate::serving::session::ServeSession;
 use crate::workload::WorkloadProfile;
 
-/// Methods compared across the paper's performance experiments.
-pub const METHODS: &[&str] = &["static", "dynaexq", "expertflow"];
+/// Methods compared across the paper's performance experiments (every
+/// batch-sweep figure runs each of these; the registry knows more — e.g.
+/// the quality-only `fp16`/`static-hi` tiers and the `counting` pass).
+pub const METHODS: &[&str] =
+    &["static", "dynaexq", "expertflow", "hobbit", "static-map"];
 
 /// The paper's batch-size sweep.
 pub const BATCHES: &[usize] = &[1, 2, 4, 8, 16, 32];
@@ -24,21 +33,23 @@ pub fn profile(workload: &str) -> Result<WorkloadProfile> {
         .ok_or_else(|| anyhow!("unknown workload {workload:?}"))
 }
 
-/// Build a residency backend for a method name.
+/// Build a residency backend for a method name (registry lookup). Pass the
+/// serving workload when one is known — offline-calibrated methods
+/// (static-map) use it as their calibration input.
 pub fn backend(
     method: &str,
     preset: &ModelPreset,
     cfg: &ServingConfig,
     dev: &DeviceConfig,
+    workload: Option<&WorkloadProfile>,
 ) -> Result<Box<dyn ResidencyBackend>> {
-    Ok(match method {
-        "static" => Box::new(StaticBackend::for_preset(preset)),
-        "dynaexq" => Box::new(
-            DynaExqBackend::new(preset, cfg, dev).map_err(|e| anyhow!(e))?,
-        ),
-        "expertflow" => Box::new(ExpertFlowBackend::new(preset, cfg, dev)),
-        other => return Err(anyhow!("unknown method {other:?}")),
-    })
+    let mut ctx = BackendCtx::new(preset, cfg, dev);
+    if let Some(w) = workload {
+        ctx = ctx.with_profile(w);
+    }
+    BackendRegistry::with_builtins()
+        .build(method, &ctx)
+        .map_err(|e| anyhow!(e))
 }
 
 /// Build a modeled engine for (model, method, workload).
@@ -53,7 +64,9 @@ pub fn engine(
     let w = profile(workload)?;
     let cfg = ServingConfig::default();
     let dev = DeviceConfig::default();
-    let b = backend(method, &p, &cfg, &dev)?;
+    // The serving workload is the calibration input for offline-calibrated
+    // methods (static-map).
+    let b = backend(method, &p, &cfg, &dev, Some(&w))?;
     Ok(Engine::new(
         &p,
         &w,
@@ -63,18 +76,43 @@ pub fn engine(
     ))
 }
 
-/// Warm an adaptive method to steady state before measuring (the paper
-/// measures converged serving, not cold start).
+/// Warm an adaptive method to steady state before measuring (thin alias
+/// for [`Engine::warm`], kept for the experiment harnesses).
 pub fn warm(engine: &mut Engine, workload: &WorkloadProfile, rounds: usize) {
-    for _ in 0..rounds {
-        engine.serve_uniform(workload, 8, 128, 16);
-    }
-    // discard warmup metrics
-    engine.metrics = Default::default();
-    engine.activation = Default::default();
+    engine.warm(workload, rounds);
 }
 
-/// One self-contained serving session (CLI `serve`).
+/// One self-contained serving session (CLI `serve`), on the builder API.
+/// Returns the session (for snapshots) plus its human-readable report.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_session_with(
+    model: &str,
+    method: &str,
+    workload: &str,
+    batch: usize,
+    prompt: usize,
+    output: usize,
+    rounds: usize,
+    seed: u64,
+    warmup: usize,
+) -> Result<(ServeSession, String)> {
+    let mut s = ServeSession::builder()
+        .model(model)
+        .method(method)
+        .workload(workload)
+        .seed(seed)
+        .warmup(warmup)
+        .build()?;
+    s.serve_rounds(rounds, batch, prompt, output)?;
+    let report = format!(
+        "model {model} | method {method} | workload {workload} | \
+         batch {batch} prompt {prompt} output {output} × {rounds} rounds\n{}",
+        s.report(),
+    );
+    Ok((s, report))
+}
+
+/// [`serve_session_with`] at the default seed + warmup, report only.
 pub fn serve_session(
     model: &str,
     method: &str,
@@ -84,24 +122,10 @@ pub fn serve_session(
     output: usize,
     rounds: usize,
 ) -> Result<String> {
-    let w = profile(workload)?;
-    let mut e = engine(model, method, workload, 0xC0FFEE, true)?;
-    warm(&mut e, &w, 2);
-    for _ in 0..rounds {
-        e.serve_uniform(&w, batch, prompt, output);
-    }
-    Ok(format!(
-        "model {model} | method {method} | workload {workload} | \
-         batch {batch} prompt {prompt} output {output} × {rounds} rounds\n\
-         {}\nactivation: prefill {:.1}% decode {:.1}% | hi-tier {:.1}% | \
-         migrated {:.1} GB | wait p99 {:.4}s",
-        e.metrics.summary(),
-        e.activation.prefill_avg() * 100.0,
-        e.activation.decode_avg() * 100.0,
-        e.backend.hi_fraction() * 100.0,
-        e.backend.migrated_bytes() as f64 / 1e9,
-        e.metrics.wait.p99(),
-    ))
+    let (_, report) = serve_session_with(
+        model, method, workload, batch, prompt, output, rounds, 0xC0FFEE, 2,
+    )?;
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -114,10 +138,21 @@ mod tests {
         let cfg = ServingConfig::default();
         let dev = DeviceConfig::default();
         for m in METHODS {
-            let b = backend(m, &p, &cfg, &dev).unwrap();
+            let b = backend(m, &p, &cfg, &dev, None).unwrap();
             assert!(!b.name().is_empty());
         }
-        assert!(backend("nope", &p, &cfg, &dev).is_err());
+        let err =
+            backend("nope", &p, &cfg, &dev, None).unwrap_err().to_string();
+        assert!(err.contains("hobbit") && err.contains("static-map"), "{err}");
+    }
+
+    #[test]
+    fn engine_covers_all_serving_methods() {
+        for m in METHODS {
+            let mut e = engine("phi-sim", m, "text", 1, false).unwrap();
+            e.serve_uniform(&WorkloadProfile::text(), 2, 16, 2);
+            assert_eq!(e.metrics.e2e.count(), 2, "{m}");
+        }
     }
 
     #[test]

@@ -17,7 +17,7 @@ use anyhow::{bail, Result};
 
 use crate::cli::Args;
 
-/// `dynaexq serve` — one modeled serving session.
+/// `dynaexq serve` — one serving session on the builder API.
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let model = args.get_or("model", "qwen30b-sim");
     let method = args.get_or("method", "dynaexq");
@@ -26,9 +26,16 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let prompt = args.get_parse::<usize>("prompt").unwrap_or(512);
     let output = args.get_parse::<usize>("output").unwrap_or(64);
     let rounds = args.get_parse::<usize>("rounds").unwrap_or(4);
-    let report =
-        helpers::serve_session(model, method, workload, batch, prompt, output, rounds)?;
+    let seed = args.get_parse::<u64>("seed").unwrap_or(0xC0FFEE);
+    let warmup = args.get_parse::<usize>("warmup").unwrap_or(2);
+    let (session, report) = helpers::serve_session_with(
+        model, method, workload, batch, prompt, output, rounds, seed, warmup,
+    )?;
     println!("{report}");
+    if args.has("kv") {
+        // machine-readable snapshot (MetricsSnapshot kv encoding)
+        println!("{}", session.snapshot().encode());
+    }
     Ok(())
 }
 
@@ -118,11 +125,14 @@ pub fn cmd_trace(args: &Args) -> Result<()> {
     }
     if let Some(path) = args.get("replay") {
         // Replay a trace through a residency backend; report its behaviour.
+        // `--workload` names the trace's workload, which is also the
+        // calibration input for offline-calibrated methods (static-map).
         let p = helpers::preset(model)?;
+        let w = helpers::profile(workload)?;
         let method = args.get_or("method", "dynaexq");
         let cfg = crate::config::ServingConfig::default();
         let dev = crate::config::DeviceConfig::default();
-        let mut backend = helpers::backend(method, &p, &cfg, &dev)?;
+        let mut backend = helpers::backend(method, &p, &cfg, &dev, Some(&w))?;
         let trace =
             crate::workload::Trace::load(std::path::Path::new(path))?;
         let tick_s = args

@@ -16,10 +16,9 @@ use crate::quality::{
     greedy_agreement, logit_kl, logit_rel_err, perplexity, QualityReport,
 };
 use crate::runtime::Runtime;
-use crate::serving::backend::{
-    CountingBackend, DynaExqBackend, ResidencyBackend, StaticBackend,
-};
+use crate::serving::backend::{CountingBackend, ResidencyBackend};
 use crate::serving::numeric::NumericEngine;
+use crate::serving::registry::{BackendCtx, BackendRegistry};
 use crate::util::XorShiftRng;
 use crate::workload::WorkloadProfile;
 
@@ -33,37 +32,47 @@ pub fn logical_n_hi(p: &ModelPreset, cfg: &ServingConfig) -> Result<usize> {
     Ok(plan.n_hi_per_layer)
 }
 
+/// Methods meaningful in the numeric quality harness. Offloading methods
+/// (`expertflow`, `hobbit`) plan their envelope at paper scale, which the
+/// executed small model cannot represent — a default-budget plan would
+/// degenerate to all-hi residency and misreport the baseline.
+pub const QUALITY_METHODS: &[&str] =
+    &["fp16", "static", "static-hi", "dynaexq", "static-map"];
+
 fn make_backend(
     method: &str,
     exec_preset: &ModelPreset,
     plan_preset: &ModelPreset,
     n_hi: Option<usize>,
+    calib_counts: Option<&[Vec<u64>]>,
 ) -> Result<Box<dyn ResidencyBackend>> {
-    Ok(match method {
-        "fp16" => Box::new(StaticBackend::new(Precision::Fp16)),
-        "static" => Box::new(StaticBackend::new(exec_preset.lo)),
-        "static-hi" => Box::new(StaticBackend::new(exec_preset.hi)),
-        "dynaexq" => {
-            let mut cfg = ServingConfig::default();
-            // Hot capacity per layer comes from the *paper-scale* plan
-            // (48 GB envelope over the real model's layer count) so the
-            // executed model's hot fraction matches deployment.
-            cfg.n_hi_override = Some(match n_hi {
-                Some(n) => n,
-                None => logical_n_hi(plan_preset, &ServingConfig::default())?,
-            });
-            cfg.max_inflight_promotions = 64;
-            Box::new(
-                DynaExqBackend::new(
-                    exec_preset,
-                    &cfg,
-                    &DeviceConfig::default(),
-                )
-                .map_err(|e| anyhow!(e))?,
-            )
-        }
-        other => return Err(anyhow!("unknown quality method {other:?}")),
-    })
+    if !QUALITY_METHODS.contains(&method) {
+        return Err(anyhow!(
+            "method {method:?} is not a quality method; quality methods: {}",
+            QUALITY_METHODS.join(", ")
+        ));
+    }
+    let mut cfg = ServingConfig::default();
+    if matches!(method, "dynaexq" | "static-map") {
+        // Hot capacity per layer comes from the *paper-scale* plan
+        // (48 GB envelope over the real model's layer count) so the
+        // executed model's hot fraction matches deployment.
+        cfg.n_hi_override = Some(match n_hi {
+            Some(n) => n,
+            None => logical_n_hi(plan_preset, &ServingConfig::default())?,
+        });
+    }
+    if method == "dynaexq" {
+        cfg.max_inflight_promotions = 64;
+    }
+    let dev = DeviceConfig::default();
+    let mut ctx = BackendCtx::new(exec_preset, &cfg, &dev);
+    if let Some(c) = calib_counts {
+        ctx = ctx.with_counts(c);
+    }
+    BackendRegistry::with_builtins()
+        .build(method, &ctx)
+        .map_err(|e| anyhow!(e))
 }
 
 /// Shared fixture: runtime + weights for one model (expensive — reuse).
@@ -86,7 +95,10 @@ impl QualityFixture {
 
     /// Evaluate one method on `n_prompts` prompts; returns (per-prompt
     /// logits, ppl mean). DynaExq gets a warmup phase on the same workload
-    /// so its hotness estimate converges before measurement.
+    /// so its hotness estimate converges before measurement; `static-map`
+    /// gets a real (numeric-router) calibration pass on the same workload
+    /// before its map is fixed — the modeled-sampler fallback the registry
+    /// uses elsewhere does not describe the numeric engine's routing.
     pub fn eval(
         &self,
         method: &str,
@@ -95,8 +107,26 @@ impl QualityFixture {
         prompt_len: usize,
         n_hi: Option<usize>,
     ) -> Result<(Vec<Vec<f32>>, f64)> {
-        let backend =
-            make_backend(method, &self.exec_preset, &self.plan_preset, n_hi)?;
+        if method == "static-map" {
+            let counts =
+                self.calibrate_counts(workload, n_prompts, prompt_len)?;
+            let backend = make_backend(
+                method,
+                &self.exec_preset,
+                &self.plan_preset,
+                n_hi,
+                Some(&counts),
+            )?;
+            return self
+                .eval_backend(backend, false, workload, n_prompts, prompt_len);
+        }
+        let backend = make_backend(
+            method,
+            &self.exec_preset,
+            &self.plan_preset,
+            n_hi,
+            None,
+        )?;
         self.eval_backend(
             backend,
             method == "dynaexq",

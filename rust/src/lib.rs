@@ -13,6 +13,11 @@
 //!
 //! ## Layering (see DESIGN.md)
 //!
+//! * **L4 (serving front door)** — [`serving::session::ServeSession`]:
+//!   a builder-validated session API over a pluggable
+//!   [`serving::registry::BackendRegistry`] (method name → residency
+//!   backend) and [`serving::scheduler::Scheduler`] (closed-batch /
+//!   continuous-batching admission policies).
 //! * **L3 (this crate)** — the coordinator: serving engine, continuous
 //!   batcher, [`coordinator::ver`] (versioned expert residency),
 //!   deterministic [`coordinator::pools`], [`coordinator::budget`],
@@ -47,3 +52,5 @@ pub use config::{DeviceConfig, ModelPreset, ServingConfig};
 pub use coordinator::Coordinator;
 pub use serving::engine::Engine;
 pub use serving::numeric::NumericEngine;
+pub use serving::registry::{BackendCtx, BackendRegistry};
+pub use serving::session::{MetricsSnapshot, ServeSession, SessionBuilder};

@@ -19,12 +19,15 @@ USAGE:
     dynaexq <subcommand> [--flag value]...
 
 SUBCOMMANDS:
-    serve    Run a modeled serving session.
+    serve    Run a modeled serving session (SessionBuilder API).
                --model qwen30b-sim|qwen80b-sim|phi-sim   (default qwen30b-sim)
-               --method dynaexq|static|expertflow        (default dynaexq)
+               --method dynaexq|static|static-hi|fp16|static-map|expertflow|
+                        hobbit|counting                  (default dynaexq)
                --workload text|math|code                 (default text)
                --batch N (default 8)  --prompt N (default 512)
                --output N (default 64) --rounds N (default 4)
+               --seed S --warmup N (default 2)
+               --kv   (also print the machine-readable metrics snapshot)
     report   Regenerate a paper table/figure.
                --exp t1|t2|t4|f1|f2|f3|f6..f10|a1..a7|all  [--fast]
     quality  Numeric quality run (real PJRT execution).
@@ -33,7 +36,7 @@ SUBCOMMANDS:
     trace    Router traces: statistics, recording, replay.
                --model ... --workload ... --iters N
                --record out.dxtr [--batch B --seed S]
-               --replay in.dxtr [--method dynaexq|static|expertflow]
+               --replay in.dxtr [--method <any registered method>]
     help     This text.
 ";
 

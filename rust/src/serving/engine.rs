@@ -16,6 +16,7 @@ use crate::util::XorShiftRng;
 use crate::workload::{Request, RoutingSampler, WorkloadProfile};
 
 use super::backend::ResidencyBackend;
+use super::scheduler::{ClosedBatch, ContinuousBatch, Scheduler};
 
 /// Engine knobs.
 #[derive(Clone, Debug)]
@@ -51,13 +52,15 @@ impl ActivationStats {
     }
 }
 
-struct ActiveRequest {
-    req: Request,
-    generated: usize,
-    ctx: usize,
-    #[allow(dead_code)] // per-request prefill timestamp, kept for tracing
-    prefill_done_s: f64,
-    last_token_s: f64,
+/// One admitted request in the decode batch — owned by the [`Scheduler`]
+/// driving the engine, mutated by [`Engine::decode_round`].
+pub struct ActiveRequest {
+    pub req: Request,
+    pub generated: usize,
+    pub ctx: usize,
+    /// Per-request prefill timestamp (tracing / SLO-aware schedulers).
+    pub prefill_done_s: f64,
+    pub last_token_s: f64,
 }
 
 /// The modeled engine.
@@ -123,61 +126,86 @@ impl Engine {
         self.clock.now()
     }
 
+    /// Decode scheduling cap.
+    pub fn max_batch(&self) -> usize {
+        self.cfg.max_batch
+    }
+
     /// Serve a closed batch: all requests arrive at `clock.now`, prefill
     /// runs request-by-request, then decode proceeds in lockstep until all
     /// outputs complete. This is the paper's measurement harness shape for
-    /// the batch-size sweeps.
+    /// the batch-size sweeps. Equivalent to [`Engine::serve_with`] under
+    /// [`ClosedBatch`].
     pub fn serve_batch(&mut self, requests: Vec<Request>) {
-        let mut active: Vec<ActiveRequest> = Vec::new();
-        for req in requests {
-            // Prefill runs request-by-request on the compute stream; TTFT
-            // is measured from *arrival*, so queueing behind the batch's
-            // earlier prefills is included (the paper's batched-TTFT rise).
-            let arrival = req.arrival_s;
-            let start = self.clock.now().max(arrival);
-            let done = self.prefill(&req, start);
-            self.metrics.ttft.record(done - arrival);
-            self.metrics.prefill_tokens += req.prompt_len as u64;
-            active.push(ActiveRequest {
-                ctx: req.prompt_len,
-                generated: 0,
-                prefill_done_s: done,
-                last_token_s: done,
-                req,
-            });
-            let now = self.clock.now();
-            let stall = self.backend.tick(now);
-            self.clock.advance_by(stall);
-        }
+        self.serve_with(&mut ClosedBatch, requests);
+    }
 
-        while !active.is_empty() {
-            let step_end = self.decode_step(&mut active);
-            let mut i = 0;
-            while i < active.len() {
-                // TPOP counts inter-token gaps from the second generated
-                // token on (the first gap is prefill queueing, reported as
-                // TTFT, not TPOP).
-                if active[i].generated > 0 {
-                    self.metrics
-                        .tpop
-                        .record(step_end - active[i].last_token_s);
-                }
-                active[i].generated += 1;
-                active[i].ctx += 1;
-                active[i].last_token_s = step_end;
-                self.metrics.decode_tokens += 1;
-                if active[i].generated >= active[i].req.output_len {
-                    let r = active.swap_remove(i);
-                    self.metrics.e2e.record(step_end - r.req.arrival_s);
-                } else {
-                    i += 1;
-                }
-            }
-            let now = self.clock.now();
-            let stall = self.backend.tick(now);
-            self.clock.advance_by(stall);
-        }
+    /// Drive `requests` to completion under an arbitrary [`Scheduler`],
+    /// then stamp the run duration.
+    pub fn serve_with(
+        &mut self,
+        scheduler: &mut dyn Scheduler,
+        requests: Vec<Request>,
+    ) {
+        scheduler.run(self, requests);
         self.metrics.duration_s = self.clock.now();
+    }
+
+    /// Admit one request into `active`: prefill it on the compute stream
+    /// (TTFT is measured from *arrival*, so queueing behind the batch's
+    /// earlier prefills is included — the paper's batched-TTFT rise),
+    /// record its tokens, and give the backend its iteration-boundary tick.
+    pub fn admit(&mut self, req: Request, active: &mut Vec<ActiveRequest>) {
+        let arrival = req.arrival_s;
+        let start = self.clock.now().max(arrival);
+        let done = self.prefill(&req, start);
+        self.metrics.ttft.record(done - arrival);
+        self.metrics.prefill_tokens += req.prompt_len as u64;
+        active.push(ActiveRequest {
+            ctx: req.prompt_len,
+            generated: 0,
+            prefill_done_s: done,
+            last_token_s: done,
+            req,
+        });
+        self.tick_backend();
+    }
+
+    /// One lockstep decode iteration over `active` plus the per-token
+    /// bookkeeping: TPOP recording, context/generated advance, completed-
+    /// request retirement (E2E recording), and the backend tick.
+    pub fn decode_round(&mut self, active: &mut Vec<ActiveRequest>) {
+        let step_end = self.decode_step(active);
+        let mut i = 0;
+        while i < active.len() {
+            // TPOP counts inter-token gaps from the second generated
+            // token on (the first gap is prefill queueing, reported as
+            // TTFT, not TPOP).
+            if active[i].generated > 0 {
+                self.metrics
+                    .tpop
+                    .record(step_end - active[i].last_token_s);
+            }
+            active[i].generated += 1;
+            active[i].ctx += 1;
+            active[i].last_token_s = step_end;
+            self.metrics.decode_tokens += 1;
+            if active[i].generated >= active[i].req.output_len {
+                let r = active.swap_remove(i);
+                self.metrics.e2e.record(step_end - r.req.arrival_s);
+            } else {
+                i += 1;
+            }
+        }
+        self.tick_backend();
+    }
+
+    /// Iteration boundary: let the backend publish residency updates and
+    /// charge any forced stall (blocking-transition ablation) to the clock.
+    fn tick_backend(&mut self) {
+        let now = self.clock.now();
+        let stall = self.backend.tick(now);
+        self.clock.advance_by(stall);
     }
 
     /// Prefill one request; returns its completion (first-token) time.
@@ -296,6 +324,17 @@ impl Engine {
         end
     }
 
+    /// Warm to steady state and discard the warmup metrics (the paper
+    /// measures converged serving, not cold start) — the one warmup
+    /// protocol shared by the session builder and the experiment harnesses.
+    pub fn warm(&mut self, profile: &WorkloadProfile, rounds: usize) {
+        for _ in 0..rounds {
+            self.serve_uniform(profile, 8, 128, 16);
+        }
+        self.metrics = Default::default();
+        self.activation = Default::default();
+    }
+
     /// Convenience: generate + serve one closed batch of identical shape.
     pub fn serve_uniform(
         &mut self,
@@ -316,67 +355,10 @@ impl Engine {
     /// (`arrival_s` honored); new arrivals are prefilled and join the
     /// decode batch as soon as a slot under `max_batch` frees up. Decode
     /// proceeds in lockstep over whoever is active — vLLM-style iteration
-    /// scheduling over the modeled device.
-    pub fn serve_stream(&mut self, mut pending: Vec<Request>) {
-        pending.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
-        pending.reverse(); // pop() takes the earliest
-        let mut active: Vec<ActiveRequest> = Vec::new();
-
-        while !pending.is_empty() || !active.is_empty() {
-            // Admit every arrived request while capacity remains.
-            while active.len() < self.cfg.max_batch {
-                let ready = pending
-                    .last()
-                    .map(|r| r.arrival_s <= self.clock.now())
-                    .unwrap_or(false);
-                let can_skip_ahead = active.is_empty() && !pending.is_empty();
-                if !ready && !can_skip_ahead {
-                    break;
-                }
-                let req = pending.pop().unwrap();
-                let arrival = req.arrival_s;
-                let start = self.clock.now().max(arrival);
-                let done = self.prefill(&req, start);
-                self.metrics.ttft.record(done - arrival);
-                self.metrics.prefill_tokens += req.prompt_len as u64;
-                active.push(ActiveRequest {
-                    ctx: req.prompt_len,
-                    generated: 0,
-                    prefill_done_s: done,
-                    last_token_s: done,
-                    req,
-                });
-                let now = self.clock.now();
-                let stall = self.backend.tick(now);
-                self.clock.advance_by(stall);
-            }
-            if active.is_empty() {
-                continue;
-            }
-            let step_end = self.decode_step(&mut active);
-            let mut i = 0;
-            while i < active.len() {
-                if active[i].generated > 0 {
-                    self.metrics
-                        .tpop
-                        .record(step_end - active[i].last_token_s);
-                }
-                active[i].generated += 1;
-                active[i].ctx += 1;
-                active[i].last_token_s = step_end;
-                self.metrics.decode_tokens += 1;
-                if active[i].generated >= active[i].req.output_len {
-                    let r = active.swap_remove(i);
-                    self.metrics.e2e.record(step_end - r.req.arrival_s);
-                } else {
-                    i += 1;
-                }
-            }
-            let now = self.clock.now();
-            let stall = self.backend.tick(now);
-            self.clock.advance_by(stall);
-        }
-        self.metrics.duration_s = self.clock.now();
+    /// scheduling over the modeled device. Equivalent to
+    /// [`Engine::serve_with`] under [`ContinuousBatch`].
+    pub fn serve_stream(&mut self, pending: Vec<Request>) {
+        self.serve_with(&mut ContinuousBatch::default(), pending);
     }
 }
 

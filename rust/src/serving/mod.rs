@@ -1,5 +1,15 @@
-//! Serving: the request loop, batcher, KV cache, and the two engines —
+//! Serving: the session front door, method registry, schedulers, KV cache,
+//! and the two engines (DESIGN.md §4) —
 //!
+//! * [`session::ServeSession`] — the serving API: a validated
+//!   `SessionBuilder` picks model/method/workload by name, builds either
+//!   engine behind the [`session::SessionEngine`] trait, and exports a
+//!   serializable [`session::MetricsSnapshot`].
+//! * [`registry::BackendRegistry`] — method name → backend factory; the
+//!   single place serving-method strings are interpreted.
+//! * [`scheduler::Scheduler`] — admission/decode sequencing policies;
+//!   [`scheduler::ClosedBatch`] and [`scheduler::ContinuousBatch`] are the
+//!   paper's two measurement shapes, new policies are plug-ins.
 //! * [`engine::Engine`] — the **modeled** serving engine: full continuous-
 //!   batching loop over the device cost model (paper-scale dims), used by
 //!   every performance experiment (TTFT/TPOP/latency/throughput sweeps).
@@ -11,13 +21,21 @@
 //!   quality runs report both.
 //!
 //! Both engines drive residency through the same [`backend::ResidencyBackend`]
-//! abstraction, which is where DynaExq and the two baselines plug in.
+//! abstraction, which is where DynaExq and the baselines plug in.
 
 pub mod backend;
 pub mod engine;
 pub mod kv_cache;
 pub mod numeric;
+pub mod registry;
+pub mod scheduler;
+pub mod session;
 
 pub use backend::ResidencyBackend;
-pub use engine::{Engine, EngineConfig};
+pub use engine::{ActiveRequest, Engine, EngineConfig};
 pub use numeric::NumericEngine;
+pub use registry::{BackendCtx, BackendRegistry};
+pub use scheduler::{ClosedBatch, ContinuousBatch, Scheduler};
+pub use session::{
+    EngineKind, MetricsSnapshot, ServeSession, SessionBuilder, SessionEngine,
+};

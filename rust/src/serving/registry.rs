@@ -1,0 +1,323 @@
+//! The method registry: one place where serving-method names become
+//! [`ResidencyBackend`] instances.
+//!
+//! Every residency behaviour the system knows — the paper's system, its
+//! baselines, and the calibration pass — is a named factory here, so the
+//! CLI, the experiment harnesses, and the quality fixtures all construct
+//! backends through the same table (DESIGN.md §4). Unknown names fail with
+//! an error that enumerates what *is* registered; new methods (plug-in
+//! policies, ablation variants) are one [`BackendRegistry::register`] call,
+//! not another string match.
+//!
+//! Registered built-ins:
+//!
+//! | name         | behaviour                                              |
+//! |--------------|--------------------------------------------------------|
+//! | `dynaexq`    | coordinator-driven online precision allocation (§3)    |
+//! | `static`     | uniform low-tier PTQ (paper's fastest baseline)        |
+//! | `static-hi`  | uniform high-tier PTQ (quality reference tier)         |
+//! | `fp16`       | uniform FP16 (quality reference, Table 4)              |
+//! | `static-map` | offline-calibrated per-expert map (MxMoE/MoPEQ class)  |
+//! | `expertflow` | offloading/prefetching comparator (paper §5.3)         |
+//! | `hobbit`     | reactive mixed-precision offloading (HOBBIT class)     |
+//! | `counting`   | fixed precision + routing-count recording (calibration)|
+
+use std::collections::BTreeMap;
+
+use crate::baselines::{ExpertFlowBackend, HobbitBackend, StaticMapBackend};
+use crate::config::{DeviceConfig, ModelPreset, ServingConfig};
+use crate::coordinator::Coordinator;
+use crate::model::Precision;
+use crate::util::XorShiftRng;
+use crate::workload::{RoutingSampler, WorkloadProfile};
+
+use super::backend::{
+    CountingBackend, DynaExqBackend, ResidencyBackend, StaticBackend,
+};
+
+/// Everything a backend factory may consult.
+///
+/// `preset`/`cfg`/`dev` are always present; `profile` and `calib_counts`
+/// are optional inputs for methods that calibrate offline (`static-map`
+/// synthesizes a calibration trace from `profile` when no explicit counts
+/// are supplied).
+pub struct BackendCtx<'a> {
+    pub preset: &'a ModelPreset,
+    pub cfg: &'a ServingConfig,
+    pub dev: &'a DeviceConfig,
+    /// Workload the session will serve (offline-calibration input).
+    pub profile: Option<&'a WorkloadProfile>,
+    /// Pre-recorded per-(layer, expert) routing counts; takes precedence
+    /// over `profile` synthesis for `static-map`.
+    pub calib_counts: Option<&'a [Vec<u64>]>,
+}
+
+impl<'a> BackendCtx<'a> {
+    pub fn new(
+        preset: &'a ModelPreset,
+        cfg: &'a ServingConfig,
+        dev: &'a DeviceConfig,
+    ) -> Self {
+        Self { preset, cfg, dev, profile: None, calib_counts: None }
+    }
+
+    pub fn with_profile(mut self, profile: &'a WorkloadProfile) -> Self {
+        self.profile = Some(profile);
+        self
+    }
+
+    pub fn with_counts(mut self, counts: &'a [Vec<u64>]) -> Self {
+        self.calib_counts = Some(counts);
+        self
+    }
+}
+
+/// A named backend constructor.
+pub type BackendFactory = Box<
+    dyn Fn(&BackendCtx) -> Result<Box<dyn ResidencyBackend>, String>
+        + Send
+        + Sync,
+>;
+
+/// Method name → factory. `BTreeMap` keeps enumeration (error messages,
+/// `methods()`) deterministic and sorted.
+pub struct BackendRegistry {
+    factories: BTreeMap<&'static str, BackendFactory>,
+}
+
+impl Default for BackendRegistry {
+    fn default() -> Self {
+        Self::with_builtins()
+    }
+}
+
+impl BackendRegistry {
+    /// An empty registry (plug-in composition from scratch).
+    pub fn empty() -> Self {
+        Self { factories: BTreeMap::new() }
+    }
+
+    /// The standard registry: all built-in residency behaviours.
+    pub fn with_builtins() -> Self {
+        let mut r = Self::empty();
+        r.register("static", |ctx| {
+            Ok(Box::new(StaticBackend::new(ctx.preset.lo)))
+        });
+        r.register("static-hi", |ctx| {
+            Ok(Box::new(StaticBackend::new(ctx.preset.hi)))
+        });
+        r.register("fp16", |_ctx| {
+            Ok(Box::new(StaticBackend::new(Precision::Fp16)))
+        });
+        r.register("dynaexq", |ctx| {
+            Ok(Box::new(DynaExqBackend::new(ctx.preset, ctx.cfg, ctx.dev)?))
+        });
+        r.register("expertflow", |ctx| {
+            Ok(Box::new(ExpertFlowBackend::new(ctx.preset, ctx.cfg, ctx.dev)))
+        });
+        r.register("hobbit", |ctx| {
+            Ok(Box::new(HobbitBackend::new(ctx.preset, ctx.cfg, ctx.dev)?))
+        });
+        r.register("static-map", |ctx| {
+            let preset = ctx.preset;
+            let layers = preset.n_layers_logical();
+            let plan = Coordinator::plan_for(preset, ctx.cfg)?;
+            let counts: Vec<Vec<u64>> = match ctx.calib_counts {
+                Some(c) => c.to_vec(),
+                None => {
+                    // No recorded counts: calibrate offline against the
+                    // session's workload (text if unspecified) by sampling
+                    // the same routing model the engine will serve.
+                    let text;
+                    let profile = match ctx.profile {
+                        Some(p) => p,
+                        None => {
+                            text = WorkloadProfile::text();
+                            &text
+                        }
+                    };
+                    synthesize_counts(profile, layers, preset)
+                }
+            };
+            Ok(Box::new(StaticMapBackend::calibrated(
+                layers,
+                preset.n_experts,
+                preset.hi,
+                preset.lo,
+                &counts,
+                plan.n_hi_per_layer,
+            )))
+        });
+        r.register("counting", |ctx| {
+            Ok(Box::new(CountingBackend::new(
+                ctx.preset.n_layers_logical(),
+                ctx.preset.n_experts,
+                Precision::Fp16,
+            )))
+        });
+        r
+    }
+
+    /// Register (or override) a method by name.
+    pub fn register<F>(&mut self, name: &'static str, factory: F)
+    where
+        F: Fn(&BackendCtx) -> Result<Box<dyn ResidencyBackend>, String>
+            + Send
+            + Sync
+            + 'static,
+    {
+        self.factories.insert(name, Box::new(factory));
+    }
+
+    /// All registered method names, sorted.
+    pub fn methods(&self) -> Vec<&'static str> {
+        self.factories.keys().copied().collect()
+    }
+
+    pub fn contains(&self, method: &str) -> bool {
+        self.factories.contains_key(method)
+    }
+
+    /// Build the backend for `method`, or an error that enumerates every
+    /// registered method.
+    pub fn build(
+        &self,
+        method: &str,
+        ctx: &BackendCtx,
+    ) -> Result<Box<dyn ResidencyBackend>, String> {
+        match self.factories.get(method) {
+            Some(f) => f(ctx)
+                .map_err(|e| format!("building method {method:?}: {e}")),
+            None => Err(format!(
+                "unknown method {method:?}; registered methods: {}",
+                self.methods().join(", ")
+            )),
+        }
+    }
+}
+
+/// Offline calibration without a recorded trace: sample the modeled router
+/// for a handful of synthetic requests and count per-(layer, expert)
+/// traffic — the same input `StaticMapBackend::calibrated` takes from a
+/// real counting run.
+fn synthesize_counts(
+    profile: &WorkloadProfile,
+    layers: usize,
+    preset: &ModelPreset,
+) -> Vec<Vec<u64>> {
+    const CALIB_REQUESTS: u64 = 64;
+    const TOKENS_PER_REQUEST: usize = 16;
+    let sampler =
+        RoutingSampler::new(profile, layers, preset.n_experts, preset.top_k);
+    let mut rng = XorShiftRng::new(profile.seed ^ 0xCA11_B8A7E);
+    let mut counts = vec![vec![0u64; preset.n_experts]; layers];
+    for tag in 0..CALIB_REQUESTS {
+        for (layer, row) in counts.iter_mut().enumerate() {
+            for _ in 0..TOKENS_PER_REQUEST {
+                for e in sampler.sample_topk(&mut rng, tag, layer) {
+                    row[e] += 1;
+                }
+            }
+        }
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx_parts() -> (ModelPreset, ServingConfig, DeviceConfig) {
+        (ModelPreset::phi_sim(), ServingConfig::default(), DeviceConfig::default())
+    }
+
+    #[test]
+    fn builds_every_builtin() {
+        let (p, cfg, dev) = ctx_parts();
+        let r = BackendRegistry::with_builtins();
+        assert_eq!(r.methods().len(), 8);
+        for m in r.methods() {
+            let b = r.build(m, &BackendCtx::new(&p, &cfg, &dev)).unwrap();
+            assert!(!b.name().is_empty(), "{m}");
+        }
+    }
+
+    #[test]
+    fn unknown_method_enumerates_registered() {
+        let (p, cfg, dev) = ctx_parts();
+        let r = BackendRegistry::with_builtins();
+        let err = r
+            .build("nope", &BackendCtx::new(&p, &cfg, &dev))
+            .unwrap_err();
+        for m in ["dynaexq", "expertflow", "hobbit", "static-map", "counting"]
+        {
+            assert!(err.contains(m), "error should list {m}: {err}");
+        }
+    }
+
+    #[test]
+    fn static_map_calibrates_on_profile_hot_set() {
+        let (p, cfg, dev) = ctx_parts();
+        let r = BackendRegistry::with_builtins();
+        let w = WorkloadProfile::text();
+        let mut b = r
+            .build(
+                "static-map",
+                &BackendCtx::new(&p, &cfg, &dev).with_profile(&w),
+            )
+            .unwrap();
+        // The globally hottest expert of the calibration workload must be
+        // pinned at the high tier.
+        let sampler =
+            RoutingSampler::new(&w, p.n_layers_logical(), p.n_experts, p.top_k);
+        let hot = sampler.global_top(0, 1)[0];
+        assert_eq!(b.resolve(0, hot, 0.0).0, p.hi);
+    }
+
+    #[test]
+    fn explicit_counts_take_precedence() {
+        let (p, cfg, dev) = ctx_parts();
+        let mut cfg = cfg;
+        cfg.n_hi_override = Some(1);
+        let layers = p.n_layers_logical();
+        let mut counts = vec![vec![0u64; p.n_experts]; layers];
+        for row in counts.iter_mut() {
+            row[5] = 1000; // expert 5 is the only trafficked expert
+        }
+        let r = BackendRegistry::with_builtins();
+        let mut b = r
+            .build(
+                "static-map",
+                &BackendCtx::new(&p, &cfg, &dev).with_counts(&counts),
+            )
+            .unwrap();
+        assert_eq!(b.resolve(0, 5, 0.0).0, p.hi);
+        assert_eq!(b.resolve(0, 0, 0.0).0, p.lo);
+    }
+
+    #[test]
+    fn infeasible_budget_fails_construction() {
+        let (p, mut cfg, dev) = ctx_parts();
+        cfg.hbm_budget_bytes = 1; // cannot even hold the all-cold model
+        let r = BackendRegistry::with_builtins();
+        for m in ["dynaexq", "hobbit", "static-map"] {
+            assert!(
+                r.build(m, &BackendCtx::new(&p, &cfg, &dev)).is_err(),
+                "{m} must reject an infeasible envelope"
+            );
+        }
+    }
+
+    #[test]
+    fn custom_registration_overrides() {
+        let (p, cfg, dev) = ctx_parts();
+        let mut r = BackendRegistry::empty();
+        assert!(r.build("static", &BackendCtx::new(&p, &cfg, &dev)).is_err());
+        r.register("static", |ctx| {
+            Ok(Box::new(StaticBackend::new(ctx.preset.hi)))
+        });
+        let mut b =
+            r.build("static", &BackendCtx::new(&p, &cfg, &dev)).unwrap();
+        assert_eq!(b.resolve(0, 0, 0.0).0, p.hi);
+    }
+}

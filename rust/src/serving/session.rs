@@ -1,0 +1,783 @@
+//! The serving front door: `SessionBuilder` → [`ServeSession`].
+//!
+//! One fluent, validated entry point for every way this repo serves a
+//! model (DESIGN.md §4): pick a model / method / workload by name, tune
+//! the envelope and engine knobs, and get back a session that hides which
+//! engine runs underneath —
+//!
+//! * [`EngineKind::Modeled`] — the cost-model [`Engine`] (paper-scale
+//!   dims, every performance experiment);
+//! * [`EngineKind::Numeric`] — the [`NumericEngine`] (real PJRT execution
+//!   of the small model, quality experiments).
+//!
+//! Both sit behind the [`SessionEngine`] trait; methods come from the
+//! [`BackendRegistry`], so `hobbit` or `static-map` are exactly as
+//! reachable as `dynaexq`. Validation (unknown names enumerate the valid
+//! set; infeasible HBM envelopes fail fast) happens in
+//! [`SessionBuilder::build`], *before* any engine state is constructed.
+//! Results export as a [`MetricsSnapshot`] — a flat, `key=value`-encoded
+//! record (the repo's serde-free serialization, [`crate::config::kv`]).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{kv, DeviceConfig, ModelPreset, ServingConfig};
+use crate::metrics::ServingMetrics;
+use crate::model::ModelWeights;
+use crate::runtime::Runtime;
+use crate::util::XorShiftRng;
+use crate::workload::{Request, WorkloadProfile};
+
+use super::backend::ResidencyBackend;
+use super::engine::{ActivationStats, Engine, EngineConfig};
+use super::numeric::{NumericEngine, SeqState};
+use super::registry::{BackendCtx, BackendRegistry};
+
+/// Which engine a session runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Cost-model engine at paper-scale dims (performance experiments).
+    Modeled,
+    /// Real PJRT execution of the small model (quality experiments).
+    Numeric,
+}
+
+/// The engine behaviour a [`ServeSession`] needs, independent of whether
+/// numerics are modeled or executed.
+pub trait SessionEngine {
+    fn kind(&self) -> EngineKind;
+
+    /// Serve one closed batch of uniform shape.
+    fn serve_closed(
+        &mut self,
+        batch: usize,
+        prompt_len: usize,
+        output_len: usize,
+    ) -> Result<()>;
+
+    /// Serve explicit requests (arrivals honored — modeled engine only).
+    fn serve_requests(&mut self, requests: Vec<Request>) -> Result<()>;
+
+    /// Switch the live workload profile (shift experiments).
+    fn set_profile(&mut self, profile: &WorkloadProfile);
+
+    fn metrics(&self) -> &ServingMetrics;
+    fn reset_metrics(&mut self);
+    fn backend(&self) -> &dyn ResidencyBackend;
+    /// Activation-ratio samples, when the engine tracks them.
+    fn activation(&self) -> Option<&ActivationStats>;
+    /// Modeled clock.
+    fn now(&self) -> f64;
+}
+
+// ---------------------------------------------------------------------------
+// Modeled engine adapter
+// ---------------------------------------------------------------------------
+
+struct ModeledSession {
+    engine: Engine,
+    profile: WorkloadProfile,
+}
+
+impl SessionEngine for ModeledSession {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Modeled
+    }
+
+    fn serve_closed(
+        &mut self,
+        batch: usize,
+        prompt_len: usize,
+        output_len: usize,
+    ) -> Result<()> {
+        self.engine
+            .serve_uniform(&self.profile, batch, prompt_len, output_len);
+        Ok(())
+    }
+
+    fn serve_requests(&mut self, requests: Vec<Request>) -> Result<()> {
+        self.engine.serve_stream(requests);
+        Ok(())
+    }
+
+    fn set_profile(&mut self, profile: &WorkloadProfile) {
+        self.engine.set_profile(profile);
+        self.profile = profile.clone();
+    }
+
+    fn metrics(&self) -> &ServingMetrics {
+        &self.engine.metrics
+    }
+
+    fn reset_metrics(&mut self) {
+        self.engine.metrics = Default::default();
+        self.engine.activation = Default::default();
+    }
+
+    fn backend(&self) -> &dyn ResidencyBackend {
+        self.engine.backend.as_ref()
+    }
+
+    fn activation(&self) -> Option<&ActivationStats> {
+        Some(&self.engine.activation)
+    }
+
+    fn now(&self) -> f64 {
+        self.engine.now()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Numeric engine adapter
+// ---------------------------------------------------------------------------
+
+struct NumericSession {
+    engine: NumericEngine,
+    profile: WorkloadProfile,
+    rng: XorShiftRng,
+    metrics: ServingMetrics,
+    next_tag: u64,
+}
+
+impl SessionEngine for NumericSession {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Numeric
+    }
+
+    fn serve_closed(
+        &mut self,
+        batch: usize,
+        prompt_len: usize,
+        output_len: usize,
+    ) -> Result<()> {
+        // Closed-batch shape mirrored from the modeled engine: prefill
+        // request-by-request (TTFT from batch arrival), then lockstep
+        // decode. The numeric engine advances the same modeled clock.
+        let arrival = self.engine.now();
+        let mut seqs: Vec<SeqState> = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let prompt = self.profile.sample_prompt(&mut self.rng, prompt_len);
+            let tag = self.next_tag;
+            self.next_tag += 1;
+            let (kv, _logits) = self
+                .engine
+                .prefill(&prompt, tag)
+                .context("numeric prefill")?;
+            self.metrics.ttft.record(self.engine.now() - arrival);
+            self.metrics.prefill_tokens += prompt_len as u64;
+            seqs.push(SeqState {
+                kv,
+                last_token: *prompt.last().unwrap(),
+                tag,
+                generated: Vec::new(),
+            });
+        }
+        let mut last_token_s = self.engine.now();
+        for step in 0..output_len {
+            self.engine.decode_step(&mut seqs).context("numeric decode")?;
+            let now = self.engine.now();
+            if step > 0 {
+                for _ in 0..batch {
+                    self.metrics.tpop.record(now - last_token_s);
+                }
+            }
+            last_token_s = now;
+            self.metrics.decode_tokens += batch as u64;
+        }
+        let done = self.engine.now();
+        for _ in 0..batch {
+            self.metrics.e2e.record(done - arrival);
+        }
+        self.metrics.duration_s = done;
+        Ok(())
+    }
+
+    fn serve_requests(&mut self, _requests: Vec<Request>) -> Result<()> {
+        bail!(
+            "open-loop serving is modeled-engine only; build the session \
+             with EngineKind::Modeled"
+        )
+    }
+
+    fn set_profile(&mut self, profile: &WorkloadProfile) {
+        self.profile = profile.clone();
+    }
+
+    fn metrics(&self) -> &ServingMetrics {
+        &self.metrics
+    }
+
+    fn reset_metrics(&mut self) {
+        self.metrics = Default::default();
+    }
+
+    fn backend(&self) -> &dyn ResidencyBackend {
+        self.engine.backend.as_ref()
+    }
+
+    fn activation(&self) -> Option<&ActivationStats> {
+        None
+    }
+
+    fn now(&self) -> f64 {
+        self.engine.now()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MetricsSnapshot
+// ---------------------------------------------------------------------------
+
+/// A flat, serializable record of one serving session's outcome.
+///
+/// Encodes to the repo's `key=value;...` text format (see
+/// [`crate::config::kv`]) and decodes back losslessly — f64 fields use
+/// Rust's shortest-roundtrip `Display`.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct MetricsSnapshot {
+    pub model: String,
+    pub method: String,
+    pub workload: String,
+    pub ttft_avg_s: f64,
+    pub ttft_p99_s: f64,
+    pub tpop_avg_s: f64,
+    pub tpop_p99_s: f64,
+    pub e2e_avg_s: f64,
+    pub e2e_p99_s: f64,
+    pub wait_p99_s: f64,
+    pub throughput_tok_s: f64,
+    pub decode_tokens: u64,
+    pub prefill_tokens: u64,
+    pub duration_s: f64,
+    /// Fraction of expert resolutions served at the high tier.
+    pub hi_fraction: f64,
+    pub migrated_bytes: u64,
+    /// Mean per-layer activation ratios (0 when untracked).
+    pub act_prefill: f64,
+    pub act_decode: f64,
+}
+
+impl MetricsSnapshot {
+    /// `key=value;...` encoding (order fixed for diff-friendliness).
+    pub fn encode(&self) -> String {
+        format!(
+            "model={};method={};workload={};ttft_avg_s={};ttft_p99_s={};\
+             tpop_avg_s={};tpop_p99_s={};e2e_avg_s={};e2e_p99_s={};\
+             wait_p99_s={};throughput_tok_s={};decode_tokens={};\
+             prefill_tokens={};duration_s={};hi_fraction={};\
+             migrated_bytes={};act_prefill={};act_decode={}",
+            self.model,
+            self.method,
+            self.workload,
+            self.ttft_avg_s,
+            self.ttft_p99_s,
+            self.tpop_avg_s,
+            self.tpop_p99_s,
+            self.e2e_avg_s,
+            self.e2e_p99_s,
+            self.wait_p99_s,
+            self.throughput_tok_s,
+            self.decode_tokens,
+            self.prefill_tokens,
+            self.duration_s,
+            self.hi_fraction,
+            self.migrated_bytes,
+            self.act_prefill,
+            self.act_decode,
+        )
+    }
+
+    /// Parse an [`MetricsSnapshot::encode`] string back.
+    pub fn decode(s: &str) -> Result<Self> {
+        let m = kv::parse_kv(s);
+        let text = |key: &str| -> Result<String> {
+            m.get(key).cloned().ok_or_else(|| anyhow!("missing key {key:?}"))
+        };
+        fn num<T: std::str::FromStr>(
+            m: &std::collections::HashMap<String, String>,
+            key: &str,
+        ) -> Result<T> {
+            kv::get_parse(m, key)
+                .ok_or_else(|| anyhow!("missing/invalid key {key:?}"))
+        }
+        Ok(Self {
+            model: text("model")?,
+            method: text("method")?,
+            workload: text("workload")?,
+            ttft_avg_s: num(&m, "ttft_avg_s")?,
+            ttft_p99_s: num(&m, "ttft_p99_s")?,
+            tpop_avg_s: num(&m, "tpop_avg_s")?,
+            tpop_p99_s: num(&m, "tpop_p99_s")?,
+            e2e_avg_s: num(&m, "e2e_avg_s")?,
+            e2e_p99_s: num(&m, "e2e_p99_s")?,
+            wait_p99_s: num(&m, "wait_p99_s")?,
+            throughput_tok_s: num(&m, "throughput_tok_s")?,
+            decode_tokens: num(&m, "decode_tokens")?,
+            prefill_tokens: num(&m, "prefill_tokens")?,
+            duration_s: num(&m, "duration_s")?,
+            hi_fraction: num(&m, "hi_fraction")?,
+            migrated_bytes: num(&m, "migrated_bytes")?,
+            act_prefill: num(&m, "act_prefill")?,
+            act_decode: num(&m, "act_decode")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ServeSession + SessionBuilder
+// ---------------------------------------------------------------------------
+
+/// A live serving session: one model × method × workload on one engine.
+pub struct ServeSession {
+    inner: Box<dyn SessionEngine>,
+    pub model: String,
+    pub method: String,
+    pub workload: String,
+}
+
+impl ServeSession {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    pub fn kind(&self) -> EngineKind {
+        self.inner.kind()
+    }
+
+    /// Serve one closed batch of uniform shape.
+    pub fn serve_closed(
+        &mut self,
+        batch: usize,
+        prompt_len: usize,
+        output_len: usize,
+    ) -> Result<&ServingMetrics> {
+        self.inner.serve_closed(batch, prompt_len, output_len)?;
+        Ok(self.inner.metrics())
+    }
+
+    /// Serve `rounds` closed batches of the same shape.
+    pub fn serve_rounds(
+        &mut self,
+        rounds: usize,
+        batch: usize,
+        prompt_len: usize,
+        output_len: usize,
+    ) -> Result<&ServingMetrics> {
+        for _ in 0..rounds {
+            self.inner.serve_closed(batch, prompt_len, output_len)?;
+        }
+        Ok(self.inner.metrics())
+    }
+
+    /// Serve explicit requests, arrivals honored (modeled engine only).
+    pub fn serve_requests(
+        &mut self,
+        requests: Vec<Request>,
+    ) -> Result<&ServingMetrics> {
+        self.inner.serve_requests(requests)?;
+        Ok(self.inner.metrics())
+    }
+
+    /// Switch the live workload (shift experiments). The method keeps any
+    /// state it built on the old workload — that miscalibration is exactly
+    /// what the shift experiments measure.
+    pub fn set_workload(&mut self, name: &str) -> Result<()> {
+        let p = WorkloadProfile::by_name(name).ok_or_else(|| {
+            anyhow!(
+                "unknown workload {name:?}; known workloads: {}",
+                workload_names().join(", ")
+            )
+        })?;
+        self.inner.set_profile(&p);
+        self.workload = name.to_string();
+        Ok(())
+    }
+
+    pub fn metrics(&self) -> &ServingMetrics {
+        self.inner.metrics()
+    }
+
+    pub fn reset_metrics(&mut self) {
+        self.inner.reset_metrics()
+    }
+
+    pub fn backend(&self) -> &dyn ResidencyBackend {
+        self.inner.backend()
+    }
+
+    pub fn now(&self) -> f64 {
+        self.inner.now()
+    }
+
+    /// Everything measured so far, as one flat serializable record.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.metrics();
+        let b = self.inner.backend();
+        let (act_prefill, act_decode) = match self.inner.activation() {
+            Some(a) => (a.prefill_avg(), a.decode_avg()),
+            None => (0.0, 0.0),
+        };
+        MetricsSnapshot {
+            model: self.model.clone(),
+            method: self.method.clone(),
+            workload: self.workload.clone(),
+            ttft_avg_s: m.ttft.avg(),
+            ttft_p99_s: m.ttft.p99(),
+            tpop_avg_s: m.tpop.avg(),
+            tpop_p99_s: m.tpop.p99(),
+            e2e_avg_s: m.e2e.avg(),
+            e2e_p99_s: m.e2e.p99(),
+            wait_p99_s: m.wait.p99(),
+            throughput_tok_s: m.throughput(),
+            decode_tokens: m.decode_tokens,
+            prefill_tokens: m.prefill_tokens,
+            duration_s: m.duration_s,
+            hi_fraction: b.hi_fraction(),
+            migrated_bytes: b.migrated_bytes(),
+            act_prefill,
+            act_decode,
+        }
+    }
+
+    /// Human-readable session report.
+    pub fn report(&self) -> String {
+        let s = self.snapshot();
+        format!(
+            "{}\nactivation: prefill {:.1}% decode {:.1}% | hi-tier {:.1}% \
+             | migrated {:.2} GB | wait p99 {:.4}s",
+            self.inner.metrics().summary(),
+            s.act_prefill * 100.0,
+            s.act_decode * 100.0,
+            s.hi_fraction * 100.0,
+            s.migrated_bytes as f64 / 1e9,
+            s.wait_p99_s,
+        )
+    }
+}
+
+fn model_names() -> Vec<&'static str> {
+    ModelPreset::all().iter().map(|p| p.name).collect()
+}
+
+fn workload_names() -> Vec<&'static str> {
+    WorkloadProfile::all().iter().map(|p| p.name).collect()
+}
+
+/// Fluent, validating constructor for [`ServeSession`].
+pub struct SessionBuilder {
+    model: String,
+    method: String,
+    workload: String,
+    device: DeviceConfig,
+    serving_cfg: ServingConfig,
+    max_batch: usize,
+    seed: u64,
+    warmup: usize,
+    track_activation: bool,
+    kind: EngineKind,
+    registry: Option<BackendRegistry>,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        Self {
+            model: "qwen30b-sim".into(),
+            method: "dynaexq".into(),
+            workload: "text".into(),
+            device: DeviceConfig::default(),
+            serving_cfg: ServingConfig::default(),
+            max_batch: 32,
+            seed: 0xC0FFEE,
+            warmup: 0,
+            track_activation: true,
+            kind: EngineKind::Modeled,
+            registry: None,
+        }
+    }
+}
+
+impl SessionBuilder {
+    pub fn model(mut self, name: &str) -> Self {
+        self.model = name.to_string();
+        self
+    }
+
+    pub fn method(mut self, name: &str) -> Self {
+        self.method = name.to_string();
+        self
+    }
+
+    pub fn workload(mut self, name: &str) -> Self {
+        self.workload = name.to_string();
+        self
+    }
+
+    pub fn device(mut self, dev: DeviceConfig) -> Self {
+        self.device = dev;
+        self
+    }
+
+    pub fn serving_cfg(mut self, cfg: ServingConfig) -> Self {
+        self.serving_cfg = cfg;
+        self
+    }
+
+    /// Decode scheduling cap (paper sweeps 1–32).
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.max_batch = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Warmup rounds before measurement (adaptive methods converge first;
+    /// warmup metrics are discarded).
+    pub fn warmup(mut self, rounds: usize) -> Self {
+        self.warmup = rounds;
+        self
+    }
+
+    pub fn track_activation(mut self, on: bool) -> Self {
+        self.track_activation = on;
+        self
+    }
+
+    /// Run on the numeric engine (real PJRT execution) instead of the
+    /// modeled one.
+    pub fn numeric(mut self) -> Self {
+        self.kind = EngineKind::Numeric;
+        self
+    }
+
+    pub fn engine_kind(mut self, kind: EngineKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    /// Use a custom method registry (plug-in backends).
+    pub fn registry(mut self, registry: BackendRegistry) -> Self {
+        self.registry = Some(registry);
+        self
+    }
+
+    /// Validate everything, construct the backend + engine, run warmup.
+    /// All name and feasibility errors surface here, before any engine
+    /// state exists.
+    pub fn build(self) -> Result<ServeSession> {
+        let preset = ModelPreset::by_name(&self.model).ok_or_else(|| {
+            anyhow!(
+                "unknown model {:?}; known models: {}",
+                self.model,
+                model_names().join(", ")
+            )
+        })?;
+        let profile =
+            WorkloadProfile::by_name(&self.workload).ok_or_else(|| {
+                anyhow!(
+                    "unknown workload {:?}; known workloads: {}",
+                    self.workload,
+                    workload_names().join(", ")
+                )
+            })?;
+        if self.max_batch == 0 {
+            bail!("max_batch must be ≥ 1");
+        }
+        let registry =
+            self.registry.unwrap_or_else(BackendRegistry::with_builtins);
+
+        let inner: Box<dyn SessionEngine> = match self.kind {
+            EngineKind::Modeled => {
+                let backend = registry
+                    .build(
+                        &self.method,
+                        &BackendCtx::new(
+                            &preset,
+                            &self.serving_cfg,
+                            &self.device,
+                        )
+                        .with_profile(&profile),
+                    )
+                    .map_err(|e| anyhow!(e))?;
+                let mut engine = Engine::new(
+                    &preset,
+                    &profile,
+                    backend,
+                    &self.device,
+                    EngineConfig {
+                        max_batch: self.max_batch,
+                        seed: self.seed,
+                        track_activation: self.track_activation,
+                    },
+                );
+                engine.warm(&profile, self.warmup);
+                Box::new(ModeledSession { engine, profile: profile.clone() })
+            }
+            EngineKind::Numeric => {
+                // The backend manages the *executed* layer count; budget
+                // plans stay at paper scale via cfg.n_hi_override when the
+                // caller needs deployment-matched hot fractions.
+                let exec = preset.executed_scale();
+                let backend = registry
+                    .build(
+                        &self.method,
+                        &BackendCtx::new(
+                            &exec,
+                            &self.serving_cfg,
+                            &self.device,
+                        )
+                        .with_profile(&profile),
+                    )
+                    .map_err(|e| anyhow!(e))?;
+                let weights = Arc::new(ModelWeights::generate(
+                    &exec,
+                    0xDA7A ^ exec.n_experts as u64,
+                ));
+                let rt = Arc::new(Runtime::load_default()?);
+                let engine = NumericEngine::new(rt, weights, backend)?;
+                let mut s = NumericSession {
+                    engine,
+                    rng: XorShiftRng::new(profile.seed ^ self.seed),
+                    profile: profile.clone(),
+                    metrics: ServingMetrics::default(),
+                    next_tag: 0,
+                };
+                if self.warmup > 0 {
+                    // Route warmup traffic so adaptive methods converge,
+                    // then freeze the residency map (window pinning).
+                    let mut wrng = XorShiftRng::new(profile.seed ^ 0xE7A1);
+                    for i in 0..self.warmup {
+                        let p = profile.sample_prompt(&mut wrng, 32);
+                        let _ = s.engine.prefill(&p, 1000 + i as u64)?;
+                    }
+                    s.engine.quiesce();
+                }
+                Box::new(s)
+            }
+        };
+        Ok(ServeSession {
+            inner,
+            model: self.model,
+            method: self.method,
+            workload: self.workload,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_kv_roundtrip() {
+        let s = MetricsSnapshot {
+            model: "qwen30b-sim".into(),
+            method: "dynaexq".into(),
+            workload: "text".into(),
+            ttft_avg_s: 0.123456789,
+            ttft_p99_s: 1.5,
+            tpop_avg_s: 0.033,
+            tpop_p99_s: 0.05,
+            e2e_avg_s: 2.25,
+            e2e_p99_s: 3.125,
+            wait_p99_s: 0.0,
+            throughput_tok_s: 812.5,
+            decode_tokens: 4096,
+            prefill_tokens: 65536,
+            duration_s: 12.75,
+            hi_fraction: 0.375,
+            migrated_bytes: 9_437_184,
+            act_prefill: 0.61,
+            act_decode: 0.07,
+        };
+        let decoded = MetricsSnapshot::decode(&s.encode()).unwrap();
+        assert_eq!(decoded, s);
+    }
+
+    #[test]
+    fn snapshot_decode_rejects_missing_keys() {
+        assert!(MetricsSnapshot::decode("model=x;method=y").is_err());
+    }
+
+    #[test]
+    fn builder_rejects_unknown_names_with_enumeration() {
+        let err = ServeSession::builder()
+            .model("gpt5")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("qwen30b-sim"), "{err}");
+        assert!(err.contains("phi-sim"), "{err}");
+
+        let err = ServeSession::builder()
+            .workload("poetry")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("text"), "{err}");
+        assert!(err.contains("code"), "{err}");
+
+        let err = ServeSession::builder()
+            .method("magic")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("dynaexq"), "{err}");
+        assert!(err.contains("hobbit"), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_infeasible_budget() {
+        let mut cfg = ServingConfig::default();
+        cfg.hbm_budget_bytes = 1_000_000; // can't hold the all-cold model
+        let err = ServeSession::builder()
+            .model("qwen30b-sim")
+            .method("dynaexq")
+            .serving_cfg(cfg)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("infeasible"), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_zero_batch() {
+        assert!(ServeSession::builder().max_batch(0).build().is_err());
+    }
+
+    #[test]
+    fn modeled_session_serves_and_snapshots() {
+        let mut s = ServeSession::builder()
+            .model("phi-sim")
+            .method("static")
+            .workload("text")
+            .seed(11)
+            .build()
+            .unwrap();
+        assert_eq!(s.kind(), EngineKind::Modeled);
+        s.serve_rounds(2, 2, 32, 4).unwrap();
+        let snap = s.snapshot();
+        assert_eq!(snap.decode_tokens, 16);
+        assert_eq!(snap.prefill_tokens, 128);
+        assert!(snap.throughput_tok_s > 0.0);
+        assert_eq!(MetricsSnapshot::decode(&snap.encode()).unwrap(), snap);
+        assert!(s.report().contains("tok/s"));
+    }
+
+    #[test]
+    fn session_workload_shift() {
+        let mut s = ServeSession::builder()
+            .model("phi-sim")
+            .method("dynaexq")
+            .warmup(1)
+            .build()
+            .unwrap();
+        s.set_workload("code").unwrap();
+        s.serve_closed(2, 16, 2).unwrap();
+        assert_eq!(s.workload, "code");
+        assert!(s.set_workload("nope").is_err());
+    }
+}

@@ -1,0 +1,186 @@
+//! Integration: the serving front door — registry, builder validation,
+//! scheduler equivalence, and snapshot round-tripping (DESIGN.md §4).
+
+use dynaexq::config::{DeviceConfig, ModelPreset, ServingConfig};
+use dynaexq::serving::registry::{BackendCtx, BackendRegistry};
+use dynaexq::serving::scheduler::{ClosedBatch, ContinuousBatch};
+use dynaexq::serving::session::MetricsSnapshot;
+use dynaexq::workload::{RequestGenerator, WorkloadProfile};
+use dynaexq::ServeSession;
+
+#[test]
+fn registry_lists_all_seven_methods_plus_counting() {
+    let r = BackendRegistry::with_builtins();
+    let methods = r.methods();
+    for m in [
+        "static",
+        "static-hi",
+        "fp16",
+        "static-map",
+        "dynaexq",
+        "expertflow",
+        "hobbit",
+        "counting",
+    ] {
+        assert!(methods.contains(&m), "registry missing {m}");
+    }
+    assert_eq!(methods.len(), 8);
+}
+
+#[test]
+fn unknown_method_error_enumerates_valid_names() {
+    let p = ModelPreset::phi_sim();
+    let cfg = ServingConfig::default();
+    let dev = DeviceConfig::default();
+    let err = BackendRegistry::with_builtins()
+        .build("moe-magic", &BackendCtx::new(&p, &cfg, &dev))
+        .unwrap_err();
+    for m in ["static", "dynaexq", "expertflow", "hobbit", "static-map"] {
+        assert!(err.contains(m), "{err}");
+    }
+}
+
+#[test]
+fn every_registered_method_serves_a_small_batch() {
+    let registry = BackendRegistry::with_builtins();
+    for method in registry.methods() {
+        let mut s = ServeSession::builder()
+            .model("phi-sim")
+            .method(method)
+            .workload("text")
+            .seed(13)
+            .build()
+            .unwrap_or_else(|e| panic!("build {method}: {e}"));
+        s.serve_closed(2, 32, 4)
+            .unwrap_or_else(|e| panic!("serve {method}: {e}"));
+        let snap = s.snapshot();
+        assert_eq!(snap.decode_tokens, 8, "{method}");
+        assert_eq!(snap.prefill_tokens, 64, "{method}");
+        assert!(snap.throughput_tok_s > 0.0, "{method}");
+        assert_eq!(snap.method, method);
+    }
+}
+
+#[test]
+fn builder_validation_precedes_engine_construction() {
+    // Unknown names enumerate the valid sets.
+    let err = ServeSession::builder()
+        .model("qwen-9000")
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("qwen30b-sim") && err.contains("qwen80b-sim"));
+
+    let err = ServeSession::builder()
+        .workload("prose")
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("text") && err.contains("math"));
+
+    // An envelope that cannot hold the all-cold model fails at build().
+    let mut cfg = ServingConfig::default();
+    cfg.hbm_budget_bytes = cfg.fixed_bytes; // zero slack for weights
+    for method in ["dynaexq", "hobbit"] {
+        let err = ServeSession::builder()
+            .model("qwen30b-sim")
+            .method(method)
+            .serving_cfg(cfg.clone())
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("infeasible"), "{method}: {err}");
+    }
+}
+
+#[test]
+fn cli_reachable_hobbit_and_static_map_end_to_end() {
+    // The two previously dead baselines, through the same path
+    // `dynaexq serve --method ...` takes.
+    for method in ["hobbit", "static-map"] {
+        let report = dynaexq::experiments::helpers::serve_session(
+            "qwen30b-sim",
+            method,
+            "text",
+            2,
+            32,
+            4,
+            1,
+        )
+        .unwrap_or_else(|e| panic!("{method}: {e}"));
+        assert!(report.contains("tok/s"), "{method}: {report}");
+        assert!(report.contains(method), "{method}: {report}");
+    }
+}
+
+#[test]
+fn scheduler_extraction_is_byte_identical() {
+    // serve_batch / serve_stream vs explicit schedulers: identical floats
+    // for a fixed seed, not merely close.
+    let mk = || {
+        dynaexq::experiments::helpers::engine(
+            "qwen30b-sim",
+            "dynaexq",
+            "text",
+            0xD0_0D,
+            false,
+        )
+        .unwrap()
+    };
+    let reqs = || {
+        let mut gen = RequestGenerator::new(WorkloadProfile::text(), 21);
+        (0..6).map(|i| gen.request(32, 6, i as f64 * 0.02)).collect()
+    };
+
+    let (mut a, mut b) = (mk(), mk());
+    a.serve_batch(reqs());
+    b.serve_with(&mut ClosedBatch, reqs());
+    assert_eq!(a.metrics.ttft.samples(), b.metrics.ttft.samples());
+    assert_eq!(a.metrics.tpop.samples(), b.metrics.tpop.samples());
+    assert_eq!(a.metrics.e2e.samples(), b.metrics.e2e.samples());
+    assert_eq!(a.metrics.duration_s, b.metrics.duration_s);
+
+    let (mut a, mut b) = (mk(), mk());
+    a.serve_stream(reqs());
+    b.serve_with(&mut ContinuousBatch::default(), reqs());
+    assert_eq!(a.metrics.ttft.samples(), b.metrics.ttft.samples());
+    assert_eq!(a.metrics.tpop.samples(), b.metrics.tpop.samples());
+    assert_eq!(a.metrics.e2e.samples(), b.metrics.e2e.samples());
+    assert_eq!(a.metrics.duration_s, b.metrics.duration_s);
+}
+
+#[test]
+fn snapshot_roundtrips_through_kv_text() {
+    let mut s = ServeSession::builder()
+        .model("phi-sim")
+        .method("dynaexq")
+        .workload("math")
+        .warmup(1)
+        .seed(99)
+        .build()
+        .unwrap();
+    s.serve_rounds(2, 4, 64, 8).unwrap();
+    let snap = s.snapshot();
+    let decoded = MetricsSnapshot::decode(&snap.encode()).unwrap();
+    assert_eq!(decoded, snap);
+    assert!(snap.duration_s > 0.0);
+    assert!(snap.ttft_avg_s > 0.0);
+}
+
+#[test]
+fn open_loop_serving_through_session() {
+    let mut s = ServeSession::builder()
+        .model("phi-sim")
+        .method("static")
+        .max_batch(2)
+        .seed(5)
+        .build()
+        .unwrap();
+    let mut gen = RequestGenerator::new(WorkloadProfile::text(), 3);
+    let reqs: Vec<_> =
+        (0..6).map(|i| gen.request(32, 8, i as f64 * 0.05)).collect();
+    let m = s.serve_requests(reqs).unwrap();
+    assert_eq!(m.e2e.count(), 6);
+    // later arrivals wait for capacity → tail above median
+    assert!(m.ttft.max() > m.ttft.p50());
+}
