@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
         }
         table.row(&[
             format!("{budget_gb:.0}"),
-            format!("{}", plan.n_hi_per_layer),
+            format!("{}", plan.n_hi_per_layer()),
             format!("{:.2}", plan.hot_fraction(&preset)),
             format!("{:.1}", engine.backend.hi_fraction() * 100.0),
             format!("{:.0}", engine.metrics.throughput()),

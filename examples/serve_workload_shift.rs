@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
             &ServingConfig::default(),
         )
         .map_err(anyhow::Error::msg)?
-        .n_hi_per_layer,
+        .n_hi_per_layer(),
     );
     cfg.update_interval_ms = 10.0;
     println!(

@@ -1,6 +1,7 @@
-//! Ablations A1–A6 (DESIGN.md §6): hysteresis, EMA alpha / update interval,
+//! Ablations A1–A8 (DESIGN.md §6): hysteresis, EMA alpha / update interval,
 //! blocking vs non-blocking transitions, pool granularity, static
-//! mixed-precision map under shift, reactive vs long-horizon policy.
+//! mixed-precision map under shift, reactive vs long-horizon policy,
+//! open-loop load sweep, tier count.
 
 fn main() -> anyhow::Result<()> {
     let fast = std::env::var("DYNAEXQ_FULL").is_err();
@@ -9,8 +10,13 @@ fn main() -> anyhow::Result<()> {
     println!("{}", a::a2_ema_alpha(fast)?);
     println!("{}", a::a3_blocking(fast)?);
     println!("{}", a::a4_pool_granularity(fast)?);
-    println!("{}", a::a5_static_map_shift(fast)?);
+    // A5 needs the numeric engine (`--features numeric`).
+    match a::a5_static_map_shift(fast) {
+        Ok(report) => println!("{report}"),
+        Err(e) => println!("(a5 skipped: {e})\n"),
+    }
     println!("{}", a::a6_reactive_vs_policy(fast)?);
     println!("{}", a::a7_load_sweep(fast)?);
+    println!("{}", a::a8_tier_count(fast)?);
     Ok(())
 }

@@ -2,12 +2,9 @@
 //! handle resolution, routing recording, policy update, pool ops, and one
 //! real PJRT expert execution.
 
-use std::sync::Arc;
-
 use dynaexq::bench::Bench;
 use dynaexq::config::{DeviceConfig, ModelPreset, ServingConfig};
 use dynaexq::coordinator::{BlockPool, Coordinator};
-use dynaexq::util::XorShiftRng;
 
 fn main() -> anyhow::Result<()> {
     let bench = Bench::new(3, 30);
@@ -56,7 +53,23 @@ fn main() -> anyhow::Result<()> {
     });
     println!("{}   ({:.1} ns/pair)", r.line(), r.mean_s * 1e9 / 1e3);
 
-    // 5. real PJRT expert execution (the numeric hot path)
+    // 5/6. real PJRT expert execution (the numeric hot path)
+    pjrt_microbenches(&bench)?;
+    Ok(())
+}
+
+#[cfg(not(feature = "numeric"))]
+fn pjrt_microbenches(_bench: &Bench) -> anyhow::Result<()> {
+    println!("(built without --features numeric — skipping PJRT microbenches)");
+    Ok(())
+}
+
+/// Real PJRT expert execution (the numeric hot path).
+#[cfg(feature = "numeric")]
+fn pjrt_microbenches(bench: &Bench) -> anyhow::Result<()> {
+    use dynaexq::util::XorShiftRng;
+    use std::sync::Arc;
+
     if let Ok(rt) = dynaexq::runtime::Runtime::load_default() {
         let rt = Arc::new(rt);
         let mut rng = XorShiftRng::new(1);

@@ -61,9 +61,10 @@ impl ExpertFlowBackend {
         dev: &DeviceConfig,
     ) -> Self {
         let dims = LogicalDims::for_preset(preset);
-        // Offloading serves the base-precision model (fp16; int4 base for
-        // the 80B model) and caches as many experts as the envelope allows.
-        let precision = preset.hi;
+        // Offloading serves the full-precision model (fp16; int4 for the
+        // 80B model) and caches as many experts as the envelope allows —
+        // inherently single-precision, so it takes the ladder's top rung.
+        let precision = preset.hi();
         let expert_bytes = dims.expert_bytes(precision);
         let avail = cfg.hbm_budget_bytes.saturating_sub(cfg.fixed_bytes);
         let capacity = (avail / expert_bytes).max(1);

@@ -49,15 +49,17 @@ impl HobbitBackend {
         dev: &DeviceConfig,
     ) -> Result<Self, String> {
         let dims = LogicalDims::for_preset(preset);
-        // Identical envelope math to DynaExq's budget plan: lo versions of
-        // all experts resident, remaining slack buys hi slots.
+        // Identical envelope math to DynaExq's budget plan: base versions
+        // of all experts resident, remaining slack buys hi slots. HOBBIT is
+        // inherently two-tier, so it consumes the ladder's top and bottom
+        // rungs (the degenerate case of the N-rung generalization).
         let plan = crate::coordinator::Coordinator::plan_for(preset, cfg)?;
-        let capacity = plan.n_hi_per_layer * preset.n_layers_logical();
+        let capacity = plan.n_hi_per_layer() * preset.n_layers_logical();
         Ok(Self {
-            hi: preset.hi,
-            lo: preset.lo,
+            hi: preset.hi(),
+            lo: preset.lo(),
             capacity: capacity.max(1),
-            hi_bytes: dims.expert_bytes(preset.hi),
+            hi_bytes: dims.expert_bytes(preset.hi()),
             secs_per_byte: 1.0 / dev.pcie_bytes_per_s,
             cache: HashMap::new(),
             tick: 0,

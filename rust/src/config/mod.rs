@@ -6,7 +6,7 @@
 
 pub mod kv;
 
-use crate::model::Precision;
+use crate::model::{Precision, PrecisionLadder};
 
 /// Core tensor dims — must match `python/compile/configs.py`.
 pub const D_MODEL: usize = 64;
@@ -33,12 +33,11 @@ pub struct ModelPreset {
     pub n_experts: usize,
     /// Router top-k.
     pub top_k: usize,
-    /// Always-on shared experts per layer (run at the high tier).
+    /// Always-on shared experts per layer (run at the top rung).
     pub n_shared: usize,
-    /// Precision of the hot tier.
-    pub hi: Precision,
-    /// Precision of the cold tier.
-    pub lo: Precision,
+    /// Precision ladder the model serves through, highest rung first.
+    /// The classic hi/lo presets are 2-rung ladders.
+    pub ladder: PrecisionLadder,
     /// Layer count of the paper's real model (reporting metadata only).
     pub paper_layers: usize,
 }
@@ -52,9 +51,23 @@ impl ModelPreset {
             n_experts: 128,
             top_k: 8,
             n_shared: 0,
-            hi: Precision::Fp16,
-            lo: Precision::Int4,
+            ladder: PrecisionLadder::two_tier(
+                Precision::Fp16,
+                Precision::Int4,
+            ),
             paper_layers: 48,
+        }
+    }
+
+    /// Qwen3-30B analogue on the full three-rung ladder: warm experts get
+    /// an INT4 middle rung between FP16-hot and INT2-cold, so the same HBM
+    /// envelope covers a deeper fidelity gradient (the new 3-tier serving
+    /// scenario).
+    pub fn qwen30b_3tier() -> Self {
+        Self {
+            name: "qwen30b-3tier",
+            ladder: PrecisionLadder::full(),
+            ..Self::qwen30b_sim()
         }
     }
 
@@ -67,8 +80,10 @@ impl ModelPreset {
             n_experts: 512,
             top_k: 10,
             n_shared: 1,
-            hi: Precision::Int4,
-            lo: Precision::Int2,
+            ladder: PrecisionLadder::two_tier(
+                Precision::Int4,
+                Precision::Int2,
+            ),
             paper_layers: 48,
         }
     }
@@ -81,15 +96,22 @@ impl ModelPreset {
             n_experts: 16,
             top_k: 2,
             n_shared: 0,
-            hi: Precision::Fp16,
-            lo: Precision::Int4,
+            ladder: PrecisionLadder::two_tier(
+                Precision::Fp16,
+                Precision::Int4,
+            ),
             paper_layers: 32,
         }
     }
 
-    /// All presets, in the paper's table order.
+    /// All presets, in the paper's table order (plus the 3-tier scenario).
     pub fn all() -> Vec<Self> {
-        vec![Self::qwen30b_sim(), Self::qwen80b_sim(), Self::phi_sim()]
+        vec![
+            Self::qwen30b_sim(),
+            Self::qwen30b_3tier(),
+            Self::qwen80b_sim(),
+            Self::phi_sim(),
+        ]
     }
 
     /// Look up a preset by name.
@@ -115,6 +137,18 @@ impl ModelPreset {
     pub fn expert_bytes(&self, p: Precision) -> usize {
         crate::model::expert_bytes(p)
     }
+
+    /// Top rung of the ladder (the classic `hi` tier).
+    #[inline]
+    pub fn hi(&self) -> Precision {
+        self.ladder.top()
+    }
+
+    /// Base rung of the ladder (the classic `lo` tier).
+    #[inline]
+    pub fn lo(&self) -> Precision {
+        self.ladder.base()
+    }
 }
 
 /// Policy + mechanism parameters of the DynaExq control loop (§3).
@@ -134,8 +168,9 @@ pub struct ServingConfig {
     /// Reserved bytes for non-expert state (KV cache, activations,
     /// non-expert params, runtime) — `M_fixed` of §3.3.
     pub fixed_bytes: usize,
-    /// Force the per-layer hot capacity instead of deriving it from the
-    /// budget (quality sweeps, Fig. 3).
+    /// Force the per-layer capacity of the ladder's top rung instead of
+    /// deriving it from the budget (quality sweeps, Fig. 3). The override
+    /// is still validated against the HBM envelope.
     pub n_hi_override: Option<usize>,
     /// Maximum decode steps per scheduling quantum.
     pub max_batch: usize,
@@ -204,11 +239,24 @@ mod tests {
         assert_eq!(q80.n_experts, 512);
         assert_eq!(q80.top_k, 10);
         assert_eq!(q80.n_shared, 1);
-        assert_eq!(q80.hi, Precision::Int4);
-        assert_eq!(q80.lo, Precision::Int2);
+        assert_eq!(q80.hi(), Precision::Int4);
+        assert_eq!(q80.lo(), Precision::Int2);
         let phi = ModelPreset::phi_sim();
         assert_eq!(phi.n_experts, 16);
         assert_eq!(phi.top_k, 2);
+    }
+
+    #[test]
+    fn three_tier_preset_shares_structure_with_qwen30b() {
+        let q3 = ModelPreset::qwen30b_3tier();
+        let q30 = ModelPreset::qwen30b_sim();
+        assert_eq!(q3.n_experts, q30.n_experts);
+        assert_eq!(q3.top_k, q30.top_k);
+        assert_eq!(q3.paper_layers, q30.paper_layers);
+        assert_eq!(q3.ladder.n_tiers(), 3);
+        assert_eq!(q3.hi(), Precision::Fp16);
+        assert_eq!(q3.lo(), Precision::Int2);
+        assert_eq!(q3.ladder.tier(1), Precision::Int4);
     }
 
     #[test]

@@ -1,47 +1,55 @@
-//! Budget model and OOM safety (§3.3).
+//! Budget model and OOM safety (§3.3), per ladder rung.
 //!
 //! A [`BudgetTracker`] enforces the hard HBM envelope: `M_total` usable
 //! bytes, `M_fixed` reserved for non-expert state (KV cache, activations,
-//! runtime), and the remainder split between high- and low-precision expert
-//! residency. Every promotion must pass `try_reserve` **before** entering
-//! the transition pipeline; a successful reservation guarantees the
-//! subsequent pool allocation cannot OOM. Reservation/release are atomic
-//! (CAS loops) so the migration worker and the policy thread never race the
-//! envelope.
+//! runtime), and the remainder split between the expert-residency rungs of
+//! the precision ladder. Every upward transition must pass `try_reserve`
+//! **before** entering the transition pipeline; a successful reservation
+//! guarantees the subsequent pool allocation cannot OOM. Reservation and
+//! release are atomic (CAS loops) so the migration worker and the policy
+//! thread never race the envelope.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::config::ModelPreset;
-use crate::model::expert_bytes;
+use crate::model::{expert_bytes, Precision, PrecisionLadder};
 
-/// Atomic byte-budget tracker with explicit reserve/release.
+/// Atomic per-rung byte-budget tracker with explicit reserve/release.
 #[derive(Debug)]
 pub struct BudgetTracker {
-    /// Cap for high-precision expert residency (`M_exp_hi_cap`).
-    hi_cap: usize,
-    /// Cap for low-precision expert residency.
-    lo_cap: usize,
-    hi_used: AtomicUsize,
-    lo_used: AtomicUsize,
+    /// Byte cap per rung (tier 0 first; the base rung's cap covers the
+    /// statically provisioned all-cold residency).
+    caps: Vec<usize>,
+    used: Vec<AtomicUsize>,
     /// Diagnostics.
     pub failed_reservations: AtomicUsize,
 }
 
 impl BudgetTracker {
-    pub fn new(hi_cap: usize, lo_cap: usize) -> Self {
-        Self {
-            hi_cap,
-            lo_cap,
-            hi_used: AtomicUsize::new(0),
-            lo_used: AtomicUsize::new(0),
-            failed_reservations: AtomicUsize::new(0),
-        }
+    /// Per-rung caps, tier 0 first.
+    pub fn with_caps(caps: Vec<usize>) -> Self {
+        let used = caps.iter().map(|_| AtomicUsize::new(0)).collect();
+        Self { caps, used, failed_reservations: AtomicUsize::new(0) }
     }
 
-    fn try_reserve_in(used: &AtomicUsize, cap: usize, bytes: usize) -> bool {
+    /// Two-rung convenience (the classic hi/lo tracker).
+    pub fn new(hi_cap: usize, lo_cap: usize) -> Self {
+        Self::with_caps(vec![hi_cap, lo_cap])
+    }
+
+    pub fn n_tiers(&self) -> usize {
+        self.caps.len()
+    }
+
+    /// Reserve `bytes` of rung `tier` capacity; false if it would exceed
+    /// the cap (the transition must then be deferred — never forced).
+    pub fn try_reserve(&self, tier: usize, bytes: usize) -> bool {
+        let used = &self.used[tier];
+        let cap = self.caps[tier];
         let mut cur = used.load(Ordering::Relaxed);
         loop {
             if cur + bytes > cap {
+                self.failed_reservations.fetch_add(1, Ordering::Relaxed);
                 return false;
             }
             match used.compare_exchange_weak(
@@ -56,77 +64,82 @@ impl BudgetTracker {
         }
     }
 
-    /// Reserve `bytes` of high-precision capacity; false if it would exceed
-    /// the cap (the promotion must then be deferred — never forced).
+    /// Release previously reserved bytes of rung `tier`.
+    pub fn release(&self, tier: usize, bytes: usize) {
+        let prev = self.used[tier].fetch_sub(bytes, Ordering::AcqRel);
+        debug_assert!(prev >= bytes, "release underflow at tier {tier}");
+    }
+
+    pub fn used(&self, tier: usize) -> usize {
+        self.used[tier].load(Ordering::Relaxed)
+    }
+
+    pub fn cap(&self, tier: usize) -> usize {
+        self.caps[tier]
+    }
+
+    /// Top-rung convenience accessors (diagnostics/tests).
     pub fn try_reserve_hi(&self, bytes: usize) -> bool {
-        let ok = Self::try_reserve_in(&self.hi_used, self.hi_cap, bytes);
-        if !ok {
-            self.failed_reservations.fetch_add(1, Ordering::Relaxed);
-        }
-        ok
+        self.try_reserve(0, bytes)
     }
 
-    /// Release previously reserved high-precision bytes.
     pub fn release_hi(&self, bytes: usize) {
-        let prev = self.hi_used.fetch_sub(bytes, Ordering::AcqRel);
-        debug_assert!(prev >= bytes, "release_hi underflow");
-    }
-
-    pub fn try_reserve_lo(&self, bytes: usize) -> bool {
-        let ok = Self::try_reserve_in(&self.lo_used, self.lo_cap, bytes);
-        if !ok {
-            self.failed_reservations.fetch_add(1, Ordering::Relaxed);
-        }
-        ok
-    }
-
-    pub fn release_lo(&self, bytes: usize) {
-        let prev = self.lo_used.fetch_sub(bytes, Ordering::AcqRel);
-        debug_assert!(prev >= bytes, "release_lo underflow");
+        self.release(0, bytes)
     }
 
     pub fn hi_used(&self) -> usize {
-        self.hi_used.load(Ordering::Relaxed)
-    }
-
-    pub fn lo_used(&self) -> usize {
-        self.lo_used.load(Ordering::Relaxed)
+        self.used(0)
     }
 
     pub fn hi_cap(&self) -> usize {
-        self.hi_cap
+        self.cap(0)
+    }
+
+    /// Base-rung convenience accessors.
+    pub fn try_reserve_lo(&self, bytes: usize) -> bool {
+        self.try_reserve(self.caps.len() - 1, bytes)
+    }
+
+    pub fn lo_used(&self) -> usize {
+        self.used(self.caps.len() - 1)
     }
 
     pub fn lo_cap(&self) -> usize {
-        self.lo_cap
+        self.cap(self.caps.len() - 1)
     }
 
-    /// Invariant check (used by tests and debug assertions).
+    /// Invariant check (used by tests and debug assertions): every rung
+    /// within its cap.
     pub fn within_envelope(&self) -> bool {
-        self.hi_used() <= self.hi_cap && self.lo_used() <= self.lo_cap
+        (0..self.caps.len()).all(|t| self.used(t) <= self.caps[t])
     }
 }
 
-/// Budget initialization (§3.1): derive per-layer high-precision capacity
-/// `n_hi` from the envelope.
+/// Budget initialization (§3.1), generalized to the ladder: derive the
+/// per-layer capacity of every non-base rung from the envelope by
+/// waterfill.
 ///
-/// Feasibility by construction: with `n_hi` hot experts per layer,
-/// `fixed + Σ_layers [n_hi·B_hi + (E − n_hi)·B_lo] ≤ M_total` (shared
-/// experts are always hot and accounted separately).
+/// Feasibility by construction: with the base rung statically provisioned
+/// (`fixed + shared + layers·E·B_base`), the remaining slack is split
+/// across the non-base rungs; rung `t` affords
+/// `slack_t / (layers·(B_t − B_base))` experts per layer, since raising an
+/// expert to rung `t` frees its base copy. The policy only ever assigns at
+/// most `Σ_{i≤t} n_i` experts to rungs `≤ t` per layer (cumulative
+/// capacity), which keeps total bytes inside the envelope for any
+/// assignment (Abel summation over the strictly decreasing rung sizes).
 #[derive(Clone, Debug)]
 pub struct BudgetPlan {
-    /// Per-layer cap on concurrently hi-resident experts.
-    pub n_hi_per_layer: usize,
-    /// Cap for the high-precision pool in bytes (across layers).
-    pub hi_pool_bytes: usize,
-    /// Cap for the low-precision pool in bytes.
-    pub lo_pool_bytes: usize,
-    pub hi_expert_bytes: usize,
-    pub lo_expert_bytes: usize,
+    /// Per-layer expert capacity of each non-base rung (tier 0 first).
+    pub tier_capacity: Vec<usize>,
+    /// Byte cap of each rung's pool (tier 0 .. base).
+    pub pool_bytes: Vec<usize>,
+    /// Bytes of one expert at each rung.
+    pub tier_expert_bytes: Vec<usize>,
 }
 
 impl BudgetPlan {
-    /// Compute the plan for `preset` under `(total, fixed)` bytes.
+    /// Compute the plan for `preset` under `(total, fixed)` bytes at
+    /// *executed* scale (uses the crate's small-model expert bytes).
     ///
     /// Returns an error if even all-cold residency does not fit — the
     /// envelope is then infeasible for this model (the paper's systems
@@ -136,13 +149,39 @@ impl BudgetPlan {
         total_bytes: usize,
         fixed_bytes: usize,
     ) -> Result<Self, String> {
-        let b_hi = expert_bytes(preset.hi);
-        let b_lo = expert_bytes(preset.lo);
-        let layers = preset.n_layers;
-        let e = preset.n_experts;
-        // Shared experts are pinned at the hi tier, always resident.
-        let shared = layers * preset.n_shared * b_hi;
-        let baseline = fixed_bytes + shared + layers * e * b_lo;
+        Self::derive_with(
+            &preset.ladder,
+            expert_bytes,
+            preset.n_layers,
+            preset.n_experts,
+            preset.n_shared,
+            total_bytes,
+            fixed_bytes,
+            None,
+        )
+    }
+
+    /// The shared derivation: `bytes_of` supplies per-rung expert bytes at
+    /// whichever scale the caller plans at (logical for the coordinator,
+    /// executed for [`BudgetPlan::derive`]). `n_hi_override` forces the
+    /// top rung's capacity and is validated against the envelope.
+    #[allow(clippy::too_many_arguments)]
+    pub fn derive_with(
+        ladder: &PrecisionLadder,
+        bytes_of: impl Fn(Precision) -> usize,
+        layers: usize,
+        n_experts: usize,
+        n_shared: usize,
+        total_bytes: usize,
+        fixed_bytes: usize,
+        n_hi_override: Option<usize>,
+    ) -> Result<Self, String> {
+        let b: Vec<usize> = ladder.tiers().iter().map(|&p| bytes_of(p)).collect();
+        let base = ladder.base_tier();
+        let b_base = b[base];
+        // Shared experts are pinned at the top rung, always resident.
+        let shared = layers * n_shared * b[0];
+        let baseline = fixed_bytes + shared + layers * n_experts * b_base;
         if baseline > total_bytes {
             return Err(format!(
                 "infeasible envelope: all-cold residency needs {baseline} \
@@ -150,20 +189,122 @@ impl BudgetPlan {
             ));
         }
         let slack = total_bytes - baseline;
-        let per_swap = b_hi - b_lo; // promoting one expert frees its lo copy
-        let n_hi = (slack / (layers * per_swap)).min(e);
-        Ok(Self {
-            n_hi_per_layer: n_hi,
-            hi_pool_bytes: layers * (n_hi + preset.n_shared) * b_hi,
-            lo_pool_bytes: layers * e * b_lo,
-            hi_expert_bytes: b_hi,
-            lo_expert_bytes: b_lo,
-        })
+        let n_nonbase = base; // rungs above the base
+        let mut tier_capacity = vec![0usize; n_nonbase];
+        if n_nonbase > 0 {
+            // Raising one expert to rung t frees its base copy, so the
+            // upgrade cost is the byte *difference*. A degenerate ladder
+            // (adjacent rungs byte-identical) would divide by zero here.
+            let mut cost = Vec::with_capacity(n_nonbase);
+            for (t, &bytes) in b.iter().enumerate().take(n_nonbase) {
+                if bytes <= b_base {
+                    return Err(format!(
+                        "degenerate ladder: rung {t} ({:?}, {bytes} B) is \
+                         not larger than the base rung ({:?}, {b_base} B)",
+                        ladder.tier(t),
+                        ladder.base(),
+                    ));
+                }
+                cost.push(bytes - b_base);
+            }
+            match n_hi_override {
+                Some(n0) => {
+                    let n0 = n0.min(n_experts);
+                    let cost0 = layers * n0 * cost[0];
+                    if cost0 > slack {
+                        return Err(format!(
+                            "n_hi_override={n0} overcommits the envelope: \
+                             the top rung needs {cost0} B of slack but only \
+                             {slack} B remain (short by {} B; max feasible \
+                             override is {})",
+                            cost0 - slack,
+                            slack / (layers * cost[0]),
+                        ));
+                    }
+                    tier_capacity[0] = n0;
+                    // Remaining non-base rungs split the leftover equally.
+                    let rest = slack - cost0;
+                    for t in 1..n_nonbase {
+                        tier_capacity[t] =
+                            (rest / (n_nonbase - 1)) / (layers * cost[t]);
+                    }
+                }
+                None => {
+                    // Waterfill: each non-base rung gets an equal byte
+                    // share of the slack (the 2-rung ladder degenerates to
+                    // the original `slack / (layers·(B_hi − B_lo))`).
+                    for t in 0..n_nonbase {
+                        tier_capacity[t] =
+                            (slack / n_nonbase) / (layers * cost[t]);
+                    }
+                }
+            }
+            // Cumulative clamp: rungs cannot jointly hold more experts
+            // than exist.
+            let mut cum = 0usize;
+            for cap in tier_capacity.iter_mut() {
+                *cap = (*cap).min(n_experts - cum);
+                cum += *cap;
+            }
+        }
+        // Pools are sized at *cumulative* capacity per rung: the planner
+        // may park up to N_t experts at rungs ≤ t, and any such assignment
+        // stays inside the envelope because rung bytes strictly decrease.
+        let mut pool_bytes = Vec::with_capacity(b.len());
+        let mut cum = 0usize;
+        for (t, &bytes) in b.iter().enumerate() {
+            if t == base {
+                pool_bytes.push(layers * n_experts * b_base);
+            } else {
+                cum += tier_capacity[t];
+                let shared_slots = if t == 0 { n_shared } else { 0 };
+                pool_bytes.push(layers * (cum + shared_slots) * bytes);
+            }
+        }
+        Ok(Self { tier_capacity, pool_bytes, tier_expert_bytes: b })
     }
 
-    /// Fraction of experts resident at the hot tier.
+    pub fn n_tiers(&self) -> usize {
+        self.tier_expert_bytes.len()
+    }
+
+    /// Per-layer capacity of the top rung (the classic `n_hi`).
+    pub fn n_hi_per_layer(&self) -> usize {
+        self.tier_capacity.first().copied().unwrap_or(0)
+    }
+
+    /// Cumulative per-layer capacities over the non-base rungs
+    /// (`N_t = Σ_{i≤t} n_i`) — the policy's boundary budgets.
+    pub fn cumulative_capacity(&self) -> Vec<usize> {
+        let mut cum = 0usize;
+        self.tier_capacity
+            .iter()
+            .map(|&n| {
+                cum += n;
+                cum
+            })
+            .collect()
+    }
+
+    pub fn hi_expert_bytes(&self) -> usize {
+        self.tier_expert_bytes[0]
+    }
+
+    pub fn lo_expert_bytes(&self) -> usize {
+        *self.tier_expert_bytes.last().unwrap()
+    }
+
+    pub fn hi_pool_bytes(&self) -> usize {
+        self.pool_bytes[0]
+    }
+
+    pub fn lo_pool_bytes(&self) -> usize {
+        *self.pool_bytes.last().unwrap()
+    }
+
+    /// Fraction of experts resident at the top rung.
     pub fn hot_fraction(&self, preset: &ModelPreset) -> f64 {
-        self.n_hi_per_layer as f64 / preset.n_experts as f64
+        self.n_hi_per_layer() as f64 / preset.n_experts as f64
     }
 }
 
@@ -181,10 +322,23 @@ mod tests {
         b.release_hi(60);
         assert_eq!(b.hi_used(), 40);
         assert!(b.within_envelope());
-        assert_eq!(
-            b.failed_reservations.load(Ordering::Relaxed),
-            1
-        );
+        assert_eq!(b.failed_reservations.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn per_tier_accounting_is_independent() {
+        let b = BudgetTracker::with_caps(vec![100, 50, 1000]);
+        assert_eq!(b.n_tiers(), 3);
+        assert!(b.try_reserve(1, 50));
+        assert!(!b.try_reserve(1, 1));
+        assert!(b.try_reserve(0, 100));
+        assert!(b.try_reserve(2, 400));
+        assert_eq!(b.used(1), 50);
+        b.release(1, 50);
+        assert_eq!(b.used(1), 0);
+        assert_eq!(b.hi_used(), 100);
+        assert_eq!(b.lo_used(), 400);
+        assert!(b.within_envelope());
     }
 
     #[test]
@@ -194,15 +348,15 @@ mod tests {
         let total = 20 << 20;
         let fixed = 8 << 20;
         let plan = BudgetPlan::derive(&preset, total, fixed).unwrap();
-        let b_hi = plan.hi_expert_bytes;
-        let b_lo = plan.lo_expert_bytes;
+        let b_hi = plan.hi_expert_bytes();
+        let b_lo = plan.lo_expert_bytes();
+        let n_hi = plan.n_hi_per_layer();
         let used = fixed
             + preset.n_layers
-                * (plan.n_hi_per_layer * b_hi
-                    + (preset.n_experts - plan.n_hi_per_layer) * b_lo);
+                * (n_hi * b_hi + (preset.n_experts - n_hi) * b_lo);
         assert!(used <= total, "plan must fit: {used} > {total}");
-        assert!(plan.n_hi_per_layer > 0);
-        assert!(plan.n_hi_per_layer < preset.n_experts);
+        assert!(n_hi > 0);
+        assert!(n_hi < preset.n_experts);
     }
 
     #[test]
@@ -216,7 +370,7 @@ mod tests {
         let preset = ModelPreset::qwen30b_sim();
         let p1 = BudgetPlan::derive(&preset, 20 << 20, 8 << 20).unwrap();
         let p2 = BudgetPlan::derive(&preset, 17 << 20, 8 << 20).unwrap();
-        assert!(p2.n_hi_per_layer < p1.n_hi_per_layer);
+        assert!(p2.n_hi_per_layer() < p1.n_hi_per_layer());
     }
 
     #[test]
@@ -224,11 +378,68 @@ mod tests {
         let mut p80 = ModelPreset::qwen80b_sim();
         p80.n_layers = 2;
         let plan = BudgetPlan::derive(&p80, 64 << 20, 4 << 20).unwrap();
-        // hi pool must have room for shared experts even at n_hi = 0
+        // top-rung pool must have room for shared experts even at n_hi = 0
         assert!(
-            plan.hi_pool_bytes
-                >= p80.n_layers * p80.n_shared * plan.hi_expert_bytes
+            plan.hi_pool_bytes()
+                >= p80.n_layers * p80.n_shared * plan.hi_expert_bytes()
         );
+    }
+
+    #[test]
+    fn three_rung_plan_funds_every_rung_within_envelope() {
+        let preset = ModelPreset::qwen30b_3tier();
+        let total = 24 << 20;
+        let fixed = 8 << 20;
+        let plan = BudgetPlan::derive(&preset, total, fixed).unwrap();
+        assert_eq!(plan.n_tiers(), 3);
+        assert_eq!(plan.tier_capacity.len(), 2);
+        assert!(plan.tier_capacity[0] > 0, "fp16 rung funded");
+        assert!(plan.tier_capacity[1] > 0, "int4 rung funded");
+        // worst case: every cumulative slot filled at its own rung
+        let cum = plan.cumulative_capacity();
+        let worst = fixed
+            + preset.n_layers
+                * (plan.tier_capacity[0] * plan.tier_expert_bytes[0]
+                    + plan.tier_capacity[1] * plan.tier_expert_bytes[1]
+                    + (preset.n_experts - cum[1])
+                        * plan.tier_expert_bytes[2]);
+        assert!(worst <= total, "waterfill must fit: {worst} > {total}");
+    }
+
+    #[test]
+    fn override_overcommit_rejected_with_shortfall() {
+        let preset = ModelPreset::qwen30b_sim();
+        let err = BudgetPlan::derive_with(
+            &preset.ladder,
+            expert_bytes,
+            preset.n_layers,
+            preset.n_experts,
+            preset.n_shared,
+            20 << 20,
+            8 << 20,
+            Some(preset.n_experts),
+        )
+        .unwrap_err();
+        assert!(err.contains("overcommits"), "{err}");
+        assert!(err.contains("max feasible"), "{err}");
+        // the reported maximum is itself feasible
+        let max: usize = err
+            .rsplit_once("max feasible override is ")
+            .and_then(|(_, tail)| {
+                tail.trim_end_matches(')').trim().parse().ok()
+            })
+            .expect("shortfall message names the feasible maximum");
+        assert!(BudgetPlan::derive_with(
+            &preset.ladder,
+            expert_bytes,
+            preset.n_layers,
+            preset.n_experts,
+            preset.n_shared,
+            20 << 20,
+            8 << 20,
+            Some(max),
+        )
+        .is_ok());
     }
 
     #[test]
@@ -257,7 +468,8 @@ mod tests {
                     held.into_iter().sum::<usize>()
                 }));
             }
-            let held: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+            let held: usize =
+                handles.into_iter().map(|h| h.join().unwrap()).sum();
             assert_eq!(b.hi_used(), held);
             assert!(b.hi_used() <= cap);
         });

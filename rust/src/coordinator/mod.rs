@@ -1,15 +1,20 @@
 //! The DynaExq coordinator (§3): online, budget-constrained precision
-//! allocation, wired from four mechanisms —
+//! allocation over an N-rung precision ladder, wired from four mechanisms —
 //!
-//! * [`ver`] — stable expert handles + residency state machine,
-//! * [`pools`] + [`budget`] — deterministic memory with admission control,
-//! * [`pipeline`] — non-blocking promotions/demotions on a migration stream,
+//! * [`ver`] — stable expert handles + residency state machine (rung
+//!   indices behind one atomic),
+//! * [`pools`] + [`budget`] — deterministic per-rung memory with admission
+//!   control,
+//! * [`pipeline`] — non-blocking tier moves on a migration stream,
 //! * [`hotness`] + [`policy`] — EMA traffic estimation and the
-//!   budget-feasible top-n rule with hysteresis.
+//!   budget-feasible waterfill tier assignment with per-boundary
+//!   hysteresis.
 //!
 //! The engine calls [`Coordinator::record_routing`] with router outputs,
 //! [`Coordinator::resolve`] on the hot path, and [`Coordinator::tick`] at
 //! iteration boundaries; everything else happens off the critical path.
+//! The classic hi/lo presets are 2-rung ladders and behave identically to
+//! the original binary formulation (DESIGN.md §8).
 
 pub mod budget;
 pub mod hotness;
@@ -18,13 +23,12 @@ pub mod policy;
 pub mod pools;
 pub mod ver;
 
-use std::collections::HashSet;
 use std::sync::Arc;
 
 pub use budget::{BudgetPlan, BudgetTracker};
 pub use hotness::HotnessEstimator;
 pub use pipeline::{Admission, StageFn, TransitionKind, TransitionPipeline};
-pub use policy::{plan_layer, LayerPlan};
+pub use policy::{plan_layer, plan_layer_ladder, LadderPlan, LayerPlan};
 pub use pools::{BlockPool, PoolAlloc};
 pub use ver::{ExpertKey, HandleTable, Residency};
 
@@ -49,8 +53,8 @@ pub struct Coordinator {
     pub plan: BudgetPlan,
     pub handles: Arc<HandleTable>,
     pub budget: Arc<BudgetTracker>,
-    pub pool_hi: Arc<BlockPool>,
-    pub pool_lo: Arc<BlockPool>,
+    /// One block pool per ladder rung, tier 0 first.
+    pub pools: Vec<Arc<BlockPool>>,
     pub pipeline: TransitionPipeline,
     hotness: std::sync::Mutex<HotnessEstimator>,
     next_update_s: std::sync::Mutex<f64>,
@@ -78,55 +82,55 @@ impl Coordinator {
     ) -> Result<Self, String> {
         let dims = LogicalDims::for_preset(preset);
         let plan = Self::derive_logical_plan(preset, &dims, cfg)?;
+        let ladder = preset.ladder.clone();
+        let base = ladder.base_tier();
         let handles = Arc::new(HandleTable::new(
             preset.n_layers_logical(),
             preset.n_experts,
-            preset.lo,
+            ladder.clone(),
         ));
-        let budget = Arc::new(BudgetTracker::new(
-            plan.hi_pool_bytes,
-            plan.lo_pool_bytes,
-        ));
-        let block_hi = if cfg.pool_block_bytes > 0 {
-            cfg.pool_block_bytes
-        } else {
-            plan.hi_expert_bytes
-        };
-        let block_lo = if cfg.pool_block_bytes > 0 {
-            cfg.pool_block_bytes
-        } else {
-            plan.lo_expert_bytes
-        };
-        let pool_hi = Arc::new(BlockPool::new(
-            "pool_hi",
-            plan.hi_pool_bytes + block_hi - 1,
-            block_hi,
-        ));
-        let pool_lo = Arc::new(BlockPool::new(
-            "pool_lo",
-            plan.lo_pool_bytes + block_lo - 1,
-            block_lo,
-        ));
+        let budget = Arc::new(BudgetTracker::with_caps(plan.pool_bytes.clone()));
+        let pools: Vec<Arc<BlockPool>> = POOL_NAMES
+            .iter()
+            .copied()
+            .take(plan.n_tiers())
+            .enumerate()
+            .map(|(t, name)| {
+                let block = if cfg.pool_block_bytes > 0 {
+                    cfg.pool_block_bytes
+                } else {
+                    plan.tier_expert_bytes[t]
+                };
+                Arc::new(BlockPool::new(
+                    name,
+                    plan.pool_bytes[t] + block - 1,
+                    block,
+                ))
+            })
+            .collect();
 
-        // Cold boot: every routed expert resident-lo; shared experts pinned
-        // hot (their buffers come from pool_hi but are never transitioned).
+        // Cold boot: every routed expert resident at the base rung; shared
+        // experts pinned hot (their buffers come from the tier-0 pool but
+        // are never transitioned).
         let layers = preset.n_layers_logical();
+        let b_base = plan.tier_expert_bytes[base];
+        let b_top = plan.tier_expert_bytes[0];
         for l in 0..layers {
             for e in 0..preset.n_experts {
-                let a = pool_lo
-                    .alloc(plan.lo_expert_bytes)
-                    .ok_or("lo pool underprovisioned")?;
-                if !budget.try_reserve_lo(plan.lo_expert_bytes) {
-                    return Err("lo budget underprovisioned".into());
+                let a = pools[base]
+                    .alloc(b_base)
+                    .ok_or("base pool underprovisioned")?;
+                if !budget.try_reserve(base, b_base) {
+                    return Err("base budget underprovisioned".into());
                 }
                 handles.entry(ExpertKey::new(l, e)).active_alloc = Some(a);
             }
             for _ in 0..preset.n_shared {
-                pool_hi
-                    .alloc(plan.hi_expert_bytes)
-                    .ok_or("hi pool lacks shared-expert room")?;
-                if !budget.try_reserve_hi(plan.hi_expert_bytes) {
-                    return Err("hi budget lacks shared-expert room".into());
+                pools[0]
+                    .alloc(b_top)
+                    .ok_or("top-rung pool lacks shared-expert room")?;
+                if !budget.try_reserve(0, b_top) {
+                    return Err("top-rung budget lacks shared-expert room".into());
                 }
             }
         }
@@ -135,10 +139,7 @@ impl Coordinator {
         let pipeline = TransitionPipeline::new(
             handles.clone(),
             budget.clone(),
-            pool_hi.clone(),
-            pool_lo.clone(),
-            preset.hi,
-            preset.lo,
+            pools.clone(),
             1.0 / dev.pcie_bytes_per_s,
             Box::new(move |p| dims_for_bytes.expert_bytes(p)),
             cfg.max_inflight_promotions,
@@ -150,8 +151,7 @@ impl Coordinator {
             plan,
             handles,
             budget,
-            pool_hi,
-            pool_lo,
+            pools,
             pipeline,
             hotness: std::sync::Mutex::new(HotnessEstimator::new(
                 layers,
@@ -174,37 +174,25 @@ impl Coordinator {
         Self::derive_logical_plan(preset, &dims, cfg)
     }
 
-    /// Budget initialization at logical (paper) scale.
+    /// Budget initialization at logical (paper) scale: derive per-rung
+    /// capacities from the envelope slack by waterfill. An explicit
+    /// `n_hi_override` is validated against the envelope (it used to be
+    /// able to silently overcommit the HBM budget).
     fn derive_logical_plan(
         preset: &ModelPreset,
         dims: &LogicalDims,
         cfg: &ServingConfig,
     ) -> Result<BudgetPlan, String> {
-        let b_hi = dims.expert_bytes(preset.hi);
-        let b_lo = dims.expert_bytes(preset.lo);
-        let layers = preset.n_layers_logical();
-        let shared = layers * preset.n_shared * b_hi;
-        let baseline =
-            cfg.fixed_bytes + shared + layers * preset.n_experts * b_lo;
-        if baseline > cfg.hbm_budget_bytes {
-            return Err(format!(
-                "infeasible envelope: all-cold needs {baseline}B > budget \
-                 {}B",
-                cfg.hbm_budget_bytes
-            ));
-        }
-        let slack = cfg.hbm_budget_bytes - baseline;
-        let n_hi = cfg
-            .n_hi_override
-            .unwrap_or(slack / (layers * (b_hi - b_lo)))
-            .min(preset.n_experts);
-        Ok(BudgetPlan {
-            n_hi_per_layer: n_hi,
-            hi_pool_bytes: layers * (n_hi + preset.n_shared) * b_hi,
-            lo_pool_bytes: layers * preset.n_experts * b_lo,
-            hi_expert_bytes: b_hi,
-            lo_expert_bytes: b_lo,
-        })
+        BudgetPlan::derive_with(
+            &preset.ladder,
+            |p| dims.expert_bytes(p),
+            preset.n_layers_logical(),
+            preset.n_experts,
+            preset.n_shared,
+            cfg.hbm_budget_bytes,
+            cfg.fixed_bytes,
+            cfg.n_hi_override,
+        )
     }
 
     /// HOT PATH: the precision the forward pass must execute expert
@@ -212,6 +200,12 @@ impl Coordinator {
     #[inline]
     pub fn resolve(&self, layer: usize, expert: usize) -> Precision {
         self.handles.resolve(ExpertKey::new(layer, expert))
+    }
+
+    /// HOT PATH: the ladder rung the expert currently executes at.
+    #[inline]
+    pub fn resolve_tier(&self, layer: usize, expert: usize) -> usize {
+        self.handles.resolve_tier(ExpertKey::new(layer, expert))
     }
 
     /// Feed router trace: `experts` are the top-k ids selected for each
@@ -238,57 +232,38 @@ impl Coordinator {
         let mut hot = self.hotness.lock().unwrap();
         hot.end_interval();
         let layers = self.preset.n_layers_logical();
-        // Promoting/demoting sets come from the (small) in-flight list —
-        // the published residency from the lock-free handle table — so the
-        // update path never sweeps per-entry state mutexes.
-        let mut promoting: Vec<Vec<usize>> = vec![Vec::new(); layers];
-        for k in self.pipeline.promoting_keys() {
-            promoting[k.layer as usize].push(k.expert as usize);
+        // Effective assignment: the published rung from the lock-free
+        // handle table, overridden by in-flight transition targets (from
+        // the small in-flight list — the update path never sweeps
+        // per-entry state mutexes).
+        let mut eff: Vec<Vec<usize>> =
+            (0..layers).map(|l| self.handles.tier_snapshot(l)).collect();
+        for (k, _from, to) in self.pipeline.inflight_transitions() {
+            eff[k.layer as usize][k.expert as usize] = to;
         }
-        let mut demoting: Vec<Vec<usize>> = vec![Vec::new(); layers];
-        for k in self.pipeline.demoting_keys() {
-            demoting[k.layer as usize].push(k.expert as usize);
-        }
+        let cum_caps = self.plan.cumulative_capacity();
         for l in 0..layers {
-            let mut current: HashSet<usize> = self
-                .handles
-                .hi_set(l, self.preset.hi)
-                .into_iter()
-                .collect();
-            for &e in &promoting[l] {
-                current.insert(e);
-            }
-            for &e in &demoting[l] {
-                current.remove(&e);
-            }
-            let plan = plan_layer(
+            let plan = plan_layer_ladder(
                 hot.layer_scores(l),
-                &current,
-                self.plan.n_hi_per_layer,
+                &eff[l],
+                &cum_caps,
                 self.cfg.hysteresis_margin,
             );
-            // Demotions first: their eviction grows the feasible set.
-            for &e in &plan.demote {
+            // Downward moves come first in the plan: their evictions grow
+            // the feasible set for the upward moves.
+            for &(e, to) in &plan.moves {
+                let up = to < eff[l][e];
                 match self.pipeline.submit(
                     ExpertKey::new(l, e),
-                    TransitionKind::Demote,
+                    TransitionKind::ToTier(to),
                     now_s,
                 ) {
                     Admission::Admitted { .. } => {
-                        report.demotions_submitted += 1
-                    }
-                    Admission::Deferred => report.deferred += 1,
-                    Admission::Redundant => {}
-                }
-            }
-            for &e in &plan.promote {
-                match self.pipeline.submit(
-                    ExpertKey::new(l, e),
-                    TransitionKind::Promote,
-                    now_s,
-                ) {
-                    Admission::Admitted { .. } => {
-                        report.promotions_submitted += 1
+                        if up {
+                            report.promotions_submitted += 1;
+                        } else {
+                            report.demotions_submitted += 1;
+                        }
                     }
                     Admission::Deferred => report.deferred += 1,
                     Admission::Redundant => {}
@@ -308,6 +283,9 @@ impl Coordinator {
         self.hotness.lock().unwrap().top_n(layer, n)
     }
 }
+
+/// Static names for the per-rung pools (BlockPool holds a `&'static str`).
+const POOL_NAMES: [&str; 3] = ["pool_t0", "pool_t1", "pool_t2"];
 
 impl ModelPreset {
     /// Layers used for residency/accounting: the paper model's layer count
@@ -330,8 +308,8 @@ mod tests {
     #[test]
     fn boots_all_cold_within_envelope() {
         let c = coord(ModelPreset::qwen30b_sim());
-        assert!(c.plan.n_hi_per_layer > 0);
-        assert!(c.plan.n_hi_per_layer < 128);
+        assert!(c.plan.n_hi_per_layer() > 0);
+        assert!(c.plan.n_hi_per_layer() < 128);
         assert!(c.budget.within_envelope());
         assert_eq!(c.resolve(0, 0), Precision::Int4);
     }
@@ -339,7 +317,7 @@ mod tests {
     #[test]
     fn hot_traffic_promotes_within_budget() {
         let c = coord(ModelPreset::phi_sim());
-        let n_hi = c.plan.n_hi_per_layer;
+        let n_hi = c.plan.n_hi_per_layer();
         // drive traffic to experts 0..3 of layer 0
         for _ in 0..100 {
             c.record_routing(0, &[0, 1, 2, 3]);
@@ -379,7 +357,7 @@ mod tests {
         let dev = DeviceConfig::default();
         let preset = ModelPreset::phi_sim();
         let c = Coordinator::new(&preset, &cfg, &dev).unwrap();
-        assert_eq!(c.plan.n_hi_per_layer, 2);
+        assert_eq!(c.plan.n_hi_per_layer(), 2);
 
         // phase 1: experts {0,1} hot
         for _ in 0..50 {
@@ -415,5 +393,79 @@ mod tests {
         assert!(
             Coordinator::new(&ModelPreset::qwen30b_sim(), &cfg, &dev).is_err()
         );
+    }
+
+    #[test]
+    fn overcommitting_override_refused() {
+        let mut cfg = ServingConfig::default();
+        cfg.n_hi_override = Some(128); // all-hot qwen30b ≫ 48 GB
+        let dev = DeviceConfig::default();
+        let err = Coordinator::new(&ModelPreset::qwen30b_sim(), &cfg, &dev)
+            .unwrap_err();
+        assert!(err.contains("overcommits"), "{err}");
+    }
+
+    #[test]
+    fn executed_scale_all_hot_override_feasible() {
+        // The quality harness (Figure 3) sweeps n_hi_override up to
+        // n_experts on executed-scale presets (4 logical layers); the
+        // envelope validation must keep accepting those — only paper-scale
+        // overcommit (see overcommitting_override_refused) is an error.
+        for preset in
+            [ModelPreset::phi_sim(), ModelPreset::qwen30b_sim()]
+        {
+            let exec = preset.executed_scale();
+            let mut cfg = ServingConfig::default();
+            cfg.n_hi_override = Some(exec.n_experts);
+            let c =
+                Coordinator::new(&exec, &cfg, &DeviceConfig::default());
+            assert!(c.is_ok(), "{}: {:?}", exec.name, c.err());
+            assert_eq!(
+                c.unwrap().plan.n_hi_per_layer(),
+                exec.n_experts
+            );
+        }
+    }
+
+    #[test]
+    fn three_tier_coordinator_fills_middle_rung() {
+        let mut cfg = ServingConfig::default();
+        cfg.hysteresis_margin = 0.0;
+        cfg.ema_alpha = 0.0;
+        cfg.max_inflight_promotions = 1024;
+        cfg.n_hi_override = Some(2);
+        let preset = ModelPreset::qwen30b_3tier();
+        let c = Coordinator::new(&preset, &cfg, &DeviceConfig::default())
+            .unwrap();
+        assert_eq!(c.plan.n_tiers(), 3);
+        assert_eq!(c.plan.tier_capacity[0], 2);
+        assert!(
+            c.plan.tier_capacity[1] > 2,
+            "int4 rung funded from the remaining slack: {:?}",
+            c.plan.tier_capacity
+        );
+        // traffic gradient: expert 0 ≫ 1 ≫ 2 … over the mid-rung capacity
+        let hot = 2 + c.plan.tier_capacity[1].min(6);
+        for round in 0..40 {
+            for e in 0..hot {
+                for _ in 0..(2 * (hot - e)) {
+                    c.record_routing(0, &[e]);
+                }
+            }
+            c.tick(0.1 * (round + 1) as f64);
+            c.pipeline.wait_staged();
+        }
+        c.tick(1e3);
+        // hottest two at the top rung, the next ones at the middle rung
+        assert_eq!(c.resolve(0, 0), Precision::Fp16);
+        assert_eq!(c.resolve(0, 1), Precision::Fp16);
+        assert_eq!(c.resolve(0, 2), Precision::Int4);
+        assert_eq!(c.resolve_tier(0, 2), 1);
+        // untouched experts stay at the base rung
+        assert_eq!(c.resolve(0, 100), Precision::Int2);
+        assert!(c.budget.within_envelope());
+        for p in &c.pools {
+            assert!(p.consistent());
+        }
     }
 }

@@ -1,11 +1,11 @@
-//! Non-blocking transition pipeline (§3.4).
+//! Non-blocking transition pipeline (§3.4), generalized to the ladder.
 //!
-//! Promotions/demotions run off the token critical path:
+//! Tier moves run off the token critical path:
 //!
 //! * **Admission** — a transition is accepted only if the [`BudgetTracker`]
-//!   reservation and the destination pool allocation both succeed
-//!   (backpressure: otherwise it is deferred, and the forward pass keeps
-//!   using the currently published version).
+//!   reservation at the destination rung and the destination pool
+//!   allocation both succeed (backpressure: otherwise it is deferred, and
+//!   the forward pass keeps using the currently published version).
 //! * **Staging** — a real background worker thread assembles the prepared
 //!   weight bytes into a staging buffer (the pinned-host-memory copy of the
 //!   paper; `avoid on-the-fly repacking` — bytes were packed offline).
@@ -23,20 +23,28 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use crate::model::Precision;
+use crate::model::{Precision, PrecisionLadder};
 use crate::sim::Stream;
 
 use super::budget::BudgetTracker;
 use super::pools::{BlockPool, PoolAlloc};
 use super::ver::{ExpertKey, HandleTable, Residency};
 
-/// Direction of a precision transition.
+/// A precision transition: move the expert's active version to rung `0`
+/// of the variant. Toward tier 0 is a promotion, away from it a demotion —
+/// the pair the 2-rung ladder calls `Promote`/`Demote`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TransitionKind {
-    /// lo → hi (copy high-precision version to the device).
-    Promote,
-    /// hi → lo (copy low-precision version back; §3.2 "Demoting").
-    Demote,
+    /// Materialize (copy in) the version at the given rung and switch the
+    /// handle to it.
+    ToTier(usize),
+}
+
+impl TransitionKind {
+    pub fn target(self) -> usize {
+        let TransitionKind::ToTier(t) = self;
+        t
+    }
 }
 
 /// Outcome of a submission attempt.
@@ -45,7 +53,7 @@ pub enum Admission {
     Admitted { job: u64, done_at: f64 },
     /// Budget or pool capacity unavailable — retry after evictions.
     Deferred,
-    /// Expert already transitioning or already at the target tier.
+    /// Expert already transitioning or already at the target rung.
     Redundant,
 }
 
@@ -65,12 +73,12 @@ struct Inflight {
     #[allow(dead_code)] // job identity kept for tracing/debugging
     id: u64,
     key: ExpertKey,
-    kind: TransitionKind,
-    target: Precision,
+    /// Rung the expert held when the transition was admitted.
+    from: usize,
+    /// Destination rung.
+    to: usize,
     /// Modeled migration-stream completion time.
     done_at: f64,
-    /// Device bytes reserved in the hi budget (promotions).
-    hi_bytes: usize,
     staged: Arc<AtomicBool>,
     new_alloc: PoolAlloc,
 }
@@ -78,8 +86,11 @@ struct Inflight {
 /// A deferred reclamation of a superseded version's storage.
 struct Eviction {
     alloc: PoolAlloc,
-    pool_hi: bool,
-    hi_bytes: usize,
+    /// Rung whose pool the storage came from.
+    tier: usize,
+    /// Budget bytes to release at that rung (0 for the statically
+    /// provisioned base rung).
+    release_bytes: usize,
 }
 
 /// Counters exposed for the benches/metrics.
@@ -97,14 +108,13 @@ pub struct PipelineStats {
 pub struct TransitionPipeline {
     handles: Arc<HandleTable>,
     budget: Arc<BudgetTracker>,
-    pool_hi: Arc<BlockPool>,
-    pool_lo: Arc<BlockPool>,
+    /// One pool per rung, tier 0 first.
+    pools: Vec<Arc<BlockPool>>,
+    ladder: PrecisionLadder,
     /// Modeled PCIe seconds per byte (from the cost model).
     secs_per_byte: f64,
-    /// Device bytes of one expert at each tier at *logical* scale.
+    /// Device bytes of one expert at each precision at *logical* scale.
     bytes_of: Box<dyn Fn(Precision) -> usize + Send + Sync>,
-    hi: Precision,
-    lo: Precision,
     max_inflight: usize,
 
     migration: Mutex<Stream>,
@@ -122,15 +132,14 @@ impl TransitionPipeline {
     pub fn new(
         handles: Arc<HandleTable>,
         budget: Arc<BudgetTracker>,
-        pool_hi: Arc<BlockPool>,
-        pool_lo: Arc<BlockPool>,
-        hi: Precision,
-        lo: Precision,
+        pools: Vec<Arc<BlockPool>>,
         secs_per_byte: f64,
         bytes_of: Box<dyn Fn(Precision) -> usize + Send + Sync>,
         max_inflight: usize,
         stager: Arc<StageFn>,
     ) -> Self {
+        let ladder = handles.ladder().clone();
+        assert_eq!(pools.len(), ladder.n_tiers(), "one pool per rung");
         let (tx, rx): (
             Sender<(StageJob, Arc<AtomicBool>)>,
             Receiver<(StageJob, Arc<AtomicBool>)>,
@@ -149,12 +158,10 @@ impl TransitionPipeline {
         Self {
             handles,
             budget,
-            pool_hi,
-            pool_lo,
+            pools,
+            ladder,
             secs_per_byte,
             bytes_of,
-            hi,
-            lo,
             max_inflight,
             migration: Mutex::new(Stream::new()),
             inflight: Mutex::new(Vec::new()),
@@ -173,6 +180,10 @@ impl TransitionPipeline {
         kind: TransitionKind,
         now: f64,
     ) -> Admission {
+        let to = kind.target();
+        let base = self.ladder.base_tier();
+        assert!(to <= base, "target rung {to} off the ladder");
+
         // Reclaim superseded buffers first — eviction priority under
         // pressure increases the feasible set for this admission.
         self.drain_evictions();
@@ -182,40 +193,30 @@ impl TransitionPipeline {
             return Admission::Deferred;
         }
 
-        let (target, hi_bytes) = match kind {
-            TransitionKind::Promote => (self.hi, (self.bytes_of)(self.hi)),
-            TransitionKind::Demote => (self.lo, 0),
-        };
-
-        {
+        let from = {
             let entry = self.handles.entry(key);
-            let cur = self.handles.resolve(key);
-            let busy = matches!(
-                entry.residency,
-                Residency::Promoting | Residency::Demoting
-            );
-            if busy || cur == target {
+            let cur = entry.residency.active_tier();
+            if entry.residency.is_transitioning() || cur == to {
                 return Admission::Redundant;
             }
-        }
+            cur
+        };
 
-        // Admission control: budget reservation before anything else.
-        if kind == TransitionKind::Promote && !self.budget.try_reserve_hi(hi_bytes)
-        {
+        // Admission control: budget reservation at the destination rung
+        // before anything else (the base rung is statically provisioned).
+        let target_precision = self.ladder.tier(to);
+        let dev_bytes = (self.bytes_of)(target_precision);
+        let reserve_bytes = if to == base { 0 } else { dev_bytes };
+        if reserve_bytes > 0 && !self.budget.try_reserve(to, reserve_bytes) {
             self.stats.deferred.fetch_add(1, Ordering::Relaxed);
             return Admission::Deferred;
         }
 
         // Destination pool allocation (guaranteed to fit post-reservation
         // as pools are sized to the caps, but handle failure defensively).
-        let pool = match kind {
-            TransitionKind::Promote => &self.pool_hi,
-            TransitionKind::Demote => &self.pool_lo,
-        };
-        let dev_bytes = (self.bytes_of)(target);
-        let Some(new_alloc) = pool.alloc(dev_bytes) else {
-            if kind == TransitionKind::Promote {
-                self.budget.release_hi(hi_bytes);
+        let Some(new_alloc) = self.pools[to].alloc(dev_bytes) else {
+            if reserve_bytes > 0 {
+                self.budget.release(to, reserve_bytes);
             }
             self.stats.deferred.fetch_add(1, Ordering::Relaxed);
             return Admission::Deferred;
@@ -224,17 +225,14 @@ impl TransitionPipeline {
         // Mark the entry and enqueue staging + modeled transfer.
         {
             let mut entry = self.handles.entry(key);
-            entry.residency = match kind {
-                TransitionKind::Promote => Residency::Promoting,
-                TransitionKind::Demote => Residency::Demoting,
-            };
+            entry.residency = Residency::Transitioning { from, to };
             entry.pending_alloc = Some(new_alloc);
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let staged = Arc::new(AtomicBool::new(false));
         if let Some(tx) = &self.stage_tx {
             tx.send((
-                StageJob { id, key, precision: target },
+                StageJob { id, key, precision: target_precision },
                 staged.clone(),
             ))
             .expect("migration worker alive");
@@ -246,21 +244,17 @@ impl TransitionPipeline {
         self.stats
             .migrated_bytes
             .fetch_add(dev_bytes as u64, Ordering::Relaxed);
-        match kind {
-            TransitionKind::Promote => {
-                self.stats.promotions.fetch_add(1, Ordering::Relaxed)
-            }
-            TransitionKind::Demote => {
-                self.stats.demotions.fetch_add(1, Ordering::Relaxed)
-            }
-        };
+        if to < from {
+            self.stats.promotions.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.stats.demotions.fetch_add(1, Ordering::Relaxed);
+        }
         self.inflight.lock().unwrap().push(Inflight {
             id,
             key,
-            kind,
-            target,
+            from,
+            to,
             done_at,
-            hi_bytes,
             staged,
             new_alloc,
         });
@@ -268,10 +262,11 @@ impl TransitionPipeline {
     }
 
     /// Publish every transition whose modeled completion event has fired
-    /// (and whose staging is done). Returns the published expert keys.
-    /// Called at iteration boundaries by the engine — the forward pass
-    /// itself never waits on this.
+    /// (and whose staging is done). Returns the published (key, precision)
+    /// pairs. Called at iteration boundaries by the engine — the forward
+    /// pass itself never waits on this.
     pub fn poll(&self, now: f64) -> Vec<(ExpertKey, Precision)> {
+        let base = self.ladder.base_tier();
         let mut published = Vec::new();
         let mut inflight = self.inflight.lock().unwrap();
         let mut i = 0;
@@ -288,27 +283,24 @@ impl TransitionPipeline {
             let old_alloc = entry.active_alloc.take();
             entry.active_alloc = Some(job.new_alloc);
             entry.pending_alloc = None;
-            entry.residency = match job.kind {
-                TransitionKind::Promote => Residency::ResidentHi,
-                TransitionKind::Demote => Residency::ResidentLo,
-            };
+            entry.residency = Residency::Resident(job.to);
             drop(entry);
-            self.handles.publish(job.key, job.target);
+            self.handles.publish(job.key, job.to);
             self.stats.published.fetch_add(1, Ordering::Relaxed);
             // ...then the superseded version is reclaimed in the background.
             if let Some(alloc) = old_alloc {
+                let release_bytes = if job.from == base {
+                    0
+                } else {
+                    (self.bytes_of)(self.ladder.tier(job.from))
+                };
                 self.evictions.lock().unwrap().push_back(Eviction {
                     alloc,
-                    pool_hi: job.kind == TransitionKind::Demote,
-                    hi_bytes: if job.kind == TransitionKind::Demote {
-                        (self.bytes_of)(self.hi)
-                    } else {
-                        0
-                    },
+                    tier: job.from,
+                    release_bytes,
                 });
             }
-            let _ = job.hi_bytes; // released on the eviction of the hi buffer
-            published.push((job.key, job.target));
+            published.push((job.key, self.ladder.tier(job.to)));
         }
         drop(inflight);
         self.drain_evictions();
@@ -319,11 +311,9 @@ impl TransitionPipeline {
     pub fn drain_evictions(&self) {
         let mut q = self.evictions.lock().unwrap();
         while let Some(ev) = q.pop_front() {
-            if ev.pool_hi {
-                self.pool_hi.free(ev.alloc);
-                self.budget.release_hi(ev.hi_bytes);
-            } else {
-                self.pool_lo.free(ev.alloc);
+            self.pools[ev.tier].free(ev.alloc);
+            if ev.release_bytes > 0 {
+                self.budget.release(ev.tier, ev.release_bytes);
             }
             self.stats.evictions.fetch_add(1, Ordering::Relaxed);
         }
@@ -344,25 +334,35 @@ impl TransitionPipeline {
         self.inflight.lock().unwrap().len()
     }
 
-    /// Experts currently being promoted (policy planning input — avoids
+    /// The in-flight (key, from, to) moves (policy planning input — avoids
     /// scanning every entry's state mutex on the update path).
+    pub fn inflight_transitions(&self) -> Vec<(ExpertKey, usize, usize)> {
+        self.inflight
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|j| (j.key, j.from, j.to))
+            .collect()
+    }
+
+    /// Experts currently moving toward tier 0 (diagnostics).
     pub fn promoting_keys(&self) -> Vec<ExpertKey> {
         self.inflight
             .lock()
             .unwrap()
             .iter()
-            .filter(|j| j.kind == TransitionKind::Promote)
+            .filter(|j| j.to < j.from)
             .map(|j| j.key)
             .collect()
     }
 
-    /// Experts currently being demoted.
+    /// Experts currently moving away from tier 0 (diagnostics).
     pub fn demoting_keys(&self) -> Vec<ExpertKey> {
         self.inflight
             .lock()
             .unwrap()
             .iter()
-            .filter(|j| j.kind == TransitionKind::Demote)
+            .filter(|j| j.to > j.from)
             .map(|j| j.key)
             .collect()
     }
@@ -402,15 +402,13 @@ mod tests {
         n_experts: usize,
         n_hi_slots: usize,
     ) -> (Arc<HandleTable>, Arc<BudgetTracker>, TransitionPipeline) {
-        let hi = Precision::Fp16;
-        let lo = Precision::Int4;
-        let handles = Arc::new(HandleTable::new(1, n_experts, lo));
-        let b_hi = expert_bytes(hi);
-        let b_lo = expert_bytes(lo);
-        let budget = Arc::new(BudgetTracker::new(
-            n_hi_slots * b_hi,
-            n_experts * b_lo,
-        ));
+        let ladder =
+            PrecisionLadder::two_tier(Precision::Fp16, Precision::Int4);
+        let handles = Arc::new(HandleTable::new(1, n_experts, ladder));
+        let b_hi = expert_bytes(Precision::Fp16);
+        let b_lo = expert_bytes(Precision::Int4);
+        let budget =
+            Arc::new(BudgetTracker::new(n_hi_slots * b_hi, n_experts * b_lo));
         let pool_hi = Arc::new(BlockPool::new("hi", n_hi_slots * b_hi, b_hi));
         let pool_lo = Arc::new(BlockPool::new("lo", n_experts * b_lo, b_lo));
         // mark lo allocations for the boot state
@@ -422,10 +420,7 @@ mod tests {
         let p = TransitionPipeline::new(
             handles.clone(),
             budget.clone(),
-            pool_hi,
-            pool_lo,
-            hi,
-            lo,
+            vec![pool_hi, pool_lo],
             1e-9, // 1 GB/s → easy math
             Box::new(expert_bytes),
             8,
@@ -434,11 +429,14 @@ mod tests {
         (handles, budget, p)
     }
 
+    const PROMOTE: TransitionKind = TransitionKind::ToTier(0);
+    const DEMOTE: TransitionKind = TransitionKind::ToTier(1);
+
     #[test]
     fn promotion_publishes_after_completion_event() {
         let (handles, _b, p) = mk_pipeline(4, 2);
         let k = ExpertKey::new(0, 1);
-        let adm = p.submit(k, TransitionKind::Promote, 0.0);
+        let adm = p.submit(k, PROMOTE, 0.0);
         let done_at = match adm {
             Admission::Admitted { done_at, .. } => done_at,
             other => panic!("expected admission, got {other:?}"),
@@ -457,12 +455,12 @@ mod tests {
     #[test]
     fn admission_respects_budget_cap() {
         let (_h, b, p) = mk_pipeline(8, 2);
-        let a1 = p.submit(ExpertKey::new(0, 0), TransitionKind::Promote, 0.0);
-        let a2 = p.submit(ExpertKey::new(0, 1), TransitionKind::Promote, 0.0);
+        let a1 = p.submit(ExpertKey::new(0, 0), PROMOTE, 0.0);
+        let a2 = p.submit(ExpertKey::new(0, 1), PROMOTE, 0.0);
         assert!(matches!(a1, Admission::Admitted { .. }));
         assert!(matches!(a2, Admission::Admitted { .. }));
         // third promotion exceeds the 2-slot cap → deferred, no reservation
-        let a3 = p.submit(ExpertKey::new(0, 2), TransitionKind::Promote, 0.0);
+        let a3 = p.submit(ExpertKey::new(0, 2), PROMOTE, 0.0);
         assert_eq!(a3, Admission::Deferred);
         assert!(b.within_envelope());
     }
@@ -471,7 +469,7 @@ mod tests {
     fn demotion_frees_hi_capacity() {
         let (h, b, p) = mk_pipeline(8, 1);
         let k0 = ExpertKey::new(0, 0);
-        let adm = p.submit(k0, TransitionKind::Promote, 0.0);
+        let adm = p.submit(k0, PROMOTE, 0.0);
         let t1 = match adm {
             Admission::Admitted { done_at, .. } => done_at,
             _ => panic!(),
@@ -481,11 +479,11 @@ mod tests {
         assert_eq!(h.resolve(k0), Precision::Fp16);
         // cap full → next promote deferred
         assert_eq!(
-            p.submit(ExpertKey::new(0, 1), TransitionKind::Promote, t1),
+            p.submit(ExpertKey::new(0, 1), PROMOTE, t1),
             Admission::Deferred
         );
         // demote k0, publish, evict → capacity returns
-        let t2 = match p.submit(k0, TransitionKind::Demote, t1) {
+        let t2 = match p.submit(k0, DEMOTE, t1) {
             Admission::Admitted { done_at, .. } => done_at,
             other => panic!("{other:?}"),
         };
@@ -494,7 +492,7 @@ mod tests {
         assert_eq!(h.resolve(k0), Precision::Int4);
         assert_eq!(b.hi_used(), 0);
         assert!(matches!(
-            p.submit(ExpertKey::new(0, 1), TransitionKind::Promote, t2),
+            p.submit(ExpertKey::new(0, 1), PROMOTE, t2),
             Admission::Admitted { .. }
         ));
     }
@@ -504,25 +502,22 @@ mod tests {
         let (_h, _b, p) = mk_pipeline(4, 2);
         let k = ExpertKey::new(0, 0);
         // already lo → demote is redundant
-        assert_eq!(p.submit(k, TransitionKind::Demote, 0.0), Admission::Redundant);
-        let _ = p.submit(k, TransitionKind::Promote, 0.0);
+        assert_eq!(p.submit(k, DEMOTE, 0.0), Admission::Redundant);
+        let _ = p.submit(k, PROMOTE, 0.0);
         // already promoting → redundant
-        assert_eq!(
-            p.submit(k, TransitionKind::Promote, 0.0),
-            Admission::Redundant
-        );
+        assert_eq!(p.submit(k, PROMOTE, 0.0), Admission::Redundant);
+        assert_eq!(p.promoting_keys(), vec![k]);
+        assert!(p.demoting_keys().is_empty());
     }
 
     #[test]
     fn migration_stream_serializes_transfers() {
         let (_h, _b, p) = mk_pipeline(4, 2);
-        let t1 = match p.submit(ExpertKey::new(0, 0), TransitionKind::Promote, 0.0)
-        {
+        let t1 = match p.submit(ExpertKey::new(0, 0), PROMOTE, 0.0) {
             Admission::Admitted { done_at, .. } => done_at,
             _ => panic!(),
         };
-        let t2 = match p.submit(ExpertKey::new(0, 1), TransitionKind::Promote, 0.0)
-        {
+        let t2 = match p.submit(ExpertKey::new(0, 1), PROMOTE, 0.0) {
             Admission::Admitted { done_at, .. } => done_at,
             _ => panic!(),
         };
@@ -534,36 +529,101 @@ mod tests {
 
     #[test]
     fn inflight_cap_backpressure() {
-        let hi = Precision::Fp16;
-        let lo = Precision::Int4;
-        let handles = Arc::new(HandleTable::new(1, 8, lo));
-        let b_hi = expert_bytes(hi);
+        let ladder =
+            PrecisionLadder::two_tier(Precision::Fp16, Precision::Int4);
+        let handles = Arc::new(HandleTable::new(1, 8, ladder));
+        let b_hi = expert_bytes(Precision::Fp16);
         let budget = Arc::new(BudgetTracker::new(8 * b_hi, 0));
         let pool_hi = Arc::new(BlockPool::new("hi", 8 * b_hi, b_hi));
         let pool_lo = Arc::new(BlockPool::new("lo", 8, 1));
         let p = TransitionPipeline::new(
             handles,
             budget,
-            pool_hi,
-            pool_lo,
-            hi,
-            lo,
+            vec![pool_hi, pool_lo],
             1e-9,
             Box::new(expert_bytes),
             2, // cap
             Arc::new(|_, _| Vec::new()),
         );
         assert!(matches!(
-            p.submit(ExpertKey::new(0, 0), TransitionKind::Promote, 0.0),
+            p.submit(ExpertKey::new(0, 0), PROMOTE, 0.0),
             Admission::Admitted { .. }
         ));
         assert!(matches!(
-            p.submit(ExpertKey::new(0, 1), TransitionKind::Promote, 0.0),
+            p.submit(ExpertKey::new(0, 1), PROMOTE, 0.0),
             Admission::Admitted { .. }
         ));
         assert_eq!(
-            p.submit(ExpertKey::new(0, 2), TransitionKind::Promote, 0.0),
+            p.submit(ExpertKey::new(0, 2), PROMOTE, 0.0),
             Admission::Deferred
         );
+    }
+
+    #[test]
+    fn three_rung_moves_reserve_and_release_per_rung() {
+        // qwen30b-3tier style pipeline: 1 fp16 slot, 2 int4 slots.
+        let ladder = PrecisionLadder::full();
+        let handles = Arc::new(HandleTable::new(1, 4, ladder));
+        let b: Vec<usize> = [Precision::Fp16, Precision::Int4, Precision::Int2]
+            .iter()
+            .map(|&p| expert_bytes(p))
+            .collect();
+        let budget =
+            Arc::new(BudgetTracker::with_caps(vec![b[0], 2 * b[1], 4 * b[2]]));
+        let pools = vec![
+            Arc::new(BlockPool::new("t0", b[0], b[0])),
+            Arc::new(BlockPool::new("t1", 2 * b[1], b[1])),
+            Arc::new(BlockPool::new("t2", 4 * b[2], b[2])),
+        ];
+        for e in 0..4 {
+            let a = pools[2].alloc(b[2]).unwrap();
+            budget.try_reserve(2, b[2]);
+            handles.entry(ExpertKey::new(0, e)).active_alloc = Some(a);
+        }
+        let p = TransitionPipeline::new(
+            handles.clone(),
+            budget.clone(),
+            pools,
+            1e-9,
+            Box::new(expert_bytes),
+            8,
+            Arc::new(|_, _| Vec::new()),
+        );
+        // base → mid
+        let k = ExpertKey::new(0, 0);
+        let t1 = match p.submit(k, TransitionKind::ToTier(1), 0.0) {
+            Admission::Admitted { done_at, .. } => done_at,
+            other => panic!("{other:?}"),
+        };
+        p.wait_staged();
+        p.poll(t1);
+        assert_eq!(handles.resolve(k), Precision::Int4);
+        assert_eq!(budget.used(1), b[1]);
+        // mid → top releases the mid reservation on eviction
+        let t2 = match p.submit(k, TransitionKind::ToTier(0), t1) {
+            Admission::Admitted { done_at, .. } => done_at,
+            other => panic!("{other:?}"),
+        };
+        p.wait_staged();
+        p.poll(t2);
+        assert_eq!(handles.resolve(k), Precision::Fp16);
+        assert_eq!(budget.used(1), 0);
+        assert_eq!(budget.used(0), b[0]);
+        // top rung full → second fp16 promotion deferred
+        assert_eq!(
+            p.submit(ExpertKey::new(0, 1), TransitionKind::ToTier(0), t2),
+            Admission::Deferred
+        );
+        // top → base frees everything non-base
+        let t3 = match p.submit(k, TransitionKind::ToTier(2), t2) {
+            Admission::Admitted { done_at, .. } => done_at,
+            other => panic!("{other:?}"),
+        };
+        p.wait_staged();
+        p.poll(t3);
+        assert_eq!(handles.resolve(k), Precision::Int2);
+        assert_eq!(budget.used(0), 0);
+        assert_eq!(budget.used(1), 0);
+        assert!(budget.within_envelope());
     }
 }

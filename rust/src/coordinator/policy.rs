@@ -1,10 +1,14 @@
-//! Online scheduling policy (§3.5): budget-feasible top-n selection with
+//! Online scheduling policy (§3.5): budget-feasible tier assignment with
 //! hysteresis.
 //!
-//! Per layer, the target high-precision set is the top-`n_hi` experts by
-//! smoothed hotness — budget-feasible by construction since `n_hi` comes
-//! from [`super::budget::BudgetPlan`]. Two refinements keep the transition
-//! rate predictable:
+//! Per layer, the target assignment is a *waterfill* down the precision
+//! ladder: the hottest `n₀` experts sit at tier 0, the next `n₁` at tier 1,
+//! and the rest at the base rung — budget-feasible by construction since
+//! the per-rung capacities come from [`super::budget::BudgetPlan`].
+//! [`plan_layer`] is the classic single-boundary (2-rung) rule;
+//! [`plan_layer_ladder`] applies it per tier boundary (cumulative
+//! capacities), so the 2-rung ladder reproduces it exactly. Two
+//! refinements keep the transition rate predictable:
 //!
 //! * **idle experts are never promoted** (score ≤ 0 carries no traffic —
 //!   promoting it wastes PCIe bandwidth for zero quality benefit);
@@ -110,6 +114,108 @@ pub fn plan_layer(
         }
     }
     plan
+}
+
+/// One layer's tier-assignment delta for the transition pipeline.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LadderPlan {
+    /// `(expert, target rung)` moves; downward moves (toward the base)
+    /// first, so their evictions grow the feasible set for the upward ones.
+    pub moves: Vec<(usize, usize)>,
+}
+
+impl LadderPlan {
+    pub fn is_empty(&self) -> bool {
+        self.moves.is_empty()
+    }
+}
+
+/// Compute the target tier assignment for one layer of an N-rung ladder.
+///
+/// * `scores` — smoothed hotness per expert
+/// * `current_tier` — each expert's effective rung (published residency,
+///   overridden by in-flight transition targets)
+/// * `cum_caps` — cumulative per-layer capacities of the non-base rungs
+///   (`N_t = Σ_{i≤t} n_i`, from
+///   [`super::budget::BudgetPlan::cumulative_capacity`])
+/// * `margin` — hysteresis margin, applied independently at every tier
+///   boundary
+///
+/// Boundary `t` separates rungs `≤ t` from rungs `> t`; membership above
+/// each boundary is planned with [`plan_layer`] on the cumulative capacity,
+/// then nested (an expert above boundary `t` is above every deeper
+/// boundary), so a 1-boundary ladder reproduces [`plan_layer`] exactly and
+/// cumulative occupancy never exceeds `N_t` — which keeps any assignment
+/// inside the byte envelope.
+pub fn plan_layer_ladder(
+    scores: &[f64],
+    current_tier: &[usize],
+    cum_caps: &[usize],
+    margin: f64,
+) -> LadderPlan {
+    debug_assert_eq!(scores.len(), current_tier.len());
+    let n_boundaries = cum_caps.len();
+    let base = n_boundaries;
+    let mut memberships: Vec<HashSet<usize>> =
+        Vec::with_capacity(n_boundaries);
+    for t in 0..n_boundaries {
+        let current: HashSet<usize> = (0..current_tier.len())
+            .filter(|&e| current_tier[e] <= t)
+            .collect();
+        let delta = plan_layer(scores, &current, cum_caps[t], margin);
+        let mut m = current;
+        for &e in &delta.demote {
+            m.remove(&e);
+        }
+        for &e in &delta.promote {
+            m.insert(e);
+        }
+        if let Some(prev) = memberships.last() {
+            // Nesting: whatever sits above a shallower boundary also sits
+            // above this one; if the union overflows the cumulative cap,
+            // the weakest non-nested members fall below this boundary.
+            for &e in prev {
+                m.insert(e);
+            }
+            while m.len() > cum_caps[t] {
+                let weakest = m
+                    .iter()
+                    .copied()
+                    .filter(|e| !prev.contains(e))
+                    .min_by(|&a, &b| {
+                        scores[a]
+                            .partial_cmp(&scores[b])
+                            .unwrap()
+                            .then(b.cmp(&a))
+                    });
+                match weakest {
+                    Some(e) => {
+                        m.remove(&e);
+                    }
+                    None => break, // prev alone overflows — caps must grow
+                }
+            }
+        }
+        memberships.push(m);
+    }
+    let target = |e: usize| -> usize {
+        memberships
+            .iter()
+            .position(|m| m.contains(&e))
+            .unwrap_or(base)
+    };
+    let mut downs = Vec::new();
+    let mut ups = Vec::new();
+    for e in 0..scores.len() {
+        let t = target(e);
+        match t.cmp(&current_tier[e]) {
+            std::cmp::Ordering::Greater => downs.push((e, t)),
+            std::cmp::Ordering::Less => ups.push((e, t)),
+            std::cmp::Ordering::Equal => {}
+        }
+    }
+    downs.extend(ups);
+    LadderPlan { moves: downs }
 }
 
 #[cfg(test)]
@@ -250,6 +356,156 @@ mod tests {
             idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
             let want: HashSet<usize> = idx[..n_hi].iter().copied().collect();
             assert_eq!(after, want);
+        });
+    }
+
+    /// Apply a ladder plan to a tier assignment.
+    fn apply(current: &[usize], plan: &LadderPlan) -> Vec<usize> {
+        let mut out = current.to_vec();
+        for &(e, t) in &plan.moves {
+            out[e] = t;
+        }
+        out
+    }
+
+    #[test]
+    fn ladder_waterfill_assigns_by_hotness() {
+        // capacities: 1 at tier 0, 2 more at tier 1 (cum [1, 3])
+        let scores = [5.0, 9.0, 1.0, 3.0, 0.0];
+        let current = [2usize; 5];
+        let p = plan_layer_ladder(&scores, &current, &[1, 3], 0.0);
+        let after = apply(&current, &p);
+        assert_eq!(after, vec![1, 0, 2, 1, 2]);
+    }
+
+    #[test]
+    fn ladder_downward_moves_precede_upward() {
+        let scores = [1.0, 9.0];
+        let current = [0usize, 2];
+        let p = plan_layer_ladder(&scores, &current, &[1, 2], 0.0);
+        assert_eq!(p.moves.len(), 2);
+        assert!(p.moves[0].1 > current[p.moves[0].0], "demotion first");
+        assert_eq!(p.moves[1], (1, 0));
+    }
+
+    #[test]
+    fn prop_two_rung_ladder_reproduces_plan_layer_exactly() {
+        // Satellite (b): the degenerate 2-rung ladder must emit the same
+        // promote/demote sets as the classic planner, for any input.
+        let mut prop = Prop::new("ladder_two_rung_equiv");
+        prop.run(100, |rng| {
+            let e = 4 + rng.below(60);
+            let scores: Vec<f64> =
+                (0..e).map(|_| rng.next_f64() * 10.0).collect();
+            let n_hi = rng.below(e + 1);
+            let margin = rng.range_f64(0.0, 0.5);
+            let current_tier: Vec<usize> =
+                (0..e).map(|_| rng.below(2)).collect();
+            let current: HashSet<usize> = (0..e)
+                .filter(|&i| current_tier[i] == 0)
+                .collect();
+            let classic = plan_layer(&scores, &current, n_hi, margin);
+            let ladder =
+                plan_layer_ladder(&scores, &current_tier, &[n_hi], margin);
+            let promote: HashSet<usize> = ladder
+                .moves
+                .iter()
+                .filter(|&&(_, t)| t == 0)
+                .map(|&(e, _)| e)
+                .collect();
+            let demote: HashSet<usize> = ladder
+                .moves
+                .iter()
+                .filter(|&&(_, t)| t == 1)
+                .map(|&(e, _)| e)
+                .collect();
+            let classic_p: HashSet<usize> =
+                classic.promote.iter().copied().collect();
+            let classic_d: HashSet<usize> =
+                classic.demote.iter().copied().collect();
+            assert_eq!(promote, classic_p);
+            assert_eq!(demote, classic_d);
+        });
+    }
+
+    #[test]
+    fn prop_ladder_waterfill_monotone_in_hotness() {
+        // Satellite (a): with hysteresis disabled, a hotter expert never
+        // sits at a lower (colder) rung than a colder trafficked one.
+        let mut prop = Prop::new("ladder_monotone");
+        prop.run(100, |rng| {
+            let e = 4 + rng.below(40);
+            // distinct positive scores so the waterfill is unambiguous
+            let mut scores: Vec<f64> = (1..=e).map(|i| i as f64).collect();
+            rng.shuffle(&mut scores);
+            let n_tiers = 2 + rng.below(2); // 2 or 3 rungs
+            let mut cum_caps = Vec::new();
+            let mut cum = 0;
+            for _ in 0..n_tiers - 1 {
+                cum += rng.below(e / 2 + 1);
+                cum_caps.push(cum.min(e));
+            }
+            let current: Vec<usize> =
+                (0..e).map(|_| rng.below(n_tiers)).collect();
+            let p = plan_layer_ladder(&scores, &current, &cum_caps, 0.0);
+            let after = apply(&current, &p);
+            for a in 0..e {
+                for b in 0..e {
+                    if scores[a] > scores[b] {
+                        assert!(
+                            after[a] <= after[b],
+                            "hotter expert {a} (S={}) at rung {} below \
+                             colder {b} (S={}) at rung {}",
+                            scores[a],
+                            after[a],
+                            scores[b],
+                            after[b]
+                        );
+                    }
+                }
+            }
+            // cumulative occupancy never exceeds cumulative capacity
+            for (t, &cap) in cum_caps.iter().enumerate() {
+                let occ = after.iter().filter(|&&x| x <= t).count();
+                assert!(occ <= cap, "boundary {t}: {occ} > {cap}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_ladder_moves_are_consistent() {
+        // Moves only name experts whose rung actually changes, downward
+        // moves come first, and targets are on the ladder.
+        let mut prop = Prop::new("ladder_moves_consistent");
+        prop.run(60, |rng| {
+            let e = 4 + rng.below(40);
+            let scores: Vec<f64> =
+                (0..e).map(|_| rng.next_f64() * 10.0).collect();
+            let n_tiers = 2 + rng.below(3);
+            let mut cum_caps = Vec::new();
+            let mut cum = 0;
+            for _ in 0..n_tiers - 1 {
+                cum += rng.below(e / 2 + 1);
+                cum_caps.push(cum.min(e));
+            }
+            let current: Vec<usize> =
+                (0..e).map(|_| rng.below(n_tiers)).collect();
+            let margin = rng.range_f64(0.0, 0.4);
+            let p = plan_layer_ladder(&scores, &current, &cum_caps, margin);
+            let mut seen_up = false;
+            for &(ex, t) in &p.moves {
+                assert!(t < n_tiers);
+                assert_ne!(t, current[ex], "no-op move emitted");
+                if t < current[ex] {
+                    seen_up = true;
+                    assert!(
+                        scores[ex] > 0.0,
+                        "idle experts never move up the ladder"
+                    );
+                } else {
+                    assert!(!seen_up, "downward move after an upward one");
+                }
+            }
         });
     }
 

@@ -1,7 +1,8 @@
 //! Partitioned, fixed-granularity device-memory pools (§3.3).
 //!
-//! Expert weights live in dedicated pools (`pool_hi`, `pool_lo`) disjoint
-//! from the KV-cache region. Each pool hands out fixed-size blocks from a
+//! Expert weights live in dedicated pools — one per ladder rung
+//! (`pool_t0` … `pool_tN`) — disjoint from the KV-cache region. Each pool
+//! hands out fixed-size blocks from a
 //! constant-time free list — allocation and reclamation are pointer
 //! operations that never touch a general-purpose allocator, so background
 //! transitions cannot inject allocator jitter into the token critical path,

@@ -1,19 +1,21 @@
-//! Versioned Expert Residency (VER, §3.2).
+//! Versioned Expert Residency (VER, §3.2), generalized to the N-rung
+//! precision ladder.
 //!
 //! Each expert owns an *entry* with metadata for all supported versions and
 //! exports a **stable handle**: immutable in identity, holding an atomic
 //! pointer to the currently active (fully materialized) version. The compute
 //! path resolves the handle with one atomic load; transitions publish by
 //! swapping the pointer — publish-then-switch — so no kernel ever observes a
-//! partially populated version.
+//! partially populated version. The atomic value is the *rung index* of the
+//! active version; the ladder decodes it to a precision.
 //!
 //! The single invariant enforced here: **a handle always resolves to a
-//! complete, resident weight version.**
+//! complete, resident weight version at some rung of the ladder.**
 
-use std::sync::atomic::{AtomicU8, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::Mutex;
 
-use crate::model::Precision;
+use crate::model::{Precision, PrecisionLadder};
 
 use super::pools::PoolAlloc;
 
@@ -34,17 +36,29 @@ impl ExpertKey {
     }
 }
 
-/// Residency states of an expert entry (§3.2).
+/// Residency states of an expert entry (§3.2), per ladder rung.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Residency {
-    /// High-precision version resident; handle points to it.
-    ResidentHi,
-    /// Only the low-precision version resident; handle points to it.
-    ResidentLo,
-    /// High-precision version in flight; handle still points to lo.
-    Promoting,
-    /// Low-precision version in flight (replacing hi); handle points to hi.
-    Demoting,
+    /// The version at rung `tier` is resident; the handle points to it.
+    Resident(usize),
+    /// A version at rung `to` is in flight; the handle still points to the
+    /// complete version at rung `from` (promotion when `to < from`,
+    /// demotion when `to > from`).
+    Transitioning { from: usize, to: usize },
+}
+
+impl Residency {
+    /// The rung the handle currently resolves to.
+    pub fn active_tier(self) -> usize {
+        match self {
+            Residency::Resident(t) => t,
+            Residency::Transitioning { from, .. } => from,
+        }
+    }
+
+    pub fn is_transitioning(self) -> bool {
+        matches!(self, Residency::Transitioning { .. })
+    }
 }
 
 /// Per-entry transition bookkeeping (guarded; off the compute path).
@@ -59,50 +73,42 @@ pub struct EntryState {
     pub pending_job: Option<u64>,
 }
 
-fn enc(p: Precision) -> u8 {
-    match p {
-        Precision::Int2 => 0,
-        Precision::Int4 => 1,
-        Precision::Fp16 => 2,
-    }
-}
-
-fn dec(v: u8) -> Precision {
-    match v {
-        0 => Precision::Int2,
-        1 => Precision::Int4,
-        _ => Precision::Fp16,
-    }
-}
-
 /// The handle table: one stable slot per expert.
 ///
-/// `active[i]` is the published precision of expert `i`'s current version —
+/// `active[i]` is the published rung of expert `i`'s current version —
 /// the `active_ptr` of the paper (our device "pointers" are (expert,
-/// precision) pairs resolved against the prepared weight store; the
+/// rung) pairs resolved against the prepared weight store; the
 /// indirection and publish atomicity are identical). `state[i]` carries
 /// the transition state machine, touched only by the scheduler/pipeline.
 pub struct HandleTable {
     n_experts: usize,
     n_layers: usize,
+    ladder: PrecisionLadder,
     active: Vec<AtomicU8>,
     resolves: AtomicU64,
     state: Vec<Mutex<EntryState>>,
 }
 
 impl HandleTable {
-    /// All experts start Resident-Lo at `lo` precision (cold boot).
-    pub fn new(n_layers: usize, n_experts: usize, lo: Precision) -> Self {
+    /// All experts start resident at the ladder's base rung (cold boot).
+    pub fn new(
+        n_layers: usize,
+        n_experts: usize,
+        ladder: PrecisionLadder,
+    ) -> Self {
         let n = n_layers * n_experts;
+        let base = ladder.base_tier();
+        assert!(ladder.n_tiers() <= u8::MAX as usize);
         Self {
             n_experts,
             n_layers,
-            active: (0..n).map(|_| AtomicU8::new(enc(lo))).collect(),
+            ladder,
+            active: (0..n).map(|_| AtomicU8::new(base as u8)).collect(),
             resolves: AtomicU64::new(0),
             state: (0..n)
                 .map(|_| {
                     Mutex::new(EntryState {
-                        residency: Residency::ResidentLo,
+                        residency: Residency::Resident(base),
                         active_alloc: None,
                         pending_alloc: None,
                         pending_job: None,
@@ -120,12 +126,23 @@ impl HandleTable {
         self.n_experts
     }
 
+    /// The ladder this table's rung indices decode through.
+    pub fn ladder(&self) -> &PrecisionLadder {
+        &self.ladder
+    }
+
     /// HOT PATH: resolve a stable handle to the active version's precision.
     /// One atomic load; never blocks, never observes a partial version.
     #[inline]
     pub fn resolve(&self, key: ExpertKey) -> Precision {
+        self.ladder.tier(self.resolve_tier(key))
+    }
+
+    /// HOT PATH: resolve a stable handle to the active version's rung.
+    #[inline]
+    pub fn resolve_tier(&self, key: ExpertKey) -> usize {
         self.resolves.fetch_add(1, Ordering::Relaxed);
-        dec(self.active[key.flat(self.n_experts)].load(Ordering::Acquire))
+        self.active[key.flat(self.n_experts)].load(Ordering::Acquire) as usize
     }
 
     /// Number of hot-path resolves so far (overhead accounting).
@@ -133,25 +150,60 @@ impl HandleTable {
         self.resolves.load(Ordering::Relaxed)
     }
 
-    /// PUBLISH: atomically switch the active version. Called by the
-    /// transition pipeline only after the new version is fully materialized.
-    pub fn publish(&self, key: ExpertKey, p: Precision) {
-        self.active[key.flat(self.n_experts)].store(enc(p), Ordering::Release);
+    /// PUBLISH: atomically switch the active version to rung `tier`.
+    /// Called by the transition pipeline only after the new version is
+    /// fully materialized.
+    pub fn publish(&self, key: ExpertKey, tier: usize) {
+        debug_assert!(tier < self.ladder.n_tiers());
+        self.active[key.flat(self.n_experts)]
+            .store(tier as u8, Ordering::Release);
     }
 
     /// Lock an entry's transition state (never taken on the compute path).
-    pub fn entry(&self, key: ExpertKey) -> std::sync::MutexGuard<'_, EntryState> {
+    pub fn entry(
+        &self,
+        key: ExpertKey,
+    ) -> std::sync::MutexGuard<'_, EntryState> {
         self.state[key.flat(self.n_experts)].lock().unwrap()
     }
 
-    /// Snapshot of the hi-resident set of one layer (diagnostics/tests).
-    pub fn hi_set(&self, layer: usize, hi: Precision) -> Vec<usize> {
+    /// Published rung of every expert of one layer (policy input).
+    pub fn tier_snapshot(&self, layer: usize) -> Vec<usize> {
         (0..self.n_experts)
-            .filter(|&e| {
-                dec(self.active[layer * self.n_experts + e].load(Ordering::Acquire))
-                    == hi
+            .map(|e| {
+                self.active[layer * self.n_experts + e].load(Ordering::Acquire)
+                    as usize
             })
             .collect()
+    }
+
+    /// Snapshot of the experts of one layer published at rung `tier`.
+    pub fn tier_set(&self, layer: usize, tier: usize) -> Vec<usize> {
+        (0..self.n_experts)
+            .filter(|&e| {
+                self.active[layer * self.n_experts + e].load(Ordering::Acquire)
+                    as usize
+                    == tier
+            })
+            .collect()
+    }
+
+    /// Snapshot of the experts of one layer published at precision `p`
+    /// (diagnostics/tests; `p` off the ladder yields an empty set).
+    pub fn hi_set(&self, layer: usize, p: Precision) -> Vec<usize> {
+        match self.ladder.tier_of(p) {
+            Some(t) => self.tier_set(layer, t),
+            None => Vec::new(),
+        }
+    }
+
+    /// Published residency counts per rung, whole table (metrics).
+    pub fn tier_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.ladder.n_tiers()];
+        for a in &self.active {
+            counts[a.load(Ordering::Acquire) as usize] += 1;
+        }
+        counts
     }
 
     /// Count of experts currently in a given residency state.
@@ -168,26 +220,44 @@ mod tests {
     use super::*;
     use crate::testutil::prop::Prop;
 
+    fn two_tier() -> PrecisionLadder {
+        PrecisionLadder::two_tier(Precision::Fp16, Precision::Int4)
+    }
+
     #[test]
-    fn cold_boot_all_lo() {
-        let t = HandleTable::new(2, 8, Precision::Int4);
+    fn cold_boot_all_base() {
+        let t = HandleTable::new(2, 8, two_tier());
         for l in 0..2 {
             for e in 0..8 {
                 assert_eq!(t.resolve(ExpertKey::new(l, e)), Precision::Int4);
             }
         }
-        assert_eq!(t.count_residency(Residency::ResidentLo), 16);
+        assert_eq!(t.count_residency(Residency::Resident(1)), 16);
         assert_eq!(t.resolve_count(), 16);
+        assert_eq!(t.tier_counts(), vec![0, 16]);
     }
 
     #[test]
     fn publish_switches_resolution() {
-        let t = HandleTable::new(1, 4, Precision::Int4);
+        let t = HandleTable::new(1, 4, two_tier());
         let k = ExpertKey::new(0, 2);
-        t.publish(k, Precision::Fp16);
+        t.publish(k, 0);
         assert_eq!(t.resolve(k), Precision::Fp16);
         assert_eq!(t.resolve(ExpertKey::new(0, 1)), Precision::Int4);
         assert_eq!(t.hi_set(0, Precision::Fp16), vec![2]);
+        assert_eq!(t.tier_set(0, 0), vec![2]);
+        assert_eq!(t.tier_snapshot(0), vec![1, 1, 0, 1]);
+    }
+
+    #[test]
+    fn three_rung_table_counts_middle_tier() {
+        let t = HandleTable::new(1, 4, PrecisionLadder::full());
+        t.publish(ExpertKey::new(0, 0), 0);
+        t.publish(ExpertKey::new(0, 1), 1);
+        assert_eq!(t.resolve(ExpertKey::new(0, 1)), Precision::Int4);
+        assert_eq!(t.resolve(ExpertKey::new(0, 3)), Precision::Int2);
+        assert_eq!(t.tier_counts(), vec![1, 1, 2]);
+        assert_eq!(t.hi_set(0, Precision::Int4), vec![1]);
     }
 
     #[test]
@@ -197,12 +267,25 @@ mod tests {
     }
 
     #[test]
+    fn residency_active_tier() {
+        assert_eq!(Residency::Resident(2).active_tier(), 2);
+        let t = Residency::Transitioning { from: 1, to: 0 };
+        assert_eq!(t.active_tier(), 1);
+        assert!(t.is_transitioning());
+        assert!(!Residency::Resident(0).is_transitioning());
+    }
+
+    #[test]
     fn prop_resolve_always_sees_complete_version() {
         // Property: under concurrent publishing, resolve() only ever
-        // returns one of the two published precisions — never a torn value.
+        // returns one of the two published rungs — never a torn value.
         let mut prop = Prop::new("ver_publish_atomicity");
         prop.run(5, |_rng| {
-            let t = std::sync::Arc::new(HandleTable::new(1, 4, Precision::Int2));
+            let t = std::sync::Arc::new(HandleTable::new(
+                1,
+                4,
+                PrecisionLadder::full(),
+            ));
             let k = ExpertKey::new(0, 1);
             let stop = std::sync::Arc::new(std::sync::atomic::AtomicU8::new(0));
             let writer = {
@@ -210,10 +293,7 @@ mod tests {
                 let stop = stop.clone();
                 std::thread::spawn(move || {
                     for i in 0..20_000u32 {
-                        t.publish(
-                            k,
-                            if i % 2 == 0 { Precision::Fp16 } else { Precision::Int2 },
-                        );
+                        t.publish(k, if i % 2 == 0 { 0 } else { 2 });
                     }
                     stop.store(1, Ordering::Release);
                 })

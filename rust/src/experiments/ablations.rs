@@ -191,6 +191,7 @@ pub fn a4_pool_granularity(fast: bool) -> Result<String> {
 /// per-expert precision map (MxMoE/MoPEQ-class) matches DynaExq on its
 /// calibration workload but misallocates its high-precision budget when
 /// the workload shifts; DynaExq re-converges online.
+#[cfg(feature = "numeric")]
 pub fn a5_static_map_shift(fast: bool) -> Result<String> {
     use crate::experiments::quality_exp::{logical_n_hi, QualityFixture};
     use crate::quality::logit_kl;
@@ -263,6 +264,16 @@ pub fn a5_static_map_shift(fast: bool) -> Result<String> {
          shift degradation (KL ratio code/text): static-map {map_deg:.2}x, \
          dynaexq {dyn_deg:.2}x\n",
         t.render()
+    ))
+}
+
+/// A5 needs the numeric engine; without the `numeric` feature it reports
+/// how to get it instead of silently skipping.
+#[cfg(not(feature = "numeric"))]
+pub fn a5_static_map_shift(_fast: bool) -> Result<String> {
+    Err(anyhow!(
+        "A5 runs on the numeric engine; rebuild with `--features numeric` \
+         (requires the PJRT runtime and AOT artifacts)"
     ))
 }
 
@@ -366,9 +377,91 @@ pub fn a7_load_sweep(fast: bool) -> Result<String> {
     Ok(out)
 }
 
+/// A8: tier count — the 2-rung hi/lo ladder vs the 3-rung
+/// Fp16/Int4/Int2 ladder under the *same* HBM envelope (qwen30b-sim).
+///
+/// The middle rung gives warm experts an Int4 landing spot instead of the
+/// Int2 base, trading some top-rung capacity for a deeper fidelity
+/// gradient: the 3-rung run should serve a larger share of traffic above
+/// the base rung while staying inside the identical envelope.
+pub fn a8_tier_count(fast: bool) -> Result<String> {
+    let rounds = if fast { 3 } else { 8 };
+    let preset = ModelPreset::qwen30b_sim();
+    let cfg = ServingConfig::default();
+    let dev = DeviceConfig::default();
+    let registry = BackendRegistry::with_builtins();
+    let mut t = Table::new(&[
+        "ladder",
+        "resident/rung",
+        "traffic/rung %",
+        "migrated GB",
+        "tpop p99",
+        "tok/s",
+    ]);
+    for method in ["dynaexq", "dynaexq-3tier"] {
+        let backend = registry
+            .build(method, &BackendCtx::new(&preset, &cfg, &dev))
+            .map_err(|e| anyhow!(e))?;
+        let mut e = Engine::new(
+            &preset,
+            &WorkloadProfile::text(),
+            backend,
+            &dev,
+            EngineConfig { max_batch: 32, seed: 0xA8, track_activation: false },
+        );
+        let w = WorkloadProfile::text();
+        for _ in 0..rounds {
+            e.serve_uniform(&w, 8, 128, 16);
+        }
+        let joined = |xs: Vec<String>| xs.join("/");
+        t.row(&[
+            method.to_string(),
+            joined(
+                e.backend
+                    .tier_residency()
+                    .iter()
+                    .map(|n| n.to_string())
+                    .collect(),
+            ),
+            joined(
+                e.backend
+                    .tier_fractions()
+                    .iter()
+                    .map(|f| format!("{:.1}", f * 100.0))
+                    .collect(),
+            ),
+            format!("{:.2}", e.backend.migrated_bytes() as f64 / 1e9),
+            format!("{:.4}", e.metrics.tpop.p99()),
+            format!("{:.0}", e.metrics.throughput()),
+        ]);
+    }
+    Ok(format!(
+        "== A8: tier count — 2-rung vs 3-rung ladder, identical HBM \
+         envelope (qwen30b-sim, text workload) ==\n{}",
+        t.render()
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn tier_count_ablation_runs_both_ladders() {
+        let report = a8_tier_count(true).unwrap();
+        assert!(report.contains("dynaexq-3tier"), "{report}");
+        // the 3-rung row reports three per-rung residency counts
+        let row3 = report
+            .lines()
+            .find(|l| l.contains("dynaexq-3tier"))
+            .unwrap()
+            .to_string();
+        let counts_col = row3
+            .split_whitespace()
+            .find(|c| c.matches('/').count() == 2)
+            .unwrap_or_else(|| panic!("no three-rung column in: {row3}"));
+        assert_eq!(counts_col.split('/').count(), 3);
+    }
 
     #[test]
     fn load_sweep_saturation_ordering() {

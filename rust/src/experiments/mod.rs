@@ -9,9 +9,40 @@ pub mod ablations;
 pub mod activation;
 pub mod helpers;
 pub mod latency;
+#[cfg(feature = "numeric")]
 pub mod quality_exp;
 pub mod shift;
 pub mod waiting;
+
+/// Without the `numeric` build feature the quality experiments cannot run
+/// (no PJRT runtime); the harness entry points stay callable and explain
+/// how to enable them.
+#[cfg(not(feature = "numeric"))]
+pub mod quality_exp {
+    use anyhow::{bail, Result};
+
+    const NO_NUMERIC: &str =
+        "quality experiments run on the numeric engine; rebuild with \
+         `--features numeric` (requires the PJRT runtime and AOT artifacts)";
+
+    pub fn table4_quality(_fast: bool) -> Result<String> {
+        bail!(NO_NUMERIC)
+    }
+
+    pub fn figure3_demotion(_fast: bool) -> Result<String> {
+        bail!(NO_NUMERIC)
+    }
+
+    pub fn run_quality(
+        _model: &str,
+        _method: &str,
+        _workload: &str,
+        _n_prompts: usize,
+        _prompt_len: usize,
+    ) -> Result<crate::quality::QualityReport> {
+        bail!(NO_NUMERIC)
+    }
+}
 
 use anyhow::{bail, Result};
 
@@ -63,14 +94,25 @@ pub fn cmd_report(args: &Args) -> Result<()> {
             "a5" => ablations::a5_static_map_shift(fast)?,
             "a6" => ablations::a6_reactive_vs_policy(fast)?,
             "a7" => ablations::a7_load_sweep(fast)?,
+            "a8" => ablations::a8_tier_count(fast)?,
             other => bail!("unknown experiment {other:?}"),
         })
     };
     if exp == "all" {
+        // Numeric-engine experiments (f3, t4, a5) need the `numeric`
+        // feature; `all` skips them with a note in feature-less builds
+        // instead of failing the whole report.
+        let numeric = cfg!(feature = "numeric");
         for id in [
             "t1", "t2", "f1", "f2", "f3", "t4", "f6", "f7", "f8", "f9",
-            "f10", "a1", "a2", "a3", "a4", "a5", "a6", "a7",
+            "f10", "a1", "a2", "a3", "a4", "a5", "a6", "a7", "a8",
         ] {
+            if !numeric && matches!(id, "f3" | "t4" | "a5") {
+                println!(
+                    "== {id} skipped: needs `--features numeric` (PJRT) ==\n"
+                );
+                continue;
+            }
             println!("{}", run(id)?);
         }
     } else {

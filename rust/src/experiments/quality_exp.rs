@@ -29,7 +29,7 @@ use super::helpers::{preset, profile};
 pub fn logical_n_hi(p: &ModelPreset, cfg: &ServingConfig) -> Result<usize> {
     let plan = crate::coordinator::Coordinator::plan_for(p, cfg)
         .map_err(|e| anyhow!(e))?;
-    Ok(plan.n_hi_per_layer)
+    Ok(plan.n_hi_per_layer())
 }
 
 /// Methods meaningful in the numeric quality harness. Offloading methods
@@ -352,8 +352,8 @@ pub fn figure3_demotion(fast: bool) -> Result<String> {
         out.push_str(&format!(
             "-- {model} ({} experts/layer, hot={} cold={}) --\n{}",
             e,
-            fixture.exec_preset.hi.tag(),
-            fixture.exec_preset.lo.tag(),
+            fixture.exec_preset.hi().tag(),
+            fixture.exec_preset.lo().tag(),
             t.render()
         ));
     }

@@ -5,9 +5,10 @@
 //! Quantization for Scalable Mixture-of-Experts Inference"* (cs.PF 2025).
 //!
 //! DynaExq treats single-GPU MoE serving as an **online, budget-constrained
-//! precision allocation** problem: experts that dominate runtime traffic are
-//! kept resident at a high-precision tier, the rest fall back to a
-//! low-precision tier, and precision transitions (promotions / demotions)
+//! precision allocation** problem over an N-rung precision ladder: experts
+//! that dominate runtime traffic hold the highest rungs, warm experts a
+//! middle rung, the rest fall to the always-resident base rung (the
+//! paper's binary hi/lo split is the 2-rung special case), and tier moves
 //! happen asynchronously through stable expert handles so the forward pass
 //! always executes on a fully materialized expert version.
 //!
@@ -41,6 +42,7 @@ pub mod experiments;
 pub mod metrics;
 pub mod model;
 pub mod quality;
+#[cfg(feature = "numeric")]
 pub mod runtime;
 pub mod serving;
 pub mod sim;
@@ -50,7 +52,9 @@ pub mod workload;
 
 pub use config::{DeviceConfig, ModelPreset, ServingConfig};
 pub use coordinator::Coordinator;
+pub use model::PrecisionLadder;
 pub use serving::engine::Engine;
+#[cfg(feature = "numeric")]
 pub use serving::numeric::NumericEngine;
 pub use serving::registry::{BackendCtx, BackendRegistry};
 pub use serving::session::{MetricsSnapshot, ServeSession, SessionBuilder};

@@ -3,7 +3,7 @@
 //! Subcommands:
 //! * `serve`   — run a modeled serving session and print metrics
 //! * `report`  — regenerate one paper table/figure (`--exp t1|t2|f1|f2|f3|
-//!   t4|f6|f7|f8|f9|f10|a1|a2|a3|a4`)
+//!   t4|f6|f7|f8|f9|f10|a1..a8`)
 //! * `quality` — numeric quality run for one model/method
 //! * `trace`   — dump routing-trace statistics for a workload
 //!
@@ -29,8 +29,9 @@ SUBCOMMANDS:
                --seed S --warmup N (default 2)
                --kv   (also print the machine-readable metrics snapshot)
     report   Regenerate a paper table/figure.
-               --exp t1|t2|t4|f1|f2|f3|f6..f10|a1..a7|all  [--fast]
-    quality  Numeric quality run (real PJRT execution).
+               --exp t1|t2|t4|f1|f2|f3|f6..f10|a1..a8|all  [--fast]
+    quality  Numeric quality run (real PJRT execution; needs a build with
+             --features numeric).
                --model ... --method fp16|static|dynaexq
                --prompts N (default 8) --prompt-len N (default 64)
     trace    Router traces: statistics, recording, replay.

@@ -64,6 +64,90 @@ impl Precision {
     }
 }
 
+/// A validated precision ladder: the ordered tier list a model serves
+/// through, highest fidelity first (tier 0 = hottest rung, last tier =
+/// the always-resident base rung).
+///
+/// The original DynaExq formulation is the 2-rung special case
+/// (`hi`/`lo`); every preset is expressed as a ladder and the coordinator
+/// generalizes budget planning, residency, and the transition pipeline to
+/// N rungs. Invariant: rungs are strictly descending in fidelity, so
+/// per-expert byte sizes strictly decrease down the ladder.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PrecisionLadder {
+    tiers: Vec<Precision>,
+}
+
+impl PrecisionLadder {
+    /// Validate and build a ladder. Errors on an empty list or any
+    /// non-strictly-descending adjacent pair (which would also make two
+    /// rungs byte-identical and degenerate the budget waterfill).
+    pub fn new(tiers: Vec<Precision>) -> Result<Self, String> {
+        if tiers.is_empty() {
+            return Err("precision ladder must have at least one rung".into());
+        }
+        for w in tiers.windows(2) {
+            if w[0] <= w[1] {
+                return Err(format!(
+                    "precision ladder must be strictly descending: \
+                     {:?} is not above {:?}",
+                    w[0], w[1]
+                ));
+            }
+        }
+        Ok(Self { tiers })
+    }
+
+    /// The classic DynaExq hi/lo pair as a 2-rung ladder.
+    pub fn two_tier(hi: Precision, lo: Precision) -> Self {
+        Self::new(vec![hi, lo]).expect("hi must be above lo")
+    }
+
+    /// The full three-rung ladder over every supported precision.
+    pub fn full() -> Self {
+        Self::new(vec![Precision::Fp16, Precision::Int4, Precision::Int2])
+            .expect("static ladder")
+    }
+
+    pub fn n_tiers(&self) -> usize {
+        self.tiers.len()
+    }
+
+    /// All rungs, highest fidelity first.
+    pub fn tiers(&self) -> &[Precision] {
+        &self.tiers
+    }
+
+    /// Precision of rung `tier` (panics out of range, like indexing).
+    #[inline]
+    pub fn tier(&self, tier: usize) -> Precision {
+        self.tiers[tier]
+    }
+
+    /// Index of the base (coldest, always-resident) rung.
+    #[inline]
+    pub fn base_tier(&self) -> usize {
+        self.tiers.len() - 1
+    }
+
+    /// Highest-fidelity rung (the classic `hi`).
+    #[inline]
+    pub fn top(&self) -> Precision {
+        self.tiers[0]
+    }
+
+    /// Base rung precision (the classic `lo`).
+    #[inline]
+    pub fn base(&self) -> Precision {
+        *self.tiers.last().unwrap()
+    }
+
+    /// Rung index of a precision, if it is on the ladder.
+    pub fn tier_of(&self, p: Precision) -> Option<usize> {
+        self.tiers.iter().position(|&t| t == p)
+    }
+}
+
 /// Parameter count of one expert (w1 [D,F] + w3 [D,F] + w2 [F,D]).
 pub const EXPERT_PARAMS: usize = 3 * D_MODEL * FF_DIM;
 
@@ -95,6 +179,33 @@ mod tests {
             assert_eq!(Precision::from_tag(p.tag()), Some(p));
         }
         assert_eq!(Precision::from_tag("int8"), None);
+    }
+
+    #[test]
+    fn ladder_validation() {
+        let l = PrecisionLadder::full();
+        assert_eq!(l.n_tiers(), 3);
+        assert_eq!(l.top(), Precision::Fp16);
+        assert_eq!(l.base(), Precision::Int2);
+        assert_eq!(l.base_tier(), 2);
+        assert_eq!(l.tier_of(Precision::Int4), Some(1));
+        let two = PrecisionLadder::two_tier(Precision::Fp16, Precision::Int4);
+        assert_eq!(two.tiers(), &[Precision::Fp16, Precision::Int4]);
+        assert!(PrecisionLadder::new(vec![]).is_err());
+        assert!(PrecisionLadder::new(vec![
+            Precision::Int4,
+            Precision::Int4
+        ])
+        .is_err());
+        assert!(PrecisionLadder::new(vec![
+            Precision::Int2,
+            Precision::Fp16
+        ])
+        .is_err());
+        assert!(
+            PrecisionLadder::new(vec![Precision::Int4]).is_ok(),
+            "single-rung ladder is legal (static residency)"
+        );
     }
 
     #[test]

@@ -29,9 +29,22 @@ pub trait ResidencyBackend: Send {
     /// Total bytes moved host→device so far (modeled).
     fn migrated_bytes(&self) -> u64;
 
-    /// Fraction of resolutions served at the high tier (diagnostics).
+    /// Fraction of resolutions served at the ladder's top rung
+    /// (diagnostics).
     fn hi_fraction(&self) -> f64 {
         0.0
+    }
+
+    /// Fraction of resolutions served at each ladder rung, tier 0 first
+    /// (empty when the backend does not track per-rung occupancy).
+    fn tier_fractions(&self) -> Vec<f64> {
+        Vec::new()
+    }
+
+    /// Published residency counts per ladder rung, tier 0 first (empty
+    /// when the backend has no residency table).
+    fn tier_residency(&self) -> Vec<usize> {
+        Vec::new()
     }
 
     /// Drive all pending residency work to completion and freeze the
@@ -52,12 +65,15 @@ pub trait ResidencyBackend: Send {
 // DynaExq
 // ---------------------------------------------------------------------------
 
-/// The paper's system: coordinator-driven online precision allocation.
+/// The paper's system: coordinator-driven online precision allocation
+/// over the preset's ladder (2-rung presets behave exactly like the
+/// original binary hi/lo system).
 pub struct DynaExqBackend {
     pub coord: Coordinator,
     blocking: bool,
     resolves: u64,
-    hi_resolves: u64,
+    /// Resolutions served per rung, tier 0 first.
+    tier_resolves: Vec<u64>,
 }
 
 impl DynaExqBackend {
@@ -66,16 +82,15 @@ impl DynaExqBackend {
         cfg: &ServingConfig,
         dev: &DeviceConfig,
     ) -> Result<Self, String> {
-        Ok(Self {
-            coord: Coordinator::new(preset, cfg, dev)?,
-            blocking: cfg.blocking_transitions,
-            resolves: 0,
-            hi_resolves: 0,
-        })
+        Ok(Self::from_coordinator(
+            Coordinator::new(preset, cfg, dev)?,
+            cfg.blocking_transitions,
+        ))
     }
 
     pub fn from_coordinator(coord: Coordinator, blocking: bool) -> Self {
-        Self { coord, blocking, resolves: 0, hi_resolves: 0 }
+        let n_tiers = coord.preset.ladder.n_tiers();
+        Self { coord, blocking, resolves: 0, tier_resolves: vec![0; n_tiers] }
     }
 }
 
@@ -95,12 +110,10 @@ impl ResidencyBackend for DynaExqBackend {
         _now_s: f64,
     ) -> (Precision, f64) {
         // Stable-handle resolution: one atomic load, never a stall.
-        let p = self.coord.resolve(layer, expert);
+        let tier = self.coord.resolve_tier(layer, expert);
         self.resolves += 1;
-        if p == self.coord.preset.hi {
-            self.hi_resolves += 1;
-        }
-        (p, 0.0)
+        self.tier_resolves[tier] += 1;
+        (self.coord.preset.ladder.tier(tier), 0.0)
     }
 
     fn tick(&mut self, now_s: f64) -> f64 {
@@ -129,8 +142,22 @@ impl ResidencyBackend for DynaExqBackend {
         if self.resolves == 0 {
             0.0
         } else {
-            self.hi_resolves as f64 / self.resolves as f64
+            self.tier_resolves[0] as f64 / self.resolves as f64
         }
+    }
+
+    fn tier_fractions(&self) -> Vec<f64> {
+        if self.resolves == 0 {
+            return vec![0.0; self.tier_resolves.len()];
+        }
+        self.tier_resolves
+            .iter()
+            .map(|&n| n as f64 / self.resolves as f64)
+            .collect()
+    }
+
+    fn tier_residency(&self) -> Vec<usize> {
+        self.coord.handles.tier_counts()
     }
 
     fn quiesce(&mut self, now_s: f64) -> f64 {
@@ -165,10 +192,10 @@ impl StaticBackend {
         Self { precision }
     }
 
-    /// The paper's budget-driven choice: Int4 where it fits, Int2 for the
-    /// 80B model (§5.3).
+    /// The paper's budget-driven choice: the ladder's base rung (Int4
+    /// where it fits, Int2 for the 80B model, §5.3).
     pub fn for_preset(preset: &ModelPreset) -> Self {
-        Self::new(preset.lo)
+        Self::new(preset.lo())
     }
 }
 
@@ -304,5 +331,13 @@ mod tests {
         assert_eq!(stall, 0.0);
         assert!(b.hi_fraction() > 0.0);
         assert!(b.migrated_bytes() > 0);
+        // per-rung views agree with the scalar diagnostics
+        let fr = b.tier_fractions();
+        assert_eq!(fr.len(), 2);
+        assert!((fr[0] - b.hi_fraction()).abs() < 1e-12);
+        let res = b.tier_residency();
+        assert_eq!(res.len(), 2);
+        assert_eq!(res.iter().sum::<usize>(), 16 * preset.n_layers_logical());
+        assert!(res[0] >= 2, "experts 1 and 2 published hot: {res:?}");
     }
 }

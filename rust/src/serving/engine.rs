@@ -208,6 +208,70 @@ impl Engine {
         self.clock.advance_by(stall);
     }
 
+    /// The MoE block of one layer at one modeled iteration — the single
+    /// implementation shared by prefill and decode: sample top-k routing
+    /// for every `(request id, tokens)` pair, feed the router trace to the
+    /// backend, track activation ratios, resolve each touched expert's
+    /// precision, and account expert compute with transfer overlap.
+    ///
+    /// Expert fetches (offloading backends) overlap the layer's compute:
+    /// the GPU waits only for transfer time that extends past the end of
+    /// the layer's expert execution. Returns `(layer_compute_s,
+    /// added_stall_s)` for the caller's running compute/stall totals;
+    /// `shared_tokens` is the token count each pinned shared expert runs
+    /// (prompt length in prefill, batch size in decode).
+    fn moe_layer(
+        &mut self,
+        layer: usize,
+        routed_by: &[(u64, usize)],
+        shared_tokens: usize,
+        prefill: bool,
+        layer_start: f64,
+    ) -> (f64, f64) {
+        self.counts.fill(0);
+        self.touched.clear();
+        let total: usize = routed_by.iter().map(|&(_, n)| n).sum();
+        let mut routed: Vec<usize> =
+            Vec::with_capacity(total * self.preset.top_k);
+        for &(id, tokens) in routed_by {
+            for _ in 0..tokens {
+                for e in self.sampler.sample_topk(&mut self.rng, id, layer) {
+                    if self.counts[e] == 0 {
+                        self.touched.push(e);
+                    }
+                    self.counts[e] += 1;
+                    routed.push(e);
+                }
+            }
+        }
+        self.backend.record_routing(layer, &routed);
+        if self.cfg.track_activation {
+            let ratio =
+                self.touched.len() as f64 / self.preset.n_experts as f64;
+            if prefill {
+                self.activation.prefill.push(ratio);
+            } else {
+                self.activation.decode.push(ratio);
+            }
+        }
+        let mut layer_compute = 0.0;
+        let mut max_ready = layer_start;
+        for idx in 0..self.touched.len() {
+            let e = self.touched[idx];
+            let (prec, stall) = self.backend.resolve(layer, e, layer_start);
+            max_ready = max_ready.max(layer_start + stall);
+            layer_compute +=
+                self.cost.expert_time(self.counts[e] as usize, prec);
+        }
+        for _ in 0..self.preset.n_shared {
+            layer_compute +=
+                self.cost.expert_time(shared_tokens, self.preset.hi());
+        }
+        let added_stall =
+            (max_ready - (layer_start + layer_compute)).max(0.0);
+        (layer_compute, added_stall)
+    }
+
     /// Prefill one request; returns its completion (first-token) time.
     fn prefill(&mut self, req: &Request, start_s: f64) -> f64 {
         let t = req.prompt_len;
@@ -217,45 +281,11 @@ impl Engine {
             compute_s += self.cost.attn_prefill_time(t);
             compute_s += self.cost.router_time(t);
             // Sample routing for every prompt token.
-            self.counts.fill(0);
-            self.touched.clear();
-            let mut routed: Vec<usize> = Vec::with_capacity(t * self.preset.top_k);
-            for _ in 0..t {
-                for e in
-                    self.sampler.sample_topk(&mut self.rng, req.id, layer)
-                {
-                    if self.counts[e] == 0 {
-                        self.touched.push(e);
-                    }
-                    self.counts[e] += 1;
-                    routed.push(e);
-                }
-            }
-            self.backend.record_routing(layer, &routed);
-            if self.cfg.track_activation {
-                self.activation.prefill.push(
-                    self.touched.len() as f64 / self.preset.n_experts as f64,
-                );
-            }
-            // Expert fetches (offloading backends) overlap the layer's
-            // compute: the GPU waits only for transfer time that extends
-            // past the end of the layer's expert execution.
             let layer_start = self.clock.now() + compute_s + stall_s;
-            let mut layer_compute = 0.0;
-            let mut max_ready = layer_start;
-            for idx in 0..self.touched.len() {
-                let e = self.touched[idx];
-                let (prec, stall) =
-                    self.backend.resolve(layer, e, layer_start);
-                max_ready = max_ready.max(layer_start + stall);
-                layer_compute +=
-                    self.cost.expert_time(self.counts[e] as usize, prec);
-            }
-            for _ in 0..self.preset.n_shared {
-                layer_compute += self.cost.expert_time(t, self.preset.hi);
-            }
+            let (layer_compute, added_stall) =
+                self.moe_layer(layer, &[(req.id, t)], t, true, layer_start);
             compute_s += layer_compute;
-            stall_s += (max_ready - (layer_start + layer_compute)).max(0.0);
+            stall_s += added_stall;
         }
         compute_s += self.cost.lm_head_time(1);
         let end = self
@@ -272,49 +302,19 @@ impl Engine {
         let b = active.len();
         let mean_ctx =
             active.iter().map(|a| a.ctx).sum::<usize>() / b.max(1);
+        // One routed token per active request, in admission order.
+        let routed_by: Vec<(u64, usize)> =
+            active.iter().map(|a| (a.req.id, 1)).collect();
         let mut compute_s = self.cost.embed_time(b);
         let mut stall_s = 0.0;
         for layer in 0..self.n_layers {
             compute_s += self.cost.attn_decode_time(b, mean_ctx);
             compute_s += self.cost.router_time(b);
-            self.counts.fill(0);
-            self.touched.clear();
-            let mut routed: Vec<usize> =
-                Vec::with_capacity(b * self.preset.top_k);
-            for a in active.iter() {
-                for e in
-                    self.sampler.sample_topk(&mut self.rng, a.req.id, layer)
-                {
-                    if self.counts[e] == 0 {
-                        self.touched.push(e);
-                    }
-                    self.counts[e] += 1;
-                    routed.push(e);
-                }
-            }
-            self.backend.record_routing(layer, &routed);
-            if self.cfg.track_activation {
-                self.activation.decode.push(
-                    self.touched.len() as f64 / self.preset.n_experts as f64,
-                );
-            }
-            // Same overlap model as prefill (see above).
             let layer_start = self.clock.now() + compute_s + stall_s;
-            let mut layer_compute = 0.0;
-            let mut max_ready = layer_start;
-            for idx in 0..self.touched.len() {
-                let e = self.touched[idx];
-                let (prec, stall) =
-                    self.backend.resolve(layer, e, layer_start);
-                max_ready = max_ready.max(layer_start + stall);
-                layer_compute +=
-                    self.cost.expert_time(self.counts[e] as usize, prec);
-            }
-            for _ in 0..self.preset.n_shared {
-                layer_compute += self.cost.expert_time(b, self.preset.hi);
-            }
+            let (layer_compute, added_stall) =
+                self.moe_layer(layer, &routed_by, b, false, layer_start);
             compute_s += layer_compute;
-            stall_s += (max_ready - (layer_start + layer_compute)).max(0.0);
+            stall_s += added_stall;
         }
         compute_s += self.cost.lm_head_time(b);
         let start = self.clock.now() + stall_s;

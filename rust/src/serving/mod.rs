@@ -26,6 +26,7 @@
 pub mod backend;
 pub mod engine;
 pub mod kv_cache;
+#[cfg(feature = "numeric")]
 pub mod numeric;
 pub mod registry;
 pub mod scheduler;
@@ -33,6 +34,7 @@ pub mod session;
 
 pub use backend::ResidencyBackend;
 pub use engine::{ActiveRequest, Engine, EngineConfig};
+#[cfg(feature = "numeric")]
 pub use numeric::NumericEngine;
 pub use registry::{BackendCtx, BackendRegistry};
 pub use scheduler::{ClosedBatch, ContinuousBatch, Scheduler};

@@ -313,9 +313,9 @@ impl NumericEngine {
             }
         }
 
-        // Shared experts: every token, pinned hi tier.
+        // Shared experts: every token, pinned at the ladder's top rung.
         for s in 0..self.preset.n_shared {
-            self.clock_s += self.cost.expert_time(t, self.preset.hi);
+            self.clock_s += self.cost.expert_time(t, self.preset.hi());
             let y = self.run_expert_rows(
                 layer,
                 ExpertRef::Shared(s),

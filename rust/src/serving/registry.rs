@@ -11,23 +11,24 @@
 //!
 //! Registered built-ins:
 //!
-//! | name         | behaviour                                              |
-//! |--------------|--------------------------------------------------------|
-//! | `dynaexq`    | coordinator-driven online precision allocation (§3)    |
-//! | `static`     | uniform low-tier PTQ (paper's fastest baseline)        |
-//! | `static-hi`  | uniform high-tier PTQ (quality reference tier)         |
-//! | `fp16`       | uniform FP16 (quality reference, Table 4)              |
-//! | `static-map` | offline-calibrated per-expert map (MxMoE/MoPEQ class)  |
-//! | `expertflow` | offloading/prefetching comparator (paper §5.3)         |
-//! | `hobbit`     | reactive mixed-precision offloading (HOBBIT class)     |
-//! | `counting`   | fixed precision + routing-count recording (calibration)|
+//! | name            | behaviour                                              |
+//! |-----------------|--------------------------------------------------------|
+//! | `dynaexq`       | coordinator-driven online precision allocation (§3)    |
+//! | `dynaexq-3tier` | same coordinator over the full Fp16/Int4/Int2 ladder   |
+//! | `static`        | uniform base-rung PTQ (paper's fastest baseline)       |
+//! | `static-hi`     | uniform top-rung PTQ (quality reference tier)          |
+//! | `fp16`          | uniform FP16 (quality reference, Table 4)              |
+//! | `static-map`    | offline-calibrated per-expert map (MxMoE/MoPEQ class)  |
+//! | `expertflow`    | offloading/prefetching comparator (paper §5.3)         |
+//! | `hobbit`        | reactive mixed-precision offloading (HOBBIT class)     |
+//! | `counting`      | fixed precision + routing-count recording (calibration)|
 
 use std::collections::BTreeMap;
 
 use crate::baselines::{ExpertFlowBackend, HobbitBackend, StaticMapBackend};
 use crate::config::{DeviceConfig, ModelPreset, ServingConfig};
 use crate::coordinator::Coordinator;
-use crate::model::Precision;
+use crate::model::{Precision, PrecisionLadder};
 use crate::util::XorShiftRng;
 use crate::workload::{RoutingSampler, WorkloadProfile};
 
@@ -101,16 +102,25 @@ impl BackendRegistry {
     pub fn with_builtins() -> Self {
         let mut r = Self::empty();
         r.register("static", |ctx| {
-            Ok(Box::new(StaticBackend::new(ctx.preset.lo)))
+            Ok(Box::new(StaticBackend::new(ctx.preset.lo())))
         });
         r.register("static-hi", |ctx| {
-            Ok(Box::new(StaticBackend::new(ctx.preset.hi)))
+            Ok(Box::new(StaticBackend::new(ctx.preset.hi())))
         });
         r.register("fp16", |_ctx| {
             Ok(Box::new(StaticBackend::new(Precision::Fp16)))
         });
         r.register("dynaexq", |ctx| {
             Ok(Box::new(DynaExqBackend::new(ctx.preset, ctx.cfg, ctx.dev)?))
+        });
+        r.register("dynaexq-3tier", |ctx| {
+            // The same coordinator over the full three-rung ladder: warm
+            // experts get a middle rung before falling to the coldest one,
+            // under the preset's unchanged HBM envelope (the tier-count
+            // ablation compares this against the 2-rung `dynaexq`).
+            let mut preset = ctx.preset.clone();
+            preset.ladder = PrecisionLadder::full();
+            Ok(Box::new(DynaExqBackend::new(&preset, ctx.cfg, ctx.dev)?))
         });
         r.register("expertflow", |ctx| {
             Ok(Box::new(ExpertFlowBackend::new(ctx.preset, ctx.cfg, ctx.dev)))
@@ -139,13 +149,15 @@ impl BackendRegistry {
                     synthesize_counts(profile, layers, preset)
                 }
             };
+            // Static maps are inherently two-tier: they consume the
+            // ladder's top and bottom rungs.
             Ok(Box::new(StaticMapBackend::calibrated(
                 layers,
                 preset.n_experts,
-                preset.hi,
-                preset.lo,
+                preset.hi(),
+                preset.lo(),
                 &counts,
-                plan.n_hi_per_layer,
+                plan.n_hi_per_layer(),
             )))
         });
         r.register("counting", |ctx| {
@@ -235,11 +247,25 @@ mod tests {
     fn builds_every_builtin() {
         let (p, cfg, dev) = ctx_parts();
         let r = BackendRegistry::with_builtins();
-        assert_eq!(r.methods().len(), 8);
+        assert_eq!(r.methods().len(), 9);
         for m in r.methods() {
             let b = r.build(m, &BackendCtx::new(&p, &cfg, &dev)).unwrap();
             assert!(!b.name().is_empty(), "{m}");
         }
+    }
+
+    #[test]
+    fn three_tier_method_serves_full_ladder() {
+        let (p, cfg, dev) = ctx_parts();
+        let r = BackendRegistry::with_builtins();
+        let mut b = r
+            .build("dynaexq-3tier", &BackendCtx::new(&p, &cfg, &dev))
+            .unwrap();
+        // cold boot at the full ladder's base rung (Int2), even though the
+        // phi preset's native pair bottoms out at Int4
+        assert_eq!(b.resolve(0, 0, 0.0).0, Precision::Int2);
+        assert_eq!(b.tier_residency().len(), 3);
+        assert_eq!(b.tier_fractions().len(), 3);
     }
 
     #[test]
@@ -271,7 +297,7 @@ mod tests {
         let sampler =
             RoutingSampler::new(&w, p.n_layers_logical(), p.n_experts, p.top_k);
         let hot = sampler.global_top(0, 1)[0];
-        assert_eq!(b.resolve(0, hot, 0.0).0, p.hi);
+        assert_eq!(b.resolve(0, hot, 0.0).0, p.hi());
     }
 
     #[test]
@@ -291,8 +317,8 @@ mod tests {
                 &BackendCtx::new(&p, &cfg, &dev).with_counts(&counts),
             )
             .unwrap();
-        assert_eq!(b.resolve(0, 5, 0.0).0, p.hi);
-        assert_eq!(b.resolve(0, 0, 0.0).0, p.lo);
+        assert_eq!(b.resolve(0, 5, 0.0).0, p.hi());
+        assert_eq!(b.resolve(0, 0, 0.0).0, p.lo());
     }
 
     #[test]
@@ -314,10 +340,10 @@ mod tests {
         let mut r = BackendRegistry::empty();
         assert!(r.build("static", &BackendCtx::new(&p, &cfg, &dev)).is_err());
         r.register("static", |ctx| {
-            Ok(Box::new(StaticBackend::new(ctx.preset.hi)))
+            Ok(Box::new(StaticBackend::new(ctx.preset.hi())))
         });
         let mut b =
             r.build("static", &BackendCtx::new(&p, &cfg, &dev)).unwrap();
-        assert_eq!(b.resolve(0, 0, 0.0).0, p.hi);
+        assert_eq!(b.resolve(0, 0, 0.0).0, p.hi());
     }
 }

@@ -18,28 +18,36 @@
 //! Results export as a [`MetricsSnapshot`] — a flat, `key=value`-encoded
 //! record (the repo's serde-free serialization, [`crate::config::kv`]).
 
-use std::sync::Arc;
-
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::config::{kv, DeviceConfig, ModelPreset, ServingConfig};
 use crate::metrics::ServingMetrics;
-use crate::model::ModelWeights;
-use crate::runtime::Runtime;
-use crate::util::XorShiftRng;
 use crate::workload::{Request, WorkloadProfile};
 
 use super::backend::ResidencyBackend;
 use super::engine::{ActivationStats, Engine, EngineConfig};
-use super::numeric::{NumericEngine, SeqState};
 use super::registry::{BackendCtx, BackendRegistry};
+
+#[cfg(feature = "numeric")]
+use super::numeric::{NumericEngine, SeqState};
+#[cfg(feature = "numeric")]
+use crate::model::ModelWeights;
+#[cfg(feature = "numeric")]
+use crate::runtime::Runtime;
+#[cfg(feature = "numeric")]
+use crate::util::XorShiftRng;
+#[cfg(feature = "numeric")]
+use anyhow::Context;
+#[cfg(feature = "numeric")]
+use std::sync::Arc;
 
 /// Which engine a session runs on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
     /// Cost-model engine at paper-scale dims (performance experiments).
     Modeled,
-    /// Real PJRT execution of the small model (quality experiments).
+    /// Real PJRT execution of the small model (quality experiments;
+    /// requires the `numeric` build feature).
     Numeric,
 }
 
@@ -132,6 +140,7 @@ impl SessionEngine for ModeledSession {
 // Numeric engine adapter
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "numeric")]
 struct NumericSession {
     engine: NumericEngine,
     profile: WorkloadProfile,
@@ -140,6 +149,7 @@ struct NumericSession {
     next_tag: u64,
 }
 
+#[cfg(feature = "numeric")]
 impl SessionEngine for NumericSession {
     fn kind(&self) -> EngineKind {
         EngineKind::Numeric
@@ -250,12 +260,15 @@ pub struct MetricsSnapshot {
     pub decode_tokens: u64,
     pub prefill_tokens: u64,
     pub duration_s: f64,
-    /// Fraction of expert resolutions served at the high tier.
+    /// Fraction of expert resolutions served at the ladder's top rung.
     pub hi_fraction: f64,
     pub migrated_bytes: u64,
     /// Mean per-layer activation ratios (0 when untracked).
     pub act_prefill: f64,
     pub act_decode: f64,
+    /// Published residency counts per ladder rung, tier 0 first (empty
+    /// for backends without a residency table). Encoded `a|b|c`.
+    pub tier_resident: Vec<usize>,
 }
 
 impl MetricsSnapshot {
@@ -266,7 +279,8 @@ impl MetricsSnapshot {
              tpop_avg_s={};tpop_p99_s={};e2e_avg_s={};e2e_p99_s={};\
              wait_p99_s={};throughput_tok_s={};decode_tokens={};\
              prefill_tokens={};duration_s={};hi_fraction={};\
-             migrated_bytes={};act_prefill={};act_decode={}",
+             migrated_bytes={};act_prefill={};act_decode={};\
+             tier_resident={}",
             self.model,
             self.method,
             self.workload,
@@ -285,6 +299,11 @@ impl MetricsSnapshot {
             self.migrated_bytes,
             self.act_prefill,
             self.act_decode,
+            self.tier_resident
+                .iter()
+                .map(|n| n.to_string())
+                .collect::<Vec<_>>()
+                .join("|"),
         )
     }
 
@@ -320,6 +339,17 @@ impl MetricsSnapshot {
             migrated_bytes: num(&m, "migrated_bytes")?,
             act_prefill: num(&m, "act_prefill")?,
             act_decode: num(&m, "act_decode")?,
+            tier_resident: {
+                let raw = text("tier_resident")?;
+                raw.split('|')
+                    .filter(|s| !s.is_empty())
+                    .map(|s| {
+                        s.parse().map_err(|_| {
+                            anyhow!("invalid tier_resident entry {s:?}")
+                        })
+                    })
+                    .collect::<Result<Vec<usize>>>()?
+            },
         })
     }
 }
@@ -437,15 +467,28 @@ impl ServeSession {
             migrated_bytes: b.migrated_bytes(),
             act_prefill,
             act_decode,
+            tier_resident: b.tier_residency(),
         }
     }
 
     /// Human-readable session report.
     pub fn report(&self) -> String {
         let s = self.snapshot();
+        let tiers = if s.tier_resident.is_empty() {
+            String::new()
+        } else {
+            format!(
+                " | resident/rung {}",
+                s.tier_resident
+                    .iter()
+                    .map(|n| n.to_string())
+                    .collect::<Vec<_>>()
+                    .join("/")
+            )
+        };
         format!(
             "{}\nactivation: prefill {:.1}% decode {:.1}% | hi-tier {:.1}% \
-             | migrated {:.2} GB | wait p99 {:.4}s",
+             | migrated {:.2} GB | wait p99 {:.4}s{tiers}",
             self.inner.metrics().summary(),
             s.act_prefill * 100.0,
             s.act_decode * 100.0,
@@ -616,6 +659,14 @@ impl SessionBuilder {
                 engine.warm(&profile, self.warmup);
                 Box::new(ModeledSession { engine, profile: profile.clone() })
             }
+            #[cfg(not(feature = "numeric"))]
+            EngineKind::Numeric => {
+                bail!(
+                    "this build has no PJRT runtime: rebuild with \
+                     `--features numeric` for EngineKind::Numeric sessions"
+                )
+            }
+            #[cfg(feature = "numeric")]
             EngineKind::Numeric => {
                 // The backend manages the *executed* layer count; budget
                 // plans stay at paper scale via cfg.n_hi_override when the
@@ -692,9 +743,14 @@ mod tests {
             migrated_bytes: 9_437_184,
             act_prefill: 0.61,
             act_decode: 0.07,
+            tier_resident: vec![12, 34, 466],
         };
         let decoded = MetricsSnapshot::decode(&s.encode()).unwrap();
         assert_eq!(decoded, s);
+        // backends without a residency table encode an empty list
+        let mut none = s.clone();
+        none.tier_resident = Vec::new();
+        assert_eq!(MetricsSnapshot::decode(&none.encode()).unwrap(), none);
     }
 
     #[test]
@@ -765,6 +821,41 @@ mod tests {
         assert!(snap.throughput_tok_s > 0.0);
         assert_eq!(MetricsSnapshot::decode(&snap.encode()).unwrap(), snap);
         assert!(s.report().contains("tok/s"));
+    }
+
+    #[test]
+    fn three_tier_session_reports_per_rung_residency() {
+        // The 3-tier scenario end to end: builder → registry method →
+        // coordinator ladder → per-rung snapshot counts.
+        let mut s = ServeSession::builder()
+            .model("qwen30b-sim")
+            .method("dynaexq-3tier")
+            .workload("text")
+            .seed(5)
+            .warmup(1)
+            .build()
+            .unwrap();
+        s.serve_closed(4, 32, 4).unwrap();
+        let snap = s.snapshot();
+        assert_eq!(snap.tier_resident.len(), 3, "{snap:?}");
+        let layers = ModelPreset::qwen30b_sim().n_layers_logical();
+        assert_eq!(
+            snap.tier_resident.iter().sum::<usize>(),
+            layers * 128,
+            "every expert accounted at exactly one rung"
+        );
+        assert!(
+            snap.tier_resident[0] > 0 || snap.tier_resident[1] > 0,
+            "warm traffic lifts experts off the base rung: {snap:?}"
+        );
+        assert_eq!(MetricsSnapshot::decode(&snap.encode()).unwrap(), snap);
+        // the native 3-rung preset is also reachable by name
+        let s3 = ServeSession::builder()
+            .model("qwen30b-3tier")
+            .method("dynaexq")
+            .build()
+            .unwrap();
+        assert_eq!(s3.snapshot().tier_resident.len(), 3);
     }
 
     #[test]

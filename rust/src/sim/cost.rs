@@ -31,7 +31,9 @@ impl LogicalDims {
     pub fn for_preset(preset: &ModelPreset) -> Self {
         match preset.name {
             // 54 GB expert weights = 48L × 128E × 3·2048·768 × 2B ≈ 55 GB
-            "qwen30b-sim" => Self {
+            // (the 3-tier scenario serves the same model through a deeper
+            // ladder — identical tensor geometry)
+            "qwen30b-sim" | "qwen30b-3tier" => Self {
                 d: 2048,
                 ff: 768,
                 layers: 48,

@@ -48,8 +48,9 @@ fn prop_budget_envelope_never_violated_under_chaotic_traffic() {
             c.tick(now);
             // invariants, every step
             assert!(c.budget.within_envelope(), "C1 violated");
-            assert!(c.pool_hi.consistent(), "hi pool leaked");
-            assert!(c.pool_lo.consistent(), "lo pool leaked");
+            for (t, pool) in c.pools.iter().enumerate() {
+                assert!(pool.consistent(), "rung-{t} pool leaked");
+            }
         }
         // liveness: with traffic stopped, scores decay, the policy stops
         // submitting, and every in-flight transition publishes.
@@ -87,8 +88,8 @@ fn prop_resolution_always_valid_during_transitions() {
             for e in 0..preset.n_experts.min(8) {
                 let p = c.resolve(0, e);
                 assert!(
-                    p == preset.hi || p == preset.lo,
-                    "resolved invalid tier {p:?}"
+                    preset.ladder.tier_of(p).is_some(),
+                    "resolved precision {p:?} off the ladder"
                 );
             }
         }
@@ -155,7 +156,8 @@ fn demoted_expert_storage_is_reclaimed() {
     c.pipeline.wait_staged();
     c.tick(now + 2e3);
     // hi usage must be bounded by capacity × layers regardless of churn
-    let cap_bytes = 2 * c.plan.hi_expert_bytes * preset.n_layers + boot_hi_used;
+    let cap_bytes =
+        2 * c.plan.hi_expert_bytes() * preset.n_layers + boot_hi_used;
     assert!(
         c.budget.hi_used() <= cap_bytes,
         "hi usage {} exceeds churn-independent cap {}",

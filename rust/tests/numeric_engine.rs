@@ -1,5 +1,8 @@
 //! Integration: the numeric engine — full MoE forward through real PJRT
 //! execution, across precision tiers, with KV-cache-consistent decode.
+//!
+//! Requires the `numeric` build feature (PJRT runtime).
+#![cfg(feature = "numeric")]
 
 use std::sync::Arc;
 

@@ -1,0 +1,139 @@
+//! Integration: the N-rung precision ladder — degenerate 2-rung
+//! equivalence at the coordinator level, and per-rung byte accounting
+//! staying inside the envelope across randomized workload-shift sequences
+//! (the generalized C1 of DESIGN.md §8).
+
+use dynaexq::config::{DeviceConfig, ModelPreset, ServingConfig};
+use dynaexq::coordinator::Coordinator;
+use dynaexq::model::Precision;
+use dynaexq::testutil::prop::Prop;
+use dynaexq::util::XorShiftRng;
+
+fn three_tier_preset(rng: &mut XorShiftRng) -> ModelPreset {
+    let mut p = ModelPreset::qwen30b_3tier();
+    // shrink the logical layer count to keep the property loop fast
+    p.paper_layers = 2 + rng.below(3);
+    p.n_layers = p.paper_layers;
+    p
+}
+
+#[test]
+fn prop_per_rung_accounting_stays_within_envelope_across_shifts() {
+    // Satellite (c): random workload-shift sequences over a 3-rung ladder
+    // must never push any rung past its byte cap, leak pool blocks, or
+    // publish a precision off the ladder.
+    let mut prop = Prop::new("ladder_envelope_shifts");
+    prop.run(6, |rng| {
+        let preset = three_tier_preset(rng);
+        let mut cfg = ServingConfig::default();
+        cfg.update_interval_ms = 1.0;
+        cfg.hysteresis_margin = rng.range_f64(0.0, 0.3);
+        cfg.ema_alpha = rng.range_f64(0.0, 0.9);
+        cfg.n_hi_override = Some(1 + rng.below(8));
+        let c = Coordinator::new(&preset, &cfg, &DeviceConfig::default())
+            .unwrap();
+        assert_eq!(c.plan.n_tiers(), 3);
+        let mut now = 0.0;
+        // a sequence of workload phases, each with its own hot set
+        for phase in 0..6 {
+            let hot_base = (phase * 17) % preset.n_experts;
+            let hot_width = 4 + rng.below(12);
+            for _ in 0..40 {
+                let layer = rng.below(preset.n_layers);
+                let burst: Vec<usize> = (0..1 + rng.below(16))
+                    .map(|_| {
+                        if rng.below(4) == 0 {
+                            rng.below(preset.n_experts) // background noise
+                        } else {
+                            (hot_base + rng.below(hot_width))
+                                % preset.n_experts
+                        }
+                    })
+                    .collect();
+                c.record_routing(layer, &burst);
+                now += rng.range_f64(0.0, 0.01);
+                c.tick(now);
+                // generalized C1: every rung inside its cap, every step
+                assert!(c.budget.within_envelope(), "C1 violated");
+                for (t, pool) in c.pools.iter().enumerate() {
+                    assert!(pool.consistent(), "rung-{t} pool leaked");
+                }
+            }
+            // let the phase's migrations land before the next shift
+            now += 1.0;
+            c.tick(now);
+            c.pipeline.wait_staged();
+        }
+        // liveness + final accounting: all transitions publish, residency
+        // counts cover every expert exactly once, caps still hold
+        for i in 0..12 {
+            now += 1e3 * (i + 1) as f64;
+            c.tick(now);
+            c.pipeline.wait_staged();
+        }
+        c.tick(now + 1e6);
+        assert_eq!(c.pipeline.inflight_count(), 0, "pipeline stuck");
+        assert!(c.budget.within_envelope());
+        let counts = c.handles.tier_counts();
+        assert_eq!(counts.len(), 3);
+        assert_eq!(
+            counts.iter().sum::<usize>(),
+            preset.n_layers_logical() * preset.n_experts,
+        );
+        // per-layer occupancy above each boundary respects the cumulative
+        // capacity the plan derived
+        let cum = c.plan.cumulative_capacity();
+        for l in 0..preset.n_layers_logical() {
+            let snap = c.handles.tier_snapshot(l);
+            for (t, &cap) in cum.iter().enumerate() {
+                let occ = snap.iter().filter(|&&x| x <= t).count();
+                assert!(
+                    occ <= cap,
+                    "layer {l} boundary {t}: {occ} experts above it, cap {cap}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn two_rung_ladder_is_behavior_identical_to_binary_coordinator() {
+    // The degenerate case: drive the same deterministic trace through a
+    // 2-rung coordinator and assert the exact residency the original
+    // binary hi/lo implementation converged to (mirrors
+    // coordinator::tests::workload_shift_swaps_hot_set).
+    let mut cfg = ServingConfig::default();
+    cfg.hysteresis_margin = 0.0;
+    cfg.ema_alpha = 0.0;
+    cfg.max_inflight_promotions = 1024;
+    cfg.n_hi_override = Some(2);
+    let preset = ModelPreset::phi_sim();
+    let c =
+        Coordinator::new(&preset, &cfg, &DeviceConfig::default()).unwrap();
+
+    for _ in 0..50 {
+        c.record_routing(0, &[0, 1]);
+    }
+    c.tick(0.1);
+    c.pipeline.wait_staged();
+    c.tick(10.0);
+    assert_eq!(c.resolve(0, 0), Precision::Fp16);
+    assert_eq!(c.resolve(0, 1), Precision::Fp16);
+    assert_eq!(c.resolve_tier(0, 0), 0);
+
+    for step in 0..20 {
+        for _ in 0..50 {
+            c.record_routing(0, &[8, 9]);
+        }
+        c.tick(10.0 + step as f64);
+        c.pipeline.wait_staged();
+    }
+    c.tick(1e4);
+    assert_eq!(c.resolve(0, 8), Precision::Fp16);
+    assert_eq!(c.resolve(0, 9), Precision::Fp16);
+    assert_eq!(c.resolve(0, 0), Precision::Int4);
+    assert_eq!(c.resolve(0, 1), Precision::Int4);
+    // the 2-rung residency table knows exactly two rungs
+    assert_eq!(c.handles.tier_counts().len(), 2);
+    assert!(c.budget.within_envelope());
+}

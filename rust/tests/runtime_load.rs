@@ -2,6 +2,9 @@
 //! PJRT CPU client, execute, and check numerics against hand-computed
 //! expectations. This is the riskiest seam in the stack, so it gets its own
 //! test file that runs against the real `artifacts/` directory.
+//!
+//! Requires the `numeric` build feature (PJRT runtime).
+#![cfg(feature = "numeric")]
 
 use std::path::Path;
 

@@ -9,7 +9,7 @@ use dynaexq::workload::{RequestGenerator, WorkloadProfile};
 use dynaexq::ServeSession;
 
 #[test]
-fn registry_lists_all_seven_methods_plus_counting() {
+fn registry_lists_all_eight_methods_plus_counting() {
     let r = BackendRegistry::with_builtins();
     let methods = r.methods();
     for m in [
@@ -18,13 +18,14 @@ fn registry_lists_all_seven_methods_plus_counting() {
         "fp16",
         "static-map",
         "dynaexq",
+        "dynaexq-3tier",
         "expertflow",
         "hobbit",
         "counting",
     ] {
         assert!(methods.contains(&m), "registry missing {m}");
     }
-    assert_eq!(methods.len(), 8);
+    assert_eq!(methods.len(), 9);
 }
 
 #[test]

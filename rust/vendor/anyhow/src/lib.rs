@@ -1,0 +1,179 @@
+//! A minimal, dependency-free stand-in for the [`anyhow`] crate, vendored
+//! so the workspace builds with **zero network access** (the repo's
+//! offline crate set — the same reason `config::kv` replaces serde).
+//!
+//! It implements exactly the surface this codebase uses — `Error`,
+//! `Result`, `anyhow!`, `bail!`, and the `Context` extension trait — with
+//! the same call-site semantics, so swapping in the real crate is a
+//! one-line change in `rust/Cargo.toml`. Differences from the real thing:
+//! no backtraces, no downcasting, and `Display` always prints the full
+//! context chain (real `anyhow` reserves that for `{:#}`).
+//!
+//! [`anyhow`]: https://docs.rs/anyhow
+
+use std::fmt;
+
+/// A string-chained error: the outermost context first, root cause last.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message (the `anyhow!` /
+    /// `Error::msg` entry point).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context layer.
+    pub fn wrap<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")
+    }
+}
+
+// `?` conversion from any std error (mirrors real anyhow's blanket impl;
+// no overlap with the reflexive `From<Error>` because `Error` itself does
+// not implement `std::error::Error`, exactly like the real crate).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Preserve the source chain as context layers.
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// `anyhow::Result<T>`, defaulting the error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod private {
+    /// Errors that can become [`crate::Error`] when context is attached:
+    /// `crate::Error` itself plus every std error.
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> crate::Error {
+            crate::Error::from(self)
+        }
+    }
+}
+
+/// Context-attachment extension for `Result` and `Option` (the subset of
+/// real anyhow's `Context` this workspace uses).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T>;
+}
+
+impl<T, E: private::IntoError> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_error().wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.map_err(|e| e.into_error().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $($arg:tt)*)?) => {
+        $crate::Error::msg(format!($fmt $(, $($arg)*)?))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("root cause {}", 42)
+    }
+
+    #[test]
+    fn macros_and_context_chain() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: root cause 42");
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e:?}"), "plain");
+        let owned: Error = anyhow!(String::from("from-string"));
+        assert_eq!(owned.to_string(), "from-string");
+    }
+
+    #[test]
+    fn io_errors_convert_and_wrap() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here")
+                .with_context(|| format!("reading {}", "/definitely"))?;
+            Ok(s)
+        }
+        let e = read().unwrap_err().to_string();
+        assert!(e.starts_with("reading /definitely: "), "{e}");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u8> = None;
+        assert_eq!(
+            none.context("empty prompt").unwrap_err().to_string(),
+            "empty prompt"
+        );
+        assert_eq!(Some(3u8).context("unused").unwrap(), 3);
+    }
+}

@@ -1,0 +1,156 @@
+//! Stub of the XLA/PJRT binding surface used by `dynaexq::runtime` — see
+//! README.md. Compiles the numeric stack offline; every device entry
+//! point errors at run time ([`PjRtClient::cpu`] fails first, so nothing
+//! downstream executes against the stub).
+
+/// The error type the bindings surface (`{e:?}`-formatted by callers).
+pub struct Error(&'static str);
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const STUB: &str = "xla stub: built without the real XLA/PJRT bindings — \
+                    see rust/vendor/xla/README.md to wire them in";
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(STUB))
+}
+
+/// Element types of untyped literal constructors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    U8,
+    S32,
+    F32,
+}
+
+/// A host-side literal (opaque in the stub).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+}
+
+/// A parsed HLO module.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        unavailable()
+    }
+}
+
+/// A computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _private: () }
+    }
+}
+
+/// A device-resident buffer.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+
+    pub fn execute_b<B>(&self, _args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// The PJRT client. `cpu()` always errors in the stub, which is the single
+/// gate keeping the rest of this API unreachable at run time.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable()
+    }
+
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable()
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_is_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must refuse");
+        assert!(format!("{err:?}").contains("xla stub"));
+    }
+}
