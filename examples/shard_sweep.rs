@@ -1,0 +1,66 @@
+//! Shard sweep: the same model and group-wide HBM envelope served by
+//! 1-, 2-, and 4-device expert-sharded groups (modeled engine,
+//! qwen30b-sim at paper scale — DESIGN.md §9).
+//!
+//! Sharding splits each layer's expert compute across per-device lanes
+//! (throughput rises) while also splitting the envelope: every device
+//! waterfills its own slack over its own expert shard, and promotions ride
+//! per-device migration streams that contend on the host aggregate past
+//! two devices. The 1-device row is the exact single-GPU system.
+//!
+//! ```bash
+//! cargo run --release --example shard_sweep
+//! ```
+
+use dynaexq::bench::Table;
+use dynaexq::{MetricsSnapshot, ServeSession};
+
+fn main() -> anyhow::Result<()> {
+    let mut table = Table::new(&[
+        "devices",
+        "resident/rung/device",
+        "promo-queue",
+        "hi-tier traffic %",
+        "tok/s (modeled)",
+        "migrated GB",
+    ]);
+    for devices in [1usize, 2, 4] {
+        let mut s = ServeSession::builder()
+            .model("qwen30b-sim")
+            .method("dynaexq-sharded")
+            .workload("text")
+            .devices(devices)
+            .seed(11)
+            .warmup(1)
+            .build()?;
+        for _ in 0..4 {
+            s.serve_closed(8, 128, 16)?;
+        }
+        let snap = s.snapshot();
+        table.row(&[
+            format!("{devices}"),
+            MetricsSnapshot::encode_per_device(&snap.device_resident),
+            snap.promo_queue_depth
+                .iter()
+                .map(|n| n.to_string())
+                .collect::<Vec<_>>()
+                .join("/"),
+            format!("{:.1}", snap.hi_fraction * 100.0),
+            format!("{:.0}", snap.throughput_tok_s),
+            format!("{:.2}", snap.migrated_bytes as f64 / 1e9),
+        ]);
+    }
+    println!(
+        "== shard sweep: qwen30b-sim across 1/2/4-device expert-sharded \
+         groups ==\n{}",
+        table.render()
+    );
+    println!(
+        "(per-device lanes shorten each layer's expert compute, so modeled \
+         throughput rises with the group — while the per-device envelopes \
+         shrink, so each shard's waterfill funds fewer hot slots and the \
+         promotion queues stay per-device. A 1-device group is \
+         byte-identical to `--method dynaexq`.)"
+    );
+    Ok(())
+}

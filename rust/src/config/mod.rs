@@ -5,6 +5,9 @@
 //! the offline crate set); presets cover the paper's three evaluation models.
 
 pub mod kv;
+pub mod shard;
+
+pub use shard::ShardPlan;
 
 use crate::model::{Precision, PrecisionLadder};
 
@@ -213,6 +216,11 @@ pub struct DeviceConfig {
     pub flops_per_s: f64,
     /// Fixed per-kernel launch overhead in seconds (eager-mode dispatch).
     pub launch_overhead_s: f64,
+    /// Aggregate host-interconnect bandwidth shared by every device of a
+    /// group (root-complex / host-memory ceiling). A device's migration
+    /// stream gets `min(pcie_bytes_per_s, host_agg_bytes_per_s / n)` in an
+    /// n-device group — see [`crate::sim::cost::migration_link_bytes_per_s`].
+    pub host_agg_bytes_per_s: f64,
 }
 
 impl Default for DeviceConfig {
@@ -222,6 +230,9 @@ impl Default for DeviceConfig {
             hbm_bytes_per_s: 768e9,
             flops_per_s: 15e12,
             launch_overhead_s: 30e-6,
+            // two full PCIe 4.0 x16 links' worth of host bandwidth: 2-way
+            // groups keep full per-link speed, wider groups contend
+            host_agg_bytes_per_s: 50e9,
         }
     }
 }

@@ -1,0 +1,133 @@
+//! Expert sharding across a device group (DESIGN.md §9).
+//!
+//! A [`ShardPlan`] is the static placement map of a multi-device serving
+//! group: it assigns every `(layer, expert)` of a model to exactly one
+//! device. The built-in policy is *striped* placement (`expert mod
+//! n_devices`), which balances shard sizes to within one expert and keeps
+//! the map O(1) in both directions. Invariants (property-tested):
+//!
+//! * **partition** — every expert maps to exactly one device, and the
+//!   per-device shard sizes sum to `n_experts`;
+//! * **round-trip** — `global_of(device_of(e), local_of(e)) == e`, and
+//!   local ids are dense in `0..shard_size(device)`;
+//! * **layer-uniform** — placement depends only on the expert id, so every
+//!   layer shards identically and per-device coordinators manage dense
+//!   local id ranges without per-layer tables.
+
+/// Static `(layer, expert) → device` placement for a serving group.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    n_devices: usize,
+    n_experts: usize,
+}
+
+impl ShardPlan {
+    /// Striped placement of `n_experts` across `n_devices`.
+    pub fn striped(n_experts: usize, n_devices: usize) -> Result<Self, String> {
+        if n_devices == 0 {
+            return Err("a device group needs at least one device".into());
+        }
+        if n_devices > n_experts {
+            return Err(format!(
+                "cannot shard {n_experts} experts across {n_devices} \
+                 devices: every device must own at least one expert"
+            ));
+        }
+        Ok(Self { n_devices, n_experts })
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.n_devices
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+
+    /// Device owning `(layer, expert)`. Placement is layer-uniform: the
+    /// layer participates in the signature (future plans may stripe per
+    /// layer) but not in the built-in policy.
+    #[inline]
+    pub fn device_of(&self, _layer: usize, expert: usize) -> usize {
+        debug_assert!(expert < self.n_experts);
+        expert % self.n_devices
+    }
+
+    /// The expert's dense id within its owning device's shard.
+    #[inline]
+    pub fn local_of(&self, expert: usize) -> usize {
+        expert / self.n_devices
+    }
+
+    /// Inverse of ([`ShardPlan::device_of`], [`ShardPlan::local_of`]).
+    #[inline]
+    pub fn global_of(&self, device: usize, local: usize) -> usize {
+        local * self.n_devices + device
+    }
+
+    /// Number of experts resident on `device`.
+    pub fn shard_size(&self, device: usize) -> usize {
+        debug_assert!(device < self.n_devices);
+        self.n_experts / self.n_devices
+            + usize::from(device < self.n_experts % self.n_devices)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::Prop;
+
+    #[test]
+    fn one_device_is_identity() {
+        let s = ShardPlan::striped(128, 1).unwrap();
+        for e in [0usize, 1, 63, 127] {
+            assert_eq!(s.device_of(0, e), 0);
+            assert_eq!(s.local_of(e), e);
+            assert_eq!(s.global_of(0, e), e);
+        }
+        assert_eq!(s.shard_size(0), 128);
+    }
+
+    #[test]
+    fn rejects_degenerate_groups() {
+        assert!(ShardPlan::striped(16, 0).is_err());
+        let err = ShardPlan::striped(4, 5).unwrap_err();
+        assert!(err.contains("at least one expert"), "{err}");
+        assert!(ShardPlan::striped(4, 4).is_ok());
+    }
+
+    #[test]
+    fn striped_balances_within_one() {
+        let s = ShardPlan::striped(10, 3).unwrap();
+        let sizes: Vec<usize> = (0..3).map(|d| s.shard_size(d)).collect();
+        assert_eq!(sizes, vec![4, 3, 3]);
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+    }
+
+    #[test]
+    fn prop_partition_and_roundtrip() {
+        let mut prop = Prop::new("shard_partition_roundtrip");
+        prop.run(60, |rng| {
+            let e = 1 + rng.below(512);
+            let d = 1 + rng.below(e);
+            let s = ShardPlan::striped(e, d).unwrap();
+            // partition: sizes sum to E
+            let total: usize = (0..d).map(|dev| s.shard_size(dev)).sum();
+            assert_eq!(total, e);
+            // round-trip + dense local ids, identical at every layer
+            let mut seen = vec![vec![false; s.shard_size(0).max(1)]; d];
+            for expert in 0..e {
+                let dev = s.device_of(rng.below(64), expert);
+                let local = s.local_of(expert);
+                assert!(dev < d);
+                assert!(local < s.shard_size(dev), "{expert} -> {dev}/{local}");
+                assert_eq!(s.global_of(dev, local), expert);
+                if local < seen[dev].len() {
+                    assert!(!seen[dev][local], "local id reused");
+                    seen[dev][local] = true;
+                }
+            }
+        });
+    }
+}

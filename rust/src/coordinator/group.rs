@@ -1,0 +1,413 @@
+//! Multi-device sharded serving: a coordinator per device (DESIGN.md §9).
+//!
+//! A [`DeviceGroup`] generalizes the single-[`Coordinator`] stack to
+//! expert-sharded serving across a device group. A [`ShardPlan`] assigns
+//! every `(layer, expert)` to a device; each device owns a full coordinator
+//! over its shard — its **own** [`super::BudgetTracker`] under its slice of
+//! the HBM envelope, per-rung [`super::BlockPool`]s, and a
+//! [`super::TransitionPipeline`] whose migration stream runs at the
+//! per-device link bandwidth from
+//! [`crate::sim::cost::migration_link_bytes_per_s`] (links contend on the
+//! host aggregate). The waterfill policy
+//! ([`super::policy::plan_layer_ladder`]) therefore runs per device over
+//! that device's expert subset, so every shard's envelope is respected
+//! independently — there is no global budget authority to coordinate with,
+//! which is exactly what makes the group scale.
+//!
+//! **1-device equivalence guarantee** (property-tested in this module): a
+//! group of one device is the single-GPU system — identical budget plan,
+//! identical transfer times, identical residency trajectory for identical
+//! traffic.
+
+use std::sync::atomic::Ordering;
+
+use crate::config::{DeviceConfig, ModelPreset, ServingConfig, ShardPlan};
+use crate::model::Precision;
+use crate::sim::cost::migration_link_bytes_per_s;
+
+use super::{Coordinator, UpdateReport};
+
+/// A group of expert-sharded coordinators, one per device.
+pub struct DeviceGroup {
+    shard: ShardPlan,
+    /// One coordinator per device, device 0 first. Each manages only its
+    /// shard's experts, addressed by *local* (dense) expert ids.
+    pub devices: Vec<Coordinator>,
+}
+
+impl DeviceGroup {
+    /// Build an `n_devices`-wide group under striped expert placement.
+    /// The group-wide envelope in `cfg` is split evenly across devices
+    /// (see [`DeviceGroup::device_cfg`]); each device's migration stream
+    /// gets the contended per-device link bandwidth.
+    pub fn new(
+        preset: &ModelPreset,
+        cfg: &ServingConfig,
+        dev: &DeviceConfig,
+        n_devices: usize,
+    ) -> Result<Self, String> {
+        let shard = ShardPlan::striped(preset.n_experts, n_devices)?;
+        let link = migration_link_bytes_per_s(dev, n_devices);
+        let mut devices = Vec::with_capacity(n_devices);
+        for d in 0..n_devices {
+            // Shared experts are replicated on every device (each device
+            // runs them for its tokens), so each shard preset keeps
+            // `n_shared` and only the routed experts are partitioned.
+            let mut shard_preset = preset.clone();
+            shard_preset.n_experts = shard.shard_size(d);
+            let shard_cfg = Self::device_cfg(cfg, d, n_devices);
+            let mut shard_dev = dev.clone();
+            shard_dev.pcie_bytes_per_s = link;
+            let coord = Coordinator::new(&shard_preset, &shard_cfg, &shard_dev)
+                .map_err(|e| format!("device {d}: {e}"))?;
+            devices.push(coord);
+        }
+        Ok(Self { shard, devices })
+    }
+
+    /// The per-device slice of the group envelope: HBM budget and the
+    /// fixed reservation split evenly (remainder bytes dropped —
+    /// conservative), `n_hi_override` distributed round-robin (low device
+    /// ids take the remainder). A 1-device group reproduces the input
+    /// config exactly.
+    pub fn device_cfg(
+        cfg: &ServingConfig,
+        device: usize,
+        n_devices: usize,
+    ) -> ServingConfig {
+        let mut c = cfg.clone();
+        c.hbm_budget_bytes = cfg.hbm_budget_bytes / n_devices;
+        c.fixed_bytes = cfg.fixed_bytes / n_devices;
+        c.n_hi_override = cfg
+            .n_hi_override
+            .map(|n| n / n_devices + usize::from(device < n % n_devices));
+        c
+    }
+
+    pub fn shard(&self) -> &ShardPlan {
+        &self.shard
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Device owning `(layer, expert)` (global expert id).
+    #[inline]
+    pub fn device_of(&self, layer: usize, expert: usize) -> usize {
+        self.shard.device_of(layer, expert)
+    }
+
+    /// HOT PATH: the ladder rung a (globally addressed) expert executes at.
+    #[inline]
+    pub fn resolve_tier(&self, layer: usize, expert: usize) -> usize {
+        let d = self.shard.device_of(layer, expert);
+        self.devices[d].resolve_tier(layer, self.shard.local_of(expert))
+    }
+
+    /// HOT PATH: the precision a (globally addressed) expert executes at.
+    #[inline]
+    pub fn resolve(&self, layer: usize, expert: usize) -> Precision {
+        let d = self.shard.device_of(layer, expert);
+        self.devices[d].resolve(layer, self.shard.local_of(expert))
+    }
+
+    /// Feed router trace for one layer (global expert ids, duplicates
+    /// included): selections are split by owning device and translated to
+    /// local ids before reaching each device's hotness estimator.
+    pub fn record_routing(&self, layer: usize, experts: &[usize]) {
+        if self.devices.len() == 1 {
+            self.devices[0].record_routing(layer, experts);
+            return;
+        }
+        let mut scratch: Vec<Vec<usize>> =
+            vec![Vec::new(); self.devices.len()];
+        self.record_routing_into(layer, experts, &mut scratch);
+    }
+
+    /// [`DeviceGroup::record_routing`] with caller-owned scratch buffers
+    /// (one per device) — the single implementation of the device-split +
+    /// local-id translation; hot callers reuse the buffers across layers.
+    pub fn record_routing_into(
+        &self,
+        layer: usize,
+        experts: &[usize],
+        scratch: &mut [Vec<usize>],
+    ) {
+        debug_assert_eq!(scratch.len(), self.devices.len());
+        if self.devices.len() == 1 {
+            self.devices[0].record_routing(layer, experts);
+            return;
+        }
+        for locals in scratch.iter_mut() {
+            locals.clear();
+        }
+        for &e in experts {
+            scratch[self.shard.device_of(layer, e)]
+                .push(self.shard.local_of(e));
+        }
+        for (d, locals) in scratch.iter().enumerate() {
+            if !locals.is_empty() {
+                self.devices[d].record_routing(layer, locals);
+            }
+        }
+    }
+
+    /// Iteration boundary on every device (deterministic device order);
+    /// reports are merged (`ran` if any device's policy ran).
+    pub fn tick(&self, now_s: f64) -> UpdateReport {
+        let mut agg = UpdateReport::default();
+        for c in &self.devices {
+            let r = c.tick(now_s);
+            agg.ran |= r.ran;
+            agg.promotions_submitted += r.promotions_submitted;
+            agg.demotions_submitted += r.demotions_submitted;
+            agg.deferred += r.deferred;
+            agg.published += r.published;
+        }
+        agg
+    }
+
+    /// Publish finished transitions on every device; returns the total
+    /// published count.
+    pub fn poll(&self, now_s: f64) -> usize {
+        self.devices
+            .iter()
+            .map(|c| c.pipeline.poll(now_s).len())
+            .sum()
+    }
+
+    /// Block until every device's host-side staging is quiescent.
+    pub fn wait_staged(&self) {
+        for c in &self.devices {
+            c.pipeline.wait_staged();
+        }
+    }
+
+    /// Modeled time at which every device's migration queue drains.
+    pub fn migration_tail(&self) -> f64 {
+        self.devices
+            .iter()
+            .map(|c| c.pipeline.migration_tail())
+            .fold(0.0, f64::max)
+    }
+
+    /// Total bytes moved across all device links so far (modeled).
+    pub fn migrated_bytes(&self) -> u64 {
+        self.devices
+            .iter()
+            .map(|c| c.pipeline.stats.migrated_bytes.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Published residency counts per rung, summed over devices.
+    pub fn tier_counts(&self) -> Vec<usize> {
+        let mut total = vec![0usize; self.devices[0].preset.ladder.n_tiers()];
+        for c in &self.devices {
+            for (t, n) in c.handles.tier_counts().into_iter().enumerate() {
+                total[t] += n;
+            }
+        }
+        total
+    }
+
+    /// Published residency counts per device (tier 0 first within each).
+    pub fn device_tier_counts(&self) -> Vec<Vec<usize>> {
+        self.devices.iter().map(|c| c.handles.tier_counts()).collect()
+    }
+
+    /// In-flight transition count per device — the cross-device
+    /// promotion-queue depth the metrics snapshot reports.
+    pub fn inflight_depths(&self) -> Vec<usize> {
+        self.devices.iter().map(|c| c.pipeline.inflight_count()).collect()
+    }
+
+    /// C1 across the group: every device inside its own envelope.
+    pub fn within_envelope(&self) -> bool {
+        self.devices.iter().all(|c| c.budget.within_envelope())
+    }
+
+    /// Pool conservation across every device's per-rung pools.
+    pub fn pools_consistent(&self) -> bool {
+        self.devices
+            .iter()
+            .all(|c| c.pools.iter().all(|p| p.consistent()))
+    }
+
+    /// The group's policy update interval in seconds.
+    pub fn update_interval_s(&self) -> f64 {
+        self.devices[0].cfg.update_interval_ms / 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::Prop;
+    use crate::util::XorShiftRng;
+
+    fn shrunk_preset(rng: &mut XorShiftRng) -> ModelPreset {
+        let mut p = match rng.below(3) {
+            0 => ModelPreset::qwen30b_sim(),
+            1 => ModelPreset::qwen80b_sim(),
+            _ => ModelPreset::phi_sim(),
+        };
+        p.paper_layers = 2 + rng.below(3);
+        p.n_layers = p.paper_layers;
+        p
+    }
+
+    #[test]
+    fn rejects_degenerate_group_sizes() {
+        let preset = ModelPreset::phi_sim();
+        let cfg = ServingConfig::default();
+        let dev = DeviceConfig::default();
+        assert!(DeviceGroup::new(&preset, &cfg, &dev, 0).is_err());
+        assert!(DeviceGroup::new(&preset, &cfg, &dev, 17).is_err());
+    }
+
+    #[test]
+    fn one_device_group_matches_coordinator_plan() {
+        for preset in ModelPreset::all() {
+            let cfg = ServingConfig::default();
+            let dev = DeviceConfig::default();
+            let solo = Coordinator::new(&preset, &cfg, &dev).unwrap();
+            let group = DeviceGroup::new(&preset, &cfg, &dev, 1).unwrap();
+            assert_eq!(
+                solo.plan.tier_capacity, group.devices[0].plan.tier_capacity,
+                "{}",
+                preset.name
+            );
+            assert_eq!(solo.plan.pool_bytes, group.devices[0].plan.pool_bytes);
+            assert_eq!(
+                solo.plan.tier_expert_bytes,
+                group.devices[0].plan.tier_expert_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn prop_one_device_group_reproduces_single_coordinator() {
+        // The acceptance guarantee: a 1-device group and the plain
+        // coordinator walk identical residency trajectories under random
+        // hotness shifts (staging is quiesced before each tick so
+        // publication depends only on modeled completion events).
+        let mut prop = Prop::new("group_one_device_equiv");
+        prop.run(6, |rng| {
+            let preset = shrunk_preset(rng);
+            let mut cfg = ServingConfig::default();
+            cfg.update_interval_ms = 1.0;
+            cfg.hysteresis_margin = rng.range_f64(0.0, 0.3);
+            cfg.ema_alpha = rng.range_f64(0.0, 0.9);
+            cfg.n_hi_override = Some(1 + rng.below(preset.n_experts.min(8)));
+            let dev = DeviceConfig::default();
+            let solo = Coordinator::new(&preset, &cfg, &dev).unwrap();
+            let group = DeviceGroup::new(&preset, &cfg, &dev, 1).unwrap();
+            let mut now = 0.0;
+            for _ in 0..30 {
+                // a hot set that drifts: random experts, random burst size
+                let layer = rng.below(preset.n_layers);
+                let hot: Vec<usize> = (0..1 + rng.below(6))
+                    .map(|_| rng.below(preset.n_experts))
+                    .collect();
+                for _ in 0..10 {
+                    solo.record_routing(layer, &hot);
+                    group.record_routing(layer, &hot);
+                }
+                solo.pipeline.wait_staged();
+                group.wait_staged();
+                now += rng.range_f64(0.001, 0.01);
+                solo.tick(now);
+                group.tick(now);
+                for l in 0..preset.n_layers {
+                    for e in 0..preset.n_experts {
+                        assert_eq!(
+                            solo.resolve_tier(l, e),
+                            group.resolve_tier(l, e),
+                            "layer {l} expert {e} diverged"
+                        );
+                    }
+                }
+            }
+            assert_eq!(solo.handles.tier_counts(), group.tier_counts());
+            assert_eq!(
+                solo.pipeline.stats.migrated_bytes.load(Ordering::Relaxed),
+                group.migrated_bytes()
+            );
+            assert!(group.within_envelope());
+            assert!(group.pools_consistent());
+        });
+    }
+
+    #[test]
+    fn two_device_group_partitions_residency_and_promotes_per_shard() {
+        let preset = ModelPreset::phi_sim().executed_scale();
+        let mut cfg = ServingConfig::default();
+        cfg.update_interval_ms = 1.0;
+        cfg.hysteresis_margin = 0.0;
+        cfg.ema_alpha = 0.0;
+        cfg.n_hi_override = Some(4); // 2 top-rung slots per device
+        let dev = DeviceConfig::default();
+        let group =
+            DeviceGroup::new(&preset, &cfg, &dev, 2).unwrap();
+        assert_eq!(group.devices[0].plan.n_hi_per_layer(), 2);
+        assert_eq!(group.devices[1].plan.n_hi_per_layer(), 2);
+        // experts 0, 2 live on device 0; experts 1, 3 on device 1
+        let mut now = 0.0;
+        for _ in 0..12 {
+            for _ in 0..30 {
+                group.record_routing(0, &[0, 1, 2, 3]);
+            }
+            group.wait_staged();
+            now += 0.002;
+            group.tick(now);
+        }
+        group.wait_staged();
+        group.tick(now + 1e3);
+        for e in 0..4 {
+            assert_eq!(group.resolve(0, e), Precision::Fp16, "expert {e}");
+        }
+        assert_eq!(group.resolve(0, 8), Precision::Int4);
+        // residency partitions: per-device counts sum to the group totals
+        let per_dev = group.device_tier_counts();
+        assert_eq!(per_dev.len(), 2);
+        let layers = preset.n_layers_logical();
+        for (d, counts) in per_dev.iter().enumerate() {
+            assert_eq!(
+                counts.iter().sum::<usize>(),
+                layers * group.shard().shard_size(d),
+                "device {d}"
+            );
+        }
+        assert_eq!(
+            group.tier_counts().iter().sum::<usize>(),
+            layers * preset.n_experts
+        );
+        assert!(group.within_envelope());
+        assert!(group.pools_consistent());
+        assert_eq!(group.inflight_depths().len(), 2);
+    }
+
+    #[test]
+    fn group_budget_slices_the_envelope() {
+        let cfg = ServingConfig::default();
+        let half = DeviceGroup::device_cfg(&cfg, 0, 2);
+        assert_eq!(half.hbm_budget_bytes, cfg.hbm_budget_bytes / 2);
+        assert_eq!(half.fixed_bytes, cfg.fixed_bytes / 2);
+        // override split round-robin: 5 over 2 devices → 3 + 2
+        let mut with_override = cfg.clone();
+        with_override.n_hi_override = Some(5);
+        assert_eq!(
+            DeviceGroup::device_cfg(&with_override, 0, 2).n_hi_override,
+            Some(3)
+        );
+        assert_eq!(
+            DeviceGroup::device_cfg(&with_override, 1, 2).n_hi_override,
+            Some(2)
+        );
+        // identity at one device
+        let same = DeviceGroup::device_cfg(&with_override, 0, 1);
+        assert_eq!(same.hbm_budget_bytes, cfg.hbm_budget_bytes);
+        assert_eq!(same.n_hi_override, Some(5));
+    }
+}

@@ -17,6 +17,7 @@
 //! the original binary formulation (DESIGN.md §8).
 
 pub mod budget;
+pub mod group;
 pub mod hotness;
 pub mod pipeline;
 pub mod policy;
@@ -26,6 +27,7 @@ pub mod ver;
 use std::sync::Arc;
 
 pub use budget::{BudgetPlan, BudgetTracker};
+pub use group::DeviceGroup;
 pub use hotness::HotnessEstimator;
 pub use pipeline::{Admission, StageFn, TransitionKind, TransitionPipeline};
 pub use policy::{plan_layer, plan_layer_ladder, LadderPlan, LayerPlan};

@@ -86,11 +86,16 @@ pub fn plan_layer(
         }
     }
 
-    // Hysteresis swaps: strongest outsider vs weakest resident.
+    // Hysteresis swaps: strongest outsider vs weakest resident. The mean
+    // is summed in index order — summing in HashSet iteration order would
+    // make the float result (and thus, at the margin, the plan) depend on
+    // the process-random hash seed, breaking byte-stable replay.
     let mean_resident = if members.is_empty() {
         0.0
     } else {
-        members.iter().map(|&e| scores[e]).sum::<f64>() / members.len() as f64
+        let mut ms: Vec<usize> = members.iter().copied().collect();
+        ms.sort_unstable();
+        ms.iter().map(|&e| scores[e]).sum::<f64>() / ms.len() as f64
     };
     let threshold = margin * mean_resident;
     let mut out: Vec<usize> = order

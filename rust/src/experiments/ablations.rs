@@ -7,6 +7,7 @@ use crate::config::{DeviceConfig, ModelPreset, ServingConfig};
 use crate::coordinator::BlockPool;
 use crate::serving::engine::{Engine, EngineConfig};
 use crate::serving::registry::{BackendCtx, BackendRegistry};
+use crate::serving::session::ServeSession;
 use crate::workload::WorkloadProfile;
 
 fn dynaexq_engine(
@@ -442,9 +443,77 @@ pub fn a8_tier_count(fast: bool) -> Result<String> {
     ))
 }
 
+/// A9: device-group width — the same model and group-wide HBM envelope
+/// served by 1-, 2-, and 4-device expert-sharded groups (DESIGN.md §9).
+///
+/// Sharding splits each layer's expert compute across per-device lanes
+/// (throughput up) but also splits the envelope: every device waterfills
+/// its own slack over its own shard, and promotions ride per-device
+/// migration streams that contend on the host aggregate. The 1-device row
+/// is byte-identical to plain `dynaexq` — the equivalence the group
+/// construction guarantees.
+pub fn a9_sharding(fast: bool) -> Result<String> {
+    let rounds = if fast { 2 } else { 6 };
+    let mut t = Table::new(&[
+        "devices",
+        "resident/rung/device",
+        "promo-queue",
+        "hi-tier %",
+        "migrated GB",
+        "tok/s",
+    ]);
+    for devices in [1usize, 2, 4] {
+        let mut s = ServeSession::builder()
+            .model("qwen30b-sim")
+            .method("dynaexq-sharded")
+            .workload("text")
+            .devices(devices)
+            .seed(0xA9)
+            .warmup(1)
+            .build()?;
+        for _ in 0..rounds {
+            s.serve_closed(8, 128, 16)?;
+        }
+        let snap = s.snapshot();
+        t.row(&[
+            format!("{devices}"),
+            crate::serving::session::MetricsSnapshot::encode_per_device(
+                &snap.device_resident,
+            ),
+            snap.promo_queue_depth
+                .iter()
+                .map(|n| n.to_string())
+                .collect::<Vec<_>>()
+                .join("/"),
+            format!("{:.1}", snap.hi_fraction * 100.0),
+            format!("{:.2}", snap.migrated_bytes as f64 / 1e9),
+            format!("{:.0}", snap.throughput_tok_s),
+        ]);
+    }
+    Ok(format!(
+        "== A9: device-group width — expert-sharded serving under one \
+         group-wide envelope (qwen30b-sim, dynaexq-sharded, text) ==\n{}",
+        t.render()
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn sharding_ablation_covers_group_widths() {
+        let report = a9_sharding(true).unwrap();
+        assert!(report.contains("devices"), "{report}");
+        for d in ["1", "2", "4"] {
+            assert!(
+                report.lines().any(|l| l.trim_start().starts_with(d)),
+                "missing {d}-device row: {report}"
+            );
+        }
+        // the multi-device rows report per-device residency ('/'-joined)
+        assert!(report.contains('/'), "{report}");
+    }
 
     #[test]
     fn tier_count_ablation_runs_both_ladders() {

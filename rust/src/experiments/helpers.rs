@@ -43,7 +43,20 @@ pub fn backend(
     dev: &DeviceConfig,
     workload: Option<&WorkloadProfile>,
 ) -> Result<Box<dyn ResidencyBackend>> {
-    let mut ctx = BackendCtx::new(preset, cfg, dev);
+    backend_with_devices(method, preset, cfg, dev, workload, 1)
+}
+
+/// [`backend`] with an explicit device-group width (sharded methods
+/// consume it; single-device methods ignore it).
+pub fn backend_with_devices(
+    method: &str,
+    preset: &ModelPreset,
+    cfg: &ServingConfig,
+    dev: &DeviceConfig,
+    workload: Option<&WorkloadProfile>,
+    devices: usize,
+) -> Result<Box<dyn ResidencyBackend>> {
+    let mut ctx = BackendCtx::new(preset, cfg, dev).with_devices(devices);
     if let Some(w) = workload {
         ctx = ctx.with_profile(w);
     }
@@ -95,6 +108,7 @@ pub fn serve_session_with(
     rounds: usize,
     seed: u64,
     warmup: usize,
+    devices: usize,
 ) -> Result<(ServeSession, String)> {
     let mut s = ServeSession::builder()
         .model(model)
@@ -102,17 +116,25 @@ pub fn serve_session_with(
         .workload(workload)
         .seed(seed)
         .warmup(warmup)
+        .devices(devices)
         .build()?;
     s.serve_rounds(rounds, batch, prompt, output)?;
+    let devices_note = if devices > 1 {
+        format!(" | devices {devices}")
+    } else {
+        String::new()
+    };
     let report = format!(
         "model {model} | method {method} | workload {workload} | \
-         batch {batch} prompt {prompt} output {output} × {rounds} rounds\n{}",
+         batch {batch} prompt {prompt} output {output} × {rounds} \
+         rounds{devices_note}\n{}",
         s.report(),
     );
     Ok((s, report))
 }
 
-/// [`serve_session_with`] at the default seed + warmup, report only.
+/// [`serve_session_with`] at the default seed + warmup, single device,
+/// report only.
 pub fn serve_session(
     model: &str,
     method: &str,
@@ -124,6 +146,7 @@ pub fn serve_session(
 ) -> Result<String> {
     let (_, report) = serve_session_with(
         model, method, workload, batch, prompt, output, rounds, 0xC0FFEE, 2,
+        1,
     )?;
     Ok(report)
 }

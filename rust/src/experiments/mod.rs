@@ -59,8 +59,10 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let rounds = args.get_parse::<usize>("rounds").unwrap_or(4);
     let seed = args.get_parse::<u64>("seed").unwrap_or(0xC0FFEE);
     let warmup = args.get_parse::<usize>("warmup").unwrap_or(2);
+    let devices = args.get_parse::<usize>("devices").unwrap_or(1);
     let (session, report) = helpers::serve_session_with(
         model, method, workload, batch, prompt, output, rounds, seed, warmup,
+        devices,
     )?;
     println!("{report}");
     if args.has("kv") {
@@ -95,6 +97,7 @@ pub fn cmd_report(args: &Args) -> Result<()> {
             "a6" => ablations::a6_reactive_vs_policy(fast)?,
             "a7" => ablations::a7_load_sweep(fast)?,
             "a8" => ablations::a8_tier_count(fast)?,
+            "a9" => ablations::a9_sharding(fast)?,
             other => bail!("unknown experiment {other:?}"),
         })
     };
@@ -105,7 +108,7 @@ pub fn cmd_report(args: &Args) -> Result<()> {
         let numeric = cfg!(feature = "numeric");
         for id in [
             "t1", "t2", "f1", "f2", "f3", "t4", "f6", "f7", "f8", "f9",
-            "f10", "a1", "a2", "a3", "a4", "a5", "a6", "a7", "a8",
+            "f10", "a1", "a2", "a3", "a4", "a5", "a6", "a7", "a8", "a9",
         ] {
             if !numeric && matches!(id, "f3" | "t4" | "a5") {
                 println!(
@@ -169,14 +172,26 @@ pub fn cmd_trace(args: &Args) -> Result<()> {
         // Replay a trace through a residency backend; report its behaviour.
         // `--workload` names the trace's workload, which is also the
         // calibration input for offline-calibrated methods (static-map).
+        // `--devices N` replays through an N-device sharded group.
         let p = helpers::preset(model)?;
         let w = helpers::profile(workload)?;
         let method = args.get_or("method", "dynaexq");
+        let devices = args.get_parse::<usize>("devices").unwrap_or(1);
         let cfg = crate::config::ServingConfig::default();
         let dev = crate::config::DeviceConfig::default();
-        let mut backend = helpers::backend(method, &p, &cfg, &dev, Some(&w))?;
+        let mut backend = helpers::backend_with_devices(
+            method,
+            &p,
+            &cfg,
+            &dev,
+            Some(&w),
+            devices,
+        )?;
         let trace =
             crate::workload::Trace::load(std::path::Path::new(path))?;
+        // A mismatched trace would index out of range inside the backend's
+        // residency tables — refuse it with a clear error instead.
+        trace.check_matches(p.n_layers_logical(), p.n_experts)?;
         let tick_s = args
             .get_parse::<f64>("tick-ms")
             .unwrap_or(cfg.update_interval_ms)

@@ -50,8 +50,8 @@ pub mod testutil;
 pub mod util;
 pub mod workload;
 
-pub use config::{DeviceConfig, ModelPreset, ServingConfig};
-pub use coordinator::Coordinator;
+pub use config::{DeviceConfig, ModelPreset, ServingConfig, ShardPlan};
+pub use coordinator::{Coordinator, DeviceGroup};
 pub use model::PrecisionLadder;
 pub use serving::engine::Engine;
 #[cfg(feature = "numeric")]

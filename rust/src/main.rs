@@ -20,16 +20,21 @@ USAGE:
 
 SUBCOMMANDS:
     serve    Run a modeled serving session (SessionBuilder API).
-               --model qwen30b-sim|qwen80b-sim|phi-sim   (default qwen30b-sim)
-               --method dynaexq|static|static-hi|fp16|static-map|expertflow|
-                        hobbit|counting                  (default dynaexq)
+               --model qwen30b-sim|qwen30b-3tier|qwen80b-sim|phi-sim
+                                                         (default qwen30b-sim)
+               --method dynaexq|dynaexq-3tier|dynaexq-sharded|
+                        dynaexq-3tier-sharded|static|static-hi|fp16|
+                        static-map|expertflow|hobbit|counting
+                                                         (default dynaexq)
                --workload text|math|code                 (default text)
                --batch N (default 8)  --prompt N (default 512)
                --output N (default 64) --rounds N (default 4)
                --seed S --warmup N (default 2)
+               --devices N (default 1; sharded methods serve an N-device
+                            expert-sharded group with per-device envelopes)
                --kv   (also print the machine-readable metrics snapshot)
     report   Regenerate a paper table/figure.
-               --exp t1|t2|t4|f1|f2|f3|f6..f10|a1..a8|all  [--fast]
+               --exp t1|t2|t4|f1|f2|f3|f6..f10|a1..a9|all  [--fast]
     quality  Numeric quality run (real PJRT execution; needs a build with
              --features numeric).
                --model ... --method fp16|static|dynaexq
@@ -38,6 +43,7 @@ SUBCOMMANDS:
                --model ... --workload ... --iters N
                --record out.dxtr [--batch B --seed S]
                --replay in.dxtr [--method <any registered method>]
+                 [--devices N]  (header must match the model's shape)
     help     This text.
 ";
 

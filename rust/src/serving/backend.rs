@@ -6,9 +6,12 @@
 //! resolution incurred (0 for DynaExq and static PTQ; fetch-wait time for
 //! offloading systems when the expert is not resident).
 
+use std::sync::{Arc, Mutex};
+
 use crate::config::{DeviceConfig, ModelPreset, ServingConfig};
-use crate::coordinator::Coordinator;
-use crate::model::Precision;
+use crate::coordinator::{Coordinator, DeviceGroup};
+use crate::model::{Precision, PrecisionLadder};
+use crate::workload::Trace;
 
 /// A serving method's residency behaviour.
 pub trait ResidencyBackend: Send {
@@ -59,6 +62,39 @@ pub trait ResidencyBackend: Send {
     fn counts_view(&self) -> Option<&[Vec<u64>]> {
         None
     }
+
+    /// Number of devices the backend shards experts across (1 = the
+    /// paper's single-GPU system). When this exceeds 1 the engine models
+    /// per-device compute lanes for the MoE block.
+    fn n_devices(&self) -> usize {
+        1
+    }
+
+    /// Device owning `(layer, expert)` — always 0 for single-device
+    /// backends.
+    fn device_of(&self, _layer: usize, _expert: usize) -> usize {
+        0
+    }
+
+    /// Published residency counts per device (tier 0 first within each
+    /// device); empty when the backend has no residency table.
+    fn device_residency(&self) -> Vec<Vec<usize>> {
+        Vec::new()
+    }
+
+    /// In-flight transition count per device (the cross-device
+    /// promotion-queue depth); empty without a transition pipeline.
+    fn promo_queue_depth(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    /// Block until host-side staging of every submitted transition is done
+    /// (no-op for backends without a staging worker). The engine and the
+    /// trace replayer call this at iteration boundaries *before*
+    /// [`ResidencyBackend::tick`], so publication depends only on modeled
+    /// completion events and every run is reproducible from its seed.
+    /// Host-side waiting never adds modeled stall.
+    fn sync_staging(&mut self) {}
 }
 
 // ---------------------------------------------------------------------------
@@ -174,6 +210,249 @@ impl ResidencyBackend for DynaExqBackend {
             self.coord.pipeline.poll(now);
         }
         now
+    }
+
+    fn device_residency(&self) -> Vec<Vec<usize>> {
+        vec![self.coord.handles.tier_counts()]
+    }
+
+    fn promo_queue_depth(&self) -> Vec<usize> {
+        vec![self.coord.pipeline.inflight_count()]
+    }
+
+    fn sync_staging(&mut self) {
+        self.coord.pipeline.wait_staged();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DynaExq over a sharded device group
+// ---------------------------------------------------------------------------
+
+/// The coordinator stack sharded across a [`DeviceGroup`] (DESIGN.md §9):
+/// every device owns its expert shard's budget tracker, per-rung pools,
+/// and transition pipeline under its own slice of the HBM envelope, and
+/// the waterfill policy runs per device over that device's expert subset.
+/// A 1-device group behaves exactly like [`DynaExqBackend`]
+/// (property-tested in `coordinator::group`). Transitions are always
+/// non-blocking (VER) — the blocking ablation remains single-device.
+pub struct DynaExqShardedBackend {
+    pub group: Arc<DeviceGroup>,
+    ladder: PrecisionLadder,
+    resolves: u64,
+    /// Resolutions served per rung, tier 0 first.
+    tier_resolves: Vec<u64>,
+    /// Scratch: per-device local-id routing split.
+    split: Vec<Vec<usize>>,
+}
+
+impl DynaExqShardedBackend {
+    pub fn new(
+        preset: &ModelPreset,
+        cfg: &ServingConfig,
+        dev: &DeviceConfig,
+        n_devices: usize,
+    ) -> Result<Self, String> {
+        Ok(Self::from_group(Arc::new(DeviceGroup::new(
+            preset, cfg, dev, n_devices,
+        )?)))
+    }
+
+    /// Wrap an existing group; the caller may keep its own `Arc` handle to
+    /// inspect per-device state while the engine owns the backend.
+    pub fn from_group(group: Arc<DeviceGroup>) -> Self {
+        let ladder = group.devices[0].preset.ladder.clone();
+        let n_tiers = ladder.n_tiers();
+        Self {
+            split: vec![Vec::new(); group.n_devices()],
+            group,
+            ladder,
+            resolves: 0,
+            tier_resolves: vec![0; n_tiers],
+        }
+    }
+}
+
+impl ResidencyBackend for DynaExqShardedBackend {
+    fn name(&self) -> &'static str {
+        "dynaexq-sharded"
+    }
+
+    fn record_routing(&mut self, layer: usize, experts: &[usize]) {
+        self.group.record_routing_into(layer, experts, &mut self.split);
+    }
+
+    fn resolve(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        _now_s: f64,
+    ) -> (Precision, f64) {
+        // Stable-handle resolution on the owning device — one atomic load,
+        // never a stall (the handle lives in that device's table).
+        let tier = self.group.resolve_tier(layer, expert);
+        self.resolves += 1;
+        self.tier_resolves[tier] += 1;
+        (self.ladder.tier(tier), 0.0)
+    }
+
+    fn tick(&mut self, now_s: f64) -> f64 {
+        self.group.tick(now_s);
+        0.0
+    }
+
+    fn migrated_bytes(&self) -> u64 {
+        self.group.migrated_bytes()
+    }
+
+    fn hi_fraction(&self) -> f64 {
+        if self.resolves == 0 {
+            0.0
+        } else {
+            self.tier_resolves[0] as f64 / self.resolves as f64
+        }
+    }
+
+    fn tier_fractions(&self) -> Vec<f64> {
+        if self.resolves == 0 {
+            return vec![0.0; self.tier_resolves.len()];
+        }
+        self.tier_resolves
+            .iter()
+            .map(|&n| n as f64 / self.resolves as f64)
+            .collect()
+    }
+
+    fn tier_residency(&self) -> Vec<usize> {
+        self.group.tier_counts()
+    }
+
+    fn quiesce(&mut self, now_s: f64) -> f64 {
+        let interval = self.group.update_interval_s();
+        let mut now = now_s;
+        for _ in 0..8 {
+            now += interval + 1e-9;
+            self.group.tick(now);
+            self.group.wait_staged();
+            now = now.max(self.group.migration_tail());
+            self.group.poll(now);
+        }
+        now
+    }
+
+    fn n_devices(&self) -> usize {
+        self.group.n_devices()
+    }
+
+    fn device_of(&self, layer: usize, expert: usize) -> usize {
+        self.group.device_of(layer, expert)
+    }
+
+    fn device_residency(&self) -> Vec<Vec<usize>> {
+        self.group.device_tier_counts()
+    }
+
+    fn promo_queue_depth(&self) -> Vec<usize> {
+        self.group.inflight_depths()
+    }
+
+    fn sync_staging(&mut self) {
+        self.group.wait_staged();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Recording wrapper
+// ---------------------------------------------------------------------------
+
+/// Wraps any backend and records every routing batch and iteration
+/// boundary into a shared [`Trace`] while delegating behaviour unchanged —
+/// this is how `DXTR` traces are captured from a live modeled engine (the
+/// replay side lives in [`crate::workload::traces`]).
+pub struct RecordingBackend {
+    inner: Box<dyn ResidencyBackend>,
+    trace: Arc<Mutex<Trace>>,
+}
+
+impl RecordingBackend {
+    /// Wrap `inner`; the returned handle reads the trace while (and after)
+    /// the engine owns the backend.
+    pub fn wrap(
+        inner: Box<dyn ResidencyBackend>,
+        n_layers: usize,
+        n_experts: usize,
+    ) -> (Self, Arc<Mutex<Trace>>) {
+        let trace = Arc::new(Mutex::new(Trace::new(n_layers, n_experts)));
+        (Self { inner, trace: trace.clone() }, trace)
+    }
+}
+
+impl ResidencyBackend for RecordingBackend {
+    fn name(&self) -> &'static str {
+        "recording"
+    }
+
+    fn record_routing(&mut self, layer: usize, experts: &[usize]) {
+        self.trace.lock().unwrap().record(layer, experts);
+        self.inner.record_routing(layer, experts);
+    }
+
+    fn resolve(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        now_s: f64,
+    ) -> (Precision, f64) {
+        self.inner.resolve(layer, expert, now_s)
+    }
+
+    fn tick(&mut self, now_s: f64) -> f64 {
+        self.trace.lock().unwrap().tick();
+        self.inner.tick(now_s)
+    }
+
+    fn migrated_bytes(&self) -> u64 {
+        self.inner.migrated_bytes()
+    }
+
+    fn hi_fraction(&self) -> f64 {
+        self.inner.hi_fraction()
+    }
+
+    fn tier_fractions(&self) -> Vec<f64> {
+        self.inner.tier_fractions()
+    }
+
+    fn tier_residency(&self) -> Vec<usize> {
+        self.inner.tier_residency()
+    }
+
+    fn quiesce(&mut self, now_s: f64) -> f64 {
+        self.inner.quiesce(now_s)
+    }
+
+    fn counts_view(&self) -> Option<&[Vec<u64>]> {
+        self.inner.counts_view()
+    }
+
+    fn n_devices(&self) -> usize {
+        self.inner.n_devices()
+    }
+
+    fn device_of(&self, layer: usize, expert: usize) -> usize {
+        self.inner.device_of(layer, expert)
+    }
+
+    fn device_residency(&self) -> Vec<Vec<usize>> {
+        self.inner.device_residency()
+    }
+
+    fn promo_queue_depth(&self) -> Vec<usize> {
+        self.inner.promo_queue_depth()
+    }
+
+    fn sync_staging(&mut self) {
+        self.inner.sync_staging()
     }
 }
 
@@ -339,5 +618,76 @@ mod tests {
         assert_eq!(res.len(), 2);
         assert_eq!(res.iter().sum::<usize>(), 16 * preset.n_layers_logical());
         assert!(res[0] >= 2, "experts 1 and 2 published hot: {res:?}");
+        // single-device view of the group accessors
+        assert_eq!(b.n_devices(), 1);
+        assert_eq!(b.device_of(0, 5), 0);
+        assert_eq!(b.device_residency(), vec![res]);
+        assert_eq!(b.promo_queue_depth().len(), 1);
+    }
+
+    #[test]
+    fn sharded_backend_promotes_on_every_shard() {
+        let preset = ModelPreset::phi_sim();
+        let cfg = ServingConfig::default();
+        let dev = DeviceConfig::default();
+        let mut b =
+            DynaExqShardedBackend::new(&preset, &cfg, &dev, 2).unwrap();
+        assert_eq!(b.n_devices(), 2);
+        assert_eq!(b.device_of(0, 4), 0);
+        assert_eq!(b.device_of(0, 5), 1);
+        // traffic splits across both shards (0, 2 → dev 0; 1, 3 → dev 1)
+        for _ in 0..200 {
+            b.record_routing(0, &[0, 1, 2, 3]);
+        }
+        assert_eq!(b.tick(1.0), 0.0, "sharded backend never stalls");
+        b.sync_staging();
+        b.tick(100.0);
+        for e in 0..4 {
+            let (p, stall) = b.resolve(0, e, 100.0);
+            assert_eq!(p, Precision::Fp16, "expert {e}");
+            assert_eq!(stall, 0.0);
+        }
+        assert!(b.hi_fraction() > 0.0);
+        assert!(b.migrated_bytes() > 0);
+        let fr = b.tier_fractions();
+        assert!((fr[0] - b.hi_fraction()).abs() < 1e-12);
+        // per-device residency partitions the group totals
+        let per_dev = b.device_residency();
+        assert_eq!(per_dev.len(), 2);
+        let layers = preset.n_layers_logical();
+        for (d, counts) in per_dev.iter().enumerate() {
+            assert_eq!(counts.iter().sum::<usize>(), layers * 8, "device {d}");
+        }
+        assert_eq!(
+            b.tier_residency().iter().sum::<usize>(),
+            layers * preset.n_experts
+        );
+        assert_eq!(b.promo_queue_depth().len(), 2);
+        assert!(b.group.within_envelope());
+    }
+
+    #[test]
+    fn recording_backend_captures_trace_and_delegates() {
+        let preset = ModelPreset::phi_sim();
+        let (mut b, trace) = RecordingBackend::wrap(
+            Box::new(StaticBackend::for_preset(&preset)),
+            preset.n_layers_logical(),
+            preset.n_experts,
+        );
+        b.record_routing(0, &[1, 1, 3]);
+        assert_eq!(b.resolve(0, 1, 0.0).0, Precision::Int4);
+        assert_eq!(b.tick(0.5), 0.0);
+        b.record_routing(2, &[7]);
+        b.tick(1.0);
+        let t = trace.lock().unwrap();
+        assert_eq!(t.selections(), 4);
+        assert_eq!(
+            t.events
+                .iter()
+                .filter(|e| **e == crate::workload::TraceEvent::Tick)
+                .count(),
+            2
+        );
+        assert_eq!(t.n_experts, 16);
     }
 }

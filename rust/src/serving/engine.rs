@@ -79,6 +79,9 @@ pub struct Engine {
     /// Scratch: per-expert token counts of the current (layer, iteration).
     counts: Vec<u32>,
     touched: Vec<usize>,
+    /// Scratch: per-device compute lanes of the current layer (sharded
+    /// backends run their shards in parallel; 1 lane = the classic sum).
+    lanes: Vec<f64>,
 }
 
 impl Engine {
@@ -108,6 +111,7 @@ impl Engine {
             n_layers,
             counts: vec![0; preset.n_experts],
             touched: Vec::new(),
+            lanes: Vec::new(),
             cfg,
         }
     }
@@ -202,8 +206,13 @@ impl Engine {
 
     /// Iteration boundary: let the backend publish residency updates and
     /// charge any forced stall (blocking-transition ablation) to the clock.
+    /// Host-side staging is quiesced first so publication depends only on
+    /// *modeled* completion events — every serving run is then reproducible
+    /// from its seed (staging adds no modeled stall; it overlaps on the
+    /// host).
     fn tick_backend(&mut self) {
         let now = self.clock.now();
+        self.backend.sync_staging();
         let stall = self.backend.tick(now);
         self.clock.advance_by(stall);
     }
@@ -254,19 +263,34 @@ impl Engine {
                 self.activation.decode.push(ratio);
             }
         }
-        let mut layer_compute = 0.0;
+        // Expert compute runs on per-device lanes: one lane is the classic
+        // serial sum; a sharded backend executes each device's local
+        // experts in parallel and the layer completes when the slowest
+        // lane drains (expert parallelism). Shared experts are replicated
+        // on every lane. With one lane the accumulation order is identical
+        // to the historical loop, so single-device timings are bit-exact.
+        let n_dev = self.backend.n_devices().max(1);
+        self.lanes.clear();
+        self.lanes.resize(n_dev, 0.0);
         let mut max_ready = layer_start;
         for idx in 0..self.touched.len() {
             let e = self.touched[idx];
             let (prec, stall) = self.backend.resolve(layer, e, layer_start);
             max_ready = max_ready.max(layer_start + stall);
-            layer_compute +=
-                self.cost.expert_time(self.counts[e] as usize, prec);
+            let lane =
+                if n_dev == 1 { 0 } else { self.backend.device_of(layer, e) };
+            let t = self.cost.expert_time(self.counts[e] as usize, prec);
+            self.lanes[lane] += t;
         }
-        for _ in 0..self.preset.n_shared {
-            layer_compute +=
-                self.cost.expert_time(shared_tokens, self.preset.hi());
+        if self.preset.n_shared > 0 {
+            let t = self.cost.expert_time(shared_tokens, self.preset.hi());
+            for _ in 0..self.preset.n_shared {
+                for lane in self.lanes.iter_mut() {
+                    *lane += t;
+                }
+            }
         }
+        let layer_compute = self.lanes.iter().copied().fold(0.0f64, f64::max);
         let added_stall =
             (max_ready - (layer_start + layer_compute)).max(0.0);
         (layer_compute, added_stall)
@@ -458,6 +482,41 @@ mod tests {
         assert!(e.metrics.duration_s >= 1e3);
         // TTFT measured from arrival, not from idle start
         assert!(e.metrics.ttft.max() < 10.0);
+    }
+
+    #[test]
+    fn sharded_lanes_run_expert_compute_in_parallel() {
+        // Same model, same envelope, same traffic: a 2-device group splits
+        // each layer's expert compute across lanes, so the modeled run
+        // finishes sooner than the 1-device group (which is the exact
+        // single-GPU system).
+        use crate::serving::backend::DynaExqShardedBackend;
+        let duration = |devices: usize| {
+            let preset = ModelPreset::qwen30b_sim();
+            let profile = WorkloadProfile::text();
+            let backend = DynaExqShardedBackend::new(
+                &preset,
+                &ServingConfig::default(),
+                &DeviceConfig::default(),
+                devices,
+            )
+            .unwrap();
+            let mut e = Engine::new(
+                &preset,
+                &profile,
+                Box::new(backend),
+                &DeviceConfig::default(),
+                EngineConfig { max_batch: 8, seed: 77, track_activation: false },
+            );
+            e.serve_uniform(&profile, 8, 64, 16);
+            e.metrics.duration_s
+        };
+        let one = duration(1);
+        let two = duration(2);
+        assert!(
+            two < one,
+            "2-device group must finish sooner: {two} vs {one}"
+        );
     }
 
     #[test]

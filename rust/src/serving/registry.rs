@@ -11,17 +11,20 @@
 //!
 //! Registered built-ins:
 //!
-//! | name            | behaviour                                              |
-//! |-----------------|--------------------------------------------------------|
-//! | `dynaexq`       | coordinator-driven online precision allocation (§3)    |
-//! | `dynaexq-3tier` | same coordinator over the full Fp16/Int4/Int2 ladder   |
-//! | `static`        | uniform base-rung PTQ (paper's fastest baseline)       |
-//! | `static-hi`     | uniform top-rung PTQ (quality reference tier)          |
-//! | `fp16`          | uniform FP16 (quality reference, Table 4)              |
-//! | `static-map`    | offline-calibrated per-expert map (MxMoE/MoPEQ class)  |
-//! | `expertflow`    | offloading/prefetching comparator (paper §5.3)         |
-//! | `hobbit`        | reactive mixed-precision offloading (HOBBIT class)     |
-//! | `counting`      | fixed precision + routing-count recording (calibration)|
+//! | name                    | behaviour                                              |
+//! |-------------------------|--------------------------------------------------------|
+//! | `dynaexq`               | coordinator-driven online precision allocation (§3)    |
+//! | `dynaexq-3tier`         | same coordinator over the full Fp16/Int4/Int2 ladder   |
+//! | `dynaexq-sharded`       | coordinator sharded across a device group (per-device  |
+//! |                         | envelopes; device count from `BackendCtx::n_devices`)  |
+//! | `dynaexq-3tier-sharded` | sharded group over the full 3-rung ladder              |
+//! | `static`                | uniform base-rung PTQ (paper's fastest baseline)       |
+//! | `static-hi`             | uniform top-rung PTQ (quality reference tier)          |
+//! | `fp16`                  | uniform FP16 (quality reference, Table 4)              |
+//! | `static-map`            | offline-calibrated per-expert map (MxMoE/MoPEQ class)  |
+//! | `expertflow`            | offloading/prefetching comparator (paper §5.3)         |
+//! | `hobbit`                | reactive mixed-precision offloading (HOBBIT class)     |
+//! | `counting`              | fixed precision + routing-count recording (calibration)|
 
 use std::collections::BTreeMap;
 
@@ -33,7 +36,8 @@ use crate::util::XorShiftRng;
 use crate::workload::{RoutingSampler, WorkloadProfile};
 
 use super::backend::{
-    CountingBackend, DynaExqBackend, ResidencyBackend, StaticBackend,
+    CountingBackend, DynaExqBackend, DynaExqShardedBackend, ResidencyBackend,
+    StaticBackend,
 };
 
 /// Everything a backend factory may consult.
@@ -51,6 +55,10 @@ pub struct BackendCtx<'a> {
     /// Pre-recorded per-(layer, expert) routing counts; takes precedence
     /// over `profile` synthesis for `static-map`.
     pub calib_counts: Option<&'a [Vec<u64>]>,
+    /// Device-group width for sharded methods (`dynaexq-sharded`,
+    /// `dynaexq-3tier-sharded`); single-device methods ignore it. A
+    /// 1-device group is the exact single-GPU system.
+    pub n_devices: usize,
 }
 
 impl<'a> BackendCtx<'a> {
@@ -59,7 +67,14 @@ impl<'a> BackendCtx<'a> {
         cfg: &'a ServingConfig,
         dev: &'a DeviceConfig,
     ) -> Self {
-        Self { preset, cfg, dev, profile: None, calib_counts: None }
+        Self {
+            preset,
+            cfg,
+            dev,
+            profile: None,
+            calib_counts: None,
+            n_devices: 1,
+        }
     }
 
     pub fn with_profile(mut self, profile: &'a WorkloadProfile) -> Self {
@@ -69,6 +84,11 @@ impl<'a> BackendCtx<'a> {
 
     pub fn with_counts(mut self, counts: &'a [Vec<u64>]) -> Self {
         self.calib_counts = Some(counts);
+        self
+    }
+
+    pub fn with_devices(mut self, n_devices: usize) -> Self {
+        self.n_devices = n_devices;
         self
     }
 }
@@ -121,6 +141,27 @@ impl BackendRegistry {
             let mut preset = ctx.preset.clone();
             preset.ladder = PrecisionLadder::full();
             Ok(Box::new(DynaExqBackend::new(&preset, ctx.cfg, ctx.dev)?))
+        });
+        r.register("dynaexq-sharded", |ctx| {
+            // The coordinator stack sharded across ctx.n_devices devices:
+            // per-device envelopes, pools, and migration streams
+            // (DESIGN.md §9); a 1-device group reproduces `dynaexq`.
+            Ok(Box::new(DynaExqShardedBackend::new(
+                ctx.preset,
+                ctx.cfg,
+                ctx.dev,
+                ctx.n_devices,
+            )?))
+        });
+        r.register("dynaexq-3tier-sharded", |ctx| {
+            let mut preset = ctx.preset.clone();
+            preset.ladder = PrecisionLadder::full();
+            Ok(Box::new(DynaExqShardedBackend::new(
+                &preset,
+                ctx.cfg,
+                ctx.dev,
+                ctx.n_devices,
+            )?))
         });
         r.register("expertflow", |ctx| {
             Ok(Box::new(ExpertFlowBackend::new(ctx.preset, ctx.cfg, ctx.dev)))
@@ -247,11 +288,40 @@ mod tests {
     fn builds_every_builtin() {
         let (p, cfg, dev) = ctx_parts();
         let r = BackendRegistry::with_builtins();
-        assert_eq!(r.methods().len(), 9);
+        assert_eq!(r.methods().len(), 11);
         for m in r.methods() {
             let b = r.build(m, &BackendCtx::new(&p, &cfg, &dev)).unwrap();
             assert!(!b.name().is_empty(), "{m}");
         }
+    }
+
+    #[test]
+    fn sharded_methods_honor_device_count() {
+        let (p, cfg, dev) = ctx_parts();
+        let r = BackendRegistry::with_builtins();
+        let mut b = r
+            .build(
+                "dynaexq-sharded",
+                &BackendCtx::new(&p, &cfg, &dev).with_devices(2),
+            )
+            .unwrap();
+        assert_eq!(b.n_devices(), 2);
+        assert_eq!(b.device_residency().len(), 2);
+        assert_eq!(b.resolve(0, 0, 0.0).0, p.lo(), "cold boot at base rung");
+        // the 3-tier sharded variant lifts any preset onto the full ladder
+        let b3 = r
+            .build(
+                "dynaexq-3tier-sharded",
+                &BackendCtx::new(&p, &cfg, &dev).with_devices(2),
+            )
+            .unwrap();
+        assert_eq!(b3.tier_residency().len(), 3);
+        assert_eq!(b3.device_residency().len(), 2);
+        // default context is a 1-device group (the single-GPU system)
+        let b1 = r
+            .build("dynaexq-sharded", &BackendCtx::new(&p, &cfg, &dev))
+            .unwrap();
+        assert_eq!(b1.n_devices(), 1);
     }
 
     #[test]

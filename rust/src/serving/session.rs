@@ -269,9 +269,34 @@ pub struct MetricsSnapshot {
     /// Published residency counts per ladder rung, tier 0 first (empty
     /// for backends without a residency table). Encoded `a|b|c`.
     pub tier_resident: Vec<usize>,
+    /// Published residency per device of a sharded group, tier 0 first
+    /// within each device (empty when the backend exposes no per-device
+    /// residency). Encoded `a|b|c/d|e|f` — devices `/`-separated, rungs
+    /// `|`-separated.
+    pub device_resident: Vec<Vec<usize>>,
+    /// In-flight transition count per device — the cross-device
+    /// promotion-queue depth (empty without a transition pipeline).
+    /// Encoded `a|b`.
+    pub promo_queue_depth: Vec<usize>,
 }
 
 impl MetricsSnapshot {
+    /// Render per-device residency rows in the snapshot's wire/display
+    /// form: rungs `|`-joined within a device, devices `/`-joined — the
+    /// single definition of the format [`MetricsSnapshot::decode`] parses
+    /// (reports, ablation A9, and the examples render through it too).
+    pub fn encode_per_device(rows: &[Vec<usize>]) -> String {
+        rows.iter()
+            .map(|dev| {
+                dev.iter()
+                    .map(|n| n.to_string())
+                    .collect::<Vec<_>>()
+                    .join("|")
+            })
+            .collect::<Vec<_>>()
+            .join("/")
+    }
+
     /// `key=value;...` encoding (order fixed for diff-friendliness).
     pub fn encode(&self) -> String {
         format!(
@@ -280,7 +305,7 @@ impl MetricsSnapshot {
              wait_p99_s={};throughput_tok_s={};decode_tokens={};\
              prefill_tokens={};duration_s={};hi_fraction={};\
              migrated_bytes={};act_prefill={};act_decode={};\
-             tier_resident={}",
+             tier_resident={};device_resident={};promo_queue_depth={}",
             self.model,
             self.method,
             self.workload,
@@ -300,6 +325,12 @@ impl MetricsSnapshot {
             self.act_prefill,
             self.act_decode,
             self.tier_resident
+                .iter()
+                .map(|n| n.to_string())
+                .collect::<Vec<_>>()
+                .join("|"),
+            Self::encode_per_device(&self.device_resident),
+            self.promo_queue_depth
                 .iter()
                 .map(|n| n.to_string())
                 .collect::<Vec<_>>()
@@ -350,7 +381,61 @@ impl MetricsSnapshot {
                     })
                     .collect::<Result<Vec<usize>>>()?
             },
+            device_resident: {
+                let raw = text("device_resident")?;
+                raw.split('/')
+                    .filter(|s| !s.is_empty())
+                    .map(|dev| {
+                        dev.split('|')
+                            .filter(|s| !s.is_empty())
+                            .map(|s| {
+                                s.parse().map_err(|_| {
+                                    anyhow!(
+                                        "invalid device_resident entry {s:?}"
+                                    )
+                                })
+                            })
+                            .collect::<Result<Vec<usize>>>()
+                    })
+                    .collect::<Result<Vec<Vec<usize>>>>()?
+            },
+            promo_queue_depth: {
+                let raw = text("promo_queue_depth")?;
+                raw.split('|')
+                    .filter(|s| !s.is_empty())
+                    .map(|s| {
+                        s.parse().map_err(|_| {
+                            anyhow!("invalid promo_queue_depth entry {s:?}")
+                        })
+                    })
+                    .collect::<Result<Vec<usize>>>()?
+            },
         })
+    }
+
+    /// Snapshot of a backend-only run (trace replay): the latency series
+    /// stay empty; residency/migration fields come straight from the
+    /// backend. This is what the trace-replay conformance suite compares
+    /// byte for byte across replays.
+    pub fn from_replay(
+        model: &str,
+        method: &str,
+        workload: &str,
+        backend: &dyn super::backend::ResidencyBackend,
+        end_s: f64,
+    ) -> Self {
+        Self {
+            model: model.into(),
+            method: method.into(),
+            workload: workload.into(),
+            duration_s: end_s,
+            hi_fraction: backend.hi_fraction(),
+            migrated_bytes: backend.migrated_bytes(),
+            tier_resident: backend.tier_residency(),
+            device_resident: backend.device_residency(),
+            promo_queue_depth: backend.promo_queue_depth(),
+            ..Self::default()
+        }
     }
 }
 
@@ -468,6 +553,8 @@ impl ServeSession {
             act_prefill,
             act_decode,
             tier_resident: b.tier_residency(),
+            device_resident: b.device_residency(),
+            promo_queue_depth: b.promo_queue_depth(),
         }
     }
 
@@ -486,9 +573,17 @@ impl ServeSession {
                     .join("/")
             )
         };
+        let devices = if s.device_resident.len() > 1 {
+            format!(
+                " | devices {}",
+                MetricsSnapshot::encode_per_device(&s.device_resident)
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{}\nactivation: prefill {:.1}% decode {:.1}% | hi-tier {:.1}% \
-             | migrated {:.2} GB | wait p99 {:.4}s{tiers}",
+             | migrated {:.2} GB | wait p99 {:.4}s{tiers}{devices}",
             self.inner.metrics().summary(),
             s.act_prefill * 100.0,
             s.act_decode * 100.0,
@@ -520,6 +615,7 @@ pub struct SessionBuilder {
     track_activation: bool,
     kind: EngineKind,
     registry: Option<BackendRegistry>,
+    devices: usize,
 }
 
 impl Default for SessionBuilder {
@@ -536,6 +632,7 @@ impl Default for SessionBuilder {
             track_activation: true,
             kind: EngineKind::Modeled,
             registry: None,
+            devices: 1,
         }
     }
 }
@@ -607,6 +704,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Serve with an `n`-device expert-sharded group (DESIGN.md §9).
+    /// Consumed by the sharded methods (`dynaexq-sharded`,
+    /// `dynaexq-3tier-sharded`); single-device methods ignore it. A
+    /// 1-device group is exactly the single-GPU system.
+    pub fn devices(mut self, n: usize) -> Self {
+        self.devices = n;
+        self
+    }
+
     /// Validate everything, construct the backend + engine, run warmup.
     /// All name and feasibility errors surface here, before any engine
     /// state exists.
@@ -629,6 +735,9 @@ impl SessionBuilder {
         if self.max_batch == 0 {
             bail!("max_batch must be ≥ 1");
         }
+        if self.devices == 0 {
+            bail!("devices must be ≥ 1 (1 = the single-GPU system)");
+        }
         let registry =
             self.registry.unwrap_or_else(BackendRegistry::with_builtins);
 
@@ -642,7 +751,8 @@ impl SessionBuilder {
                             &self.serving_cfg,
                             &self.device,
                         )
-                        .with_profile(&profile),
+                        .with_profile(&profile)
+                        .with_devices(self.devices),
                     )
                     .map_err(|e| anyhow!(e))?;
                 let mut engine = Engine::new(
@@ -680,7 +790,8 @@ impl SessionBuilder {
                             &self.serving_cfg,
                             &self.device,
                         )
-                        .with_profile(&profile),
+                        .with_profile(&profile)
+                        .with_devices(self.devices),
                     )
                     .map_err(|e| anyhow!(e))?;
                 let weights = Arc::new(ModelWeights::generate(
@@ -744,12 +855,16 @@ mod tests {
             act_prefill: 0.61,
             act_decode: 0.07,
             tier_resident: vec![12, 34, 466],
+            device_resident: vec![vec![6, 17, 233], vec![6, 17, 233]],
+            promo_queue_depth: vec![3, 0],
         };
         let decoded = MetricsSnapshot::decode(&s.encode()).unwrap();
         assert_eq!(decoded, s);
-        // backends without a residency table encode an empty list
+        // backends without a residency table encode empty lists
         let mut none = s.clone();
         none.tier_resident = Vec::new();
+        none.device_resident = Vec::new();
+        none.promo_queue_depth = Vec::new();
         assert_eq!(MetricsSnapshot::decode(&none.encode()).unwrap(), none);
     }
 
@@ -802,6 +917,43 @@ mod tests {
     #[test]
     fn builder_rejects_zero_batch() {
         assert!(ServeSession::builder().max_batch(0).build().is_err());
+    }
+
+    #[test]
+    fn builder_rejects_zero_devices() {
+        let err = ServeSession::builder()
+            .method("dynaexq-sharded")
+            .devices(0)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("devices"), "{err}");
+    }
+
+    #[test]
+    fn sharded_session_reports_per_device_residency() {
+        // The sharded scenario end to end: builder → registry method →
+        // device group → per-device snapshot fields.
+        let mut s = ServeSession::builder()
+            .model("phi-sim")
+            .method("dynaexq-sharded")
+            .devices(2)
+            .workload("text")
+            .seed(7)
+            .warmup(1)
+            .build()
+            .unwrap();
+        s.serve_closed(4, 32, 4).unwrap();
+        let snap = s.snapshot();
+        assert_eq!(snap.device_resident.len(), 2, "{snap:?}");
+        let layers = ModelPreset::phi_sim().n_layers_logical();
+        for (d, counts) in snap.device_resident.iter().enumerate() {
+            assert_eq!(counts.iter().sum::<usize>(), layers * 8, "device {d}");
+        }
+        assert_eq!(snap.tier_resident.iter().sum::<usize>(), layers * 16);
+        assert_eq!(snap.promo_queue_depth.len(), 2);
+        assert_eq!(MetricsSnapshot::decode(&snap.encode()).unwrap(), snap);
+        assert!(s.report().contains("devices"), "{}", s.report());
     }
 
     #[test]

@@ -92,6 +92,25 @@ impl LogicalDims {
     }
 }
 
+/// Per-device migration-stream bandwidth in an `n_devices` serving group.
+///
+/// Each device keeps a dedicated PCIe link, but all links share the host
+/// root complex / host-memory path: a single device gets the full link
+/// bandwidth, while an n-device group splits `host_agg_bytes_per_s` evenly
+/// and each device's migration stream is capped at
+/// `min(pcie_bytes_per_s, host_agg_bytes_per_s / n)`. A 1-device group
+/// returns `pcie_bytes_per_s` exactly (no contention term at all), so a
+/// `DeviceGroup` of one reproduces the single-GPU transfer times bit for
+/// bit (DESIGN.md §9).
+pub fn migration_link_bytes_per_s(dev: &DeviceConfig, n_devices: usize) -> f64 {
+    assert!(n_devices >= 1, "a group has at least one device");
+    if n_devices == 1 {
+        return dev.pcie_bytes_per_s;
+    }
+    dev.pcie_bytes_per_s
+        .min(dev.host_agg_bytes_per_s / n_devices as f64)
+}
+
 /// Converts op shapes into modeled seconds on the configured device.
 #[derive(Clone, Debug)]
 pub struct CostModel {
@@ -217,6 +236,29 @@ mod tests {
         let t512 = c.attn_prefill_time(512);
         let t2048 = c.attn_prefill_time(2048);
         assert!(t2048 > 4.0 * t512);
+    }
+
+    #[test]
+    fn one_device_link_is_exactly_the_pcie_link() {
+        // even a dev config whose aggregate is below the per-link speed
+        // must not perturb the single-GPU system
+        let mut dev = DeviceConfig::default();
+        dev.host_agg_bytes_per_s = 10e9;
+        assert_eq!(migration_link_bytes_per_s(&dev, 1), dev.pcie_bytes_per_s);
+    }
+
+    #[test]
+    fn link_bandwidth_contends_past_the_host_aggregate() {
+        let dev = DeviceConfig::default(); // 25 GB/s link, 50 GB/s host
+        assert_eq!(migration_link_bytes_per_s(&dev, 2), 25e9);
+        assert_eq!(migration_link_bytes_per_s(&dev, 4), 12.5e9);
+        let mut prev = f64::INFINITY;
+        for n in 1..=8 {
+            let bw = migration_link_bytes_per_s(&dev, n);
+            assert!(bw <= prev, "bandwidth must not grow with group size");
+            assert!(bw > 0.0);
+            prev = bw;
+        }
     }
 
     #[test]

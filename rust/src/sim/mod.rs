@@ -16,5 +16,5 @@
 pub mod cost;
 pub mod stream;
 
-pub use cost::{CostModel, LogicalDims};
+pub use cost::{migration_link_bytes_per_s, CostModel, LogicalDims};
 pub use stream::{Clock, Stream};

@@ -151,8 +151,38 @@ impl Trace {
         Self::read_from(&mut f)
     }
 
+    /// Reject replay against a mismatched model shape: the header must
+    /// agree with the target backend's `(n_layers, n_experts)` exactly — a
+    /// larger trace would index out of range inside the backend's tables,
+    /// a smaller one would silently leave experts untracked.
+    pub fn check_matches(
+        &self,
+        n_layers: usize,
+        n_experts: usize,
+    ) -> Result<()> {
+        if self.n_layers as usize != n_layers
+            || self.n_experts as usize != n_experts
+        {
+            bail!(
+                "trace header ({} layers × {} experts) does not match the \
+                 target backend's preset ({n_layers} layers × {n_experts} \
+                 experts); replaying a mismatched trace would index out of \
+                 range",
+                self.n_layers,
+                self.n_experts,
+            );
+        }
+        Ok(())
+    }
+
     /// Replay through a residency backend at `seconds_per_tick` cadence;
-    /// returns the modeled end time.
+    /// returns the modeled end time. Staging is quiesced before every tick
+    /// (see [`ResidencyBackend::sync_staging`]), so two replays of the
+    /// same trace through freshly built backends are byte-stable — the
+    /// conformance suite's determinism golden test relies on this.
+    ///
+    /// [`ResidencyBackend::sync_staging`]:
+    /// crate::serving::backend::ResidencyBackend::sync_staging
     pub fn replay(
         &self,
         backend: &mut dyn crate::serving::backend::ResidencyBackend,
@@ -172,6 +202,7 @@ impl Trace {
                 }
                 TraceEvent::Tick => {
                     now += seconds_per_tick;
+                    backend.sync_staging();
                     now += backend.tick(now);
                 }
             }
@@ -256,6 +287,17 @@ mod tests {
         assert_eq!(end, 1.0);
         assert_eq!(b.counts_view().unwrap()[0][1], 2);
         assert_eq!(b.counts_view().unwrap()[1][7], 1);
+    }
+
+    #[test]
+    fn mismatched_header_rejected_before_replay() {
+        let t = Trace::new(2, 8);
+        assert!(t.check_matches(2, 8).is_ok());
+        let err = t.check_matches(4, 8).unwrap_err().to_string();
+        assert!(err.contains("does not match"), "{err}");
+        assert!(err.contains("out of range"), "{err}");
+        assert!(t.check_matches(2, 16).is_err());
+        assert!(t.check_matches(2, 4).is_err(), "smaller preset rejected too");
     }
 
     #[test]

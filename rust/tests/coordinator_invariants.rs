@@ -6,11 +6,16 @@
 //! (C3) a handle always resolves to a complete version,
 //! plus pool conservation and pipeline liveness.
 
+use std::sync::Arc;
+
 use dynaexq::config::{DeviceConfig, ModelPreset, ServingConfig};
-use dynaexq::coordinator::Coordinator;
+use dynaexq::coordinator::{Coordinator, DeviceGroup};
 use dynaexq::model::Precision;
+use dynaexq::serving::backend::DynaExqShardedBackend;
+use dynaexq::serving::engine::{Engine, EngineConfig};
 use dynaexq::testutil::prop::Prop;
 use dynaexq::util::XorShiftRng;
+use dynaexq::workload::WorkloadProfile;
 
 fn random_preset(rng: &mut XorShiftRng) -> ModelPreset {
     let mut p = match rng.below(3) {
@@ -63,6 +68,114 @@ fn prop_budget_envelope_never_violated_under_chaotic_traffic() {
         assert_eq!(c.pipeline.inflight_count(), 0, "pipeline stuck");
         assert!(c.budget.within_envelope());
     });
+}
+
+#[test]
+fn prop_sharded_group_per_device_envelopes_never_violated() {
+    // C1 per device: under chaotic globally-addressed traffic, every
+    // device of a 1–3-wide group stays inside its own envelope slice and
+    // conserves its pools; the group drains to quiescence afterwards.
+    let mut prop = Prop::new("group_envelope_chaos");
+    prop.run(6, |rng| {
+        let preset = random_preset(rng);
+        let n_devices = 1 + rng.below(3);
+        let mut cfg = ServingConfig::default();
+        cfg.update_interval_ms = 1.0;
+        cfg.hysteresis_margin = rng.range_f64(0.0, 0.3);
+        cfg.ema_alpha = rng.range_f64(0.0, 0.9);
+        cfg.n_hi_override =
+            Some(n_devices + rng.below(preset.n_experts.min(16)));
+        let group = DeviceGroup::new(
+            &preset,
+            &cfg,
+            &DeviceConfig::default(),
+            n_devices,
+        )
+        .unwrap();
+        let mut now = 0.0;
+        for _ in 0..150 {
+            let layer = rng.below(preset.n_layers);
+            let burst: Vec<usize> = (0..1 + rng.below(24))
+                .map(|_| rng.below(preset.n_experts))
+                .collect();
+            group.record_routing(layer, &burst);
+            now += rng.range_f64(0.0, 0.01);
+            group.tick(now);
+            for (d, c) in group.devices.iter().enumerate() {
+                assert!(
+                    c.budget.within_envelope(),
+                    "device {d} violated its envelope"
+                );
+                for (t, pool) in c.pools.iter().enumerate() {
+                    assert!(pool.consistent(), "device {d} rung-{t} leaked");
+                }
+            }
+        }
+        // liveness: traffic stops, every device's pipeline drains
+        for i in 0..12 {
+            now += 1e3 * (i + 1) as f64;
+            group.tick(now);
+            group.wait_staged();
+        }
+        group.tick(now + 1e6);
+        assert_eq!(
+            group.inflight_depths().iter().sum::<usize>(),
+            0,
+            "a device's pipeline is stuck"
+        );
+        assert!(group.within_envelope());
+    });
+}
+
+#[test]
+fn sharded_group_serves_all_models_within_per_device_envelopes() {
+    // Acceptance: `dynaexq-sharded` with 2 devices serves every sim model
+    // end to end, with per-device envelope/pool invariants held at every
+    // round boundary and residency fully accounted afterwards.
+    for preset in ModelPreset::all() {
+        let cfg = ServingConfig::default();
+        let dev = DeviceConfig::default();
+        let group = Arc::new(
+            DeviceGroup::new(&preset, &cfg, &dev, 2)
+                .unwrap_or_else(|e| panic!("{}: {e}", preset.name)),
+        );
+        let backend = Box::new(DynaExqShardedBackend::from_group(group.clone()));
+        let w = WorkloadProfile::text();
+        let mut e = Engine::new(
+            &preset,
+            &w,
+            backend,
+            &dev,
+            EngineConfig { max_batch: 8, seed: 29, track_activation: false },
+        );
+        for _ in 0..3 {
+            e.serve_uniform(&w, 4, 32, 8);
+            for (d, c) in group.devices.iter().enumerate() {
+                assert!(
+                    c.budget.within_envelope(),
+                    "{} device {d} outside its envelope",
+                    preset.name
+                );
+                for pool in &c.pools {
+                    assert!(pool.consistent(), "{} device {d}", preset.name);
+                }
+            }
+        }
+        assert_eq!(e.metrics.e2e.count(), 12, "{}", preset.name);
+        assert!(e.metrics.throughput() > 0.0, "{}", preset.name);
+        assert_eq!(
+            e.metrics.wait.max(),
+            0.0,
+            "{}: sharding never stalls",
+            preset.name
+        );
+        assert_eq!(
+            group.tier_counts().iter().sum::<usize>(),
+            preset.n_layers_logical() * preset.n_experts,
+            "{}: every expert at exactly one rung",
+            preset.name
+        );
+    }
 }
 
 #[test]

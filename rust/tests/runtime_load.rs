@@ -11,19 +11,33 @@ use std::path::Path;
 use dynaexq::config::{D_MODEL, VOCAB};
 use dynaexq::runtime::{lit_f32, lit_i32, to_f32, to_i32, Runtime};
 
-fn runtime() -> Runtime {
+/// The PJRT runtime, or `None` when this environment cannot execute
+/// numerics — AOT artifacts missing, or the crate was built against the
+/// stubbed `xla` bindings. Only those two cases skip (pass vacuously,
+/// with a note on stderr) so the CI matrix can run
+/// `cargo test --features numeric` meaningfully on both kinds of
+/// builders; any other `Runtime::load` error with artifacts present is a
+/// real regression and still fails hard.
+fn runtime() -> Option<Runtime> {
     let dir = std::env::var("DYNAEXQ_ARTIFACTS")
         .unwrap_or_else(|_| "artifacts".to_string());
-    assert!(
-        Path::new(&dir).join("manifest.txt").exists(),
-        "artifacts missing — run `make artifacts` first"
-    );
-    Runtime::load(Path::new(&dir)).expect("runtime load")
+    if !Path::new(&dir).join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts missing — run `make artifacts` first");
+        return None;
+    }
+    match Runtime::load(Path::new(&dir)) {
+        Ok(rt) => Some(rt),
+        Err(e) if format!("{e:#}").contains("xla stub") => {
+            eprintln!("skipping: built against the stubbed xla bindings");
+            None
+        }
+        Err(e) => panic!("runtime load failed with artifacts present: {e:#}"),
+    }
 }
 
 #[test]
 fn embed_gathers_rows() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     // table[v, d] = v * 1000 + d  → row 5 is recognizable
     let table: Vec<f32> = (0..VOCAB * D_MODEL)
         .map(|i| ((i / D_MODEL) * 1000 + (i % D_MODEL)) as f32)
@@ -46,7 +60,7 @@ fn embed_gathers_rows() {
 
 #[test]
 fn expert_fp16_matches_host_math() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     // x = e_0 (one-hot) → h1 = w1 row 0, h3 = w3 row 0; choose w1 rows so
     // silu() saturates: silu(large) ≈ large.
     let f = dynaexq::config::FF_DIM;
@@ -86,7 +100,7 @@ fn expert_fp16_matches_host_math() {
 
 #[test]
 fn router_top_k_selects_biased_expert() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let d = D_MODEL;
     let e = 16usize; // phi-sim router e16k2
     let x = vec![1.0f32; d];
@@ -122,7 +136,7 @@ fn quantized_expert_matches_rust_dequant_reference() {
     use dynaexq::model::Precision;
     use dynaexq::util::XorShiftRng;
 
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let d = D_MODEL;
     let f = dynaexq::config::FF_DIM;
     let mut rng = XorShiftRng::new(99);
@@ -190,7 +204,7 @@ fn quantized_expert_matches_rust_dequant_reference() {
 
 #[test]
 fn executable_cache_hits() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     rt.executable("embed_t1").unwrap();
     rt.executable("embed_t1").unwrap();
     let (compiles, _, _) = rt.stats.snapshot();

@@ -1,0 +1,117 @@
+//! Property tests for the continuous-batching scheduler: no admitted
+//! request starves (every request eventually decodes its full output), and
+//! per-tick token bookkeeping conserves counts under random
+//! arrival/length shuffles.
+
+use dynaexq::config::{DeviceConfig, ModelPreset};
+use dynaexq::serving::backend::StaticBackend;
+use dynaexq::serving::engine::{Engine, EngineConfig};
+use dynaexq::serving::scheduler::ContinuousBatch;
+use dynaexq::testutil::prop::Prop;
+use dynaexq::workload::{Request, RequestGenerator, WorkloadProfile};
+
+fn engine(max_batch: usize, seed: u64) -> Engine {
+    let preset = ModelPreset::phi_sim();
+    Engine::new(
+        &preset,
+        &WorkloadProfile::text(),
+        Box::new(StaticBackend::for_preset(&preset)),
+        &DeviceConfig::default(),
+        EngineConfig { max_batch, seed, track_activation: false },
+    )
+}
+
+#[test]
+fn prop_no_request_starves_and_token_bookkeeping_conserves() {
+    let mut prop = Prop::new("scheduler_no_starvation");
+    prop.run(25, |rng| {
+        let n = 1 + rng.below(24);
+        let cap = 1 + rng.below(6);
+        let mut gen = RequestGenerator::new(
+            WorkloadProfile::text(),
+            rng.next_u64(),
+        );
+        let mut reqs: Vec<Request> = (0..n)
+            .map(|_| {
+                let prompt = 1 + rng.below(64);
+                let output = 1 + rng.below(16);
+                let arrival = rng.range_f64(0.0, 5.0);
+                gen.request(prompt, output, arrival)
+            })
+            .collect();
+        // admission order must not depend on the input order
+        rng.shuffle(&mut reqs);
+
+        let total_out: u64 = reqs.iter().map(|r| r.output_len as u64).sum();
+        let total_in: u64 = reqs.iter().map(|r| r.prompt_len as u64).sum();
+        // TPOP counts inter-token gaps from the second generated token on
+        let tpop_expected: usize =
+            reqs.iter().map(|r| r.output_len - 1).sum();
+        let last_arrival =
+            reqs.iter().map(|r| r.arrival_s).fold(0.0, f64::max);
+
+        let mut e = engine(cap, rng.next_u64());
+        e.serve_with(&mut ContinuousBatch::default(), reqs);
+
+        // liveness: every admitted request retired with a recorded E2E
+        // (a starved request would leave the loop spinning or the counts
+        // short)
+        assert_eq!(e.metrics.e2e.count(), n, "cap {cap}: requests starved");
+        assert_eq!(e.metrics.ttft.count(), n);
+        // conservation: exactly the offered tokens were prefilled/decoded
+        assert_eq!(e.metrics.decode_tokens, total_out);
+        assert_eq!(e.metrics.prefill_tokens, total_in);
+        assert_eq!(e.metrics.tpop.count(), tpop_expected);
+        // the run cannot finish before the last arrival was served
+        assert!(e.metrics.duration_s >= last_arrival);
+        // latency sanity: measured from arrival, never negative
+        assert!(e.metrics.ttft.samples().iter().all(|&x| x >= 0.0));
+        assert!(e.metrics.e2e.samples().iter().all(|&x| x >= 0.0));
+        assert!(e.metrics.tpop.samples().iter().all(|&x| x >= 0.0));
+    });
+}
+
+#[test]
+fn prop_tight_caps_only_delay_never_drop() {
+    // The same request set under shrinking caps: token totals are
+    // invariant, only latency moves (and only upward at the tail).
+    let mut prop = Prop::new("scheduler_cap_invariance");
+    prop.run(10, |rng| {
+        let n = 4 + rng.below(12);
+        let seed = rng.next_u64();
+        let serve = |cap: usize| {
+            let mut gen =
+                RequestGenerator::new(WorkloadProfile::text(), seed);
+            let reqs: Vec<Request> = (0..n)
+                .map(|i| gen.request(16, 4, i as f64 * 0.02))
+                .collect();
+            let mut e = engine(cap, seed ^ 1);
+            e.serve_with(&mut ContinuousBatch::default(), reqs);
+            (
+                e.metrics.decode_tokens,
+                e.metrics.prefill_tokens,
+                e.metrics.ttft.max(),
+            )
+        };
+        let (out_wide, in_wide, ttft_wide) = serve(8);
+        let (out_tight, in_tight, ttft_tight) = serve(1);
+        assert_eq!(out_wide, out_tight);
+        assert_eq!(in_wide, in_tight);
+        assert!(
+            ttft_tight >= ttft_wide,
+            "cap 1 tail {ttft_tight} < cap 8 tail {ttft_wide}"
+        );
+    });
+}
+
+#[test]
+fn zero_cap_is_treated_as_one() {
+    // A zero cap could never admit anything; the scheduler clamps to 1.
+    let mut gen = RequestGenerator::new(WorkloadProfile::text(), 2);
+    let reqs: Vec<Request> =
+        (0..3).map(|i| gen.request(8, 2, i as f64 * 0.1)).collect();
+    let mut e = engine(4, 9);
+    e.serve_with(&mut ContinuousBatch { max_batch: Some(0) }, reqs);
+    assert_eq!(e.metrics.e2e.count(), 3);
+    assert_eq!(e.metrics.decode_tokens, 6);
+}

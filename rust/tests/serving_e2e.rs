@@ -3,13 +3,14 @@
 //! engine (not just in unit-scale fixtures).
 
 use dynaexq::experiments::helpers::{engine, warm};
-use dynaexq::experiments::latency::run_config;
+use dynaexq::experiments::latency::{run_config, run_config_seeded};
+use dynaexq::util::XorShiftRng;
 use dynaexq::workload::WorkloadProfile;
 
 #[test]
 fn all_models_all_methods_serve() {
     for model in ["qwen30b-sim", "qwen80b-sim", "phi-sim"] {
-        for method in ["static", "dynaexq", "expertflow"] {
+        for method in ["static", "dynaexq", "expertflow", "dynaexq-sharded"] {
             let mut e = engine(model, method, "text", 1, false).unwrap();
             e.serve_uniform(&WorkloadProfile::text(), 2, 32, 4);
             assert_eq!(e.metrics.e2e.count(), 2, "{model}/{method}");
@@ -21,19 +22,30 @@ fn all_models_all_methods_serve() {
 #[test]
 fn headline_throughput_ratio_in_band() {
     // Paper: DynaExq achieves 1.42×–2.73× over ExpertFlow at batch 32.
-    // The modeled testbed should land in a comparable winners-and-factors
-    // band (allow slack: this is a simulator, not their A6000).
-    let dy = run_config("qwen30b-sim", "dynaexq", 32, 256, 32, true)
+    // The workload RNG seed is pinned through `util::rng` (not the
+    // sampler's default state), and the engine syncs staging at iteration
+    // boundaries, so the whole run derives from this one seed — the band
+    // can be tight on both sides instead of a loose one-sided floor.
+    let seed = XorShiftRng::new(0xE2E_5EED).next_u64();
+    let dy = run_config_seeded("qwen30b-sim", "dynaexq", 32, 256, 32, true, seed)
         .unwrap()
         .throughput();
-    let ef = run_config("qwen30b-sim", "expertflow", 32, 256, 32, true)
-        .unwrap()
-        .throughput();
+    let ef =
+        run_config_seeded("qwen30b-sim", "expertflow", 32, 256, 32, true, seed)
+            .unwrap()
+            .throughput();
     let ratio = dy / ef;
     assert!(
-        ratio > 1.2,
-        "DynaExq must clearly beat ExpertFlow at batch 32 (got {ratio:.2}x)"
+        (1.25..25.0).contains(&ratio),
+        "DynaExq/ExpertFlow at batch 32 out of band (got {ratio:.2}x)"
     );
+    // the determinism the tightened band rests on: an identical seeded run
+    // reproduces the exact same floats
+    let dy2 =
+        run_config_seeded("qwen30b-sim", "dynaexq", 32, 256, 32, true, seed)
+            .unwrap()
+            .throughput();
+    assert_eq!(dy, dy2, "seeded runs must be byte-stable");
 }
 
 #[test]

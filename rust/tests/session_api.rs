@@ -9,7 +9,7 @@ use dynaexq::workload::{RequestGenerator, WorkloadProfile};
 use dynaexq::ServeSession;
 
 #[test]
-fn registry_lists_all_eight_methods_plus_counting() {
+fn registry_lists_all_ten_methods_plus_counting() {
     let r = BackendRegistry::with_builtins();
     let methods = r.methods();
     for m in [
@@ -19,13 +19,15 @@ fn registry_lists_all_eight_methods_plus_counting() {
         "static-map",
         "dynaexq",
         "dynaexq-3tier",
+        "dynaexq-sharded",
+        "dynaexq-3tier-sharded",
         "expertflow",
         "hobbit",
         "counting",
     ] {
         assert!(methods.contains(&m), "registry missing {m}");
     }
-    assert_eq!(methods.len(), 9);
+    assert_eq!(methods.len(), 11);
 }
 
 #[test]

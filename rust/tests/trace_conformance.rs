@@ -1,0 +1,136 @@
+//! Trace-replay conformance: record a `DXTR` trace from the modeled
+//! engine, replay it through every registry backend (1- and 2-device
+//! groups), and assert the replayed `MetricsSnapshot`s are byte-stable
+//! across two replays of the same trace — the determinism golden test
+//! behind `dynaexq trace --replay`.
+//!
+//! The recorded trace is persisted to `target/conformance_trace.dxtr`; CI
+//! uploads it as a build artifact so conformance regressions are diffable.
+
+use dynaexq::config::{DeviceConfig, ModelPreset, ServingConfig};
+use dynaexq::serving::backend::{RecordingBackend, StaticBackend};
+use dynaexq::serving::engine::{Engine, EngineConfig};
+use dynaexq::serving::registry::{BackendCtx, BackendRegistry};
+use dynaexq::serving::session::MetricsSnapshot;
+use dynaexq::workload::{Trace, WorkloadProfile};
+
+/// Capture a trace from a real modeled-engine run (not synthesized): the
+/// recording backend observes exactly the routing batches and iteration
+/// boundaries the engine produced.
+fn recorded_trace(preset: &ModelPreset) -> Trace {
+    let (backend, handle) = RecordingBackend::wrap(
+        Box::new(StaticBackend::for_preset(preset)),
+        preset.n_layers_logical(),
+        preset.n_experts,
+    );
+    let w = WorkloadProfile::text();
+    let mut e = Engine::new(
+        preset,
+        &w,
+        Box::new(backend),
+        &DeviceConfig::default(),
+        EngineConfig { max_batch: 8, seed: 0xDC, track_activation: false },
+    );
+    e.serve_uniform(&w, 4, 24, 16);
+    e.serve_uniform(&w, 2, 16, 8);
+    let trace = handle.lock().unwrap().clone();
+    trace
+}
+
+fn replay_snapshot(
+    registry: &BackendRegistry,
+    trace: &Trace,
+    preset: &ModelPreset,
+    method: &str,
+    devices: usize,
+) -> MetricsSnapshot {
+    let cfg = ServingConfig::default();
+    let dev = DeviceConfig::default();
+    let w = WorkloadProfile::text();
+    let mut b = registry
+        .build(
+            method,
+            &BackendCtx::new(preset, &cfg, &dev)
+                .with_profile(&w)
+                .with_devices(devices),
+        )
+        .unwrap_or_else(|e| panic!("build {method}@{devices}dev: {e}"));
+    let end = trace.replay(b.as_mut(), 0.01);
+    MetricsSnapshot::from_replay(preset.name, method, "text", b.as_ref(), end)
+}
+
+#[test]
+fn every_backend_replays_byte_stable_on_one_and_two_device_groups() {
+    let preset = ModelPreset::phi_sim();
+    let trace = recorded_trace(&preset);
+    assert!(trace.selections() > 0, "engine produced routing traffic");
+
+    // Persist as the CI artifact and exercise the binary roundtrip on the
+    // way: the replayed trace is the *loaded* one, as in the CLI path.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("target");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("conformance_trace.dxtr");
+    trace.save(&path).unwrap();
+    let trace = Trace::load(&path).unwrap();
+    trace
+        .check_matches(preset.n_layers_logical(), preset.n_experts)
+        .unwrap();
+
+    let registry = BackendRegistry::with_builtins();
+    assert!(
+        registry.methods().len() >= 10,
+        "conformance covers all 10+ methods: {:?}",
+        registry.methods()
+    );
+    for method in registry.methods() {
+        for devices in [1usize, 2] {
+            let a = replay_snapshot(&registry, &trace, &preset, method, devices);
+            let b = replay_snapshot(&registry, &trace, &preset, method, devices);
+            assert_eq!(
+                a.encode(),
+                b.encode(),
+                "{method}@{devices}dev: replay must be byte-stable"
+            );
+            // the encoding itself round-trips losslessly
+            assert_eq!(MetricsSnapshot::decode(&a.encode()).unwrap(), a);
+        }
+    }
+}
+
+#[test]
+fn replay_drives_adaptive_backends() {
+    // Conformance is only meaningful if the replay actually exercises the
+    // residency machinery: the coordinator methods must migrate bytes.
+    let preset = ModelPreset::phi_sim();
+    let trace = recorded_trace(&preset);
+    let registry = BackendRegistry::with_builtins();
+    for (method, devices) in
+        [("dynaexq", 1), ("dynaexq-sharded", 2), ("dynaexq-3tier-sharded", 2)]
+    {
+        let snap = replay_snapshot(&registry, &trace, &preset, method, devices);
+        assert!(
+            snap.migrated_bytes > 0,
+            "{method}@{devices}dev: replay should trigger promotions"
+        );
+        let layers = preset.n_layers_logical();
+        assert_eq!(
+            snap.tier_resident.iter().sum::<usize>(),
+            layers * preset.n_experts,
+            "{method}: every expert accounted at exactly one rung"
+        );
+        if devices > 1 {
+            assert_eq!(snap.device_resident.len(), devices, "{method}");
+        }
+    }
+}
+
+#[test]
+fn replay_rejects_a_mismatched_preset() {
+    let trace = recorded_trace(&ModelPreset::phi_sim());
+    let q = ModelPreset::qwen30b_sim();
+    let err = trace
+        .check_matches(q.n_layers_logical(), q.n_experts)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("does not match"), "{err}");
+}
