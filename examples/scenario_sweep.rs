@@ -1,0 +1,80 @@
+//! Scenario sweep: every canned workload scenario served by the fixed-α
+//! coordinator and the drift-aware adaptive one, side by side (modeled
+//! engine, qwen30b-sim at paper scale — DESIGN.md §10).
+//!
+//! ## The scenario DSL
+//!
+//! A `Scenario` is a named script of phases; each phase pins a routing
+//! distribution (`WorkloadProfile`, possibly a `.rotated(frac)` or
+//! `.flash_crowd()` derivation), a round count, and a load multiplier:
+//!
+//! ```ignore
+//! let sc = Scenario::named("my-shift")
+//!     .phase("warm", WorkloadProfile::text(), 4)
+//!     .phase_loaded("rush", WorkloadProfile::text().flash_crowd(), 2, 2.0)
+//!     .phase("cool", WorkloadProfile::code(), 4);
+//! session.run_scenario(&sc, 8, 128, 16)?;   // → per-phase snapshots
+//! ```
+//!
+//! The canned library (`Scenario::by_name`) scripts the six regimes the
+//! invariant suite pins down: `steady` (stationary Zipf), `swap` (hard
+//! hot-set swap onto a disjoint head), `rotation` (gradual permutation
+//! drift), `burst` (flash crowd on a few head experts), `multi-tenant`
+//! (interleaved text/math/code), and `diurnal` (load ramp). Scenarios
+//! compose with `.then(other)` and also drive `Engine::run_scenario`,
+//! `Scenario::synthesize_trace` (DXTR recording), and
+//! `dynaexq serve --scenario <name>`.
+//!
+//! ```bash
+//! cargo run --release --example scenario_sweep
+//! ```
+
+use dynaexq::bench::Table;
+use dynaexq::{Scenario, ServeSession};
+
+fn main() -> anyhow::Result<()> {
+    let mut table = Table::new(&[
+        "scenario",
+        "method",
+        "drift events",
+        "recovery ticks",
+        "hi-tier traffic %",
+        "migrated GB",
+        "tok/s (modeled)",
+    ]);
+    for name in Scenario::names() {
+        let sc = Scenario::by_name(name).expect("canned scenario");
+        for method in ["dynaexq", "dynaexq-adaptive"] {
+            let mut s = ServeSession::builder()
+                .model("qwen30b-sim")
+                .method(method)
+                .workload("text")
+                .seed(23)
+                .warmup(1)
+                .build()?;
+            s.run_scenario(&sc, 8, 128, 16)?;
+            let snap = s.snapshot();
+            table.row(&[
+                name.to_string(),
+                method.to_string(),
+                format!("{}", snap.drift_events),
+                format!("{}", snap.drift_recovery_ticks),
+                format!("{:.1}", snap.hi_fraction * 100.0),
+                format!("{:.2}", snap.migrated_bytes as f64 / 1e9),
+                format!("{:.0}", snap.throughput_tok_s),
+            ]);
+        }
+    }
+    println!(
+        "== scenario sweep: fixed-α vs drift-aware hotness across every \
+         canned scenario (qwen30b-sim) ==\n{}",
+        table.render()
+    );
+    println!(
+        "(the adaptive method should stay silent under `steady` — zero \
+         change-points, identical residency — and fire under `swap`/`burst`, \
+         where the dropped α and stale-score rescale pull the resident \
+         top-n onto the new hot set within bounded update intervals.)"
+    );
+    Ok(())
+}

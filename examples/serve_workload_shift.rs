@@ -5,6 +5,14 @@
 //! workload shift, and report quality, residency adaptation, and
 //! latency/throughput (modeled A6000-scale timing alongside wall-clock).
 //!
+//! The shift script is expressed as a `workload::Scenario` (DESIGN.md
+//! §10): one phase per workload, each held for `ROUNDS_PER_WORKLOAD`
+//! rounds — the same hard-swap phases the scenario-matrix suite pins
+//! down, driven here through the *numeric* engine. Output is
+//! byte-identical to the pre-scenario version of this example (same
+//! profiles, same order, same per-phase RNG seeding), which is the
+//! regression check for the migration.
+//!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_workload_shift
 //! ```
@@ -19,7 +27,7 @@ use dynaexq::runtime::Runtime;
 use dynaexq::serving::numeric::{NumericEngine, SeqState};
 use dynaexq::util::XorShiftRng;
 use dynaexq::workload::WorkloadProfile;
-use dynaexq::{BackendCtx, BackendRegistry};
+use dynaexq::{BackendCtx, BackendRegistry, Scenario};
 
 const PROMPT_LEN: usize = 48;
 const OUTPUT_LEN: usize = 16;
@@ -56,13 +64,22 @@ fn main() -> anyhow::Result<()> {
         .map_err(anyhow::Error::msg)?;
     let mut engine = NumericEngine::new(rt, weights, backend)?;
 
+    // The text → math → code shift as a scripted scenario: each hard swap
+    // is a phase boundary (the two-phase `Scenario::swap` generalized to
+    // the full three-workload tour).
+    let mut scenario = Scenario::named("workload-shift");
+    for w in WorkloadProfile::all() {
+        scenario = scenario.phase(w.name, w, ROUNDS_PER_WORKLOAD);
+    }
+
     let mut tag = 0u64;
     let wall0 = Instant::now();
     let mut total_tokens = 0usize;
-    for workload in WorkloadProfile::all() {
+    for phase in &scenario.phases {
+        let workload = &phase.profile;
         println!("-- workload {} --", workload.name);
         let mut rng = XorShiftRng::new(workload.seed);
-        for round in 0..ROUNDS_PER_WORKLOAD {
+        for round in 0..phase.rounds {
             let model_t0 = engine.now();
             let wall_t0 = Instant::now();
             // batched prefill

@@ -154,6 +154,77 @@ impl ModelPreset {
     }
 }
 
+/// Drift-detection / adaptive-α parameters (DESIGN.md §10): a windowed
+/// change-point detector over the per-layer routing distribution that, on
+/// a trigger, temporarily drops the EMA α and rescales stale scores so
+/// the waterfill re-converges to the new hot set in bounded intervals.
+#[derive(Clone, Debug)]
+pub struct DriftConfig {
+    /// Update intervals per comparison window (consecutive windows are
+    /// compared at each boundary).
+    pub window: u64,
+    /// Base total-variation distance a window pair must exceed to
+    /// trigger, on top of the sampling-noise floor.
+    pub threshold: f64,
+    /// Noise-floor coefficient: the effective threshold is
+    /// `threshold + noise_coeff · sqrt(E / min(window counts))`, so a
+    /// steady workload never triggers on sampling noise alone.
+    pub noise_coeff: f64,
+    /// The dropped (reactive) EMA α used while recovering from a trigger.
+    pub alpha: f64,
+    /// Update intervals the dropped α stays in effect after a trigger.
+    pub recovery_intervals: u64,
+    /// Multiplier applied to all smoothed scores at the trigger instant —
+    /// stale hotness must not outvote the post-drift traffic.
+    pub stale_decay: f64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        Self {
+            window: 3,
+            threshold: 0.25,
+            noise_coeff: 2.0,
+            alpha: 0.1,
+            recovery_intervals: 4,
+            stale_decay: 0.25,
+        }
+    }
+}
+
+impl DriftConfig {
+    /// Validate parameter ranges. The adaptive coordinator surfaces these
+    /// as construction errors, like every other infeasible config.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.window < 1 {
+            return Err("drift.window must be at least 1 interval".into());
+        }
+        if self.recovery_intervals < 1 {
+            return Err(
+                "drift.recovery_intervals must be at least 1 (a trigger \
+                 without reactive intervals only decays scores)"
+                    .into(),
+            );
+        }
+        if !(0.0..1.0).contains(&self.alpha) {
+            return Err(format!("drift.alpha {} outside [0, 1)", self.alpha));
+        }
+        if !(0.0..=1.0).contains(&self.stale_decay) {
+            return Err(format!(
+                "drift.stale_decay {} outside [0, 1]",
+                self.stale_decay
+            ));
+        }
+        if self.threshold < 0.0 || self.noise_coeff < 0.0 {
+            return Err(
+                "drift.threshold and drift.noise_coeff must be non-negative"
+                    .into(),
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Policy + mechanism parameters of the DynaExq control loop (§3).
 #[derive(Clone, Debug)]
 pub struct ServingConfig {
@@ -181,6 +252,13 @@ pub struct ServingConfig {
     pub blocking_transitions: bool,
     /// Pool block granularity in bytes (ablation A4).
     pub pool_block_bytes: usize,
+    /// Enable the drift-aware hotness layer (the `dynaexq-adaptive`
+    /// registry method; off by default so the classic fixed-α stack stays
+    /// byte-identical).
+    pub adaptive_alpha: bool,
+    /// Change-point detector parameters (consulted only when
+    /// `adaptive_alpha` is set).
+    pub drift: DriftConfig,
 }
 
 impl Default for ServingConfig {
@@ -197,6 +275,8 @@ impl Default for ServingConfig {
             blocking_transitions: false,
             pool_block_bytes: 0, // 0 → derived from expert size
             n_hi_override: None,
+            adaptive_alpha: false,
+            drift: DriftConfig::default(),
         }
     }
 }
@@ -283,6 +363,30 @@ mod tests {
         assert_eq!(ModelPreset::qwen30b_sim().router_key(), "e128k8");
         assert_eq!(ModelPreset::qwen80b_sim().router_key(), "e512k10");
         assert_eq!(ModelPreset::phi_sim().router_key(), "e16k2");
+    }
+
+    #[test]
+    fn drift_defaults_sane_and_off() {
+        let cfg = ServingConfig::default();
+        assert!(!cfg.adaptive_alpha, "adaptive layer must default off");
+        let d = &cfg.drift;
+        assert!(d.window >= 1);
+        assert!((0.0..1.0).contains(&d.threshold));
+        assert!(d.noise_coeff >= 0.0);
+        assert!((0.0..1.0).contains(&d.alpha));
+        assert!(d.alpha < cfg.ema_alpha, "recovery α must be more reactive");
+        assert!((0.0..=1.0).contains(&d.stale_decay));
+        assert!(d.recovery_intervals >= 1);
+        assert!(d.validate().is_ok());
+        let mut bad = d.clone();
+        bad.window = 0;
+        assert!(bad.validate().unwrap_err().contains("drift.window"));
+        let mut bad = d.clone();
+        bad.alpha = 1.0;
+        assert!(bad.validate().is_err());
+        let mut bad = d.clone();
+        bad.recovery_intervals = 0;
+        assert!(bad.validate().unwrap_err().contains("recovery_intervals"));
     }
 
     #[test]

@@ -164,8 +164,18 @@ impl DeviceGroup {
             agg.demotions_submitted += r.demotions_submitted;
             agg.deferred += r.deferred;
             agg.published += r.published;
+            agg.drift_detected |= r.drift_detected;
         }
         agg
+    }
+
+    /// `(change-point triggers, recovery intervals)` summed across every
+    /// device's adaptive hotness layer; `(0, 0)` with `adaptive_alpha` off.
+    pub fn drift_stats(&self) -> (u64, u64) {
+        self.devices.iter().fold((0, 0), |(e, r), c| {
+            let (de, dr) = c.drift_stats();
+            (e + de, r + dr)
+        })
     }
 
     /// Publish finished transitions on every device; returns the total

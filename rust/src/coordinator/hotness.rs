@@ -1,4 +1,4 @@
-//! Hotness estimation (§3.5).
+//! Hotness estimation (§3.5) and drift detection (DESIGN.md §10).
 //!
 //! Per-(layer, expert) counters accumulate router selections during the
 //! current update interval `T_u`; at each interval boundary a smoothed score
@@ -6,6 +6,16 @@
 //! `S ← α·S + (1−α)·c` and the counters reset. Time-based intervals keep
 //! the estimate stable under varying batch composition and prompt lengths.
 //! Only router outputs are used — no labels, no quality signals.
+//!
+//! A fixed α trades steady-state stability against post-shift reactivity.
+//! The [`DriftDetector`] resolves that trade-off: it watches the
+//! per-layer routing *distribution* over consecutive interval windows and,
+//! when the total-variation distance between windows exceeds the
+//! sensitivity floor (a change-point), the coordinator temporarily drops
+//! α and rescales the stale scores — reactive exactly while the hot set is
+//! moving, smooth the rest of the time.
+
+use crate::config::DriftConfig;
 
 /// EMA hotness estimator over all experts of all layers.
 #[derive(Debug, Clone)]
@@ -63,6 +73,44 @@ impl HotnessEstimator {
         &self.scores[layer * self.n_experts..(layer + 1) * self.n_experts]
     }
 
+    /// Raw in-interval counts of one layer (drift detection reads these
+    /// *before* [`HotnessEstimator::end_interval`] folds and resets them).
+    pub fn layer_counts(&self, layer: usize) -> &[u64] {
+        &self.counts[layer * self.n_experts..(layer + 1) * self.n_experts]
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.scores.len() / self.n_experts
+    }
+
+    /// Whether the current interval recorded no traffic at all (drift
+    /// detection and the recovery budget treat idle intervals as
+    /// invisible).
+    pub fn interval_idle(&self) -> bool {
+        self.counts.iter().all(|&c| c == 0)
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Retune the smoothing factor (the adaptive layer drops α while
+    /// recovering from a detected drift and restores it afterwards).
+    pub fn set_alpha(&mut self, alpha: f64) {
+        assert!((0.0..1.0).contains(&alpha), "alpha must be in [0,1)");
+        self.alpha = alpha;
+    }
+
+    /// Uniformly rescale all smoothed scores (stale-score decay at a
+    /// drift trigger: shrinks pre-drift hotness below one interval's worth
+    /// of fresh traffic without disturbing relative order).
+    pub fn scale_scores(&mut self, factor: f64) {
+        assert!(factor >= 0.0);
+        for s in &mut self.scores {
+            *s *= factor;
+        }
+    }
+
     /// Raw in-interval count (diagnostics).
     pub fn raw_count(&self, layer: usize, expert: usize) -> u64 {
         self.counts[layer * self.n_experts + expert]
@@ -85,6 +133,175 @@ impl HotnessEstimator {
         });
         idx.truncate(n);
         idx
+    }
+}
+
+/// Sliding-window change-point detector over the per-layer routing
+/// distribution.
+///
+/// A ring buffer keeps the last `2·window` update intervals' raw counts.
+/// Every interval (once the ring is full) the trailing `window` intervals
+/// are compared, per layer, against the `window` intervals before them by
+/// total-variation distance; a layer whose TV exceeds
+/// `threshold + noise_coeff·sqrt(E / min(N))` (the second term floors out
+/// sampling noise — TV between two samples of the *same* distribution
+/// concentrates below `~0.6·sqrt(E/N)`) marks a drift event. The windows
+/// slide one interval at a time, so a hard swap is guaranteed a fully
+/// disjoint trailing-vs-prior comparison within `window` intervals (of
+/// traffic) — a tumbling window would dilute a mid-window swap across
+/// both sides. Idle intervals never enter the ring: they neither trigger
+/// nor age the windows, so a swap on the far side of a lull is still
+/// compared against the last pre-lull traffic. A trigger restarts
+/// accumulation (the detector re-learns the new regime before it may
+/// fire again) and hands out `recovery_intervals` reactive intervals
+/// through [`DriftDetector::recovery_step`]; the caller runs its EMA at
+/// the dropped α for exactly those intervals.
+#[derive(Debug, Clone)]
+pub struct DriftDetector {
+    n_experts: usize,
+    cfg: DriftConfig,
+    /// Ring of the last `2·window` intervals' counts: `ring[slot][layer]`
+    /// is one interval's per-expert count vector.
+    ring: Vec<Vec<Vec<u64>>>,
+    /// Next ring slot to overwrite.
+    head: usize,
+    /// Intervals accumulated since (re)start, saturating at `2·window`.
+    filled: usize,
+    /// Scratch: per-layer window sums (reused across intervals so the
+    /// comparison is allocation-free).
+    trailing: Vec<u64>,
+    prior: Vec<u64>,
+    recovery_left: u64,
+    drift_events: u64,
+    recovery_ticks: u64,
+}
+
+impl DriftDetector {
+    pub fn new(n_layers: usize, n_experts: usize, cfg: &DriftConfig) -> Self {
+        assert!(cfg.window >= 1, "drift window must be at least 1 interval");
+        assert!((0.0..1.0).contains(&cfg.alpha));
+        assert!((0.0..=1.0).contains(&cfg.stale_decay));
+        let slots = 2 * cfg.window as usize;
+        Self {
+            n_experts,
+            cfg: cfg.clone(),
+            ring: vec![vec![vec![0; n_experts]; n_layers]; slots],
+            head: 0,
+            filled: 0,
+            trailing: vec![0; n_experts],
+            prior: vec![0; n_experts],
+            recovery_left: 0,
+            drift_events: 0,
+            recovery_ticks: 0,
+        }
+    }
+
+    /// Feed one update interval's raw counts (call before the EMA fold
+    /// resets them). Returns `true` when the trailing window's
+    /// distribution broke from the window before it — a change-point.
+    pub fn observe(&mut self, hot: &HotnessEstimator) -> bool {
+        let slots = self.ring.len();
+        debug_assert_eq!(hot.n_layers(), self.ring[0].len());
+        // Idle intervals are invisible: an empty interval neither enters
+        // the ring nor ages the windows, so a hot-set swap straddling a
+        // traffic lull still gets compared against pre-lull windows
+        // instead of vanishing into zero-count slots.
+        if hot.interval_idle() {
+            return false;
+        }
+        for (l, row) in self.ring[self.head].iter_mut().enumerate() {
+            row.copy_from_slice(hot.layer_counts(l));
+        }
+        self.head = (self.head + 1) % slots;
+        self.filled = (self.filled + 1).min(slots);
+        if self.filled < slots {
+            return false;
+        }
+        let drifted = self.windows_diverged();
+        if drifted {
+            self.drift_events += 1;
+            self.recovery_left = self.cfg.recovery_intervals;
+            // restart: re-learn the new regime before firing again
+            self.filled = 0;
+        }
+        drifted
+    }
+
+    /// Compare the trailing `window` ring slots against the `window`
+    /// slots before them, per layer.
+    fn windows_diverged(&mut self) -> bool {
+        let slots = self.ring.len();
+        let w = self.cfg.window as usize;
+        let n_layers = self.ring[0].len();
+        let n_experts = self.n_experts;
+        let (threshold, noise_coeff) =
+            (self.cfg.threshold, self.cfg.noise_coeff);
+        // slot ages: head-1 is the newest interval, head the oldest
+        let head = self.head;
+        let slot_at = move |age: usize| (head + slots - 1 - age) % slots;
+        let Self { ring, trailing, prior, .. } = self;
+        for layer in 0..n_layers {
+            trailing.fill(0);
+            prior.fill(0);
+            for age in 0..w {
+                let (ts, ps) = (slot_at(age), slot_at(w + age));
+                for e in 0..n_experts {
+                    trailing[e] += ring[ts][layer][e];
+                    prior[e] += ring[ps][layer][e];
+                }
+            }
+            let cur_total: u64 = trailing.iter().sum();
+            let ref_total: u64 = prior.iter().sum();
+            if cur_total == 0 || ref_total == 0 {
+                continue;
+            }
+            let mut tv = 0.0;
+            for (&c, &r) in trailing.iter().zip(prior.iter()) {
+                tv += (c as f64 / cur_total as f64
+                    - r as f64 / ref_total as f64)
+                    .abs();
+            }
+            let tv = tv / 2.0;
+            let floor = noise_coeff
+                * (n_experts as f64 / ref_total.min(cur_total) as f64)
+                    .sqrt();
+            if tv > threshold + floor {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Whether the EMA should run at the dropped (reactive) α this
+    /// interval; consumes one recovery tick when it does.
+    pub fn recovery_step(&mut self) -> bool {
+        if self.recovery_left > 0 {
+            self.recovery_left -= 1;
+            self.recovery_ticks += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Change-point triggers so far.
+    pub fn drift_events(&self) -> u64 {
+        self.drift_events
+    }
+
+    /// Total update intervals spent at the dropped α.
+    pub fn recovery_ticks(&self) -> u64 {
+        self.recovery_ticks
+    }
+
+    /// The configured reactive α.
+    pub fn recovery_alpha(&self) -> f64 {
+        self.cfg.alpha
+    }
+
+    /// The configured stale-score decay applied at a trigger.
+    pub fn stale_decay(&self) -> f64 {
+        self.cfg.stale_decay
     }
 }
 
@@ -144,6 +361,166 @@ mod tests {
             assert!(
                 (s - c as f64).abs() < 1e-6 + c as f64 * alpha.powi(150),
                 "alpha={alpha} c={c} s={s}"
+            );
+        });
+    }
+
+    /// Zipf-weighted deterministic traffic over an explicit expert set:
+    /// rank r of `set` gets `reps/(r+1) + 1` selections.
+    fn record_zipf_set(
+        h: &mut HotnessEstimator,
+        layer: usize,
+        set: &[usize],
+        reps: usize,
+    ) {
+        for (rank, &e) in set.iter().enumerate() {
+            for _ in 0..reps / (rank + 1) + 1 {
+                h.record(layer, e);
+            }
+        }
+    }
+
+    #[test]
+    fn detector_recovery_budget_is_exact() {
+        let cfg = crate::config::DriftConfig {
+            window: 1,
+            recovery_intervals: 3,
+            ..Default::default()
+        };
+        let mut h = HotnessEstimator::new(1, 8, 0.8);
+        let mut det = DriftDetector::new(1, 8, &cfg);
+        // two steady windows on {0,1}, then a hard swap to {4,5}
+        for _ in 0..2 {
+            record_zipf_set(&mut h, 0, &[0, 1], 100);
+            assert!(!det.observe(&h));
+            assert!(!det.recovery_step());
+            h.end_interval();
+        }
+        record_zipf_set(&mut h, 0, &[4, 5], 100);
+        assert!(det.observe(&h), "disjoint swap must trigger");
+        h.end_interval();
+        assert_eq!(det.drift_events(), 1);
+        // exactly `recovery_intervals` reactive steps, then back to normal
+        for _ in 0..3 {
+            assert!(det.recovery_step());
+        }
+        assert!(!det.recovery_step());
+        assert_eq!(det.recovery_ticks(), 3);
+    }
+
+    #[test]
+    fn detector_sees_through_idle_gaps() {
+        let cfg = crate::config::DriftConfig {
+            window: 1,
+            ..Default::default()
+        };
+        let mut h = HotnessEstimator::new(1, 8, 0.5);
+        let mut det = DriftDetector::new(1, 8, &cfg);
+        record_zipf_set(&mut h, 0, &[0, 1], 50);
+        assert!(!det.observe(&h), "no reference window yet");
+        h.end_interval();
+        record_zipf_set(&mut h, 0, &[0, 1], 50);
+        assert!(!det.observe(&h), "steady traffic");
+        h.end_interval();
+        // a traffic lull neither triggers nor ages the windows
+        for _ in 0..5 {
+            assert!(!det.observe(&h));
+            h.end_interval();
+        }
+        // the hard swap on the far side of the lull is still detected:
+        // trailing traffic compares against the last pre-lull window
+        record_zipf_set(&mut h, 0, &[4, 5], 50);
+        assert!(det.observe(&h), "post-lull swap must trigger");
+        assert_eq!(det.drift_events(), 1);
+    }
+
+    #[test]
+    fn prop_drift_no_false_trigger_on_steady_zipf() {
+        // Satellite property: seeded steady Zipf traffic never trips the
+        // default sensitivity, across randomized (α, window, E) configs.
+        use crate::workload::{RoutingSampler, WorkloadProfile};
+        let mut prop = Prop::new("drift_no_false_trigger");
+        prop.run(12, |rng| {
+            let n_experts = [16usize, 64, 128, 256][rng.below(4)];
+            let top_k = 8.min(n_experts / 2);
+            let n_layers = 1 + rng.below(2);
+            let alpha = rng.range_f64(0.0, 0.95);
+            let mut dcfg = crate::config::DriftConfig::default();
+            dcfg.window = 1 + rng.below(4) as u64;
+            let profile = match rng.below(3) {
+                0 => WorkloadProfile::text(),
+                1 => WorkloadProfile::math(),
+                _ => WorkloadProfile::code(),
+            };
+            let sampler =
+                RoutingSampler::new(&profile, n_layers, n_experts, top_k);
+            let mut h = HotnessEstimator::new(n_layers, n_experts, alpha);
+            let mut det = DriftDetector::new(n_layers, n_experts, &dcfg);
+            for interval in 0..30u64 {
+                for l in 0..n_layers {
+                    for tok in 0..16u64 {
+                        let picks = sampler.sample_topk(
+                            rng,
+                            interval * 31 + tok / 4,
+                            l,
+                        );
+                        h.record_layer(l, &picks);
+                    }
+                }
+                det.observe(&h);
+                h.end_interval();
+            }
+            assert_eq!(
+                det.drift_events(),
+                0,
+                "false trigger: E={n_experts} window={} α={alpha}",
+                dcfg.window
+            );
+        });
+    }
+
+    #[test]
+    fn prop_drift_detects_hard_swap_within_bound() {
+        // Satellite property: a hard hot-set swap (disjoint supports) is
+        // detected within 2·window + 1 update intervals, across randomized
+        // (α, window, E) configurations — the bounded-reconvergence
+        // contract's detection half.
+        let mut prop = Prop::new("drift_detects_swap");
+        prop.run(12, |rng| {
+            let n_experts = [16usize, 32, 64, 128][rng.below(4)];
+            let alpha = rng.range_f64(0.0, 0.95);
+            let mut dcfg = crate::config::DriftConfig::default();
+            dcfg.window = 1 + rng.below(4) as u64;
+            let hot_a: Vec<usize> = (0..4).collect();
+            let hot_b: Vec<usize> = (n_experts / 2..n_experts / 2 + 4).collect();
+            // enough traffic that the noise floor sits well under a
+            // disjoint-support swap's TV of ~1
+            let reps = 10 * n_experts;
+            let mut h = HotnessEstimator::new(1, n_experts, alpha);
+            let mut det = DriftDetector::new(1, n_experts, &dcfg);
+            // converge on A long enough to fill several windows
+            for _ in 0..3 * dcfg.window {
+                record_zipf_set(&mut h, 0, &hot_a, reps);
+                assert!(!det.observe(&h), "steady phase must not trigger");
+                h.end_interval();
+            }
+            // swap to B; the change-point must fire within 2·window + 1
+            let mut detected_at = None;
+            for i in 1..=2 * dcfg.window + 1 {
+                record_zipf_set(&mut h, 0, &hot_b, reps);
+                if det.observe(&h) {
+                    detected_at = Some(i);
+                    h.end_interval();
+                    break;
+                }
+                h.end_interval();
+            }
+            assert!(
+                detected_at.is_some(),
+                "swap undetected after {} intervals (E={n_experts}, \
+                 window={})",
+                2 * dcfg.window + 1,
+                dcfg.window
             );
         });
     }

@@ -28,7 +28,7 @@ use std::sync::Arc;
 
 pub use budget::{BudgetPlan, BudgetTracker};
 pub use group::DeviceGroup;
-pub use hotness::HotnessEstimator;
+pub use hotness::{DriftDetector, HotnessEstimator};
 pub use pipeline::{Admission, StageFn, TransitionKind, TransitionPipeline};
 pub use policy::{plan_layer, plan_layer_ladder, LadderPlan, LayerPlan};
 pub use pools::{BlockPool, PoolAlloc};
@@ -46,6 +46,9 @@ pub struct UpdateReport {
     pub demotions_submitted: usize,
     pub deferred: usize,
     pub published: usize,
+    /// The drift-aware hotness layer fired a change-point this update
+    /// (always false without `ServingConfig::adaptive_alpha`).
+    pub drift_detected: bool,
 }
 
 /// The runtime-side of DynaExq for one model.
@@ -59,6 +62,9 @@ pub struct Coordinator {
     pub pools: Vec<Arc<BlockPool>>,
     pub pipeline: TransitionPipeline,
     hotness: std::sync::Mutex<HotnessEstimator>,
+    /// Change-point detector of the adaptive-α mode (`None` when
+    /// `cfg.adaptive_alpha` is off — the classic fixed-α stack).
+    drift: std::sync::Mutex<Option<DriftDetector>>,
     next_update_s: std::sync::Mutex<f64>,
 }
 
@@ -84,6 +90,11 @@ impl Coordinator {
     ) -> Result<Self, String> {
         let dims = LogicalDims::for_preset(preset);
         let plan = Self::derive_logical_plan(preset, &dims, cfg)?;
+        if cfg.adaptive_alpha {
+            cfg.drift
+                .validate()
+                .map_err(|e| format!("adaptive hotness: {e}"))?;
+        }
         let ladder = preset.ladder.clone();
         let base = ladder.base_tier();
         let handles = Arc::new(HandleTable::new(
@@ -160,6 +171,11 @@ impl Coordinator {
                 preset.n_experts,
                 cfg.ema_alpha,
             )),
+            drift: std::sync::Mutex::new(if cfg.adaptive_alpha {
+                Some(DriftDetector::new(layers, preset.n_experts, &cfg.drift))
+            } else {
+                None
+            }),
             next_update_s: std::sync::Mutex::new(
                 cfg.update_interval_ms / 1e3,
             ),
@@ -232,6 +248,30 @@ impl Coordinator {
         report.ran = true;
 
         let mut hot = self.hotness.lock().unwrap();
+        // Drift-aware α (DESIGN.md §10): the detector reads this
+        // interval's raw counts before the fold; on a change-point the
+        // stale scores shrink and the EMA runs at the reactive α for the
+        // configured recovery span. Off (the default) this block is
+        // skipped entirely and behaviour is byte-identical to the classic
+        // fixed-α stack.
+        if let Some(det) = self.drift.lock().unwrap().as_mut() {
+            let idle = hot.interval_idle();
+            // (observe() is itself a no-op on an idle interval)
+            if det.observe(&hot) {
+                report.drift_detected = true;
+                hot.scale_scores(det.stale_decay());
+            }
+            // The recovery budget spans intervals *of traffic*: an idle
+            // interval neither consumes reactive intervals nor folds at
+            // the dropped α (which would collapse the score table far
+            // faster than the classic stack's decay during a lull).
+            let alpha = if !idle && det.recovery_step() {
+                det.recovery_alpha()
+            } else {
+                self.cfg.ema_alpha
+            };
+            hot.set_alpha(alpha);
+        }
         hot.end_interval();
         let layers = self.preset.n_layers_logical();
         // Effective assignment: the published rung from the lock-free
@@ -283,6 +323,17 @@ impl Coordinator {
     /// Top-n hottest experts of a layer (diagnostics/benches).
     pub fn hottest(&self, layer: usize, n: usize) -> Vec<usize> {
         self.hotness.lock().unwrap().top_n(layer, n)
+    }
+
+    /// `(change-point triggers, recovery intervals)` observed by the
+    /// adaptive hotness layer; `(0, 0)` with `adaptive_alpha` off.
+    pub fn drift_stats(&self) -> (u64, u64) {
+        self.drift
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|d| (d.drift_events(), d.recovery_ticks()))
+            .unwrap_or((0, 0))
     }
 }
 
@@ -385,6 +436,148 @@ mod tests {
         assert_eq!(c.resolve(0, 0), Precision::Int4);
         assert_eq!(c.resolve(0, 1), Precision::Int4);
         assert!(c.budget.within_envelope());
+    }
+
+    #[test]
+    fn fixed_alpha_stack_reports_no_drift() {
+        let c = coord(ModelPreset::phi_sim());
+        for _ in 0..100 {
+            c.record_routing(0, &[0, 1]);
+        }
+        c.tick(1.0);
+        c.tick(2.0);
+        assert_eq!(c.drift_stats(), (0, 0));
+    }
+
+    #[test]
+    fn adaptive_coordinator_detects_swap_and_recovers_alpha() {
+        let mut cfg = ServingConfig::default();
+        cfg.adaptive_alpha = true;
+        cfg.ema_alpha = 0.95; // sluggish baseline the detector rescues
+        cfg.update_interval_ms = 1.0;
+        cfg.drift.window = 2;
+        let preset = ModelPreset::phi_sim().executed_scale();
+        let c = Coordinator::new(&preset, &cfg, &DeviceConfig::default())
+            .unwrap();
+        let mut now = 0.0;
+        // steady phase on {0,1}: windows fill, nothing triggers
+        for _ in 0..8 {
+            for _ in 0..60 {
+                c.record_routing(0, &[0, 1]);
+            }
+            now += 0.0011;
+            let r = c.tick(now);
+            assert!(!r.drift_detected);
+        }
+        assert_eq!(c.drift_stats().0, 0);
+        // hard swap to {8,9}: a change-point fires within 2 windows + 1
+        let mut fired = false;
+        for _ in 0..(2 * cfg.drift.window + 1) {
+            for _ in 0..60 {
+                c.record_routing(0, &[8, 9]);
+            }
+            now += 0.0011;
+            fired |= c.tick(now).drift_detected;
+            if fired {
+                break;
+            }
+        }
+        assert!(fired, "swap must trigger the change-point");
+        let (events, _) = c.drift_stats();
+        assert_eq!(events, 1);
+        // recovery ticks accrue while the dropped α is in effect
+        for _ in 0..cfg.drift.recovery_intervals {
+            for _ in 0..60 {
+                c.record_routing(0, &[8, 9]);
+            }
+            now += 0.0011;
+            c.tick(now);
+        }
+        let (_, recovery) = c.drift_stats();
+        assert!(
+            recovery >= cfg.drift.recovery_intervals,
+            "recovery ticks {recovery} < span {}",
+            cfg.drift.recovery_intervals
+        );
+        // steady traffic on the new hot set: no further triggers, and the
+        // recovery budget stops growing once it is spent
+        for _ in 0..6 {
+            for _ in 0..60 {
+                c.record_routing(0, &[8, 9]);
+            }
+            now += 0.0011;
+            c.tick(now);
+        }
+        let (events2, recovery2) = c.drift_stats();
+        assert_eq!(events2, 1, "steady post-swap traffic must not re-fire");
+        assert_eq!(recovery2, events2 * cfg.drift.recovery_intervals);
+        assert!(c.budget.within_envelope());
+    }
+
+    #[test]
+    fn recovery_budget_survives_idle_intervals() {
+        // The reactive budget spans intervals of traffic: a lull right
+        // after a trigger must neither drain it nor decay scores at the
+        // dropped α (lull-invisibility contract, DESIGN.md §10).
+        let mut cfg = ServingConfig::default();
+        cfg.adaptive_alpha = true;
+        cfg.update_interval_ms = 1.0;
+        cfg.drift.window = 1;
+        let preset = ModelPreset::phi_sim().executed_scale();
+        let c = Coordinator::new(&preset, &cfg, &DeviceConfig::default())
+            .unwrap();
+        let mut now = 0.0;
+        let drive = |c: &Coordinator, now: &mut f64, hot: Option<&[usize]>| {
+            if let Some(h) = hot {
+                for _ in 0..200 {
+                    c.record_routing(0, h);
+                }
+            }
+            *now += 0.0011;
+            c.tick(*now)
+        };
+        // steady on {0,1}, then swap to {8,9} → change-point
+        for _ in 0..3 {
+            drive(&c, &mut now, Some(&[0, 1]));
+        }
+        let mut fired = false;
+        for _ in 0..3 {
+            fired |= drive(&c, &mut now, Some(&[8, 9])).drift_detected;
+        }
+        assert!(fired, "swap must trigger");
+        let (_, ticks_before) = c.drift_stats();
+        assert!(ticks_before < cfg.drift.recovery_intervals, "budget left");
+        // a long lull: no recovery ticks consumed, and scores decay at
+        // the classic α, not the dropped one
+        let s_before = c.hotness_score(0, 8);
+        for _ in 0..6 {
+            drive(&c, &mut now, None);
+        }
+        let (_, ticks_after) = c.drift_stats();
+        assert_eq!(ticks_before, ticks_after, "lull drained the budget");
+        let expected = s_before * cfg.ema_alpha.powi(6);
+        let s_after = c.hotness_score(0, 8);
+        assert!(
+            (s_after - expected).abs() < 1e-9 * expected.max(1.0),
+            "lull decayed at the wrong α: {s_after} vs {expected}"
+        );
+        // traffic resumes: the remaining reactive budget applies now
+        drive(&c, &mut now, Some(&[8, 9]));
+        assert!(c.drift_stats().1 > ticks_after);
+    }
+
+    #[test]
+    fn invalid_drift_config_refused() {
+        let mut cfg = ServingConfig::default();
+        cfg.adaptive_alpha = true;
+        cfg.drift.window = 0;
+        let dev = DeviceConfig::default();
+        let err = Coordinator::new(&ModelPreset::phi_sim(), &cfg, &dev)
+            .unwrap_err();
+        assert!(err.contains("drift.window"), "{err}");
+        // the same degenerate values are inert with the layer off
+        cfg.adaptive_alpha = false;
+        assert!(Coordinator::new(&ModelPreset::phi_sim(), &cfg, &dev).is_ok());
     }
 
     #[test]

@@ -497,9 +497,77 @@ pub fn a9_sharding(fast: bool) -> Result<String> {
     ))
 }
 
+/// A10: adaptive (drift-aware) vs fixed-α hotness under each scripted
+/// scenario (DESIGN.md §10).
+///
+/// The drift layer should be a strict superset in behaviour: silent under
+/// `steady` (no change-points, no extra churn) and reactive under `swap` /
+/// `burst`, where the change-point drops α and rescales stale scores so
+/// the waterfill re-converges in bounded update intervals. The drift
+/// events / recovery-ticks columns are the numbers CI archives as the
+/// drift-recovery report.
+pub fn a10_adaptive_drift(fast: bool) -> Result<String> {
+    let (prompt, output) = if fast { (64, 8) } else { (128, 16) };
+    let mut t = Table::new(&[
+        "scenario",
+        "method",
+        "drift events",
+        "recovery ticks",
+        "hi-tier %",
+        "migrated GB",
+        "tok/s",
+    ]);
+    for sc_name in ["steady", "swap", "rotation", "burst"] {
+        let sc = crate::experiments::helpers::scenario(sc_name)?;
+        for method in ["dynaexq", "dynaexq-adaptive"] {
+            let mut s = ServeSession::builder()
+                .model("qwen30b-sim")
+                .method(method)
+                .workload("text")
+                .seed(0xA10)
+                .warmup(1)
+                .build()?;
+            s.run_scenario(&sc, 8, prompt, output)?;
+            let snap = s.snapshot();
+            t.row(&[
+                sc_name.to_string(),
+                method.to_string(),
+                format!("{}", snap.drift_events),
+                format!("{}", snap.drift_recovery_ticks),
+                format!("{:.1}", snap.hi_fraction * 100.0),
+                format!("{:.2}", snap.migrated_bytes as f64 / 1e9),
+                format!("{:.0}", snap.throughput_tok_s),
+            ]);
+        }
+    }
+    Ok(format!(
+        "== A10: drift-aware (adaptive α) vs fixed-α hotness across \
+         scripted workload scenarios (qwen30b-sim) ==\n{}",
+        t.render()
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn adaptive_drift_ablation_covers_scenarios_and_methods() {
+        let report = a10_adaptive_drift(true).unwrap();
+        for sc in ["steady", "swap", "rotation", "burst"] {
+            assert!(report.contains(sc), "missing scenario {sc}: {report}");
+        }
+        assert!(report.contains("dynaexq-adaptive"), "{report}");
+        // the fixed-α rows never report drift events
+        for line in report.lines().filter(|l| {
+            l.contains("dynaexq ") && !l.contains("adaptive")
+        }) {
+            let cols: Vec<&str> = line.split_whitespace().collect();
+            if let Some(i) = cols.iter().position(|c| *c == "dynaexq") {
+                assert_eq!(cols[i + 1], "0", "fixed-α drift column: {line}");
+            }
+        }
+    }
 
     #[test]
     fn sharding_ablation_covers_group_widths() {

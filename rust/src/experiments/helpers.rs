@@ -12,7 +12,7 @@ use crate::serving::backend::ResidencyBackend;
 use crate::serving::engine::{Engine, EngineConfig};
 use crate::serving::registry::{BackendCtx, BackendRegistry};
 use crate::serving::session::ServeSession;
-use crate::workload::WorkloadProfile;
+use crate::workload::{Scenario, WorkloadProfile};
 
 /// Methods compared across the paper's performance experiments (every
 /// batch-sweep figure runs each of these; the registry knows more — e.g.
@@ -31,6 +31,15 @@ pub fn preset(model: &str) -> Result<ModelPreset> {
 pub fn profile(workload: &str) -> Result<WorkloadProfile> {
     WorkloadProfile::by_name(workload)
         .ok_or_else(|| anyhow!("unknown workload {workload:?}"))
+}
+
+pub fn scenario(name: &str) -> Result<Scenario> {
+    Scenario::by_name(name).ok_or_else(|| {
+        anyhow!(
+            "unknown scenario {name:?}; known scenarios: {}",
+            Scenario::names().join(", ")
+        )
+    })
 }
 
 /// Build a residency backend for a method name (registry lookup). Pass the
@@ -176,6 +185,13 @@ mod tests {
             e.serve_uniform(&WorkloadProfile::text(), 2, 16, 2);
             assert_eq!(e.metrics.e2e.count(), 2, "{m}");
         }
+    }
+
+    #[test]
+    fn scenario_lookup_enumerates_known() {
+        assert_eq!(scenario("swap").unwrap().phases.len(), 2);
+        let err = scenario("nope").unwrap_err().to_string();
+        assert!(err.contains("steady") && err.contains("diurnal"), "{err}");
     }
 
     #[test]

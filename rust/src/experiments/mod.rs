@@ -60,6 +60,45 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let seed = args.get_parse::<u64>("seed").unwrap_or(0xC0FFEE);
     let warmup = args.get_parse::<usize>("warmup").unwrap_or(2);
     let devices = args.get_parse::<usize>("devices").unwrap_or(1);
+    if let Some(sc_name) = args.get("scenario") {
+        // Scripted-scenario serving (DESIGN.md §10): the scenario's phase
+        // script supplies the workloads and round counts (`--workload` and
+        // `--rounds` are ignored); per-phase boundary snapshots print as a
+        // timeline, kv-encoded under --kv.
+        let sc = helpers::scenario(sc_name)?;
+        let mut session = crate::serving::session::ServeSession::builder()
+            .model(model)
+            .method(method)
+            .seed(seed)
+            .warmup(warmup)
+            .devices(devices)
+            .build()?;
+        println!(
+            "model {model} | method {method} | scenario {sc_name} \
+             ({} phases, {} rounds) | batch {batch} prompt {prompt} \
+             output {output}",
+            sc.phases.len(),
+            sc.total_rounds(),
+        );
+        let marks = session.run_scenario(&sc, batch, prompt, output)?;
+        for (phase, snap) in &marks {
+            println!(
+                "phase {phase:<12} workload {:<5} | hi-tier {:>5.1}% | \
+                 migrated {:>6.2} GB | drift {}x/{} ticks | {:>6.0} tok/s",
+                snap.workload,
+                snap.hi_fraction * 100.0,
+                snap.migrated_bytes as f64 / 1e9,
+                snap.drift_events,
+                snap.drift_recovery_ticks,
+                snap.throughput_tok_s,
+            );
+            if args.has("kv") {
+                println!("{}", snap.encode());
+            }
+        }
+        println!("{}", session.report());
+        return Ok(());
+    }
     let (session, report) = helpers::serve_session_with(
         model, method, workload, batch, prompt, output, rounds, seed, warmup,
         devices,
@@ -98,6 +137,7 @@ pub fn cmd_report(args: &Args) -> Result<()> {
             "a7" => ablations::a7_load_sweep(fast)?,
             "a8" => ablations::a8_tier_count(fast)?,
             "a9" => ablations::a9_sharding(fast)?,
+            "a10" => ablations::a10_adaptive_drift(fast)?,
             other => bail!("unknown experiment {other:?}"),
         })
     };
@@ -109,6 +149,7 @@ pub fn cmd_report(args: &Args) -> Result<()> {
         for id in [
             "t1", "t2", "f1", "f2", "f3", "t4", "f6", "f7", "f8", "f9",
             "f10", "a1", "a2", "a3", "a4", "a5", "a6", "a7", "a8", "a9",
+            "a10",
         ] {
             if !numeric && matches!(id, "f3" | "t4" | "a5") {
                 println!(
@@ -144,27 +185,50 @@ pub fn cmd_quality(args: &Args) -> Result<()> {
 pub fn cmd_trace(args: &Args) -> Result<()> {
     let model = args.get_or("model", "qwen30b-sim");
     let workload = args.get_or("workload", "text");
-    let iters = args.get_parse::<usize>("iters").unwrap_or(500);
+    // One parse of --iters; it means total iterations (default 500), or
+    // iterations per scenario round under `--record --scenario` (default
+    // 8 — canned scenarios span tens of rounds).
+    let iters_flag = args.get_parse::<usize>("iters");
+    let iters = iters_flag.unwrap_or(500);
 
     if let Some(path) = args.get("record") {
         // Synthesize + persist a router trace for offline experiments.
+        // `--scenario <name>` records a scripted multi-phase scenario
+        // instead of one stationary workload (`--iters` then counts
+        // iterations per scenario round).
         let p = helpers::preset(model)?;
-        let w = helpers::profile(workload)?;
         let batch = args.get_parse::<usize>("batch").unwrap_or(8);
-        let trace = crate::workload::traces::synthesize(
-            &w,
-            p.n_layers_logical(),
-            p.n_experts,
-            p.top_k,
-            batch,
-            iters,
-            args.get_parse::<u64>("seed").unwrap_or(1),
-        );
+        let seed = args.get_parse::<u64>("seed").unwrap_or(1);
+        let (trace, what) = if let Some(sc_name) = args.get("scenario") {
+            let sc = helpers::scenario(sc_name)?;
+            let iters_per_round = iters_flag.unwrap_or(8);
+            let t = sc.synthesize_trace(
+                p.n_layers_logical(),
+                p.n_experts,
+                p.top_k,
+                batch,
+                iters_per_round,
+                seed,
+            );
+            let total = sc.total_rounds() * iters_per_round;
+            (t, format!("scenario {sc_name} ({total} iterations)"))
+        } else {
+            let w = helpers::profile(workload)?;
+            let t = crate::workload::traces::synthesize(
+                &w,
+                p.n_layers_logical(),
+                p.n_experts,
+                p.top_k,
+                batch,
+                iters,
+                seed,
+            );
+            (t, format!("workload {workload} ({iters} iterations)"))
+        };
         trace.save(std::path::Path::new(path))?;
         println!(
-            "recorded {} selections over {} iterations to {path}",
-            trace.selections(),
-            iters
+            "recorded {} selections from {what} to {path}",
+            trace.selections()
         );
         return Ok(());
     }

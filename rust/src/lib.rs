@@ -58,3 +58,4 @@ pub use serving::engine::Engine;
 pub use serving::numeric::NumericEngine;
 pub use serving::registry::{BackendCtx, BackendRegistry};
 pub use serving::session::{MetricsSnapshot, ServeSession, SessionBuilder};
+pub use workload::{Scenario, ScenarioPhase};

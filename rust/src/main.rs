@@ -22,11 +22,14 @@ SUBCOMMANDS:
     serve    Run a modeled serving session (SessionBuilder API).
                --model qwen30b-sim|qwen30b-3tier|qwen80b-sim|phi-sim
                                                          (default qwen30b-sim)
-               --method dynaexq|dynaexq-3tier|dynaexq-sharded|
-                        dynaexq-3tier-sharded|static|static-hi|fp16|
-                        static-map|expertflow|hobbit|counting
+               --method dynaexq|dynaexq-adaptive|dynaexq-3tier|
+                        dynaexq-sharded|dynaexq-3tier-sharded|static|
+                        static-hi|fp16|static-map|expertflow|hobbit|counting
                                                          (default dynaexq)
                --workload text|math|code                 (default text)
+               --scenario steady|swap|rotation|burst|multi-tenant|diurnal
+                          (scripted multi-phase workload; overrides
+                           --workload/--rounds, prints per-phase timeline)
                --batch N (default 8)  --prompt N (default 512)
                --output N (default 64) --rounds N (default 4)
                --seed S --warmup N (default 2)
@@ -34,7 +37,7 @@ SUBCOMMANDS:
                             expert-sharded group with per-device envelopes)
                --kv   (also print the machine-readable metrics snapshot)
     report   Regenerate a paper table/figure.
-               --exp t1|t2|t4|f1|f2|f3|f6..f10|a1..a9|all  [--fast]
+               --exp t1|t2|t4|f1|f2|f3|f6..f10|a1..a10|all  [--fast]
     quality  Numeric quality run (real PJRT execution; needs a build with
              --features numeric).
                --model ... --method fp16|static|dynaexq
@@ -42,6 +45,9 @@ SUBCOMMANDS:
     trace    Router traces: statistics, recording, replay.
                --model ... --workload ... --iters N
                --record out.dxtr [--batch B --seed S]
+                 [--scenario <name>]  (record a scripted scenario; --iters
+                                      then counts iterations per round and
+                                      defaults to 8 instead of 500)
                --replay in.dxtr [--method <any registered method>]
                  [--devices N]  (header must match the model's shape)
     help     This text.

@@ -88,6 +88,20 @@ pub trait ResidencyBackend: Send {
         Vec::new()
     }
 
+    /// `(change-point triggers, recovery intervals)` of the drift-aware
+    /// hotness layer (DESIGN.md §10); `(0, 0)` for backends without one.
+    fn drift_stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
+
+    /// Whether every device's residency accounting currently fits inside
+    /// its HBM envelope slice — the C1 standing invariant the scenario
+    /// matrix asserts at every phase boundary. Trivially true for
+    /// backends without a budget tracker.
+    fn within_envelope(&self) -> bool {
+        true
+    }
+
     /// Block until host-side staging of every submitted transition is done
     /// (no-op for backends without a staging worker). The engine and the
     /// trace replayer call this at iteration boundaries *before*
@@ -218,6 +232,14 @@ impl ResidencyBackend for DynaExqBackend {
 
     fn promo_queue_depth(&self) -> Vec<usize> {
         vec![self.coord.pipeline.inflight_count()]
+    }
+
+    fn drift_stats(&self) -> (u64, u64) {
+        self.coord.drift_stats()
+    }
+
+    fn within_envelope(&self) -> bool {
+        self.coord.budget.within_envelope()
     }
 
     fn sync_staging(&mut self) {
@@ -356,6 +378,14 @@ impl ResidencyBackend for DynaExqShardedBackend {
         self.group.inflight_depths()
     }
 
+    fn drift_stats(&self) -> (u64, u64) {
+        self.group.drift_stats()
+    }
+
+    fn within_envelope(&self) -> bool {
+        self.group.within_envelope()
+    }
+
     fn sync_staging(&mut self) {
         self.group.wait_staged();
     }
@@ -449,6 +479,14 @@ impl ResidencyBackend for RecordingBackend {
 
     fn promo_queue_depth(&self) -> Vec<usize> {
         self.inner.promo_queue_depth()
+    }
+
+    fn drift_stats(&self) -> (u64, u64) {
+        self.inner.drift_stats()
+    }
+
+    fn within_envelope(&self) -> bool {
+        self.inner.within_envelope()
     }
 
     fn sync_staging(&mut self) {

@@ -13,7 +13,9 @@ use crate::config::{DeviceConfig, ModelPreset};
 use crate::metrics::ServingMetrics;
 use crate::sim::{Clock, CostModel, Stream};
 use crate::util::XorShiftRng;
-use crate::workload::{Request, RoutingSampler, WorkloadProfile};
+use crate::workload::{
+    Request, RoutingSampler, Scenario, ScenarioPhase, WorkloadProfile,
+};
 
 use super::backend::ResidencyBackend;
 use super::scheduler::{ClosedBatch, ContinuousBatch, Scheduler};
@@ -375,6 +377,39 @@ impl Engine {
         self.serve_batch(reqs);
     }
 
+    /// Serve one scripted scenario phase: switch to its routing
+    /// distribution and run `phase.rounds` closed batches at the
+    /// load-scaled batch size. Backend state carries across phases — the
+    /// boundary miscalibration is what scenarios measure.
+    pub fn run_phase(
+        &mut self,
+        phase: &ScenarioPhase,
+        batch: usize,
+        prompt_len: usize,
+        output_len: usize,
+    ) {
+        self.set_profile(&phase.profile);
+        let b = Scenario::scaled_batch(batch, phase.load);
+        for _ in 0..phase.rounds {
+            self.serve_uniform(&phase.profile, b, prompt_len, output_len);
+        }
+    }
+
+    /// Drive a whole [`Scenario`] (DESIGN.md §10) phase by phase. Callers
+    /// needing phase-boundary hooks (the scenario-matrix invariant suite)
+    /// iterate [`Engine::run_phase`] themselves.
+    pub fn run_scenario(
+        &mut self,
+        scenario: &Scenario,
+        batch: usize,
+        prompt_len: usize,
+        output_len: usize,
+    ) {
+        for phase in &scenario.phases {
+            self.run_phase(phase, batch, prompt_len, output_len);
+        }
+    }
+
     /// Open-loop continuous batching: requests arrive over time
     /// (`arrival_s` honored); new arrivals are prefilled and join the
     /// decode batch as soon as a slot under `max_batch` frees up. Decode
@@ -517,6 +552,43 @@ mod tests {
             two < one,
             "2-device group must finish sooner: {two} vs {one}"
         );
+    }
+
+    #[test]
+    fn steady_scenario_byte_identical_to_uniform_rounds() {
+        // Acceptance anchor: the steady scenario on the classic 2-rung /
+        // 1-device stack is *exactly* the historical serve_uniform loop —
+        // same modeled clock, same metrics, same residency trajectory.
+        let preset = ModelPreset::qwen30b_sim();
+        let profile = WorkloadProfile::text();
+        let cfg = ServingConfig::default();
+        let build = || {
+            let backend =
+                DynaExqBackend::new(&preset, &cfg, &DeviceConfig::default())
+                    .unwrap();
+            Engine::new(
+                &preset,
+                &profile,
+                Box::new(backend),
+                &DeviceConfig::default(),
+                EngineConfig { max_batch: 8, seed: 5, track_activation: true },
+            )
+        };
+        let sc = crate::workload::Scenario::steady();
+        let mut via_scenario = build();
+        via_scenario.run_scenario(&sc, 4, 32, 8);
+        let mut via_rounds = build();
+        for _ in 0..sc.total_rounds() {
+            via_rounds.serve_uniform(&profile, 4, 32, 8);
+        }
+        let (s, r) = (&via_scenario, &via_rounds);
+        assert_eq!(s.metrics.duration_s, r.metrics.duration_s);
+        assert_eq!(s.metrics.ttft.avg(), r.metrics.ttft.avg());
+        assert_eq!(s.metrics.e2e.p99(), r.metrics.e2e.p99());
+        assert_eq!(s.metrics.decode_tokens, r.metrics.decode_tokens);
+        assert_eq!(s.backend.migrated_bytes(), r.backend.migrated_bytes());
+        assert_eq!(s.backend.tier_residency(), r.backend.tier_residency());
+        assert_eq!(s.backend.hi_fraction(), r.backend.hi_fraction());
     }
 
     #[test]

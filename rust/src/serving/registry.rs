@@ -14,6 +14,8 @@
 //! | name                    | behaviour                                              |
 //! |-------------------------|--------------------------------------------------------|
 //! | `dynaexq`               | coordinator-driven online precision allocation (§3)    |
+//! | `dynaexq-adaptive`      | same coordinator with the drift-aware hotness layer    |
+//! |                         | (change-point → dropped α; sharded when `n_devices`>1) |
 //! | `dynaexq-3tier`         | same coordinator over the full Fp16/Int4/Int2 ladder   |
 //! | `dynaexq-sharded`       | coordinator sharded across a device group (per-device  |
 //! |                         | envelopes; device count from `BackendCtx::n_devices`)  |
@@ -132,6 +134,27 @@ impl BackendRegistry {
         });
         r.register("dynaexq", |ctx| {
             Ok(Box::new(DynaExqBackend::new(ctx.preset, ctx.cfg, ctx.dev)?))
+        });
+        r.register("dynaexq-adaptive", |ctx| {
+            // The same coordinator stack with the drift-aware hotness
+            // layer switched on (DESIGN.md §10): a change-point on the
+            // per-layer routing distribution temporarily drops the EMA α
+            // and rescales stale scores, so the waterfill re-converges to
+            // a shifted hot set in bounded update intervals. Honors
+            // `ctx.n_devices` — a wider context serves the adaptive
+            // coordinator per device of a sharded group.
+            let mut cfg = ctx.cfg.clone();
+            cfg.adaptive_alpha = true;
+            if ctx.n_devices > 1 {
+                Ok(Box::new(DynaExqShardedBackend::new(
+                    ctx.preset,
+                    &cfg,
+                    ctx.dev,
+                    ctx.n_devices,
+                )?))
+            } else {
+                Ok(Box::new(DynaExqBackend::new(ctx.preset, &cfg, ctx.dev)?))
+            }
         });
         r.register("dynaexq-3tier", |ctx| {
             // The same coordinator over the full three-rung ladder: warm
@@ -288,11 +311,55 @@ mod tests {
     fn builds_every_builtin() {
         let (p, cfg, dev) = ctx_parts();
         let r = BackendRegistry::with_builtins();
-        assert_eq!(r.methods().len(), 11);
+        assert_eq!(r.methods().len(), 12);
         for m in r.methods() {
             let b = r.build(m, &BackendCtx::new(&p, &cfg, &dev)).unwrap();
             assert!(!b.name().is_empty(), "{m}");
         }
+    }
+
+    #[test]
+    fn adaptive_method_enables_drift_layer_at_any_width() {
+        let (p, cfg, dev) = ctx_parts();
+        let r = BackendRegistry::with_builtins();
+        // 1-device: plain coordinator with the detector armed — drift
+        // stats start at zero but the change-point machinery is live
+        let mut b = r
+            .build("dynaexq-adaptive", &BackendCtx::new(&p, &cfg, &dev))
+            .unwrap();
+        assert_eq!(b.n_devices(), 1);
+        assert_eq!(b.drift_stats(), (0, 0));
+        assert!(b.within_envelope());
+        // a hard swap across update intervals must register a trigger
+        let mut now = 0.0;
+        for _ in 0..8 {
+            for _ in 0..60 {
+                b.record_routing(0, &[0, 1]);
+            }
+            now += 1.0;
+            b.tick(now);
+        }
+        for _ in 0..8 {
+            for _ in 0..60 {
+                b.record_routing(0, &[8, 9]);
+            }
+            now += 1.0;
+            b.tick(now);
+        }
+        assert!(b.drift_stats().0 >= 1, "swap must fire the change-point");
+        // sharded: the adaptive coordinator runs per device
+        let b2 = r
+            .build(
+                "dynaexq-adaptive",
+                &BackendCtx::new(&p, &cfg, &dev).with_devices(2),
+            )
+            .unwrap();
+        assert_eq!(b2.n_devices(), 2);
+        assert_eq!(b2.drift_stats(), (0, 0));
+        // the fixed-α method never reports drift
+        let plain =
+            r.build("dynaexq", &BackendCtx::new(&p, &cfg, &dev)).unwrap();
+        assert_eq!(plain.drift_stats(), (0, 0));
     }
 
     #[test]

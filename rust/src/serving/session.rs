@@ -22,7 +22,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::config::{kv, DeviceConfig, ModelPreset, ServingConfig};
 use crate::metrics::ServingMetrics;
-use crate::workload::{Request, WorkloadProfile};
+use crate::workload::{Request, Scenario, WorkloadProfile};
 
 use super::backend::ResidencyBackend;
 use super::engine::{ActivationStats, Engine, EngineConfig};
@@ -278,6 +278,12 @@ pub struct MetricsSnapshot {
     /// promotion-queue depth (empty without a transition pipeline).
     /// Encoded `a|b`.
     pub promo_queue_depth: Vec<usize>,
+    /// Change-point triggers observed by the drift-aware hotness layer
+    /// (0 for fixed-α methods — DESIGN.md §10).
+    pub drift_events: u64,
+    /// Update intervals spent at the dropped (reactive) α recovering from
+    /// those triggers.
+    pub drift_recovery_ticks: u64,
 }
 
 impl MetricsSnapshot {
@@ -305,7 +311,8 @@ impl MetricsSnapshot {
              wait_p99_s={};throughput_tok_s={};decode_tokens={};\
              prefill_tokens={};duration_s={};hi_fraction={};\
              migrated_bytes={};act_prefill={};act_decode={};\
-             tier_resident={};device_resident={};promo_queue_depth={}",
+             tier_resident={};device_resident={};promo_queue_depth={};\
+             drift_events={};drift_recovery_ticks={}",
             self.model,
             self.method,
             self.workload,
@@ -335,6 +342,8 @@ impl MetricsSnapshot {
                 .map(|n| n.to_string())
                 .collect::<Vec<_>>()
                 .join("|"),
+            self.drift_events,
+            self.drift_recovery_ticks,
         )
     }
 
@@ -410,6 +419,8 @@ impl MetricsSnapshot {
                     })
                     .collect::<Result<Vec<usize>>>()?
             },
+            drift_events: num(&m, "drift_events")?,
+            drift_recovery_ticks: num(&m, "drift_recovery_ticks")?,
         })
     }
 
@@ -424,6 +435,7 @@ impl MetricsSnapshot {
         backend: &dyn super::backend::ResidencyBackend,
         end_s: f64,
     ) -> Self {
+        let (drift_events, drift_recovery_ticks) = backend.drift_stats();
         Self {
             model: model.into(),
             method: method.into(),
@@ -434,6 +446,8 @@ impl MetricsSnapshot {
             tier_resident: backend.tier_residency(),
             device_resident: backend.device_residency(),
             promo_queue_depth: backend.promo_queue_depth(),
+            drift_events,
+            drift_recovery_ticks,
             ..Self::default()
         }
     }
@@ -494,6 +508,33 @@ impl ServeSession {
         Ok(self.inner.metrics())
     }
 
+    /// Drive a scripted [`Scenario`] (DESIGN.md §10): each phase switches
+    /// the live routing distribution and serves `phase.rounds` closed
+    /// batches at the phase's load-scaled batch size. Returns one
+    /// `(phase name, cumulative snapshot)` per phase boundary — the
+    /// scenario-matrix suite asserts its standing invariants on exactly
+    /// these boundaries. The backend keeps all state across phases: the
+    /// miscalibration at each boundary is what the scenario measures.
+    pub fn run_scenario(
+        &mut self,
+        scenario: &Scenario,
+        batch: usize,
+        prompt_len: usize,
+        output_len: usize,
+    ) -> Result<Vec<(String, MetricsSnapshot)>> {
+        let mut marks = Vec::with_capacity(scenario.phases.len());
+        for phase in &scenario.phases {
+            self.inner.set_profile(&phase.profile);
+            self.workload = phase.profile.name.to_string();
+            let b = Scenario::scaled_batch(batch, phase.load);
+            for _ in 0..phase.rounds {
+                self.inner.serve_closed(b, prompt_len, output_len)?;
+            }
+            marks.push((phase.name.clone(), self.snapshot()));
+        }
+        Ok(marks)
+    }
+
     /// Switch the live workload (shift experiments). The method keeps any
     /// state it built on the old workload — that miscalibration is exactly
     /// what the shift experiments measure.
@@ -533,6 +574,7 @@ impl ServeSession {
             Some(a) => (a.prefill_avg(), a.decode_avg()),
             None => (0.0, 0.0),
         };
+        let (drift_events, drift_recovery_ticks) = b.drift_stats();
         MetricsSnapshot {
             model: self.model.clone(),
             method: self.method.clone(),
@@ -555,6 +597,8 @@ impl ServeSession {
             tier_resident: b.tier_residency(),
             device_resident: b.device_residency(),
             promo_queue_depth: b.promo_queue_depth(),
+            drift_events,
+            drift_recovery_ticks,
         }
     }
 
@@ -581,9 +625,17 @@ impl ServeSession {
         } else {
             String::new()
         };
+        let drift = if s.drift_events > 0 {
+            format!(
+                " | drift {}x ({} recovery ticks)",
+                s.drift_events, s.drift_recovery_ticks
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{}\nactivation: prefill {:.1}% decode {:.1}% | hi-tier {:.1}% \
-             | migrated {:.2} GB | wait p99 {:.4}s{tiers}{devices}",
+             | migrated {:.2} GB | wait p99 {:.4}s{tiers}{devices}{drift}",
             self.inner.metrics().summary(),
             s.act_prefill * 100.0,
             s.act_decode * 100.0,
@@ -857,6 +909,8 @@ mod tests {
             tier_resident: vec![12, 34, 466],
             device_resident: vec![vec![6, 17, 233], vec![6, 17, 233]],
             promo_queue_depth: vec![3, 0],
+            drift_events: 5,
+            drift_recovery_ticks: 20,
         };
         let decoded = MetricsSnapshot::decode(&s.encode()).unwrap();
         assert_eq!(decoded, s);
@@ -871,6 +925,64 @@ mod tests {
     #[test]
     fn snapshot_decode_rejects_missing_keys() {
         assert!(MetricsSnapshot::decode("model=x;method=y").is_err());
+        // dropping any single key — including the drift fields — must be
+        // a decode error, never a silent default
+        let full = MetricsSnapshot::default().encode();
+        for key in full.split(';').map(|kv| kv.split('=').next().unwrap()) {
+            let without: String = full
+                .split(';')
+                .filter(|kv| !kv.starts_with(&format!("{key}=")))
+                .collect::<Vec<_>>()
+                .join(";");
+            assert!(
+                MetricsSnapshot::decode(&without).is_err(),
+                "decode must reject a snapshot missing {key:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_snapshot_roundtrips_randomized_encodings() {
+        // The wire format can't silently rot: random field values —
+        // including the `a|b|c` tier list, the `a|b/c|d` per-device
+        // rows, and the drift counters — encode and decode losslessly.
+        use crate::testutil::prop::Prop;
+        let mut prop = Prop::new("snapshot_kv_roundtrip");
+        prop.run(25, |rng| {
+            let vec_of = |rng: &mut crate::util::XorShiftRng, n: usize| {
+                (0..n).map(|_| rng.below(1000)).collect::<Vec<usize>>()
+            };
+            let tiers = rng.below(4);
+            let devices = rng.below(3);
+            let s = MetricsSnapshot {
+                model: "qwen30b-sim".into(),
+                method: "dynaexq-adaptive".into(),
+                workload: "math".into(),
+                ttft_avg_s: rng.range_f64(0.0, 10.0),
+                ttft_p99_s: rng.range_f64(0.0, 10.0),
+                tpop_avg_s: rng.range_f64(0.0, 1.0),
+                tpop_p99_s: rng.range_f64(0.0, 1.0),
+                e2e_avg_s: rng.range_f64(0.0, 100.0),
+                e2e_p99_s: rng.range_f64(0.0, 100.0),
+                wait_p99_s: rng.range_f64(0.0, 1.0),
+                throughput_tok_s: rng.range_f64(0.0, 1e4),
+                decode_tokens: rng.next_u64() % (1 << 40),
+                prefill_tokens: rng.next_u64() % (1 << 40),
+                duration_s: rng.range_f64(0.0, 1e4),
+                hi_fraction: rng.next_f64(),
+                migrated_bytes: rng.next_u64() % (1 << 50),
+                act_prefill: rng.next_f64(),
+                act_decode: rng.next_f64(),
+                tier_resident: vec_of(rng, tiers),
+                device_resident: (0..devices)
+                    .map(|_| vec_of(rng, tiers.max(1)))
+                    .collect(),
+                promo_queue_depth: vec_of(rng, devices),
+                drift_events: rng.next_u64() % 1000,
+                drift_recovery_ticks: rng.next_u64() % 10_000,
+            };
+            assert_eq!(MetricsSnapshot::decode(&s.encode()).unwrap(), s);
+        });
     }
 
     #[test]
@@ -1008,6 +1120,47 @@ mod tests {
             .build()
             .unwrap();
         assert_eq!(s3.snapshot().tier_resident.len(), 3);
+    }
+
+    #[test]
+    fn session_runs_scripted_scenario() {
+        let mut s = ServeSession::builder()
+            .model("phi-sim")
+            .method("dynaexq-adaptive")
+            .seed(13)
+            .warmup(1)
+            .build()
+            .unwrap();
+        let sc = Scenario::swap();
+        let marks = s.run_scenario(&sc, 2, 16, 2).unwrap();
+        assert_eq!(marks.len(), sc.phases.len());
+        // phase marks carry the phase names and the live workload tracks
+        // the last phase's profile
+        assert_eq!(marks[0].0, "text");
+        assert_eq!(marks[1].0, "code");
+        assert_eq!(s.workload, "code");
+        assert_eq!(marks[1].1.workload, "code");
+        // cumulative token accounting: 8 rounds × batch 2 × 2 tokens
+        assert_eq!(marks[1].1.decode_tokens, 32);
+        // every boundary snapshot survives the kv roundtrip
+        for (name, snap) in &marks {
+            assert_eq!(
+                MetricsSnapshot::decode(&snap.encode()).unwrap(),
+                *snap,
+                "{name}"
+            );
+        }
+        // load multipliers scale the served batch (diurnal ramp: loads
+        // 0.5/1/2/1/0.5 × 2 rounds at base batch 2 → 2+4+8+4+2 = 20
+        // requests of 2 tokens each)
+        let mut d = ServeSession::builder()
+            .model("phi-sim")
+            .method("static")
+            .seed(13)
+            .build()
+            .unwrap();
+        let marks = d.run_scenario(&Scenario::diurnal(), 2, 16, 2).unwrap();
+        assert_eq!(marks.last().unwrap().1.decode_tokens, 2 * 20);
     }
 
     #[test]

@@ -14,13 +14,20 @@
 //!   reproduces densification: one prompt touches few experts repeatedly,
 //!   while a batch of independent requests unions into a much larger
 //!   working set (Tables 1–2).
+//!
+//! Non-stationary traffic is scripted through [`scenario`]: composable
+//! phase sequences (steady, hard swap, gradual rotation, flash crowd,
+//! multi-tenant interleave, diurnal ramp) consumable by both engines, the
+//! trace recorder, and the CLI (DESIGN.md §10).
 
 pub mod profile;
 pub mod request;
 pub mod sampler;
+pub mod scenario;
 pub mod traces;
 
 pub use profile::WorkloadProfile;
 pub use request::{Request, RequestGenerator};
 pub use sampler::RoutingSampler;
+pub use scenario::{Scenario, ScenarioPhase};
 pub use traces::{Trace, TraceEvent};

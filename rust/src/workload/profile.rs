@@ -20,6 +20,11 @@ pub struct WorkloadProfile {
     /// the top-10 hot sets of distinct workloads are disjoint **by
     /// construction** (the paper's Fig. 2 observation).
     pub workload_idx: usize,
+    /// Extra rotation of the popularity ranking as a fraction of the
+    /// expert pool (0 = the workload's native ranking). The scenario DSL
+    /// uses this to script *gradual* hot-set rotation — each step shifts
+    /// the ranking head a few positions instead of swapping it wholesale.
+    pub rot_frac: f64,
     /// Unnormalized byte weights for prompt synthesis (numeric engine).
     pub byte_weights: Vec<f64>,
 }
@@ -40,6 +45,7 @@ impl WorkloadProfile {
         Self {
             name: "text",
             workload_idx: 0,
+            rot_frac: 0.0,
             seed: 0x7e47,
             zipf_global: 1.8,
             zipf_local: 1.2,
@@ -59,6 +65,7 @@ impl WorkloadProfile {
         Self {
             name: "math",
             workload_idx: 1,
+            rot_frac: 0.0,
             seed: 0x3a7b,
             zipf_global: 1.8,
             zipf_local: 1.2,
@@ -82,6 +89,7 @@ impl WorkloadProfile {
         Self {
             name: "code",
             workload_idx: 2,
+            rot_frac: 0.0,
             seed: 0xc0de,
             zipf_global: 1.8,
             zipf_local: 1.2,
@@ -114,6 +122,27 @@ impl WorkloadProfile {
         (0..len)
             .map(|_| rng.weighted(&self.byte_weights) as i32)
             .collect()
+    }
+
+    /// A copy whose popularity ranking is rotated `frac` of the expert
+    /// pool further along the shared per-layer permutation (wraps at 1.0).
+    /// `rotated(0.0)` is the identity; the scenario DSL chains small steps
+    /// to script a gradually drifting hot set.
+    pub fn rotated(&self, frac: f64) -> Self {
+        let mut p = self.clone();
+        p.rot_frac = (self.rot_frac + frac).rem_euclid(1.0);
+        p
+    }
+
+    /// A flash-crowd copy: the global Zipf sharpens hard and the
+    /// request-local window loses its weight, so routing mass collapses
+    /// onto the head few experts of the ranking — the scenario DSL's
+    /// burst-on-a-few-experts phase.
+    pub fn flash_crowd(&self) -> Self {
+        let mut p = self.clone();
+        p.zipf_global = 4.0;
+        p.local_mix = 0.1;
+        p
     }
 }
 
@@ -157,5 +186,31 @@ mod tests {
             assert_eq!(WorkloadProfile::by_name(p.name).unwrap().seed, p.seed);
         }
         assert!(WorkloadProfile::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn rotation_accumulates_and_wraps() {
+        let p = WorkloadProfile::text();
+        assert_eq!(p.rot_frac, 0.0);
+        let r = p.rotated(0.25).rotated(0.25);
+        assert!((r.rot_frac - 0.5).abs() < 1e-12);
+        let wrapped = r.rotated(0.75);
+        assert!((wrapped.rot_frac - 0.25).abs() < 1e-12);
+        // identity rotation leaves everything else alone
+        let same = p.rotated(0.0);
+        assert_eq!(same.seed, p.seed);
+        assert_eq!(same.rot_frac, 0.0);
+    }
+
+    #[test]
+    fn flash_crowd_sharpens_global_skew() {
+        let p = WorkloadProfile::math();
+        let f = p.flash_crowd();
+        assert!(f.zipf_global > p.zipf_global);
+        assert!(f.local_mix < p.local_mix);
+        // identity (seed, ranking) is preserved — the crowd rushes the
+        // same workload's head experts
+        assert_eq!(f.seed, p.seed);
+        assert_eq!(f.workload_idx, p.workload_idx);
     }
 }

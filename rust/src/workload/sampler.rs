@@ -68,8 +68,12 @@ impl RoutingSampler {
         // A *shared* base permutation per layer (same for every workload),
         // rotated by `workload_idx · E/3`: each workload's popularity head
         // lands on a disjoint expert block — the paper's Fig. 2 shows the
-        // top-10 hot sets of text/math/code are entirely disjoint.
-        let offset = (profile.workload_idx * n_experts / 3) % n_experts.max(1);
+        // top-10 hot sets of text/math/code are entirely disjoint. The
+        // profile's `rot_frac` adds a scripted extra rotation on top
+        // (scenario DSL: gradual hot-set drift).
+        let extra = (profile.rot_frac * n_experts as f64).round() as usize;
+        let offset =
+            (profile.workload_idx * n_experts / 3 + extra) % n_experts.max(1);
         let perms = (0..n_layers)
             .map(|l| {
                 let mut base: Vec<usize> = (0..n_experts).collect();
@@ -269,6 +273,48 @@ mod tests {
         let distinct: HashSet<usize> =
             (0..50).map(|t| s.rotation(t)).collect();
         assert!(distinct.len() > 10);
+    }
+
+    #[test]
+    fn rotated_profile_shifts_the_hot_head() {
+        // A quarter-pool rotation relabels the ranking head: the rotated
+        // sampler's top experts are the base ranking shifted by E/4, and a
+        // zero rotation is the identity.
+        let base = sampler(WorkloadProfile::text());
+        let same = sampler(WorkloadProfile::text().rotated(0.0));
+        assert_eq!(base.global_top(0, 10), same.global_top(0, 10));
+        let quarter = sampler(WorkloadProfile::text().rotated(0.25));
+        assert_ne!(base.global_top(0, 10), quarter.global_top(0, 10));
+        // rank r of the rotated sampler is rank r + E/4 of the base one
+        assert_eq!(quarter.global_top(0, 1)[0], {
+            let mut top33 = base.global_top(0, 33);
+            top33.pop().unwrap()
+        });
+    }
+
+    #[test]
+    fn flash_crowd_concentrates_traffic() {
+        let base = sampler(WorkloadProfile::text());
+        let crowd = sampler(WorkloadProfile::text().flash_crowd());
+        let share = |s: &RoutingSampler| {
+            let mut rng = XorShiftRng::new(17);
+            let mut counts = vec![0u64; 128];
+            for tag in 0..300 {
+                for e in s.sample_topk(&mut rng, tag, 0) {
+                    counts[e] += 1;
+                }
+            }
+            let total: u64 = counts.iter().sum();
+            let mut sorted = counts;
+            sorted.sort_unstable_by(|a, b| b.cmp(a));
+            sorted[..4].iter().sum::<u64>() as f64 / total as f64
+        };
+        assert!(
+            share(&crowd) > 1.5 * share(&base),
+            "flash crowd must pile onto the head: {} vs {}",
+            share(&crowd),
+            share(&base)
+        );
     }
 
     #[test]

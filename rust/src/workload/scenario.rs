@@ -1,0 +1,326 @@
+//! Scripted workload scenarios (DESIGN.md §10).
+//!
+//! The paper's evaluation swaps the workload once, mid-run; real traffic
+//! drifts in many more shapes. A [`Scenario`] is a named, composable
+//! script of [`ScenarioPhase`]s — each phase pins a [`WorkloadProfile`]
+//! (possibly a [`WorkloadProfile::rotated`] or
+//! [`WorkloadProfile::flash_crowd`] derivation), a number of serving
+//! rounds, and a load multiplier — consumable by the modeled engine
+//! (`Engine::run_scenario`), the session front door
+//! (`ServeSession::run_scenario`), the DXTR trace recorder
+//! ([`Scenario::synthesize_trace`]), and the CLI
+//! (`dynaexq serve --scenario <name>`).
+//!
+//! The canned library ([`Scenario::by_name`]) covers the non-stationary
+//! regimes the drift-aware hotness layer is tested against:
+//!
+//! | name          | script                                               |
+//! |---------------|------------------------------------------------------|
+//! | `steady`      | one stationary Zipf phase (text)                     |
+//! | `swap`        | hard hot-set swap: text → code (disjoint heads)      |
+//! | `rotation`    | gradual rotation of the popularity permutation       |
+//! | `burst`       | flash crowd on a few head experts, then recovery     |
+//! | `multi-tenant`| interleaved text/math/code tenants                   |
+//! | `diurnal`     | load ramp up and back down on one workload           |
+
+use super::profile::WorkloadProfile;
+use super::traces::Trace;
+use crate::util::XorShiftRng;
+
+/// One scripted phase: a routing distribution held for `rounds` serving
+/// rounds at `load` × the caller's base batch size.
+#[derive(Clone, Debug)]
+pub struct ScenarioPhase {
+    /// Display name of the phase (report rows, trace markers).
+    pub name: String,
+    /// The routing/prompt distribution served during the phase.
+    pub profile: WorkloadProfile,
+    /// Closed serving rounds the phase lasts.
+    pub rounds: usize,
+    /// Batch-size multiplier (diurnal ramps, flash-crowd surges).
+    pub load: f64,
+}
+
+/// A named script of phases.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub phases: Vec<ScenarioPhase>,
+}
+
+impl Scenario {
+    /// An empty scenario to compose phases onto.
+    pub fn named(name: &str) -> Self {
+        Self { name: name.to_string(), phases: Vec::new() }
+    }
+
+    /// Append a unit-load phase.
+    pub fn phase(
+        self,
+        name: &str,
+        profile: WorkloadProfile,
+        rounds: usize,
+    ) -> Self {
+        self.phase_loaded(name, profile, rounds, 1.0)
+    }
+
+    /// Append a phase with an explicit load multiplier.
+    pub fn phase_loaded(
+        mut self,
+        name: &str,
+        profile: WorkloadProfile,
+        rounds: usize,
+        load: f64,
+    ) -> Self {
+        assert!(rounds > 0, "a phase must last at least one round");
+        assert!(load > 0.0, "load multiplier must be positive");
+        self.phases.push(ScenarioPhase {
+            name: name.to_string(),
+            profile,
+            rounds,
+            load,
+        });
+        self
+    }
+
+    /// Concatenate another scenario's phases after this one's.
+    pub fn then(mut self, mut other: Scenario) -> Self {
+        self.phases.append(&mut other.phases);
+        self
+    }
+
+    /// Total serving rounds across all phases.
+    pub fn total_rounds(&self) -> usize {
+        self.phases.iter().map(|p| p.rounds).sum()
+    }
+
+    /// The batch size a phase serves at: `base` scaled by the phase load,
+    /// never below one request.
+    pub fn scaled_batch(base: usize, load: f64) -> usize {
+        ((base as f64 * load).round() as usize).max(1)
+    }
+
+    // -- canned library ----------------------------------------------------
+
+    /// Stationary Zipf traffic — the baseline every drift claim is
+    /// measured against (and the byte-identical regression anchor).
+    pub fn steady() -> Self {
+        Self::named("steady").phase("steady", WorkloadProfile::text(), 6)
+    }
+
+    /// Hard hot-set swap: text and code have disjoint popularity heads by
+    /// construction, so the resident top-n must be rebuilt wholesale.
+    pub fn swap() -> Self {
+        Self::named("swap")
+            .phase("text", WorkloadProfile::text(), 4)
+            .phase("code", WorkloadProfile::code(), 4)
+    }
+
+    /// Gradual rotation of the popularity permutation: four steps of
+    /// 1/32 of the expert pool each, so the ranking head shifts a few
+    /// positions per phase and consecutive hot sets largely overlap —
+    /// drift the EMA mostly tracks on its own, in contrast to the
+    /// wholesale relocation of `swap` (whether the change-point fires
+    /// depends on traffic volume vs the detector's noise floor).
+    pub fn rotation() -> Self {
+        let base = WorkloadProfile::text();
+        let mut sc = Self::named("rotation").phase("rot-0", base.clone(), 2);
+        for step in 1..=4 {
+            sc = sc.phase(
+                &format!("rot-{step}"),
+                base.rotated(step as f64 / 32.0),
+                2,
+            );
+        }
+        sc
+    }
+
+    /// Flash crowd: steady traffic, then a 2× surge concentrated on the
+    /// head few experts, then recovery at the original distribution.
+    pub fn burst() -> Self {
+        let base = WorkloadProfile::text();
+        Self::named("burst")
+            .phase("pre", base.clone(), 3)
+            .phase_loaded("crowd", base.flash_crowd(), 3, 2.0)
+            .phase("post", base, 3)
+    }
+
+    /// Multi-tenant interleave: text/math/code tenants alternate in short
+    /// slices, so the union working set cycles through disjoint heads.
+    pub fn multi_tenant() -> Self {
+        let mut sc = Self::named("multi-tenant");
+        for rep in 0..2 {
+            for w in WorkloadProfile::all() {
+                sc = sc.phase(&format!("{}-{rep}", w.name), w, 2);
+            }
+        }
+        sc
+    }
+
+    /// Diurnal load ramp: one workload, batch load 0.5 → 1 → 2 → 1 → 0.5.
+    pub fn diurnal() -> Self {
+        let w = WorkloadProfile::text();
+        let mut sc = Self::named("diurnal");
+        for (i, load) in [0.5, 1.0, 2.0, 1.0, 0.5].into_iter().enumerate() {
+            sc = sc.phase_loaded(&format!("t{i}"), w.clone(), 2, load);
+        }
+        sc
+    }
+
+    /// Canned scenario names, in presentation order.
+    pub fn names() -> Vec<&'static str> {
+        vec!["steady", "swap", "rotation", "burst", "multi-tenant", "diurnal"]
+    }
+
+    /// Look up a canned scenario by name.
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "steady" => Some(Self::steady()),
+            "swap" => Some(Self::swap()),
+            "rotation" => Some(Self::rotation()),
+            "burst" => Some(Self::burst()),
+            "multi-tenant" => Some(Self::multi_tenant()),
+            "diurnal" => Some(Self::diurnal()),
+            _ => None,
+        }
+    }
+
+    // -- trace recording ---------------------------------------------------
+
+    /// Record this scenario as a `DXTR` trace: each phase samples its own
+    /// routing distribution for `rounds × iters_per_round` iterations at
+    /// the load-scaled batch size, sharing one RNG stream so the trace is
+    /// reproducible from `seed` (the scenario analogue of
+    /// [`super::traces::synthesize`]).
+    pub fn synthesize_trace(
+        &self,
+        n_layers: usize,
+        n_experts: usize,
+        top_k: usize,
+        batch: usize,
+        iters_per_round: usize,
+        seed: u64,
+    ) -> Trace {
+        let mut rng = XorShiftRng::new(seed);
+        let mut trace = Trace::new(n_layers, n_experts);
+        let mut it = 0u64;
+        for phase in &self.phases {
+            let sampler = super::RoutingSampler::new(
+                &phase.profile,
+                n_layers,
+                n_experts,
+                top_k,
+            );
+            let b = Self::scaled_batch(batch, phase.load);
+            for _ in 0..phase.rounds * iters_per_round {
+                for layer in 0..n_layers {
+                    let mut all = Vec::with_capacity(b * top_k);
+                    for req in 0..b as u64 {
+                        all.extend(sampler.sample_topk(
+                            &mut rng,
+                            it * 131 + req,
+                            layer,
+                        ));
+                    }
+                    trace.record(layer, &all);
+                }
+                trace.tick();
+                it += 1;
+            }
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TraceEvent;
+
+    #[test]
+    fn canned_library_resolves_every_name() {
+        for name in Scenario::names() {
+            let sc = Scenario::by_name(name).unwrap();
+            assert_eq!(sc.name, name);
+            assert!(!sc.phases.is_empty(), "{name}");
+            assert!(sc.total_rounds() > 0, "{name}");
+        }
+        assert!(Scenario::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn composition_concatenates_phases() {
+        let sc = Scenario::steady().then(Scenario::swap());
+        assert_eq!(
+            sc.total_rounds(),
+            Scenario::steady().total_rounds() + Scenario::swap().total_rounds()
+        );
+        let custom = Scenario::named("mine")
+            .phase("a", WorkloadProfile::text(), 1)
+            .phase_loaded("b", WorkloadProfile::math(), 2, 3.0);
+        assert_eq!(custom.phases.len(), 2);
+        assert_eq!(custom.phases[1].load, 3.0);
+    }
+
+    #[test]
+    fn scaled_batch_never_drops_to_zero() {
+        assert_eq!(Scenario::scaled_batch(8, 1.0), 8);
+        assert_eq!(Scenario::scaled_batch(8, 2.0), 16);
+        assert_eq!(Scenario::scaled_batch(8, 0.5), 4);
+        assert_eq!(Scenario::scaled_batch(1, 0.01), 1);
+    }
+
+    #[test]
+    fn swap_scenario_has_disjoint_phase_heads() {
+        let sc = Scenario::swap();
+        assert_ne!(
+            sc.phases[0].profile.workload_idx,
+            sc.phases[1].profile.workload_idx
+        );
+    }
+
+    #[test]
+    fn rotation_scenario_steps_monotonically() {
+        let sc = Scenario::rotation();
+        let fracs: Vec<f64> =
+            sc.phases.iter().map(|p| p.profile.rot_frac).collect();
+        for w in fracs.windows(2) {
+            assert!(w[1] > w[0], "rotation must advance: {fracs:?}");
+        }
+    }
+
+    #[test]
+    fn scenario_trace_counts_match_script() {
+        let sc = Scenario::swap();
+        let t = sc.synthesize_trace(2, 16, 2, 4, 3, 7);
+        let iters = sc.total_rounds() * 3;
+        assert_eq!(
+            t.events.iter().filter(|e| **e == TraceEvent::Tick).count(),
+            iters
+        );
+        assert_eq!(t.selections(), iters * 2 * 4 * 2);
+        // deterministic from the seed
+        let t2 = sc.synthesize_trace(2, 16, 2, 4, 3, 7);
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn diurnal_trace_scales_batch_with_load() {
+        let sc = Scenario::diurnal();
+        let t = sc.synthesize_trace(1, 16, 2, 4, 1, 3);
+        // per-iteration selection counts follow the load schedule
+        let mut per_tick = Vec::new();
+        let mut acc = 0usize;
+        for ev in &t.events {
+            match ev {
+                TraceEvent::Routing { experts, .. } => acc += experts.len(),
+                TraceEvent::Tick => {
+                    per_tick.push(acc);
+                    acc = 0;
+                }
+            }
+        }
+        // loads 0.5/1/2/1/0.5 at base batch 4, top_k 2 → 4/8/16/8/4
+        assert_eq!(per_tick, vec![4, 4, 8, 8, 16, 16, 8, 8, 4, 4]);
+    }
+}

@@ -212,7 +212,10 @@ impl Trace {
 }
 
 /// Capture a trace from the modeled routing sampler (synthetic trace
-/// generation for offline experiments).
+/// generation for offline experiments): one stationary phase of the
+/// scenario recorder — [`super::Scenario::synthesize_trace`] is the
+/// single implementation of the DXTR sampling loop, so workload- and
+/// scenario-recorded traces can never drift apart.
 pub fn synthesize(
     profile: &super::WorkloadProfile,
     n_layers: usize,
@@ -222,25 +225,9 @@ pub fn synthesize(
     iterations: usize,
     seed: u64,
 ) -> Trace {
-    let sampler =
-        super::RoutingSampler::new(profile, n_layers, n_experts, top_k);
-    let mut rng = crate::util::XorShiftRng::new(seed);
-    let mut trace = Trace::new(n_layers, n_experts);
-    for it in 0..iterations {
-        for layer in 0..n_layers {
-            let mut all = Vec::with_capacity(batch * top_k);
-            for b in 0..batch as u64 {
-                all.extend(sampler.sample_topk(
-                    &mut rng,
-                    it as u64 * 131 + b,
-                    layer,
-                ));
-            }
-            trace.record(layer, &all);
-        }
-        trace.tick();
-    }
-    trace
+    super::Scenario::named(profile.name)
+        .phase(profile.name, profile.clone(), 1)
+        .synthesize_trace(n_layers, n_experts, top_k, batch, iterations, seed)
 }
 
 #[cfg(test)]
