@@ -35,6 +35,38 @@ fn main() -> anyhow::Result<()> {
     });
     println!("{}", r.line());
 
+    // 2b. batched routing ingestion — the iteration-boundary flush path
+    //     the serving backends now use: one hotness lock per boundary
+    //     instead of one per layer (DESIGN.md §11).
+    let r = bench.run("record_layers 256 sel × 48 layers (1 lock)", || {
+        coord.record_layers((0..48).map(|l| (l, experts.as_slice())));
+    });
+    println!("{}", r.line());
+
+    // 2c. scratch-buffer top-k sampling vs the allocating path (the
+    //     engine's per-token inner loop).
+    let sampler = dynaexq::workload::RoutingSampler::new(
+        &dynaexq::workload::WorkloadProfile::text(),
+        48,
+        128,
+        8,
+    );
+    let mut rng = dynaexq::util::XorShiftRng::new(7);
+    let r = bench.run("sample_topk (alloc) × 4k", || {
+        for tag in 0..4_000u64 {
+            std::hint::black_box(sampler.sample_topk(&mut rng, tag, 0));
+        }
+    });
+    println!("{}", r.line());
+    let mut picked = Vec::new();
+    let r = bench.run("sample_topk_into (scratch) × 4k", || {
+        for tag in 0..4_000u64 {
+            sampler.sample_topk_into(&mut rng, tag, 0, &mut picked);
+            std::hint::black_box(&picked);
+        }
+    });
+    println!("{}", r.line());
+
     // 3. full policy update (48 layers × 128 experts)
     let mut now = 1.0;
     let r = bench.run("policy tick (48×128)", || {

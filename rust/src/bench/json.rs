@@ -1,0 +1,401 @@
+//! Minimal JSON writer + parser (serde is not in the offline crate set).
+//!
+//! Exactly what the bench harness needs: deterministic serialization of
+//! `BENCH_serving.json` (object key order preserved) and a strict
+//! recursive-descent parser the `bench_smoke` suite uses to assert the
+//! emitted file is schema-valid. Not a general-purpose JSON library: no
+//! `\uXXXX` surrogate pairs, numbers parse through `f64`.
+
+use anyhow::{anyhow, bail, Result};
+
+/// A JSON value. Objects preserve insertion order (diff-friendly files).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// Unsigned integer — counters (token counts, bytes) stay exact.
+    U64(u64),
+    /// Any other number. Non-finite values serialize as `null`.
+    F64(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn obj() -> Json {
+        Json::Obj(Vec::new())
+    }
+
+    /// Append a field to an object (panics on non-objects — builder use).
+    pub fn push(&mut self, key: &str, value: Json) -> &mut Json {
+        match self {
+            Json::Obj(fields) => fields.push((key.to_string(), value)),
+            other => panic!("push on non-object {other:?}"),
+        }
+        self
+    }
+
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => {
+                fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::U64(n) => Some(*n),
+            Json::F64(x) if x.fract() == 0.0 && *x >= 0.0 => Some(*x as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::U64(n) => Some(*n as f64),
+            Json::F64(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    /// Serialize with 2-space indentation (stable, diffable output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: usize) {
+        let pad = |out: &mut String, n: usize| {
+            for _ in 0..n {
+                out.push_str("  ");
+            }
+        };
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::U64(n) => out.push_str(&n.to_string()),
+            Json::F64(x) => {
+                if x.is_finite() {
+                    // Rust's shortest-roundtrip Display is always a valid
+                    // JSON number (no exponent-only or hex forms).
+                    out.push_str(&format!("{x}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(xs) => {
+                if xs.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    pad(out, indent + 1);
+                    x.write(out, indent + 1);
+                }
+                out.push('\n');
+                pad(out, indent);
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                if fields.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    pad(out, indent + 1);
+                    write_escaped(out, k);
+                    out.push_str(": ");
+                    v.write(out, indent + 1);
+                }
+                out.push('\n');
+                pad(out, indent);
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Parse a JSON document (strict: exactly one value plus whitespace).
+pub fn parse(text: &str) -> Result<Json> {
+    let bytes = text.as_bytes();
+    let mut pos = 0;
+    let value = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        bail!("trailing bytes at offset {pos}");
+    }
+    Ok(value)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<()> {
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == c {
+        *pos += 1;
+        Ok(())
+    } else {
+        bail!("expected {:?} at offset {}", c as char, *pos)
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    let Some(&c) = b.get(*pos) else { bail!("unexpected end of input") };
+    match c {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Json::Str(parse_string(b, pos)?)),
+        b't' => parse_lit(b, pos, "true", Json::Bool(true)),
+        b'f' => parse_lit(b, pos, "false", Json::Bool(false)),
+        b'n' => parse_lit(b, pos, "null", Json::Null),
+        _ => parse_number(b, pos),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> Result<Json> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(v)
+    } else {
+        bail!("bad literal at offset {}", *pos)
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let s = std::str::from_utf8(&b[start..*pos]).unwrap();
+    if !s.contains(['.', 'e', 'E', '-']) {
+        if let Ok(n) = s.parse::<u64>() {
+            return Ok(Json::U64(n));
+        }
+    }
+    s.parse::<f64>()
+        .map(Json::F64)
+        .map_err(|_| anyhow!("bad number {s:?} at offset {start}"))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    expect(b, pos, b'"')?;
+    let mut out = String::new();
+    loop {
+        let Some(&c) = b.get(*pos) else { bail!("unterminated string") };
+        *pos += 1;
+        match c {
+            b'"' => return Ok(out),
+            b'\\' => {
+                let Some(&e) = b.get(*pos) else {
+                    bail!("unterminated escape")
+                };
+                *pos += 1;
+                match e {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'u' => {
+                        let hex = b
+                            .get(*pos..*pos + 4)
+                            .ok_or_else(|| anyhow!("short \\u escape"))?;
+                        *pos += 4;
+                        let n = u32::from_str_radix(
+                            std::str::from_utf8(hex)?,
+                            16,
+                        )?;
+                        out.push(
+                            char::from_u32(n)
+                                .ok_or_else(|| anyhow!("bad \\u escape"))?,
+                        );
+                    }
+                    other => bail!("bad escape \\{}", other as char),
+                }
+            }
+            c => {
+                // Re-assemble multi-byte UTF-8 sequences.
+                if c < 0x80 {
+                    out.push(c as char);
+                } else {
+                    let len = utf8_len(c)?;
+                    let chunk = b
+                        .get(*pos - 1..*pos - 1 + len)
+                        .ok_or_else(|| anyhow!("truncated UTF-8"))?;
+                    out.push_str(std::str::from_utf8(chunk)?);
+                    *pos += len - 1;
+                }
+            }
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> Result<usize> {
+    match first {
+        0xC0..=0xDF => Ok(2),
+        0xE0..=0xEF => Ok(3),
+        0xF0..=0xF7 => Ok(4),
+        _ => bail!("invalid UTF-8 lead byte {first:#x}"),
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json> {
+    expect(b, pos, b'{')?;
+    let mut fields = Vec::new();
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b'}') {
+        *pos += 1;
+        return Ok(Json::Obj(fields));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        expect(b, pos, b':')?;
+        let value = parse_value(b, pos)?;
+        fields.push((key, value));
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(&b',') => *pos += 1,
+            Some(&b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            _ => bail!("expected ',' or '}}' at offset {}", *pos),
+        }
+    }
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json> {
+    expect(b, pos, b'[')?;
+    let mut xs = Vec::new();
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b']') {
+        *pos += 1;
+        return Ok(Json::Arr(xs));
+    }
+    loop {
+        xs.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(&b',') => *pos += 1,
+            Some(&b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(xs));
+            }
+            _ => bail!("expected ',' or ']' at offset {}", *pos),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_nested() {
+        let mut obj = Json::obj();
+        obj.push("schema", Json::Str("x/v1".into()));
+        obj.push("n", Json::U64(18_446_744_073_709_551_615));
+        obj.push("x", Json::F64(0.12345678912345));
+        obj.push("neg", Json::F64(-3.5));
+        obj.push("flag", Json::Bool(true));
+        obj.push("none", Json::Null);
+        obj.push(
+            "arr",
+            Json::Arr(vec![Json::U64(1), Json::Str("two\n\"q\"".into())]),
+        );
+        obj.push("empty_arr", Json::Arr(vec![]));
+        obj.push("empty_obj", Json::obj());
+        let text = obj.render();
+        let back = parse(&text).unwrap();
+        assert_eq!(back, obj);
+        // lookups
+        assert_eq!(back.get("schema").unwrap().as_str(), Some("x/v1"));
+        assert_eq!(back.get("n").unwrap().as_u64(), Some(u64::MAX));
+        assert_eq!(
+            back.get("x").unwrap().as_f64(),
+            Some(0.12345678912345)
+        );
+        assert_eq!(back.get("arr").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn nonfinite_floats_serialize_as_null() {
+        let mut obj = Json::obj();
+        obj.push("bad", Json::F64(f64::NAN));
+        let back = parse(&obj.render()).unwrap();
+        assert_eq!(back.get("bad"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("{\"a\" 1}").is_err());
+        assert!(parse("12 34").is_err());
+        assert!(parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn parses_unicode_and_escapes() {
+        let v = parse("{\"k\": \"caf\\u00e9 µs\"}").unwrap();
+        assert_eq!(v.get("k").unwrap().as_str(), Some("café µs"));
+    }
+}

@@ -4,6 +4,14 @@
 //! iterations, mean/median/p99 reporting with no hidden adaptivity. Paper
 //! experiment harnesses (`benches/*.rs`) use [`Bench`] for wall-clock
 //! micro-measurements and print their tables directly.
+//!
+//! On top of the table helpers sit two runtime submodules (DESIGN.md
+//! §11): [`runtime`] — the `dynaexq bench` end-to-end serving matrix
+//! that emits `BENCH_serving.json` — and [`json`], the minimal JSON
+//! writer/parser it serializes through.
+
+pub mod json;
+pub mod runtime;
 
 use std::time::Instant;
 

@@ -1,0 +1,535 @@
+//! Wall-clock serving benchmark harness (DESIGN.md §11).
+//!
+//! The repo's first *performance trajectory*: `dynaexq bench` runs a
+//! fixed matrix of end-to-end modeled serving workloads — registry
+//! method × scripted scenario × {1,2}-device groups × batch {1,8,32} —
+//! under host wall-clock timing and emits a machine-readable
+//! `BENCH_serving.json` that future PRs are judged against. Per cell it
+//! records p50/p95 wall-clock per serving round, modeled tokens/s, and
+//! the allocation-visible proxy counters from the transition pipeline
+//! ([`crate::coordinator::TransitionTotals`]).
+//!
+//! Wall-clock here measures the *simulator's own hot path* (routing
+//! sampling, residency resolution, hotness ingestion, policy updates) —
+//! the quantity the hot-path de-allocation work of this module's sibling
+//! changes is meant to move — while the modeled metrics prove behaviour
+//! stayed fixed. The schema is validated by `tests/bench_smoke.rs` and a
+//! self-check before every file write.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{DeviceConfig, ServingConfig};
+use crate::coordinator::TransitionTotals;
+use crate::experiments::helpers;
+use crate::serving::engine::{Engine, EngineConfig};
+use crate::util::percentile;
+use crate::workload::Scenario;
+
+use super::json::{self, Json};
+use super::Table;
+
+/// Schema tag stamped into every report; bump on breaking changes.
+pub const BENCH_SCHEMA: &str = "dynaexq-bench-serving/v1";
+
+/// Serving methods benchmarked by the full matrix: every registry method
+/// that serves traffic as a *method under comparison*. The quality
+/// reference tiers (`fp16`, `static-hi`) and the calibration pass
+/// (`counting`) are excluded — they are measurement apparatus, not
+/// serving systems.
+pub const BENCH_METHODS: &[&str] = &[
+    "static",
+    "static-map",
+    "expertflow",
+    "hobbit",
+    "dynaexq",
+    "dynaexq-adaptive",
+    "dynaexq-3tier",
+    "dynaexq-sharded",
+    "dynaexq-3tier-sharded",
+];
+
+/// Device-group widths of the matrix (single-device methods ignore the
+/// knob and serve the 1-device system at both widths — the matrix stays
+/// rectangular, mirroring the scenario-matrix invariant suite).
+pub const BENCH_DEVICES: &[usize] = &[1, 2];
+
+/// Decode batch caps swept by the matrix (the paper's 1 → 32 range).
+pub const BENCH_BATCHES: &[usize] = &[1, 8, 32];
+
+/// Keys every cell object in `BENCH_serving.json` must carry — the
+/// schema contract `bench_smoke` (and the pre-write self-check) enforce.
+pub const CELL_KEYS: &[&str] = &[
+    "method",
+    "scenario",
+    "devices",
+    "batch",
+    "rounds",
+    "wall_total_s",
+    "wall_p50_round_s",
+    "wall_p95_round_s",
+    "modeled_duration_s",
+    "modeled_tok_s",
+    "decode_tokens",
+    "prefill_tokens",
+    "hi_fraction",
+    "migrated_bytes",
+    "promotions",
+    "demotions",
+    "deferred",
+    "rejected",
+    "published",
+    "evictions",
+    "drift_events",
+    "drift_recovery_ticks",
+];
+
+/// The benchmark matrix: which cells run and at what workload shape.
+#[derive(Clone, Debug)]
+pub struct BenchMatrix {
+    pub model: String,
+    pub methods: Vec<String>,
+    pub scenarios: Vec<String>,
+    pub devices: Vec<usize>,
+    pub batches: Vec<usize>,
+    pub prompt_len: usize,
+    pub output_len: usize,
+    /// Untimed serving rounds before measurement (adaptive methods
+    /// converge; allocator/branch caches warm).
+    pub warmup_rounds: usize,
+    pub seed: u64,
+}
+
+impl BenchMatrix {
+    /// The full matrix on one model: every bench method × every canned
+    /// scenario × {1,2} devices × batch {1,8,32}.
+    pub fn full(model: &str) -> Self {
+        Self {
+            model: model.to_string(),
+            methods: BENCH_METHODS.iter().map(|s| s.to_string()).collect(),
+            scenarios: Scenario::names()
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            devices: BENCH_DEVICES.to_vec(),
+            batches: BENCH_BATCHES.to_vec(),
+            prompt_len: 32,
+            output_len: 8,
+            warmup_rounds: 1,
+            seed: 0xBE4C,
+        }
+    }
+
+    /// The smallest cell — what CI's `bench-smoke` job runs on every
+    /// push: one method, one scenario, one device, batch 1.
+    pub fn smoke(model: &str) -> Self {
+        Self {
+            model: model.to_string(),
+            methods: vec!["dynaexq".into()],
+            scenarios: vec!["steady".into()],
+            devices: vec![1],
+            batches: vec![1],
+            prompt_len: 16,
+            output_len: 4,
+            warmup_rounds: 1,
+            seed: 0xBE4C,
+        }
+    }
+
+    /// Number of cells the matrix spans.
+    pub fn n_cells(&self) -> usize {
+        self.methods.len()
+            * self.scenarios.len()
+            * self.devices.len()
+            * self.batches.len()
+    }
+}
+
+/// One measured matrix cell.
+#[derive(Clone, Debug)]
+pub struct BenchCell {
+    pub method: String,
+    pub scenario: String,
+    pub devices: usize,
+    pub batch: usize,
+    /// Serving rounds timed (the scenario's total, load-scaled batches).
+    pub rounds: usize,
+    pub wall_total_s: f64,
+    pub wall_p50_round_s: f64,
+    pub wall_p95_round_s: f64,
+    /// Modeled seconds the timed rounds spanned (warmup excluded).
+    pub modeled_duration_s: f64,
+    /// Modeled throughput over the timed rounds (prefill + decode).
+    pub modeled_tok_s: f64,
+    pub decode_tokens: u64,
+    pub prefill_tokens: u64,
+    /// Cumulative (incl. warmup) top-rung resolution ratio — a
+    /// convergence diagnostic, not a windowed counter.
+    pub hi_fraction: f64,
+    /// Bytes migrated during the timed rounds (warmup delta-subtracted).
+    pub migrated_bytes: u64,
+    /// Transition-pipeline counters over the timed rounds (warmup
+    /// delta-subtracted).
+    pub transitions: TransitionTotals,
+    pub drift_events: u64,
+    pub drift_recovery_ticks: u64,
+}
+
+/// A full matrix run.
+pub struct BenchReport {
+    pub matrix: BenchMatrix,
+    pub cells: Vec<BenchCell>,
+}
+
+/// Run one cell: build the method's backend at the requested group
+/// width, warm it, then serve the scenario end to end with per-round
+/// wall-clock sampling.
+pub fn run_cell(
+    matrix: &BenchMatrix,
+    method: &str,
+    scenario_name: &str,
+    devices: usize,
+    batch: usize,
+) -> Result<BenchCell> {
+    let preset = helpers::preset(&matrix.model)?;
+    let sc = helpers::scenario(scenario_name)?;
+    let cfg = ServingConfig::default();
+    let dev = DeviceConfig::default();
+    let first_profile = &sc.phases[0].profile;
+    let backend = helpers::backend_with_devices(
+        method,
+        &preset,
+        &cfg,
+        &dev,
+        Some(first_profile),
+        devices,
+    )?;
+    let mut engine = Engine::new(
+        &preset,
+        first_profile,
+        backend,
+        &dev,
+        EngineConfig {
+            max_batch: batch.max(1),
+            seed: matrix.seed,
+            track_activation: false,
+        },
+    );
+    engine.warm(first_profile, matrix.warmup_rounds);
+    // Post-warmup baselines: every cell counter describes the *timed*
+    // rounds only — cumulative backend counters (migration, transitions,
+    // drift) are reported as deltas so a change to the warmup protocol
+    // cannot shift the trajectory. (`hi_fraction` stays cumulative: it is
+    // a resolution-count ratio, i.e. a convergence diagnostic.)
+    let modeled_start = engine.now();
+    let migrated0 = engine.backend.migrated_bytes();
+    let transitions0 = engine.backend.transition_totals();
+    let drift0 = engine.backend.drift_stats();
+
+    let mut samples = Vec::with_capacity(sc.total_rounds());
+    let t_all = Instant::now();
+    for phase in &sc.phases {
+        engine.set_profile(&phase.profile);
+        let b = Scenario::scaled_batch(batch, phase.load);
+        for _ in 0..phase.rounds {
+            let t0 = Instant::now();
+            engine.serve_uniform(
+                &phase.profile,
+                b,
+                matrix.prompt_len,
+                matrix.output_len,
+            );
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+    }
+    let wall_total_s = t_all.elapsed().as_secs_f64();
+
+    let m = &engine.metrics;
+    let modeled_duration_s = engine.now() - modeled_start;
+    let modeled_tok_s = if modeled_duration_s > 0.0 {
+        (m.prefill_tokens + m.decode_tokens) as f64 / modeled_duration_s
+    } else {
+        0.0
+    };
+    let (drift_events, drift_recovery_ticks) = engine.backend.drift_stats();
+    Ok(BenchCell {
+        method: method.to_string(),
+        scenario: scenario_name.to_string(),
+        devices,
+        batch,
+        rounds: samples.len(),
+        wall_total_s,
+        wall_p50_round_s: percentile(&samples, 50.0),
+        wall_p95_round_s: percentile(&samples, 95.0),
+        modeled_duration_s,
+        modeled_tok_s,
+        decode_tokens: m.decode_tokens,
+        prefill_tokens: m.prefill_tokens,
+        hi_fraction: engine.backend.hi_fraction(),
+        migrated_bytes: engine
+            .backend
+            .migrated_bytes()
+            .saturating_sub(migrated0),
+        transitions: engine
+            .backend
+            .transition_totals()
+            .delta_since(&transitions0),
+        drift_events: drift_events.saturating_sub(drift0.0),
+        drift_recovery_ticks: drift_recovery_ticks.saturating_sub(drift0.1),
+    })
+}
+
+/// Run the whole matrix. `progress` receives one line per finished cell
+/// (the CLI passes an eprintln; tests pass a sink).
+pub fn run_matrix(
+    matrix: &BenchMatrix,
+    mut progress: impl FnMut(&str),
+) -> Result<BenchReport> {
+    let mut cells = Vec::with_capacity(matrix.n_cells());
+    let total = matrix.n_cells();
+    for method in &matrix.methods {
+        for scenario in &matrix.scenarios {
+            for &devices in &matrix.devices {
+                for &batch in &matrix.batches {
+                    let cell =
+                        run_cell(matrix, method, scenario, devices, batch)
+                            .with_context(|| {
+                                format!(
+                                    "cell {method}×{scenario}×{devices}dev\
+                                     ×b{batch}"
+                                )
+                            })?;
+                    progress(&format!(
+                        "[{}/{total}] {method:<22} {scenario:<12} \
+                         {devices}dev b{batch:<3} {} / round (p50)",
+                        cells.len() + 1,
+                        super::human(cell.wall_p50_round_s),
+                    ));
+                    cells.push(cell);
+                }
+            }
+        }
+    }
+    Ok(BenchReport { matrix: matrix.clone(), cells })
+}
+
+fn str_arr(xs: &[String]) -> Json {
+    Json::Arr(xs.iter().map(|s| Json::Str(s.clone())).collect())
+}
+
+fn u64_arr(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&n| Json::U64(n as u64)).collect())
+}
+
+/// Serialize a report to the `BENCH_serving.json` schema.
+pub fn report_to_json(report: &BenchReport) -> String {
+    let m = &report.matrix;
+    let mut root = Json::obj();
+    root.push("schema", Json::Str(BENCH_SCHEMA.into()));
+    root.push("model", Json::Str(m.model.clone()));
+    root.push("prompt_len", Json::U64(m.prompt_len as u64));
+    root.push("output_len", Json::U64(m.output_len as u64));
+    root.push("warmup_rounds", Json::U64(m.warmup_rounds as u64));
+    root.push("seed", Json::U64(m.seed));
+    root.push("methods", str_arr(&m.methods));
+    root.push("scenarios", str_arr(&m.scenarios));
+    root.push("devices", u64_arr(&m.devices));
+    root.push("batches", u64_arr(&m.batches));
+    let mut cells = Vec::with_capacity(report.cells.len());
+    for c in &report.cells {
+        let mut o = Json::obj();
+        o.push("method", Json::Str(c.method.clone()));
+        o.push("scenario", Json::Str(c.scenario.clone()));
+        o.push("devices", Json::U64(c.devices as u64));
+        o.push("batch", Json::U64(c.batch as u64));
+        o.push("rounds", Json::U64(c.rounds as u64));
+        o.push("wall_total_s", Json::F64(c.wall_total_s));
+        o.push("wall_p50_round_s", Json::F64(c.wall_p50_round_s));
+        o.push("wall_p95_round_s", Json::F64(c.wall_p95_round_s));
+        o.push("modeled_duration_s", Json::F64(c.modeled_duration_s));
+        o.push("modeled_tok_s", Json::F64(c.modeled_tok_s));
+        o.push("decode_tokens", Json::U64(c.decode_tokens));
+        o.push("prefill_tokens", Json::U64(c.prefill_tokens));
+        o.push("hi_fraction", Json::F64(c.hi_fraction));
+        o.push("migrated_bytes", Json::U64(c.migrated_bytes));
+        o.push("promotions", Json::U64(c.transitions.promotions));
+        o.push("demotions", Json::U64(c.transitions.demotions));
+        o.push("deferred", Json::U64(c.transitions.deferred));
+        o.push("rejected", Json::U64(c.transitions.rejected));
+        o.push("published", Json::U64(c.transitions.published));
+        o.push("evictions", Json::U64(c.transitions.evictions));
+        o.push("drift_events", Json::U64(c.drift_events));
+        o.push(
+            "drift_recovery_ticks",
+            Json::U64(c.drift_recovery_ticks),
+        );
+        cells.push(o);
+    }
+    root.push("cells", Json::Arr(cells));
+    root.render()
+}
+
+/// Validate a `BENCH_serving.json` document against the schema contract:
+/// the schema tag, the axis arrays, every required key in every cell,
+/// and full matrix coverage (one cell per method × scenario × device ×
+/// batch combination).
+pub fn validate_report_json(text: &str) -> Result<()> {
+    let doc = json::parse(text).context("BENCH_serving.json parse")?;
+    let schema = doc
+        .get("schema")
+        .and_then(|v| v.as_str())
+        .context("missing schema tag")?;
+    if schema != BENCH_SCHEMA {
+        bail!("schema {schema:?}, expected {BENCH_SCHEMA:?}");
+    }
+    for key in ["model", "prompt_len", "output_len", "seed"] {
+        if doc.get(key).is_none() {
+            bail!("missing header key {key:?}");
+        }
+    }
+    let strings = |key: &str| -> Result<Vec<String>> {
+        doc.get(key)
+            .and_then(|v| v.as_arr())
+            .with_context(|| format!("missing axis {key:?}"))?
+            .iter()
+            .map(|v| {
+                v.as_str()
+                    .map(String::from)
+                    .with_context(|| format!("non-string in {key:?}"))
+            })
+            .collect()
+    };
+    let nums = |key: &str| -> Result<Vec<u64>> {
+        doc.get(key)
+            .and_then(|v| v.as_arr())
+            .with_context(|| format!("missing axis {key:?}"))?
+            .iter()
+            .map(|v| {
+                v.as_u64()
+                    .with_context(|| format!("non-integer in {key:?}"))
+            })
+            .collect()
+    };
+    let methods = strings("methods")?;
+    let scenarios = strings("scenarios")?;
+    let devices = nums("devices")?;
+    let batches = nums("batches")?;
+    let cells =
+        doc.get("cells").and_then(|v| v.as_arr()).context("missing cells")?;
+    let expected =
+        methods.len() * scenarios.len() * devices.len() * batches.len();
+    if cells.len() != expected {
+        bail!("{} cells, expected {expected} (full matrix)", cells.len());
+    }
+    let mut seen = std::collections::HashSet::new();
+    for (i, cell) in cells.iter().enumerate() {
+        for &key in CELL_KEYS {
+            let v = cell
+                .get(key)
+                .with_context(|| format!("cell {i}: missing key {key:?}"))?;
+            let ok = match key {
+                "method" | "scenario" => v.as_str().is_some(),
+                "wall_total_s" | "wall_p50_round_s" | "wall_p95_round_s"
+                | "modeled_duration_s" | "modeled_tok_s" | "hi_fraction" => {
+                    v.as_f64().is_some()
+                }
+                _ => v.as_u64().is_some(),
+            };
+            if !ok {
+                bail!("cell {i}: key {key:?} has wrong type ({v:?})");
+            }
+        }
+        let coord = (
+            cell.get("method").unwrap().as_str().unwrap().to_string(),
+            cell.get("scenario").unwrap().as_str().unwrap().to_string(),
+            cell.get("devices").unwrap().as_u64().unwrap(),
+            cell.get("batch").unwrap().as_u64().unwrap(),
+        );
+        if !methods.contains(&coord.0)
+            || !scenarios.contains(&coord.1)
+            || !devices.contains(&coord.2)
+            || !batches.contains(&coord.3)
+        {
+            bail!("cell {i}: {coord:?} outside the declared axes");
+        }
+        if !seen.insert(coord.clone()) {
+            bail!("cell {i}: duplicate coordinates {coord:?}");
+        }
+    }
+    Ok(())
+}
+
+/// Human-readable summary table of a report.
+pub fn render_table(report: &BenchReport) -> String {
+    let mut t = Table::new(&[
+        "method",
+        "scenario",
+        "dev",
+        "batch",
+        "rounds",
+        "wall p50/round",
+        "wall p95/round",
+        "modeled tok/s",
+        "deferred",
+        "migrated GB",
+    ]);
+    for c in &report.cells {
+        t.row(&[
+            c.method.clone(),
+            c.scenario.clone(),
+            c.devices.to_string(),
+            c.batch.to_string(),
+            c.rounds.to_string(),
+            super::human(c.wall_p50_round_s),
+            super::human(c.wall_p95_round_s),
+            format!("{:.0}", c.modeled_tok_s),
+            c.transitions.deferred.to_string(),
+            format!("{:.2}", c.migrated_bytes as f64 / 1e9),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_shapes() {
+        let full = BenchMatrix::full("qwen30b-sim");
+        assert_eq!(
+            full.n_cells(),
+            BENCH_METHODS.len() * Scenario::names().len() * 2 * 3
+        );
+        let smoke = BenchMatrix::smoke("phi-sim");
+        assert_eq!(smoke.n_cells(), 1);
+    }
+
+    #[test]
+    fn validator_rejects_missing_cells_and_keys() {
+        // A report claiming axes it does not cover must fail validation.
+        let matrix = BenchMatrix::smoke("phi-sim");
+        let report = BenchReport { matrix, cells: Vec::new() };
+        let text = report_to_json(&report);
+        let err = validate_report_json(&text).unwrap_err().to_string();
+        assert!(err.contains("0 cells"), "{err}");
+        // a tampered cell key must fail too
+        let cell = run_cell(
+            &BenchMatrix::smoke("phi-sim"),
+            "dynaexq",
+            "steady",
+            1,
+            1,
+        )
+        .unwrap();
+        let report = BenchReport {
+            matrix: BenchMatrix::smoke("phi-sim"),
+            cells: vec![cell],
+        };
+        let good = report_to_json(&report);
+        validate_report_json(&good).unwrap();
+        let bad = good.replace("\"hi_fraction\"", "\"hi_frac\"");
+        assert!(validate_report_json(&bad).is_err());
+    }
+}

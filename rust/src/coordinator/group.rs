@@ -210,6 +210,16 @@ impl DeviceGroup {
             .sum()
     }
 
+    /// Transition-pipeline counter totals summed across every device
+    /// (the bench harness's per-cell proxy counters).
+    pub fn transition_totals(&self) -> super::TransitionTotals {
+        let mut t = super::TransitionTotals::default();
+        for c in &self.devices {
+            t.add(&c.pipeline.stats.totals());
+        }
+        t
+    }
+
     /// Published residency counts per rung, summed over devices.
     pub fn tier_counts(&self) -> Vec<usize> {
         let mut total = vec![0usize; self.devices[0].preset.ladder.n_tiers()];

@@ -122,15 +122,22 @@ impl HotnessEstimator {
 
     /// Indices of the top-n experts of a layer by score (stable order:
     /// score desc, index asc — determinism matters for reproducibility).
+    /// Same hardening as the planner: `total_cmp` with NaN scored as idle
+    /// (0), so a degenerate config neither panics the diagnostics nor
+    /// ranks a NaN-scored expert hottest while the planner treats it as
+    /// cold.
     pub fn top_n(&self, layer: usize, n: usize) -> Vec<usize> {
         let scores = self.layer_scores(layer);
+        let key = |i: usize| {
+            let s = scores[i];
+            if s.is_nan() {
+                0.0
+            } else {
+                s
+            }
+        };
         let mut idx: Vec<usize> = (0..scores.len()).collect();
-        idx.sort_by(|&a, &b| {
-            scores[b]
-                .partial_cmp(&scores[a])
-                .unwrap()
-                .then(a.cmp(&b))
-        });
+        idx.sort_by(|&a, &b| key(b).total_cmp(&key(a)).then(a.cmp(&b)));
         idx.truncate(n);
         idx
     }

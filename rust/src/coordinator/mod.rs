@@ -29,8 +29,13 @@ use std::sync::Arc;
 pub use budget::{BudgetPlan, BudgetTracker};
 pub use group::DeviceGroup;
 pub use hotness::{DriftDetector, HotnessEstimator};
-pub use pipeline::{Admission, StageFn, TransitionKind, TransitionPipeline};
-pub use policy::{plan_layer, plan_layer_ladder, LadderPlan, LayerPlan};
+pub use pipeline::{
+    Admission, StageFn, TransitionKind, TransitionPipeline, TransitionTotals,
+};
+pub use policy::{
+    plan_layer, plan_layer_ladder, plan_layer_ladder_into, LadderPlan,
+    LadderScratch, LayerPlan, LayerScratch,
+};
 pub use pools::{BlockPool, PoolAlloc};
 pub use ver::{ExpertKey, HandleTable, Residency};
 
@@ -232,6 +237,21 @@ impl Coordinator {
         self.hotness.lock().unwrap().record_layer(layer, experts);
     }
 
+    /// Feed several layers' router traces under a **single** hotness lock
+    /// — the iteration-boundary flush of a backend's per-layer routing
+    /// buffer (DESIGN.md §11). Count-equivalent to calling
+    /// [`Coordinator::record_routing`] once per batch, at 1/L of the lock
+    /// traffic.
+    pub fn record_layers<'a, I>(&self, batches: I)
+    where
+        I: IntoIterator<Item = (usize, &'a [usize])>,
+    {
+        let mut hot = self.hotness.lock().unwrap();
+        for (layer, experts) in batches {
+            hot.record_layer(layer, experts);
+        }
+    }
+
     /// Iteration boundary: publish finished transitions; if the update
     /// interval elapsed, fold counters and reschedule residency.
     pub fn tick(&self, now_s: f64) -> UpdateReport {
@@ -284,12 +304,18 @@ impl Coordinator {
             eff[k.layer as usize][k.expert as usize] = to;
         }
         let cum_caps = self.plan.cumulative_capacity();
+        // One policy scratch + plan buffer reused across the whole layer
+        // loop: a 48-layer update allocates nothing per layer.
+        let mut scratch = LadderScratch::default();
+        let mut plan = LadderPlan::default();
         for l in 0..layers {
-            let plan = plan_layer_ladder(
+            plan_layer_ladder_into(
+                &mut scratch,
                 hot.layer_scores(l),
                 &eff[l],
                 &cum_caps,
                 self.cfg.hysteresis_margin,
+                &mut plan,
             );
             // Downward moves come first in the plan: their evictions grow
             // the feasible set for the upward moves.
@@ -309,6 +335,10 @@ impl Coordinator {
                     }
                     Admission::Deferred => report.deferred += 1,
                     Admission::Redundant => {}
+                    // The planner only emits on-ladder targets; a rejected
+                    // submission is a caller bug surfaced by the pipeline
+                    // stats, never a process abort.
+                    Admission::Rejected => {}
                 }
             }
         }

@@ -55,6 +55,10 @@ pub enum Admission {
     Deferred,
     /// Expert already transitioning or already at the target rung.
     Redundant,
+    /// Target rung is off the ladder — the submission is invalid and has
+    /// no side effects (previously an `assert!` that aborted the process
+    /// mid-serve on a mis-sized rung index).
+    Rejected,
 }
 
 /// Builds the staged bytes for (expert, precision). The numeric engine
@@ -99,9 +103,71 @@ pub struct PipelineStats {
     pub promotions: AtomicU64,
     pub demotions: AtomicU64,
     pub deferred: AtomicU64,
+    pub rejected: AtomicU64,
     pub published: AtomicU64,
     pub evictions: AtomicU64,
     pub migrated_bytes: AtomicU64,
+}
+
+impl PipelineStats {
+    /// Plain-value snapshot of the counters (bench/metrics export).
+    pub fn totals(&self) -> TransitionTotals {
+        let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        TransitionTotals {
+            promotions: ld(&self.promotions),
+            demotions: ld(&self.demotions),
+            deferred: ld(&self.deferred),
+            rejected: ld(&self.rejected),
+            published: ld(&self.published),
+            evictions: ld(&self.evictions),
+            migrated_bytes: ld(&self.migrated_bytes),
+        }
+    }
+}
+
+/// A [`PipelineStats`] snapshot as plain values — what the wall-clock
+/// bench harness reports per cell (and sums across a device group). These
+/// are the allocation-visible proxy counters of DESIGN.md §11: `deferred`
+/// means backpressure (capacity), never a redundant no-op.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransitionTotals {
+    pub promotions: u64,
+    pub demotions: u64,
+    pub deferred: u64,
+    pub rejected: u64,
+    pub published: u64,
+    pub evictions: u64,
+    pub migrated_bytes: u64,
+}
+
+impl TransitionTotals {
+    /// Accumulate another device's counters (device-group aggregation).
+    pub fn add(&mut self, o: &TransitionTotals) {
+        self.promotions += o.promotions;
+        self.demotions += o.demotions;
+        self.deferred += o.deferred;
+        self.rejected += o.rejected;
+        self.published += o.published;
+        self.evictions += o.evictions;
+        self.migrated_bytes += o.migrated_bytes;
+    }
+
+    /// Counter growth since `baseline` (windowed measurement: the bench
+    /// harness subtracts a post-warmup snapshot so cells report the timed
+    /// rounds only). Saturating, so a mismatched baseline cannot wrap.
+    pub fn delta_since(&self, baseline: &TransitionTotals) -> TransitionTotals {
+        TransitionTotals {
+            promotions: self.promotions.saturating_sub(baseline.promotions),
+            demotions: self.demotions.saturating_sub(baseline.demotions),
+            deferred: self.deferred.saturating_sub(baseline.deferred),
+            rejected: self.rejected.saturating_sub(baseline.rejected),
+            published: self.published.saturating_sub(baseline.published),
+            evictions: self.evictions.saturating_sub(baseline.evictions),
+            migrated_bytes: self
+                .migrated_bytes
+                .saturating_sub(baseline.migrated_bytes),
+        }
+    }
 }
 
 /// The transition pipeline. One per engine.
@@ -174,6 +240,13 @@ impl TransitionPipeline {
     }
 
     /// Submit a transition at modeled time `now`.
+    ///
+    /// Admission is decided in a fixed order: validity (on-ladder target)
+    /// → redundancy → capacity. Redundancy before capacity matters for
+    /// the stats contract: a redundant submission against a *full*
+    /// pipeline is [`Admission::Redundant`], not [`Admission::Deferred`]
+    /// — `deferred` counts backpressure only, which is what the bench
+    /// harness reports as a hot-path proxy counter.
     pub fn submit(
         &self,
         key: ExpertKey,
@@ -182,16 +255,17 @@ impl TransitionPipeline {
     ) -> Admission {
         let to = kind.target();
         let base = self.ladder.base_tier();
-        assert!(to <= base, "target rung {to} off the ladder");
+        if to > base {
+            // Off-ladder target: reject with no side effects instead of
+            // aborting the process mid-serve on a caller's mis-sized
+            // rung index.
+            self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            return Admission::Rejected;
+        }
 
         // Reclaim superseded buffers first — eviction priority under
         // pressure increases the feasible set for this admission.
         self.drain_evictions();
-
-        if self.inflight.lock().unwrap().len() >= self.max_inflight {
-            self.stats.deferred.fetch_add(1, Ordering::Relaxed);
-            return Admission::Deferred;
-        }
 
         let from = {
             let entry = self.handles.entry(key);
@@ -201,6 +275,11 @@ impl TransitionPipeline {
             }
             cur
         };
+
+        if self.inflight.lock().unwrap().len() >= self.max_inflight {
+            self.stats.deferred.fetch_add(1, Ordering::Relaxed);
+            return Admission::Deferred;
+        }
 
         // Admission control: budget reservation at the destination rung
         // before anything else (the base rung is statically provisioned).
@@ -557,6 +636,61 @@ mod tests {
             p.submit(ExpertKey::new(0, 2), PROMOTE, 0.0),
             Admission::Deferred
         );
+    }
+
+    #[test]
+    fn redundant_submission_against_full_pipeline_is_redundant() {
+        // Regression: the capacity check used to run before the
+        // redundancy check, so resubmitting an already-in-flight expert
+        // against a full pipeline was miscounted `deferred`. Redundancy
+        // is decided first now.
+        let ladder =
+            PrecisionLadder::two_tier(Precision::Fp16, Precision::Int4);
+        let handles = Arc::new(HandleTable::new(1, 8, ladder));
+        let b_hi = expert_bytes(Precision::Fp16);
+        let budget = Arc::new(BudgetTracker::new(8 * b_hi, 0));
+        let pool_hi = Arc::new(BlockPool::new("hi", 8 * b_hi, b_hi));
+        let pool_lo = Arc::new(BlockPool::new("lo", 8, 1));
+        let p = TransitionPipeline::new(
+            handles,
+            budget,
+            vec![pool_hi, pool_lo],
+            1e-9,
+            Box::new(expert_bytes),
+            1, // cap: the pipeline is full after one admission
+            Arc::new(|_, _| Vec::new()),
+        );
+        let k = ExpertKey::new(0, 0);
+        assert!(matches!(p.submit(k, PROMOTE, 0.0), Admission::Admitted { .. }));
+        // same expert, pipeline full → Redundant, deferred stat untouched
+        assert_eq!(p.submit(k, PROMOTE, 0.0), Admission::Redundant);
+        assert_eq!(p.stats.deferred.load(Ordering::Relaxed), 0);
+        // a *different* expert against the full pipeline is real
+        // backpressure and is the only thing `deferred` counts
+        assert_eq!(
+            p.submit(ExpertKey::new(0, 1), PROMOTE, 0.0),
+            Admission::Deferred
+        );
+        assert_eq!(p.stats.deferred.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn off_ladder_target_rejected_without_side_effects() {
+        // Hardened satellite: a mis-sized rung index from a future caller
+        // must not abort the process — it is rejected with zero state
+        // change and the pipeline keeps serving.
+        let (h, b, p) = mk_pipeline(4, 2);
+        let k = ExpertKey::new(0, 2);
+        let adm = p.submit(k, TransitionKind::ToTier(99), 0.0);
+        assert_eq!(adm, Admission::Rejected);
+        assert_eq!(p.stats.rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(p.inflight_count(), 0);
+        assert_eq!(b.hi_used(), 0, "no reservation leaked");
+        assert_eq!(h.resolve(k), Precision::Int4, "residency untouched");
+        // the pipeline still admits valid work afterwards
+        assert!(matches!(p.submit(k, PROMOTE, 0.0), Admission::Admitted { .. }));
+        assert_eq!(p.stats.totals().rejected, 1);
+        assert_eq!(p.stats.totals().promotions, 1);
     }
 
     #[test]

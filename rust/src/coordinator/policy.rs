@@ -33,6 +33,36 @@ impl LayerPlan {
     }
 }
 
+/// NaN-proof score accessor: a NaN score is treated as idle (0 traffic),
+/// so it can neither be promoted nor outrank a resident. Reachable NaN
+/// sources (drift-triggered `stale_decay` rescaling of a degenerate EMA
+/// state, a pathological user-supplied α) previously panicked the
+/// planner's `partial_cmp(..).unwrap()` comparators; combined with
+/// [`f64::total_cmp`] the planner now has a total order for any input.
+#[inline]
+fn score_of(scores: &[f64], e: usize) -> f64 {
+    let s = scores[e];
+    if s.is_nan() {
+        0.0
+    } else {
+        s
+    }
+}
+
+/// Reusable buffers for [`plan_layer_into`]. One instance amortizes every
+/// per-call allocation of the planner (order/residents/members and the
+/// hysteresis pairing lists) across the coordinator's per-layer loop —
+/// `Coordinator::tick` plans all 48 logical layers with one scratch.
+#[derive(Default)]
+pub struct LayerScratch {
+    order: Vec<usize>,
+    residents: Vec<usize>,
+    members: HashSet<usize>,
+    sorted_members: Vec<usize>,
+    outsiders: Vec<usize>,
+    weak: Vec<usize>,
+}
+
 /// Compute the target delta for one layer.
 ///
 /// * `scores` — smoothed hotness per expert
@@ -44,44 +74,64 @@ impl LayerPlan {
 /// Swaps are paired strongest-candidate vs weakest-resident; a swap is
 /// emitted only if `S[cand] > S[weak] + margin · mean(S[residents])`.
 /// Capacity shrink (current > n_hi) demotes the weakest unconditionally.
+///
+/// Allocating convenience wrapper around [`plan_layer_into`] — identical
+/// output by construction.
 pub fn plan_layer(
     scores: &[f64],
     current: &HashSet<usize>,
     n_hi: usize,
     margin: f64,
 ) -> LayerPlan {
+    let mut scratch = LayerScratch::default();
     let mut plan = LayerPlan::default();
-    let order = {
-        let mut idx: Vec<usize> = (0..scores.len()).collect();
-        idx.sort_by(|&a, &b| {
-            scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b))
-        });
-        idx
-    };
+    plan_layer_into(&mut scratch, scores, current, n_hi, margin, &mut plan);
+    plan
+}
+
+/// [`plan_layer`] into caller-owned scratch and output buffers — the
+/// allocation-free hot-path variant.
+pub fn plan_layer_into(
+    s: &mut LayerScratch,
+    scores: &[f64],
+    current: &HashSet<usize>,
+    n_hi: usize,
+    margin: f64,
+    plan: &mut LayerPlan,
+) {
+    plan.promote.clear();
+    plan.demote.clear();
+
+    s.order.clear();
+    s.order.extend(0..scores.len());
+    s.order.sort_by(|&a, &b| {
+        score_of(scores, b).total_cmp(&score_of(scores, a)).then(a.cmp(&b))
+    });
 
     // Residents weakest-first for pairing.
-    let mut residents: Vec<usize> = current.iter().copied().collect();
-    residents.sort_by(|&a, &b| {
-        scores[a].partial_cmp(&scores[b]).unwrap().then(b.cmp(&a))
+    s.residents.clear();
+    s.residents.extend(current.iter().copied());
+    s.residents.sort_by(|&a, &b| {
+        score_of(scores, a).total_cmp(&score_of(scores, b)).then(b.cmp(&a))
     });
 
     // Shrink to capacity first (eviction-priority under tight budget).
-    while residents.len() > n_hi {
-        let weakest = residents.remove(0);
-        plan.demote.push(weakest);
-    }
+    let extra = s.residents.len().saturating_sub(n_hi);
+    plan.demote.extend_from_slice(&s.residents[..extra]);
+    let kept = &s.residents[extra..];
 
     // Fill spare capacity with the hottest *trafficked* outsiders.
-    let mut members: HashSet<usize> = residents.iter().copied().collect();
-    for &e in &order {
-        if members.len() >= n_hi {
+    s.members.clear();
+    s.members.extend(kept.iter().copied());
+    for &e in &s.order {
+        if s.members.len() >= n_hi {
             break;
         }
-        if scores[e] <= 0.0 {
+        if score_of(scores, e) <= 0.0 {
             break; // order is sorted: everything after is idle too
         }
-        if !members.contains(&e) {
-            members.insert(e);
+        if !s.members.contains(&e) {
+            s.members.insert(e);
             plan.promote.push(e);
         }
     }
@@ -90,35 +140,36 @@ pub fn plan_layer(
     // is summed in index order — summing in HashSet iteration order would
     // make the float result (and thus, at the margin, the plan) depend on
     // the process-random hash seed, breaking byte-stable replay.
-    let mean_resident = if members.is_empty() {
+    let mean_resident = if s.members.is_empty() {
         0.0
     } else {
-        let mut ms: Vec<usize> = members.iter().copied().collect();
-        ms.sort_unstable();
-        ms.iter().map(|&e| scores[e]).sum::<f64>() / ms.len() as f64
+        s.sorted_members.clear();
+        s.sorted_members.extend(s.members.iter().copied());
+        s.sorted_members.sort_unstable();
+        s.sorted_members.iter().map(|&e| score_of(scores, e)).sum::<f64>()
+            / s.sorted_members.len() as f64
     };
     let threshold = margin * mean_resident;
-    let mut out: Vec<usize> = order
-        .iter()
-        .copied()
-        .filter(|&e| !members.contains(&e) && scores[e] > 0.0)
-        .collect();
-    let mut weak: Vec<usize> = residents
-        .iter()
-        .copied()
-        .filter(|e| members.contains(e))
-        .collect();
-    while let (Some(&cand), Some(&w)) = (out.first(), weak.first()) {
-        if scores[cand] > scores[w] + threshold + f64::EPSILON {
+    s.outsiders.clear();
+    s.outsiders.extend(s.order.iter().copied().filter(|&e| {
+        !s.members.contains(&e) && score_of(scores, e) > 0.0
+    }));
+    s.weak.clear();
+    s.weak.extend(kept.iter().copied().filter(|e| s.members.contains(e)));
+    let (mut oi, mut wi) = (0, 0);
+    while oi < s.outsiders.len() && wi < s.weak.len() {
+        let (cand, w) = (s.outsiders[oi], s.weak[wi]);
+        if score_of(scores, cand)
+            > score_of(scores, w) + threshold + f64::EPSILON
+        {
             plan.promote.push(cand);
             plan.demote.push(w);
-            out.remove(0);
-            weak.remove(0);
+            oi += 1;
+            wi += 1;
         } else {
             break;
         }
     }
-    plan
 }
 
 /// One layer's tier-assignment delta for the transition pipeline.
@@ -158,24 +209,72 @@ pub fn plan_layer_ladder(
     cum_caps: &[usize],
     margin: f64,
 ) -> LadderPlan {
+    let mut scratch = LadderScratch::default();
+    let mut plan = LadderPlan::default();
+    plan_layer_ladder_into(
+        &mut scratch,
+        scores,
+        current_tier,
+        cum_caps,
+        margin,
+        &mut plan,
+    );
+    plan
+}
+
+/// Reusable buffers for [`plan_layer_ladder_into`]: the per-boundary
+/// current/membership sets plus the inner [`LayerScratch`], reused across
+/// every layer of a [`Coordinator::tick`] update.
+///
+/// [`Coordinator::tick`]: super::Coordinator::tick
+#[derive(Default)]
+pub struct LadderScratch {
+    layer: LayerScratch,
+    delta: LayerPlan,
+    current: HashSet<usize>,
+    memberships: Vec<HashSet<usize>>,
+}
+
+/// [`plan_layer_ladder`] into caller-owned scratch and output buffers —
+/// the allocation-free variant the coordinator's update loop runs.
+pub fn plan_layer_ladder_into(
+    s: &mut LadderScratch,
+    scores: &[f64],
+    current_tier: &[usize],
+    cum_caps: &[usize],
+    margin: f64,
+    plan: &mut LadderPlan,
+) {
     debug_assert_eq!(scores.len(), current_tier.len());
     let n_boundaries = cum_caps.len();
     let base = n_boundaries;
-    let mut memberships: Vec<HashSet<usize>> =
-        Vec::with_capacity(n_boundaries);
+    if s.memberships.len() < n_boundaries {
+        s.memberships.resize_with(n_boundaries, HashSet::new);
+    }
     for t in 0..n_boundaries {
-        let current: HashSet<usize> = (0..current_tier.len())
-            .filter(|&e| current_tier[e] <= t)
-            .collect();
-        let delta = plan_layer(scores, &current, cum_caps[t], margin);
-        let mut m = current;
-        for &e in &delta.demote {
+        s.current.clear();
+        s.current.extend(
+            (0..current_tier.len()).filter(|&e| current_tier[e] <= t),
+        );
+        plan_layer_into(
+            &mut s.layer,
+            scores,
+            &s.current,
+            cum_caps[t],
+            margin,
+            &mut s.delta,
+        );
+        let (prevs, rest) = s.memberships.split_at_mut(t);
+        let m = &mut rest[0];
+        m.clear();
+        m.extend(s.current.iter().copied());
+        for &e in &s.delta.demote {
             m.remove(&e);
         }
-        for &e in &delta.promote {
+        for &e in &s.delta.promote {
             m.insert(e);
         }
-        if let Some(prev) = memberships.last() {
+        if let Some(prev) = prevs.last() {
             // Nesting: whatever sits above a shallower boundary also sits
             // above this one; if the union overflows the cumulative cap,
             // the weakest non-nested members fall below this boundary.
@@ -188,9 +287,8 @@ pub fn plan_layer_ladder(
                     .copied()
                     .filter(|e| !prev.contains(e))
                     .min_by(|&a, &b| {
-                        scores[a]
-                            .partial_cmp(&scores[b])
-                            .unwrap()
+                        score_of(scores, a)
+                            .total_cmp(&score_of(scores, b))
                             .then(b.cmp(&a))
                     });
                 match weakest {
@@ -201,26 +299,30 @@ pub fn plan_layer_ladder(
                 }
             }
         }
-        memberships.push(m);
     }
+    let memberships = &s.memberships[..n_boundaries];
     let target = |e: usize| -> usize {
         memberships
             .iter()
             .position(|m| m.contains(&e))
             .unwrap_or(base)
     };
-    let mut downs = Vec::new();
-    let mut ups = Vec::new();
+    // Downward moves first (their evictions grow the feasible set for the
+    // upward ones), each group in expert-index order — the same order the
+    // historical two-list construction produced.
+    plan.moves.clear();
     for e in 0..scores.len() {
         let t = target(e);
-        match t.cmp(&current_tier[e]) {
-            std::cmp::Ordering::Greater => downs.push((e, t)),
-            std::cmp::Ordering::Less => ups.push((e, t)),
-            std::cmp::Ordering::Equal => {}
+        if t > current_tier[e] {
+            plan.moves.push((e, t));
         }
     }
-    downs.extend(ups);
-    LadderPlan { moves: downs }
+    for e in 0..scores.len() {
+        let t = target(e);
+        if t < current_tier[e] {
+            plan.moves.push((e, t));
+        }
+    }
 }
 
 #[cfg(test)]
@@ -361,6 +463,81 @@ mod tests {
             idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
             let want: HashSet<usize> = idx[..n_hi].iter().copied().collect();
             assert_eq!(after, want);
+        });
+    }
+
+    #[test]
+    fn nan_and_infinite_scores_never_panic() {
+        // Regression: `partial_cmp(..).unwrap()` panicked on NaN scores
+        // (reachable through drift-triggered stale_decay rescaling of a
+        // degenerate EMA state). NaN now totals-orders as idle: the plan
+        // is well-defined and NaN-scored experts are never promoted.
+        let scores = [
+            f64::NAN,
+            5.0,
+            f64::INFINITY,
+            -1.0,
+            f64::NEG_INFINITY,
+            f64::NAN,
+        ];
+        let p = plan_layer(&scores, &set(&[0, 3]), 2, 0.2);
+        for &e in &p.promote {
+            assert!(scores[e] > 0.0, "NaN/idle expert {e} promoted");
+        }
+        // the clear winners displace the NaN/negative residents
+        assert_eq!(p.promote, vec![2, 1]);
+        assert_eq!(p.demote, vec![3, 0]);
+
+        // the ladder planner hits the same comparators via tick
+        let current = [1usize; 6];
+        let lp = plan_layer_ladder(&scores, &current, &[2], 0.2);
+        for &(e, t) in &lp.moves {
+            if t == 0 {
+                assert!(scores[e] > 0.0, "NaN expert {e} moved up");
+            }
+        }
+
+        // an all-NaN layer is inert, not a crash
+        let all_nan = [f64::NAN; 4];
+        let p = plan_layer(&all_nan, &set(&[1]), 2, 0.0);
+        assert!(p.is_empty(), "{p:?}");
+        let lp = plan_layer_ladder(&all_nan, &[1, 1, 1, 1], &[2], 0.0);
+        assert!(lp.is_empty(), "{lp:?}");
+    }
+
+    #[test]
+    fn prop_scratch_reuse_matches_fresh_allocation() {
+        // One LadderScratch reused across many random layers (the
+        // coordinator's update loop shape) must produce exactly the plans
+        // a fresh allocation per call produces — no state leaks between
+        // calls.
+        let mut prop = Prop::new("policy_scratch_reuse");
+        let mut scratch = LadderScratch::default();
+        let mut plan = LadderPlan::default();
+        prop.run(60, |rng| {
+            let e = 4 + rng.below(40);
+            let scores: Vec<f64> =
+                (0..e).map(|_| rng.next_f64() * 10.0).collect();
+            let n_tiers = 2 + rng.below(2);
+            let mut cum_caps = Vec::new();
+            let mut cum = 0;
+            for _ in 0..n_tiers - 1 {
+                cum += rng.below(e / 2 + 1);
+                cum_caps.push(cum.min(e));
+            }
+            let current: Vec<usize> =
+                (0..e).map(|_| rng.below(n_tiers)).collect();
+            let margin = rng.range_f64(0.0, 0.4);
+            let fresh = plan_layer_ladder(&scores, &current, &cum_caps, margin);
+            plan_layer_ladder_into(
+                &mut scratch,
+                &scores,
+                &current,
+                &cum_caps,
+                margin,
+                &mut plan,
+            );
+            assert_eq!(fresh, plan);
         });
     }
 

@@ -44,7 +44,7 @@ pub mod quality_exp {
     }
 }
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::cli::Args;
 
@@ -108,6 +108,54 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         // machine-readable snapshot (MetricsSnapshot kv encoding)
         println!("{}", session.snapshot().encode());
     }
+    Ok(())
+}
+
+/// `dynaexq bench` — the wall-clock serving benchmark matrix
+/// (DESIGN.md §11): run method × scenario × devices × batch cells under
+/// host wall-clock timing and emit the machine-readable
+/// `BENCH_serving.json` perf trajectory.
+pub fn cmd_bench(args: &Args) -> Result<()> {
+    use crate::bench::runtime::{
+        report_to_json, run_matrix, validate_report_json, BenchMatrix,
+    };
+    let smoke = args.has("smoke");
+    // Smoke mode (CI) defaults to the small preset; the full matrix runs
+    // the paper's headline model.
+    let model =
+        args.get_or("model", if smoke { "phi-sim" } else { "qwen30b-sim" });
+    let out = args.get_or("out", "BENCH_serving.json");
+    let mut matrix = if smoke {
+        BenchMatrix::smoke(model)
+    } else {
+        BenchMatrix::full(model)
+    };
+    if let Some(p) = args.get_parse::<usize>("prompt") {
+        matrix.prompt_len = p;
+    }
+    if let Some(o) = args.get_parse::<usize>("output") {
+        matrix.output_len = o;
+    }
+    if let Some(s) = args.get_parse::<u64>("seed") {
+        matrix.seed = s;
+    }
+    println!(
+        "bench: {} cells ({} methods × {} scenarios × {:?} devices × \
+         {:?} batches) on {model}",
+        matrix.n_cells(),
+        matrix.methods.len(),
+        matrix.scenarios.len(),
+        matrix.devices,
+        matrix.batches,
+    );
+    let report = run_matrix(&matrix, |line| eprintln!("{line}"))?;
+    println!("{}", crate::bench::runtime::render_table(&report));
+    let json = report_to_json(&report);
+    // Self-check the schema contract before anything consumes the file.
+    validate_report_json(&json)?;
+    std::fs::write(out, &json)
+        .with_context(|| format!("writing {out}"))?;
+    println!("wrote {} cells to {out}", report.cells.len());
     Ok(())
 }
 

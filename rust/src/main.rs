@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //! * `serve`   — run a modeled serving session and print metrics
+//! * `bench`   — wall-clock serving benchmark matrix → BENCH_serving.json
 //! * `report`  — regenerate one paper table/figure (`--exp t1|t2|f1|f2|f3|
 //!   t4|f6|f7|f8|f9|f10|a1..a8`)
 //! * `quality` — numeric quality run for one model/method
@@ -36,6 +37,14 @@ SUBCOMMANDS:
                --devices N (default 1; sharded methods serve an N-device
                             expert-sharded group with per-device envelopes)
                --kv   (also print the machine-readable metrics snapshot)
+    bench    Wall-clock serving benchmark matrix (DESIGN.md §11): every
+             bench method × scripted scenario × {1,2}-device groups ×
+             batch {1,8,32}, timed on the host clock; emits the
+             machine-readable perf trajectory BENCH_serving.json.
+               --smoke  (single smallest cell — the CI job)
+               --model ...   (default qwen30b-sim; phi-sim under --smoke)
+               --out path    (default BENCH_serving.json)
+               --prompt N --output N --seed S
     report   Regenerate a paper table/figure.
                --exp t1|t2|t4|f1|f2|f3|f6..f10|a1..a10|all  [--fast]
     quality  Numeric quality run (real PJRT execution; needs a build with
@@ -63,6 +72,7 @@ fn main() {
     };
     let result = match args.subcommand.as_str() {
         "serve" => experiments::cmd_serve(&args),
+        "bench" => experiments::cmd_bench(&args),
         "report" => experiments::cmd_report(&args),
         "quality" => experiments::cmd_quality(&args),
         "trace" => experiments::cmd_trace(&args),

@@ -9,9 +9,63 @@
 use std::sync::{Arc, Mutex};
 
 use crate::config::{DeviceConfig, ModelPreset, ServingConfig};
-use crate::coordinator::{Coordinator, DeviceGroup};
+use crate::coordinator::{Coordinator, DeviceGroup, TransitionTotals};
 use crate::model::{Precision, PrecisionLadder};
 use crate::workload::Trace;
+
+/// Per-layer routing events buffered between iteration boundaries.
+///
+/// The engine's hot path calls `record_routing` once per layer per
+/// iteration; locking the coordinator's hotness mutex on each of those
+/// calls serializes the forward pass against the estimator. The DynaExq
+/// backends buffer the events here instead and flush them at the next
+/// `tick`/`quiesce` — one lock per iteration boundary, zero lock traffic
+/// on the hot path, and count-identical hotness state at every point the
+/// policy can read it (the batching contract of DESIGN.md §11).
+#[derive(Default)]
+struct RoutingBuffer {
+    /// One buffer per logical layer (selections concatenate within an
+    /// interval — hotness counts are additive).
+    per_layer: Vec<Vec<usize>>,
+    /// Layers touched since the last flush, in first-touch order.
+    touched: Vec<usize>,
+}
+
+impl RoutingBuffer {
+    fn new(n_layers: usize) -> Self {
+        Self { per_layer: vec![Vec::new(); n_layers], touched: Vec::new() }
+    }
+
+    #[inline]
+    fn record(&mut self, layer: usize, experts: &[usize]) {
+        if experts.is_empty() {
+            return; // an empty batch is a no-op on the estimator
+        }
+        let buf = &mut self.per_layer[layer];
+        if buf.is_empty() {
+            self.touched.push(layer);
+        }
+        buf.extend_from_slice(experts);
+    }
+
+    fn is_empty(&self) -> bool {
+        self.touched.is_empty()
+    }
+
+    /// The buffered (layer, selections) batches in first-touch order.
+    fn batches(&self) -> impl Iterator<Item = (usize, &[usize])> + '_ {
+        self.touched.iter().map(|&l| (l, self.per_layer[l].as_slice()))
+    }
+
+    /// Reset after a flush; buffers keep their capacity.
+    fn reset(&mut self) {
+        for i in 0..self.touched.len() {
+            let l = self.touched[i];
+            self.per_layer[l].clear();
+        }
+        self.touched.clear();
+    }
+}
 
 /// A serving method's residency behaviour.
 pub trait ResidencyBackend: Send {
@@ -109,6 +163,15 @@ pub trait ResidencyBackend: Send {
     /// completion events and every run is reproducible from its seed.
     /// Host-side waiting never adds modeled stall.
     fn sync_staging(&mut self) {}
+
+    /// Transition-pipeline counter totals (promotions / demotions /
+    /// deferred / rejected / published / evictions / migrated bytes),
+    /// summed across devices for sharded groups — the allocation-visible
+    /// proxy counters the wall-clock bench harness records per cell.
+    /// All-zero for backends without a transition pipeline.
+    fn transition_totals(&self) -> TransitionTotals {
+        TransitionTotals::default()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -124,6 +187,9 @@ pub struct DynaExqBackend {
     resolves: u64,
     /// Resolutions served per rung, tier 0 first.
     tier_resolves: Vec<u64>,
+    /// Routing events buffered since the last boundary; flushed under one
+    /// hotness lock in `tick`/`quiesce` (DESIGN.md §11).
+    buf: RoutingBuffer,
 }
 
 impl DynaExqBackend {
@@ -140,7 +206,24 @@ impl DynaExqBackend {
 
     pub fn from_coordinator(coord: Coordinator, blocking: bool) -> Self {
         let n_tiers = coord.preset.ladder.n_tiers();
-        Self { coord, blocking, resolves: 0, tier_resolves: vec![0; n_tiers] }
+        let n_layers = coord.preset.n_layers_logical();
+        Self {
+            buf: RoutingBuffer::new(n_layers),
+            coord,
+            blocking,
+            resolves: 0,
+            tier_resolves: vec![0; n_tiers],
+        }
+    }
+
+    /// Hand the buffered routing events to the coordinator's estimator
+    /// under a single hotness lock.
+    fn flush_routing(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        self.coord.record_layers(self.buf.batches());
+        self.buf.reset();
     }
 }
 
@@ -150,7 +233,10 @@ impl ResidencyBackend for DynaExqBackend {
     }
 
     fn record_routing(&mut self, layer: usize, experts: &[usize]) {
-        self.coord.record_routing(layer, experts);
+        // Lock-free on the hot path: events accumulate here and reach the
+        // hotness estimator at the next iteration boundary — the earliest
+        // point the policy could read them anyway.
+        self.buf.record(layer, experts);
     }
 
     fn resolve(
@@ -167,6 +253,7 @@ impl ResidencyBackend for DynaExqBackend {
     }
 
     fn tick(&mut self, now_s: f64) -> f64 {
+        self.flush_routing();
         let report = self.coord.tick(now_s);
         if self.blocking && report.ran {
             // Ablation A3: synchronize the forward pass with the migration
@@ -214,6 +301,7 @@ impl ResidencyBackend for DynaExqBackend {
         // Alternate policy updates and migration-event publication until
         // the target residency is materialized, then advance far enough
         // that no further update fires mid-measurement.
+        self.flush_routing();
         let interval = self.coord.cfg.update_interval_ms / 1e3;
         let mut now = now_s;
         for _ in 0..8 {
@@ -245,6 +333,10 @@ impl ResidencyBackend for DynaExqBackend {
     fn sync_staging(&mut self) {
         self.coord.pipeline.wait_staged();
     }
+
+    fn transition_totals(&self) -> TransitionTotals {
+        self.coord.pipeline.stats.totals()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -266,6 +358,9 @@ pub struct DynaExqShardedBackend {
     tier_resolves: Vec<u64>,
     /// Scratch: per-device local-id routing split.
     split: Vec<Vec<usize>>,
+    /// Routing events buffered since the last boundary (global expert
+    /// ids); split per device and flushed in `tick`/`quiesce`.
+    buf: RoutingBuffer,
 }
 
 impl DynaExqShardedBackend {
@@ -285,13 +380,28 @@ impl DynaExqShardedBackend {
     pub fn from_group(group: Arc<DeviceGroup>) -> Self {
         let ladder = group.devices[0].preset.ladder.clone();
         let n_tiers = ladder.n_tiers();
+        let n_layers = group.devices[0].preset.n_layers_logical();
         Self {
             split: vec![Vec::new(); group.n_devices()],
+            buf: RoutingBuffer::new(n_layers),
             group,
             ladder,
             resolves: 0,
             tier_resolves: vec![0; n_tiers],
         }
+    }
+
+    /// Split the buffered routing events per owning device and feed each
+    /// device's estimator — per-boundary lock traffic instead of
+    /// per-record.
+    fn flush_routing(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        for (layer, batch) in self.buf.batches() {
+            self.group.record_routing_into(layer, batch, &mut self.split);
+        }
+        self.buf.reset();
     }
 }
 
@@ -301,7 +411,9 @@ impl ResidencyBackend for DynaExqShardedBackend {
     }
 
     fn record_routing(&mut self, layer: usize, experts: &[usize]) {
-        self.group.record_routing_into(layer, experts, &mut self.split);
+        // Lock-free on the hot path (same batching contract as the
+        // single-device backend, DESIGN.md §11).
+        self.buf.record(layer, experts);
     }
 
     fn resolve(
@@ -319,6 +431,7 @@ impl ResidencyBackend for DynaExqShardedBackend {
     }
 
     fn tick(&mut self, now_s: f64) -> f64 {
+        self.flush_routing();
         self.group.tick(now_s);
         0.0
     }
@@ -350,6 +463,7 @@ impl ResidencyBackend for DynaExqShardedBackend {
     }
 
     fn quiesce(&mut self, now_s: f64) -> f64 {
+        self.flush_routing();
         let interval = self.group.update_interval_s();
         let mut now = now_s;
         for _ in 0..8 {
@@ -389,6 +503,10 @@ impl ResidencyBackend for DynaExqShardedBackend {
     fn sync_staging(&mut self) {
         self.group.wait_staged();
     }
+
+    fn transition_totals(&self) -> TransitionTotals {
+        self.group.transition_totals()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -402,6 +520,15 @@ impl ResidencyBackend for DynaExqShardedBackend {
 pub struct RecordingBackend {
     inner: Box<dyn ResidencyBackend>,
     trace: Arc<Mutex<Trace>>,
+    /// Routing events of the current iteration, appended to the shared
+    /// trace under one lock at the next tick. Unlike [`RoutingBuffer`]
+    /// this keeps the exact per-call event sequence (duplicates and empty
+    /// batches included) so recorded traces stay byte-identical to the
+    /// historical per-call recording.
+    pending: Vec<(usize, Vec<usize>)>,
+    /// Retired event buffers, reused to keep the wrapper allocation-free
+    /// at steady state.
+    free: Vec<Vec<usize>>,
 }
 
 impl RecordingBackend {
@@ -413,7 +540,34 @@ impl RecordingBackend {
         n_experts: usize,
     ) -> (Self, Arc<Mutex<Trace>>) {
         let trace = Arc::new(Mutex::new(Trace::new(n_layers, n_experts)));
-        (Self { inner, trace: trace.clone() }, trace)
+        (
+            Self {
+                inner,
+                trace: trace.clone(),
+                pending: Vec::new(),
+                free: Vec::new(),
+            },
+            trace,
+        )
+    }
+
+    /// Append the buffered routing events to the shared trace under one
+    /// lock (in exact call order), optionally followed by the iteration
+    /// boundary marker, and recycle the event buffers.
+    fn flush_pending(&mut self, add_tick: bool) {
+        {
+            let mut t = self.trace.lock().unwrap();
+            for (layer, experts) in &self.pending {
+                t.record(*layer, experts);
+            }
+            if add_tick {
+                t.tick();
+            }
+        }
+        for (_, mut buf) in self.pending.drain(..) {
+            buf.clear();
+            self.free.push(buf);
+        }
     }
 }
 
@@ -423,7 +577,10 @@ impl ResidencyBackend for RecordingBackend {
     }
 
     fn record_routing(&mut self, layer: usize, experts: &[usize]) {
-        self.trace.lock().unwrap().record(layer, experts);
+        let mut buf = self.free.pop().unwrap_or_default();
+        buf.clear();
+        buf.extend_from_slice(experts);
+        self.pending.push((layer, buf));
         self.inner.record_routing(layer, experts);
     }
 
@@ -437,7 +594,9 @@ impl ResidencyBackend for RecordingBackend {
     }
 
     fn tick(&mut self, now_s: f64) -> f64 {
-        self.trace.lock().unwrap().tick();
+        // One trace lock per iteration boundary: the buffered routing
+        // events in call order, then the boundary marker.
+        self.flush_pending(true);
         self.inner.tick(now_s)
     }
 
@@ -458,6 +617,11 @@ impl ResidencyBackend for RecordingBackend {
     }
 
     fn quiesce(&mut self, now_s: f64) -> f64 {
+        // Events recorded since the last boundary reach the inner
+        // backend's estimator through its quiesce flush — they must reach
+        // the trace too (no boundary marker: historical per-call
+        // recording added none here either).
+        self.flush_pending(false);
         self.inner.quiesce(now_s)
     }
 
@@ -491,6 +655,10 @@ impl ResidencyBackend for RecordingBackend {
 
     fn sync_staging(&mut self) {
         self.inner.sync_staging()
+    }
+
+    fn transition_totals(&self) -> TransitionTotals {
+        self.inner.transition_totals()
     }
 }
 
@@ -702,6 +870,35 @@ mod tests {
         );
         assert_eq!(b.promo_queue_depth().len(), 2);
         assert!(b.group.within_envelope());
+    }
+
+    #[test]
+    fn routing_buffer_flushes_at_iteration_boundary() {
+        // The batching contract (DESIGN.md §11): hot-path record_routing
+        // takes no lock; observations reach the estimator at the next
+        // tick, which is also when the interval fold can first read them
+        // — so policy outcomes are identical to per-call recording.
+        let preset = ModelPreset::phi_sim();
+        let cfg = ServingConfig::default();
+        let dev = DeviceConfig::default();
+        let mut b = DynaExqBackend::new(&preset, &cfg, &dev).unwrap();
+        for _ in 0..100 {
+            b.record_routing(0, &[3]);
+        }
+        assert_eq!(b.coord.hotness_score(0, 3), 0.0, "pre-boundary");
+        b.tick(1.0); // past the update interval: flush + fold
+        assert!(b.coord.hotness_score(0, 3) > 0.0, "post-boundary");
+        assert_eq!(b.transition_totals().promotions, 1);
+        // sharded flavour: split-by-device flush at the boundary
+        let mut s =
+            DynaExqShardedBackend::new(&preset, &cfg, &dev, 2).unwrap();
+        for _ in 0..100 {
+            s.record_routing(0, &[0, 1]);
+        }
+        s.tick(1.0);
+        assert!(s.group.devices[0].hotness_score(0, 0) > 0.0);
+        assert!(s.group.devices[1].hotness_score(0, 0) > 0.0);
+        assert!(s.transition_totals().promotions >= 2);
     }
 
     #[test]

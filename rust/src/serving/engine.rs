@@ -84,6 +84,12 @@ pub struct Engine {
     /// Scratch: per-device compute lanes of the current layer (sharded
     /// backends run their shards in parallel; 1 lane = the classic sum).
     lanes: Vec<f64>,
+    /// Scratch: one token's top-k routing picks (reused across every
+    /// routed token — the engine allocates nothing per token).
+    picked: Vec<usize>,
+    /// Scratch: the current layer's flattened router trace (one entry per
+    /// (token, k) selection), handed to the backend once per layer.
+    routed: Vec<usize>,
 }
 
 impl Engine {
@@ -114,6 +120,8 @@ impl Engine {
             counts: vec![0; preset.n_experts],
             touched: Vec::new(),
             lanes: Vec::new(),
+            picked: Vec::with_capacity(preset.top_k),
+            routed: Vec::new(),
             cfg,
         }
     }
@@ -241,21 +249,28 @@ impl Engine {
     ) -> (f64, f64) {
         self.counts.fill(0);
         self.touched.clear();
-        let total: usize = routed_by.iter().map(|&(_, n)| n).sum();
-        let mut routed: Vec<usize> =
-            Vec::with_capacity(total * self.preset.top_k);
+        self.routed.clear();
         for &(id, tokens) in routed_by {
             for _ in 0..tokens {
-                for e in self.sampler.sample_topk(&mut self.rng, id, layer) {
+                // Scratch-buffer sampling: identical RNG stream and expert
+                // order to the allocating path (asserted in bench_smoke),
+                // with zero per-token allocation.
+                self.sampler.sample_topk_into(
+                    &mut self.rng,
+                    id,
+                    layer,
+                    &mut self.picked,
+                );
+                for &e in &self.picked {
                     if self.counts[e] == 0 {
                         self.touched.push(e);
                     }
                     self.counts[e] += 1;
-                    routed.push(e);
+                    self.routed.push(e);
                 }
             }
         }
-        self.backend.record_routing(layer, &routed);
+        self.backend.record_routing(layer, &self.routed);
         if self.cfg.track_activation {
             let ratio =
                 self.touched.len() as f64 / self.preset.n_experts as f64;

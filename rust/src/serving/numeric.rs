@@ -500,10 +500,18 @@ impl NumericEngine {
         for _ in 0..output_len {
             self.decode_step(&mut seqs)?;
         }
-        Ok(GenOutput {
-            tokens: seqs.pop().unwrap().generated,
-            prompt_logits,
-        })
+        Ok(finish_generate(seqs, prompt_logits))
+    }
+}
+
+/// Fold a finished decode run into its output. A run that completes with
+/// zero sequences (an empty request set — every sequence retired or none
+/// admitted) yields an empty token list instead of panicking on
+/// `pop().unwrap()`.
+fn finish_generate(mut seqs: Vec<SeqState>, prompt_logits: Vec<f32>) -> GenOutput {
+    GenOutput {
+        tokens: seqs.pop().map(|s| s.generated).unwrap_or_default(),
+        prompt_logits,
     }
 }
 
@@ -533,5 +541,24 @@ mod tests {
         assert_eq!(argmax(&[1.0, 5.0, 3.0]), 1);
         assert_eq!(argmax(&[-1.0, -5.0]), 0);
         assert_eq!(argmax(&[2.0, 2.0]), 0, "first wins ties");
+    }
+
+    #[test]
+    fn empty_request_set_yields_empty_output() {
+        // Regression: a run completing with zero sequences panicked on
+        // `seqs.pop().unwrap()`; it is now an empty/zero result. (No PJRT
+        // runtime needed — the fold is pure.)
+        let out = finish_generate(Vec::new(), vec![0.25; 4]);
+        assert!(out.tokens.is_empty());
+        assert_eq!(out.prompt_logits, vec![0.25; 4]);
+        // the non-empty path still returns the surviving sequence
+        let seqs = vec![SeqState {
+            kv: KvCache::new(1),
+            last_token: 7,
+            tag: 0,
+            generated: vec![7, 8, 9],
+        }];
+        let out = finish_generate(seqs, Vec::new());
+        assert_eq!(out.tokens, vec![7, 8, 9]);
     }
 }

@@ -110,17 +110,38 @@ impl RoutingSampler {
     }
 
     /// Top-k expert ids for one token of request `request_tag` at `layer`.
+    ///
+    /// Allocates a fresh `Vec` per call — convenience for tests and
+    /// offline calibration. The serving engine's inner loop uses
+    /// [`RoutingSampler::sample_topk_into`] with a reused scratch buffer
+    /// instead (one allocation per engine, not one per routed token);
+    /// both paths draw the identical RNG sequence and expert order.
     pub fn sample_topk(
         &self,
         rng: &mut XorShiftRng,
         request_tag: u64,
         layer: usize,
     ) -> Vec<usize> {
+        let mut picked = Vec::with_capacity(self.top_k);
+        self.sample_topk_into(rng, request_tag, layer, &mut picked);
+        picked
+    }
+
+    /// [`RoutingSampler::sample_topk`] into a caller-provided scratch
+    /// buffer: `out` is cleared and filled with exactly `top_k` distinct
+    /// expert ids. The hot-path variant — no per-token allocation.
+    pub fn sample_topk_into(
+        &self,
+        rng: &mut XorShiftRng,
+        request_tag: u64,
+        layer: usize,
+        out: &mut Vec<usize>,
+    ) {
+        out.clear();
         let perm = &self.perms[layer % self.perms.len()];
         let rot = self.rotation(request_tag);
-        let mut picked = Vec::with_capacity(self.top_k);
         let mut attempts = 0;
-        while picked.len() < self.top_k && attempts < self.top_k * 20 {
+        while out.len() < self.top_k && attempts < self.top_k * 20 {
             attempts += 1;
             let e = if rng.next_f64() < self.local_mix {
                 let rank = draw_rank(rng, &self.cdf_local);
@@ -128,19 +149,18 @@ impl RoutingSampler {
             } else {
                 perm[draw_rank(rng, &self.cdf_global)]
             };
-            if !picked.contains(&e) {
-                picked.push(e);
+            if !out.contains(&e) {
+                out.push(e);
             }
         }
         // Degenerate fallback: fill with the first unpicked experts.
         let mut next = 0;
-        while picked.len() < self.top_k {
-            if !picked.contains(&next) {
-                picked.push(next);
+        while out.len() < self.top_k {
+            if !out.contains(&next) {
+                out.push(next);
             }
             next += 1;
         }
-        picked
     }
 
     /// The globally hottest `n` experts of a layer (ground truth for tests).
@@ -315,6 +335,26 @@ mod tests {
             share(&crowd),
             share(&base)
         );
+    }
+
+    #[test]
+    fn scratch_variant_matches_allocating_path() {
+        // The hot-path scratch buffer must draw the identical RNG stream
+        // and expert order as the allocating convenience wrapper, even
+        // when the buffer is reused (dirty) across calls.
+        for p in WorkloadProfile::all() {
+            let s = sampler(p);
+            let mut rng_a = XorShiftRng::new(0xB0B);
+            let mut rng_b = XorShiftRng::new(0xB0B);
+            let mut scratch = vec![999usize; 32]; // deliberately dirty
+            for tag in 0..200u64 {
+                let layer = (tag % 4) as usize;
+                let fresh = s.sample_topk(&mut rng_a, tag, layer);
+                s.sample_topk_into(&mut rng_b, tag, layer, &mut scratch);
+                assert_eq!(fresh, scratch, "tag {tag}");
+            }
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "RNG streams");
+        }
     }
 
     #[test]

@@ -1,0 +1,128 @@
+//! Bench-harness smoke suite (DESIGN.md §11).
+//!
+//! Runs the smallest bench matrix cell end to end, asserts the emitted
+//! `BENCH_serving.json` parses and carries every required key, and pins
+//! the hot-path refactor's equivalence contract: the scratch-buffer
+//! `sample_topk_into` produces the identical expert sequence (and RNG
+//! stream) to the allocating `sample_topk` path for seeded RNGs.
+
+use dynaexq::bench::json;
+use dynaexq::bench::runtime::{
+    report_to_json, run_cell, run_matrix, validate_report_json, BenchMatrix,
+    BENCH_BATCHES, BENCH_DEVICES, BENCH_METHODS, CELL_KEYS,
+};
+use dynaexq::serving::registry::BackendRegistry;
+use dynaexq::util::XorShiftRng;
+use dynaexq::workload::{RoutingSampler, Scenario, WorkloadProfile};
+
+#[test]
+fn smoke_cell_emits_schema_valid_bench_json() {
+    let matrix = BenchMatrix::smoke("phi-sim");
+    let report = run_matrix(&matrix, |_| {}).expect("smoke matrix runs");
+    assert_eq!(report.cells.len(), 1);
+    let text = report_to_json(&report);
+
+    // The schema self-check the CLI runs before writing the file.
+    validate_report_json(&text).expect("schema-valid");
+
+    // Independently: parse and assert every required key on the cell,
+    // plus the sanity of the values the trajectory is judged on.
+    let doc = json::parse(&text).expect("BENCH_serving.json parses");
+    assert_eq!(
+        doc.get("schema").and_then(|v| v.as_str()),
+        Some("dynaexq-bench-serving/v1")
+    );
+    let cells = doc.get("cells").and_then(|v| v.as_arr()).unwrap();
+    let cell = &cells[0];
+    for &key in CELL_KEYS {
+        assert!(cell.get(key).is_some(), "cell missing required key {key:?}");
+    }
+    assert_eq!(cell.get("method").unwrap().as_str(), Some("dynaexq"));
+    assert_eq!(cell.get("scenario").unwrap().as_str(), Some("steady"));
+    let rounds = cell.get("rounds").unwrap().as_u64().unwrap();
+    assert_eq!(rounds as usize, Scenario::steady().total_rounds());
+    assert!(cell.get("wall_total_s").unwrap().as_f64().unwrap() > 0.0);
+    assert!(
+        cell.get("wall_p95_round_s").unwrap().as_f64().unwrap()
+            >= cell.get("wall_p50_round_s").unwrap().as_f64().unwrap()
+    );
+    assert!(cell.get("modeled_tok_s").unwrap().as_f64().unwrap() > 0.0);
+    // steady × batch 1 × output 4 × 6 rounds → 24 decode tokens
+    assert_eq!(cell.get("decode_tokens").unwrap().as_u64(), Some(24));
+    // dynaexq converged during warmup: the timed rounds resolve hot
+    // traffic at the top rung (migration counters are warmup-excluded
+    // deltas, so a converged steady cell may legitimately report 0)
+    assert!(cell.get("hi_fraction").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn full_matrix_axes_cover_registry_and_canned_scenarios() {
+    // The declared matrix is the acceptance surface: every bench method
+    // must be a registered serving method, and the scenario axis must be
+    // exactly the canned library.
+    let registry = BackendRegistry::with_builtins();
+    for m in BENCH_METHODS {
+        assert!(registry.contains(m), "bench method {m:?} not registered");
+    }
+    let full = BenchMatrix::full("qwen30b-sim");
+    assert_eq!(full.scenarios, Scenario::names());
+    assert_eq!(full.devices, BENCH_DEVICES);
+    assert_eq!(full.batches, BENCH_BATCHES);
+    assert_eq!(
+        full.n_cells(),
+        BENCH_METHODS.len() * Scenario::names().len() * 2 * 3
+    );
+}
+
+#[test]
+fn bench_runs_a_sharded_and_an_adaptive_cell() {
+    // Beyond the smoke cell: one sharded and one adaptive cell of the
+    // full matrix execute and carry live counters (2-device groups and
+    // the drift layer are the axes the smoke cell does not touch).
+    let mut matrix = BenchMatrix::smoke("phi-sim");
+    matrix.prompt_len = 16;
+    matrix.output_len = 2;
+    let sharded = run_cell(&matrix, "dynaexq-sharded", "swap", 2, 2).unwrap();
+    assert_eq!(sharded.devices, 2);
+    assert_eq!(sharded.rounds, Scenario::swap().total_rounds());
+    assert!(sharded.migrated_bytes > 0, "sharded cell migrated nothing");
+    let adaptive =
+        run_cell(&matrix, "dynaexq-adaptive", "steady", 1, 1).unwrap();
+    assert_eq!(adaptive.drift_events, 0, "steady traffic must not drift");
+}
+
+#[test]
+fn scratch_sample_topk_identical_to_allocation_path() {
+    // Acceptance contract: the scratch-buffer sampler the engine now
+    // runs produces the identical expert sequence to the old allocating
+    // path for seeded RNGs — across profiles, layers, and request tags,
+    // with the scratch buffer reused (dirty) between calls.
+    for profile in WorkloadProfile::all() {
+        for seed in [1u64, 0xDC, 0xBE4C] {
+            let sampler = RoutingSampler::new(&profile, 4, 128, 8);
+            let mut rng_alloc = XorShiftRng::new(seed);
+            let mut rng_scratch = XorShiftRng::new(seed);
+            let mut scratch = Vec::new();
+            let mut total = 0usize;
+            for tag in 0..300u64 {
+                let layer = (tag % 4) as usize;
+                let fresh = sampler.sample_topk(&mut rng_alloc, tag, layer);
+                sampler.sample_topk_into(
+                    &mut rng_scratch,
+                    tag,
+                    layer,
+                    &mut scratch,
+                );
+                assert_eq!(
+                    fresh, scratch,
+                    "{}: divergence at seed {seed:#x} tag {tag}",
+                    profile.name
+                );
+                total += scratch.len();
+            }
+            // identical RNG state afterwards — the streams never forked
+            assert_eq!(rng_alloc.next_u64(), rng_scratch.next_u64());
+            assert_eq!(total, 300 * 8);
+        }
+    }
+}
