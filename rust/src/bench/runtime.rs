@@ -20,18 +20,21 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{DeviceConfig, ServingConfig};
+use crate::config::frontdoor::{FrontDoorConfig, Lane};
+use crate::config::{kv, DeviceConfig, ServingConfig};
 use crate::coordinator::TransitionTotals;
 use crate::experiments::helpers;
 use crate::serving::engine::{Engine, EngineConfig};
+use crate::serving::frontdoor::FrontDoor;
 use crate::util::percentile;
-use crate::workload::Scenario;
+use crate::workload::{RequestGenerator, Scenario};
 
 use super::json::{self, Json};
 use super::Table;
 
 /// Schema tag stamped into every report; bump on breaking changes.
-pub const BENCH_SCHEMA: &str = "dynaexq-bench-serving/v1";
+/// v2: the `frontdoor` axis and per-lane front-door cell columns.
+pub const BENCH_SCHEMA: &str = "dynaexq-bench-serving/v2";
 
 /// Serving methods benchmarked by the full matrix: every registry method
 /// that serves traffic as a *method under comparison*. The quality
@@ -83,6 +86,12 @@ pub const CELL_KEYS: &[&str] = &[
     "evictions",
     "drift_events",
     "drift_recovery_ticks",
+    "frontdoor",
+    "fd_lane_admitted",
+    "fd_lane_rejected",
+    "fd_lane_deadline_miss",
+    "fd_lane_ttft_p50_s",
+    "fd_lane_ttft_p95_s",
 ];
 
 /// The benchmark matrix: which cells run and at what workload shape.
@@ -99,6 +108,11 @@ pub struct BenchMatrix {
     /// converge; allocator/branch caches warm).
     pub warmup_rounds: usize,
     pub seed: u64,
+    /// Front-door axis: `false` serves rounds directly (the pre-§12
+    /// path), `true` routes every request through a bounded
+    /// [`FrontDoor`] + SLO scheduler, recording per-lane p50/p95 TTFT
+    /// and typed-rejection totals.
+    pub frontdoor: Vec<bool>,
 }
 
 impl BenchMatrix {
@@ -118,11 +132,14 @@ impl BenchMatrix {
             output_len: 8,
             warmup_rounds: 1,
             seed: 0xBE4C,
+            frontdoor: vec![false, true],
         }
     }
 
-    /// The smallest cell — what CI's `bench-smoke` job runs on every
-    /// push: one method, one scenario, one device, batch 1.
+    /// The smallest matrix — what CI's `bench-smoke` job runs on every
+    /// push: one method, one scenario, one device, batch 1, both sides
+    /// of the front-door axis (so the queue path is exercised on every
+    /// push).
     pub fn smoke(model: &str) -> Self {
         Self {
             model: model.to_string(),
@@ -134,6 +151,7 @@ impl BenchMatrix {
             output_len: 4,
             warmup_rounds: 1,
             seed: 0xBE4C,
+            frontdoor: vec![false, true],
         }
     }
 
@@ -143,7 +161,57 @@ impl BenchMatrix {
             * self.scenarios.len()
             * self.devices.len()
             * self.batches.len()
+            * self.frontdoor.len()
     }
+}
+
+/// Narrow a matrix to the axis values selected by a `--filter` spec:
+/// comma-separated `key=value` pairs over `method`, `scenario`,
+/// `devices`, `batch`, and `frontdoor` (`0/false/off` or `1/true/on`).
+/// Unknown keys and filters that empty an axis are errors — a bench that
+/// silently ran zero cells would read as a clean pass.
+pub fn apply_filter(matrix: &mut BenchMatrix, spec: &str) -> Result<()> {
+    let m = kv::parse_kv(spec);
+    let mut keys: Vec<&String> = m.keys().collect();
+    keys.sort();
+    for key in keys {
+        let val = &m[key];
+        match key.as_str() {
+            "method" => matrix.methods.retain(|x| x == val),
+            "scenario" => matrix.scenarios.retain(|x| x == val),
+            "devices" => {
+                let n: usize = val
+                    .parse()
+                    .with_context(|| format!("bad devices filter {val:?}"))?;
+                matrix.devices.retain(|&x| x == n);
+            }
+            "batch" => {
+                let n: usize = val
+                    .parse()
+                    .with_context(|| format!("bad batch filter {val:?}"))?;
+                matrix.batches.retain(|&x| x == n);
+            }
+            "frontdoor" => {
+                let want = match val.as_str() {
+                    "1" | "true" | "on" => true,
+                    "0" | "false" | "off" => false,
+                    _ => bail!(
+                        "bad frontdoor filter {val:?} (use 0/false/off or \
+                         1/true/on)"
+                    ),
+                };
+                matrix.frontdoor.retain(|&x| x == want);
+            }
+            other => bail!(
+                "unknown filter key {other:?}; filterable axes: batch, \
+                 devices, frontdoor, method, scenario"
+            ),
+        }
+    }
+    if matrix.n_cells() == 0 {
+        bail!("filter {spec:?} matches no cells of the declared matrix");
+    }
+    Ok(())
 }
 
 /// One measured matrix cell.
@@ -174,6 +242,20 @@ pub struct BenchCell {
     pub transitions: TransitionTotals,
     pub drift_events: u64,
     pub drift_recovery_ticks: u64,
+    /// Whether the cell served through the bounded front door.
+    pub frontdoor: bool,
+    /// Per-lane admissions (interactive|standard|batch order); empty for
+    /// non-front-door cells.
+    pub fd_lane_admitted: Vec<u64>,
+    /// Per-lane typed rejections (same order).
+    pub fd_lane_rejected: Vec<u64>,
+    /// Per-lane SLO deadline misses among served requests (same order).
+    pub fd_lane_deadline_miss: Vec<u64>,
+    /// Per-lane TTFT p50, modeled seconds (0.0 for lanes with no
+    /// traffic).
+    pub fd_lane_ttft_p50_s: Vec<f64>,
+    /// Per-lane TTFT p95, modeled seconds.
+    pub fd_lane_ttft_p95_s: Vec<f64>,
 }
 
 /// A full matrix run.
@@ -182,15 +264,28 @@ pub struct BenchReport {
     pub cells: Vec<BenchCell>,
 }
 
+/// Front-door configuration the bench's queue-path cells run under: the
+/// default SLO classes with the queue bound tied to the batch size, so
+/// load-scaled surges (burst's 2× crowd) overflow into real typed
+/// rejections while steady cells admit everything.
+fn frontdoor_bench_cfg(batch: usize) -> FrontDoorConfig {
+    let mut cfg = FrontDoorConfig::default();
+    cfg.queue_capacity = (batch * 3 / 2).max(2);
+    cfg
+}
+
 /// Run one cell: build the method's backend at the requested group
 /// width, warm it, then serve the scenario end to end with per-round
-/// wall-clock sampling.
+/// wall-clock sampling. With `frontdoor` set, every request is submitted
+/// through a bounded [`FrontDoor`] under the phase's tenant/lane tags
+/// and drained through the SLO scheduler each round.
 pub fn run_cell(
     matrix: &BenchMatrix,
     method: &str,
     scenario_name: &str,
     devices: usize,
     batch: usize,
+    frontdoor: bool,
 ) -> Result<BenchCell> {
     let preset = helpers::preset(&matrix.model)?;
     let sc = helpers::scenario(scenario_name)?;
@@ -227,23 +322,85 @@ pub fn run_cell(
     let transitions0 = engine.backend.transition_totals();
     let drift0 = engine.backend.drift_stats();
 
+    let mut fd = if frontdoor {
+        Some(
+            FrontDoor::new(frontdoor_bench_cfg(batch))
+                .map_err(anyhow::Error::msg)?,
+        )
+    } else {
+        None
+    };
+    // One generator across phases: the scheduler tags requests by id, so
+    // ids must stay unique across every drain of the cell.
+    let mut gen = RequestGenerator::new(
+        sc.phases[0].profile.clone(),
+        matrix.seed ^ 0xFD00,
+    );
+
     let mut samples = Vec::with_capacity(sc.total_rounds());
     let t_all = Instant::now();
     for phase in &sc.phases {
         engine.set_profile(&phase.profile);
         let b = Scenario::scaled_batch(batch, phase.load);
-        for _ in 0..phase.rounds {
-            let t0 = Instant::now();
-            engine.serve_uniform(
-                &phase.profile,
-                b,
-                matrix.prompt_len,
-                matrix.output_len,
-            );
-            samples.push(t0.elapsed().as_secs_f64());
+        match &mut fd {
+            None => {
+                for _ in 0..phase.rounds {
+                    let t0 = Instant::now();
+                    engine.serve_uniform(
+                        &phase.profile,
+                        b,
+                        matrix.prompt_len,
+                        matrix.output_len,
+                    );
+                    samples.push(t0.elapsed().as_secs_f64());
+                }
+            }
+            Some(fd) => {
+                gen.set_profile(phase.profile.clone());
+                let tenant = phase
+                    .tenant
+                    .clone()
+                    .unwrap_or_else(|| phase.profile.name.to_string());
+                for _ in 0..phase.rounds {
+                    let t0 = Instant::now();
+                    let now = engine.now();
+                    for _ in 0..b {
+                        let req = gen.request(
+                            matrix.prompt_len,
+                            matrix.output_len,
+                            now,
+                        );
+                        // typed rejections are the measured outcome here
+                        let _ = fd.submit(req, &tenant, phase.lane, now);
+                    }
+                    let (mut sched, reqs) = fd.take_scheduled();
+                    engine.serve_with(&mut sched, reqs);
+                    fd.absorb(&sched);
+                    samples.push(t0.elapsed().as_secs_f64());
+                }
+            }
         }
     }
     let wall_total_s = t_all.elapsed().as_secs_f64();
+
+    let (fd_adm, fd_rej, fd_miss, fd_p50, fd_p95) = match &fd {
+        Some(fd) => (
+            fd.stats().lane_admitted(),
+            fd.stats().lane_rejected(),
+            fd.stats().lane_deadline_miss(),
+            Lane::ALL
+                .iter()
+                .map(|&l| percentile(fd.lane_ttft(l), 50.0))
+                .collect(),
+            Lane::ALL
+                .iter()
+                .map(|&l| percentile(fd.lane_ttft(l), 95.0))
+                .collect(),
+        ),
+        None => {
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new())
+        }
+    };
 
     let m = &engine.metrics;
     let modeled_duration_s = engine.now() - modeled_start;
@@ -277,6 +434,12 @@ pub fn run_cell(
             .delta_since(&transitions0),
         drift_events: drift_events.saturating_sub(drift0.0),
         drift_recovery_ticks: drift_recovery_ticks.saturating_sub(drift0.1),
+        frontdoor,
+        fd_lane_admitted: fd_adm,
+        fd_lane_rejected: fd_rej,
+        fd_lane_deadline_miss: fd_miss,
+        fd_lane_ttft_p50_s: fd_p50,
+        fd_lane_ttft_p95_s: fd_p95,
     })
 }
 
@@ -292,21 +455,28 @@ pub fn run_matrix(
         for scenario in &matrix.scenarios {
             for &devices in &matrix.devices {
                 for &batch in &matrix.batches {
-                    let cell =
-                        run_cell(matrix, method, scenario, devices, batch)
-                            .with_context(|| {
-                                format!(
-                                    "cell {method}×{scenario}×{devices}dev\
-                                     ×b{batch}"
-                                )
-                            })?;
-                    progress(&format!(
-                        "[{}/{total}] {method:<22} {scenario:<12} \
-                         {devices}dev b{batch:<3} {} / round (p50)",
-                        cells.len() + 1,
-                        super::human(cell.wall_p50_round_s),
-                    ));
-                    cells.push(cell);
+                    for &frontdoor in &matrix.frontdoor {
+                        let cell = run_cell(
+                            matrix, method, scenario, devices, batch,
+                            frontdoor,
+                        )
+                        .with_context(|| {
+                            format!(
+                                "cell {method}×{scenario}×{devices}dev\
+                                 ×b{batch}×fd{}",
+                                frontdoor as u8
+                            )
+                        })?;
+                        let fd_tag = if frontdoor { " fd" } else { "   " };
+                        progress(&format!(
+                            "[{}/{total}] {method:<22} {scenario:<12} \
+                             {devices}dev b{batch:<3}{fd_tag} {} / round \
+                             (p50)",
+                            cells.len() + 1,
+                            super::human(cell.wall_p50_round_s),
+                        ));
+                        cells.push(cell);
+                    }
                 }
             }
         }
@@ -320,6 +490,14 @@ fn str_arr(xs: &[String]) -> Json {
 
 fn u64_arr(xs: &[usize]) -> Json {
     Json::Arr(xs.iter().map(|&n| Json::U64(n as u64)).collect())
+}
+
+fn u64s(xs: &[u64]) -> Json {
+    Json::Arr(xs.iter().map(|&n| Json::U64(n)).collect())
+}
+
+fn f64s(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::F64(x)).collect())
 }
 
 /// Serialize a report to the `BENCH_serving.json` schema.
@@ -336,6 +514,13 @@ pub fn report_to_json(report: &BenchReport) -> String {
     root.push("scenarios", str_arr(&m.scenarios));
     root.push("devices", u64_arr(&m.devices));
     root.push("batches", u64_arr(&m.batches));
+    // JSON's closest stable encoding for the bool axis: 0/1 integers
+    root.push(
+        "frontdoors",
+        Json::Arr(
+            m.frontdoor.iter().map(|&b| Json::U64(b as u64)).collect(),
+        ),
+    );
     let mut cells = Vec::with_capacity(report.cells.len());
     for c in &report.cells {
         let mut o = Json::obj();
@@ -364,6 +549,12 @@ pub fn report_to_json(report: &BenchReport) -> String {
             "drift_recovery_ticks",
             Json::U64(c.drift_recovery_ticks),
         );
+        o.push("frontdoor", Json::U64(c.frontdoor as u64));
+        o.push("fd_lane_admitted", u64s(&c.fd_lane_admitted));
+        o.push("fd_lane_rejected", u64s(&c.fd_lane_rejected));
+        o.push("fd_lane_deadline_miss", u64s(&c.fd_lane_deadline_miss));
+        o.push("fd_lane_ttft_p50_s", f64s(&c.fd_lane_ttft_p50_s));
+        o.push("fd_lane_ttft_p95_s", f64s(&c.fd_lane_ttft_p95_s));
         cells.push(o);
     }
     root.push("cells", Json::Arr(cells));
@@ -415,10 +606,14 @@ pub fn validate_report_json(text: &str) -> Result<()> {
     let scenarios = strings("scenarios")?;
     let devices = nums("devices")?;
     let batches = nums("batches")?;
+    let frontdoors = nums("frontdoors")?;
     let cells =
         doc.get("cells").and_then(|v| v.as_arr()).context("missing cells")?;
-    let expected =
-        methods.len() * scenarios.len() * devices.len() * batches.len();
+    let expected = methods.len()
+        * scenarios.len()
+        * devices.len()
+        * batches.len()
+        * frontdoors.len();
     if cells.len() != expected {
         bail!("{} cells, expected {expected} (full matrix)", cells.len());
     }
@@ -434,10 +629,37 @@ pub fn validate_report_json(text: &str) -> Result<()> {
                 | "modeled_duration_s" | "modeled_tok_s" | "hi_fraction" => {
                     v.as_f64().is_some()
                 }
+                "fd_lane_admitted" | "fd_lane_rejected"
+                | "fd_lane_deadline_miss" => v
+                    .as_arr()
+                    .map(|xs| xs.iter().all(|x| x.as_u64().is_some()))
+                    .unwrap_or(false),
+                "fd_lane_ttft_p50_s" | "fd_lane_ttft_p95_s" => v
+                    .as_arr()
+                    .map(|xs| xs.iter().all(|x| x.as_f64().is_some()))
+                    .unwrap_or(false),
                 _ => v.as_u64().is_some(),
             };
             if !ok {
                 bail!("cell {i}: key {key:?} has wrong type ({v:?})");
+            }
+        }
+        // front-door cells carry one entry per lane; direct cells none
+        let fd = cell.get("frontdoor").unwrap().as_u64().unwrap();
+        let want_len = if fd != 0 { 3 } else { 0 };
+        for key in [
+            "fd_lane_admitted",
+            "fd_lane_rejected",
+            "fd_lane_deadline_miss",
+            "fd_lane_ttft_p50_s",
+            "fd_lane_ttft_p95_s",
+        ] {
+            let n = cell.get(key).unwrap().as_arr().unwrap().len();
+            if n != want_len {
+                bail!(
+                    "cell {i}: {key} has {n} lanes, expected {want_len} \
+                     (frontdoor={fd})"
+                );
             }
         }
         let coord = (
@@ -445,11 +667,13 @@ pub fn validate_report_json(text: &str) -> Result<()> {
             cell.get("scenario").unwrap().as_str().unwrap().to_string(),
             cell.get("devices").unwrap().as_u64().unwrap(),
             cell.get("batch").unwrap().as_u64().unwrap(),
+            fd,
         );
         if !methods.contains(&coord.0)
             || !scenarios.contains(&coord.1)
             || !devices.contains(&coord.2)
             || !batches.contains(&coord.3)
+            || !frontdoors.contains(&coord.4)
         {
             bail!("cell {i}: {coord:?} outside the declared axes");
         }
@@ -467,10 +691,12 @@ pub fn render_table(report: &BenchReport) -> String {
         "scenario",
         "dev",
         "batch",
+        "fd",
         "rounds",
         "wall p50/round",
         "wall p95/round",
         "modeled tok/s",
+        "fd-rej",
         "deferred",
         "migrated GB",
     ]);
@@ -480,10 +706,12 @@ pub fn render_table(report: &BenchReport) -> String {
             c.scenario.clone(),
             c.devices.to_string(),
             c.batch.to_string(),
+            if c.frontdoor { "y".into() } else { "-".into() },
             c.rounds.to_string(),
             super::human(c.wall_p50_round_s),
             super::human(c.wall_p95_round_s),
             format!("{:.0}", c.modeled_tok_s),
+            c.fd_lane_rejected.iter().sum::<u64>().to_string(),
             c.transitions.deferred.to_string(),
             format!("{:.2}", c.migrated_bytes as f64 / 1e9),
         ]);
@@ -500,10 +728,38 @@ mod tests {
         let full = BenchMatrix::full("qwen30b-sim");
         assert_eq!(
             full.n_cells(),
-            BENCH_METHODS.len() * Scenario::names().len() * 2 * 3
+            BENCH_METHODS.len() * Scenario::names().len() * 2 * 3 * 2
         );
+        // smoke spans both sides of the front-door axis
         let smoke = BenchMatrix::smoke("phi-sim");
-        assert_eq!(smoke.n_cells(), 1);
+        assert_eq!(smoke.n_cells(), 2);
+    }
+
+    #[test]
+    fn filter_narrows_axes_and_rejects_nonsense() {
+        let mut m = BenchMatrix::full("qwen30b-sim");
+        apply_filter(&mut m, "method=dynaexq,scenario=steady,batch=8")
+            .unwrap();
+        assert_eq!(m.methods, vec!["dynaexq".to_string()]);
+        assert_eq!(m.scenarios, vec!["steady".to_string()]);
+        assert_eq!(m.batches, vec![8]);
+        // 1 method × 1 scenario × 2 devices × 1 batch × 2 fd = 4
+        assert_eq!(m.n_cells(), 4);
+        // a single cell
+        apply_filter(&mut m, "devices=1,frontdoor=off").unwrap();
+        assert_eq!(m.n_cells(), 1);
+        assert_eq!(m.frontdoor, vec![false]);
+        // unknown keys and emptied axes are errors, not silent no-ops
+        let mut m = BenchMatrix::full("qwen30b-sim");
+        let err =
+            apply_filter(&mut m, "model=phi-sim").unwrap_err().to_string();
+        assert!(err.contains("unknown filter key"), "{err}");
+        let mut m = BenchMatrix::full("qwen30b-sim");
+        let err =
+            apply_filter(&mut m, "method=nope").unwrap_err().to_string();
+        assert!(err.contains("no cells"), "{err}");
+        let mut m = BenchMatrix::full("qwen30b-sim");
+        assert!(apply_filter(&mut m, "frontdoor=maybe").is_err());
     }
 
     #[test]
@@ -515,21 +771,21 @@ mod tests {
         let err = validate_report_json(&text).unwrap_err().to_string();
         assert!(err.contains("0 cells"), "{err}");
         // a tampered cell key must fail too
-        let cell = run_cell(
-            &BenchMatrix::smoke("phi-sim"),
-            "dynaexq",
-            "steady",
-            1,
-            1,
-        )
-        .unwrap();
-        let report = BenchReport {
-            matrix: BenchMatrix::smoke("phi-sim"),
-            cells: vec![cell],
-        };
+        let mut matrix = BenchMatrix::smoke("phi-sim");
+        matrix.frontdoor = vec![false, true];
+        let direct =
+            run_cell(&matrix, "dynaexq", "steady", 1, 1, false).unwrap();
+        let fronted =
+            run_cell(&matrix, "dynaexq", "steady", 1, 1, true).unwrap();
+        assert!(direct.fd_lane_admitted.is_empty());
+        assert_eq!(fronted.fd_lane_admitted.len(), 3);
+        let report =
+            BenchReport { matrix, cells: vec![direct, fronted] };
         let good = report_to_json(&report);
         validate_report_json(&good).unwrap();
         let bad = good.replace("\"hi_fraction\"", "\"hi_frac\"");
+        assert!(validate_report_json(&bad).is_err());
+        let bad = good.replace("\"fd_lane_rejected\"", "\"fd_rej\"");
         assert!(validate_report_json(&bad).is_err());
     }
 }

@@ -1,0 +1,362 @@
+//! Front-door configuration: admission bounds, per-tenant limits, and
+//! SLO classes (DESIGN.md §12).
+//!
+//! The request front door ([`crate::serving::frontdoor`]) is configured
+//! entirely here so every bound is validated *before* any queue state
+//! exists — mirroring how [`super::DriftConfig`] gates the drift layer.
+//! Three priority [`Lane`]s carry one [`SloClass`] each (TTFT/TPOT
+//! budgets); [`TenantLimits`] are Nexus-style soft/hard caps with a
+//! configurable soft-limit [`LimitAction`].
+
+/// Priority lane of a request class, highest priority first.
+///
+/// `index()` doubles as the scheduling rank (0 preempts 1 preempts 2)
+/// and as the position of the lane in every per-lane counter vector
+/// (`fd_lane_*` snapshot fields, bench per-lane totals).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Lane {
+    /// Latency-critical traffic (chat turns): tightest budgets.
+    Interactive,
+    /// The default class.
+    #[default]
+    Standard,
+    /// Throughput traffic (offline eval, batch jobs): widest budgets.
+    Batch,
+}
+
+impl Lane {
+    /// All lanes in rank order — the index of a lane here is its
+    /// scheduling rank and its slot in per-lane counter vectors.
+    pub const ALL: [Lane; 3] = [Lane::Interactive, Lane::Standard, Lane::Batch];
+
+    /// Scheduling rank and counter-vector slot (0 = highest priority).
+    pub fn index(self) -> usize {
+        match self {
+            Lane::Interactive => 0,
+            Lane::Standard => 1,
+            Lane::Batch => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::Interactive => "interactive",
+            Lane::Standard => "standard",
+            Lane::Batch => "batch",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Lane> {
+        Lane::ALL.into_iter().find(|l| l.name() == name)
+    }
+}
+
+impl std::fmt::Display for Lane {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Per-lane SLO budgets. Infinite budgets are legal (a lane without a
+/// deadline); zero or negative budgets are rejected by
+/// [`FrontDoorConfig::validate`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloClass {
+    /// Time-to-first-token budget (seconds, measured from arrival). The
+    /// admission deadline of a request is `arrival + ttft_budget_s`.
+    pub ttft_budget_s: f64,
+    /// Time-per-output-token budget (seconds) — reporting metadata for
+    /// the per-lane bench columns; decode is lockstep, so the front door
+    /// enforces deadlines on TTFT only.
+    pub tpot_budget_s: f64,
+}
+
+/// What happens when a tenant crosses its *soft* queue-occupancy limit
+/// (the hard limit always rejects — Nexus-style two-level limits).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LimitAction {
+    /// Count the overage and admit anyway.
+    Warn,
+    /// Admit, but demote the request to the [`Lane::Batch`] lane.
+    Demote,
+    /// Reject with `Rejected::TenantOverLimit`.
+    Reject,
+}
+
+/// Per-tenant queue-occupancy limits (applied to every tenant; the
+/// accounting is per tenant, the bounds are uniform).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TenantLimits {
+    /// Occupancy at which `soft_action` starts applying.
+    pub soft_limit: usize,
+    /// What a soft-limit overage does.
+    pub soft_action: LimitAction,
+    /// Occupancy at which submissions are rejected outright.
+    pub hard_limit: usize,
+}
+
+impl TenantLimits {
+    /// No limits: `usize::MAX` caps, warn-only soft action. The
+    /// degenerate configuration of the equivalence property.
+    pub fn unbounded() -> Self {
+        Self {
+            soft_limit: usize::MAX,
+            soft_action: LimitAction::Warn,
+            hard_limit: usize::MAX,
+        }
+    }
+}
+
+/// Validated configuration of the request front door.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FrontDoorConfig {
+    /// Bound on the admission queue (total across tenants); a full queue
+    /// yields `Rejected::QueueFull`, never blocking.
+    pub queue_capacity: usize,
+    /// Per-tenant occupancy limits.
+    pub tenant_limits: TenantLimits,
+    /// One SLO class per lane, indexed by [`Lane::index`].
+    pub classes: [SloClass; 3],
+    /// Estimated per-request service time used by the submit-time
+    /// deadline-feasibility check: a request whose estimated completion
+    /// (`max(now, arrival) + (queue_depth + 1) × est_service_s`) already
+    /// exceeds its deadline is rejected as `DeadlineInfeasible`. Zero
+    /// disables the check.
+    pub est_service_s: f64,
+    /// Queue age (seconds) past which a request is promoted to rank 0
+    /// regardless of lane — the anti-starvation valve. Infinite disables
+    /// aging (strict lane priority).
+    pub starvation_age_s: f64,
+    /// Order same-rank admissions least-served-tenant-first. Off, ties
+    /// fall straight through to deadline/arrival order.
+    pub fair_share: bool,
+}
+
+impl Default for FrontDoorConfig {
+    fn default() -> Self {
+        Self {
+            queue_capacity: 1024,
+            tenant_limits: TenantLimits {
+                soft_limit: 256,
+                soft_action: LimitAction::Warn,
+                hard_limit: 512,
+            },
+            classes: [
+                // interactive: chat-turn budgets
+                SloClass { ttft_budget_s: 0.5, tpot_budget_s: 0.05 },
+                // standard: the default class
+                SloClass { ttft_budget_s: 2.5, tpot_budget_s: 0.25 },
+                // batch: effectively throughput-only
+                SloClass { ttft_budget_s: 30.0, tpot_budget_s: 2.0 },
+            ],
+            est_service_s: 0.0,
+            starvation_age_s: 2.0,
+            fair_share: true,
+        }
+    }
+}
+
+impl FrontDoorConfig {
+    /// The degenerate configuration: unbounded queue and tenant limits,
+    /// infinite budgets, aging off. With every request in one
+    /// default-class tenant, scheduling through this config is
+    /// byte-identical to `ContinuousBatch` (property-tested).
+    pub fn unbounded() -> Self {
+        let inf = SloClass {
+            ttft_budget_s: f64::INFINITY,
+            tpot_budget_s: f64::INFINITY,
+        };
+        Self {
+            queue_capacity: usize::MAX,
+            tenant_limits: TenantLimits::unbounded(),
+            classes: [inf; 3],
+            est_service_s: 0.0,
+            starvation_age_s: f64::INFINITY,
+            fair_share: true,
+        }
+    }
+
+    /// The SLO class of a lane.
+    pub fn class(&self, lane: Lane) -> SloClass {
+        self.classes[lane.index()]
+    }
+
+    /// Admission deadline of a request arriving at `arrival_s` on `lane`.
+    pub fn deadline(&self, lane: Lane, arrival_s: f64) -> f64 {
+        arrival_s + self.class(lane).ttft_budget_s
+    }
+
+    /// Every bound checked before any queue state exists (the
+    /// [`super::DriftConfig::validate`] idiom).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.queue_capacity < 1 {
+            return Err("frontdoor.queue_capacity must be at least 1".into());
+        }
+        let t = &self.tenant_limits;
+        if t.hard_limit < 1 {
+            return Err("frontdoor.hard_limit must be at least 1".into());
+        }
+        if t.soft_limit > t.hard_limit {
+            return Err(format!(
+                "frontdoor.soft_limit {} exceeds hard_limit {}",
+                t.soft_limit, t.hard_limit
+            ));
+        }
+        let bad_budget = |b: f64| b.is_nan() || b <= 0.0;
+        for lane in Lane::ALL {
+            let c = self.class(lane);
+            if bad_budget(c.ttft_budget_s) || bad_budget(c.tpot_budget_s) {
+                return Err(format!(
+                    "frontdoor.{} budgets must be positive (ttft {}, \
+                     tpot {})",
+                    lane.name(),
+                    c.ttft_budget_s,
+                    c.tpot_budget_s
+                ));
+            }
+        }
+        if !self.est_service_s.is_finite() || self.est_service_s < 0.0 {
+            return Err(format!(
+                "frontdoor.est_service_s {} must be finite and non-negative",
+                self.est_service_s
+            ));
+        }
+        if self.starvation_age_s.is_nan() || self.starvation_age_s <= 0.0 {
+            return Err(format!(
+                "frontdoor.starvation_age_s {} must be positive \
+                 (infinite disables aging)",
+                self.starvation_age_s
+            ));
+        }
+        Ok(())
+    }
+
+    /// Parse a CLI `--slo` class spec: comma-separated
+    /// `lane=ttft:tpot` pairs (seconds), e.g.
+    /// `interactive=0.2:0.02,batch=60:5`. Unnamed lanes keep their
+    /// defaults.
+    pub fn parse_slo_spec(spec: &str) -> Result<[SloClass; 3], String> {
+        let mut classes = FrontDoorConfig::default().classes;
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (lane_s, budgets) = part.split_once('=').ok_or_else(|| {
+                format!(
+                    "slo spec part {part:?} must be lane=ttft:tpot (seconds)"
+                )
+            })?;
+            let lane = Lane::by_name(lane_s.trim()).ok_or_else(|| {
+                format!(
+                    "unknown lane {:?}; known lanes: interactive, standard, \
+                     batch",
+                    lane_s.trim()
+                )
+            })?;
+            let (ttft_s, tpot_s) =
+                budgets.split_once(':').ok_or_else(|| {
+                    format!(
+                        "slo spec part {part:?} must be lane=ttft:tpot \
+                         (seconds)"
+                    )
+                })?;
+            let ttft: f64 = ttft_s.trim().parse().map_err(|_| {
+                format!("invalid ttft budget {:?}", ttft_s.trim())
+            })?;
+            let tpot: f64 = tpot_s.trim().parse().map_err(|_| {
+                format!("invalid tpot budget {:?}", tpot_s.trim())
+            })?;
+            classes[lane.index()] =
+                SloClass { ttft_budget_s: ttft, tpot_budget_s: tpot };
+        }
+        Ok(classes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lanes_roundtrip_names_and_ranks() {
+        for (rank, lane) in Lane::ALL.into_iter().enumerate() {
+            assert_eq!(lane.index(), rank);
+            assert_eq!(Lane::by_name(lane.name()), Some(lane));
+            assert_eq!(lane.to_string(), lane.name());
+        }
+        assert!(Lane::by_name("vip").is_none());
+        assert_eq!(Lane::default(), Lane::Standard);
+    }
+
+    #[test]
+    fn default_and_unbounded_validate() {
+        FrontDoorConfig::default().validate().unwrap();
+        FrontDoorConfig::unbounded().validate().unwrap();
+        // interactive budgets are tighter than batch budgets
+        let d = FrontDoorConfig::default();
+        assert!(
+            d.class(Lane::Interactive).ttft_budget_s
+                < d.class(Lane::Batch).ttft_budget_s
+        );
+        assert_eq!(
+            d.deadline(Lane::Standard, 1.0),
+            1.0 + d.class(Lane::Standard).ttft_budget_s
+        );
+    }
+
+    #[test]
+    fn validate_rejects_bad_bounds() {
+        let mut c = FrontDoorConfig::default();
+        c.queue_capacity = 0;
+        assert!(c.validate().unwrap_err().contains("queue_capacity"));
+
+        let mut c = FrontDoorConfig::default();
+        c.tenant_limits.soft_limit = 10;
+        c.tenant_limits.hard_limit = 5;
+        assert!(c.validate().unwrap_err().contains("soft_limit"));
+
+        let mut c = FrontDoorConfig::default();
+        c.tenant_limits.hard_limit = 0;
+        c.tenant_limits.soft_limit = 0;
+        assert!(c.validate().unwrap_err().contains("hard_limit"));
+
+        let mut c = FrontDoorConfig::default();
+        c.classes[0].ttft_budget_s = 0.0;
+        assert!(c.validate().unwrap_err().contains("interactive"));
+
+        let mut c = FrontDoorConfig::default();
+        c.classes[2].tpot_budget_s = f64::NAN;
+        assert!(c.validate().is_err());
+
+        let mut c = FrontDoorConfig::default();
+        c.est_service_s = f64::INFINITY;
+        assert!(c.validate().unwrap_err().contains("est_service_s"));
+
+        let mut c = FrontDoorConfig::default();
+        c.starvation_age_s = 0.0;
+        assert!(c.validate().unwrap_err().contains("starvation_age_s"));
+    }
+
+    #[test]
+    fn slo_spec_parses_and_rejects() {
+        let classes = FrontDoorConfig::parse_slo_spec(
+            "interactive=0.2:0.02, batch=60:5",
+        )
+        .unwrap();
+        assert_eq!(classes[Lane::Interactive.index()].ttft_budget_s, 0.2);
+        assert_eq!(classes[Lane::Interactive.index()].tpot_budget_s, 0.02);
+        assert_eq!(classes[Lane::Batch.index()].ttft_budget_s, 60.0);
+        // unnamed lanes keep their defaults
+        assert_eq!(
+            classes[Lane::Standard.index()],
+            FrontDoorConfig::default().class(Lane::Standard)
+        );
+        assert!(FrontDoorConfig::parse_slo_spec("vip=1:1")
+            .unwrap_err()
+            .contains("known lanes"));
+        assert!(FrontDoorConfig::parse_slo_spec("interactive=1").is_err());
+        assert!(FrontDoorConfig::parse_slo_spec("interactive=a:b").is_err());
+        assert!(FrontDoorConfig::parse_slo_spec("nonsense").is_err());
+    }
+}

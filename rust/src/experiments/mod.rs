@@ -50,6 +50,9 @@ use crate::cli::Args;
 
 /// `dynaexq serve` — one serving session on the builder API.
 pub fn cmd_serve(args: &Args) -> Result<()> {
+    if args.has("frontdoor") {
+        return cmd_serve_frontdoor(args);
+    }
     let model = args.get_or("model", "qwen30b-sim");
     let method = args.get_or("method", "dynaexq");
     let workload = args.get_or("workload", "text");
@@ -111,13 +114,118 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `dynaexq serve --frontdoor` — the same session fronted by the bounded
+/// admission queue (DESIGN.md §12): requests submit under round-robin
+/// tenants/lanes (or the scenario's per-phase tags) and drain through the
+/// SLO-aware scheduler; typed rejections and per-lane counters print with
+/// the report.
+fn cmd_serve_frontdoor(args: &Args) -> Result<()> {
+    use crate::config::frontdoor::{FrontDoorConfig, Lane, TenantLimits};
+    use crate::workload::RequestGenerator;
+
+    let model = args.get_or("model", "qwen30b-sim");
+    let method = args.get_or("method", "dynaexq");
+    let workload = args.get_or("workload", "text");
+    let batch = args.get_parse::<usize>("batch").unwrap_or(8);
+    let prompt = args.get_parse::<usize>("prompt").unwrap_or(512);
+    let output = args.get_parse::<usize>("output").unwrap_or(64);
+    let rounds = args.get_parse::<usize>("rounds").unwrap_or(4);
+    let seed = args.get_parse::<u64>("seed").unwrap_or(0xC0FFEE);
+    let warmup = args.get_parse::<usize>("warmup").unwrap_or(2);
+    let devices = args.get_parse::<usize>("devices").unwrap_or(1);
+    let tenants = args.get_parse::<usize>("tenants").unwrap_or(2).max(1);
+
+    let mut cfg = FrontDoorConfig::default();
+    if let Some(spec) = args.get("slo") {
+        cfg.classes = FrontDoorConfig::parse_slo_spec(spec)
+            .map_err(anyhow::Error::msg)?;
+    }
+    if let Some(cap) = args.get_parse::<usize>("queue-cap") {
+        cfg.queue_capacity = cap;
+    }
+    if let Some(cap) = args.get_parse::<usize>("tenant-cap") {
+        cfg.tenant_limits =
+            TenantLimits { soft_limit: cap, hard_limit: cap, ..cfg.tenant_limits };
+    }
+
+    let mut session = crate::serving::session::ServeSession::builder()
+        .model(model)
+        .method(method)
+        .workload(workload)
+        .seed(seed)
+        .warmup(warmup)
+        .devices(devices)
+        .frontdoor(cfg)
+        .build()?;
+
+    if let Some(sc_name) = args.get("scenario") {
+        let sc = helpers::scenario(sc_name)?;
+        println!(
+            "model {model} | method {method} | scenario {sc_name} through \
+             the front door ({} phases, {} rounds) | batch {batch} \
+             prompt {prompt} output {output} | {tenants} tenants",
+            sc.phases.len(),
+            sc.total_rounds(),
+        );
+        let marks =
+            session.run_scenario_frontdoor(&sc, batch, prompt, output)?;
+        for (phase, snap) in &marks {
+            println!(
+                "phase {phase:<12} workload {:<5} | queue {} | admitted \
+                 {} | rejected {} | deadline-miss {} | {:>6.0} tok/s",
+                snap.workload,
+                snap.fd_queue_depth,
+                snap.fd_lane_admitted.iter().sum::<u64>(),
+                snap.fd_lane_rejected.iter().sum::<u64>(),
+                snap.fd_lane_deadline_miss.iter().sum::<u64>(),
+                snap.throughput_tok_s,
+            );
+            if args.has("kv") {
+                println!("{}", snap.encode());
+            }
+        }
+        println!("{}", session.report());
+        return Ok(());
+    }
+
+    // Uniform open-loop traffic: each round submits `batch` requests,
+    // round-robin across `t0..t{N-1}` tenants and the three lanes, then
+    // drains through the SLO scheduler.
+    let profile = helpers::profile(workload)?;
+    let mut gen = RequestGenerator::new(profile, seed ^ 0xFD01);
+    let mut rejected = 0u64;
+    let mut i = 0usize;
+    for _ in 0..rounds {
+        let now = session.now();
+        for _ in 0..batch {
+            let tenant = format!("t{}", i % tenants);
+            let lane = Lane::ALL[i % Lane::ALL.len()];
+            let req = gen.request(prompt, output, now);
+            if session.submit(req, &tenant, lane)?.is_err() {
+                rejected += 1;
+            }
+            i += 1;
+        }
+        session.drain()?;
+    }
+    println!("{}", session.report());
+    if rejected > 0 {
+        println!("typed rejections: {rejected}");
+    }
+    if args.has("kv") {
+        println!("{}", session.snapshot().encode());
+    }
+    Ok(())
+}
+
 /// `dynaexq bench` — the wall-clock serving benchmark matrix
 /// (DESIGN.md §11): run method × scenario × devices × batch cells under
 /// host wall-clock timing and emit the machine-readable
 /// `BENCH_serving.json` perf trajectory.
 pub fn cmd_bench(args: &Args) -> Result<()> {
     use crate::bench::runtime::{
-        report_to_json, run_matrix, validate_report_json, BenchMatrix,
+        apply_filter, report_to_json, run_matrix, validate_report_json,
+        BenchMatrix,
     };
     let smoke = args.has("smoke");
     // Smoke mode (CI) defaults to the small preset; the full matrix runs
@@ -139,14 +247,21 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
     if let Some(s) = args.get_parse::<u64>("seed") {
         matrix.seed = s;
     }
+    if let Some(spec) = args.get("filter") {
+        // Narrow to selected axis values (re-run single cells without
+        // the full matrix); the written report stays schema-valid
+        // because its header declares the narrowed axes.
+        apply_filter(&mut matrix, spec)?;
+    }
     println!(
         "bench: {} cells ({} methods × {} scenarios × {:?} devices × \
-         {:?} batches) on {model}",
+         {:?} batches × {:?} frontdoor) on {model}",
         matrix.n_cells(),
         matrix.methods.len(),
         matrix.scenarios.len(),
         matrix.devices,
         matrix.batches,
+        matrix.frontdoor,
     );
     let report = run_matrix(&matrix, |line| eprintln!("{line}"))?;
     println!("{}", crate::bench::runtime::render_table(&report));

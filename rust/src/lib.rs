@@ -50,10 +50,12 @@ pub mod testutil;
 pub mod util;
 pub mod workload;
 
+pub use config::frontdoor::{FrontDoorConfig, Lane};
 pub use config::{DeviceConfig, ModelPreset, ServingConfig, ShardPlan};
 pub use coordinator::{Coordinator, DeviceGroup};
 pub use model::PrecisionLadder;
 pub use serving::engine::Engine;
+pub use serving::frontdoor::{FrontDoor, Rejected, SloScheduler};
 #[cfg(feature = "numeric")]
 pub use serving::numeric::NumericEngine;
 pub use serving::registry::{BackendCtx, BackendRegistry};

@@ -36,15 +36,29 @@ SUBCOMMANDS:
                --seed S --warmup N (default 2)
                --devices N (default 1; sharded methods serve an N-device
                             expert-sharded group with per-device envelopes)
+               --frontdoor  (route requests through the bounded admission
+                            queue + SLO-aware scheduler — DESIGN.md §12;
+                            typed rejections print with the report)
+               --tenants N  (default 2; round-robin tenants under
+                            --frontdoor without a scenario)
+               --slo lane=ttft:tpot[,...]  (per-lane budgets in seconds,
+                            lanes interactive|standard|batch, e.g.
+                            interactive=0.2:0.02,batch=60:5)
+               --queue-cap N --tenant-cap N  (front-door bounds)
                --kv   (also print the machine-readable metrics snapshot)
     bench    Wall-clock serving benchmark matrix (DESIGN.md §11): every
              bench method × scripted scenario × {1,2}-device groups ×
-             batch {1,8,32}, timed on the host clock; emits the
-             machine-readable perf trajectory BENCH_serving.json.
-               --smoke  (single smallest cell — the CI job)
+             batch {1,8,32} × {direct, front-door}, timed on the host
+             clock; emits the machine-readable perf trajectory
+             BENCH_serving.json (front-door cells carry per-lane p50/p95
+             TTFT and typed-rejection totals).
+               --smoke  (smallest cell pair — the CI job)
                --model ...   (default qwen30b-sim; phi-sim under --smoke)
                --out path    (default BENCH_serving.json)
                --prompt N --output N --seed S
+               --filter key=value[,...]  (narrow axes: method, scenario,
+                            devices, batch, frontdoor — re-run single
+                            cells without the full matrix)
     report   Regenerate a paper table/figure.
                --exp t1|t2|t4|f1|f2|f3|f6..f10|a1..a10|all  [--fast]
     quality  Numeric quality run (real PJRT execution; needs a build with

@@ -1,0 +1,628 @@
+//! The concurrent request front door (DESIGN.md §12): bounded admission,
+//! per-tenant fair share, and SLO-aware continuous batching.
+//!
+//! Three pieces, all configured by
+//! [`FrontDoorConfig`](crate::config::frontdoor::FrontDoorConfig):
+//!
+//! * [`FrontDoor`] — a bounded admission queue in front of the engine.
+//!   [`FrontDoor::submit`] is **never blocking**: it either enqueues the
+//!   request or returns a typed [`Rejected`] immediately (Nexus-style
+//!   backpressure). Per-tenant occupancy/served/rejected accounting uses
+//!   lock-free atomic counters, so a future concurrent submit path needs
+//!   no new state — only a lock around the queue itself.
+//! * [`SloScheduler`] — a [`Scheduler`] that composes with the engine
+//!   exactly like [`ContinuousBatch`](super::scheduler::ContinuousBatch)
+//!   (same admit/decode-round loop shape), but picks the next admission
+//!   by `(starvation-aged lane rank, fair-share count, deadline,
+//!   arrival, submission order)`. In the degenerate configuration —
+//!   every request one default-class tenant, unbounded limits — the
+//!   selection collapses to arrival order and the scheduler is
+//!   **byte-identical** to `ContinuousBatch` (property-tested by
+//!   `tests/frontdoor_props.rs`).
+//! * [`FrontDoorStats`] — the per-lane admission / rejection /
+//!   deadline-miss counters surfaced through
+//!   [`MetricsSnapshot`](super::session::MetricsSnapshot) and the bench
+//!   matrix's per-lane columns.
+//!
+//! The serve cycle is `submit*; drain` — [`FrontDoor::take_scheduled`]
+//! hands the queued batch plus a tagged [`SloScheduler`] to the engine,
+//! and [`FrontDoor::absorb`] folds the serve-side outcome (per-lane TTFT
+//! samples, deadline misses, per-tenant service) back into the door's
+//! cumulative accounting.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+use crate::config::frontdoor::{FrontDoorConfig, Lane, LimitAction};
+use crate::workload::Request;
+
+use super::engine::{ActiveRequest, Engine};
+use super::scheduler::Scheduler;
+
+/// Typed, non-blocking backpressure: why a submission was turned away.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rejected {
+    /// The bounded admission queue is at capacity.
+    QueueFull,
+    /// The tenant is over its hard limit (or over its soft limit with
+    /// [`LimitAction::Reject`]).
+    TenantOverLimit,
+    /// The submit-time completion estimate already exceeds the request's
+    /// SLO deadline — admitting it could only waste service.
+    DeadlineInfeasible,
+}
+
+impl fmt::Display for Rejected {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Rejected::QueueFull => "queue-full",
+            Rejected::TenantOverLimit => "tenant-over-limit",
+            Rejected::DeadlineInfeasible => "deadline-infeasible",
+        })
+    }
+}
+
+/// One queued request with its admission metadata.
+#[derive(Clone, Debug)]
+pub struct QueuedRequest {
+    pub req: Request,
+    /// Index into the door's tenant table.
+    pub tenant: usize,
+    /// Effective lane (soft-limit demotion already applied).
+    pub lane: Lane,
+    /// SLO deadline: `arrival + lane ttft budget`.
+    pub deadline_s: f64,
+}
+
+/// Per-lane admission-outcome counters (lock-free: all `AtomicU64` at
+/// relaxed ordering — counts, not synchronization).
+#[derive(Debug, Default)]
+struct LaneCounters {
+    admitted: AtomicU64,
+    rejected: AtomicU64,
+    deadline_miss: AtomicU64,
+}
+
+/// Cumulative front-door statistics: per-lane outcomes plus per-kind
+/// rejection totals.
+#[derive(Debug, Default)]
+pub struct FrontDoorStats {
+    lanes: [LaneCounters; 3],
+    queue_full: AtomicU64,
+    tenant_over_limit: AtomicU64,
+    deadline_infeasible: AtomicU64,
+    soft_overages: AtomicU64,
+    demoted: AtomicU64,
+}
+
+impl FrontDoorStats {
+    /// Requests admitted to the queue per lane ([`Lane::index`] order).
+    pub fn lane_admitted(&self) -> Vec<u64> {
+        self.lanes.iter().map(|l| l.admitted.load(Relaxed)).collect()
+    }
+
+    /// Requests rejected per lane ([`Lane::index`] order).
+    pub fn lane_rejected(&self) -> Vec<u64> {
+        self.lanes.iter().map(|l| l.rejected.load(Relaxed)).collect()
+    }
+
+    /// Served requests whose TTFT blew the lane deadline, per lane.
+    pub fn lane_deadline_miss(&self) -> Vec<u64> {
+        self.lanes.iter().map(|l| l.deadline_miss.load(Relaxed)).collect()
+    }
+
+    /// Rejection totals by kind:
+    /// `(queue_full, tenant_over_limit, deadline_infeasible)`.
+    pub fn rejection_kinds(&self) -> (u64, u64, u64) {
+        (
+            self.queue_full.load(Relaxed),
+            self.tenant_over_limit.load(Relaxed),
+            self.deadline_infeasible.load(Relaxed),
+        )
+    }
+
+    /// Soft-limit overages observed (warn/demote/reject alike).
+    pub fn soft_overages(&self) -> u64 {
+        self.soft_overages.load(Relaxed)
+    }
+
+    /// Admissions demoted to the batch lane by [`LimitAction::Demote`].
+    pub fn demoted(&self) -> u64 {
+        self.demoted.load(Relaxed)
+    }
+}
+
+/// Lock-free per-tenant accounting (first-appearance tenant table).
+#[derive(Debug)]
+struct TenantState {
+    name: String,
+    /// Requests currently sitting in the admission queue.
+    queued: AtomicU64,
+    /// Requests admitted into the engine across all drains.
+    served: AtomicU64,
+    /// Submissions rejected.
+    rejected: AtomicU64,
+}
+
+/// The bounded, fair, SLO-aware admission queue.
+pub struct FrontDoor {
+    cfg: FrontDoorConfig,
+    queue: Vec<QueuedRequest>,
+    tenants: Vec<TenantState>,
+    tenant_idx: HashMap<String, usize>,
+    stats: FrontDoorStats,
+    /// Per-lane TTFT samples absorbed from drained schedulers
+    /// ([`Lane::index`] order) — the bench per-lane p50/p95 source.
+    lane_ttft: [Vec<f64>; 3],
+}
+
+impl FrontDoor {
+    /// Validate the configuration and build an empty door.
+    pub fn new(cfg: FrontDoorConfig) -> Result<Self, String> {
+        cfg.validate()?;
+        Ok(Self {
+            cfg,
+            queue: Vec::new(),
+            tenants: Vec::new(),
+            tenant_idx: HashMap::new(),
+            stats: FrontDoorStats::default(),
+            lane_ttft: [Vec::new(), Vec::new(), Vec::new()],
+        })
+    }
+
+    pub fn cfg(&self) -> &FrontDoorConfig {
+        &self.cfg
+    }
+
+    /// Current admission-queue depth.
+    pub fn depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn stats(&self) -> &FrontDoorStats {
+        &self.stats
+    }
+
+    /// TTFT samples served on a lane so far (drained rounds only).
+    pub fn lane_ttft(&self, lane: Lane) -> &[f64] {
+        &self.lane_ttft[lane.index()]
+    }
+
+    /// Cumulative engine admissions per tenant, in first-appearance
+    /// order: `(tenant name, served)`.
+    pub fn tenant_served(&self) -> Vec<(String, u64)> {
+        self.tenants
+            .iter()
+            .map(|t| (t.name.clone(), t.served.load(Relaxed)))
+            .collect()
+    }
+
+    fn tenant_id(&mut self, name: &str) -> usize {
+        if let Some(&i) = self.tenant_idx.get(name) {
+            return i;
+        }
+        let i = self.tenants.len();
+        self.tenants.push(TenantState {
+            name: name.to_string(),
+            queued: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        });
+        self.tenant_idx.insert(name.to_string(), i);
+        i
+    }
+
+    fn reject(&self, tenant: usize, lane: Lane, why: Rejected) -> Rejected {
+        self.tenants[tenant].rejected.fetch_add(1, Relaxed);
+        self.stats.lanes[lane.index()].rejected.fetch_add(1, Relaxed);
+        let kind = match why {
+            Rejected::QueueFull => &self.stats.queue_full,
+            Rejected::TenantOverLimit => &self.stats.tenant_over_limit,
+            Rejected::DeadlineInfeasible => &self.stats.deadline_infeasible,
+        };
+        kind.fetch_add(1, Relaxed);
+        why
+    }
+
+    /// Non-blocking admission. Checks run in a fixed order so the
+    /// rejection kind is deterministic: tenant hard limit → tenant soft
+    /// limit (configured action) → queue bound → deadline feasibility.
+    /// On success the request is queued under its effective lane (a
+    /// `Demote` soft action moves it to [`Lane::Batch`]).
+    pub fn submit(
+        &mut self,
+        req: Request,
+        tenant: &str,
+        lane: Lane,
+        now_s: f64,
+    ) -> Result<(), Rejected> {
+        let t = self.tenant_id(tenant);
+        let occupancy = self.tenants[t].queued.load(Relaxed) as usize;
+        let limits = self.cfg.tenant_limits;
+        if occupancy >= limits.hard_limit {
+            return Err(self.reject(t, lane, Rejected::TenantOverLimit));
+        }
+        let mut lane = lane;
+        if occupancy >= limits.soft_limit {
+            self.stats.soft_overages.fetch_add(1, Relaxed);
+            match limits.soft_action {
+                LimitAction::Warn => {}
+                LimitAction::Demote => {
+                    if lane != Lane::Batch {
+                        self.stats.demoted.fetch_add(1, Relaxed);
+                        lane = Lane::Batch;
+                    }
+                }
+                LimitAction::Reject => {
+                    return Err(
+                        self.reject(t, lane, Rejected::TenantOverLimit)
+                    );
+                }
+            }
+        }
+        if self.queue.len() >= self.cfg.queue_capacity {
+            return Err(self.reject(t, lane, Rejected::QueueFull));
+        }
+        let deadline_s = self.cfg.deadline(lane, req.arrival_s);
+        if self.cfg.est_service_s > 0.0 {
+            let start = now_s.max(req.arrival_s)
+                + self.queue.len() as f64 * self.cfg.est_service_s;
+            if start + self.cfg.est_service_s > deadline_s {
+                return Err(
+                    self.reject(t, lane, Rejected::DeadlineInfeasible)
+                );
+            }
+        }
+        self.tenants[t].queued.fetch_add(1, Relaxed);
+        self.stats.lanes[lane.index()].admitted.fetch_add(1, Relaxed);
+        self.queue.push(QueuedRequest { req, tenant: t, lane, deadline_s });
+        Ok(())
+    }
+
+    /// Drain the queue: every queued request leaves, paired with an
+    /// [`SloScheduler`] tagged with its lane/deadline/tenant metadata and
+    /// seeded with the cumulative fair-share history. Drive the pair
+    /// through `Engine::serve_with`, then fold the outcome back with
+    /// [`FrontDoor::absorb`].
+    pub fn take_scheduled(&mut self) -> (SloScheduler, Vec<Request>) {
+        let queued = std::mem::take(&mut self.queue);
+        for q in &queued {
+            self.tenants[q.tenant].queued.fetch_sub(1, Relaxed);
+        }
+        let served: Vec<u64> =
+            self.tenants.iter().map(|t| t.served.load(Relaxed)).collect();
+        let sched = SloScheduler::for_queued(self.cfg.clone(), &queued, served);
+        let reqs = queued.into_iter().map(|q| q.req).collect();
+        (sched, reqs)
+    }
+
+    /// Fold a drained scheduler's serve-side outcome back into the
+    /// door's cumulative accounting (per-tenant service, per-lane TTFT
+    /// samples, deadline misses).
+    pub fn absorb(&mut self, sched: &SloScheduler) {
+        for (t, &n) in sched.served_by_tenant.iter().enumerate() {
+            if t < self.tenants.len() {
+                self.tenants[t].served.fetch_add(n, Relaxed);
+            }
+        }
+        for lane in Lane::ALL {
+            let i = lane.index();
+            self.lane_ttft[i].extend_from_slice(&sched.lane_ttft[i]);
+            self.stats.lanes[i]
+                .deadline_miss
+                .fetch_add(sched.deadline_miss[i], Relaxed);
+        }
+    }
+}
+
+/// Lane/deadline/tenant metadata of one tagged request.
+#[derive(Clone, Copy, Debug)]
+struct Tag {
+    lane: Lane,
+    deadline_s: f64,
+    tenant: usize,
+}
+
+/// A pending request inside the scheduler's selection loop.
+struct Entry {
+    req: Request,
+    tag: Tag,
+    /// Position in the input vector — the final tie-breaker, so equal
+    /// keys preserve submission order (and match `ContinuousBatch`'s
+    /// stable sort in the degenerate configuration).
+    seq: u64,
+}
+
+/// Selection key: smaller admits first. Fields in order — starvation-aged
+/// lane rank, fair-share count, SLO deadline, arrival, submission order.
+type Key = (usize, u64, f64, f64, u64);
+
+fn key_lt(a: &Key, b: &Key) -> bool {
+    (a.0, a.1)
+        .cmp(&(b.0, b.1))
+        .then(a.2.total_cmp(&b.2))
+        .then(a.3.total_cmp(&b.3))
+        .then(a.4.cmp(&b.4))
+        .is_lt()
+}
+
+/// Deadline/SLO-aware continuous batching. Drives the engine through the
+/// exact [`ContinuousBatch`](super::scheduler::ContinuousBatch) loop
+/// shape — admit while a slot under the cap is free, skip ahead when
+/// idle, decode a round — but chooses *which* pending request each free
+/// slot takes by priority lane (with starvation aging), per-tenant
+/// fair-share counts, and SLO deadlines.
+pub struct SloScheduler {
+    /// Batch cap; `None` uses the engine's configured `max_batch`
+    /// (mirrors `ContinuousBatch`).
+    pub max_batch: Option<usize>,
+    cfg: FrontDoorConfig,
+    /// Request id → admission metadata. Untagged requests serve as the
+    /// single default tenant in the [`Lane::Standard`] class.
+    tags: HashMap<u64, Tag>,
+    /// Cumulative pre-drain per-tenant admissions (fair-share history).
+    base_served: Vec<u64>,
+    /// Engine admissions per tenant during this run.
+    pub served_by_tenant: Vec<u64>,
+    /// Admission order this run: one `(tenant, lane)` per engine
+    /// admission — what the fairness-band property inspects.
+    pub admission_log: Vec<(usize, Lane)>,
+    /// TTFT samples per lane this run ([`Lane::index`] order).
+    pub lane_ttft: [Vec<f64>; 3],
+    /// Served requests whose TTFT blew their deadline, per lane.
+    pub deadline_miss: [u64; 3],
+}
+
+impl SloScheduler {
+    /// A bare scheduler: no tags, so every request is the single
+    /// default tenant in the Standard class — with
+    /// [`FrontDoorConfig::unbounded`] this is the degenerate
+    /// configuration that is byte-identical to `ContinuousBatch`.
+    pub fn new(cfg: FrontDoorConfig) -> Self {
+        Self {
+            max_batch: None,
+            cfg,
+            tags: HashMap::new(),
+            base_served: vec![0],
+            served_by_tenant: vec![0],
+            admission_log: Vec::new(),
+            lane_ttft: [Vec::new(), Vec::new(), Vec::new()],
+            deadline_miss: [0; 3],
+        }
+    }
+
+    /// Scheduler for a drained queue: per-request metadata keyed by
+    /// request id (ids must be unique within one drain — the
+    /// `RequestGenerator` guarantees it), fair-share counts seeded from
+    /// the door's cumulative history.
+    pub fn for_queued(
+        cfg: FrontDoorConfig,
+        queued: &[QueuedRequest],
+        base_served: Vec<u64>,
+    ) -> Self {
+        let mut s = Self::new(cfg);
+        let n = base_served.len().max(1);
+        s.base_served = base_served;
+        s.base_served.resize(n, 0);
+        s.served_by_tenant = vec![0; n];
+        for q in queued {
+            s.tags.insert(
+                q.req.id,
+                Tag { lane: q.lane, deadline_s: q.deadline_s, tenant: q.tenant },
+            );
+        }
+        s
+    }
+
+    fn key(&self, e: &Entry, now: f64) -> Key {
+        // a request queued past the starvation age is promoted to rank 0
+        // regardless of lane (infinite age → strict lane priority)
+        let aged = now - e.req.arrival_s >= self.cfg.starvation_age_s;
+        let rank = if aged { 0 } else { e.tag.lane.index() };
+        let fair = if self.cfg.fair_share {
+            self.base_served[e.tag.tenant]
+                + self.served_by_tenant[e.tag.tenant]
+        } else {
+            0
+        };
+        (rank, fair, e.tag.deadline_s, e.req.arrival_s, e.seq)
+    }
+
+    /// Pick the pending index to admit next: best key among arrived
+    /// requests; if none has arrived and the engine is idle, skip ahead
+    /// to the earliest arrival (ties broken by lane, deadline,
+    /// submission order). `None` → no admission this slot.
+    fn pick(
+        &self,
+        pending: &[Entry],
+        now: f64,
+        engine_idle: bool,
+    ) -> Option<usize> {
+        let mut best: Option<(Key, usize)> = None;
+        for (i, e) in pending.iter().enumerate() {
+            if e.req.arrival_s > now {
+                continue;
+            }
+            let k = self.key(e, now);
+            if best.as_ref().map(|(bk, _)| key_lt(&k, bk)).unwrap_or(true) {
+                best = Some((k, i));
+            }
+        }
+        if let Some((_, i)) = best {
+            return Some(i);
+        }
+        if !engine_idle || pending.is_empty() {
+            return None;
+        }
+        let mut best: Option<((f64, usize, f64, u64), usize)> = None;
+        for (i, e) in pending.iter().enumerate() {
+            let k =
+                (e.req.arrival_s, e.tag.lane.index(), e.tag.deadline_s, e.seq);
+            let better = match &best {
+                None => true,
+                Some((bk, _)) => k
+                    .0
+                    .total_cmp(&bk.0)
+                    .then(k.1.cmp(&bk.1))
+                    .then(k.2.total_cmp(&bk.2))
+                    .then(k.3.cmp(&bk.3))
+                    .is_lt(),
+            };
+            if better {
+                best = Some((k, i));
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+}
+
+impl Scheduler for SloScheduler {
+    fn name(&self) -> &'static str {
+        "slo"
+    }
+
+    fn run(&mut self, engine: &mut Engine, requests: Vec<Request>) {
+        let cap = self.max_batch.unwrap_or_else(|| engine.max_batch()).max(1);
+        let mut pending: Vec<Entry> = requests
+            .into_iter()
+            .enumerate()
+            .map(|(seq, req)| {
+                let tag =
+                    self.tags.get(&req.id).copied().unwrap_or_else(|| Tag {
+                        lane: Lane::Standard,
+                        deadline_s: self
+                            .cfg
+                            .deadline(Lane::Standard, req.arrival_s),
+                        tenant: 0,
+                    });
+                Entry { req, tag, seq: seq as u64 }
+            })
+            .collect();
+        // every tagged tenant index must be addressable in the counters
+        let max_t = pending.iter().map(|e| e.tag.tenant).max().unwrap_or(0);
+        if self.served_by_tenant.len() <= max_t {
+            self.served_by_tenant.resize(max_t + 1, 0);
+            self.base_served.resize(max_t + 1, 0);
+        }
+        let mut active: Vec<ActiveRequest> = Vec::new();
+        while !pending.is_empty() || !active.is_empty() {
+            while active.len() < cap {
+                let Some(i) =
+                    self.pick(&pending, engine.now(), active.is_empty())
+                else {
+                    break;
+                };
+                // swap_remove is safe: selection re-scans the whole slice
+                let e = pending.swap_remove(i);
+                let arrival = e.req.arrival_s;
+                let Tag { lane, deadline_s, tenant } = e.tag;
+                engine.admit(e.req, &mut active);
+                // the admission just recorded exactly one TTFT sample
+                let ttft = engine
+                    .metrics
+                    .ttft
+                    .samples()
+                    .last()
+                    .copied()
+                    .unwrap_or(0.0);
+                self.lane_ttft[lane.index()].push(ttft);
+                if arrival + ttft > deadline_s {
+                    self.deadline_miss[lane.index()] += 1;
+                }
+                self.served_by_tenant[tenant] += 1;
+                self.admission_log.push((tenant, lane));
+            }
+            if active.is_empty() {
+                continue;
+            }
+            engine.decode_round(&mut active);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::frontdoor::TenantLimits;
+    use crate::workload::{RequestGenerator, WorkloadProfile};
+
+    fn gen() -> RequestGenerator {
+        RequestGenerator::new(WorkloadProfile::text(), 7)
+    }
+
+    #[test]
+    fn submit_accounts_per_tenant_and_lane() {
+        let mut fd = FrontDoor::new(FrontDoorConfig::default()).unwrap();
+        let mut g = gen();
+        fd.submit(g.request(8, 2, 0.0), "a", Lane::Interactive, 0.0).unwrap();
+        fd.submit(g.request(8, 2, 0.0), "a", Lane::Standard, 0.0).unwrap();
+        fd.submit(g.request(8, 2, 0.0), "b", Lane::Batch, 0.0).unwrap();
+        assert_eq!(fd.depth(), 3);
+        assert_eq!(fd.stats().lane_admitted(), vec![1, 1, 1]);
+        assert_eq!(fd.stats().lane_rejected(), vec![0, 0, 0]);
+        let (sched, reqs) = fd.take_scheduled();
+        assert_eq!(reqs.len(), 3);
+        assert_eq!(fd.depth(), 0);
+        assert_eq!(sched.served_by_tenant.len(), 2);
+    }
+
+    #[test]
+    fn rejected_kinds_and_display() {
+        for (r, s) in [
+            (Rejected::QueueFull, "queue-full"),
+            (Rejected::TenantOverLimit, "tenant-over-limit"),
+            (Rejected::DeadlineInfeasible, "deadline-infeasible"),
+        ] {
+            assert_eq!(r.to_string(), s);
+        }
+    }
+
+    #[test]
+    fn full_queue_rejects_typed_not_blocking() {
+        let cfg = FrontDoorConfig {
+            queue_capacity: 2,
+            ..FrontDoorConfig::default()
+        };
+        let mut fd = FrontDoor::new(cfg).unwrap();
+        let mut g = gen();
+        fd.submit(g.request(8, 2, 0.0), "a", Lane::Standard, 0.0).unwrap();
+        fd.submit(g.request(8, 2, 0.0), "a", Lane::Standard, 0.0).unwrap();
+        assert_eq!(
+            fd.submit(g.request(8, 2, 0.0), "b", Lane::Standard, 0.0),
+            Err(Rejected::QueueFull)
+        );
+        assert_eq!(fd.stats().rejection_kinds(), (1, 0, 0));
+        assert_eq!(fd.stats().lane_rejected(), vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn soft_limit_demotes_to_batch_lane() {
+        let cfg = FrontDoorConfig {
+            tenant_limits: TenantLimits {
+                soft_limit: 1,
+                soft_action: LimitAction::Demote,
+                hard_limit: 10,
+            },
+            ..FrontDoorConfig::default()
+        };
+        let mut fd = FrontDoor::new(cfg).unwrap();
+        let mut g = gen();
+        fd.submit(g.request(8, 2, 0.0), "a", Lane::Interactive, 0.0).unwrap();
+        // second interactive submission is over the soft limit → demoted
+        fd.submit(g.request(8, 2, 0.0), "a", Lane::Interactive, 0.0).unwrap();
+        assert_eq!(fd.stats().demoted(), 1);
+        assert_eq!(fd.stats().soft_overages(), 1);
+        assert_eq!(fd.stats().lane_admitted(), vec![1, 0, 1]);
+        let (sched, reqs) = fd.take_scheduled();
+        let demoted = sched.tags.get(&reqs[1].id).unwrap();
+        assert_eq!(demoted.lane, Lane::Batch);
+    }
+
+    #[test]
+    fn rejected_config_surfaces_validation_error() {
+        let cfg =
+            FrontDoorConfig { queue_capacity: 0, ..FrontDoorConfig::default() };
+        assert!(FrontDoor::new(cfg).unwrap_err().contains("queue_capacity"));
+    }
+}

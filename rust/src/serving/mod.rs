@@ -10,6 +10,11 @@
 //! * [`scheduler::Scheduler`] — admission/decode sequencing policies;
 //!   [`scheduler::ClosedBatch`] and [`scheduler::ContinuousBatch`] are the
 //!   paper's two measurement shapes, new policies are plug-ins.
+//! * [`frontdoor::FrontDoor`] — the concurrent request front door
+//!   (DESIGN.md §12): a bounded admission queue with per-tenant fair-share
+//!   accounting and priority lanes, surfacing backpressure as typed
+//!   [`frontdoor::Rejected`] values, paired with the SLO-aware
+//!   [`frontdoor::SloScheduler`].
 //! * [`engine::Engine`] — the **modeled** serving engine: full continuous-
 //!   batching loop over the device cost model (paper-scale dims), used by
 //!   every performance experiment (TTFT/TPOP/latency/throughput sweeps).
@@ -25,6 +30,7 @@
 
 pub mod backend;
 pub mod engine;
+pub mod frontdoor;
 pub mod kv_cache;
 #[cfg(feature = "numeric")]
 pub mod numeric;
@@ -34,6 +40,7 @@ pub mod session;
 
 pub use backend::ResidencyBackend;
 pub use engine::{ActiveRequest, Engine, EngineConfig};
+pub use frontdoor::{FrontDoor, Rejected, SloScheduler};
 #[cfg(feature = "numeric")]
 pub use numeric::NumericEngine;
 pub use registry::{BackendCtx, BackendRegistry};

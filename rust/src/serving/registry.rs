@@ -412,10 +412,14 @@ mod tests {
         let err = r
             .build("nope", &BackendCtx::new(&p, &cfg, &dev))
             .unwrap_err();
-        for m in ["dynaexq", "expertflow", "hobbit", "static-map", "counting"]
-        {
+        // stay in sync with the CLI's method list: everything the bench
+        // harness drives must be registered AND enumerated in the error
+        for m in crate::experiments::helpers::METHODS {
+            assert!(r.contains(m), "helpers::METHODS entry {m:?} unregistered");
             assert!(err.contains(m), "error should list {m}: {err}");
         }
+        assert!(err.contains("counting"), "error should list counting: {err}");
+        assert!(err.contains("unknown method"), "error prefix: {err}");
     }
 
     #[test]

@@ -20,13 +20,16 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::config::frontdoor::{FrontDoorConfig, Lane};
 use crate::config::{kv, DeviceConfig, ModelPreset, ServingConfig};
 use crate::metrics::ServingMetrics;
-use crate::workload::{Request, Scenario, WorkloadProfile};
+use crate::workload::{Request, RequestGenerator, Scenario, WorkloadProfile};
 
 use super::backend::ResidencyBackend;
 use super::engine::{ActivationStats, Engine, EngineConfig};
+use super::frontdoor::{FrontDoor, Rejected};
 use super::registry::{BackendCtx, BackendRegistry};
+use super::scheduler::Scheduler;
 
 #[cfg(feature = "numeric")]
 use super::numeric::{NumericEngine, SeqState};
@@ -67,6 +70,19 @@ pub trait SessionEngine {
     /// Serve explicit requests (arrivals honored — modeled engine only).
     fn serve_requests(&mut self, requests: Vec<Request>) -> Result<()>;
 
+    /// Serve explicit requests under a caller-chosen [`Scheduler`] (the
+    /// front door's drain path — modeled engine only).
+    fn serve_scheduled(
+        &mut self,
+        _scheduler: &mut dyn Scheduler,
+        _requests: Vec<Request>,
+    ) -> Result<()> {
+        bail!(
+            "scheduler-driven serving is modeled-engine only; build the \
+             session with EngineKind::Modeled"
+        )
+    }
+
     /// Switch the live workload profile (shift experiments).
     fn set_profile(&mut self, profile: &WorkloadProfile);
 
@@ -106,6 +122,15 @@ impl SessionEngine for ModeledSession {
 
     fn serve_requests(&mut self, requests: Vec<Request>) -> Result<()> {
         self.engine.serve_stream(requests);
+        Ok(())
+    }
+
+    fn serve_scheduled(
+        &mut self,
+        scheduler: &mut dyn Scheduler,
+        requests: Vec<Request>,
+    ) -> Result<()> {
+        self.engine.serve_with(scheduler, requests);
         Ok(())
     }
 
@@ -284,6 +309,18 @@ pub struct MetricsSnapshot {
     /// Update intervals spent at the dropped (reactive) α recovering from
     /// those triggers.
     pub drift_recovery_ticks: u64,
+    /// Admission-queue depth at snapshot time (0 when the session has no
+    /// front door — DESIGN.md §12).
+    pub fd_queue_depth: u64,
+    /// Front-door admissions per lane, [`Lane::index`] order
+    /// (interactive|standard|batch). Encoded `a|b|c`; empty without a
+    /// front door.
+    pub fd_lane_admitted: Vec<u64>,
+    /// Typed rejections per lane (same order/encoding).
+    pub fd_lane_rejected: Vec<u64>,
+    /// Served requests whose TTFT blew the lane's SLO deadline (same
+    /// order/encoding).
+    pub fd_lane_deadline_miss: Vec<u64>,
 }
 
 impl MetricsSnapshot {
@@ -312,7 +349,9 @@ impl MetricsSnapshot {
              prefill_tokens={};duration_s={};hi_fraction={};\
              migrated_bytes={};act_prefill={};act_decode={};\
              tier_resident={};device_resident={};promo_queue_depth={};\
-             drift_events={};drift_recovery_ticks={}",
+             drift_events={};drift_recovery_ticks={};fd_queue_depth={};\
+             fd_lane_admitted={};fd_lane_rejected={};\
+             fd_lane_deadline_miss={}",
             self.model,
             self.method,
             self.workload,
@@ -344,7 +383,15 @@ impl MetricsSnapshot {
                 .join("|"),
             self.drift_events,
             self.drift_recovery_ticks,
+            self.fd_queue_depth,
+            Self::encode_u64_list(&self.fd_lane_admitted),
+            Self::encode_u64_list(&self.fd_lane_rejected),
+            Self::encode_u64_list(&self.fd_lane_deadline_miss),
         )
+    }
+
+    fn encode_u64_list(xs: &[u64]) -> String {
+        xs.iter().map(|n| n.to_string()).collect::<Vec<_>>().join("|")
     }
 
     /// Parse an [`MetricsSnapshot::encode`] string back.
@@ -421,7 +468,27 @@ impl MetricsSnapshot {
             },
             drift_events: num(&m, "drift_events")?,
             drift_recovery_ticks: num(&m, "drift_recovery_ticks")?,
+            fd_queue_depth: num(&m, "fd_queue_depth")?,
+            fd_lane_admitted: Self::decode_u64_list(
+                &text("fd_lane_admitted")?,
+                "fd_lane_admitted",
+            )?,
+            fd_lane_rejected: Self::decode_u64_list(
+                &text("fd_lane_rejected")?,
+                "fd_lane_rejected",
+            )?,
+            fd_lane_deadline_miss: Self::decode_u64_list(
+                &text("fd_lane_deadline_miss")?,
+                "fd_lane_deadline_miss",
+            )?,
         })
+    }
+
+    fn decode_u64_list(raw: &str, key: &str) -> Result<Vec<u64>> {
+        raw.split('|')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse().map_err(|_| anyhow!("invalid {key} entry {s:?}")))
+            .collect()
     }
 
     /// Snapshot of a backend-only run (trace replay): the latency series
@@ -457,12 +524,15 @@ impl MetricsSnapshot {
 // ServeSession + SessionBuilder
 // ---------------------------------------------------------------------------
 
-/// A live serving session: one model × method × workload on one engine.
+/// A live serving session: one model × method × workload on one engine,
+/// optionally fronted by a bounded admission queue (DESIGN.md §12).
 pub struct ServeSession {
     inner: Box<dyn SessionEngine>,
     pub model: String,
     pub method: String,
     pub workload: String,
+    frontdoor: Option<FrontDoor>,
+    seed: u64,
 }
 
 impl ServeSession {
@@ -535,6 +605,99 @@ impl ServeSession {
         Ok(marks)
     }
 
+    /// The front door, when the session was built with one.
+    pub fn frontdoor(&self) -> Option<&FrontDoor> {
+        self.frontdoor.as_ref()
+    }
+
+    /// Submit one request to the front door (never blocking). The outer
+    /// `Result` is a usage error — the session has no front door; the
+    /// inner one is the admission outcome: `Ok(())` queued, `Err` a typed
+    /// [`Rejected`] the caller can surface or retry on.
+    pub fn submit(
+        &mut self,
+        req: Request,
+        tenant: &str,
+        lane: Lane,
+    ) -> Result<std::result::Result<(), Rejected>> {
+        let now = self.inner.now();
+        let fd = self.frontdoor.as_mut().ok_or_else(|| {
+            anyhow!(
+                "session has no front door; build with \
+                 SessionBuilder::frontdoor(FrontDoorConfig)"
+            )
+        })?;
+        Ok(fd.submit(req, tenant, lane, now))
+    }
+
+    /// Drain the admission queue through the SLO-aware scheduler: every
+    /// queued request is served (modeled engine), per-lane TTFT and
+    /// deadline-miss accounting folds back into the front door. A drain
+    /// of an empty queue is a no-op.
+    pub fn drain(&mut self) -> Result<&ServingMetrics> {
+        let fd = self.frontdoor.as_mut().ok_or_else(|| {
+            anyhow!(
+                "session has no front door; build with \
+                 SessionBuilder::frontdoor(FrontDoorConfig)"
+            )
+        })?;
+        let (mut sched, reqs) = fd.take_scheduled();
+        if !reqs.is_empty() {
+            self.inner.serve_scheduled(&mut sched, reqs)?;
+        }
+        // fd borrow ended above (serve_scheduled borrows inner only)
+        self.frontdoor.as_mut().unwrap().absorb(&sched);
+        Ok(self.inner.metrics())
+    }
+
+    /// Drive a scripted [`Scenario`] through the front door: each phase's
+    /// rounds submit `scaled_batch` requests under the phase's tenant and
+    /// lane (defaulting to the profile name / Standard), then drain.
+    /// Returns one `(phase name, cumulative snapshot)` per phase boundary
+    /// — the front-door invariant suite asserts fairness, no-starvation
+    /// and token conservation on exactly these boundaries.
+    pub fn run_scenario_frontdoor(
+        &mut self,
+        scenario: &Scenario,
+        batch: usize,
+        prompt_len: usize,
+        output_len: usize,
+    ) -> Result<Vec<(String, MetricsSnapshot)>> {
+        if self.frontdoor.is_none() {
+            bail!(
+                "session has no front door; build with \
+                 SessionBuilder::frontdoor(FrontDoorConfig)"
+            );
+        }
+        let Some(first) = scenario.phases.first() else {
+            return Ok(Vec::new());
+        };
+        let mut gen = RequestGenerator::new(first.profile.clone(), self.seed ^ 0xFD00);
+        let mut marks = Vec::with_capacity(scenario.phases.len());
+        for phase in &scenario.phases {
+            self.inner.set_profile(&phase.profile);
+            self.workload = phase.profile.name.to_string();
+            gen.set_profile(phase.profile.clone());
+            let tenant = phase
+                .tenant
+                .clone()
+                .unwrap_or_else(|| phase.profile.name.to_string());
+            let b = Scenario::scaled_batch(batch, phase.load);
+            for _ in 0..phase.rounds {
+                let now = self.inner.now();
+                for _ in 0..b {
+                    let req = gen.request(prompt_len, output_len, now);
+                    // typed rejections are the scenario's backpressure
+                    // signal — they land in the snapshot counters
+                    let _ = self.submit(req, &tenant, phase.lane)?;
+                }
+                self.drain()?;
+            }
+            marks.push((phase.name.clone(), self.snapshot()));
+        }
+        Ok(marks)
+    }
+
     /// Switch the live workload (shift experiments). The method keeps any
     /// state it built on the old workload — that miscalibration is exactly
     /// what the shift experiments measure.
@@ -575,6 +738,16 @@ impl ServeSession {
             None => (0.0, 0.0),
         };
         let (drift_events, drift_recovery_ticks) = b.drift_stats();
+        let fd = &self.frontdoor;
+        let (fd_queue_depth, fd_adm, fd_rej, fd_miss) = match fd {
+            Some(fd) => (
+                fd.depth() as u64,
+                fd.stats().lane_admitted(),
+                fd.stats().lane_rejected(),
+                fd.stats().lane_deadline_miss(),
+            ),
+            None => (0, Vec::new(), Vec::new(), Vec::new()),
+        };
         MetricsSnapshot {
             model: self.model.clone(),
             method: self.method.clone(),
@@ -599,6 +772,10 @@ impl ServeSession {
             promo_queue_depth: b.promo_queue_depth(),
             drift_events,
             drift_recovery_ticks,
+            fd_queue_depth,
+            fd_lane_admitted: fd_adm,
+            fd_lane_rejected: fd_rej,
+            fd_lane_deadline_miss: fd_miss,
         }
     }
 
@@ -633,9 +810,21 @@ impl ServeSession {
         } else {
             String::new()
         };
+        let fd = if s.fd_lane_admitted.is_empty() {
+            String::new()
+        } else {
+            format!(
+                "\nfront door: queue {} | admitted {} | rejected {} \
+                 | deadline-miss {}",
+                s.fd_queue_depth,
+                MetricsSnapshot::encode_u64_list(&s.fd_lane_admitted),
+                MetricsSnapshot::encode_u64_list(&s.fd_lane_rejected),
+                MetricsSnapshot::encode_u64_list(&s.fd_lane_deadline_miss),
+            )
+        };
         format!(
             "{}\nactivation: prefill {:.1}% decode {:.1}% | hi-tier {:.1}% \
-             | migrated {:.2} GB | wait p99 {:.4}s{tiers}{devices}{drift}",
+             | migrated {:.2} GB | wait p99 {:.4}s{tiers}{devices}{drift}{fd}",
             self.inner.metrics().summary(),
             s.act_prefill * 100.0,
             s.act_decode * 100.0,
@@ -668,6 +857,7 @@ pub struct SessionBuilder {
     kind: EngineKind,
     registry: Option<BackendRegistry>,
     devices: usize,
+    frontdoor: Option<FrontDoorConfig>,
 }
 
 impl Default for SessionBuilder {
@@ -685,6 +875,7 @@ impl Default for SessionBuilder {
             kind: EngineKind::Modeled,
             registry: None,
             devices: 1,
+            frontdoor: None,
         }
     }
 }
@@ -756,6 +947,14 @@ impl SessionBuilder {
         self
     }
 
+    /// Front the session with a bounded admission queue (DESIGN.md §12):
+    /// enables [`ServeSession::submit`]/[`ServeSession::drain`] and the
+    /// SLO-aware drain scheduler. Modeled engine only.
+    pub fn frontdoor(mut self, cfg: FrontDoorConfig) -> Self {
+        self.frontdoor = Some(cfg);
+        self
+    }
+
     /// Serve with an `n`-device expert-sharded group (DESIGN.md §9).
     /// Consumed by the sharded methods (`dynaexq-sharded`,
     /// `dynaexq-3tier-sharded`); single-device methods ignore it. A
@@ -792,6 +991,18 @@ impl SessionBuilder {
         }
         let registry =
             self.registry.unwrap_or_else(BackendRegistry::with_builtins);
+        let frontdoor = match self.frontdoor {
+            Some(cfg) => {
+                if self.kind != EngineKind::Modeled {
+                    bail!(
+                        "the front door drains through the modeled engine; \
+                         EngineKind::Numeric sessions cannot take one"
+                    );
+                }
+                Some(FrontDoor::new(cfg).map_err(|e| anyhow!("front door: {e}"))?)
+            }
+            None => None,
+        };
 
         let inner: Box<dyn SessionEngine> = match self.kind {
             EngineKind::Modeled => {
@@ -877,6 +1088,8 @@ impl SessionBuilder {
             model: self.model,
             method: self.method,
             workload: self.workload,
+            frontdoor,
+            seed: self.seed,
         })
     }
 }
@@ -911,14 +1124,22 @@ mod tests {
             promo_queue_depth: vec![3, 0],
             drift_events: 5,
             drift_recovery_ticks: 20,
+            fd_queue_depth: 7,
+            fd_lane_admitted: vec![10, 20, 30],
+            fd_lane_rejected: vec![1, 0, 2],
+            fd_lane_deadline_miss: vec![0, 0, 4],
         };
         let decoded = MetricsSnapshot::decode(&s.encode()).unwrap();
         assert_eq!(decoded, s);
-        // backends without a residency table encode empty lists
+        // backends without a residency table (and sessions without a
+        // front door) encode empty lists
         let mut none = s.clone();
         none.tier_resident = Vec::new();
         none.device_resident = Vec::new();
         none.promo_queue_depth = Vec::new();
+        none.fd_lane_admitted = Vec::new();
+        none.fd_lane_rejected = Vec::new();
+        none.fd_lane_deadline_miss = Vec::new();
         assert_eq!(MetricsSnapshot::decode(&none.encode()).unwrap(), none);
     }
 
@@ -980,6 +1201,16 @@ mod tests {
                 promo_queue_depth: vec_of(rng, devices),
                 drift_events: rng.next_u64() % 1000,
                 drift_recovery_ticks: rng.next_u64() % 10_000,
+                fd_queue_depth: rng.next_u64() % 1000,
+                fd_lane_admitted: (0..rng.below(4))
+                    .map(|_| rng.next_u64() % 10_000)
+                    .collect(),
+                fd_lane_rejected: (0..rng.below(4))
+                    .map(|_| rng.next_u64() % 10_000)
+                    .collect(),
+                fd_lane_deadline_miss: (0..rng.below(4))
+                    .map(|_| rng.next_u64() % 10_000)
+                    .collect(),
             };
             assert_eq!(MetricsSnapshot::decode(&s.encode()).unwrap(), s);
         });
@@ -1161,6 +1392,54 @@ mod tests {
             .unwrap();
         let marks = d.run_scenario(&Scenario::diurnal(), 2, 16, 2).unwrap();
         assert_eq!(marks.last().unwrap().1.decode_tokens, 2 * 20);
+    }
+
+    #[test]
+    fn frontdoor_session_round_trips_submit_drain() {
+        let mut s = ServeSession::builder()
+            .model("phi-sim")
+            .method("static")
+            .seed(3)
+            .frontdoor(FrontDoorConfig::default())
+            .build()
+            .unwrap();
+        let mut gen = RequestGenerator::new(WorkloadProfile::text(), 5);
+        for i in 0..4 {
+            let now = s.now();
+            let lane = Lane::ALL[i % 3];
+            let outcome =
+                s.submit(gen.request(16, 2, now), "t0", lane).unwrap();
+            assert_eq!(outcome, Ok(()));
+        }
+        assert_eq!(s.frontdoor().unwrap().depth(), 4);
+        s.drain().unwrap();
+        let snap = s.snapshot();
+        assert_eq!(snap.fd_queue_depth, 0);
+        assert_eq!(snap.fd_lane_admitted.iter().sum::<u64>(), 4);
+        assert_eq!(snap.decode_tokens, 8);
+        assert_eq!(MetricsSnapshot::decode(&snap.encode()).unwrap(), snap);
+        assert!(s.report().contains("front door"), "{}", s.report());
+
+        // sessions without a front door reject the APIs with a usage
+        // error (not a typed rejection)
+        let mut plain = ServeSession::builder()
+            .model("phi-sim")
+            .method("static")
+            .build()
+            .unwrap();
+        assert!(plain
+            .submit(gen.request(16, 2, 0.0), "t0", Lane::Standard)
+            .is_err());
+        assert!(plain.drain().is_err());
+
+        // the drain path is modeled-engine only
+        let err = ServeSession::builder()
+            .frontdoor(FrontDoorConfig::default())
+            .engine_kind(EngineKind::Numeric)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("modeled"), "{err}");
     }
 
     #[test]

@@ -25,6 +25,7 @@
 
 use super::profile::WorkloadProfile;
 use super::traces::Trace;
+use crate::config::frontdoor::Lane;
 use crate::util::XorShiftRng;
 
 /// One scripted phase: a routing distribution held for `rounds` serving
@@ -39,6 +40,14 @@ pub struct ScenarioPhase {
     pub rounds: usize,
     /// Batch-size multiplier (diurnal ramps, flash-crowd surges).
     pub load: f64,
+    /// Tenant the phase's requests bill to when driven through the front
+    /// door (`ServeSession::run_scenario_frontdoor` — DESIGN.md §12);
+    /// `None` defaults to the profile name. The classic closed-batch
+    /// path ignores it.
+    pub tenant: Option<String>,
+    /// Priority lane for front-door submissions; ignored by the classic
+    /// closed-batch path.
+    pub lane: Lane,
 }
 
 /// A named script of phases.
@@ -79,7 +88,27 @@ impl Scenario {
             profile,
             rounds,
             load,
+            tenant: None,
+            lane: Lane::Standard,
         });
+        self
+    }
+
+    /// Append a phase with an explicit front-door tenant and priority
+    /// lane (the closed-batch path ignores both).
+    pub fn phase_tagged(
+        mut self,
+        name: &str,
+        profile: WorkloadProfile,
+        rounds: usize,
+        load: f64,
+        tenant: &str,
+        lane: Lane,
+    ) -> Self {
+        self = self.phase_loaded(name, profile, rounds, load);
+        let last = self.phases.last_mut().unwrap();
+        last.tenant = Some(tenant.to_string());
+        last.lane = lane;
         self
     }
 
@@ -137,21 +166,42 @@ impl Scenario {
 
     /// Flash crowd: steady traffic, then a 2× surge concentrated on the
     /// head few experts, then recovery at the original distribution.
+    /// The surge is tagged as an interactive-lane `crowd` tenant so the
+    /// front-door path gets real overflow pressure on the priority lane.
     pub fn burst() -> Self {
         let base = WorkloadProfile::text();
         Self::named("burst")
             .phase("pre", base.clone(), 3)
-            .phase_loaded("crowd", base.flash_crowd(), 3, 2.0)
+            .phase_tagged(
+                "crowd",
+                base.flash_crowd(),
+                3,
+                2.0,
+                "crowd",
+                Lane::Interactive,
+            )
             .phase("post", base, 3)
     }
 
     /// Multi-tenant interleave: text/math/code tenants alternate in short
     /// slices, so the union working set cycles through disjoint heads.
+    /// Each tenant is pinned to a distinct priority lane (text →
+    /// interactive, math → standard, code → batch), which is what the
+    /// front-door fairness/no-starvation invariants exercise.
     pub fn multi_tenant() -> Self {
         let mut sc = Self::named("multi-tenant");
         for rep in 0..2 {
-            for w in WorkloadProfile::all() {
-                sc = sc.phase(&format!("{}-{rep}", w.name), w, 2);
+            for (i, w) in WorkloadProfile::all().into_iter().enumerate() {
+                let tenant = w.name;
+                let lane = Lane::ALL[i % Lane::ALL.len()];
+                sc = sc.phase_tagged(
+                    &format!("{}-{rep}", w.name),
+                    w,
+                    2,
+                    1.0,
+                    tenant,
+                    lane,
+                );
             }
         }
         sc
@@ -260,6 +310,27 @@ mod tests {
             .phase_loaded("b", WorkloadProfile::math(), 2, 3.0);
         assert_eq!(custom.phases.len(), 2);
         assert_eq!(custom.phases[1].load, 3.0);
+    }
+
+    #[test]
+    fn phase_tags_default_and_pin() {
+        // untagged phases carry the front-door defaults
+        let sc = Scenario::steady();
+        assert_eq!(sc.phases[0].tenant, None);
+        assert_eq!(sc.phases[0].lane, Lane::Standard);
+        // multi-tenant pins one tenant and a distinct lane per workload
+        let mt = Scenario::multi_tenant();
+        for p in &mt.phases {
+            assert_eq!(p.tenant.as_deref(), Some(p.profile.name));
+        }
+        let lanes: Vec<Lane> =
+            mt.phases.iter().take(3).map(|p| p.lane).collect();
+        assert_eq!(lanes, Lane::ALL.to_vec());
+        // the burst surge rides the interactive lane as its own tenant
+        let burst = Scenario::burst();
+        assert_eq!(burst.phases[1].tenant.as_deref(), Some("crowd"));
+        assert_eq!(burst.phases[1].lane, Lane::Interactive);
+        assert_eq!(burst.phases[0].tenant, None);
     }
 
     #[test]

@@ -19,7 +19,9 @@ use dynaexq::workload::{RoutingSampler, Scenario, WorkloadProfile};
 fn smoke_cell_emits_schema_valid_bench_json() {
     let matrix = BenchMatrix::smoke("phi-sim");
     let report = run_matrix(&matrix, |_| {}).expect("smoke matrix runs");
-    assert_eq!(report.cells.len(), 1);
+    // the smoke matrix is one cell on every axis except the front door:
+    // a direct cell plus its front-door twin
+    assert_eq!(report.cells.len(), 2);
     let text = report_to_json(&report);
 
     // The schema self-check the CLI runs before writing the file.
@@ -30,10 +32,12 @@ fn smoke_cell_emits_schema_valid_bench_json() {
     let doc = json::parse(&text).expect("BENCH_serving.json parses");
     assert_eq!(
         doc.get("schema").and_then(|v| v.as_str()),
-        Some("dynaexq-bench-serving/v1")
+        Some("dynaexq-bench-serving/v2")
     );
     let cells = doc.get("cells").and_then(|v| v.as_arr()).unwrap();
+    // front door is the innermost axis: cells[0] direct, cells[1] fronted
     let cell = &cells[0];
+    assert_eq!(cell.get("frontdoor").unwrap().as_u64(), Some(0));
     for &key in CELL_KEYS {
         assert!(cell.get(key).is_some(), "cell missing required key {key:?}");
     }
@@ -53,6 +57,28 @@ fn smoke_cell_emits_schema_valid_bench_json() {
     // traffic at the top rung (migration counters are warmup-excluded
     // deltas, so a converged steady cell may legitimately report 0)
     assert!(cell.get("hi_fraction").unwrap().as_f64().unwrap() > 0.0);
+
+    // The fronted twin conserves the token totals and carries live
+    // per-lane counters: steady admits everything on the standard lane.
+    let fronted = &cells[1];
+    assert_eq!(fronted.get("frontdoor").unwrap().as_u64(), Some(1));
+    assert_eq!(fronted.get("decode_tokens").unwrap().as_u64(), Some(24));
+    let lane_sum = |key: &str| -> u64 {
+        fronted
+            .get(key)
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_u64().unwrap())
+            .sum()
+    };
+    assert_eq!(lane_sum("fd_lane_admitted"), rounds);
+    assert_eq!(lane_sum("fd_lane_rejected"), 0);
+    let p50s = fronted.get("fd_lane_ttft_p50_s").unwrap().as_arr().unwrap();
+    assert_eq!(p50s.len(), 3);
+    // lane order is interactive, standard, batch — steady is all-standard
+    assert!(p50s[1].as_f64().unwrap() > 0.0);
 }
 
 #[test]
@@ -68,9 +94,10 @@ fn full_matrix_axes_cover_registry_and_canned_scenarios() {
     assert_eq!(full.scenarios, Scenario::names());
     assert_eq!(full.devices, BENCH_DEVICES);
     assert_eq!(full.batches, BENCH_BATCHES);
+    // methods × scenarios × 2 device widths × 3 batches × {direct, fd}
     assert_eq!(
         full.n_cells(),
-        BENCH_METHODS.len() * Scenario::names().len() * 2 * 3
+        BENCH_METHODS.len() * Scenario::names().len() * 2 * 3 * 2
     );
 }
 
@@ -82,13 +109,35 @@ fn bench_runs_a_sharded_and_an_adaptive_cell() {
     let mut matrix = BenchMatrix::smoke("phi-sim");
     matrix.prompt_len = 16;
     matrix.output_len = 2;
-    let sharded = run_cell(&matrix, "dynaexq-sharded", "swap", 2, 2).unwrap();
+    let sharded =
+        run_cell(&matrix, "dynaexq-sharded", "swap", 2, 2, false).unwrap();
     assert_eq!(sharded.devices, 2);
     assert_eq!(sharded.rounds, Scenario::swap().total_rounds());
     assert!(sharded.migrated_bytes > 0, "sharded cell migrated nothing");
+    // direct cells carry no per-lane counters
+    assert!(sharded.fd_lane_admitted.is_empty());
     let adaptive =
-        run_cell(&matrix, "dynaexq-adaptive", "steady", 1, 1).unwrap();
+        run_cell(&matrix, "dynaexq-adaptive", "steady", 1, 1, false).unwrap();
     assert_eq!(adaptive.drift_events, 0, "steady traffic must not drift");
+}
+
+#[test]
+fn frontdoor_burst_cell_records_typed_rejections() {
+    // The bench queue bound is 3/2 × batch, so burst's 2× crowd surge
+    // (8 submits per round at batch 4 into a 6-deep queue) must overflow
+    // into interactive-lane rejections while tokens stay conserved.
+    let mut matrix = BenchMatrix::smoke("phi-sim");
+    matrix.prompt_len = 16;
+    matrix.output_len = 2;
+    let cell = run_cell(&matrix, "dynaexq", "burst", 1, 4, true).unwrap();
+    assert!(cell.frontdoor);
+    assert_eq!(cell.fd_lane_admitted.len(), 3);
+    let admitted: u64 = cell.fd_lane_admitted.iter().sum();
+    let rejected: u64 = cell.fd_lane_rejected.iter().sum();
+    assert!(rejected > 0, "crowd surge never overflowed the bench queue");
+    // burst's crowd phase is pinned to the interactive lane
+    assert_eq!(cell.fd_lane_rejected[0], rejected);
+    assert_eq!(cell.decode_tokens, admitted * 2);
 }
 
 #[test]

@@ -1,0 +1,380 @@
+//! Property tests for the request front door (DESIGN.md §12): degenerate
+//! byte-identity with `ContinuousBatch`, per-tenant fair-share bands,
+//! starvation aging, token conservation through `submit`/`drain`, and
+//! deterministic typed rejections.
+
+use dynaexq::config::frontdoor::{
+    FrontDoorConfig, Lane, LimitAction, TenantLimits,
+};
+use dynaexq::config::{DeviceConfig, ModelPreset};
+use dynaexq::serving::backend::StaticBackend;
+use dynaexq::serving::engine::{Engine, EngineConfig};
+use dynaexq::serving::frontdoor::{FrontDoor, Rejected, SloScheduler};
+use dynaexq::serving::scheduler::ContinuousBatch;
+use dynaexq::serving::session::MetricsSnapshot;
+use dynaexq::testutil::prop::Prop;
+use dynaexq::workload::{Request, RequestGenerator, Scenario, WorkloadProfile};
+use dynaexq::ServeSession;
+
+fn engine(max_batch: usize, seed: u64) -> Engine {
+    let preset = ModelPreset::phi_sim();
+    Engine::new(
+        &preset,
+        &WorkloadProfile::text(),
+        Box::new(StaticBackend::for_preset(&preset)),
+        &DeviceConfig::default(),
+        EngineConfig { max_batch, seed, track_activation: false },
+    )
+}
+
+#[test]
+fn prop_degenerate_slo_scheduler_matches_continuous_batch() {
+    // One default-class tenant, unbounded limits: the SLO selection key
+    // collapses to (arrival, submission order), which is exactly
+    // ContinuousBatch's stable arrival sort. Every recorded sample must
+    // match bit-for-bit, not just the aggregates.
+    let mut prop = Prop::new("frontdoor_degenerate_equivalence");
+    prop.run(20, |rng| {
+        let n = 1 + rng.below(20);
+        let cap = 1 + rng.below(5);
+        let mut gen =
+            RequestGenerator::new(WorkloadProfile::text(), rng.next_u64());
+        let mut reqs: Vec<Request> = (0..n)
+            .map(|_| {
+                let prompt = 1 + rng.below(48);
+                let output = 1 + rng.below(8);
+                let arrival = rng.range_f64(0.0, 3.0);
+                gen.request(prompt, output, arrival)
+            })
+            .collect();
+        rng.shuffle(&mut reqs);
+        let eng_seed = rng.next_u64();
+
+        let mut a = engine(cap, eng_seed);
+        a.serve_with(&mut ContinuousBatch::default(), reqs.clone());
+        let mut b = engine(cap, eng_seed);
+        b.serve_with(
+            &mut SloScheduler::new(FrontDoorConfig::unbounded()),
+            reqs.clone(),
+        );
+        assert_eq!(a.metrics.ttft.samples(), b.metrics.ttft.samples());
+        assert_eq!(a.metrics.tpop.samples(), b.metrics.tpop.samples());
+        assert_eq!(a.metrics.e2e.samples(), b.metrics.e2e.samples());
+        assert_eq!(a.metrics.decode_tokens, b.metrics.decode_tokens);
+        assert_eq!(a.metrics.prefill_tokens, b.metrics.prefill_tokens);
+        assert_eq!(a.metrics.duration_s, b.metrics.duration_s);
+
+        // the default config is equally degenerate for untagged requests:
+        // aging promotes oldest-first, which IS arrival order, and the
+        // single tenant keeps fair-share counts equal at every decision
+        let mut c = engine(cap, eng_seed);
+        c.serve_with(&mut SloScheduler::new(FrontDoorConfig::default()), reqs);
+        assert_eq!(a.metrics.ttft.samples(), c.metrics.ttft.samples());
+        assert_eq!(a.metrics.e2e.samples(), c.metrics.e2e.samples());
+        assert_eq!(a.metrics.duration_s, c.metrics.duration_s);
+    });
+}
+
+#[test]
+fn prop_fair_share_band_under_arrival_shuffles() {
+    // Equal per-tenant offered load, all same lane and arrival: at every
+    // admission prefix the per-tenant service counts stay within one of
+    // each other, regardless of the submission interleaving.
+    let mut prop = Prop::new("frontdoor_fair_share_band");
+    prop.run(15, |rng| {
+        let tenants = 2 + rng.below(3);
+        let per = 4 + rng.below(5);
+        let cap = 1 + rng.below(4);
+        let mut gen =
+            RequestGenerator::new(WorkloadProfile::text(), rng.next_u64());
+        let mut subs: Vec<usize> = (0..tenants)
+            .flat_map(|t| std::iter::repeat(t).take(per))
+            .collect();
+        rng.shuffle(&mut subs);
+
+        let mut fd = FrontDoor::new(FrontDoorConfig::unbounded()).unwrap();
+        for &t in &subs {
+            let req = gen.request(1 + rng.below(32), 1 + rng.below(6), 0.0);
+            fd.submit(req, &format!("t{t}"), Lane::Standard, 0.0).unwrap();
+        }
+        let (mut sched, reqs) = fd.take_scheduled();
+        let mut e = engine(cap, rng.next_u64());
+        e.serve_with(&mut sched, reqs);
+
+        let mut counts = vec![0u64; tenants];
+        for (i, &(t, _lane)) in sched.admission_log.iter().enumerate() {
+            counts[t] += 1;
+            let max = *counts.iter().max().unwrap();
+            let min = *counts.iter().min().unwrap();
+            assert!(
+                max - min <= 1,
+                "fairness band broken at admission {i}: {counts:?}"
+            );
+        }
+        fd.absorb(&sched);
+        for (tenant, served) in fd.tenant_served() {
+            assert_eq!(served, per as u64, "{tenant}");
+        }
+        assert_eq!(e.metrics.e2e.count(), tenants * per);
+    });
+}
+
+#[test]
+fn starvation_aging_bounds_batch_lane_wait() {
+    let mut gen = RequestGenerator::new(WorkloadProfile::text(), 11);
+    let mut serve = |age: f64| -> (usize, f64) {
+        let mut cfg = FrontDoorConfig::unbounded();
+        cfg.starvation_age_s = age;
+        let mut fd = FrontDoor::new(cfg).unwrap();
+        for _ in 0..24 {
+            fd.submit(gen.request(8, 4, 0.0), "a", Lane::Interactive, 0.0)
+                .unwrap();
+        }
+        for _ in 0..3 {
+            fd.submit(gen.request(8, 4, 0.0), "b", Lane::Batch, 0.0).unwrap();
+        }
+        let (mut sched, reqs) = fd.take_scheduled();
+        let mut e = engine(2, 5);
+        e.serve_with(&mut sched, reqs);
+        let first_batch = sched
+            .admission_log
+            .iter()
+            .position(|&(_, l)| l == Lane::Batch)
+            .expect("batch lane starved outright");
+        fd.absorb(&sched);
+        let worst =
+            fd.lane_ttft(Lane::Batch).iter().fold(0.0, |a: f64, &b| a.max(b));
+        (first_batch, worst)
+    };
+    // infinite age = strict lane priority: batch waits out every
+    // interactive admission
+    let (strict_pos, strict_ttft) = serve(f64::INFINITY);
+    assert_eq!(strict_pos, 24);
+    // a tiny aging threshold promotes the queued batch requests to rank 0,
+    // where fair share prefers the unserved tenant — earlier admission,
+    // strictly better worst-case batch TTFT
+    let (aged_pos, aged_ttft) = serve(0.001);
+    assert!(aged_pos < strict_pos, "aging never promoted: {aged_pos}");
+    assert!(
+        aged_ttft < strict_ttft,
+        "aged worst TTFT {aged_ttft} not better than strict {strict_ttft}"
+    );
+}
+
+#[test]
+fn prop_token_conservation_through_session_submit_drain() {
+    // Random bounded configs, random submissions: every offered request
+    // is either fully served (its tokens land in the engine counters) or
+    // rejected with a typed reason — never lost, never queued forever.
+    let mut prop = Prop::new("frontdoor_session_token_conservation");
+    prop.run(8, |rng| {
+        let mut cfg = FrontDoorConfig::default();
+        cfg.queue_capacity = 1 + rng.below(10);
+        let hard = 1 + rng.below(6);
+        cfg.tenant_limits = TenantLimits {
+            soft_limit: hard,
+            soft_action: LimitAction::Warn,
+            hard_limit: hard,
+        };
+        let mut s = ServeSession::builder()
+            .model("phi-sim")
+            .method("static")
+            .workload("text")
+            .seed(rng.next_u64())
+            .frontdoor(cfg)
+            .build()
+            .unwrap();
+        let mut gen =
+            RequestGenerator::new(WorkloadProfile::text(), rng.next_u64());
+        let (mut offered, mut accepted, mut rejected) = (0u64, 0u64, 0u64);
+        let (mut in_tok, mut out_tok) = (0u64, 0u64);
+        for _ in 0..3 {
+            let n = 1 + rng.below(12);
+            for _ in 0..n {
+                let prompt = 1 + rng.below(24);
+                let output = 1 + rng.below(6);
+                let now = s.now();
+                let req = gen.request(prompt, output, now);
+                let tenant = format!("t{}", rng.below(3));
+                let lane = Lane::ALL[rng.below(3)];
+                offered += 1;
+                match s.submit(req, &tenant, lane).unwrap() {
+                    Ok(()) => {
+                        accepted += 1;
+                        in_tok += prompt as u64;
+                        out_tok += output as u64;
+                    }
+                    Err(_) => rejected += 1,
+                }
+            }
+            s.drain().unwrap();
+        }
+        let snap = s.snapshot();
+        assert_eq!(snap.decode_tokens, out_tok);
+        assert_eq!(snap.prefill_tokens, in_tok);
+        assert_eq!(snap.fd_queue_depth, 0);
+        assert_eq!(snap.fd_lane_admitted.iter().sum::<u64>(), accepted);
+        assert_eq!(snap.fd_lane_rejected.iter().sum::<u64>(), rejected);
+        assert_eq!(accepted + rejected, offered);
+        assert_eq!(s.metrics().e2e.count(), accepted as usize);
+        let rt = MetricsSnapshot::decode(&snap.encode()).unwrap();
+        assert_eq!(rt, snap);
+    });
+}
+
+#[test]
+fn typed_rejections_are_deterministic() {
+    // The check order (hard limit → soft action → queue bound) is fixed,
+    // so the same submission script yields the same typed outcomes —
+    // independent of request contents.
+    let run = |seed: u64| -> Vec<Result<(), Rejected>> {
+        let cfg = FrontDoorConfig {
+            queue_capacity: 3,
+            tenant_limits: TenantLimits {
+                soft_limit: 2,
+                soft_action: LimitAction::Reject,
+                hard_limit: 4,
+            },
+            ..FrontDoorConfig::default()
+        };
+        let mut fd = FrontDoor::new(cfg).unwrap();
+        let mut gen = RequestGenerator::new(WorkloadProfile::text(), seed);
+        let subs = [
+            ("a", Lane::Interactive),
+            ("a", Lane::Interactive),
+            ("a", Lane::Interactive),
+            ("b", Lane::Standard),
+            ("b", Lane::Standard),
+            ("c", Lane::Batch),
+        ];
+        subs.iter()
+            .map(|&(t, lane)| {
+                fd.submit(gen.request(8, 2, 0.0), t, lane, 0.0)
+            })
+            .collect()
+    };
+    let expect = vec![
+        Ok(()),
+        Ok(()),
+        Err(Rejected::TenantOverLimit),
+        Ok(()),
+        Err(Rejected::QueueFull),
+        Err(Rejected::QueueFull),
+    ];
+    assert_eq!(run(1), expect);
+    assert_eq!(run(2), expect);
+}
+
+#[test]
+fn infeasible_deadlines_reject_at_submit() {
+    let cfg =
+        FrontDoorConfig { est_service_s: 1.0, ..FrontDoorConfig::default() };
+    let mut fd = FrontDoor::new(cfg).unwrap();
+    let mut gen = RequestGenerator::new(WorkloadProfile::text(), 3);
+    // interactive budget (0.5s) < the 1s service estimate: provably late
+    assert_eq!(
+        fd.submit(gen.request(8, 2, 0.0), "a", Lane::Interactive, 0.0),
+        Err(Rejected::DeadlineInfeasible)
+    );
+    // the batch budget (30s) absorbs the estimate
+    fd.submit(gen.request(8, 2, 0.0), "a", Lane::Batch, 0.0).unwrap();
+    assert_eq!(fd.stats().rejection_kinds(), (0, 0, 1));
+    assert_eq!(fd.depth(), 1);
+}
+
+#[test]
+fn deadline_misses_count_per_lane() {
+    let mut cfg = FrontDoorConfig::unbounded();
+    cfg.classes[Lane::Interactive.index()].ttft_budget_s = 1e-9;
+    let mut fd = FrontDoor::new(cfg).unwrap();
+    let mut gen = RequestGenerator::new(WorkloadProfile::text(), 17);
+    for _ in 0..4 {
+        fd.submit(gen.request(16, 2, 0.0), "a", Lane::Interactive, 0.0)
+            .unwrap();
+    }
+    for _ in 0..2 {
+        fd.submit(gen.request(16, 2, 0.0), "b", Lane::Batch, 0.0).unwrap();
+    }
+    let (mut sched, reqs) = fd.take_scheduled();
+    let mut e = engine(2, 7);
+    e.serve_with(&mut sched, reqs);
+    fd.absorb(&sched);
+    assert_eq!(fd.lane_ttft(Lane::Interactive).len(), 4);
+    assert_eq!(fd.lane_ttft(Lane::Batch).len(), 2);
+    let late = fd
+        .lane_ttft(Lane::Interactive)
+        .iter()
+        .filter(|&&t| t > 1e-9)
+        .count() as u64;
+    let miss = fd.stats().lane_deadline_miss();
+    assert_eq!(miss[Lane::Interactive.index()], late);
+    assert!(late >= 2, "cap-2 queueing must blow a nanosecond budget");
+    // infinite budgets never miss
+    assert_eq!(miss[Lane::Batch.index()], 0);
+}
+
+#[test]
+fn multi_tenant_scenario_through_front_door_holds_invariants() {
+    let mut s = ServeSession::builder()
+        .model("phi-sim")
+        .method("dynaexq")
+        .workload("text")
+        .seed(9)
+        .frontdoor(FrontDoorConfig::default())
+        .build()
+        .unwrap();
+    let sc = Scenario::multi_tenant();
+    let (batch, output) = (2usize, 2usize);
+    let marks = s.run_scenario_frontdoor(&sc, batch, 16, output).unwrap();
+    assert_eq!(marks.len(), sc.phases.len());
+    let mut expect_admitted = 0u64;
+    for (phase, (name, snap)) in sc.phases.iter().zip(&marks) {
+        assert_eq!(*name, phase.name);
+        expect_admitted +=
+            (phase.rounds * Scenario::scaled_batch(batch, phase.load)) as u64;
+        // boundary invariants: everything admitted was fully served,
+        // nothing rejected, nothing left queued, tokens conserved
+        let admitted: u64 = snap.fd_lane_admitted.iter().sum();
+        assert_eq!(admitted, expect_admitted, "{name}");
+        assert_eq!(snap.fd_lane_rejected.iter().sum::<u64>(), 0, "{name}");
+        assert_eq!(snap.fd_queue_depth, 0, "{name}");
+        assert_eq!(snap.decode_tokens, admitted * output as u64, "{name}");
+        let rt = MetricsSnapshot::decode(&snap.encode()).unwrap();
+        assert_eq!(rt, *snap);
+    }
+    // every tenant got its full share, every lane saw traffic
+    let fd = s.frontdoor().unwrap();
+    let served = fd.tenant_served();
+    assert_eq!(served.len(), 3);
+    for (tenant, n) in &served {
+        assert_eq!(*n, 8, "{tenant}");
+    }
+    for lane in Lane::ALL {
+        assert!(fd.stats().lane_admitted()[lane.index()] > 0, "{lane}");
+    }
+    assert_eq!(s.metrics().e2e.count(), expect_admitted as usize);
+}
+
+#[test]
+fn burst_scenario_overflows_into_typed_rejections() {
+    let cfg =
+        FrontDoorConfig { queue_capacity: 6, ..FrontDoorConfig::default() };
+    let mut s = ServeSession::builder()
+        .model("phi-sim")
+        .method("dynaexq")
+        .seed(21)
+        .frontdoor(cfg)
+        .build()
+        .unwrap();
+    let marks = s.run_scenario_frontdoor(&Scenario::burst(), 4, 16, 2).unwrap();
+    let last = &marks.last().unwrap().1;
+    // the crowd phase submits 8/round into a 6-deep queue: the overflow
+    // surfaces as typed interactive-lane rejections, not lost tokens
+    let rejected: u64 = last.fd_lane_rejected.iter().sum();
+    assert!(rejected > 0, "crowd surge never overflowed the queue");
+    assert_eq!(last.fd_lane_rejected[Lane::Interactive.index()], rejected);
+    let admitted: u64 = last.fd_lane_admitted.iter().sum();
+    assert_eq!(last.decode_tokens, admitted * 2);
+    assert_eq!(s.metrics().e2e.count(), admitted as usize);
+    assert_eq!(last.fd_queue_depth, 0);
+}
