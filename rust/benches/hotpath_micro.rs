@@ -67,11 +67,43 @@ fn main() -> anyhow::Result<()> {
     });
     println!("{}", r.line());
 
+    // 2d. sharded recording under contention — 4 producer threads racing
+    //     the lock-free count shards (DESIGN.md §13). Compare against 2:
+    //     the per-thread cost should stay flat because producers never
+    //     take a lock.
+    let r = bench.run("record_routing 256 sel × 48 layers × 4 threads", || {
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for l in 0..48 {
+                        coord.record_routing(l, &experts);
+                    }
+                });
+            }
+        });
+    });
+    println!("{}", r.line());
+
     // 3. full policy update (48 layers × 128 experts)
     let mut now = 1.0;
     let r = bench.run("policy tick (48×128)", || {
         now += 1.0;
         std::hint::black_box(coord.tick(now));
+    });
+    println!("{}", r.line());
+
+    // 3b. concurrent group tick — a 2-device group with both updates due,
+    //     walked on scoped threads (serial gate vs parallel walk is the
+    //     delta this measures; see DeviceGroup::tick).
+    let group = dynaexq::coordinator::DeviceGroup::new(&preset, &cfg, &dev, 2)
+        .map_err(anyhow::Error::msg)?;
+    let mut gnow = 1.0;
+    let r = bench.run("group tick 2dev (concurrent)", || {
+        for l in 0..48 {
+            group.record_routing(l, &experts);
+        }
+        gnow += 1.0;
+        std::hint::black_box(group.tick(gnow));
     });
     println!("{}", r.line());
 

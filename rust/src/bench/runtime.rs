@@ -34,7 +34,9 @@ use super::Table;
 
 /// Schema tag stamped into every report; bump on breaking changes.
 /// v2: the `frontdoor` axis and per-lane front-door cell columns.
-pub const BENCH_SCHEMA: &str = "dynaexq-bench-serving/v2";
+/// v3: the `producers` axis on front-door cells (threaded load
+/// generator) with per-cell admission-latency p50/p95.
+pub const BENCH_SCHEMA: &str = "dynaexq-bench-serving/v3";
 
 /// Serving methods benchmarked by the full matrix: every registry method
 /// that serves traffic as a *method under comparison*. The quality
@@ -60,6 +62,13 @@ pub const BENCH_DEVICES: &[usize] = &[1, 2];
 
 /// Decode batch caps swept by the matrix (the paper's 1 → 32 range).
 pub const BENCH_BATCHES: &[usize] = &[1, 8, 32];
+
+/// Producer-thread counts swept on front-door cells by the full matrix:
+/// 1 is the serial reference (inline submission, byte-identical modeled
+/// behaviour to the v2 bench), 4 measures admission-path contention on
+/// the door's queue lock. Direct (non-front-door) cells pin the knob to
+/// 0 — there is no admission path to contend on.
+pub const BENCH_PRODUCERS: &[usize] = &[1, 4];
 
 /// Keys every cell object in `BENCH_serving.json` must carry — the
 /// schema contract `bench_smoke` (and the pre-write self-check) enforce.
@@ -87,11 +96,14 @@ pub const CELL_KEYS: &[&str] = &[
     "drift_events",
     "drift_recovery_ticks",
     "frontdoor",
+    "producers",
     "fd_lane_admitted",
     "fd_lane_rejected",
     "fd_lane_deadline_miss",
     "fd_lane_ttft_p50_s",
     "fd_lane_ttft_p95_s",
+    "fd_submit_p50_s",
+    "fd_submit_p95_s",
 ];
 
 /// The benchmark matrix: which cells run and at what workload shape.
@@ -113,6 +125,11 @@ pub struct BenchMatrix {
     /// [`FrontDoor`] + SLO scheduler, recording per-lane p50/p95 TTFT
     /// and typed-rejection totals.
     pub frontdoor: Vec<bool>,
+    /// Producer-thread axis, applied to front-door cells only: each
+    /// value spawns that many submission threads against the door and
+    /// times every `submit` call (admission-path contention). Direct
+    /// cells run once with the knob pinned to 0.
+    pub producers: Vec<usize>,
 }
 
 impl BenchMatrix {
@@ -133,13 +150,15 @@ impl BenchMatrix {
             warmup_rounds: 1,
             seed: 0xBE4C,
             frontdoor: vec![false, true],
+            producers: BENCH_PRODUCERS.to_vec(),
         }
     }
 
     /// The smallest matrix — what CI's `bench-smoke` job runs on every
     /// push: one method, one scenario, one device, batch 1, both sides
-    /// of the front-door axis (so the queue path is exercised on every
-    /// push).
+    /// of the front-door axis and both a serial and a threaded producer
+    /// count (so the queue path *and* the admission seam are exercised
+    /// on every push).
     pub fn smoke(model: &str) -> Self {
         Self {
             model: model.to_string(),
@@ -152,24 +171,32 @@ impl BenchMatrix {
             warmup_rounds: 1,
             seed: 0xBE4C,
             frontdoor: vec![false, true],
+            producers: vec![1, 2],
         }
     }
 
-    /// Number of cells the matrix spans.
+    /// Number of cells the matrix spans. Front-door cells fan out over
+    /// the producer axis; direct cells do not (producers is pinned 0).
     pub fn n_cells(&self) -> usize {
+        let fd_cells: usize = self
+            .frontdoor
+            .iter()
+            .map(|&f| if f { self.producers.len().max(1) } else { 1 })
+            .sum();
         self.methods.len()
             * self.scenarios.len()
             * self.devices.len()
             * self.batches.len()
-            * self.frontdoor.len()
+            * fd_cells
     }
 }
 
 /// Narrow a matrix to the axis values selected by a `--filter` spec:
 /// comma-separated `key=value` pairs over `method`, `scenario`,
-/// `devices`, `batch`, and `frontdoor` (`0/false/off` or `1/true/on`).
-/// Unknown keys and filters that empty an axis are errors — a bench that
-/// silently ran zero cells would read as a clean pass.
+/// `devices`, `batch`, `frontdoor` (`0/false/off` or `1/true/on`), and
+/// `producers` (front-door cells only). Unknown keys and filters that
+/// empty an axis are errors — a bench that silently ran zero cells
+/// would read as a clean pass.
 pub fn apply_filter(matrix: &mut BenchMatrix, spec: &str) -> Result<()> {
     let m = kv::parse_kv(spec);
     let mut keys: Vec<&String> = m.keys().collect();
@@ -202,9 +229,15 @@ pub fn apply_filter(matrix: &mut BenchMatrix, spec: &str) -> Result<()> {
                 };
                 matrix.frontdoor.retain(|&x| x == want);
             }
+            "producers" => {
+                let n: usize = val
+                    .parse()
+                    .with_context(|| format!("bad producers filter {val:?}"))?;
+                matrix.producers.retain(|&x| x == n);
+            }
             other => bail!(
                 "unknown filter key {other:?}; filterable axes: batch, \
-                 devices, frontdoor, method, scenario"
+                 devices, frontdoor, method, producers, scenario"
             ),
         }
     }
@@ -244,6 +277,10 @@ pub struct BenchCell {
     pub drift_recovery_ticks: u64,
     /// Whether the cell served through the bounded front door.
     pub frontdoor: bool,
+    /// Producer threads that submitted this cell's requests (0 for
+    /// direct cells, ≥1 for front-door cells; 1 is the serial inline
+    /// reference path).
+    pub producers: usize,
     /// Per-lane admissions (interactive|standard|batch order); empty for
     /// non-front-door cells.
     pub fd_lane_admitted: Vec<u64>,
@@ -256,6 +293,12 @@ pub struct BenchCell {
     pub fd_lane_ttft_p50_s: Vec<f64>,
     /// Per-lane TTFT p95, modeled seconds.
     pub fd_lane_ttft_p95_s: Vec<f64>,
+    /// Wall-clock p50 of individual `FrontDoor::submit` calls across
+    /// all producers — the admission-path contention signal (0.0 for
+    /// direct cells).
+    pub fd_submit_p50_s: f64,
+    /// Wall-clock p95 of individual `FrontDoor::submit` calls.
+    pub fd_submit_p95_s: f64,
 }
 
 /// A full matrix run.
@@ -278,7 +321,11 @@ fn frontdoor_bench_cfg(batch: usize) -> FrontDoorConfig {
 /// width, warm it, then serve the scenario end to end with per-round
 /// wall-clock sampling. With `frontdoor` set, every request is submitted
 /// through a bounded [`FrontDoor`] under the phase's tenant/lane tags
-/// and drained through the SLO scheduler each round.
+/// and drained through the SLO scheduler each round; `producers > 1`
+/// fans the round's submissions out over that many threads (requests
+/// are pre-generated on the bench thread, so ids and content are
+/// identical at every producer count) and times each `submit` call.
+/// `producers` is ignored for direct cells (recorded as 0).
 pub fn run_cell(
     matrix: &BenchMatrix,
     method: &str,
@@ -286,6 +333,7 @@ pub fn run_cell(
     devices: usize,
     batch: usize,
     frontdoor: bool,
+    producers: usize,
 ) -> Result<BenchCell> {
     let preset = helpers::preset(&matrix.model)?;
     let sc = helpers::scenario(scenario_name)?;
@@ -322,7 +370,8 @@ pub fn run_cell(
     let transitions0 = engine.backend.transition_totals();
     let drift0 = engine.backend.drift_stats();
 
-    let mut fd = if frontdoor {
+    let producers = if frontdoor { producers.max(1) } else { 0 };
+    let fd = if frontdoor {
         Some(
             FrontDoor::new(frontdoor_bench_cfg(batch))
                 .map_err(anyhow::Error::msg)?,
@@ -338,11 +387,12 @@ pub fn run_cell(
     );
 
     let mut samples = Vec::with_capacity(sc.total_rounds());
+    let mut submit_samples = Vec::new();
     let t_all = Instant::now();
     for phase in &sc.phases {
         engine.set_profile(&phase.profile);
         let b = Scenario::scaled_batch(batch, phase.load);
-        match &mut fd {
+        match &fd {
             None => {
                 for _ in 0..phase.rounds {
                     let t0 = Instant::now();
@@ -364,14 +414,70 @@ pub fn run_cell(
                 for _ in 0..phase.rounds {
                     let t0 = Instant::now();
                     let now = engine.now();
-                    for _ in 0..b {
-                        let req = gen.request(
-                            matrix.prompt_len,
-                            matrix.output_len,
-                            now,
-                        );
-                        // typed rejections are the measured outcome here
-                        let _ = fd.submit(req, &tenant, phase.lane, now);
+                    // Pre-generate on the bench thread: one sequential
+                    // generator decides ids/content before any producer
+                    // runs, so the request set is identical at every
+                    // producer count.
+                    let round_reqs: Vec<_> = (0..b)
+                        .map(|_| {
+                            gen.request(
+                                matrix.prompt_len,
+                                matrix.output_len,
+                                now,
+                            )
+                        })
+                        .collect();
+                    if producers <= 1 {
+                        // serial reference: in-order inline submission,
+                        // byte-identical to the v2 bench
+                        for req in round_reqs {
+                            let s0 = Instant::now();
+                            // typed rejections are the measured outcome
+                            let _ = fd.submit(req, &tenant, phase.lane, now);
+                            submit_samples.push(s0.elapsed().as_secs_f64());
+                        }
+                    } else {
+                        let mut chunks: Vec<Vec<_>> =
+                            (0..producers).map(|_| Vec::new()).collect();
+                        for (i, req) in round_reqs.into_iter().enumerate() {
+                            chunks[i % producers].push(req);
+                        }
+                        let lane = phase.lane;
+                        let tenant = tenant.as_str();
+                        let per_thread: Vec<Vec<f64>> =
+                            std::thread::scope(|s| {
+                                let handles: Vec<_> = chunks
+                                    .into_iter()
+                                    .map(|chunk| {
+                                        s.spawn(move || {
+                                            let mut lat =
+                                                Vec::with_capacity(
+                                                    chunk.len(),
+                                                );
+                                            for req in chunk {
+                                                let s0 = Instant::now();
+                                                let _ = fd.submit(
+                                                    req, tenant, lane, now,
+                                                );
+                                                lat.push(
+                                                    s0.elapsed()
+                                                        .as_secs_f64(),
+                                                );
+                                            }
+                                            lat
+                                        })
+                                    })
+                                    .collect();
+                                handles
+                                    .into_iter()
+                                    .map(|h| {
+                                        h.join().expect("bench producer")
+                                    })
+                                    .collect()
+                            });
+                        for lat in per_thread {
+                            submit_samples.extend(lat);
+                        }
                     }
                     let (mut sched, reqs) = fd.take_scheduled();
                     engine.serve_with(&mut sched, reqs);
@@ -390,11 +496,11 @@ pub fn run_cell(
             fd.stats().lane_deadline_miss(),
             Lane::ALL
                 .iter()
-                .map(|&l| percentile(fd.lane_ttft(l), 50.0))
+                .map(|&l| percentile(&fd.lane_ttft(l), 50.0))
                 .collect(),
             Lane::ALL
                 .iter()
-                .map(|&l| percentile(fd.lane_ttft(l), 95.0))
+                .map(|&l| percentile(&fd.lane_ttft(l), 95.0))
                 .collect(),
         ),
         None => {
@@ -435,11 +541,14 @@ pub fn run_cell(
         drift_events: drift_events.saturating_sub(drift0.0),
         drift_recovery_ticks: drift_recovery_ticks.saturating_sub(drift0.1),
         frontdoor,
+        producers,
         fd_lane_admitted: fd_adm,
         fd_lane_rejected: fd_rej,
         fd_lane_deadline_miss: fd_miss,
         fd_lane_ttft_p50_s: fd_p50,
         fd_lane_ttft_p95_s: fd_p95,
+        fd_submit_p50_s: percentile(&submit_samples, 50.0),
+        fd_submit_p95_s: percentile(&submit_samples, 95.0),
     })
 }
 
@@ -456,26 +565,39 @@ pub fn run_matrix(
             for &devices in &matrix.devices {
                 for &batch in &matrix.batches {
                     for &frontdoor in &matrix.frontdoor {
-                        let cell = run_cell(
-                            matrix, method, scenario, devices, batch,
-                            frontdoor,
-                        )
-                        .with_context(|| {
-                            format!(
-                                "cell {method}×{scenario}×{devices}dev\
-                                 ×b{batch}×fd{}",
-                                frontdoor as u8
+                        // direct cells have no admission path: one run,
+                        // producers pinned 0
+                        let prod_axis: Vec<usize> = if frontdoor {
+                            matrix.producers.clone()
+                        } else {
+                            vec![0]
+                        };
+                        for &producers in &prod_axis {
+                            let cell = run_cell(
+                                matrix, method, scenario, devices, batch,
+                                frontdoor, producers,
                             )
-                        })?;
-                        let fd_tag = if frontdoor { " fd" } else { "   " };
-                        progress(&format!(
-                            "[{}/{total}] {method:<22} {scenario:<12} \
-                             {devices}dev b{batch:<3}{fd_tag} {} / round \
-                             (p50)",
-                            cells.len() + 1,
-                            super::human(cell.wall_p50_round_s),
-                        ));
-                        cells.push(cell);
+                            .with_context(|| {
+                                format!(
+                                    "cell {method}×{scenario}×{devices}dev\
+                                     ×b{batch}×fd{}×p{producers}",
+                                    frontdoor as u8
+                                )
+                            })?;
+                            let fd_tag = if frontdoor {
+                                format!(" fd p{producers}")
+                            } else {
+                                "      ".to_string()
+                            };
+                            progress(&format!(
+                                "[{}/{total}] {method:<22} {scenario:<12} \
+                                 {devices}dev b{batch:<3}{fd_tag} {} / \
+                                 round (p50)",
+                                cells.len() + 1,
+                                super::human(cell.wall_p50_round_s),
+                            ));
+                            cells.push(cell);
+                        }
                     }
                 }
             }
@@ -521,6 +643,7 @@ pub fn report_to_json(report: &BenchReport) -> String {
             m.frontdoor.iter().map(|&b| Json::U64(b as u64)).collect(),
         ),
     );
+    root.push("producers", u64_arr(&m.producers));
     let mut cells = Vec::with_capacity(report.cells.len());
     for c in &report.cells {
         let mut o = Json::obj();
@@ -550,11 +673,14 @@ pub fn report_to_json(report: &BenchReport) -> String {
             Json::U64(c.drift_recovery_ticks),
         );
         o.push("frontdoor", Json::U64(c.frontdoor as u64));
+        o.push("producers", Json::U64(c.producers as u64));
         o.push("fd_lane_admitted", u64s(&c.fd_lane_admitted));
         o.push("fd_lane_rejected", u64s(&c.fd_lane_rejected));
         o.push("fd_lane_deadline_miss", u64s(&c.fd_lane_deadline_miss));
         o.push("fd_lane_ttft_p50_s", f64s(&c.fd_lane_ttft_p50_s));
         o.push("fd_lane_ttft_p95_s", f64s(&c.fd_lane_ttft_p95_s));
+        o.push("fd_submit_p50_s", Json::F64(c.fd_submit_p50_s));
+        o.push("fd_submit_p95_s", Json::F64(c.fd_submit_p95_s));
         cells.push(o);
     }
     root.push("cells", Json::Arr(cells));
@@ -564,7 +690,8 @@ pub fn report_to_json(report: &BenchReport) -> String {
 /// Validate a `BENCH_serving.json` document against the schema contract:
 /// the schema tag, the axis arrays, every required key in every cell,
 /// and full matrix coverage (one cell per method × scenario × device ×
-/// batch combination).
+/// batch × frontdoor combination, with front-door cells fanned out over
+/// the producer axis and direct cells pinned to producers = 0).
 pub fn validate_report_json(text: &str) -> Result<()> {
     let doc = json::parse(text).context("BENCH_serving.json parse")?;
     let schema = doc
@@ -607,13 +734,18 @@ pub fn validate_report_json(text: &str) -> Result<()> {
     let devices = nums("devices")?;
     let batches = nums("batches")?;
     let frontdoors = nums("frontdoors")?;
+    let producers = nums("producers")?;
     let cells =
         doc.get("cells").and_then(|v| v.as_arr()).context("missing cells")?;
+    let fd_cells: usize = frontdoors
+        .iter()
+        .map(|&f| if f != 0 { producers.len().max(1) } else { 1 })
+        .sum();
     let expected = methods.len()
         * scenarios.len()
         * devices.len()
         * batches.len()
-        * frontdoors.len();
+        * fd_cells;
     if cells.len() != expected {
         bail!("{} cells, expected {expected} (full matrix)", cells.len());
     }
@@ -626,7 +758,8 @@ pub fn validate_report_json(text: &str) -> Result<()> {
             let ok = match key {
                 "method" | "scenario" => v.as_str().is_some(),
                 "wall_total_s" | "wall_p50_round_s" | "wall_p95_round_s"
-                | "modeled_duration_s" | "modeled_tok_s" | "hi_fraction" => {
+                | "modeled_duration_s" | "modeled_tok_s" | "hi_fraction"
+                | "fd_submit_p50_s" | "fd_submit_p95_s" => {
                     v.as_f64().is_some()
                 }
                 "fd_lane_admitted" | "fd_lane_rejected"
@@ -646,6 +779,19 @@ pub fn validate_report_json(text: &str) -> Result<()> {
         }
         // front-door cells carry one entry per lane; direct cells none
         let fd = cell.get("frontdoor").unwrap().as_u64().unwrap();
+        let prod = cell.get("producers").unwrap().as_u64().unwrap();
+        if fd == 0 {
+            if prod != 0 {
+                bail!(
+                    "cell {i}: direct cell with producers={prod} (must be 0)"
+                );
+            }
+        } else if !producers.contains(&prod) {
+            bail!(
+                "cell {i}: producers={prod} outside the declared axis \
+                 {producers:?}"
+            );
+        }
         let want_len = if fd != 0 { 3 } else { 0 };
         for key in [
             "fd_lane_admitted",
@@ -668,6 +814,7 @@ pub fn validate_report_json(text: &str) -> Result<()> {
             cell.get("devices").unwrap().as_u64().unwrap(),
             cell.get("batch").unwrap().as_u64().unwrap(),
             fd,
+            prod,
         );
         if !methods.contains(&coord.0)
             || !scenarios.contains(&coord.1)
@@ -692,9 +839,11 @@ pub fn render_table(report: &BenchReport) -> String {
         "dev",
         "batch",
         "fd",
+        "prod",
         "rounds",
         "wall p50/round",
         "wall p95/round",
+        "submit p50",
         "modeled tok/s",
         "fd-rej",
         "deferred",
@@ -707,9 +856,15 @@ pub fn render_table(report: &BenchReport) -> String {
             c.devices.to_string(),
             c.batch.to_string(),
             if c.frontdoor { "y".into() } else { "-".into() },
+            if c.frontdoor { c.producers.to_string() } else { "-".into() },
             c.rounds.to_string(),
             super::human(c.wall_p50_round_s),
             super::human(c.wall_p95_round_s),
+            if c.frontdoor {
+                super::human(c.fd_submit_p50_s)
+            } else {
+                "-".into()
+            },
             format!("{:.0}", c.modeled_tok_s),
             c.fd_lane_rejected.iter().sum::<u64>().to_string(),
             c.transitions.deferred.to_string(),
@@ -726,13 +881,19 @@ mod tests {
     #[test]
     fn matrix_shapes() {
         let full = BenchMatrix::full("qwen30b-sim");
+        // direct cells run once; fronted cells fan out over producers
         assert_eq!(
             full.n_cells(),
-            BENCH_METHODS.len() * Scenario::names().len() * 2 * 3 * 2
+            BENCH_METHODS.len()
+                * Scenario::names().len()
+                * 2
+                * 3
+                * (1 + BENCH_PRODUCERS.len())
         );
-        // smoke spans both sides of the front-door axis
+        // smoke spans both sides of the front-door axis plus a serial
+        // and a threaded producer count on the fronted side
         let smoke = BenchMatrix::smoke("phi-sim");
-        assert_eq!(smoke.n_cells(), 2);
+        assert_eq!(smoke.n_cells(), 3);
     }
 
     #[test]
@@ -743,7 +904,12 @@ mod tests {
         assert_eq!(m.methods, vec!["dynaexq".to_string()]);
         assert_eq!(m.scenarios, vec!["steady".to_string()]);
         assert_eq!(m.batches, vec![8]);
-        // 1 method × 1 scenario × 2 devices × 1 batch × 2 fd = 4
+        // 1 method × 1 scenario × 2 devices × 1 batch ×
+        // (1 direct + 2 producer counts fronted) = 6
+        assert_eq!(m.n_cells(), 6);
+        // the producers axis narrows fronted cells only
+        apply_filter(&mut m, "producers=4").unwrap();
+        assert_eq!(m.producers, vec![4]);
         assert_eq!(m.n_cells(), 4);
         // a single cell
         apply_filter(&mut m, "devices=1,frontdoor=off").unwrap();
@@ -773,19 +939,33 @@ mod tests {
         // a tampered cell key must fail too
         let mut matrix = BenchMatrix::smoke("phi-sim");
         matrix.frontdoor = vec![false, true];
+        matrix.producers = vec![1, 2];
         let direct =
-            run_cell(&matrix, "dynaexq", "steady", 1, 1, false).unwrap();
+            run_cell(&matrix, "dynaexq", "steady", 1, 1, false, 0).unwrap();
         let fronted =
-            run_cell(&matrix, "dynaexq", "steady", 1, 1, true).unwrap();
+            run_cell(&matrix, "dynaexq", "steady", 1, 1, true, 1).unwrap();
+        let threaded =
+            run_cell(&matrix, "dynaexq", "steady", 1, 1, true, 2).unwrap();
         assert!(direct.fd_lane_admitted.is_empty());
+        assert_eq!(direct.producers, 0);
         assert_eq!(fronted.fd_lane_admitted.len(), 3);
-        let report =
-            BenchReport { matrix, cells: vec![direct, fronted] };
+        assert_eq!(threaded.producers, 2);
+        // threaded admission must agree with the serial reference on
+        // every modeled outcome (wall-clock aside)
+        assert_eq!(fronted.fd_lane_admitted, threaded.fd_lane_admitted);
+        assert_eq!(fronted.fd_lane_rejected, threaded.fd_lane_rejected);
+        assert_eq!(fronted.decode_tokens, threaded.decode_tokens);
+        let report = BenchReport {
+            matrix,
+            cells: vec![direct, fronted, threaded],
+        };
         let good = report_to_json(&report);
         validate_report_json(&good).unwrap();
         let bad = good.replace("\"hi_fraction\"", "\"hi_frac\"");
         assert!(validate_report_json(&bad).is_err());
         let bad = good.replace("\"fd_lane_rejected\"", "\"fd_rej\"");
+        assert!(validate_report_json(&bad).is_err());
+        let bad = good.replace("\"fd_submit_p50_s\"", "\"fd_sub\"");
         assert!(validate_report_json(&bad).is_err());
     }
 }

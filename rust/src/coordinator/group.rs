@@ -153,20 +153,64 @@ impl DeviceGroup {
         }
     }
 
-    /// Iteration boundary on every device (deterministic device order);
-    /// reports are merged (`ran` if any device's policy ran).
+    /// Iteration boundary on every device, reports merged deterministically
+    /// by device index (DESIGN.md §13).
+    ///
+    /// When more than one device has a policy update due, the per-device
+    /// coordinators tick **concurrently** on scoped threads — they are
+    /// independent state machines (own budget, pools, pipeline, hotness)
+    /// sharing nothing but `Arc`-held atomics, so the parallel walk
+    /// produces exactly the state [`DeviceGroup::tick_serial`] would.
+    /// Per-round ticks that would only gate out (the common case between
+    /// update intervals) stay on the calling thread: spawning would cost
+    /// more than the early-return poll it parallelizes.
     pub fn tick(&self, now_s: f64) -> UpdateReport {
+        if self.devices.len() <= 1
+            || !self.devices.iter().any(|c| c.update_due(now_s))
+        {
+            return self.tick_serial(now_s);
+        }
+        let reports: Vec<UpdateReport> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .devices
+                .iter()
+                .map(|c| s.spawn(move || c.tick(now_s)))
+                .collect();
+            // join in spawn order — the merge below is therefore always
+            // device 0, 1, … regardless of completion order
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("device tick panicked"))
+                .collect()
+        });
+        let mut agg = UpdateReport::default();
+        for r in &reports {
+            Self::merge_report(&mut agg, r);
+        }
+        agg
+    }
+
+    /// The serial reference walk: tick device 0, then 1, … on the calling
+    /// thread. Equivalence with the concurrent [`DeviceGroup::tick`] is
+    /// pinned by the parallel-stress suite.
+    pub fn tick_serial(&self, now_s: f64) -> UpdateReport {
         let mut agg = UpdateReport::default();
         for c in &self.devices {
             let r = c.tick(now_s);
-            agg.ran |= r.ran;
-            agg.promotions_submitted += r.promotions_submitted;
-            agg.demotions_submitted += r.demotions_submitted;
-            agg.deferred += r.deferred;
-            agg.published += r.published;
-            agg.drift_detected |= r.drift_detected;
+            Self::merge_report(&mut agg, &r);
         }
         agg
+    }
+
+    /// Deterministic report merge: counters sum, flags OR — commutative
+    /// and associative, but always applied in device-index order anyway.
+    fn merge_report(agg: &mut UpdateReport, r: &UpdateReport) {
+        agg.ran |= r.ran;
+        agg.promotions_submitted += r.promotions_submitted;
+        agg.demotions_submitted += r.demotions_submitted;
+        agg.deferred += r.deferred;
+        agg.published += r.published;
+        agg.drift_detected |= r.drift_detected;
     }
 
     /// `(change-point triggers, recovery intervals)` summed across every
@@ -406,6 +450,62 @@ mod tests {
         assert!(group.within_envelope());
         assert!(group.pools_consistent());
         assert_eq!(group.inflight_depths().len(), 2);
+    }
+
+    #[test]
+    fn prop_parallel_tick_matches_serial_reference() {
+        // Twin groups fed identical traffic: one ticked through the
+        // concurrent path, one through the serial reference walk. Reports
+        // and the full residency table must stay equal step for step —
+        // the determinism contract of DESIGN.md §13.
+        let mut prop = Prop::new("group_parallel_tick_equiv");
+        prop.run(6, |rng| {
+            let preset = shrunk_preset(rng);
+            let mut cfg = ServingConfig::default();
+            cfg.update_interval_ms = 1.0;
+            cfg.hysteresis_margin = rng.range_f64(0.0, 0.3);
+            cfg.ema_alpha = rng.range_f64(0.0, 0.9);
+            let dev = DeviceConfig::default();
+            let n_dev = 2 + rng.below(2);
+            let par = DeviceGroup::new(&preset, &cfg, &dev, n_dev).unwrap();
+            let ser = DeviceGroup::new(&preset, &cfg, &dev, n_dev).unwrap();
+            let mut now = 0.0;
+            for _ in 0..20 {
+                let layer = rng.below(preset.n_layers);
+                let hot: Vec<usize> = (0..1 + rng.below(6))
+                    .map(|_| rng.below(preset.n_experts))
+                    .collect();
+                for _ in 0..10 {
+                    par.record_routing(layer, &hot);
+                    ser.record_routing(layer, &hot);
+                }
+                par.wait_staged();
+                ser.wait_staged();
+                now += rng.range_f64(0.001, 0.01);
+                let rp = par.tick(now);
+                let rs = ser.tick_serial(now);
+                assert_eq!(rp.ran, rs.ran);
+                assert_eq!(
+                    rp.promotions_submitted, rs.promotions_submitted,
+                    "promotion counts diverged at t={now}"
+                );
+                assert_eq!(rp.demotions_submitted, rs.demotions_submitted);
+                assert_eq!(rp.deferred, rs.deferred);
+                for l in 0..preset.n_layers {
+                    for e in 0..preset.n_experts {
+                        assert_eq!(
+                            par.resolve_tier(l, e),
+                            ser.resolve_tier(l, e),
+                            "layer {l} expert {e} diverged at t={now}"
+                        );
+                    }
+                }
+            }
+            assert_eq!(par.tier_counts(), ser.tier_counts());
+            assert_eq!(par.migrated_bytes(), ser.migrated_bytes());
+            assert!(par.within_envelope() && ser.within_envelope());
+            assert!(par.pools_consistent() && ser.pools_consistent());
+        });
     }
 
     #[test]

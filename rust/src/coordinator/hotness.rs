@@ -16,6 +16,7 @@
 //! moving, smooth the rest of the time.
 
 use crate::config::DriftConfig;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 /// EMA hotness estimator over all experts of all layers.
 #[derive(Debug, Clone)]
@@ -140,6 +141,120 @@ impl HotnessEstimator {
         idx.sort_by(|&a, &b| key(b).total_cmp(&key(a)).then(a.cmp(&b)));
         idx.truncate(n);
         idx
+    }
+}
+
+/// Number of atomic count shards in front of the estimator. Small and
+/// fixed: enough to split a handful of recording threads (decode workers
+/// plus the session thread), cheap to merge in one linear sweep.
+pub const HOTNESS_SHARDS: usize = 4;
+
+/// Lock-free sharded routing-count buffers in front of a
+/// [`HotnessEstimator`] (DESIGN.md §13).
+///
+/// The hot path records router selections with a relaxed `fetch_add` on a
+/// per-thread shard slot — no mutex, no contention between recording
+/// threads beyond false sharing. At the iteration boundary the
+/// coordinator's tick merges every shard into the estimator's serial
+/// counters (under the existing hotness lock) and zeroes the shards.
+/// Because per-(layer, expert) counts are u64 sums, the merge is exactly
+/// commutative: the merged counters are byte-identical to what the old
+/// single-lock `record_layer` path would have produced for any
+/// interleaving of producers, and the EMA fold that follows therefore
+/// yields bit-equal scores. Visibility follows the PR 5 contract: a
+/// recorded selection becomes observable to policy exactly at the next
+/// interval boundary, never earlier.
+#[derive(Debug)]
+pub struct HotnessShards {
+    n_slots: usize,
+    n_experts: usize,
+    /// `shards[s][layer * n_experts + expert]`, same flat layout as the
+    /// estimator's `counts`.
+    shards: Vec<Vec<AtomicU64>>,
+}
+
+/// Process-wide round-robin assignment of recording threads to shard
+/// slots. A thread keeps its slot for its lifetime, so repeated records
+/// from one thread always hit the same cache lines.
+fn shard_slot() -> usize {
+    use std::cell::Cell;
+    static NEXT_SLOT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SLOT: Cell<usize> = const { Cell::new(usize::MAX) };
+    }
+    SLOT.with(|s| {
+        let mut v = s.get();
+        if v == usize::MAX {
+            v = NEXT_SLOT.fetch_add(1, Ordering::Relaxed);
+            s.set(v);
+        }
+        v
+    })
+}
+
+impl HotnessShards {
+    pub fn new(n_layers: usize, n_experts: usize) -> Self {
+        let n_slots = n_layers * n_experts;
+        Self {
+            n_slots,
+            n_experts,
+            shards: (0..HOTNESS_SHARDS)
+                .map(|_| (0..n_slots).map(|_| AtomicU64::new(0)).collect())
+                .collect(),
+        }
+    }
+
+    /// The shard index the calling thread should record into.
+    #[inline]
+    pub fn shard_for_current_thread(&self) -> usize {
+        shard_slot() % self.shards.len()
+    }
+
+    /// Record one router selection into `shard` (lock-free).
+    #[inline]
+    pub fn record(&self, shard: usize, layer: usize, expert: usize) {
+        self.shards[shard][layer * self.n_experts + expert]
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a batch of selections for one layer into `shard`
+    /// (lock-free).
+    #[inline]
+    pub fn record_layer(&self, shard: usize, layer: usize, experts: &[usize]) {
+        let row = &self.shards[shard];
+        let base = layer * self.n_experts;
+        for &e in experts {
+            row[base + e].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Iteration-boundary merge: drain every shard into the estimator's
+    /// serial counters and zero the shards. The caller holds the hotness
+    /// lock, so the merged counts become visible to the drift detector
+    /// and the EMA fold atomically with the boundary.
+    pub fn merge_into(&self, est: &mut HotnessEstimator) {
+        assert_eq!(
+            est.counts.len(),
+            self.n_slots,
+            "shard/estimator dimension mismatch"
+        );
+        for shard in &self.shards {
+            for (i, cell) in shard.iter().enumerate() {
+                let v = cell.swap(0, Ordering::Relaxed);
+                if v != 0 {
+                    est.counts[i] += v;
+                }
+            }
+        }
+    }
+
+    /// Total unmerged selections across all shards (diagnostics/tests).
+    pub fn pending(&self) -> u64 {
+        self.shards
+            .iter()
+            .flat_map(|s| s.iter())
+            .map(|c| c.load(Ordering::Relaxed))
+            .sum()
     }
 }
 
@@ -316,6 +431,47 @@ impl DriftDetector {
 mod tests {
     use super::*;
     use crate::testutil::prop::Prop;
+
+    #[test]
+    fn shard_merge_matches_direct_recording() {
+        // Serial reference: record straight into an estimator.
+        let mut direct = HotnessEstimator::new(2, 4, 0.5);
+        direct.record_layer(0, &[0, 1, 1, 3]);
+        direct.record_layer(1, &[2, 2]);
+        // Sharded path: spread the same selections across every shard.
+        let shards = HotnessShards::new(2, 4);
+        shards.record_layer(0, 0, &[0, 1]);
+        shards.record_layer(1 % HOTNESS_SHARDS, 0, &[1, 3]);
+        shards.record(2 % HOTNESS_SHARDS, 1, 2);
+        shards.record(3 % HOTNESS_SHARDS, 1, 2);
+        assert_eq!(shards.pending(), 6);
+        let mut merged = HotnessEstimator::new(2, 4, 0.5);
+        shards.merge_into(&mut merged);
+        assert_eq!(shards.pending(), 0, "merge drains the shards");
+        for l in 0..2 {
+            assert_eq!(merged.layer_counts(l), direct.layer_counts(l));
+        }
+        direct.end_interval();
+        merged.end_interval();
+        for l in 0..2 {
+            assert_eq!(merged.layer_scores(l), direct.layer_scores(l));
+        }
+    }
+
+    #[test]
+    fn shard_slot_is_stable_per_thread() {
+        let shards = HotnessShards::new(1, 2);
+        let a = shards.shard_for_current_thread();
+        let b = shards.shard_for_current_thread();
+        assert_eq!(a, b, "a thread keeps its shard slot");
+        assert!(a < HOTNESS_SHARDS);
+        let other = std::thread::spawn(shard_slot).join().unwrap();
+        assert_ne!(
+            other,
+            usize::MAX,
+            "spawned thread gets a real slot assignment"
+        );
+    }
 
     #[test]
     fn ema_update_formula() {

@@ -28,7 +28,7 @@ use std::sync::Arc;
 
 pub use budget::{BudgetPlan, BudgetTracker};
 pub use group::DeviceGroup;
-pub use hotness::{DriftDetector, HotnessEstimator};
+pub use hotness::{DriftDetector, HotnessEstimator, HotnessShards};
 pub use pipeline::{
     Admission, StageFn, TransitionKind, TransitionPipeline, TransitionTotals,
 };
@@ -66,6 +66,11 @@ pub struct Coordinator {
     /// One block pool per ladder rung, tier 0 first.
     pub pools: Vec<Arc<BlockPool>>,
     pub pipeline: TransitionPipeline,
+    /// Lock-free recording front: router selections land in sharded
+    /// atomic counters and are merged into `hotness` once per tick
+    /// (DESIGN.md §13). The mutex below only guards the serial
+    /// fold/plan state, never the record path.
+    shards: HotnessShards,
     hotness: std::sync::Mutex<HotnessEstimator>,
     /// Change-point detector of the adaptive-α mode (`None` when
     /// `cfg.adaptive_alpha` is off — the classic fixed-α stack).
@@ -171,6 +176,7 @@ impl Coordinator {
             budget,
             pools,
             pipeline,
+            shards: HotnessShards::new(layers, preset.n_experts),
             hotness: std::sync::Mutex::new(HotnessEstimator::new(
                 layers,
                 preset.n_experts,
@@ -232,24 +238,41 @@ impl Coordinator {
     }
 
     /// Feed router trace: `experts` are the top-k ids selected for each
-    /// token at `layer` this iteration.
+    /// token at `layer` this iteration. Lock-free: lands in the calling
+    /// thread's count shard and becomes visible to policy at the next
+    /// interval-boundary merge (DESIGN.md §13).
     pub fn record_routing(&self, layer: usize, experts: &[usize]) {
-        self.hotness.lock().unwrap().record_layer(layer, experts);
+        let shard = self.shards.shard_for_current_thread();
+        self.shards.record_layer(shard, layer, experts);
     }
 
-    /// Feed several layers' router traces under a **single** hotness lock
-    /// — the iteration-boundary flush of a backend's per-layer routing
-    /// buffer (DESIGN.md §11). Count-equivalent to calling
-    /// [`Coordinator::record_routing`] once per batch, at 1/L of the lock
-    /// traffic.
+    /// Feed several layers' router traces — the iteration-boundary flush
+    /// of a backend's per-layer routing buffer (DESIGN.md §11).
+    /// Count-equivalent to calling [`Coordinator::record_routing`] once
+    /// per batch; the flush semantics are unchanged from the locked era:
+    /// everything recorded before a tick is observed by that tick.
     pub fn record_layers<'a, I>(&self, batches: I)
     where
         I: IntoIterator<Item = (usize, &'a [usize])>,
     {
-        let mut hot = self.hotness.lock().unwrap();
+        let shard = self.shards.shard_for_current_thread();
         for (layer, experts) in batches {
-            hot.record_layer(layer, experts);
+            self.shards.record_layer(shard, layer, experts);
         }
+    }
+
+    /// Selections recorded but not yet merged into the estimator
+    /// (diagnostics/tests of the sharded front).
+    pub fn pending_routing(&self) -> u64 {
+        self.shards.pending()
+    }
+
+    /// Whether a call to [`Coordinator::tick`] at `now_s` would run the
+    /// policy update (the interval gate has elapsed). `DeviceGroup` uses
+    /// this to skip thread spawns on the per-round ticks that would gate
+    /// out anyway.
+    pub fn update_due(&self, now_s: f64) -> bool {
+        now_s >= *self.next_update_s.lock().unwrap()
     }
 
     /// Iteration boundary: publish finished transitions; if the update
@@ -268,6 +291,13 @@ impl Coordinator {
         report.ran = true;
 
         let mut hot = self.hotness.lock().unwrap();
+        // Iteration-boundary merge (DESIGN.md §13): drain the sharded
+        // atomic counters into the serial estimator *before* the drift
+        // detector reads raw counts and before the EMA fold. u64 sums are
+        // commutative, so the merged counters — and every score computed
+        // from them — are byte-identical to the old single-lock recording
+        // path regardless of producer interleaving.
+        self.shards.merge_into(&mut hot);
         // Drift-aware α (DESIGN.md §10): the detector reads this
         // interval's raw counts before the fold; on a change-point the
         // stale scores shrink and the EMA runs at the reactive α for the
@@ -418,6 +448,20 @@ mod tests {
             assert_eq!(c.resolve(0, e), Precision::Fp16, "expert {e}");
         }
         assert!(c.budget.within_envelope());
+    }
+
+    #[test]
+    fn sharded_recording_is_invisible_until_tick() {
+        let c = coord(ModelPreset::phi_sim());
+        c.record_routing(0, &[0, 0, 1]);
+        assert_eq!(c.pending_routing(), 3);
+        assert_eq!(c.hotness_score(0, 0), 0.0, "pre-boundary");
+        assert!(!c.update_due(0.01));
+        assert!(c.update_due(1.0));
+        let r = c.tick(1.0);
+        assert!(r.ran);
+        assert_eq!(c.pending_routing(), 0, "tick merges the shards");
+        assert!(c.hotness_score(0, 0) > 0.0, "post-boundary");
     }
 
     #[test]

@@ -170,6 +170,20 @@ impl TransitionTotals {
     }
 }
 
+/// The mutable pipeline state — migration stream, in-flight list, and
+/// eviction queue — behind **one** mutex (DESIGN.md §13). They were three
+/// separate locks once; every operation that touched two of them (submit
+/// drains evictions then schedules a transfer, poll publishes then queues
+/// evictions) acquired them in sequence, which was both doubled lock
+/// traffic per tick and a latent ordering hazard once device ticks run
+/// concurrently. One lock, one order, no interleaving between the
+/// admission decision and its bookkeeping.
+struct PipelineInner {
+    migration: Stream,
+    inflight: Vec<Inflight>,
+    evictions: VecDeque<Eviction>,
+}
+
 /// The transition pipeline. One per engine.
 pub struct TransitionPipeline {
     handles: Arc<HandleTable>,
@@ -183,9 +197,7 @@ pub struct TransitionPipeline {
     bytes_of: Box<dyn Fn(Precision) -> usize + Send + Sync>,
     max_inflight: usize,
 
-    migration: Mutex<Stream>,
-    inflight: Mutex<Vec<Inflight>>,
-    evictions: Mutex<VecDeque<Eviction>>,
+    inner: Mutex<PipelineInner>,
     next_id: AtomicU64,
     pub stats: PipelineStats,
 
@@ -229,9 +241,11 @@ impl TransitionPipeline {
             secs_per_byte,
             bytes_of,
             max_inflight,
-            migration: Mutex::new(Stream::new()),
-            inflight: Mutex::new(Vec::new()),
-            evictions: Mutex::new(VecDeque::new()),
+            inner: Mutex::new(PipelineInner {
+                migration: Stream::new(),
+                inflight: Vec::new(),
+                evictions: VecDeque::new(),
+            }),
             next_id: AtomicU64::new(1),
             stats: PipelineStats::default(),
             stage_tx: Some(tx),
@@ -263,9 +277,16 @@ impl TransitionPipeline {
             return Admission::Rejected;
         }
 
+        // One lock for the whole admission: the eviction drain, the
+        // capacity checks, the transfer scheduling and the in-flight
+        // bookkeeping all happen under a single acquisition, so a
+        // concurrent submitter can never interleave between the decision
+        // and its side effects.
+        let mut inner = self.inner.lock().unwrap();
+
         // Reclaim superseded buffers first — eviction priority under
         // pressure increases the feasible set for this admission.
-        self.drain_evictions();
+        self.drain_locked(&mut inner);
 
         let from = {
             let entry = self.handles.entry(key);
@@ -276,7 +297,7 @@ impl TransitionPipeline {
             cur
         };
 
-        if self.inflight.lock().unwrap().len() >= self.max_inflight {
+        if inner.inflight.len() >= self.max_inflight {
             self.stats.deferred.fetch_add(1, Ordering::Relaxed);
             return Admission::Deferred;
         }
@@ -316,10 +337,9 @@ impl TransitionPipeline {
             ))
             .expect("migration worker alive");
         }
-        let done_at = {
-            let mut mig = self.migration.lock().unwrap();
-            mig.schedule(now, dev_bytes as f64 * self.secs_per_byte)
-        };
+        let done_at = inner
+            .migration
+            .schedule(now, dev_bytes as f64 * self.secs_per_byte);
         self.stats
             .migrated_bytes
             .fetch_add(dev_bytes as u64, Ordering::Relaxed);
@@ -328,7 +348,7 @@ impl TransitionPipeline {
         } else {
             self.stats.demotions.fetch_add(1, Ordering::Relaxed);
         }
-        self.inflight.lock().unwrap().push(Inflight {
+        inner.inflight.push(Inflight {
             id,
             key,
             from,
@@ -347,16 +367,16 @@ impl TransitionPipeline {
     pub fn poll(&self, now: f64) -> Vec<(ExpertKey, Precision)> {
         let base = self.ladder.base_tier();
         let mut published = Vec::new();
-        let mut inflight = self.inflight.lock().unwrap();
+        let mut inner = self.inner.lock().unwrap();
         let mut i = 0;
-        while i < inflight.len() {
-            let ready = inflight[i].done_at <= now
-                && inflight[i].staged.load(Ordering::Acquire);
+        while i < inner.inflight.len() {
+            let ready = inner.inflight[i].done_at <= now
+                && inner.inflight[i].staged.load(Ordering::Acquire);
             if !ready {
                 i += 1;
                 continue;
             }
-            let job = inflight.swap_remove(i);
+            let job = inner.inflight.swap_remove(i);
             let mut entry = self.handles.entry(job.key);
             // Publish-then-switch: new version becomes visible atomically...
             let old_alloc = entry.active_alloc.take();
@@ -373,7 +393,7 @@ impl TransitionPipeline {
                 } else {
                     (self.bytes_of)(self.ladder.tier(job.from))
                 };
-                self.evictions.lock().unwrap().push_back(Eviction {
+                inner.evictions.push_back(Eviction {
                     alloc,
                     tier: job.from,
                     release_bytes,
@@ -381,15 +401,18 @@ impl TransitionPipeline {
             }
             published.push((job.key, self.ladder.tier(job.to)));
         }
-        drop(inflight);
-        self.drain_evictions();
+        self.drain_locked(&mut inner);
         published
     }
 
     /// Reclaim superseded buffers (the eviction queue of §3.4).
     pub fn drain_evictions(&self) {
-        let mut q = self.evictions.lock().unwrap();
-        while let Some(ev) = q.pop_front() {
+        self.drain_locked(&mut self.inner.lock().unwrap());
+    }
+
+    /// The drain body, for callers already holding the pipeline lock.
+    fn drain_locked(&self, inner: &mut PipelineInner) {
+        while let Some(ev) = inner.evictions.pop_front() {
             self.pools[ev.tier].free(ev.alloc);
             if ev.release_bytes > 0 {
                 self.budget.release(ev.tier, ev.release_bytes);
@@ -400,25 +423,26 @@ impl TransitionPipeline {
 
     /// Modeled time at which all queued migration work completes.
     pub fn migration_tail(&self) -> f64 {
-        self.migration.lock().unwrap().tail()
+        self.inner.lock().unwrap().migration.tail()
     }
 
     /// Total modeled migration busy time (bandwidth accounting).
     pub fn migration_busy(&self) -> f64 {
-        self.migration.lock().unwrap().busy()
+        self.inner.lock().unwrap().migration.busy()
     }
 
     /// Number of in-flight transitions.
     pub fn inflight_count(&self) -> usize {
-        self.inflight.lock().unwrap().len()
+        self.inner.lock().unwrap().inflight.len()
     }
 
     /// The in-flight (key, from, to) moves (policy planning input — avoids
     /// scanning every entry's state mutex on the update path).
     pub fn inflight_transitions(&self) -> Vec<(ExpertKey, usize, usize)> {
-        self.inflight
+        self.inner
             .lock()
             .unwrap()
+            .inflight
             .iter()
             .map(|j| (j.key, j.from, j.to))
             .collect()
@@ -426,9 +450,10 @@ impl TransitionPipeline {
 
     /// Experts currently moving toward tier 0 (diagnostics).
     pub fn promoting_keys(&self) -> Vec<ExpertKey> {
-        self.inflight
+        self.inner
             .lock()
             .unwrap()
+            .inflight
             .iter()
             .filter(|j| j.to < j.from)
             .map(|j| j.key)
@@ -437,9 +462,10 @@ impl TransitionPipeline {
 
     /// Experts currently moving away from tier 0 (diagnostics).
     pub fn demoting_keys(&self) -> Vec<ExpertKey> {
-        self.inflight
+        self.inner
             .lock()
             .unwrap()
+            .inflight
             .iter()
             .filter(|j| j.to > j.from)
             .map(|j| j.key)
@@ -450,9 +476,10 @@ impl TransitionPipeline {
     pub fn wait_staged(&self) {
         loop {
             let all = self
-                .inflight
+                .inner
                 .lock()
                 .unwrap()
+                .inflight
                 .iter()
                 .all(|j| j.staged.load(Ordering::Acquire));
             if all {

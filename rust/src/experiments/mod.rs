@@ -247,6 +247,15 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
     if let Some(s) = args.get_parse::<u64>("seed") {
         matrix.seed = s;
     }
+    if let Some(p) = args.get_parse::<usize>("producers") {
+        // Override the front-door producer-thread axis with a single
+        // count (0 is meaningless — the knob only exists on cells that
+        // have an admission path).
+        if p == 0 {
+            anyhow::bail!("--producers must be >= 1");
+        }
+        matrix.producers = vec![p];
+    }
     if let Some(spec) = args.get("filter") {
         // Narrow to selected axis values (re-run single cells without
         // the full matrix); the written report stays schema-valid
@@ -255,13 +264,14 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
     }
     println!(
         "bench: {} cells ({} methods × {} scenarios × {:?} devices × \
-         {:?} batches × {:?} frontdoor) on {model}",
+         {:?} batches × {:?} frontdoor × {:?} producers) on {model}",
         matrix.n_cells(),
         matrix.methods.len(),
         matrix.scenarios.len(),
         matrix.devices,
         matrix.batches,
         matrix.frontdoor,
+        matrix.producers,
     );
     let report = run_matrix(&matrix, |line| eprintln!("{line}"))?;
     println!("{}", crate::bench::runtime::render_table(&report));

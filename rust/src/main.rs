@@ -51,14 +51,17 @@ SUBCOMMANDS:
              batch {1,8,32} × {direct, front-door}, timed on the host
              clock; emits the machine-readable perf trajectory
              BENCH_serving.json (front-door cells carry per-lane p50/p95
-             TTFT and typed-rejection totals).
-               --smoke  (smallest cell pair — the CI job)
+             TTFT, typed-rejection totals, and admission-path submit
+             p50/p95, fanned out over a producer-thread axis {1,4}).
+               --smoke  (smallest cell triple — the CI job)
                --model ...   (default qwen30b-sim; phi-sim under --smoke)
                --out path    (default BENCH_serving.json)
                --prompt N --output N --seed S
+               --producers N  (override the producer-thread axis with a
+                            single count; front-door cells only)
                --filter key=value[,...]  (narrow axes: method, scenario,
-                            devices, batch, frontdoor — re-run single
-                            cells without the full matrix)
+                            devices, batch, frontdoor, producers —
+                            re-run single cells without the full matrix)
     report   Regenerate a paper table/figure.
                --exp t1|t2|t4|f1|f2|f3|f6..f10|a1..a10|all  [--fast]
     quality  Numeric quality run (real PJRT execution; needs a build with

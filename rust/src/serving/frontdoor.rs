@@ -7,9 +7,11 @@
 //! * [`FrontDoor`] — a bounded admission queue in front of the engine.
 //!   [`FrontDoor::submit`] is **never blocking**: it either enqueues the
 //!   request or returns a typed [`Rejected`] immediately (Nexus-style
-//!   backpressure). Per-tenant occupancy/served/rejected accounting uses
-//!   lock-free atomic counters, so a future concurrent submit path needs
-//!   no new state — only a lock around the queue itself.
+//!   backpressure). Every method takes `&self` — producers on separate
+//!   threads submit against one shared door; the admission decision runs
+//!   under a single fine-grained lock around the queue itself while all
+//!   per-tenant occupancy/served/rejected accounting stays on lock-free
+//!   atomic counters (DESIGN.md §13).
 //! * [`SloScheduler`] — a [`Scheduler`] that composes with the engine
 //!   exactly like [`ContinuousBatch`](super::scheduler::ContinuousBatch)
 //!   (same admit/decode-round loop shape), but picks the next admission
@@ -33,6 +35,7 @@
 use std::collections::HashMap;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Mutex, RwLock};
 
 use crate::config::frontdoor::{FrontDoorConfig, Lane, LimitAction};
 use crate::workload::Request;
@@ -145,16 +148,35 @@ struct TenantState {
     rejected: AtomicU64,
 }
 
+/// First-appearance tenant table behind one `RwLock`: submissions from
+/// known tenants take the read lock (the counters themselves are
+/// atomics); only a *new* tenant name takes the write lock, once.
+#[derive(Debug, Default)]
+struct TenantTable {
+    list: Vec<TenantState>,
+    idx: HashMap<String, usize>,
+}
+
 /// The bounded, fair, SLO-aware admission queue.
+///
+/// Concurrency seam (DESIGN.md §13): every method takes `&self`, so
+/// producers on separate threads share one door. The admission decision —
+/// tenant limits, queue bound, deadline feasibility, push — runs under a
+/// single fine-grained lock around the queue itself, which serializes
+/// submissions: the queue bound stays strict and each submission's
+/// outcome is exactly what the serial path would decide at its
+/// lock-acquisition position. All counters remain lock-free atomics;
+/// single-producer behaviour is byte-identical to the old `&mut self`
+/// path.
 pub struct FrontDoor {
     cfg: FrontDoorConfig,
-    queue: Vec<QueuedRequest>,
-    tenants: Vec<TenantState>,
-    tenant_idx: HashMap<String, usize>,
+    queue: Mutex<Vec<QueuedRequest>>,
+    tenants: RwLock<TenantTable>,
     stats: FrontDoorStats,
     /// Per-lane TTFT samples absorbed from drained schedulers
     /// ([`Lane::index`] order) — the bench per-lane p50/p95 source.
-    lane_ttft: [Vec<f64>; 3],
+    /// Only the drain loop writes it; a plain mutex suffices.
+    lane_ttft: Mutex<[Vec<f64>; 3]>,
 }
 
 impl FrontDoor {
@@ -163,11 +185,10 @@ impl FrontDoor {
         cfg.validate()?;
         Ok(Self {
             cfg,
-            queue: Vec::new(),
-            tenants: Vec::new(),
-            tenant_idx: HashMap::new(),
+            queue: Mutex::new(Vec::new()),
+            tenants: RwLock::new(TenantTable::default()),
             stats: FrontDoorStats::default(),
-            lane_ttft: [Vec::new(), Vec::new(), Vec::new()],
+            lane_ttft: Mutex::new([Vec::new(), Vec::new(), Vec::new()]),
         })
     }
 
@@ -177,7 +198,7 @@ impl FrontDoor {
 
     /// Current admission-queue depth.
     pub fn depth(&self) -> usize {
-        self.queue.len()
+        self.queue.lock().unwrap().len()
     }
 
     pub fn stats(&self) -> &FrontDoorStats {
@@ -185,36 +206,52 @@ impl FrontDoor {
     }
 
     /// TTFT samples served on a lane so far (drained rounds only).
-    pub fn lane_ttft(&self, lane: Lane) -> &[f64] {
-        &self.lane_ttft[lane.index()]
+    pub fn lane_ttft(&self, lane: Lane) -> Vec<f64> {
+        self.lane_ttft.lock().unwrap()[lane.index()].clone()
     }
 
     /// Cumulative engine admissions per tenant, in first-appearance
     /// order: `(tenant name, served)`.
     pub fn tenant_served(&self) -> Vec<(String, u64)> {
         self.tenants
+            .read()
+            .unwrap()
+            .list
             .iter()
             .map(|t| (t.name.clone(), t.served.load(Relaxed)))
             .collect()
     }
 
-    fn tenant_id(&mut self, name: &str) -> usize {
-        if let Some(&i) = self.tenant_idx.get(name) {
+    /// Resolve (or first-appearance-insert) a tenant name. Fast path is
+    /// a read lock; the write lock is taken only for a name never seen
+    /// before, with a re-check under it (two threads racing the same new
+    /// name must agree on one index).
+    fn tenant_id(&self, name: &str) -> usize {
+        if let Some(&i) = self.tenants.read().unwrap().idx.get(name) {
             return i;
         }
-        let i = self.tenants.len();
-        self.tenants.push(TenantState {
+        let mut tab = self.tenants.write().unwrap();
+        if let Some(&i) = tab.idx.get(name) {
+            return i;
+        }
+        let i = tab.list.len();
+        tab.list.push(TenantState {
             name: name.to_string(),
             queued: AtomicU64::new(0),
             served: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
         });
-        self.tenant_idx.insert(name.to_string(), i);
+        tab.idx.insert(name.to_string(), i);
         i
     }
 
-    fn reject(&self, tenant: usize, lane: Lane, why: Rejected) -> Rejected {
-        self.tenants[tenant].rejected.fetch_add(1, Relaxed);
+    fn reject_with(
+        &self,
+        tenant: &TenantState,
+        lane: Lane,
+        why: Rejected,
+    ) -> Rejected {
+        tenant.rejected.fetch_add(1, Relaxed);
         self.stats.lanes[lane.index()].rejected.fetch_add(1, Relaxed);
         let kind = match why {
             Rejected::QueueFull => &self.stats.queue_full,
@@ -230,18 +267,26 @@ impl FrontDoor {
     /// limit (configured action) → queue bound → deadline feasibility.
     /// On success the request is queued under its effective lane (a
     /// `Demote` soft action moves it to [`Lane::Batch`]).
+    ///
+    /// Thread-safe: the whole check sequence runs under the queue lock,
+    /// so concurrent producers serialize and every bound stays strict —
+    /// the queue can never exceed `queue_capacity` and a tenant can
+    /// never exceed its hard limit, under any interleaving.
     pub fn submit(
-        &mut self,
+        &self,
         req: Request,
         tenant: &str,
         lane: Lane,
         now_s: f64,
     ) -> Result<(), Rejected> {
         let t = self.tenant_id(tenant);
-        let occupancy = self.tenants[t].queued.load(Relaxed) as usize;
+        let tenants = self.tenants.read().unwrap();
+        let ten = &tenants.list[t];
+        let mut queue = self.queue.lock().unwrap();
+        let occupancy = ten.queued.load(Relaxed) as usize;
         let limits = self.cfg.tenant_limits;
         if occupancy >= limits.hard_limit {
-            return Err(self.reject(t, lane, Rejected::TenantOverLimit));
+            return Err(self.reject_with(ten, lane, Rejected::TenantOverLimit));
         }
         let mut lane = lane;
         if occupancy >= limits.soft_limit {
@@ -255,28 +300,32 @@ impl FrontDoor {
                     }
                 }
                 LimitAction::Reject => {
-                    return Err(
-                        self.reject(t, lane, Rejected::TenantOverLimit)
-                    );
+                    return Err(self.reject_with(
+                        ten,
+                        lane,
+                        Rejected::TenantOverLimit,
+                    ));
                 }
             }
         }
-        if self.queue.len() >= self.cfg.queue_capacity {
-            return Err(self.reject(t, lane, Rejected::QueueFull));
+        if queue.len() >= self.cfg.queue_capacity {
+            return Err(self.reject_with(ten, lane, Rejected::QueueFull));
         }
         let deadline_s = self.cfg.deadline(lane, req.arrival_s);
         if self.cfg.est_service_s > 0.0 {
             let start = now_s.max(req.arrival_s)
-                + self.queue.len() as f64 * self.cfg.est_service_s;
+                + queue.len() as f64 * self.cfg.est_service_s;
             if start + self.cfg.est_service_s > deadline_s {
-                return Err(
-                    self.reject(t, lane, Rejected::DeadlineInfeasible)
-                );
+                return Err(self.reject_with(
+                    ten,
+                    lane,
+                    Rejected::DeadlineInfeasible,
+                ));
             }
         }
-        self.tenants[t].queued.fetch_add(1, Relaxed);
+        ten.queued.fetch_add(1, Relaxed);
         self.stats.lanes[lane.index()].admitted.fetch_add(1, Relaxed);
-        self.queue.push(QueuedRequest { req, tenant: t, lane, deadline_s });
+        queue.push(QueuedRequest { req, tenant: t, lane, deadline_s });
         Ok(())
     }
 
@@ -284,14 +333,17 @@ impl FrontDoor {
     /// [`SloScheduler`] tagged with its lane/deadline/tenant metadata and
     /// seeded with the cumulative fair-share history. Drive the pair
     /// through `Engine::serve_with`, then fold the outcome back with
-    /// [`FrontDoor::absorb`].
-    pub fn take_scheduled(&mut self) -> (SloScheduler, Vec<Request>) {
-        let queued = std::mem::take(&mut self.queue);
+    /// [`FrontDoor::absorb`]. The queue lock is held only for the
+    /// `mem::take` — producers stall for a pointer swap, not the drain.
+    pub fn take_scheduled(&self) -> (SloScheduler, Vec<Request>) {
+        let queued = std::mem::take(&mut *self.queue.lock().unwrap());
+        let tenants = self.tenants.read().unwrap();
         for q in &queued {
-            self.tenants[q.tenant].queued.fetch_sub(1, Relaxed);
+            tenants.list[q.tenant].queued.fetch_sub(1, Relaxed);
         }
         let served: Vec<u64> =
-            self.tenants.iter().map(|t| t.served.load(Relaxed)).collect();
+            tenants.list.iter().map(|t| t.served.load(Relaxed)).collect();
+        drop(tenants);
         let sched = SloScheduler::for_queued(self.cfg.clone(), &queued, served);
         let reqs = queued.into_iter().map(|q| q.req).collect();
         (sched, reqs)
@@ -300,15 +352,18 @@ impl FrontDoor {
     /// Fold a drained scheduler's serve-side outcome back into the
     /// door's cumulative accounting (per-tenant service, per-lane TTFT
     /// samples, deadline misses).
-    pub fn absorb(&mut self, sched: &SloScheduler) {
+    pub fn absorb(&self, sched: &SloScheduler) {
+        let tenants = self.tenants.read().unwrap();
         for (t, &n) in sched.served_by_tenant.iter().enumerate() {
-            if t < self.tenants.len() {
-                self.tenants[t].served.fetch_add(n, Relaxed);
+            if t < tenants.list.len() {
+                tenants.list[t].served.fetch_add(n, Relaxed);
             }
         }
+        drop(tenants);
+        let mut ttft = self.lane_ttft.lock().unwrap();
         for lane in Lane::ALL {
             let i = lane.index();
-            self.lane_ttft[i].extend_from_slice(&sched.lane_ttft[i]);
+            ttft[i].extend_from_slice(&sched.lane_ttft[i]);
             self.stats.lanes[i]
                 .deadline_miss
                 .fetch_add(sched.deadline_miss[i], Relaxed);
@@ -553,7 +608,7 @@ mod tests {
 
     #[test]
     fn submit_accounts_per_tenant_and_lane() {
-        let mut fd = FrontDoor::new(FrontDoorConfig::default()).unwrap();
+        let fd = FrontDoor::new(FrontDoorConfig::default()).unwrap();
         let mut g = gen();
         fd.submit(g.request(8, 2, 0.0), "a", Lane::Interactive, 0.0).unwrap();
         fd.submit(g.request(8, 2, 0.0), "a", Lane::Standard, 0.0).unwrap();
@@ -584,7 +639,7 @@ mod tests {
             queue_capacity: 2,
             ..FrontDoorConfig::default()
         };
-        let mut fd = FrontDoor::new(cfg).unwrap();
+        let fd = FrontDoor::new(cfg).unwrap();
         let mut g = gen();
         fd.submit(g.request(8, 2, 0.0), "a", Lane::Standard, 0.0).unwrap();
         fd.submit(g.request(8, 2, 0.0), "a", Lane::Standard, 0.0).unwrap();
@@ -606,7 +661,7 @@ mod tests {
             },
             ..FrontDoorConfig::default()
         };
-        let mut fd = FrontDoor::new(cfg).unwrap();
+        let fd = FrontDoor::new(cfg).unwrap();
         let mut g = gen();
         fd.submit(g.request(8, 2, 0.0), "a", Lane::Interactive, 0.0).unwrap();
         // second interactive submission is over the soft limit → demoted

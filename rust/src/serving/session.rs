@@ -621,7 +621,7 @@ impl ServeSession {
         lane: Lane,
     ) -> Result<std::result::Result<(), Rejected>> {
         let now = self.inner.now();
-        let fd = self.frontdoor.as_mut().ok_or_else(|| {
+        let fd = self.frontdoor.as_ref().ok_or_else(|| {
             anyhow!(
                 "session has no front door; build with \
                  SessionBuilder::frontdoor(FrontDoorConfig)"
@@ -635,7 +635,7 @@ impl ServeSession {
     /// deadline-miss accounting folds back into the front door. A drain
     /// of an empty queue is a no-op.
     pub fn drain(&mut self) -> Result<&ServingMetrics> {
-        let fd = self.frontdoor.as_mut().ok_or_else(|| {
+        let fd = self.frontdoor.as_ref().ok_or_else(|| {
             anyhow!(
                 "session has no front door; build with \
                  SessionBuilder::frontdoor(FrontDoorConfig)"
@@ -645,8 +645,7 @@ impl ServeSession {
         if !reqs.is_empty() {
             self.inner.serve_scheduled(&mut sched, reqs)?;
         }
-        // fd borrow ended above (serve_scheduled borrows inner only)
-        self.frontdoor.as_mut().unwrap().absorb(&sched);
+        fd.absorb(&sched);
         Ok(self.inner.metrics())
     }
 

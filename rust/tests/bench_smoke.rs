@@ -9,7 +9,7 @@
 use dynaexq::bench::json;
 use dynaexq::bench::runtime::{
     report_to_json, run_cell, run_matrix, validate_report_json, BenchMatrix,
-    BENCH_BATCHES, BENCH_DEVICES, BENCH_METHODS, CELL_KEYS,
+    BENCH_BATCHES, BENCH_DEVICES, BENCH_METHODS, BENCH_PRODUCERS, CELL_KEYS,
 };
 use dynaexq::serving::registry::BackendRegistry;
 use dynaexq::util::XorShiftRng;
@@ -19,9 +19,10 @@ use dynaexq::workload::{RoutingSampler, Scenario, WorkloadProfile};
 fn smoke_cell_emits_schema_valid_bench_json() {
     let matrix = BenchMatrix::smoke("phi-sim");
     let report = run_matrix(&matrix, |_| {}).expect("smoke matrix runs");
-    // the smoke matrix is one cell on every axis except the front door:
-    // a direct cell plus its front-door twin
-    assert_eq!(report.cells.len(), 2);
+    // the smoke matrix is one cell on every axis except the front door
+    // and producer knobs: a direct cell plus a serial (p=1) and a
+    // threaded (p=2) front-door twin
+    assert_eq!(report.cells.len(), 3);
     let text = report_to_json(&report);
 
     // The schema self-check the CLI runs before writing the file.
@@ -32,12 +33,14 @@ fn smoke_cell_emits_schema_valid_bench_json() {
     let doc = json::parse(&text).expect("BENCH_serving.json parses");
     assert_eq!(
         doc.get("schema").and_then(|v| v.as_str()),
-        Some("dynaexq-bench-serving/v2")
+        Some("dynaexq-bench-serving/v3")
     );
     let cells = doc.get("cells").and_then(|v| v.as_arr()).unwrap();
-    // front door is the innermost axis: cells[0] direct, cells[1] fronted
+    // front door then producers are the innermost axes: cells[0] direct,
+    // cells[1] fronted p=1, cells[2] fronted p=2
     let cell = &cells[0];
     assert_eq!(cell.get("frontdoor").unwrap().as_u64(), Some(0));
+    assert_eq!(cell.get("producers").unwrap().as_u64(), Some(0));
     for &key in CELL_KEYS {
         assert!(cell.get(key).is_some(), "cell missing required key {key:?}");
     }
@@ -58,27 +61,42 @@ fn smoke_cell_emits_schema_valid_bench_json() {
     // deltas, so a converged steady cell may legitimately report 0)
     assert!(cell.get("hi_fraction").unwrap().as_f64().unwrap() > 0.0);
 
-    // The fronted twin conserves the token totals and carries live
+    // The fronted twins conserve the token totals and carry live
     // per-lane counters: steady admits everything on the standard lane.
-    let fronted = &cells[1];
-    assert_eq!(fronted.get("frontdoor").unwrap().as_u64(), Some(1));
-    assert_eq!(fronted.get("decode_tokens").unwrap().as_u64(), Some(24));
-    let lane_sum = |key: &str| -> u64 {
-        fronted
-            .get(key)
-            .unwrap()
-            .as_arr()
-            .unwrap()
-            .iter()
-            .map(|v| v.as_u64().unwrap())
-            .sum()
-    };
-    assert_eq!(lane_sum("fd_lane_admitted"), rounds);
-    assert_eq!(lane_sum("fd_lane_rejected"), 0);
-    let p50s = fronted.get("fd_lane_ttft_p50_s").unwrap().as_arr().unwrap();
-    assert_eq!(p50s.len(), 3);
-    // lane order is interactive, standard, batch — steady is all-standard
-    assert!(p50s[1].as_f64().unwrap() > 0.0);
+    // The threaded twin must agree with the serial reference on every
+    // modeled value — only wall-clock may differ.
+    for (idx, producers) in [(1usize, 1u64), (2, 2)] {
+        let fronted = &cells[idx];
+        assert_eq!(fronted.get("frontdoor").unwrap().as_u64(), Some(1));
+        assert_eq!(
+            fronted.get("producers").unwrap().as_u64(),
+            Some(producers)
+        );
+        assert_eq!(fronted.get("decode_tokens").unwrap().as_u64(), Some(24));
+        let lane_sum = |key: &str| -> u64 {
+            fronted
+                .get(key)
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_u64().unwrap())
+                .sum()
+        };
+        assert_eq!(lane_sum("fd_lane_admitted"), rounds);
+        assert_eq!(lane_sum("fd_lane_rejected"), 0);
+        let p50s =
+            fronted.get("fd_lane_ttft_p50_s").unwrap().as_arr().unwrap();
+        assert_eq!(p50s.len(), 3);
+        // lane order is interactive, standard, batch — steady is
+        // all-standard
+        assert!(p50s[1].as_f64().unwrap() > 0.0);
+        // every fronted cell samples its admission path
+        assert!(
+            fronted.get("fd_submit_p95_s").unwrap().as_f64().unwrap()
+                >= fronted.get("fd_submit_p50_s").unwrap().as_f64().unwrap()
+        );
+    }
 }
 
 #[test]
@@ -94,10 +112,16 @@ fn full_matrix_axes_cover_registry_and_canned_scenarios() {
     assert_eq!(full.scenarios, Scenario::names());
     assert_eq!(full.devices, BENCH_DEVICES);
     assert_eq!(full.batches, BENCH_BATCHES);
-    // methods × scenarios × 2 device widths × 3 batches × {direct, fd}
+    assert_eq!(full.producers, BENCH_PRODUCERS);
+    // methods × scenarios × 2 device widths × 3 batches × (1 direct +
+    // one fronted cell per producer count)
     assert_eq!(
         full.n_cells(),
-        BENCH_METHODS.len() * Scenario::names().len() * 2 * 3 * 2
+        BENCH_METHODS.len()
+            * Scenario::names().len()
+            * 2
+            * 3
+            * (1 + BENCH_PRODUCERS.len())
     );
 }
 
@@ -110,14 +134,16 @@ fn bench_runs_a_sharded_and_an_adaptive_cell() {
     matrix.prompt_len = 16;
     matrix.output_len = 2;
     let sharded =
-        run_cell(&matrix, "dynaexq-sharded", "swap", 2, 2, false).unwrap();
+        run_cell(&matrix, "dynaexq-sharded", "swap", 2, 2, false, 0)
+            .unwrap();
     assert_eq!(sharded.devices, 2);
     assert_eq!(sharded.rounds, Scenario::swap().total_rounds());
     assert!(sharded.migrated_bytes > 0, "sharded cell migrated nothing");
     // direct cells carry no per-lane counters
     assert!(sharded.fd_lane_admitted.is_empty());
     let adaptive =
-        run_cell(&matrix, "dynaexq-adaptive", "steady", 1, 1, false).unwrap();
+        run_cell(&matrix, "dynaexq-adaptive", "steady", 1, 1, false, 0)
+            .unwrap();
     assert_eq!(adaptive.drift_events, 0, "steady traffic must not drift");
 }
 
@@ -129,8 +155,9 @@ fn frontdoor_burst_cell_records_typed_rejections() {
     let mut matrix = BenchMatrix::smoke("phi-sim");
     matrix.prompt_len = 16;
     matrix.output_len = 2;
-    let cell = run_cell(&matrix, "dynaexq", "burst", 1, 4, true).unwrap();
+    let cell = run_cell(&matrix, "dynaexq", "burst", 1, 4, true, 1).unwrap();
     assert!(cell.frontdoor);
+    assert_eq!(cell.producers, 1);
     assert_eq!(cell.fd_lane_admitted.len(), 3);
     let admitted: u64 = cell.fd_lane_admitted.iter().sum();
     let rejected: u64 = cell.fd_lane_rejected.iter().sum();

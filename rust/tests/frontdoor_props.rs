@@ -92,7 +92,7 @@ fn prop_fair_share_band_under_arrival_shuffles() {
             .collect();
         rng.shuffle(&mut subs);
 
-        let mut fd = FrontDoor::new(FrontDoorConfig::unbounded()).unwrap();
+        let fd = FrontDoor::new(FrontDoorConfig::unbounded()).unwrap();
         for &t in &subs {
             let req = gen.request(1 + rng.below(32), 1 + rng.below(6), 0.0);
             fd.submit(req, &format!("t{t}"), Lane::Standard, 0.0).unwrap();
@@ -125,7 +125,7 @@ fn starvation_aging_bounds_batch_lane_wait() {
     let mut serve = |age: f64| -> (usize, f64) {
         let mut cfg = FrontDoorConfig::unbounded();
         cfg.starvation_age_s = age;
-        let mut fd = FrontDoor::new(cfg).unwrap();
+        let fd = FrontDoor::new(cfg).unwrap();
         for _ in 0..24 {
             fd.submit(gen.request(8, 4, 0.0), "a", Lane::Interactive, 0.0)
                 .unwrap();
@@ -237,7 +237,7 @@ fn typed_rejections_are_deterministic() {
             },
             ..FrontDoorConfig::default()
         };
-        let mut fd = FrontDoor::new(cfg).unwrap();
+        let fd = FrontDoor::new(cfg).unwrap();
         let mut gen = RequestGenerator::new(WorkloadProfile::text(), seed);
         let subs = [
             ("a", Lane::Interactive),
@@ -269,7 +269,7 @@ fn typed_rejections_are_deterministic() {
 fn infeasible_deadlines_reject_at_submit() {
     let cfg =
         FrontDoorConfig { est_service_s: 1.0, ..FrontDoorConfig::default() };
-    let mut fd = FrontDoor::new(cfg).unwrap();
+    let fd = FrontDoor::new(cfg).unwrap();
     let mut gen = RequestGenerator::new(WorkloadProfile::text(), 3);
     // interactive budget (0.5s) < the 1s service estimate: provably late
     assert_eq!(
@@ -286,7 +286,7 @@ fn infeasible_deadlines_reject_at_submit() {
 fn deadline_misses_count_per_lane() {
     let mut cfg = FrontDoorConfig::unbounded();
     cfg.classes[Lane::Interactive.index()].ttft_budget_s = 1e-9;
-    let mut fd = FrontDoor::new(cfg).unwrap();
+    let fd = FrontDoor::new(cfg).unwrap();
     let mut gen = RequestGenerator::new(WorkloadProfile::text(), 17);
     for _ in 0..4 {
         fd.submit(gen.request(16, 2, 0.0), "a", Lane::Interactive, 0.0)

@@ -1,0 +1,290 @@
+//! Threaded stress suite for the concurrent hot path (DESIGN.md §13).
+//!
+//! Three contracts, each driven with real `std::thread` producers:
+//!
+//! 1. **Shard-merge byte-identity** — routing selections recorded through
+//!    [`HotnessShards`] from racing threads merge into counters (and,
+//!    after the EMA fold, scores) that are bit-equal to the serial
+//!    single-lock recording path, for any producer interleaving.
+//! 2. **Concurrent tick determinism** — [`DeviceGroup::tick`]'s scoped
+//!    parallel device walk produces the same merged report and the same
+//!    residency trajectory as [`DeviceGroup::tick_serial`].
+//! 3. **Front-door admission under contention** — concurrent
+//!    `FrontDoor::submit` producers never overshoot the queue bound or a
+//!    tenant's hard limit, and every offered request lands in exactly one
+//!    of admitted/rejected.
+//!
+//! CI's `parallel-stress` job elevates the case counts through
+//! `PARALLEL_STRESS_ITERS`; the default keeps the suite fast enough for
+//! the tier-1 test run.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use dynaexq::config::frontdoor::{
+    FrontDoorConfig, Lane, LimitAction, TenantLimits,
+};
+use dynaexq::config::{DeviceConfig, ModelPreset, ServingConfig};
+use dynaexq::coordinator::{
+    Coordinator, DeviceGroup, HotnessEstimator, HotnessShards,
+};
+use dynaexq::serving::frontdoor::FrontDoor;
+use dynaexq::testutil::prop::Prop;
+use dynaexq::workload::{RequestGenerator, WorkloadProfile};
+
+/// Randomized case count, scaled up by CI's `parallel-stress` job.
+fn stress_cases(default: u32) -> u32 {
+    std::env::var("PARALLEL_STRESS_ITERS")
+        .ok()
+        .and_then(|s| s.parse::<u32>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or(default)
+}
+
+#[test]
+fn prop_threaded_shard_merge_is_byte_identical_to_serial() {
+    // Pre-generate every thread's selection script on the driver thread
+    // (the union is then well-defined), record the union serially into a
+    // reference estimator, race the scripts through the sharded front,
+    // and demand bit-equality of counts and post-fold scores.
+    let mut prop = Prop::new("parallel_shard_merge_byte_identity");
+    prop.run(stress_cases(10), |rng| {
+        let n_layers = 1 + rng.below(4);
+        let n_experts = 2 + rng.below(30);
+        let n_threads = 2 + rng.below(7);
+        let alpha = rng.range_f64(0.0, 0.95);
+        let scripts: Vec<Vec<(usize, usize)>> = (0..n_threads)
+            .map(|_| {
+                (0..rng.below(400))
+                    .map(|_| (rng.below(n_layers), rng.below(n_experts)))
+                    .collect()
+            })
+            .collect();
+        let total: u64 = scripts.iter().map(|s| s.len() as u64).sum();
+
+        // serial single-lock reference: same selections, one thread
+        let mut reference = HotnessEstimator::new(n_layers, n_experts, alpha);
+        for script in &scripts {
+            for &(l, e) in script {
+                reference.record(l, e);
+            }
+        }
+
+        let shards = HotnessShards::new(n_layers, n_experts);
+        std::thread::scope(|s| {
+            for script in &scripts {
+                s.spawn(|| {
+                    let slot = shards.shard_for_current_thread();
+                    for &(l, e) in script {
+                        shards.record(slot, l, e);
+                    }
+                });
+            }
+        });
+        assert_eq!(shards.pending(), total, "recordings lost in the race");
+
+        let mut merged = HotnessEstimator::new(n_layers, n_experts, alpha);
+        shards.merge_into(&mut merged);
+        assert_eq!(shards.pending(), 0, "merge must drain every shard");
+        for l in 0..n_layers {
+            assert_eq!(
+                merged.layer_counts(l),
+                reference.layer_counts(l),
+                "layer {l} counts diverged under {n_threads} producers"
+            );
+        }
+        // the EMA fold over equal u64 counts is bit-equal too
+        merged.end_interval();
+        reference.end_interval();
+        for l in 0..n_layers {
+            assert_eq!(merged.layer_scores(l), reference.layer_scores(l));
+        }
+    });
+}
+
+#[test]
+fn threaded_recording_respects_iteration_boundary_visibility() {
+    // The PR 5 contract, now with racing producers: selections recorded
+    // from any thread stay invisible to policy until the next tick
+    // boundary, then all of them land at once.
+    let preset = ModelPreset::phi_sim();
+    let mut cfg = ServingConfig::default();
+    cfg.update_interval_ms = 1.0;
+    cfg.ema_alpha = 0.0;
+    let coord =
+        Coordinator::new(&preset, &cfg, &DeviceConfig::default()).unwrap();
+    let per_thread = 200u64;
+    let n_threads = 4u64;
+    std::thread::scope(|s| {
+        for _ in 0..n_threads {
+            s.spawn(|| {
+                for _ in 0..per_thread {
+                    coord.record_routing(0, &[0, 1]);
+                }
+            });
+        }
+    });
+    assert_eq!(coord.pending_routing(), n_threads * per_thread * 2);
+    assert_eq!(
+        coord.hotness_score(0, 0),
+        0.0,
+        "recordings visible before the boundary"
+    );
+    coord.tick(1.0);
+    assert_eq!(coord.pending_routing(), 0);
+    assert_eq!(coord.hotness_score(0, 0), (n_threads * per_thread) as f64);
+    assert_eq!(coord.hotness_score(0, 1), (n_threads * per_thread) as f64);
+}
+
+#[test]
+fn prop_concurrent_group_tick_merges_reports_deterministically() {
+    // Twin groups, identical traffic: the scoped-thread tick must match
+    // the serial reference walk on the merged report and the residency
+    // table at every step. (The in-module group property covers the
+    // fine-grained walk; this integration copy runs under the elevated
+    // CI iteration count and a wider device range.)
+    let mut prop = Prop::new("parallel_group_tick_determinism");
+    prop.run(stress_cases(4), |rng| {
+        let mut preset = ModelPreset::phi_sim();
+        preset.paper_layers = 2 + rng.below(2);
+        preset.n_layers = preset.paper_layers;
+        let mut cfg = ServingConfig::default();
+        cfg.update_interval_ms = 1.0;
+        cfg.hysteresis_margin = rng.range_f64(0.0, 0.3);
+        cfg.ema_alpha = rng.range_f64(0.0, 0.9);
+        let dev = DeviceConfig::default();
+        let n_dev = 2 + rng.below(3);
+        let par = DeviceGroup::new(&preset, &cfg, &dev, n_dev).unwrap();
+        let ser = DeviceGroup::new(&preset, &cfg, &dev, n_dev).unwrap();
+        let mut now = 0.0;
+        for _ in 0..25 {
+            let layer = rng.below(preset.n_layers);
+            let hot: Vec<usize> = (0..1 + rng.below(6))
+                .map(|_| rng.below(preset.n_experts))
+                .collect();
+            for _ in 0..10 {
+                par.record_routing(layer, &hot);
+                ser.record_routing(layer, &hot);
+            }
+            par.wait_staged();
+            ser.wait_staged();
+            now += rng.range_f64(0.001, 0.01);
+            let rp = par.tick(now);
+            let rs = ser.tick_serial(now);
+            assert_eq!(rp.ran, rs.ran, "ran flags diverged at t={now}");
+            assert_eq!(rp.promotions_submitted, rs.promotions_submitted);
+            assert_eq!(rp.demotions_submitted, rs.demotions_submitted);
+            assert_eq!(rp.deferred, rs.deferred);
+            assert_eq!(rp.drift_detected, rs.drift_detected);
+        }
+        for l in 0..preset.n_layers {
+            for e in 0..preset.n_experts {
+                assert_eq!(
+                    par.resolve_tier(l, e),
+                    ser.resolve_tier(l, e),
+                    "layer {l} expert {e} diverged"
+                );
+            }
+        }
+        assert_eq!(par.tier_counts(), ser.tier_counts());
+        assert_eq!(par.migrated_bytes(), ser.migrated_bytes());
+        assert!(par.within_envelope() && ser.within_envelope());
+        assert!(par.pools_consistent() && ser.pools_consistent());
+    });
+}
+
+#[test]
+fn prop_concurrent_submit_holds_bounds_and_conservation() {
+    // Racing producers against one bounded door: whatever the
+    // interleaving, (a) every offered request resolves to exactly one of
+    // admitted/rejected, (b) the queue never exceeds its capacity, and
+    // (c) no tenant overshoots its hard limit.
+    let mut prop = Prop::new("parallel_frontdoor_admission_bounds");
+    prop.run(stress_cases(8), |rng| {
+        let queue_capacity = 1 + rng.below(12);
+        let hard = 1 + rng.below(6);
+        let n_threads = 2 + rng.below(5);
+        let per_thread = 5 + rng.below(30);
+        let n_tenants = 1 + rng.below(3);
+        let mut cfg = FrontDoorConfig::unbounded();
+        cfg.queue_capacity = queue_capacity;
+        cfg.tenant_limits = TenantLimits {
+            soft_limit: hard,
+            soft_action: LimitAction::Warn,
+            hard_limit: hard,
+        };
+        let fd = FrontDoor::new(cfg).unwrap();
+        // pre-generate each producer's requests so the offered set is
+        // interleaving-independent
+        let mut gen =
+            RequestGenerator::new(WorkloadProfile::text(), rng.next_u64());
+        let scripts: Vec<Vec<_>> = (0..n_threads)
+            .map(|t| {
+                (0..per_thread)
+                    .map(|i| {
+                        let req = gen.request(8, 2, 0.0);
+                        let tenant = (t + i) % n_tenants;
+                        let lane = Lane::ALL[rng.below(3)];
+                        (req, tenant, lane)
+                    })
+                    .collect()
+            })
+            .collect();
+        let offered = (n_threads * per_thread) as u64;
+        let rejected = AtomicU64::new(0);
+        // each producer reports which tenant every admission belonged to
+        let admitted_by: Vec<Vec<usize>> = std::thread::scope(|s| {
+            let handles: Vec<_> = scripts
+                .iter()
+                .map(|script| {
+                    s.spawn(|| {
+                        let mut mine = Vec::new();
+                        for (req, tenant, lane) in script.iter().cloned() {
+                            let name = format!("t{tenant}");
+                            match fd.submit(req, &name, lane, 0.0) {
+                                Ok(()) => mine.push(tenant),
+                                Err(_) => {
+                                    rejected.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                        mine
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("producer panicked"))
+                .collect()
+        });
+        let admitted: u64 =
+            admitted_by.iter().map(|v| v.len() as u64).sum();
+        let rejected = rejected.load(Ordering::Relaxed);
+        assert_eq!(admitted + rejected, offered, "requests lost in the race");
+        assert_eq!(fd.depth() as u64, admitted, "queue depth out of sync");
+        assert!(
+            admitted as usize <= queue_capacity,
+            "queue bound overshot: {admitted} > {queue_capacity}"
+        );
+        // no tenant overshoots its hard limit: admissions are counted
+        // under the queue lock, so the occupancy check is never stale
+        let mut per_tenant = vec![0u64; n_tenants];
+        for &t in admitted_by.iter().flatten() {
+            per_tenant[t] += 1;
+        }
+        for (t, &n) in per_tenant.iter().enumerate() {
+            assert!(
+                n <= hard as u64,
+                "tenant t{t} overshot its hard limit: {n} > {hard}"
+            );
+        }
+        // the door's own counters saw the same split
+        let stats_admitted: u64 = fd.stats().lane_admitted().iter().sum();
+        let stats_rejected: u64 = fd.stats().lane_rejected().iter().sum();
+        assert_eq!(stats_admitted, admitted);
+        assert_eq!(stats_rejected, rejected);
+        // the queue drains clean through the scheduler path
+        let (_, reqs) = fd.take_scheduled();
+        assert_eq!(reqs.len() as u64, admitted);
+        assert_eq!(fd.depth(), 0);
+    });
+}

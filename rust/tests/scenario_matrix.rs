@@ -256,6 +256,42 @@ fn steady_two_rung_single_device_matches_fixed_stack_exactly() {
 }
 
 #[test]
+fn repeat_runs_snapshot_byte_identical_under_concurrent_hot_path() {
+    // Determinism pin for the concurrent hot path (DESIGN.md §13): with
+    // parallel device ticks and sharded hotness recording live, running
+    // the same scenario cell twice yields byte-identical metrics
+    // snapshots — on the 1-device group (serial tick gate) and the
+    // 2-device group (scoped-thread tick) alike.
+    for (method, devices) in [
+        ("dynaexq", 1usize),
+        ("dynaexq-sharded", 2),
+        ("dynaexq-3tier-sharded", 2),
+    ] {
+        for sc_name in ["swap", "burst"] {
+            let sc = Scenario::by_name(sc_name).unwrap();
+            let run = || {
+                let mut s = ServeSession::builder()
+                    .model("phi-sim")
+                    .method(method)
+                    .workload("text")
+                    .devices(devices)
+                    .seed(0xC0DE)
+                    .build()
+                    .unwrap();
+                s.run_scenario(&sc, 4, 16, 4).unwrap();
+                s.snapshot().encode()
+            };
+            let first = run();
+            let second = run();
+            assert_eq!(
+                first, second,
+                "{method} × {sc_name} × {devices}dev: repeat run diverged"
+            );
+        }
+    }
+}
+
+#[test]
 fn drift_recovery_report_artifact() {
     // Recovery ticks per method × scenario × group width, persisted for
     // CI (uploaded next to the conformance trace as a build artifact).

@@ -125,6 +125,30 @@ fn replay_drives_adaptive_backends() {
 }
 
 #[test]
+fn sharded_replay_stays_byte_stable_across_many_replays() {
+    // The concurrent hot path (DESIGN.md §13) must not cost determinism:
+    // with parallel device ticks and sharded hotness recording live, a
+    // 2-device sharded replay is byte-identical across repeated replays
+    // of the same trace — not just across one pair.
+    let preset = ModelPreset::phi_sim();
+    let trace = recorded_trace(&preset);
+    let registry = BackendRegistry::with_builtins();
+    for method in ["dynaexq-sharded", "dynaexq-3tier-sharded"] {
+        let reference =
+            replay_snapshot(&registry, &trace, &preset, method, 2).encode();
+        for i in 0..4 {
+            let again =
+                replay_snapshot(&registry, &trace, &preset, method, 2)
+                    .encode();
+            assert_eq!(
+                reference, again,
+                "{method}@2dev: replay {i} diverged from the reference"
+            );
+        }
+    }
+}
+
+#[test]
 fn replay_rejects_a_mismatched_preset() {
     let trace = recorded_trace(&ModelPreset::phi_sim());
     let q = ModelPreset::qwen30b_sim();
