@@ -20,11 +20,13 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::config::fleet::FleetConfig;
 use crate::config::frontdoor::{FrontDoorConfig, Lane};
 use crate::config::{kv, DeviceConfig, ServingConfig};
 use crate::coordinator::TransitionTotals;
 use crate::experiments::helpers;
 use crate::serving::engine::{Engine, EngineConfig};
+use crate::serving::fleet::Fleet;
 use crate::serving::frontdoor::FrontDoor;
 use crate::util::percentile;
 use crate::workload::{RequestGenerator, Scenario};
@@ -36,7 +38,10 @@ use super::Table;
 /// v2: the `frontdoor` axis and per-lane front-door cell columns.
 /// v3: the `producers` axis on front-door cells (threaded load
 /// generator) with per-cell admission-latency p50/p95.
-pub const BENCH_SCHEMA: &str = "dynaexq-bench-serving/v3";
+/// v4: the `replicas` axis on front-door cells (fleet-scale replicated
+/// serving — DESIGN.md §14); non-finite f64 cell values are a
+/// validation error.
+pub const BENCH_SCHEMA: &str = "dynaexq-bench-serving/v4";
 
 /// Serving methods benchmarked by the full matrix: every registry method
 /// that serves traffic as a *method under comparison*. The quality
@@ -70,6 +75,14 @@ pub const BENCH_BATCHES: &[usize] = &[1, 8, 32];
 /// 0 — there is no admission path to contend on.
 pub const BENCH_PRODUCERS: &[usize] = &[1, 4];
 
+/// Fleet replica counts swept on front-door cells by the full matrix:
+/// 1 is the single-group reference (the pre-§14 serving path,
+/// byte-identical modeled behaviour to the v3 bench), 2 serves the
+/// scenario through a replicated [`Fleet`] behind the shared door.
+/// Direct cells pin the knob to 0 — there is no front door to put a
+/// fleet behind.
+pub const BENCH_REPLICAS: &[usize] = &[1, 2];
+
 /// Keys every cell object in `BENCH_serving.json` must carry — the
 /// schema contract `bench_smoke` (and the pre-write self-check) enforce.
 pub const CELL_KEYS: &[&str] = &[
@@ -97,6 +110,7 @@ pub const CELL_KEYS: &[&str] = &[
     "drift_recovery_ticks",
     "frontdoor",
     "producers",
+    "replicas",
     "fd_lane_admitted",
     "fd_lane_rejected",
     "fd_lane_deadline_miss",
@@ -130,6 +144,11 @@ pub struct BenchMatrix {
     /// times every `submit` call (admission-path contention). Direct
     /// cells run once with the knob pinned to 0.
     pub producers: Vec<usize>,
+    /// Fleet-replica axis, applied to front-door cells only: 1 serves
+    /// through the classic single engine behind the door, >1 through a
+    /// replicated [`Fleet`] with load/affinity routing (DESIGN.md §14).
+    /// Direct cells run once with the knob pinned to 0.
+    pub replicas: Vec<usize>,
 }
 
 impl BenchMatrix {
@@ -151,14 +170,16 @@ impl BenchMatrix {
             seed: 0xBE4C,
             frontdoor: vec![false, true],
             producers: BENCH_PRODUCERS.to_vec(),
+            replicas: BENCH_REPLICAS.to_vec(),
         }
     }
 
     /// The smallest matrix — what CI's `bench-smoke` job runs on every
     /// push: one method, one scenario, one device, batch 1, both sides
-    /// of the front-door axis and both a serial and a threaded producer
-    /// count (so the queue path *and* the admission seam are exercised
-    /// on every push).
+    /// of the front-door axis, a serial and a threaded producer count,
+    /// and a 1- and 2-replica fleet width (so the queue path, the
+    /// admission seam, *and* the fleet router are exercised on every
+    /// push).
     pub fn smoke(model: &str) -> Self {
         Self {
             model: model.to_string(),
@@ -172,16 +193,24 @@ impl BenchMatrix {
             seed: 0xBE4C,
             frontdoor: vec![false, true],
             producers: vec![1, 2],
+            replicas: vec![1, 2],
         }
     }
 
     /// Number of cells the matrix spans. Front-door cells fan out over
-    /// the producer axis; direct cells do not (producers is pinned 0).
+    /// the producer × replica axes; direct cells do not (both knobs are
+    /// pinned 0).
     pub fn n_cells(&self) -> usize {
         let fd_cells: usize = self
             .frontdoor
             .iter()
-            .map(|&f| if f { self.producers.len().max(1) } else { 1 })
+            .map(|&f| {
+                if f {
+                    self.producers.len().max(1) * self.replicas.len().max(1)
+                } else {
+                    1
+                }
+            })
             .sum();
         self.methods.len()
             * self.scenarios.len()
@@ -193,10 +222,10 @@ impl BenchMatrix {
 
 /// Narrow a matrix to the axis values selected by a `--filter` spec:
 /// comma-separated `key=value` pairs over `method`, `scenario`,
-/// `devices`, `batch`, `frontdoor` (`0/false/off` or `1/true/on`), and
-/// `producers` (front-door cells only). Unknown keys and filters that
-/// empty an axis are errors — a bench that silently ran zero cells
-/// would read as a clean pass.
+/// `devices`, `batch`, `frontdoor` (`0/false/off` or `1/true/on`),
+/// `producers`, and `replicas` (the latter two front-door cells only).
+/// Unknown keys and filters that empty an axis are errors — a bench
+/// that silently ran zero cells would read as a clean pass.
 pub fn apply_filter(matrix: &mut BenchMatrix, spec: &str) -> Result<()> {
     let m = kv::parse_kv(spec);
     let mut keys: Vec<&String> = m.keys().collect();
@@ -235,9 +264,15 @@ pub fn apply_filter(matrix: &mut BenchMatrix, spec: &str) -> Result<()> {
                     .with_context(|| format!("bad producers filter {val:?}"))?;
                 matrix.producers.retain(|&x| x == n);
             }
+            "replicas" => {
+                let n: usize = val
+                    .parse()
+                    .with_context(|| format!("bad replicas filter {val:?}"))?;
+                matrix.replicas.retain(|&x| x == n);
+            }
             other => bail!(
                 "unknown filter key {other:?}; filterable axes: batch, \
-                 devices, frontdoor, method, producers, scenario"
+                 devices, frontdoor, method, producers, replicas, scenario"
             ),
         }
     }
@@ -281,6 +316,10 @@ pub struct BenchCell {
     /// direct cells, ≥1 for front-door cells; 1 is the serial inline
     /// reference path).
     pub producers: usize,
+    /// Fleet replicas that served this cell (0 for direct cells, 1 for
+    /// the classic single engine behind the door, ≥2 for a replicated
+    /// [`Fleet`]).
+    pub replicas: usize,
     /// Per-lane admissions (interactive|standard|batch order); empty for
     /// non-front-door cells.
     pub fd_lane_admitted: Vec<u64>,
@@ -325,7 +364,9 @@ fn frontdoor_bench_cfg(batch: usize) -> FrontDoorConfig {
 /// fans the round's submissions out over that many threads (requests
 /// are pre-generated on the bench thread, so ids and content are
 /// identical at every producer count) and times each `submit` call.
-/// `producers` is ignored for direct cells (recorded as 0).
+/// `producers` is ignored for direct cells (recorded as 0), and so is
+/// `replicas`; a front-door cell with `replicas > 1` serves through a
+/// replicated [`Fleet`] instead of a single engine.
 pub fn run_cell(
     matrix: &BenchMatrix,
     method: &str,
@@ -334,7 +375,19 @@ pub fn run_cell(
     batch: usize,
     frontdoor: bool,
     producers: usize,
+    replicas: usize,
 ) -> Result<BenchCell> {
+    if frontdoor && replicas > 1 {
+        return run_fleet_cell(
+            matrix,
+            method,
+            scenario_name,
+            devices,
+            batch,
+            producers.max(1),
+            replicas,
+        );
+    }
     let preset = helpers::preset(&matrix.model)?;
     let sc = helpers::scenario(scenario_name)?;
     let cfg = ServingConfig::default();
@@ -371,6 +424,7 @@ pub fn run_cell(
     let drift0 = engine.backend.drift_stats();
 
     let producers = if frontdoor { producers.max(1) } else { 0 };
+    let replicas = if frontdoor { replicas.max(1) } else { 0 };
     let fd = if frontdoor {
         Some(
             FrontDoor::new(frontdoor_bench_cfg(batch))
@@ -542,6 +596,169 @@ pub fn run_cell(
         drift_recovery_ticks: drift_recovery_ticks.saturating_sub(drift0.1),
         frontdoor,
         producers,
+        replicas,
+        fd_lane_admitted: fd_adm,
+        fd_lane_rejected: fd_rej,
+        fd_lane_deadline_miss: fd_miss,
+        fd_lane_ttft_p50_s: fd_p50,
+        fd_lane_ttft_p95_s: fd_p95,
+        fd_submit_p50_s: percentile(&submit_samples, 50.0),
+        fd_submit_p95_s: percentile(&submit_samples, 95.0),
+    })
+}
+
+/// Fleet variant of a front-door cell: `replicas` engine replicas behind
+/// the shared door (DESIGN.md §14), each a `devices`-wide group, drained
+/// through the fleet's load/affinity router. Requests are pre-generated
+/// on the bench thread exactly like the single-engine path, so the
+/// submission stream is identical at every producer count.
+fn run_fleet_cell(
+    matrix: &BenchMatrix,
+    method: &str,
+    scenario_name: &str,
+    devices: usize,
+    batch: usize,
+    producers: usize,
+    replicas: usize,
+) -> Result<BenchCell> {
+    let sc = helpers::scenario(scenario_name)?;
+    let mut fleet_cfg = FleetConfig::default();
+    fleet_cfg.replicas = replicas;
+    fleet_cfg.devices_per_replica = devices;
+    let mut fleet = Fleet::builder()
+        .model(&matrix.model)
+        .method(method)
+        .workload(sc.phases[0].profile.name)
+        .max_batch(batch.max(1))
+        .seed(matrix.seed)
+        .warmup(matrix.warmup_rounds)
+        .track_activation(false)
+        .frontdoor(frontdoor_bench_cfg(batch))
+        .fleet_cfg(fleet_cfg)
+        .build()?;
+    let modeled_start = fleet.now();
+    let start = fleet.snapshot();
+    let transitions0 = fleet.transition_totals();
+
+    let mut gen = RequestGenerator::new(
+        sc.phases[0].profile.clone(),
+        matrix.seed ^ 0xFD00,
+    );
+    let mut samples = Vec::with_capacity(sc.total_rounds());
+    let mut submit_samples = Vec::new();
+    let t_all = Instant::now();
+    for phase in &sc.phases {
+        fleet.set_profile(&phase.profile);
+        gen.set_profile(phase.profile.clone());
+        let tenant = phase
+            .tenant
+            .clone()
+            .unwrap_or_else(|| phase.profile.name.to_string());
+        let b = Scenario::scaled_batch(batch, phase.load);
+        for _ in 0..phase.rounds {
+            let t0 = Instant::now();
+            let now = fleet.now();
+            let round_reqs: Vec<_> = (0..b)
+                .map(|_| {
+                    gen.request(matrix.prompt_len, matrix.output_len, now)
+                })
+                .collect();
+            {
+                let fd = fleet.frontdoor();
+                if producers <= 1 {
+                    for req in round_reqs {
+                        let s0 = Instant::now();
+                        let _ = fd.submit(req, &tenant, phase.lane, now);
+                        submit_samples.push(s0.elapsed().as_secs_f64());
+                    }
+                } else {
+                    let mut chunks: Vec<Vec<_>> =
+                        (0..producers).map(|_| Vec::new()).collect();
+                    for (i, req) in round_reqs.into_iter().enumerate() {
+                        chunks[i % producers].push(req);
+                    }
+                    let lane = phase.lane;
+                    let tenant = tenant.as_str();
+                    let per_thread: Vec<Vec<f64>> =
+                        std::thread::scope(|s| {
+                            let handles: Vec<_> = chunks
+                                .into_iter()
+                                .map(|chunk| {
+                                    s.spawn(move || {
+                                        let mut lat =
+                                            Vec::with_capacity(chunk.len());
+                                        for req in chunk {
+                                            let s0 = Instant::now();
+                                            let _ = fd.submit(
+                                                req, tenant, lane, now,
+                                            );
+                                            lat.push(
+                                                s0.elapsed().as_secs_f64(),
+                                            );
+                                        }
+                                        lat
+                                    })
+                                })
+                                .collect();
+                            handles
+                                .into_iter()
+                                .map(|h| h.join().expect("bench producer"))
+                                .collect()
+                        });
+                    for lat in per_thread {
+                        submit_samples.extend(lat);
+                    }
+                }
+            }
+            fleet.drain()?;
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+    }
+    let wall_total_s = t_all.elapsed().as_secs_f64();
+
+    let fd = fleet.frontdoor();
+    let fd_adm = fd.stats().lane_admitted();
+    let fd_rej = fd.stats().lane_rejected();
+    let fd_miss = fd.stats().lane_deadline_miss();
+    let fd_p50 = Lane::ALL
+        .iter()
+        .map(|&l| percentile(&fd.lane_ttft(l), 50.0))
+        .collect();
+    let fd_p95 = Lane::ALL
+        .iter()
+        .map(|&l| percentile(&fd.lane_ttft(l), 95.0))
+        .collect();
+
+    let s = fleet.snapshot();
+    let modeled_duration_s = fleet.now() - modeled_start;
+    let modeled_tok_s = if modeled_duration_s > 0.0 {
+        (s.prefill_tokens + s.decode_tokens) as f64 / modeled_duration_s
+    } else {
+        0.0
+    };
+    Ok(BenchCell {
+        method: method.to_string(),
+        scenario: scenario_name.to_string(),
+        devices,
+        batch,
+        rounds: samples.len(),
+        wall_total_s,
+        wall_p50_round_s: percentile(&samples, 50.0),
+        wall_p95_round_s: percentile(&samples, 95.0),
+        modeled_duration_s,
+        modeled_tok_s,
+        decode_tokens: s.decode_tokens,
+        prefill_tokens: s.prefill_tokens,
+        hi_fraction: s.hi_fraction,
+        migrated_bytes: s.migrated_bytes.saturating_sub(start.migrated_bytes),
+        transitions: fleet.transition_totals().delta_since(&transitions0),
+        drift_events: s.drift_events.saturating_sub(start.drift_events),
+        drift_recovery_ticks: s
+            .drift_recovery_ticks
+            .saturating_sub(start.drift_recovery_ticks),
+        frontdoor: true,
+        producers,
+        replicas,
         fd_lane_admitted: fd_adm,
         fd_lane_rejected: fd_rej,
         fd_lane_deadline_miss: fd_miss,
@@ -566,28 +783,34 @@ pub fn run_matrix(
                 for &batch in &matrix.batches {
                     for &frontdoor in &matrix.frontdoor {
                         // direct cells have no admission path: one run,
-                        // producers pinned 0
-                        let prod_axis: Vec<usize> = if frontdoor {
-                            matrix.producers.clone()
+                        // producers and replicas pinned 0
+                        let fd_axis: Vec<(usize, usize)> = if frontdoor {
+                            matrix
+                                .producers
+                                .iter()
+                                .flat_map(|&p| {
+                                    matrix.replicas.iter().map(move |&r| (p, r))
+                                })
+                                .collect()
                         } else {
-                            vec![0]
+                            vec![(0, 0)]
                         };
-                        for &producers in &prod_axis {
+                        for &(producers, replicas) in &fd_axis {
                             let cell = run_cell(
                                 matrix, method, scenario, devices, batch,
-                                frontdoor, producers,
+                                frontdoor, producers, replicas,
                             )
                             .with_context(|| {
                                 format!(
                                     "cell {method}×{scenario}×{devices}dev\
-                                     ×b{batch}×fd{}×p{producers}",
+                                     ×b{batch}×fd{}×p{producers}×r{replicas}",
                                     frontdoor as u8
                                 )
                             })?;
                             let fd_tag = if frontdoor {
-                                format!(" fd p{producers}")
+                                format!(" fd p{producers} r{replicas}")
                             } else {
-                                "      ".to_string()
+                                "         ".to_string()
                             };
                             progress(&format!(
                                 "[{}/{total}] {method:<22} {scenario:<12} \
@@ -644,6 +867,7 @@ pub fn report_to_json(report: &BenchReport) -> String {
         ),
     );
     root.push("producers", u64_arr(&m.producers));
+    root.push("replicas", u64_arr(&m.replicas));
     let mut cells = Vec::with_capacity(report.cells.len());
     for c in &report.cells {
         let mut o = Json::obj();
@@ -674,6 +898,7 @@ pub fn report_to_json(report: &BenchReport) -> String {
         );
         o.push("frontdoor", Json::U64(c.frontdoor as u64));
         o.push("producers", Json::U64(c.producers as u64));
+        o.push("replicas", Json::U64(c.replicas as u64));
         o.push("fd_lane_admitted", u64s(&c.fd_lane_admitted));
         o.push("fd_lane_rejected", u64s(&c.fd_lane_rejected));
         o.push("fd_lane_deadline_miss", u64s(&c.fd_lane_deadline_miss));
@@ -691,7 +916,10 @@ pub fn report_to_json(report: &BenchReport) -> String {
 /// the schema tag, the axis arrays, every required key in every cell,
 /// and full matrix coverage (one cell per method × scenario × device ×
 /// batch × frontdoor combination, with front-door cells fanned out over
-/// the producer axis and direct cells pinned to producers = 0).
+/// the producer × replica axes and direct cells pinned to
+/// producers = replicas = 0). Every f64 cell value must be finite —
+/// a NaN or infinity in a trajectory report would poison downstream
+/// comparisons silently.
 pub fn validate_report_json(text: &str) -> Result<()> {
     let doc = json::parse(text).context("BENCH_serving.json parse")?;
     let schema = doc
@@ -735,11 +963,18 @@ pub fn validate_report_json(text: &str) -> Result<()> {
     let batches = nums("batches")?;
     let frontdoors = nums("frontdoors")?;
     let producers = nums("producers")?;
+    let replicas = nums("replicas")?;
     let cells =
         doc.get("cells").and_then(|v| v.as_arr()).context("missing cells")?;
     let fd_cells: usize = frontdoors
         .iter()
-        .map(|&f| if f != 0 { producers.len().max(1) } else { 1 })
+        .map(|&f| {
+            if f != 0 {
+                producers.len().max(1) * replicas.len().max(1)
+            } else {
+                1
+            }
+        })
         .sum();
     let expected = methods.len()
         * scenarios.len()
@@ -755,12 +990,15 @@ pub fn validate_report_json(text: &str) -> Result<()> {
             let v = cell
                 .get(key)
                 .with_context(|| format!("cell {i}: missing key {key:?}"))?;
+            // `is_finite` and not just `is_some`: a JSON number like
+            // 1e999 parses to an f64 infinity, and an in-memory NaN
+            // would otherwise sail through a pre-write self-check
             let ok = match key {
                 "method" | "scenario" => v.as_str().is_some(),
                 "wall_total_s" | "wall_p50_round_s" | "wall_p95_round_s"
                 | "modeled_duration_s" | "modeled_tok_s" | "hi_fraction"
                 | "fd_submit_p50_s" | "fd_submit_p95_s" => {
-                    v.as_f64().is_some()
+                    v.as_f64().map_or(false, f64::is_finite)
                 }
                 "fd_lane_admitted" | "fd_lane_rejected"
                 | "fd_lane_deadline_miss" => v
@@ -769,7 +1007,11 @@ pub fn validate_report_json(text: &str) -> Result<()> {
                     .unwrap_or(false),
                 "fd_lane_ttft_p50_s" | "fd_lane_ttft_p95_s" => v
                     .as_arr()
-                    .map(|xs| xs.iter().all(|x| x.as_f64().is_some()))
+                    .map(|xs| {
+                        xs.iter().all(|x| {
+                            x.as_f64().map_or(false, f64::is_finite)
+                        })
+                    })
                     .unwrap_or(false),
                 _ => v.as_u64().is_some(),
             };
@@ -780,17 +1022,31 @@ pub fn validate_report_json(text: &str) -> Result<()> {
         // front-door cells carry one entry per lane; direct cells none
         let fd = cell.get("frontdoor").unwrap().as_u64().unwrap();
         let prod = cell.get("producers").unwrap().as_u64().unwrap();
+        let repl = cell.get("replicas").unwrap().as_u64().unwrap();
         if fd == 0 {
             if prod != 0 {
                 bail!(
                     "cell {i}: direct cell with producers={prod} (must be 0)"
                 );
             }
-        } else if !producers.contains(&prod) {
-            bail!(
-                "cell {i}: producers={prod} outside the declared axis \
-                 {producers:?}"
-            );
+            if repl != 0 {
+                bail!(
+                    "cell {i}: direct cell with replicas={repl} (must be 0)"
+                );
+            }
+        } else {
+            if !producers.contains(&prod) {
+                bail!(
+                    "cell {i}: producers={prod} outside the declared axis \
+                     {producers:?}"
+                );
+            }
+            if !replicas.contains(&repl) {
+                bail!(
+                    "cell {i}: replicas={repl} outside the declared axis \
+                     {replicas:?}"
+                );
+            }
         }
         let want_len = if fd != 0 { 3 } else { 0 };
         for key in [
@@ -815,6 +1071,7 @@ pub fn validate_report_json(text: &str) -> Result<()> {
             cell.get("batch").unwrap().as_u64().unwrap(),
             fd,
             prod,
+            repl,
         );
         if !methods.contains(&coord.0)
             || !scenarios.contains(&coord.1)
@@ -840,6 +1097,7 @@ pub fn render_table(report: &BenchReport) -> String {
         "batch",
         "fd",
         "prod",
+        "repl",
         "rounds",
         "wall p50/round",
         "wall p95/round",
@@ -857,6 +1115,7 @@ pub fn render_table(report: &BenchReport) -> String {
             c.batch.to_string(),
             if c.frontdoor { "y".into() } else { "-".into() },
             if c.frontdoor { c.producers.to_string() } else { "-".into() },
+            if c.frontdoor { c.replicas.to_string() } else { "-".into() },
             c.rounds.to_string(),
             super::human(c.wall_p50_round_s),
             super::human(c.wall_p95_round_s),
@@ -881,19 +1140,21 @@ mod tests {
     #[test]
     fn matrix_shapes() {
         let full = BenchMatrix::full("qwen30b-sim");
-        // direct cells run once; fronted cells fan out over producers
+        // direct cells run once; fronted cells fan out over
+        // producers × replicas
         assert_eq!(
             full.n_cells(),
             BENCH_METHODS.len()
                 * Scenario::names().len()
                 * 2
                 * 3
-                * (1 + BENCH_PRODUCERS.len())
+                * (1 + BENCH_PRODUCERS.len() * BENCH_REPLICAS.len())
         );
-        // smoke spans both sides of the front-door axis plus a serial
-        // and a threaded producer count on the fronted side
+        // smoke spans both sides of the front-door axis plus
+        // {serial, threaded} producers × {1, 2} fleet replicas on the
+        // fronted side: 1 + 2×2 = 5
         let smoke = BenchMatrix::smoke("phi-sim");
-        assert_eq!(smoke.n_cells(), 3);
+        assert_eq!(smoke.n_cells(), 5);
     }
 
     #[test]
@@ -905,11 +1166,14 @@ mod tests {
         assert_eq!(m.scenarios, vec!["steady".to_string()]);
         assert_eq!(m.batches, vec![8]);
         // 1 method × 1 scenario × 2 devices × 1 batch ×
-        // (1 direct + 2 producer counts fronted) = 6
-        assert_eq!(m.n_cells(), 6);
-        // the producers axis narrows fronted cells only
+        // (1 direct + 2 producers × 2 replicas fronted) = 10
+        assert_eq!(m.n_cells(), 10);
+        // the producers and replicas axes narrow fronted cells only
         apply_filter(&mut m, "producers=4").unwrap();
         assert_eq!(m.producers, vec![4]);
+        assert_eq!(m.n_cells(), 6);
+        apply_filter(&mut m, "replicas=1").unwrap();
+        assert_eq!(m.replicas, vec![1]);
         assert_eq!(m.n_cells(), 4);
         // a single cell
         apply_filter(&mut m, "devices=1,frontdoor=off").unwrap();
@@ -940,14 +1204,17 @@ mod tests {
         let mut matrix = BenchMatrix::smoke("phi-sim");
         matrix.frontdoor = vec![false, true];
         matrix.producers = vec![1, 2];
+        matrix.replicas = vec![1];
         let direct =
-            run_cell(&matrix, "dynaexq", "steady", 1, 1, false, 0).unwrap();
+            run_cell(&matrix, "dynaexq", "steady", 1, 1, false, 0, 0)
+                .unwrap();
         let fronted =
-            run_cell(&matrix, "dynaexq", "steady", 1, 1, true, 1).unwrap();
+            run_cell(&matrix, "dynaexq", "steady", 1, 1, true, 1, 1).unwrap();
         let threaded =
-            run_cell(&matrix, "dynaexq", "steady", 1, 1, true, 2).unwrap();
+            run_cell(&matrix, "dynaexq", "steady", 1, 1, true, 2, 1).unwrap();
         assert!(direct.fd_lane_admitted.is_empty());
         assert_eq!(direct.producers, 0);
+        assert_eq!(direct.replicas, 0);
         assert_eq!(fronted.fd_lane_admitted.len(), 3);
         assert_eq!(threaded.producers, 2);
         // threaded admission must agree with the serial reference on
@@ -967,5 +1234,63 @@ mod tests {
         assert!(validate_report_json(&bad).is_err());
         let bad = good.replace("\"fd_submit_p50_s\"", "\"fd_sub\"");
         assert!(validate_report_json(&bad).is_err());
+        let bad = good.replace("\"replicas\"", "\"repls\"");
+        assert!(validate_report_json(&bad).is_err());
+    }
+
+    #[test]
+    fn validator_rejects_non_finite_f64_values() {
+        // A JSON number like 1e999 parses to f64::INFINITY — the
+        // validator must reject it, not wave it through as "a number"
+        // (the percentile/NaN regression class of PR 8).
+        let mut matrix = BenchMatrix::smoke("phi-sim");
+        matrix.frontdoor = vec![false];
+        matrix.producers = vec![1];
+        matrix.replicas = vec![1];
+        let cell =
+            run_cell(&matrix, "dynaexq", "steady", 1, 1, false, 0, 0)
+                .unwrap();
+        let good = report_to_json(&BenchReport { matrix, cells: vec![cell] });
+        validate_report_json(&good).unwrap();
+        // splice an infinite value over hi_fraction's finite one
+        let key = "\"hi_fraction\":";
+        let start = good.find(key).unwrap() + key.len();
+        let end = start
+            + good[start..]
+                .find(|c| c == ',' || c == '}')
+                .expect("value terminator");
+        let bad = format!("{}1e999{}", &good[..start], &good[end..]);
+        let err = validate_report_json(&bad).unwrap_err().to_string();
+        assert!(err.contains("hi_fraction"), "{err}");
+    }
+
+    #[test]
+    fn fleet_cells_run_deterministically_and_validate() {
+        // A 2-replica fleet cell must produce byte-stable modeled
+        // outcomes across identical runs, and a full smoke matrix
+        // (which includes the fleet fan-out) must validate.
+        let matrix = BenchMatrix::smoke("phi-sim");
+        let a = run_cell(&matrix, "dynaexq", "steady", 1, 1, true, 1, 2)
+            .unwrap();
+        let b = run_cell(&matrix, "dynaexq", "steady", 1, 1, true, 1, 2)
+            .unwrap();
+        assert_eq!(a.replicas, 2);
+        assert!(a.decode_tokens > 0);
+        assert_eq!(a.fd_lane_admitted.len(), 3);
+        assert_eq!(a.decode_tokens, b.decode_tokens);
+        assert_eq!(a.prefill_tokens, b.prefill_tokens);
+        assert_eq!(a.fd_lane_admitted, b.fd_lane_admitted);
+        assert_eq!(a.fd_lane_rejected, b.fd_lane_rejected);
+        assert_eq!(a.migrated_bytes, b.migrated_bytes);
+        assert_eq!(a.transitions, b.transitions);
+        assert_eq!(a.fd_lane_ttft_p50_s, b.fd_lane_ttft_p50_s);
+        // threaded producers against the fleet door agree with serial
+        let c = run_cell(&matrix, "dynaexq", "steady", 1, 1, true, 2, 2)
+            .unwrap();
+        assert_eq!(a.fd_lane_admitted, c.fd_lane_admitted);
+        assert_eq!(a.decode_tokens, c.decode_tokens);
+        let report = run_matrix(&matrix, |_| {}).unwrap();
+        assert_eq!(report.cells.len(), 5);
+        validate_report_json(&report_to_json(&report)).unwrap();
     }
 }

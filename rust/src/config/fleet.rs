@@ -1,0 +1,159 @@
+//! Fleet configuration (DESIGN.md §14): how many replicated serving
+//! groups stand behind the shared front door, how the modeled health
+//! checker grades heartbeats, and how the router weighs load against
+//! hot-set affinity when placing admitted requests.
+
+/// Parameters of a replicated serving fleet.
+///
+/// A fleet is `replicas` independent engine instances (each backed by a
+/// `devices_per_replica`-wide `DeviceGroup`) behind one `FrontDoor`. The
+/// health checker polls one modeled heartbeat per replica per serve
+/// round; `degraded_after` consecutive failures mark a replica
+/// `Degraded` (still serving, deprioritized by the router) and
+/// `down_after` mark it `Down` (drained; in-flight work fails over).
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Number of replicated serving groups. 1 reduces the fleet to a
+    /// plain session (byte-identical, property-tested).
+    pub replicas: usize,
+    /// Devices inside each replica's `DeviceGroup`.
+    pub devices_per_replica: usize,
+    /// Consecutive heartbeat failures before a replica is `Degraded`.
+    pub degraded_after: u32,
+    /// Consecutive heartbeat failures before a replica is `Down`
+    /// (must be ≥ `degraded_after`).
+    pub down_after: u32,
+    /// Router score weight on hot-set affinity (overlap between a
+    /// request's expected expert set and a replica's hi-precision
+    /// residents, via `ResidencyBackend::resident_overlap`).
+    pub affinity_weight: f64,
+    /// Router score weight on replica load (assigned + pending work).
+    pub load_weight: f64,
+    /// Decode-stream chunk size in tokens. `None` serves each request
+    /// to completion within its round (no mid-stream failover surface);
+    /// `Some(c)` yields after every `c` decode tokens so a replica
+    /// failure strands resumable partial streams.
+    pub stream_chunk: Option<usize>,
+    /// Serve the replicas of one drain round on concurrent threads
+    /// (un-chunked mode only; replicas are independent engines, outcomes
+    /// fold back in replica-index order). Off by default: the serial
+    /// path is the byte-identity reference the concurrent path is
+    /// property-tested against (PR 7 determinism rule).
+    pub parallel_drain: bool,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            replicas: 1,
+            devices_per_replica: 1,
+            degraded_after: 1,
+            down_after: 2,
+            affinity_weight: 1.0,
+            load_weight: 4.0,
+            stream_chunk: None,
+            parallel_drain: false,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Validate parameter ranges; the fleet builder surfaces these as
+    /// construction errors like every other infeasible config.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.replicas < 1 {
+            return Err("fleet.replicas must be at least 1".into());
+        }
+        if self.devices_per_replica < 1 {
+            return Err("fleet.devices_per_replica must be at least 1".into());
+        }
+        if self.degraded_after < 1 {
+            return Err("fleet.degraded_after must be at least 1".into());
+        }
+        if self.down_after < self.degraded_after {
+            return Err(format!(
+                "fleet.down_after {} below degraded_after {} (a replica \
+                 cannot go Down before it is Degraded)",
+                self.down_after, self.degraded_after
+            ));
+        }
+        if !self.affinity_weight.is_finite() || self.affinity_weight < 0.0 {
+            return Err(format!(
+                "fleet.affinity_weight {} must be finite and non-negative",
+                self.affinity_weight
+            ));
+        }
+        if !self.load_weight.is_finite() || self.load_weight < 0.0 {
+            return Err(format!(
+                "fleet.load_weight {} must be finite and non-negative",
+                self.load_weight
+            ));
+        }
+        if let Some(c) = self.stream_chunk {
+            if c < 1 {
+                return Err(
+                    "fleet.stream_chunk must be at least 1 token".into()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Convenience: a chunked-streaming copy (failover tests).
+    pub fn with_chunk(mut self, tokens: usize) -> Self {
+        self.stream_chunk = Some(tokens);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates_and_reduces_to_single_session() {
+        let cfg = FleetConfig::default();
+        assert!(cfg.validate().is_ok());
+        assert_eq!(cfg.replicas, 1);
+        assert!(cfg.stream_chunk.is_none());
+    }
+
+    #[test]
+    fn validate_rejects_bad_ranges() {
+        let mut bad = FleetConfig::default();
+        bad.replicas = 0;
+        assert!(bad.validate().unwrap_err().contains("replicas"));
+
+        let mut bad = FleetConfig::default();
+        bad.devices_per_replica = 0;
+        assert!(bad.validate().unwrap_err().contains("devices_per_replica"));
+
+        let mut bad = FleetConfig::default();
+        bad.degraded_after = 0;
+        assert!(bad.validate().unwrap_err().contains("degraded_after"));
+
+        let mut bad = FleetConfig::default();
+        bad.degraded_after = 3;
+        bad.down_after = 2;
+        assert!(bad.validate().unwrap_err().contains("down_after"));
+
+        let mut bad = FleetConfig::default();
+        bad.affinity_weight = f64::NAN;
+        assert!(bad.validate().unwrap_err().contains("affinity_weight"));
+
+        let mut bad = FleetConfig::default();
+        bad.load_weight = -1.0;
+        assert!(bad.validate().unwrap_err().contains("load_weight"));
+
+        let mut bad = FleetConfig::default();
+        bad.stream_chunk = Some(0);
+        assert!(bad.validate().unwrap_err().contains("stream_chunk"));
+    }
+
+    #[test]
+    fn with_chunk_sets_streaming() {
+        let cfg = FleetConfig::default().with_chunk(2);
+        assert_eq!(cfg.stream_chunk, Some(2));
+        assert!(cfg.validate().is_ok());
+    }
+}

@@ -4,10 +4,12 @@
 //! A tiny `key=value` text format (see [`kv`]) replaces serde/TOML (not in
 //! the offline crate set); presets cover the paper's three evaluation models.
 
+pub mod fleet;
 pub mod frontdoor;
 pub mod kv;
 pub mod shard;
 
+pub use fleet::FleetConfig;
 pub use frontdoor::{FrontDoorConfig, Lane};
 pub use shard::ShardPlan;
 

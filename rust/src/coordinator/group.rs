@@ -222,6 +222,14 @@ impl DeviceGroup {
         })
     }
 
+    /// Per-device `(change-point triggers, recovery intervals)`, device
+    /// index order — the asymmetric-drift diagnostics: the group-level
+    /// [`DeviceGroup::drift_stats`] sum (and the report's OR-merged
+    /// `drift_detected` flag) cannot reveal *which* shard drifted.
+    pub fn device_drift_stats(&self) -> Vec<(u64, u64)> {
+        self.devices.iter().map(|c| c.drift_stats()).collect()
+    }
+
     /// Publish finished transitions on every device; returns the total
     /// published count.
     pub fn poll(&self, now_s: f64) -> usize {

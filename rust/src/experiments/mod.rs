@@ -50,6 +50,14 @@ use crate::cli::Args;
 
 /// `dynaexq serve` — one serving session on the builder API.
 pub fn cmd_serve(args: &Args) -> Result<()> {
+    // `--replicas N` (or any `--fail-replica` script, which implies a
+    // fleet) routes to the replicated serving path (DESIGN.md §14).
+    let replicas = args
+        .get_parse::<usize>("replicas")
+        .unwrap_or(if args.has("fail-replica") { 2 } else { 1 });
+    if replicas > 1 {
+        return cmd_serve_fleet(args, replicas);
+    }
     if args.has("frontdoor") {
         return cmd_serve_frontdoor(args);
     }
@@ -218,6 +226,138 @@ fn cmd_serve_frontdoor(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse a `--fail-replica` script: comma-separated `idx@round` entries,
+/// each optionally followed by `:recover_round` (e.g. `0@2` downs replica
+/// 0 from round 2 on; `0@2:5,1@7` also recovers it at round 5 and downs
+/// replica 1 at round 7). Produces the deterministic [`FaultPlan`] the
+/// fleet's modeled health checker polls each serve round.
+fn parse_fault_spec(
+    spec: &str,
+    replicas: usize,
+) -> Result<crate::workload::FaultPlan> {
+    use crate::workload::{FaultEvent, FaultKind, FaultPlan};
+    let mut plan = FaultPlan::none();
+    for entry in spec.split(',').filter(|e| !e.is_empty()) {
+        let (fail, recover) = match entry.split_once(':') {
+            Some((f, r)) => (f, Some(r)),
+            None => (entry, None),
+        };
+        let (idx, round) = fail.split_once('@').with_context(|| {
+            format!("--fail-replica entry {entry:?}: expected idx@round")
+        })?;
+        let idx: usize = idx.trim().parse().with_context(|| {
+            format!("--fail-replica entry {entry:?}: bad replica index")
+        })?;
+        let round: usize = round.trim().parse().with_context(|| {
+            format!("--fail-replica entry {entry:?}: bad round")
+        })?;
+        if idx >= replicas {
+            bail!(
+                "--fail-replica entry {entry:?}: replica {idx} out of \
+                 range (fleet has {replicas} replicas)"
+            );
+        }
+        plan.push(FaultEvent { replica: idx, round, kind: FaultKind::Fail });
+        if let Some(r) = recover {
+            let r: usize = r.trim().parse().with_context(|| {
+                format!("--fail-replica entry {entry:?}: bad recover round")
+            })?;
+            plan = plan.and_recover(idx, r);
+        }
+    }
+    Ok(plan)
+}
+
+/// `dynaexq serve --replicas N` — a replicated fleet behind one shared
+/// front door (DESIGN.md §14): load/affinity routing across N identical
+/// engine replicas, a deterministic modeled health checker fed by the
+/// `--fail-replica` script, and mid-stream failover that re-admits
+/// stranded requests with token position preserved.
+fn cmd_serve_fleet(args: &Args, replicas: usize) -> Result<()> {
+    use crate::config::fleet::FleetConfig;
+    use crate::serving::fleet::Fleet;
+
+    let model = args.get_or("model", "qwen30b-sim");
+    let method = args.get_or("method", "dynaexq");
+    let workload = args.get_or("workload", "text");
+    let batch = args.get_parse::<usize>("batch").unwrap_or(8);
+    let prompt = args.get_parse::<usize>("prompt").unwrap_or(512);
+    let output = args.get_parse::<usize>("output").unwrap_or(64);
+    let seed = args.get_parse::<u64>("seed").unwrap_or(0xC0FFEE);
+    let warmup = args.get_parse::<usize>("warmup").unwrap_or(2);
+    let devices = args.get_parse::<usize>("devices").unwrap_or(1);
+
+    let mut fc = FleetConfig::default();
+    fc.replicas = replicas;
+    fc.devices_per_replica = devices;
+    // Chunked streaming (`--chunk N` decode rounds per serve round) keeps
+    // requests in flight across rounds — the surface mid-stream failover
+    // exercises. Without it each round serves to completion.
+    fc.stream_chunk = args.get_parse::<usize>("chunk");
+    fc.parallel_drain = args.has("parallel-drain");
+
+    let faults = match args.get("fail-replica") {
+        Some(spec) => parse_fault_spec(spec, replicas)?,
+        None => crate::workload::FaultPlan::none(),
+    };
+
+    let mut fleet = Fleet::builder()
+        .model(model)
+        .method(method)
+        .workload(workload)
+        .max_batch(batch)
+        .seed(seed)
+        .warmup(warmup)
+        .fleet_cfg(fc)
+        .faults(faults)
+        .build()?;
+
+    let sc_name = args.get_or("scenario", "steady");
+    let sc = helpers::scenario(sc_name)?;
+    println!(
+        "model {model} | method {method} | fleet {replicas}x{devices} \
+         replicas | scenario {sc_name} ({} phases, {} rounds) | batch \
+         {batch} prompt {prompt} output {output}",
+        sc.phases.len(),
+        sc.total_rounds(),
+    );
+    let marks = fleet.run_scenario(&sc, batch, prompt, output)?;
+    for (phase, snap) in &marks {
+        println!(
+            "phase {phase:<12} workload {:<5} | health {:?} | served \
+             {:?} | failovers {} readmitted {} | {:>6.0} tok/s",
+            snap.workload,
+            snap.fleet_health,
+            snap.fleet_served,
+            snap.fleet_failovers,
+            snap.fleet_readmitted,
+            snap.throughput_tok_s,
+        );
+        if args.has("kv") {
+            println!("{}", snap.encode());
+        }
+    }
+    let snap = fleet.snapshot();
+    let stats = fleet.stats();
+    println!(
+        "fleet: {} replicas | health {:?} | served per replica {:?} | \
+         failovers {} | readmitted {} | admitted {} rejected {} | \
+         decode {} tok",
+        snap.fleet_replicas,
+        snap.fleet_health,
+        snap.fleet_served,
+        stats.failovers,
+        stats.readmitted,
+        snap.fd_lane_admitted.iter().sum::<u64>(),
+        snap.fd_lane_rejected.iter().sum::<u64>(),
+        snap.decode_tokens,
+    );
+    if args.has("kv") {
+        println!("{}", snap.encode());
+    }
+    Ok(())
+}
+
 /// `dynaexq bench` — the wall-clock serving benchmark matrix
 /// (DESIGN.md §11): run method × scenario × devices × batch cells under
 /// host wall-clock timing and emit the machine-readable
@@ -264,7 +404,8 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
     }
     println!(
         "bench: {} cells ({} methods × {} scenarios × {:?} devices × \
-         {:?} batches × {:?} frontdoor × {:?} producers) on {model}",
+         {:?} batches × {:?} frontdoor × {:?} producers × {:?} replicas) \
+         on {model}",
         matrix.n_cells(),
         matrix.methods.len(),
         matrix.scenarios.len(),
@@ -272,6 +413,7 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
         matrix.batches,
         matrix.frontdoor,
         matrix.producers,
+        matrix.replicas,
     );
     let report = run_matrix(&matrix, |line| eprintln!("{line}"))?;
     println!("{}", crate::bench::runtime::render_table(&report));

@@ -45,6 +45,21 @@ SUBCOMMANDS:
                             lanes interactive|standard|batch, e.g.
                             interactive=0.2:0.02,batch=60:5)
                --queue-cap N --tenant-cap N  (front-door bounds)
+               --replicas N  (N>1 serves a replicated fleet behind one
+                            shared front door — DESIGN.md §14: load/
+                            affinity routing, modeled health checks,
+                            mid-stream failover; --devices then counts
+                            devices per replica)
+               --fail-replica idx@round[:recover][,...]  (scripted
+                            heartbeat faults for the fleet health
+                            checker, e.g. 0@2:5 downs replica 0 at
+                            round 2 and recovers it at round 5;
+                            implies --replicas 2)
+               --chunk N  (fleet streaming chunk: decode rounds per
+                            serve round; keeps requests in flight so
+                            failover can catch them mid-stream)
+               --parallel-drain  (serve fleet replicas on threads;
+                            byte-identical to the serial path)
                --kv   (also print the machine-readable metrics snapshot)
     bench    Wall-clock serving benchmark matrix (DESIGN.md §11): every
              bench method × scripted scenario × {1,2}-device groups ×
@@ -52,7 +67,8 @@ SUBCOMMANDS:
              clock; emits the machine-readable perf trajectory
              BENCH_serving.json (front-door cells carry per-lane p50/p95
              TTFT, typed-rejection totals, and admission-path submit
-             p50/p95, fanned out over a producer-thread axis {1,4}).
+             p50/p95, fanned out over a producer-thread axis {1,4} and
+             a fleet-replica axis {1,2}).
                --smoke  (smallest cell triple — the CI job)
                --model ...   (default qwen30b-sim; phi-sim under --smoke)
                --out path    (default BENCH_serving.json)
@@ -60,8 +76,9 @@ SUBCOMMANDS:
                --producers N  (override the producer-thread axis with a
                             single count; front-door cells only)
                --filter key=value[,...]  (narrow axes: method, scenario,
-                            devices, batch, frontdoor, producers —
-                            re-run single cells without the full matrix)
+                            devices, batch, frontdoor, producers,
+                            replicas — re-run single cells without the
+                            full matrix)
     report   Regenerate a paper table/figure.
                --exp t1|t2|t4|f1|f2|f3|f6..f10|a1..a10|all  [--fast]
     quality  Numeric quality run (real PJRT execution; needs a build with

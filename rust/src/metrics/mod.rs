@@ -42,6 +42,13 @@ impl LatencySeries {
     pub fn samples(&self) -> &[f64] {
         &self.samples
     }
+
+    /// Append every sample of `other` (fleet aggregation: replica series
+    /// fold into one fleet-level series in replica-index order, so the
+    /// merged percentiles are deterministic).
+    pub fn extend(&mut self, other: &LatencySeries) {
+        self.samples.extend_from_slice(&other.samples);
+    }
 }
 
 /// Full serving-run metrics, one per experiment run.
@@ -78,6 +85,22 @@ impl ServingMetrics {
             return 0.0;
         }
         self.decode_tokens as f64 / self.duration_s
+    }
+
+    /// Fold another run's metrics into this one (fleet aggregation:
+    /// per-replica engines each keep their own metrics; the fleet-level
+    /// snapshot merges them in replica-index order). Latency series
+    /// concatenate, token counters add, and the merged duration is the
+    /// *max* — replicas serve concurrently on independent modeled
+    /// clocks, so the fleet's span is its slowest replica's span.
+    pub fn merge(&mut self, other: &ServingMetrics) {
+        self.ttft.extend(&other.ttft);
+        self.tpop.extend(&other.tpop);
+        self.e2e.extend(&other.e2e);
+        self.wait.extend(&other.wait);
+        self.decode_tokens += other.decode_tokens;
+        self.prefill_tokens += other.prefill_tokens;
+        self.duration_s = self.duration_s.max(other.duration_s);
     }
 
     /// One-line summary for reports.
@@ -126,5 +149,25 @@ mod tests {
     fn zero_duration_safe() {
         let m = ServingMetrics::default();
         assert_eq!(m.throughput(), 0.0);
+    }
+
+    #[test]
+    fn merge_concatenates_series_and_takes_max_duration() {
+        let mut a = ServingMetrics::default();
+        a.ttft.record(1.0);
+        a.decode_tokens = 10;
+        a.prefill_tokens = 100;
+        a.duration_s = 5.0;
+        let mut b = ServingMetrics::default();
+        b.ttft.record(2.0);
+        b.ttft.record(3.0);
+        b.decode_tokens = 4;
+        b.prefill_tokens = 40;
+        b.duration_s = 7.5;
+        a.merge(&b);
+        assert_eq!(a.ttft.samples(), &[1.0, 2.0, 3.0]);
+        assert_eq!(a.decode_tokens, 14);
+        assert_eq!(a.prefill_tokens, 140);
+        assert_eq!(a.duration_s, 7.5);
     }
 }

@@ -172,6 +172,16 @@ pub trait ResidencyBackend: Send {
     fn transition_totals(&self) -> TransitionTotals {
         TransitionTotals::default()
     }
+
+    /// How many of `experts` are currently resident at the ladder's *top*
+    /// rung in `layer` — the fleet router's hot-set affinity signal
+    /// (DESIGN.md §14): a replica whose hi-precision resident set covers
+    /// a request's expected expert set serves it without promotion
+    /// traffic. 0 for backends without a residency table (every replica
+    /// then scores equal and routing degenerates to load balancing).
+    fn resident_overlap(&self, _layer: usize, _experts: &[usize]) -> usize {
+        0
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -336,6 +346,13 @@ impl ResidencyBackend for DynaExqBackend {
 
     fn transition_totals(&self) -> TransitionTotals {
         self.coord.pipeline.stats.totals()
+    }
+
+    fn resident_overlap(&self, layer: usize, experts: &[usize]) -> usize {
+        experts
+            .iter()
+            .filter(|&&e| self.coord.resolve_tier(layer, e) == 0)
+            .count()
     }
 }
 
@@ -507,6 +524,13 @@ impl ResidencyBackend for DynaExqShardedBackend {
     fn transition_totals(&self) -> TransitionTotals {
         self.group.transition_totals()
     }
+
+    fn resident_overlap(&self, layer: usize, experts: &[usize]) -> usize {
+        experts
+            .iter()
+            .filter(|&&e| self.group.resolve_tier(layer, e) == 0)
+            .count()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -659,6 +683,10 @@ impl ResidencyBackend for RecordingBackend {
 
     fn transition_totals(&self) -> TransitionTotals {
         self.inner.transition_totals()
+    }
+
+    fn resident_overlap(&self, layer: usize, experts: &[usize]) -> usize {
+        self.inner.resident_overlap(layer, experts)
     }
 }
 

@@ -1,0 +1,1338 @@
+//! Fleet-scale replicated serving with failover (DESIGN.md §14).
+//!
+//! A [`Fleet`] is N replicated serving groups — each an independent
+//! modeled [`Engine`] over its own `DeviceGroup`-backed residency stack —
+//! standing behind **one** shared [`FrontDoor`]. Three mechanisms sit on
+//! top of the replicas:
+//!
+//! * [`FleetRouter`] — places each admitted request by *load* and
+//!   *hot-set affinity*: replicas are scored by the overlap between the
+//!   request's expected expert set (sampled from the live workload's
+//!   routing model) and the replica's hi-precision resident set
+//!   ([`ResidencyBackend::resident_overlap`]), minus a load penalty.
+//!   A replica that already holds a request's hot experts serves it
+//!   without promotion traffic.
+//! * [`HealthChecker`] — a deterministic modeled health checker: one
+//!   heartbeat per replica per serve round, scripted by the scenario's
+//!   [`FaultPlan`]. Consecutive failures walk a replica through
+//!   [`ReplicaHealth::Degraded`] (deprioritized) to
+//!   [`ReplicaHealth::Down`] (drained); a succeeding heartbeat restores
+//!   it. No wall clock, no randomness at poll time — a fixed plan yields
+//!   a byte-stable failover trajectory.
+//! * **Failover** — when a replica goes `Down` (or is drained for
+//!   elastic scale-in via [`Fleet::drain_replica`]), its in-flight
+//!   requests are re-admitted through the front door with their token
+//!   position preserved: the remainder request carries the original id
+//!   and `output_len` minus the tokens already generated, re-enters via
+//!   [`FrontDoor::readmit`] (never rejected, never re-counted), and
+//!   completes on another replica. Every admitted request completes
+//!   exactly once — token conservation is property-tested.
+//!
+//! Two degenerate configurations anchor correctness:
+//!
+//! * **1 replica, no faults, un-chunked** — the fleet is byte-identical
+//!   to a bare front-doored `ServeSession` over the same seed/config
+//!   ([`Fleet::replica_snapshot`] vs `ServeSession::snapshot`).
+//! * **`parallel_drain`** — replicas of one drain round serve on
+//!   concurrent threads; outcomes fold back in replica-index order, so
+//!   the concurrent path is byte-identical to the serial reference
+//!   (PR 7 determinism rule).
+//!
+//! [`FleetBackend`] is the *backend-level* projection of the same idea —
+//! N sharded residency stacks behind one `ResidencyBackend` face, the
+//! registry's `dynaexq-fleet` method — so the DXTR trace-replay
+//! conformance suite exercises replicated routing without an engine.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::fleet::FleetConfig;
+use crate::config::frontdoor::{FrontDoorConfig, Lane};
+use crate::config::{DeviceConfig, ModelPreset, ServingConfig};
+use crate::metrics::ServingMetrics;
+use crate::util::{mean, XorShiftRng};
+use crate::workload::{
+    FaultPlan, RequestGenerator, RoutingSampler, Scenario, WorkloadProfile,
+};
+
+use super::backend::{DynaExqShardedBackend, ResidencyBackend};
+use super::engine::{ActiveRequest, Engine, EngineConfig};
+use super::frontdoor::{FrontDoor, QueuedRequest, Rejected, SloScheduler};
+use super::registry::{BackendCtx, BackendRegistry};
+use super::session::MetricsSnapshot;
+use crate::coordinator::TransitionTotals;
+use crate::model::Precision;
+
+// ---------------------------------------------------------------------------
+// Health
+// ---------------------------------------------------------------------------
+
+/// Modeled health of one fleet replica.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaHealth {
+    /// Serving normally.
+    Healthy,
+    /// Consecutive heartbeat failures at or past `degraded_after`: still
+    /// serving, deprioritized by the router.
+    Degraded,
+    /// Consecutive failures at or past `down_after`: drained, in-flight
+    /// work failed over, excluded from routing until a heartbeat lands.
+    Down,
+    /// Administratively drained (elastic scale-in): healthy but taking
+    /// no new work until [`Fleet::restore_replica`].
+    Draining,
+}
+
+impl ReplicaHealth {
+    /// Stable wire code for the snapshot's `fleet_health` field.
+    pub fn code(self) -> u64 {
+        match self {
+            ReplicaHealth::Healthy => 0,
+            ReplicaHealth::Degraded => 1,
+            ReplicaHealth::Down => 2,
+            ReplicaHealth::Draining => 3,
+        }
+    }
+
+    /// Routing preference tier: lower serves first.
+    fn tier(self) -> usize {
+        match self {
+            ReplicaHealth::Healthy => 0,
+            ReplicaHealth::Degraded => 1,
+            ReplicaHealth::Draining => 2,
+            ReplicaHealth::Down => 3,
+        }
+    }
+}
+
+/// Deterministic consecutive-failure health checker: one observation per
+/// replica per serve round, thresholds from [`FleetConfig`].
+#[derive(Clone, Debug)]
+pub struct HealthChecker {
+    degraded_after: u32,
+    down_after: u32,
+    fails: Vec<u32>,
+    states: Vec<ReplicaHealth>,
+}
+
+impl HealthChecker {
+    pub fn new(replicas: usize, degraded_after: u32, down_after: u32) -> Self {
+        Self {
+            degraded_after: degraded_after.max(1),
+            down_after: down_after.max(degraded_after.max(1)),
+            fails: vec![0; replicas],
+            states: vec![ReplicaHealth::Healthy; replicas],
+        }
+    }
+
+    /// Record one heartbeat outcome; returns `(before, after)` states so
+    /// the caller can act on the transition edge (failover fires exactly
+    /// once, on the edge into `Down`). A draining replica stays
+    /// `Draining` whatever its heartbeats say — only
+    /// [`HealthChecker::restore`] releases it.
+    pub fn observe(
+        &mut self,
+        replica: usize,
+        ok: bool,
+    ) -> (ReplicaHealth, ReplicaHealth) {
+        let before = self.states[replica];
+        if before == ReplicaHealth::Draining {
+            return (before, before);
+        }
+        let after = if ok {
+            self.fails[replica] = 0;
+            ReplicaHealth::Healthy
+        } else {
+            self.fails[replica] = self.fails[replica].saturating_add(1);
+            if self.fails[replica] >= self.down_after {
+                ReplicaHealth::Down
+            } else if self.fails[replica] >= self.degraded_after {
+                ReplicaHealth::Degraded
+            } else {
+                ReplicaHealth::Healthy
+            }
+        };
+        self.states[replica] = after;
+        (before, after)
+    }
+
+    pub fn state(&self, replica: usize) -> ReplicaHealth {
+        self.states[replica]
+    }
+
+    pub fn states(&self) -> &[ReplicaHealth] {
+        &self.states
+    }
+
+    /// Administrative drain (elastic scale-in).
+    pub fn set_draining(&mut self, replica: usize) {
+        self.states[replica] = ReplicaHealth::Draining;
+    }
+
+    /// Release a drained (or failed) replica back to `Healthy` with a
+    /// clean failure count (elastic scale-out / recovery).
+    pub fn restore(&mut self, replica: usize) {
+        self.fails[replica] = 0;
+        self.states[replica] = ReplicaHealth::Healthy;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Router
+// ---------------------------------------------------------------------------
+
+/// Load + hot-set-affinity placement. Only the best available health
+/// tier is eligible (Healthy, else Degraded, else Draining, else Down —
+/// a request is *never* dropped for lack of a healthy replica); within
+/// the tier the replica maximizing
+/// `affinity_weight · overlap − load_weight · load` wins, ties to the
+/// lowest index.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetRouter {
+    pub affinity_weight: f64,
+    pub load_weight: f64,
+}
+
+impl FleetRouter {
+    pub fn new(cfg: &FleetConfig) -> Self {
+        Self {
+            affinity_weight: cfg.affinity_weight,
+            load_weight: cfg.load_weight,
+        }
+    }
+
+    /// Pick the serving replica for one request. `overlaps[i]` is the
+    /// hi-precision resident overlap of replica `i` with the request's
+    /// expected expert set; `loads[i]` its in-flight plus already-assigned
+    /// request count.
+    pub fn pick(
+        &self,
+        states: &[ReplicaHealth],
+        overlaps: &[usize],
+        loads: &[usize],
+    ) -> usize {
+        let best_tier =
+            states.iter().map(|h| h.tier()).min().unwrap_or(0);
+        let mut best: Option<(f64, usize)> = None;
+        for (i, h) in states.iter().enumerate() {
+            if h.tier() != best_tier {
+                continue;
+            }
+            let score = self.affinity_weight * overlaps[i] as f64
+                - self.load_weight * loads[i] as f64;
+            if best.map(|(bs, _)| score > bs).unwrap_or(true) {
+                best = Some((score, i));
+            }
+        }
+        best.map(|(_, i)| i).unwrap_or(0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet
+// ---------------------------------------------------------------------------
+
+/// Fleet-level outcome counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FleetStats {
+    /// Replica drain events that stranded in-flight work (Down
+    /// transitions and administrative drains).
+    pub failovers: u64,
+    /// Requests re-admitted through [`FrontDoor::readmit`] with their
+    /// token position preserved.
+    pub readmitted: u64,
+}
+
+/// N replicated engines behind one shared front door. See the module
+/// docs for the serve-round flow; construct through [`FleetBuilder`].
+pub struct Fleet {
+    replicas: Vec<Engine>,
+    fd: FrontDoor,
+    cfg: FleetConfig,
+    checker: HealthChecker,
+    router: FleetRouter,
+    faults: FaultPlan,
+    round: usize,
+    /// Per-replica in-flight decode batches (chunked streaming mode
+    /// carries these across rounds; un-chunked mode empties them every
+    /// round).
+    active: Vec<Vec<ActiveRequest>>,
+    /// Request id → (tenant index, effective lane) — failover needs the
+    /// admission metadata of a stranded stream to re-admit it.
+    meta: HashMap<u64, (usize, Lane)>,
+    /// Engine admissions per replica (the snapshot's `fleet_served`).
+    served_by_replica: Vec<u64>,
+    stats: FleetStats,
+    /// Fleet-owned routing model: samples each request's expected expert
+    /// set for the router's affinity score. Separate RNG stream — never
+    /// touches any replica engine's sampler state.
+    sampler: RoutingSampler,
+    rng: XorShiftRng,
+    preset: ModelPreset,
+    pub model: String,
+    pub method: String,
+    pub workload: String,
+    seed: u64,
+}
+
+impl Fleet {
+    pub fn builder() -> FleetBuilder {
+        FleetBuilder::default()
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn config(&self) -> &FleetConfig {
+        &self.cfg
+    }
+
+    pub fn frontdoor(&self) -> &FrontDoor {
+        &self.fd
+    }
+
+    pub fn stats(&self) -> FleetStats {
+        self.stats
+    }
+
+    pub fn health(&self) -> Vec<ReplicaHealth> {
+        self.checker.states().to_vec()
+    }
+
+    /// Serve rounds completed so far (the health checker's clock).
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    /// Fleet-wide modeled clock: the slowest replica's clock (replicas
+    /// serve concurrently on independent modeled clocks).
+    pub fn now(&self) -> f64 {
+        self.replicas
+            .iter()
+            .map(|e| e.now())
+            .fold(0.0f64, f64::max)
+    }
+
+    pub fn replica_metrics(&self, r: usize) -> &ServingMetrics {
+        &self.replicas[r].metrics
+    }
+
+    /// Transition-pipeline counters summed across replicas (the bench
+    /// harness reports these as deltas over the timed rounds).
+    pub fn transition_totals(&self) -> TransitionTotals {
+        let mut t = TransitionTotals::default();
+        for e in &self.replicas {
+            t.add(&e.backend.transition_totals());
+        }
+        t
+    }
+
+    /// Replace the scripted fault plan (scenario-independent driving).
+    pub fn set_faults(&mut self, faults: FaultPlan) {
+        self.faults = faults;
+    }
+
+    /// Switch every replica (and the fleet's affinity sampler) to a new
+    /// workload profile.
+    pub fn set_profile(&mut self, profile: &WorkloadProfile) {
+        for e in &mut self.replicas {
+            e.set_profile(profile);
+        }
+        self.sampler = RoutingSampler::new(
+            profile,
+            self.preset.n_layers_logical(),
+            self.preset.n_experts,
+            self.preset.top_k,
+        );
+        self.workload = profile.name.to_string();
+    }
+
+    /// Submit one request to the shared front door (never blocking; the
+    /// typed [`Rejected`] is the backpressure signal).
+    pub fn submit(
+        &mut self,
+        req: crate::workload::Request,
+        tenant: &str,
+        lane: Lane,
+    ) -> std::result::Result<(), Rejected> {
+        let now = self.now();
+        self.fd.submit(req, tenant, lane, now)
+    }
+
+    /// Administratively drain a replica (elastic scale-in): it takes no
+    /// new work and its in-flight streams fail over immediately.
+    pub fn drain_replica(&mut self, r: usize) {
+        self.checker.set_draining(r);
+        self.failover(r);
+    }
+
+    /// Return a drained (or failed) replica to service (elastic
+    /// scale-out).
+    pub fn restore_replica(&mut self, r: usize) {
+        self.checker.restore(r);
+    }
+
+    /// Re-admit every in-flight stream of replica `r` through the front
+    /// door with its token position preserved: the remainder request
+    /// keeps the original id and arrival, `output_len` drops to the
+    /// tokens not yet generated. Prefill recomputes on the new replica
+    /// (the KV cache died with the old one) — decode work is never
+    /// repeated, so token conservation holds exactly.
+    fn failover(&mut self, r: usize) {
+        let stranded = std::mem::take(&mut self.active[r]);
+        if stranded.is_empty() {
+            return;
+        }
+        let names: Vec<String> = self
+            .fd
+            .tenant_served()
+            .into_iter()
+            .map(|(name, _)| name)
+            .collect();
+        for a in stranded {
+            let remaining = a.req.output_len.saturating_sub(a.generated);
+            if remaining == 0 {
+                continue;
+            }
+            let (tenant, lane) = self
+                .meta
+                .get(&a.req.id)
+                .copied()
+                .unwrap_or((0, Lane::Standard));
+            let name =
+                names.get(tenant).map(String::as_str).unwrap_or("default");
+            let mut req = a.req;
+            req.output_len = remaining;
+            self.fd.readmit(req, name, lane);
+            self.stats.readmitted += 1;
+        }
+        self.stats.failovers += 1;
+    }
+
+    /// One serve round: heartbeats → failover edges → route the drained
+    /// queue across replicas → serve (continuations first in chunked
+    /// mode) → fold outcomes back into the front door.
+    pub fn drain(&mut self) -> Result<()> {
+        let n = self.replicas.len();
+        // 1. Heartbeats: scripted by the fault plan, graded by the
+        // checker; the edge into Down fails the replica's streams over
+        // *before* this round's routing, so they re-enter this round.
+        for r in 0..n {
+            let ok = self.faults.heartbeat_ok(r, self.round);
+            let (before, after) = self.checker.observe(r, ok);
+            if after == ReplicaHealth::Down && before != ReplicaHealth::Down {
+                self.failover(r);
+            }
+        }
+        // 2. Drain the shared queue and place each request.
+        let (queued, served) = self.fd.take_queued();
+        let mut assignments: Vec<Vec<QueuedRequest>> =
+            (0..n).map(|_| Vec::new()).collect();
+        if n == 1 {
+            assignments[0] = queued;
+        } else {
+            let states = self.checker.states().to_vec();
+            let mut overlaps = vec![0usize; n];
+            let mut loads: Vec<usize> =
+                self.active.iter().map(Vec::len).collect();
+            for q in queued {
+                let experts =
+                    self.sampler.sample_topk(&mut self.rng, q.req.id, 0);
+                for (i, e) in self.replicas.iter().enumerate() {
+                    overlaps[i] = e.backend.resident_overlap(0, &experts);
+                }
+                let r = self.router.pick(&states, &overlaps, &loads);
+                loads[r] += 1;
+                assignments[r].push(q);
+            }
+        }
+        // 3. Serve.
+        match self.cfg.stream_chunk {
+            None => self.serve_round_unchunked(assignments, &served)?,
+            Some(chunk) => {
+                self.serve_round_chunked(assignments, &served, chunk)
+            }
+        }
+        self.round += 1;
+        Ok(())
+    }
+
+    /// Un-chunked serve: every assigned request runs to completion inside
+    /// its replica's [`SloScheduler`] drain — the exact shape of
+    /// `ServeSession::drain`, per replica. With one replica this is
+    /// byte-identical to the bare session path (`take_queued` +
+    /// `scheduler_for` compose to `take_scheduled`).
+    fn serve_round_unchunked(
+        &mut self,
+        mut assignments: Vec<Vec<QueuedRequest>>,
+        served: &[u64],
+    ) -> Result<()> {
+        for (r, batch) in assignments.iter().enumerate() {
+            self.served_by_replica[r] += batch.len() as u64;
+        }
+        if self.cfg.parallel_drain && self.replicas.len() > 1 {
+            // Replicas are independent engines; serve them on scoped
+            // threads and fold outcomes back in replica-index order, so
+            // the result is byte-identical to the serial reference below.
+            let fd = &self.fd;
+            let scheds: Vec<Option<SloScheduler>> =
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = self
+                        .replicas
+                        .iter_mut()
+                        .zip(assignments.drain(..))
+                        .map(|(engine, batch)| {
+                            scope.spawn(move || {
+                                if batch.is_empty() {
+                                    return None;
+                                }
+                                let (mut sched, reqs) =
+                                    fd.scheduler_for(batch, served.to_vec());
+                                engine.serve_with(&mut sched, reqs);
+                                Some(sched)
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("replica serve panicked"))
+                        .collect()
+                });
+            for sched in scheds.into_iter().flatten() {
+                self.fd.absorb(&sched);
+            }
+        } else {
+            for (r, batch) in assignments.into_iter().enumerate() {
+                if batch.is_empty() {
+                    continue;
+                }
+                let (mut sched, reqs) =
+                    self.fd.scheduler_for(batch, served.to_vec());
+                self.replicas[r].serve_with(&mut sched, reqs);
+                self.fd.absorb(&sched);
+            }
+        }
+        Ok(())
+    }
+
+    /// Chunked streaming serve: admit this round's arrivals, then run at
+    /// most `chunk` lockstep decode rounds per replica; unfinished
+    /// streams stay in the replica's active batch for the next round —
+    /// the mid-stream surface failover needs. Admission accounting
+    /// (per-lane TTFT, deadline misses, fair-share) folds back through
+    /// the same [`FrontDoor::absorb`] path as the un-chunked mode.
+    fn serve_round_chunked(
+        &mut self,
+        assignments: Vec<Vec<QueuedRequest>>,
+        served: &[u64],
+        chunk: usize,
+    ) {
+        for (r, batch) in assignments.into_iter().enumerate() {
+            if batch.is_empty() && self.active[r].is_empty() {
+                continue;
+            }
+            let mut sched = SloScheduler::new(self.fd.cfg().clone());
+            sched.served_by_tenant = vec![0; served.len().max(1)];
+            for q in batch {
+                let arrival = q.req.arrival_s;
+                let (tenant, lane, deadline) = (q.tenant, q.lane, q.deadline_s);
+                self.meta.insert(q.req.id, (tenant, lane));
+                let engine = &mut self.replicas[r];
+                engine.admit(q.req, &mut self.active[r]);
+                let ttft = engine
+                    .metrics
+                    .ttft
+                    .samples()
+                    .last()
+                    .copied()
+                    .unwrap_or(0.0);
+                sched.lane_ttft[lane.index()].push(ttft);
+                if arrival + ttft > deadline {
+                    sched.deadline_miss[lane.index()] += 1;
+                }
+                if sched.served_by_tenant.len() <= tenant {
+                    sched.served_by_tenant.resize(tenant + 1, 0);
+                }
+                sched.served_by_tenant[tenant] += 1;
+                sched.admission_log.push((tenant, lane));
+                self.served_by_replica[r] += 1;
+            }
+            for _ in 0..chunk {
+                if self.active[r].is_empty() {
+                    break;
+                }
+                self.replicas[r].decode_round(&mut self.active[r]);
+            }
+            self.replicas[r].metrics.duration_s = self.replicas[r].now();
+            self.fd.absorb(&sched);
+        }
+    }
+
+    /// Streams still in flight across the whole fleet (chunked mode).
+    pub fn in_flight(&self) -> usize {
+        self.active.iter().map(Vec::len).sum()
+    }
+
+    /// Run chunked continuations to completion (end-of-scenario flush):
+    /// keeps serving rounds (heartbeats included) until no stream is in
+    /// flight and the queue is empty. Bounded by `max_rounds` so a
+    /// scripted total outage cannot spin forever.
+    pub fn flush(&mut self, max_rounds: usize) -> Result<()> {
+        for _ in 0..max_rounds {
+            if self.in_flight() == 0 && self.fd.depth() == 0 {
+                return Ok(());
+            }
+            self.drain()?;
+        }
+        if self.in_flight() == 0 && self.fd.depth() == 0 {
+            Ok(())
+        } else {
+            bail!(
+                "fleet flush did not converge in {max_rounds} rounds \
+                 ({} in flight, queue depth {})",
+                self.in_flight(),
+                self.fd.depth()
+            )
+        }
+    }
+
+    /// Drive a scripted [`Scenario`] through the fleet — the same
+    /// submit/drain loop as `ServeSession::run_scenario_frontdoor`
+    /// (identical request generator seeding, so a 1-replica fleet
+    /// reproduces the bare session byte for byte), plus the scenario's
+    /// [`FaultPlan`] scripted into the health checker. Chunked
+    /// configurations flush remaining streams before each phase mark.
+    pub fn run_scenario(
+        &mut self,
+        scenario: &Scenario,
+        batch: usize,
+        prompt_len: usize,
+        output_len: usize,
+    ) -> Result<Vec<(String, MetricsSnapshot)>> {
+        let Some(first) = scenario.phases.first() else {
+            return Ok(Vec::new());
+        };
+        if !scenario.faults.is_empty() {
+            self.faults = scenario.faults.clone();
+        }
+        let mut gen =
+            RequestGenerator::new(first.profile.clone(), self.seed ^ 0xFD00);
+        let mut marks = Vec::with_capacity(scenario.phases.len());
+        for phase in &scenario.phases {
+            self.set_profile(&phase.profile);
+            gen.set_profile(phase.profile.clone());
+            let tenant = phase
+                .tenant
+                .clone()
+                .unwrap_or_else(|| phase.profile.name.to_string());
+            let b = Scenario::scaled_batch(batch, phase.load);
+            for _ in 0..phase.rounds {
+                let now = self.now();
+                for _ in 0..b {
+                    let req = gen.request(prompt_len, output_len, now);
+                    // typed rejections are the backpressure signal — they
+                    // land in the snapshot counters
+                    let _ = self.fd.submit(req, &tenant, phase.lane, now);
+                }
+                self.drain()?;
+            }
+            if self.cfg.stream_chunk.is_some() {
+                self.flush(4096)?;
+            }
+            marks.push((phase.name.clone(), self.snapshot()));
+        }
+        Ok(marks)
+    }
+
+    /// Shared snapshot scaffolding: everything except the residency /
+    /// activation aggregates, which differ between the per-replica and
+    /// fleet-level views.
+    #[allow(clippy::too_many_arguments)]
+    fn compose_snapshot(
+        &self,
+        m: &ServingMetrics,
+        act: (f64, f64),
+        hi_fraction: f64,
+        migrated_bytes: u64,
+        tier_resident: Vec<usize>,
+        device_resident: Vec<Vec<usize>>,
+        promo_queue_depth: Vec<usize>,
+        drift: (u64, u64),
+    ) -> MetricsSnapshot {
+        MetricsSnapshot {
+            model: self.model.clone(),
+            method: self.method.clone(),
+            workload: self.workload.clone(),
+            ttft_avg_s: m.ttft.avg(),
+            ttft_p99_s: m.ttft.p99(),
+            tpop_avg_s: m.tpop.avg(),
+            tpop_p99_s: m.tpop.p99(),
+            e2e_avg_s: m.e2e.avg(),
+            e2e_p99_s: m.e2e.p99(),
+            wait_p99_s: m.wait.p99(),
+            throughput_tok_s: m.throughput(),
+            decode_tokens: m.decode_tokens,
+            prefill_tokens: m.prefill_tokens,
+            duration_s: m.duration_s,
+            hi_fraction,
+            migrated_bytes,
+            act_prefill: act.0,
+            act_decode: act.1,
+            tier_resident,
+            device_resident,
+            promo_queue_depth,
+            drift_events: drift.0,
+            drift_recovery_ticks: drift.1,
+            fd_queue_depth: self.fd.depth() as u64,
+            fd_lane_admitted: self.fd.stats().lane_admitted(),
+            fd_lane_rejected: self.fd.stats().lane_rejected(),
+            fd_lane_deadline_miss: self.fd.stats().lane_deadline_miss(),
+            ..MetricsSnapshot::default()
+        }
+    }
+
+    /// One replica's view, in exactly the shape a bare front-doored
+    /// `ServeSession::snapshot` produces (fleet-level fields stay at
+    /// their defaults) — the 1-replica byte-identity anchor.
+    pub fn replica_snapshot(&self, r: usize) -> MetricsSnapshot {
+        let e = &self.replicas[r];
+        let b = e.backend.as_ref();
+        self.compose_snapshot(
+            &e.metrics,
+            (e.activation.prefill_avg(), e.activation.decode_avg()),
+            b.hi_fraction(),
+            b.migrated_bytes(),
+            b.tier_residency(),
+            b.device_residency(),
+            b.promo_queue_depth(),
+            b.drift_stats(),
+        )
+    }
+
+    /// The fleet-level snapshot: latency series concatenate in
+    /// replica-index order, token counters add, duration is the slowest
+    /// replica's span; residency rungs sum element-wise, per-device rows
+    /// concatenate, and the per-replica health/served/failover state
+    /// lands in the `fleet_*` fields.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut m = ServingMetrics::default();
+        let mut pre: Vec<f64> = Vec::new();
+        let mut dec: Vec<f64> = Vec::new();
+        let mut migrated = 0u64;
+        let mut tier: Vec<usize> = Vec::new();
+        let mut devres: Vec<Vec<usize>> = Vec::new();
+        let mut promo: Vec<usize> = Vec::new();
+        let mut drift = (0u64, 0u64);
+        let mut hi = Vec::new();
+        for e in &self.replicas {
+            m.merge(&e.metrics);
+            pre.extend_from_slice(&e.activation.prefill);
+            dec.extend_from_slice(&e.activation.decode);
+            let b = e.backend.as_ref();
+            migrated += b.migrated_bytes();
+            hi.push(b.hi_fraction());
+            let t = b.tier_residency();
+            if tier.len() < t.len() {
+                tier.resize(t.len(), 0);
+            }
+            for (i, n) in t.into_iter().enumerate() {
+                tier[i] += n;
+            }
+            devres.extend(b.device_residency());
+            promo.extend(b.promo_queue_depth());
+            let d = b.drift_stats();
+            drift.0 += d.0;
+            drift.1 += d.1;
+        }
+        let mut s = self.compose_snapshot(
+            &m,
+            (mean(&pre), mean(&dec)),
+            mean(&hi),
+            migrated,
+            tier,
+            devres,
+            promo,
+            drift,
+        );
+        s.fleet_replicas = self.replicas.len() as u64;
+        s.fleet_health =
+            self.checker.states().iter().map(|h| h.code()).collect();
+        s.fleet_served = self.served_by_replica.clone();
+        s.fleet_failovers = self.stats.failovers;
+        s.fleet_readmitted = self.stats.readmitted;
+        s
+    }
+}
+
+/// Fluent, validating constructor for [`Fleet`] — the replicated
+/// counterpart of `SessionBuilder`, with identical defaults so a
+/// 1-replica fleet reproduces the default front-doored session.
+pub struct FleetBuilder {
+    model: String,
+    method: String,
+    workload: String,
+    device: DeviceConfig,
+    serving_cfg: ServingConfig,
+    max_batch: usize,
+    seed: u64,
+    warmup: usize,
+    track_activation: bool,
+    registry: Option<BackendRegistry>,
+    frontdoor: FrontDoorConfig,
+    fleet: FleetConfig,
+    faults: FaultPlan,
+}
+
+impl Default for FleetBuilder {
+    fn default() -> Self {
+        Self {
+            model: "qwen30b-sim".into(),
+            method: "dynaexq".into(),
+            workload: "text".into(),
+            device: DeviceConfig::default(),
+            serving_cfg: ServingConfig::default(),
+            max_batch: 32,
+            seed: 0xC0FFEE,
+            warmup: 0,
+            track_activation: true,
+            registry: None,
+            frontdoor: FrontDoorConfig::default(),
+            fleet: FleetConfig::default(),
+            faults: FaultPlan::none(),
+        }
+    }
+}
+
+impl FleetBuilder {
+    pub fn model(mut self, name: &str) -> Self {
+        self.model = name.to_string();
+        self
+    }
+
+    pub fn method(mut self, name: &str) -> Self {
+        self.method = name.to_string();
+        self
+    }
+
+    pub fn workload(mut self, name: &str) -> Self {
+        self.workload = name.to_string();
+        self
+    }
+
+    pub fn device(mut self, dev: DeviceConfig) -> Self {
+        self.device = dev;
+        self
+    }
+
+    pub fn serving_cfg(mut self, cfg: ServingConfig) -> Self {
+        self.serving_cfg = cfg;
+        self
+    }
+
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.max_batch = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn warmup(mut self, rounds: usize) -> Self {
+        self.warmup = rounds;
+        self
+    }
+
+    pub fn track_activation(mut self, on: bool) -> Self {
+        self.track_activation = on;
+        self
+    }
+
+    pub fn registry(mut self, registry: BackendRegistry) -> Self {
+        self.registry = Some(registry);
+        self
+    }
+
+    pub fn frontdoor(mut self, cfg: FrontDoorConfig) -> Self {
+        self.frontdoor = cfg;
+        self
+    }
+
+    pub fn fleet_cfg(mut self, cfg: FleetConfig) -> Self {
+        self.fleet = cfg;
+        self
+    }
+
+    /// Convenience: replica count with the rest of [`FleetConfig`] at
+    /// defaults already set.
+    pub fn replicas(mut self, n: usize) -> Self {
+        self.fleet.replicas = n;
+        self
+    }
+
+    /// Scripted replica faults (a scenario's own plan overrides this
+    /// when non-empty).
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = plan;
+        self
+    }
+
+    /// Validate everything and construct the fleet: every replica gets
+    /// an identical engine (same method, config, and seed — replicas are
+    /// deterministic twins whose residency only diverges with traffic).
+    pub fn build(self) -> Result<Fleet> {
+        self.fleet.validate().map_err(|e| anyhow!("fleet: {e}"))?;
+        let preset = ModelPreset::by_name(&self.model).ok_or_else(|| {
+            anyhow!(
+                "unknown model {:?}; known models: {}",
+                self.model,
+                ModelPreset::all()
+                    .iter()
+                    .map(|p| p.name)
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })?;
+        let profile =
+            WorkloadProfile::by_name(&self.workload).ok_or_else(|| {
+                anyhow!(
+                    "unknown workload {:?}; known workloads: {}",
+                    self.workload,
+                    WorkloadProfile::all()
+                        .iter()
+                        .map(|p| p.name)
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })?;
+        if self.max_batch == 0 {
+            bail!("max_batch must be ≥ 1");
+        }
+        let registry =
+            self.registry.unwrap_or_else(BackendRegistry::with_builtins);
+        let fd = FrontDoor::new(self.frontdoor)
+            .map_err(|e| anyhow!("front door: {e}"))?;
+        let n = self.fleet.replicas;
+        let mut replicas = Vec::with_capacity(n);
+        for _ in 0..n {
+            let backend = registry
+                .build(
+                    &self.method,
+                    &BackendCtx::new(&preset, &self.serving_cfg, &self.device)
+                        .with_profile(&profile)
+                        .with_devices(self.fleet.devices_per_replica),
+                )
+                .map_err(|e| anyhow!(e))?;
+            let mut engine = Engine::new(
+                &preset,
+                &profile,
+                backend,
+                &self.device,
+                EngineConfig {
+                    max_batch: self.max_batch,
+                    seed: self.seed,
+                    track_activation: self.track_activation,
+                },
+            );
+            engine.warm(&profile, self.warmup);
+            replicas.push(engine);
+        }
+        let sampler = RoutingSampler::new(
+            &profile,
+            preset.n_layers_logical(),
+            preset.n_experts,
+            preset.top_k,
+        );
+        Ok(Fleet {
+            checker: HealthChecker::new(
+                n,
+                self.fleet.degraded_after,
+                self.fleet.down_after,
+            ),
+            router: FleetRouter::new(&self.fleet),
+            active: (0..n).map(|_| Vec::new()).collect(),
+            served_by_replica: vec![0; n],
+            meta: HashMap::new(),
+            stats: FleetStats::default(),
+            rng: XorShiftRng::new(self.seed ^ 0xF1EE7),
+            sampler,
+            replicas,
+            fd,
+            cfg: self.fleet,
+            faults: self.faults,
+            round: 0,
+            preset,
+            model: self.model,
+            method: self.method,
+            workload: self.workload,
+            seed: self.seed,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FleetBackend — the registry's `dynaexq-fleet` method
+// ---------------------------------------------------------------------------
+
+/// Backend-level replication: N sharded DynaExq stacks behind one
+/// [`ResidencyBackend`] face. Routing records and resolutions hit the
+/// *current* replica; every tick runs all replicas' control loops
+/// (concurrently when wider than one — with a serial byte-identity
+/// reference, [`FleetBackend::set_serial`]), polls the scripted
+/// heartbeats, and re-picks the current replica by hi-precision overlap
+/// with the last observed layer-0 expert set among non-`Down` replicas.
+/// This is what the DXTR trace-replay conformance suite drives.
+pub struct FleetBackend {
+    replicas: Vec<DynaExqShardedBackend>,
+    current: usize,
+    checker: HealthChecker,
+    faults: FaultPlan,
+    round: usize,
+    /// Layer-0 selections of the current iteration — the affinity signal
+    /// for the next re-pick.
+    last_routed: Vec<usize>,
+    /// Force the serial tick path (byte-identity reference).
+    serial: bool,
+}
+
+impl FleetBackend {
+    pub fn new(
+        preset: &ModelPreset,
+        cfg: &ServingConfig,
+        dev: &DeviceConfig,
+        devices_per_replica: usize,
+        replicas: usize,
+    ) -> Result<Self, String> {
+        if replicas == 0 {
+            return Err("fleet backend needs at least 1 replica".into());
+        }
+        let mut built = Vec::with_capacity(replicas);
+        for _ in 0..replicas {
+            built.push(DynaExqShardedBackend::new(
+                preset,
+                cfg,
+                dev,
+                devices_per_replica.max(1),
+            )?);
+        }
+        Ok(Self {
+            replicas: built,
+            current: 0,
+            checker: HealthChecker::new(replicas, 1, 2),
+            faults: FaultPlan::none(),
+            round: 0,
+            last_routed: Vec::new(),
+            serial: false,
+        })
+    }
+
+    /// Script replica heartbeats (deterministic fault injection).
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Force the serial tick path — the byte-identity reference the
+    /// concurrent path is tested against.
+    pub fn set_serial(mut self, serial: bool) -> Self {
+        self.serial = serial;
+        self
+    }
+
+    /// Replica currently serving resolutions.
+    pub fn current(&self) -> usize {
+        self.current
+    }
+
+    pub fn health(&self) -> Vec<ReplicaHealth> {
+        self.checker.states().to_vec()
+    }
+
+    fn tick_all(&mut self, now_s: f64) -> Vec<f64> {
+        if self.serial || self.replicas.len() == 1 {
+            return self.replicas.iter_mut().map(|b| b.tick(now_s)).collect();
+        }
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .replicas
+                .iter_mut()
+                .map(|b| scope.spawn(move || b.tick(now_s)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("fleet replica tick panicked"))
+                .collect()
+        })
+    }
+}
+
+impl ResidencyBackend for FleetBackend {
+    fn name(&self) -> &'static str {
+        "dynaexq-fleet"
+    }
+
+    fn record_routing(&mut self, layer: usize, experts: &[usize]) {
+        if layer == 0 {
+            self.last_routed.clear();
+            self.last_routed.extend_from_slice(experts);
+        }
+        self.replicas[self.current].record_routing(layer, experts);
+    }
+
+    fn resolve(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        now_s: f64,
+    ) -> (Precision, f64) {
+        self.replicas[self.current].resolve(layer, expert, now_s)
+    }
+
+    fn tick(&mut self, now_s: f64) -> f64 {
+        for r in 0..self.replicas.len() {
+            let ok = self.faults.heartbeat_ok(r, self.round);
+            self.checker.observe(r, ok);
+        }
+        let stalls = self.tick_all(now_s);
+        let stall = stalls[self.current];
+        // Re-pick the serving replica: best hi-precision overlap with
+        // the last observed layer-0 expert set among non-Down replicas
+        // (ties to the lowest index; total outage keeps the incumbent).
+        let mut best: Option<(usize, usize)> = None;
+        for (i, b) in self.replicas.iter().enumerate() {
+            if self.checker.state(i) == ReplicaHealth::Down {
+                continue;
+            }
+            let overlap = b.resident_overlap(0, &self.last_routed);
+            if best.map(|(bo, _)| overlap > bo).unwrap_or(true) {
+                best = Some((overlap, i));
+            }
+        }
+        if let Some((_, i)) = best {
+            self.current = i;
+        }
+        self.round += 1;
+        stall
+    }
+
+    fn migrated_bytes(&self) -> u64 {
+        self.replicas.iter().map(|b| b.migrated_bytes()).sum()
+    }
+
+    fn hi_fraction(&self) -> f64 {
+        self.replicas[self.current].hi_fraction()
+    }
+
+    fn tier_fractions(&self) -> Vec<f64> {
+        self.replicas[self.current].tier_fractions()
+    }
+
+    fn tier_residency(&self) -> Vec<usize> {
+        let mut tier: Vec<usize> = Vec::new();
+        for b in &self.replicas {
+            let t = b.tier_residency();
+            if tier.len() < t.len() {
+                tier.resize(t.len(), 0);
+            }
+            for (i, n) in t.into_iter().enumerate() {
+                tier[i] += n;
+            }
+        }
+        tier
+    }
+
+    fn n_devices(&self) -> usize {
+        self.replicas[self.current].n_devices()
+    }
+
+    fn device_of(&self, layer: usize, expert: usize) -> usize {
+        self.replicas[self.current].device_of(layer, expert)
+    }
+
+    fn device_residency(&self) -> Vec<Vec<usize>> {
+        self.replicas.iter().flat_map(|b| b.device_residency()).collect()
+    }
+
+    fn promo_queue_depth(&self) -> Vec<usize> {
+        self.replicas.iter().flat_map(|b| b.promo_queue_depth()).collect()
+    }
+
+    fn drift_stats(&self) -> (u64, u64) {
+        self.replicas.iter().fold((0, 0), |acc, b| {
+            let d = b.drift_stats();
+            (acc.0 + d.0, acc.1 + d.1)
+        })
+    }
+
+    fn within_envelope(&self) -> bool {
+        self.replicas.iter().all(|b| b.within_envelope())
+    }
+
+    fn sync_staging(&mut self) {
+        for b in &mut self.replicas {
+            b.sync_staging();
+        }
+    }
+
+    fn transition_totals(&self) -> TransitionTotals {
+        let mut t = TransitionTotals::default();
+        for b in &self.replicas {
+            t.add(&b.transition_totals());
+        }
+        t
+    }
+
+    fn resident_overlap(&self, layer: usize, experts: &[usize]) -> usize {
+        self.replicas[self.current].resident_overlap(layer, experts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn health_checker_walks_degraded_to_down_and_back() {
+        let mut hc = HealthChecker::new(2, 2, 3);
+        assert_eq!(hc.state(0), ReplicaHealth::Healthy);
+        assert_eq!(hc.observe(0, false).1, ReplicaHealth::Healthy); // 1 fail
+        assert_eq!(hc.observe(0, false).1, ReplicaHealth::Degraded); // 2
+        let (before, after) = hc.observe(0, false); // 3 → Down edge
+        assert_eq!((before, after), (ReplicaHealth::Degraded, ReplicaHealth::Down));
+        assert_eq!(hc.observe(0, false).0, ReplicaHealth::Down); // stays
+        assert_eq!(hc.observe(0, true).1, ReplicaHealth::Healthy); // recovers
+        assert_eq!(hc.state(1), ReplicaHealth::Healthy, "isolated per replica");
+    }
+
+    #[test]
+    fn health_checker_draining_is_sticky_until_restore() {
+        let mut hc = HealthChecker::new(1, 1, 2);
+        hc.set_draining(0);
+        assert_eq!(hc.observe(0, true).1, ReplicaHealth::Draining);
+        assert_eq!(hc.observe(0, false).1, ReplicaHealth::Draining);
+        hc.restore(0);
+        assert_eq!(hc.state(0), ReplicaHealth::Healthy);
+        // the pre-drain failure streak was cleared by restore
+        assert_eq!(hc.observe(0, false).1, ReplicaHealth::Degraded);
+    }
+
+    #[test]
+    fn router_scores_affinity_minus_load_within_best_tier() {
+        let r = FleetRouter { affinity_weight: 1.0, load_weight: 4.0 };
+        let healthy = [ReplicaHealth::Healthy, ReplicaHealth::Healthy];
+        // equal load: higher overlap wins
+        assert_eq!(r.pick(&healthy, &[2, 7], &[1, 1]), 1);
+        // overlap cannot beat a 2-request load gap at weight 4
+        assert_eq!(r.pick(&healthy, &[7, 2], &[3, 1]), 1);
+        // ties go to the lowest index
+        assert_eq!(r.pick(&healthy, &[3, 3], &[1, 1]), 0);
+        // a Degraded replica is ineligible while a Healthy one exists…
+        let mixed = [ReplicaHealth::Degraded, ReplicaHealth::Healthy];
+        assert_eq!(r.pick(&mixed, &[100, 0], &[0, 50]), 1);
+        // …but serves when it is the best tier left
+        let worst = [ReplicaHealth::Down, ReplicaHealth::Degraded];
+        assert_eq!(r.pick(&worst, &[0, 0], &[0, 0]), 1);
+        // total outage still places the request (never dropped)
+        let out = [ReplicaHealth::Down, ReplicaHealth::Down];
+        assert_eq!(r.pick(&out, &[0, 0], &[0, 0]), 0);
+    }
+
+    #[test]
+    fn fleet_backend_concurrent_tick_matches_serial() {
+        let preset = ModelPreset::phi_sim();
+        let cfg = ServingConfig::default();
+        let dev = DeviceConfig::default();
+        let build = |serial: bool| {
+            FleetBackend::new(&preset, &cfg, &dev, 2, 2)
+                .unwrap()
+                .set_serial(serial)
+        };
+        let mut par = build(false);
+        let mut ser = build(true);
+        let mut now = 0.0;
+        for round in 0..12 {
+            let hot: Vec<usize> = (0..4).map(|i| (round + i) % 16).collect();
+            for b in [&mut par, &mut ser] {
+                b.record_routing(0, &hot);
+                b.record_routing(1, &hot);
+                for &e in &hot {
+                    b.resolve(0, e, now);
+                }
+            }
+            now += 0.06;
+            let (sp, ss) = (par.tick(now), ser.tick(now));
+            assert_eq!(sp, ss, "round {round} stall");
+        }
+        assert_eq!(par.current(), ser.current());
+        assert_eq!(par.migrated_bytes(), ser.migrated_bytes());
+        assert_eq!(par.tier_residency(), ser.tier_residency());
+        assert_eq!(par.hi_fraction(), ser.hi_fraction());
+        assert_eq!(par.transition_totals(), ser.transition_totals());
+    }
+
+    #[test]
+    fn fleet_backend_fails_over_off_a_down_replica() {
+        let preset = ModelPreset::phi_sim();
+        let cfg = ServingConfig::default();
+        let dev = DeviceConfig::default();
+        let mut b = FleetBackend::new(&preset, &cfg, &dev, 1, 2)
+            .unwrap()
+            .with_faults(FaultPlan::fail(0, 0));
+        assert_eq!(b.current(), 0);
+        let mut now = 0.0;
+        for _ in 0..3 {
+            b.record_routing(0, &[0, 1]);
+            b.resolve(0, 0, now);
+            now += 0.06;
+            b.tick(now);
+        }
+        // down_after = 2 consecutive failed heartbeats → replica 0 Down,
+        // resolutions move to replica 1
+        assert_eq!(b.health()[0], ReplicaHealth::Down);
+        assert_eq!(b.current(), 1);
+    }
+
+    #[test]
+    fn single_replica_fleet_serves_and_snapshots() {
+        let mut f = Fleet::builder()
+            .model("phi-sim")
+            .method("dynaexq")
+            .seed(9)
+            .build()
+            .unwrap();
+        assert_eq!(f.replicas(), 1);
+        let marks = f.run_scenario(&Scenario::steady(), 2, 16, 2).unwrap();
+        assert_eq!(marks.len(), 1);
+        let s = f.snapshot();
+        assert_eq!(s.fleet_replicas, 1);
+        assert_eq!(s.fleet_health, vec![0]);
+        assert_eq!(s.fleet_failovers, 0);
+        assert!(s.decode_tokens > 0);
+        assert_eq!(MetricsSnapshot::decode(&s.encode()).unwrap(), s);
+        // the per-replica view keeps the fleet fields at defaults
+        let r0 = f.replica_snapshot(0);
+        assert_eq!(r0.fleet_replicas, 0);
+        assert_eq!(r0.decode_tokens, s.decode_tokens);
+    }
+
+    #[test]
+    fn builder_validates_fleet_config_and_names() {
+        let mut bad = FleetConfig::default();
+        bad.replicas = 0;
+        let err =
+            Fleet::builder().fleet_cfg(bad).build().unwrap_err().to_string();
+        assert!(err.contains("replicas"), "{err}");
+        let err =
+            Fleet::builder().model("gpt5").build().unwrap_err().to_string();
+        assert!(err.contains("qwen30b-sim"), "{err}");
+        let err = Fleet::builder()
+            .method("magic")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("dynaexq"), "{err}");
+    }
+}

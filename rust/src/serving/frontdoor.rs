@@ -97,6 +97,7 @@ pub struct FrontDoorStats {
     deadline_infeasible: AtomicU64,
     soft_overages: AtomicU64,
     demoted: AtomicU64,
+    readmitted: AtomicU64,
 }
 
 impl FrontDoorStats {
@@ -133,6 +134,13 @@ impl FrontDoorStats {
     /// Admissions demoted to the batch lane by [`LimitAction::Demote`].
     pub fn demoted(&self) -> u64 {
         self.demoted.load(Relaxed)
+    }
+
+    /// Mid-stream failover re-admissions ([`FrontDoor::readmit`]) — these
+    /// are *not* counted in the per-lane `admitted` totals (the request
+    /// was admitted exactly once, at first submission).
+    pub fn readmitted(&self) -> u64 {
+        self.readmitted.load(Relaxed)
     }
 }
 
@@ -288,14 +296,20 @@ impl FrontDoor {
         if occupancy >= limits.hard_limit {
             return Err(self.reject_with(ten, lane, Rejected::TenantOverLimit));
         }
+        // Soft-limit outcomes are *decided* here but only *counted* at
+        // actual admission: a demoted submission that the queue bound or
+        // deadline check then rejects must not inflate the soft-overage /
+        // demotion counters (it never landed in any lane).
         let mut lane = lane;
+        let mut soft_overage = false;
+        let mut demoted = false;
         if occupancy >= limits.soft_limit {
-            self.stats.soft_overages.fetch_add(1, Relaxed);
+            soft_overage = true;
             match limits.soft_action {
                 LimitAction::Warn => {}
                 LimitAction::Demote => {
                     if lane != Lane::Batch {
-                        self.stats.demoted.fetch_add(1, Relaxed);
+                        demoted = true;
                         lane = Lane::Batch;
                     }
                 }
@@ -323,10 +337,36 @@ impl FrontDoor {
                 ));
             }
         }
+        if soft_overage {
+            self.stats.soft_overages.fetch_add(1, Relaxed);
+        }
+        if demoted {
+            self.stats.demoted.fetch_add(1, Relaxed);
+        }
         ten.queued.fetch_add(1, Relaxed);
         self.stats.lanes[lane.index()].admitted.fetch_add(1, Relaxed);
         queue.push(QueuedRequest { req, tenant: t, lane, deadline_s });
         Ok(())
+    }
+
+    /// Failover re-admission (DESIGN.md §14): return a request that was
+    /// already admitted once — and whose replica died mid-stream — to the
+    /// queue under its original tenant and effective lane. Unlike
+    /// [`FrontDoor::submit`] this is **never rejected and never
+    /// re-counted**: the request passed admission control when it first
+    /// arrived, so the queue bound, tenant limits, per-lane `admitted`
+    /// counters, and soft-limit counters are all bypassed — only the
+    /// dedicated `readmitted` counter moves. Exactly-once completion
+    /// across failover depends on this path never dropping a request.
+    pub fn readmit(&self, req: Request, tenant: &str, lane: Lane) {
+        let t = self.tenant_id(tenant);
+        let tenants = self.tenants.read().unwrap();
+        let ten = &tenants.list[t];
+        let mut queue = self.queue.lock().unwrap();
+        let deadline_s = self.cfg.deadline(lane, req.arrival_s);
+        ten.queued.fetch_add(1, Relaxed);
+        self.stats.readmitted.fetch_add(1, Relaxed);
+        queue.push(QueuedRequest { req, tenant: t, lane, deadline_s });
     }
 
     /// Drain the queue: every queued request leaves, paired with an
@@ -336,6 +376,18 @@ impl FrontDoor {
     /// [`FrontDoor::absorb`]. The queue lock is held only for the
     /// `mem::take` — producers stall for a pointer swap, not the drain.
     pub fn take_scheduled(&self) -> (SloScheduler, Vec<Request>) {
+        let (queued, served) = self.take_queued();
+        self.scheduler_for(queued, served)
+    }
+
+    /// The raw half of [`FrontDoor::take_scheduled`]: empty the queue and
+    /// snapshot the cumulative fair-share history, without building a
+    /// scheduler. The fleet router partitions the returned batch across
+    /// replicas and builds one per-replica scheduler per subset via
+    /// [`FrontDoor::scheduler_for`]; a single-replica caller that feeds
+    /// the whole batch straight back is byte-identical to
+    /// `take_scheduled`.
+    pub fn take_queued(&self) -> (Vec<QueuedRequest>, Vec<u64>) {
         let queued = std::mem::take(&mut *self.queue.lock().unwrap());
         let tenants = self.tenants.read().unwrap();
         for q in &queued {
@@ -343,8 +395,20 @@ impl FrontDoor {
         }
         let served: Vec<u64> =
             tenants.list.iter().map(|t| t.served.load(Relaxed)).collect();
-        drop(tenants);
-        let sched = SloScheduler::for_queued(self.cfg.clone(), &queued, served);
+        (queued, served)
+    }
+
+    /// Build the drain pair for a (possibly partitioned) queued batch:
+    /// an [`SloScheduler`] tagged with the batch's lane/deadline/tenant
+    /// metadata and seeded with `base_served`, plus the bare requests in
+    /// queue order.
+    pub fn scheduler_for(
+        &self,
+        queued: Vec<QueuedRequest>,
+        base_served: Vec<u64>,
+    ) -> (SloScheduler, Vec<Request>) {
+        let sched =
+            SloScheduler::for_queued(self.cfg.clone(), &queued, base_served);
         let reqs = queued.into_iter().map(|q| q.req).collect();
         (sched, reqs)
     }
@@ -672,6 +736,75 @@ mod tests {
         let (sched, reqs) = fd.take_scheduled();
         let demoted = sched.tags.get(&reqs[1].id).unwrap();
         assert_eq!(demoted.lane, Lane::Batch);
+    }
+
+    #[test]
+    fn demoted_then_rejected_submission_counts_nothing() {
+        // The soft limit demotes, but the queue is already full: the
+        // rejection must not bump soft_overages/demoted — the request
+        // never landed in any lane.
+        let cfg = FrontDoorConfig {
+            queue_capacity: 1,
+            tenant_limits: TenantLimits {
+                soft_limit: 1,
+                soft_action: LimitAction::Demote,
+                hard_limit: 10,
+            },
+            ..FrontDoorConfig::default()
+        };
+        let fd = FrontDoor::new(cfg).unwrap();
+        let mut g = gen();
+        fd.submit(g.request(8, 2, 0.0), "a", Lane::Interactive, 0.0).unwrap();
+        assert_eq!(
+            fd.submit(g.request(8, 2, 0.0), "a", Lane::Interactive, 0.0),
+            Err(Rejected::QueueFull)
+        );
+        assert_eq!(fd.stats().soft_overages(), 0);
+        assert_eq!(fd.stats().demoted(), 0);
+        // the rejection is charged to the effective (demoted) lane
+        assert_eq!(fd.stats().lane_rejected(), vec![0, 0, 1]);
+        assert_eq!(fd.stats().lane_admitted(), vec![1, 0, 0]);
+    }
+
+    #[test]
+    fn readmit_bypasses_admission_counters_and_never_drops() {
+        let cfg = FrontDoorConfig {
+            queue_capacity: 1,
+            ..FrontDoorConfig::default()
+        };
+        let fd = FrontDoor::new(cfg).unwrap();
+        let mut g = gen();
+        fd.submit(g.request(8, 2, 0.0), "a", Lane::Interactive, 0.0).unwrap();
+        // queue at capacity, but a failover re-admission is never dropped
+        // and never double-counts the lane admission
+        fd.readmit(g.request(8, 2, 0.0), "a", Lane::Interactive);
+        assert_eq!(fd.depth(), 2);
+        assert_eq!(fd.stats().readmitted(), 1);
+        assert_eq!(fd.stats().lane_admitted(), vec![1, 0, 0]);
+        let (sched, reqs) = fd.take_scheduled();
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(fd.depth(), 0);
+        // tenant queued-occupancy balanced: a fresh submission is
+        // admitted again, not soft-limited by a phantom count
+        drop(sched);
+        fd.submit(g.request(8, 2, 0.0), "a", Lane::Standard, 0.0).unwrap();
+        assert_eq!(fd.depth(), 1);
+    }
+
+    #[test]
+    fn take_queued_halves_compose_to_take_scheduled() {
+        let fd = FrontDoor::new(FrontDoorConfig::default()).unwrap();
+        let mut g = gen();
+        for i in 0..4 {
+            fd.submit(g.request(8, 2, 0.0), "a", Lane::ALL[i % 3], 0.0)
+                .unwrap();
+        }
+        let (queued, served) = fd.take_queued();
+        assert_eq!(queued.len(), 4);
+        assert_eq!(fd.depth(), 0);
+        let (sched, reqs) = fd.scheduler_for(queued, served);
+        assert_eq!(reqs.len(), 4);
+        assert_eq!(sched.served_by_tenant.len(), 1);
     }
 
     #[test]

@@ -15,6 +15,12 @@
 //!   accounting and priority lanes, surfacing backpressure as typed
 //!   [`frontdoor::Rejected`] values, paired with the SLO-aware
 //!   [`frontdoor::SloScheduler`].
+//! * [`fleet::Fleet`] — fleet-scale replication (DESIGN.md §14): N
+//!   engine replicas behind one shared front door, with load/affinity
+//!   routing ([`fleet::FleetRouter`]), a deterministic modeled health
+//!   checker ([`fleet::HealthChecker`] driven by scripted
+//!   [`crate::workload::FaultPlan`] heartbeats), and mid-stream failover
+//!   that re-admits stranded requests with token position preserved.
 //! * [`engine::Engine`] — the **modeled** serving engine: full continuous-
 //!   batching loop over the device cost model (paper-scale dims), used by
 //!   every performance experiment (TTFT/TPOP/latency/throughput sweeps).
@@ -30,6 +36,7 @@
 
 pub mod backend;
 pub mod engine;
+pub mod fleet;
 pub mod frontdoor;
 pub mod kv_cache;
 #[cfg(feature = "numeric")]
@@ -40,6 +47,10 @@ pub mod session;
 
 pub use backend::ResidencyBackend;
 pub use engine::{ActiveRequest, Engine, EngineConfig};
+pub use fleet::{
+    Fleet, FleetBackend, FleetBuilder, FleetRouter, FleetStats,
+    HealthChecker, ReplicaHealth,
+};
 pub use frontdoor::{FrontDoor, Rejected, SloScheduler};
 #[cfg(feature = "numeric")]
 pub use numeric::NumericEngine;

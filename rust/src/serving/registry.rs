@@ -24,6 +24,9 @@
 //! | `static-hi`             | uniform top-rung PTQ (quality reference tier)          |
 //! | `fp16`                  | uniform FP16 (quality reference, Table 4)              |
 //! | `static-map`            | offline-calibrated per-expert map (MxMoE/MoPEQ class)  |
+//! | `dynaexq-fleet`         | replicated sharded stacks behind one backend face      |
+//! |                         | (replica count from `BackendCtx::replicas`; heartbeat  |
+//! |                         | failover re-picks the serving replica — DESIGN.md §14) |
 //! | `expertflow`            | offloading/prefetching comparator (paper §5.3)         |
 //! | `hobbit`                | reactive mixed-precision offloading (HOBBIT class)     |
 //! | `counting`              | fixed precision + routing-count recording (calibration)|
@@ -41,6 +44,7 @@ use super::backend::{
     CountingBackend, DynaExqBackend, DynaExqShardedBackend, ResidencyBackend,
     StaticBackend,
 };
+use super::fleet::FleetBackend;
 
 /// Everything a backend factory may consult.
 ///
@@ -61,6 +65,9 @@ pub struct BackendCtx<'a> {
     /// `dynaexq-3tier-sharded`); single-device methods ignore it. A
     /// 1-device group is the exact single-GPU system.
     pub n_devices: usize,
+    /// Replica count for fleet methods (`dynaexq-fleet`); non-replicated
+    /// methods ignore it. A 1-replica fleet is the exact sharded system.
+    pub replicas: usize,
 }
 
 impl<'a> BackendCtx<'a> {
@@ -76,6 +83,7 @@ impl<'a> BackendCtx<'a> {
             profile: None,
             calib_counts: None,
             n_devices: 1,
+            replicas: 1,
         }
     }
 
@@ -91,6 +99,11 @@ impl<'a> BackendCtx<'a> {
 
     pub fn with_devices(mut self, n_devices: usize) -> Self {
         self.n_devices = n_devices;
+        self
+    }
+
+    pub fn with_replicas(mut self, replicas: usize) -> Self {
+        self.replicas = replicas;
         self
     }
 }
@@ -184,6 +197,19 @@ impl BackendRegistry {
                 ctx.cfg,
                 ctx.dev,
                 ctx.n_devices,
+            )?))
+        });
+        r.register("dynaexq-fleet", |ctx| {
+            // Backend-level replication (DESIGN.md §14): ctx.replicas
+            // sharded stacks behind one ResidencyBackend face; routing
+            // hits the current replica, heartbeat failover re-picks it by
+            // hot-set overlap. A 1-replica fleet is the sharded system.
+            Ok(Box::new(FleetBackend::new(
+                ctx.preset,
+                ctx.cfg,
+                ctx.dev,
+                ctx.n_devices,
+                ctx.replicas.max(1),
             )?))
         });
         r.register("expertflow", |ctx| {
@@ -311,7 +337,7 @@ mod tests {
     fn builds_every_builtin() {
         let (p, cfg, dev) = ctx_parts();
         let r = BackendRegistry::with_builtins();
-        assert_eq!(r.methods().len(), 12);
+        assert_eq!(r.methods().len(), 13);
         for m in r.methods() {
             let b = r.build(m, &BackendCtx::new(&p, &cfg, &dev)).unwrap();
             assert!(!b.name().is_empty(), "{m}");

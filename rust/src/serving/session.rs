@@ -321,6 +321,22 @@ pub struct MetricsSnapshot {
     /// Served requests whose TTFT blew the lane's SLO deadline (same
     /// order/encoding).
     pub fd_lane_deadline_miss: Vec<u64>,
+    /// Replica count of the fleet the snapshot aggregates (0 for
+    /// non-fleet sessions and per-replica views — DESIGN.md §14).
+    pub fleet_replicas: u64,
+    /// Per-replica health at snapshot time, `ReplicaHealth::code` values
+    /// (0 healthy, 1 degraded, 2 down, 3 draining). Encoded `a|b`; empty
+    /// without a fleet.
+    pub fleet_health: Vec<u64>,
+    /// Engine admissions per replica (readmissions after failover land
+    /// on the replica that finished the stream). Same encoding.
+    pub fleet_served: Vec<u64>,
+    /// Replica drain events that stranded in-flight work (Down
+    /// transitions and administrative drains).
+    pub fleet_failovers: u64,
+    /// Requests re-admitted through the front door with token position
+    /// preserved.
+    pub fleet_readmitted: u64,
 }
 
 impl MetricsSnapshot {
@@ -351,7 +367,8 @@ impl MetricsSnapshot {
              tier_resident={};device_resident={};promo_queue_depth={};\
              drift_events={};drift_recovery_ticks={};fd_queue_depth={};\
              fd_lane_admitted={};fd_lane_rejected={};\
-             fd_lane_deadline_miss={}",
+             fd_lane_deadline_miss={};fleet_replicas={};fleet_health={};\
+             fleet_served={};fleet_failovers={};fleet_readmitted={}",
             self.model,
             self.method,
             self.workload,
@@ -387,6 +404,11 @@ impl MetricsSnapshot {
             Self::encode_u64_list(&self.fd_lane_admitted),
             Self::encode_u64_list(&self.fd_lane_rejected),
             Self::encode_u64_list(&self.fd_lane_deadline_miss),
+            self.fleet_replicas,
+            Self::encode_u64_list(&self.fleet_health),
+            Self::encode_u64_list(&self.fleet_served),
+            self.fleet_failovers,
+            self.fleet_readmitted,
         )
     }
 
@@ -481,6 +503,17 @@ impl MetricsSnapshot {
                 &text("fd_lane_deadline_miss")?,
                 "fd_lane_deadline_miss",
             )?,
+            fleet_replicas: num(&m, "fleet_replicas")?,
+            fleet_health: Self::decode_u64_list(
+                &text("fleet_health")?,
+                "fleet_health",
+            )?,
+            fleet_served: Self::decode_u64_list(
+                &text("fleet_served")?,
+                "fleet_served",
+            )?,
+            fleet_failovers: num(&m, "fleet_failovers")?,
+            fleet_readmitted: num(&m, "fleet_readmitted")?,
         })
     }
 
@@ -775,6 +808,9 @@ impl ServeSession {
             fd_lane_admitted: fd_adm,
             fd_lane_rejected: fd_rej,
             fd_lane_deadline_miss: fd_miss,
+            // fleet_* fields stay at their defaults: a bare session is
+            // not a fleet (Fleet::snapshot fills them — DESIGN.md §14)
+            ..MetricsSnapshot::default()
         }
     }
 
@@ -1127,11 +1163,16 @@ mod tests {
             fd_lane_admitted: vec![10, 20, 30],
             fd_lane_rejected: vec![1, 0, 2],
             fd_lane_deadline_miss: vec![0, 0, 4],
+            fleet_replicas: 2,
+            fleet_health: vec![0, 2],
+            fleet_served: vec![41, 19],
+            fleet_failovers: 1,
+            fleet_readmitted: 3,
         };
         let decoded = MetricsSnapshot::decode(&s.encode()).unwrap();
         assert_eq!(decoded, s);
         // backends without a residency table (and sessions without a
-        // front door) encode empty lists
+        // front door or fleet) encode empty lists
         let mut none = s.clone();
         none.tier_resident = Vec::new();
         none.device_resident = Vec::new();
@@ -1139,6 +1180,8 @@ mod tests {
         none.fd_lane_admitted = Vec::new();
         none.fd_lane_rejected = Vec::new();
         none.fd_lane_deadline_miss = Vec::new();
+        none.fleet_health = Vec::new();
+        none.fleet_served = Vec::new();
         assert_eq!(MetricsSnapshot::decode(&none.encode()).unwrap(), none);
     }
 
@@ -1210,6 +1253,15 @@ mod tests {
                 fd_lane_deadline_miss: (0..rng.below(4))
                     .map(|_| rng.next_u64() % 10_000)
                     .collect(),
+                fleet_replicas: rng.next_u64() % 8,
+                fleet_health: (0..rng.below(4))
+                    .map(|_| rng.next_u64() % 4)
+                    .collect(),
+                fleet_served: (0..rng.below(4))
+                    .map(|_| rng.next_u64() % 10_000)
+                    .collect(),
+                fleet_failovers: rng.next_u64() % 100,
+                fleet_readmitted: rng.next_u64() % 1000,
             };
             assert_eq!(MetricsSnapshot::decode(&s.encode()).unwrap(), s);
         });

@@ -31,13 +31,15 @@ pub fn mean(xs: &[f64]) -> f64 {
 }
 
 /// p-th percentile (nearest-rank: `⌈p/100·n⌉`-th smallest) of an unsorted
-/// slice; 0.0 when empty.
+/// slice; 0.0 when empty. Non-finite samples (NaN/±inf) are excluded
+/// before ranking — a lane with zero traffic or a poisoned sample must
+/// never leak NaN into a report (the bench schema rejects it).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
     v[rank.clamp(1, v.len()) - 1]
 }
@@ -72,6 +74,25 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 100.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_never_emits_non_finite() {
+        // Empty input is 0.0 by contract (a lane with no traffic), and
+        // non-finite samples neither panic the sort nor poison the rank.
+        assert_eq!(percentile(&[], 95.0), 0.0);
+        assert_eq!(percentile(&[f64::NAN], 50.0), 0.0);
+        assert_eq!(
+            percentile(&[f64::NAN, 2.0, 1.0, f64::INFINITY], 50.0),
+            1.0
+        );
+        assert_eq!(
+            percentile(&[f64::NEG_INFINITY, 3.0, f64::NAN], 100.0),
+            3.0
+        );
+        for p in [0.0, 50.0, 95.0, 100.0] {
+            assert!(percentile(&[f64::NAN, f64::INFINITY], p).is_finite());
+        }
     }
 
     #[test]

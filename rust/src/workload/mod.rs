@@ -29,5 +29,5 @@ pub mod traces;
 pub use profile::WorkloadProfile;
 pub use request::{Request, RequestGenerator};
 pub use sampler::RoutingSampler;
-pub use scenario::{Scenario, ScenarioPhase};
+pub use scenario::{FaultEvent, FaultKind, FaultPlan, Scenario, ScenarioPhase};
 pub use traces::{Trace, TraceEvent};

@@ -50,17 +50,142 @@ pub struct ScenarioPhase {
     pub lane: Lane,
 }
 
+/// What a scripted fault does to a replica's heartbeat.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Heartbeats start failing at the event round (and keep failing
+    /// until a matching [`FaultKind::Recover`]).
+    Fail,
+    /// Heartbeats succeed again from the event round on.
+    Recover,
+}
+
+/// One scripted fault: `replica`'s heartbeat flips at `round`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Fleet replica index the event targets.
+    pub replica: usize,
+    /// Serve round (0-based, fleet-wide) the event takes effect at.
+    pub round: usize,
+    pub kind: FaultKind,
+}
+
+/// A deterministic fault-injection script for fleet scenarios
+/// (DESIGN.md §14): a list of heartbeat flips per replica per round.
+/// The fleet's modeled health checker polls
+/// [`FaultPlan::heartbeat_ok`] once per replica per serve round — no
+/// wall clock, no randomness at poll time — so a fixed plan yields a
+/// byte-stable failover trajectory.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// No faults — every heartbeat succeeds (the default).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// One replica fails at one round and stays down.
+    pub fn fail(replica: usize, round: usize) -> Self {
+        Self {
+            events: vec![FaultEvent { replica, round, kind: FaultKind::Fail }],
+        }
+    }
+
+    /// Append a recovery for `replica` at `round`.
+    pub fn and_recover(mut self, replica: usize, round: usize) -> Self {
+        self.events.push(FaultEvent {
+            replica,
+            round,
+            kind: FaultKind::Recover,
+        });
+        self
+    }
+
+    /// Append an arbitrary event.
+    pub fn push(&mut self, event: FaultEvent) {
+        self.events.push(event);
+    }
+
+    /// Seeded random plan: `n_faults` fail/recover pairs over `replicas`
+    /// replicas and `rounds` rounds, reproducible from `seed` (stress
+    /// harnesses sweep seeds; each seed is one fixed plan).
+    pub fn seeded(
+        seed: u64,
+        replicas: usize,
+        rounds: usize,
+        n_faults: usize,
+    ) -> Self {
+        let mut rng = XorShiftRng::new(seed ^ 0xFA17);
+        let mut plan = Self::none();
+        if replicas == 0 || rounds == 0 {
+            return plan;
+        }
+        for _ in 0..n_faults {
+            let replica = rng.below(replicas);
+            let round = rng.below(rounds);
+            plan.push(FaultEvent { replica, round, kind: FaultKind::Fail });
+            let back = round + 1 + rng.below(rounds.max(1));
+            plan.push(FaultEvent {
+                replica,
+                round: back,
+                kind: FaultKind::Recover,
+            });
+        }
+        plan
+    }
+
+    /// Whether `replica`'s heartbeat succeeds at `round`: the latest
+    /// event at or before `round` decides (later list position wins ties
+    /// at the same round); with no applicable event the heartbeat is
+    /// healthy.
+    pub fn heartbeat_ok(&self, replica: usize, round: usize) -> bool {
+        let mut ok = true;
+        let mut best: Option<usize> = None;
+        for ev in &self.events {
+            if ev.replica != replica || ev.round > round {
+                continue;
+            }
+            if best.map(|b| ev.round >= b).unwrap_or(true) {
+                best = Some(ev.round);
+                ok = ev.kind == FaultKind::Recover;
+            }
+        }
+        ok
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
 /// A named script of phases.
 #[derive(Clone, Debug)]
 pub struct Scenario {
     pub name: String,
     pub phases: Vec<ScenarioPhase>,
+    /// Scripted replica faults applied when the scenario drives a fleet
+    /// (`Fleet::run_scenario` — DESIGN.md §14); single-session paths
+    /// ignore it. Empty by default.
+    pub faults: FaultPlan,
 }
 
 impl Scenario {
     /// An empty scenario to compose phases onto.
     pub fn named(name: &str) -> Self {
-        Self { name: name.to_string(), phases: Vec::new() }
+        Self {
+            name: name.to_string(),
+            phases: Vec::new(),
+            faults: FaultPlan::none(),
+        }
+    }
+
+    /// Attach a fault-injection plan (fleet consumers only).
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
     }
 
     /// Append a unit-load phase.
@@ -393,5 +518,64 @@ mod tests {
         }
         // loads 0.5/1/2/1/0.5 at base batch 4, top_k 2 → 4/8/16/8/4
         assert_eq!(per_tick, vec![4, 4, 8, 8, 16, 16, 8, 8, 4, 4]);
+    }
+
+    #[test]
+    fn fault_plan_heartbeat_semantics() {
+        let none = FaultPlan::none();
+        assert!(none.is_empty());
+        assert!(none.heartbeat_ok(0, 0));
+        assert!(none.heartbeat_ok(3, 100));
+
+        let plan = FaultPlan::fail(1, 4);
+        assert!(plan.heartbeat_ok(1, 3)); // before the event
+        assert!(!plan.heartbeat_ok(1, 4)); // at the event
+        assert!(!plan.heartbeat_ok(1, 50)); // stays down
+        assert!(plan.heartbeat_ok(0, 4)); // other replicas unaffected
+
+        let plan = plan.and_recover(1, 8);
+        assert!(!plan.heartbeat_ok(1, 7));
+        assert!(plan.heartbeat_ok(1, 8));
+        assert!(plan.heartbeat_ok(1, 9));
+    }
+
+    #[test]
+    fn fault_plan_same_round_later_event_wins() {
+        let mut plan = FaultPlan::fail(0, 2);
+        plan.push(FaultEvent { replica: 0, round: 2, kind: FaultKind::Recover });
+        assert!(plan.heartbeat_ok(0, 2));
+        assert!(plan.heartbeat_ok(0, 3));
+    }
+
+    #[test]
+    fn seeded_fault_plan_is_deterministic() {
+        let a = FaultPlan::seeded(42, 3, 16, 4);
+        let b = FaultPlan::seeded(42, 3, 16, 4);
+        assert_eq!(a, b);
+        assert_eq!(a.events.len(), 8); // fail + recover per fault
+        for ev in &a.events {
+            assert!(ev.replica < 3);
+        }
+        // every failed replica eventually recovers
+        for ev in a.events.iter().filter(|e| e.kind == FaultKind::Fail) {
+            assert!(a
+                .events
+                .iter()
+                .any(|r| r.kind == FaultKind::Recover
+                    && r.replica == ev.replica
+                    && r.round > ev.round));
+        }
+        // degenerate dimensions yield an empty plan, not a panic
+        assert!(FaultPlan::seeded(42, 0, 16, 4).is_empty());
+        assert!(FaultPlan::seeded(42, 3, 0, 4).is_empty());
+    }
+
+    #[test]
+    fn scenario_carries_faults() {
+        let sc = Scenario::steady();
+        assert!(sc.faults.is_empty());
+        let sc = sc.with_faults(FaultPlan::fail(0, 3));
+        assert!(!sc.faults.heartbeat_ok(0, 3));
+        assert!(sc.faults.heartbeat_ok(0, 2));
     }
 }

@@ -1,0 +1,224 @@
+//! Property tests for fleet-scale replicated serving (DESIGN.md §14):
+//! the 1-replica byte-identity anchor against a bare front-doored
+//! session, exactly-once completion across scripted mid-stream failover,
+//! parallel-drain determinism, and elastic drain/restore.
+
+use dynaexq::config::fleet::FleetConfig;
+use dynaexq::config::frontdoor::{FrontDoorConfig, Lane};
+use dynaexq::serving::fleet::Fleet;
+use dynaexq::serving::session::MetricsSnapshot;
+use dynaexq::testutil::prop::Prop;
+use dynaexq::workload::{
+    FaultPlan, RequestGenerator, Scenario, WorkloadProfile,
+};
+use dynaexq::ServeSession;
+
+/// Strip the fleet-level fields so a fleet snapshot can be compared
+/// byte-for-byte against a bare session snapshot (which leaves them at
+/// their defaults).
+fn without_fleet_fields(snap: &MetricsSnapshot) -> MetricsSnapshot {
+    let mut s = snap.clone();
+    s.fleet_replicas = 0;
+    s.fleet_health = Vec::new();
+    s.fleet_served = Vec::new();
+    s.fleet_failovers = 0;
+    s.fleet_readmitted = 0;
+    s
+}
+
+#[test]
+fn prop_one_replica_fleet_reproduces_bare_session_byte_for_byte() {
+    // A 1-replica, no-fault, un-chunked fleet is the same machine as a
+    // bare front-doored session: same generator seeding, same engine
+    // seed, same admission/drain loop. Every phase mark must match
+    // byte-for-byte once the fleet-only fields are stripped.
+    let mut prop = Prop::new("fleet_one_replica_identity");
+    prop.run(6, |rng| {
+        let seed = rng.next_u64();
+        let batch = 1 + rng.below(4);
+        let output = 1 + rng.below(3);
+        let sc = if rng.below(2) == 0 {
+            Scenario::steady()
+        } else {
+            Scenario::swap()
+        };
+
+        let mut session = ServeSession::builder()
+            .model("phi-sim")
+            .method("dynaexq")
+            .workload("text")
+            .seed(seed)
+            .warmup(1)
+            .frontdoor(FrontDoorConfig::default())
+            .build()
+            .unwrap();
+        let mut fleet = Fleet::builder()
+            .model("phi-sim")
+            .method("dynaexq")
+            .workload("text")
+            .seed(seed)
+            .warmup(1)
+            .replicas(1)
+            .build()
+            .unwrap();
+
+        let want = session.run_scenario_frontdoor(&sc, batch, 16, output).unwrap();
+        let got = fleet.run_scenario(&sc, batch, 16, output).unwrap();
+        assert_eq!(want.len(), got.len());
+        for ((wn, ws), (gn, gs)) in want.iter().zip(&got) {
+            assert_eq!(wn, gn);
+            assert_eq!(gs.fleet_replicas, 1, "{gn}");
+            assert_eq!(gs.fleet_health, vec![0], "{gn}");
+            assert_eq!(gs.fleet_failovers, 0, "{gn}");
+            assert_eq!(
+                without_fleet_fields(gs).encode(),
+                ws.encode(),
+                "phase {gn} diverged from the bare session"
+            );
+        }
+        // the per-replica view is the bare-session shape directly
+        assert_eq!(
+            fleet.replica_snapshot(0).encode(),
+            session.snapshot().encode()
+        );
+    });
+}
+
+#[test]
+fn two_replica_midstream_failover_completes_every_request_exactly_once() {
+    // Chunked streaming keeps requests in flight across serve rounds;
+    // the scripted fault downs replica 0 while it still holds streams.
+    // Exactly-once across failover: every admitted request's full
+    // output lands in the decode counters — no token lost to the dead
+    // replica, none generated twice — and the whole run is byte-stable.
+    let output = 6usize;
+    let run = || -> (Fleet, Vec<(String, MetricsSnapshot)>) {
+        let mut fleet = Fleet::builder()
+            .model("phi-sim")
+            .method("dynaexq")
+            .seed(0xFEE7)
+            .warmup(0)
+            .fleet_cfg(FleetConfig {
+                replicas: 2,
+                stream_chunk: Some(1),
+                ..FleetConfig::default()
+            })
+            .build()
+            .unwrap();
+        let sc = Scenario::steady().with_faults(FaultPlan::fail(0, 2));
+        let marks = fleet.run_scenario(&sc, 4, 16, output).unwrap();
+        (fleet, marks)
+    };
+    let (fleet, marks) = run();
+    let snap = fleet.snapshot();
+    let stats = fleet.stats();
+
+    // the fault script actually fired: replica 0 is Down, its streams
+    // failed over to replica 1
+    assert_eq!(snap.fleet_health, vec![2, 0]);
+    assert!(stats.failovers >= 1, "no failover edge: {stats:?}");
+    assert!(stats.readmitted > 0, "no stream was in flight at the edge");
+    assert_eq!(snap.fleet_readmitted, stats.readmitted);
+
+    // exactly-once: nothing queued, nothing in flight, decode tokens
+    // equal admitted requests × output length (readmission bypasses the
+    // admitted counters, so double service would overshoot)
+    assert_eq!(fleet.in_flight(), 0);
+    assert_eq!(snap.fd_queue_depth, 0);
+    let admitted: u64 = snap.fd_lane_admitted.iter().sum();
+    assert!(admitted > 0);
+    assert_eq!(snap.fd_lane_rejected.iter().sum::<u64>(), 0);
+    assert_eq!(snap.decode_tokens, admitted * output as u64);
+    // both replicas did real work
+    assert!(snap.fleet_served.iter().all(|&n| n > 0), "{:?}", snap.fleet_served);
+
+    // byte-stable: an identical second run reproduces every mark and
+    // the final snapshot, and the kv encoding round-trips
+    let (fleet2, marks2) = run();
+    assert_eq!(fleet2.snapshot().encode(), snap.encode());
+    assert_eq!(marks.len(), marks2.len());
+    for ((_, a), (_, b)) in marks.iter().zip(&marks2) {
+        assert_eq!(a.encode(), b.encode());
+    }
+    let rt = MetricsSnapshot::decode(&snap.encode()).unwrap();
+    assert_eq!(rt, snap);
+}
+
+#[test]
+fn prop_parallel_drain_is_byte_identical_to_serial() {
+    // `parallel_drain` serves replicas on threads; folding outcomes in
+    // replica-index order must make it indistinguishable from the
+    // serial loop — including under failover and chunked streaming.
+    let mut prop = Prop::new("fleet_parallel_serial_identity");
+    prop.run(4, |rng| {
+        let seed = rng.next_u64();
+        let chunk = if rng.below(2) == 0 { None } else { Some(1 + rng.below(2)) };
+        let faults = if rng.below(2) == 0 {
+            FaultPlan::none()
+        } else {
+            FaultPlan::fail(rng.below(2), 1 + rng.below(3))
+        };
+        let mut run = |parallel: bool| -> String {
+            let mut fleet = Fleet::builder()
+                .model("phi-sim")
+                .method("dynaexq")
+                .seed(seed)
+                .warmup(0)
+                .fleet_cfg(FleetConfig {
+                    replicas: 2,
+                    stream_chunk: chunk,
+                    parallel_drain: parallel,
+                    ..FleetConfig::default()
+                })
+                .faults(faults.clone())
+                .build()
+                .unwrap();
+            fleet.run_scenario(&Scenario::steady(), 3, 16, 4).unwrap();
+            fleet.snapshot().encode()
+        };
+        assert_eq!(run(false), run(true));
+    });
+}
+
+#[test]
+fn drain_and_restore_shift_traffic_between_replicas() {
+    let mut fleet = Fleet::builder()
+        .model("phi-sim")
+        .method("dynaexq")
+        .seed(3)
+        .warmup(0)
+        .replicas(2)
+        .build()
+        .unwrap();
+    let mut gen = RequestGenerator::new(WorkloadProfile::text(), 7);
+
+    // replica 0 drains: it must take no new work while out of rotation
+    fleet.drain_replica(0);
+    assert_eq!(fleet.snapshot().fleet_health, vec![3, 0]);
+    for _ in 0..2 {
+        let now = fleet.now();
+        for _ in 0..4 {
+            fleet.submit(gen.request(16, 2, now), "a", Lane::Standard).unwrap();
+        }
+        fleet.drain().unwrap();
+    }
+    let served = fleet.snapshot().fleet_served;
+    assert_eq!(served[0], 0, "draining replica was routed work: {served:?}");
+    assert_eq!(served[1], 8);
+
+    // restored, it rejoins the rotation (ties break toward index 0)
+    fleet.restore_replica(0);
+    assert_eq!(fleet.snapshot().fleet_health, vec![0, 0]);
+    for _ in 0..2 {
+        let now = fleet.now();
+        for _ in 0..4 {
+            fleet.submit(gen.request(16, 2, now), "a", Lane::Standard).unwrap();
+        }
+        fleet.drain().unwrap();
+    }
+    let served = fleet.snapshot().fleet_served;
+    assert!(served[0] > 0, "restored replica never served: {served:?}");
+    assert_eq!(served.iter().sum::<u64>(), 16);
+    assert_eq!(fleet.in_flight(), 0);
+    assert_eq!(fleet.stats().readmitted, 0);
+}

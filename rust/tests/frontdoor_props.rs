@@ -223,6 +223,103 @@ fn prop_token_conservation_through_session_submit_drain() {
 }
 
 #[test]
+fn prop_demote_accounting_matches_reference_model() {
+    // Random bounded configs under `LimitAction::Demote`, random
+    // submission scripts with interleaved drains: the door's counters
+    // must track a straight-line reference model of the documented
+    // check order (hard limit → soft demote → queue bound), with
+    // soft-overage/demotion counted only on actual admission and
+    // rejections charged to the *effective* (post-demotion) lane.
+    // This pins the accounting fix: a demoted-then-rejected submission
+    // must move no admission-side counter.
+    let mut prop = Prop::new("frontdoor_demote_accounting");
+    prop.run(10, |rng| {
+        let soft = 1 + rng.below(3);
+        let cfg = FrontDoorConfig {
+            queue_capacity: 1 + rng.below(6),
+            tenant_limits: TenantLimits {
+                soft_limit: soft,
+                soft_action: LimitAction::Demote,
+                hard_limit: soft + 1 + rng.below(4),
+            },
+            est_service_s: 0.0,
+            ..FrontDoorConfig::default()
+        };
+        let cap = cfg.queue_capacity;
+        let limits = cfg.tenant_limits;
+        let fd = FrontDoor::new(cfg).unwrap();
+        let mut gen =
+            RequestGenerator::new(WorkloadProfile::text(), rng.next_u64());
+
+        // reference model state
+        let mut queued = [0usize; 3];
+        let mut qdepth = 0usize;
+        let mut admitted = [0u64; 3];
+        let mut rejected = [0u64; 3];
+        let (mut soft_overages, mut demoted) = (0u64, 0u64);
+        let mut offered = 0u64;
+
+        for _ in 0..4 {
+            let n = 1 + rng.below(16);
+            for _ in 0..n {
+                let t = rng.below(3);
+                let lane = Lane::ALL[rng.below(3)];
+                let req = gen.request(1 + rng.below(16), 1 + rng.below(4), 0.0);
+                let got = fd.submit(req, &format!("t{t}"), lane, 0.0);
+                offered += 1;
+
+                // straight-line reference of the documented semantics
+                let want = if queued[t] >= limits.hard_limit {
+                    rejected[lane.index()] += 1;
+                    Err(Rejected::TenantOverLimit)
+                } else {
+                    let over = queued[t] >= limits.soft_limit;
+                    let eff = if over && lane != Lane::Batch {
+                        Lane::Batch
+                    } else {
+                        lane
+                    };
+                    if qdepth >= cap {
+                        rejected[eff.index()] += 1;
+                        Err(Rejected::QueueFull)
+                    } else {
+                        if over {
+                            soft_overages += 1;
+                            if eff != lane {
+                                demoted += 1;
+                            }
+                        }
+                        admitted[eff.index()] += 1;
+                        queued[t] += 1;
+                        qdepth += 1;
+                        Ok(())
+                    }
+                };
+                assert_eq!(got, want, "queued {queued:?} depth {qdepth}");
+            }
+            assert_eq!(fd.depth(), qdepth);
+            assert_eq!(fd.stats().lane_admitted(), admitted.to_vec());
+            assert_eq!(fd.stats().lane_rejected(), rejected.to_vec());
+            assert_eq!(fd.stats().soft_overages(), soft_overages);
+            assert_eq!(fd.stats().demoted(), demoted);
+
+            // drain through an engine; tenant occupancy resets to zero
+            let (mut sched, reqs) = fd.take_scheduled();
+            let mut e = engine(2, rng.next_u64());
+            e.serve_with(&mut sched, reqs);
+            fd.absorb(&sched);
+            queued = [0; 3];
+            qdepth = 0;
+        }
+        // every submission landed exactly once, somewhere typed
+        let a: u64 = admitted.iter().sum();
+        let r: u64 = rejected.iter().sum();
+        assert_eq!(a + r, offered);
+        assert!(demoted <= soft_overages);
+    });
+}
+
+#[test]
 fn typed_rejections_are_deterministic() {
     // The check order (hard limit → soft action → queue bound) is fixed,
     // so the same submission script yields the same typed outcomes —

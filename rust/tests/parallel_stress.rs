@@ -13,6 +13,10 @@
 //!    `FrontDoor::submit` producers never overshoot the queue bound or a
 //!    tenant's hard limit, and every offered request lands in exactly one
 //!    of admitted/rejected.
+//! 4. **Asymmetric-drift attribution** — the group report's OR-merged
+//!    `drift_detected` flag cannot say which shard drifted;
+//!    `DeviceGroup::device_drift_stats` must attribute a one-shard swap
+//!    to that device alone, without the quiet shards masking it.
 //!
 //! CI's `parallel-stress` job elevates the case counts through
 //! `PARALLEL_STRESS_ITERS`; the default keeps the suite fast enough for
@@ -190,6 +194,65 @@ fn prop_concurrent_group_tick_merges_reports_deterministically() {
         assert!(par.within_envelope() && ser.within_envelope());
         assert!(par.pools_consistent() && ser.pools_consistent());
     });
+}
+
+#[test]
+fn asymmetric_shard_drift_is_attributable_despite_or_merge() {
+    // The group report OR-merges `drift_detected` and `drift_stats()`
+    // sums across devices — neither can say WHICH shard drifted. Drive a
+    // 3-device group where only device 2's expert slice swaps its hot
+    // set: the merged flag must still fire (no masking by the two quiet
+    // devices), and `device_drift_stats()` must attribute every event to
+    // device 2 alone.
+    let mut cfg = ServingConfig::default();
+    cfg.adaptive_alpha = true;
+    cfg.ema_alpha = 0.95;
+    cfg.update_interval_ms = 1.0;
+    cfg.drift.window = 2;
+    let preset = ModelPreset::phi_sim().executed_scale();
+    let dev = DeviceConfig::default();
+    let g = DeviceGroup::new(&preset, &cfg, &dev, 3).unwrap();
+    // striped placement: expert e lives on device e % 3, so 2 and 14
+    // are both device-2 experts and 0/1 pin devices 0/1 steady
+    assert_eq!(g.device_of(0, 2), 2);
+    assert_eq!(g.device_of(0, 14), 2);
+
+    let mut now = 0.0;
+    let mut drive = |hot: &[usize]| {
+        for _ in 0..60 {
+            g.record_routing(0, hot);
+        }
+        g.wait_staged();
+        now += 0.0011;
+        g.tick(now)
+    };
+    // steady phase: every device sees a stable local distribution
+    for _ in 0..8 {
+        let r = drive(&[0, 1, 2]);
+        assert!(!r.drift_detected, "false trigger on steady traffic");
+    }
+    assert_eq!(g.device_drift_stats(), vec![(0, 0); 3]);
+
+    // flip only device 2's slice (2 → 14); devices 0/1 are untouched
+    let mut fired = false;
+    for _ in 0..(2 * cfg.drift.window + 1) {
+        fired |= drive(&[0, 1, 14]).drift_detected;
+        if fired {
+            break;
+        }
+    }
+    assert!(fired, "the quiet shards must not mask device 2's swap");
+    // settle the recovery window so per-device stats are stable
+    for _ in 0..cfg.drift.recovery_intervals {
+        drive(&[0, 1, 14]);
+    }
+    let per = g.device_drift_stats();
+    assert_eq!(per[0], (0, 0), "device 0 never drifted: {per:?}");
+    assert_eq!(per[1], (0, 0), "device 1 never drifted: {per:?}");
+    assert!(per[2].0 >= 1, "device 2's swap unattributed: {per:?}");
+    // the group-level sums are exactly device 2's line — the accessor
+    // adds attribution, it does not change the totals
+    assert_eq!(g.drift_stats(), per[2]);
 }
 
 #[test]

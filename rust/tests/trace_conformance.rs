@@ -10,9 +10,10 @@
 use dynaexq::config::{DeviceConfig, ModelPreset, ServingConfig};
 use dynaexq::serving::backend::{RecordingBackend, StaticBackend};
 use dynaexq::serving::engine::{Engine, EngineConfig};
+use dynaexq::serving::fleet::{FleetBackend, ReplicaHealth};
 use dynaexq::serving::registry::{BackendCtx, BackendRegistry};
 use dynaexq::serving::session::MetricsSnapshot;
-use dynaexq::workload::{Trace, WorkloadProfile};
+use dynaexq::workload::{FaultPlan, Trace, WorkloadProfile};
 
 /// Capture a trace from a real modeled-engine run (not synthesized): the
 /// recording backend observes exactly the routing batches and iteration
@@ -146,6 +147,98 @@ fn sharded_replay_stays_byte_stable_across_many_replays() {
             );
         }
     }
+}
+
+#[test]
+fn two_replica_fleet_replay_is_byte_stable() {
+    // The registry loop above already replays `dynaexq-fleet` at its
+    // default width; this pins the 2-replica shape (built through
+    // `BackendCtx::with_replicas`, as the CLI/registry path does) to the
+    // same byte-stability contract — with the concurrent replica ticks
+    // checked against the forced-serial reference.
+    let preset = ModelPreset::phi_sim();
+    let trace = recorded_trace(&preset);
+    let registry = BackendRegistry::with_builtins();
+    let cfg = ServingConfig::default();
+    let dev = DeviceConfig::default();
+    let w = WorkloadProfile::text();
+
+    let registry_replay = || {
+        let mut b = registry
+            .build(
+                "dynaexq-fleet",
+                &BackendCtx::new(&preset, &cfg, &dev)
+                    .with_profile(&w)
+                    .with_replicas(2),
+            )
+            .unwrap();
+        let end = trace.replay(b.as_mut(), 0.01);
+        MetricsSnapshot::from_replay(
+            preset.name,
+            "dynaexq-fleet",
+            "text",
+            b.as_ref(),
+            end,
+        )
+        .encode()
+    };
+    let reference = registry_replay();
+    for i in 0..3 {
+        assert_eq!(registry_replay(), reference, "replay {i} diverged");
+    }
+
+    // the threaded replica ticks match the serial reference byte for byte
+    let direct_replay = |serial: bool| {
+        let mut b = FleetBackend::new(&preset, &cfg, &dev, 1, 2)
+            .unwrap()
+            .set_serial(serial);
+        let end = trace.replay(&mut b, 0.01);
+        MetricsSnapshot::from_replay(
+            preset.name,
+            "dynaexq-fleet",
+            "text",
+            &b,
+            end,
+        )
+        .encode()
+    };
+    assert_eq!(direct_replay(false), direct_replay(true));
+}
+
+#[test]
+fn fleet_replay_under_scripted_failure_re_homes_and_stays_stable() {
+    // Down replica 0 a few ticks into the replay: the backend must move
+    // its current replica off the dead one, keep serving the whole
+    // trace, and stay byte-stable across repeated faulted replays.
+    let preset = ModelPreset::phi_sim();
+    let trace = recorded_trace(&preset);
+    let cfg = ServingConfig::default();
+    let dev = DeviceConfig::default();
+
+    let run = || {
+        let mut b = FleetBackend::new(&preset, &cfg, &dev, 1, 2)
+            .unwrap()
+            .with_faults(FaultPlan::fail(0, 3));
+        let end = trace.replay(&mut b, 0.01);
+        let snap = MetricsSnapshot::from_replay(
+            preset.name,
+            "dynaexq-fleet",
+            "text",
+            &b,
+            end,
+        );
+        (b.current(), b.health(), snap)
+    };
+    let (current, health, snap) = run();
+    assert_eq!(current, 1, "replay never re-homed off the failed replica");
+    assert_eq!(health[0], ReplicaHealth::Down);
+    assert_eq!(health[1], ReplicaHealth::Healthy);
+    assert!(snap.migrated_bytes > 0, "the survivor must keep promoting");
+
+    let (current2, health2, snap2) = run();
+    assert_eq!(current2, current);
+    assert_eq!(health2, health);
+    assert_eq!(snap2.encode(), snap.encode(), "faulted replay diverged");
 }
 
 #[test]
