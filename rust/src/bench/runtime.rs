@@ -22,7 +22,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::fleet::FleetConfig;
 use crate::config::frontdoor::{FrontDoorConfig, Lane};
-use crate::config::{kv, DeviceConfig, ServingConfig};
+use crate::config::{kv, DeviceConfig, QosConfig, ServingConfig};
 use crate::coordinator::TransitionTotals;
 use crate::experiments::helpers;
 use crate::serving::engine::{Engine, EngineConfig};
@@ -41,7 +41,10 @@ use super::Table;
 /// v4: the `replicas` axis on front-door cells (fleet-scale replicated
 /// serving — DESIGN.md §14); non-finite f64 cell values are a
 /// validation error.
-pub const BENCH_SCHEMA: &str = "dynaexq-bench-serving/v4";
+/// v5: the `qos` axis on front-door cells (class-weighted allocation —
+/// DESIGN.md §15) with per-class `qos_charged`/`qos_refunded` ledger
+/// columns; `qos=off` cells are byte-identical to the v4 bench.
+pub const BENCH_SCHEMA: &str = "dynaexq-bench-serving/v5";
 
 /// Serving methods benchmarked by the full matrix: every registry method
 /// that serves traffic as a *method under comparison*. The quality
@@ -83,6 +86,14 @@ pub const BENCH_PRODUCERS: &[usize] = &[1, 4];
 /// fleet behind.
 pub const BENCH_REPLICAS: &[usize] = &[1, 2];
 
+/// QoS-config axis swept on front-door cells by the matrix: `false`
+/// serves with no [`QosConfig`] (the v4 path, byte-identical modeled
+/// behaviour), `true` arms the tiered premium/standard/best-effort
+/// config so class-weighted allocation and the per-tenant budget ledger
+/// are exercised under load. Direct cells pin the knob off — there is
+/// no front door to bill through.
+pub const BENCH_QOS: &[bool] = &[false, true];
+
 /// Keys every cell object in `BENCH_serving.json` must carry — the
 /// schema contract `bench_smoke` (and the pre-write self-check) enforce.
 pub const CELL_KEYS: &[&str] = &[
@@ -118,6 +129,9 @@ pub const CELL_KEYS: &[&str] = &[
     "fd_lane_ttft_p95_s",
     "fd_submit_p50_s",
     "fd_submit_p95_s",
+    "qos",
+    "qos_charged",
+    "qos_refunded",
 ];
 
 /// The benchmark matrix: which cells run and at what workload shape.
@@ -149,6 +163,11 @@ pub struct BenchMatrix {
     /// replicated [`Fleet`] with load/affinity routing (DESIGN.md §14).
     /// Direct cells run once with the knob pinned to 0.
     pub replicas: Vec<usize>,
+    /// QoS axis, applied to front-door cells only: `false` runs with no
+    /// [`QosConfig`], `true` arms [`QosConfig::tiered`] (class-weighted
+    /// hotness + budget ledger — DESIGN.md §15). Direct cells run once
+    /// with the knob pinned off.
+    pub qos: Vec<bool>,
 }
 
 impl BenchMatrix {
@@ -171,15 +190,16 @@ impl BenchMatrix {
             frontdoor: vec![false, true],
             producers: BENCH_PRODUCERS.to_vec(),
             replicas: BENCH_REPLICAS.to_vec(),
+            qos: BENCH_QOS.to_vec(),
         }
     }
 
     /// The smallest matrix — what CI's `bench-smoke` job runs on every
     /// push: one method, one scenario, one device, batch 1, both sides
     /// of the front-door axis, a serial and a threaded producer count,
-    /// and a 1- and 2-replica fleet width (so the queue path, the
-    /// admission seam, *and* the fleet router are exercised on every
-    /// push).
+    /// a 1- and 2-replica fleet width, and both sides of the QoS axis
+    /// (so the queue path, the admission seam, the fleet router, *and*
+    /// the class-weighted budget ledger are exercised on every push).
     pub fn smoke(model: &str) -> Self {
         Self {
             model: model.to_string(),
@@ -194,19 +214,22 @@ impl BenchMatrix {
             frontdoor: vec![false, true],
             producers: vec![1, 2],
             replicas: vec![1, 2],
+            qos: vec![false, true],
         }
     }
 
     /// Number of cells the matrix spans. Front-door cells fan out over
-    /// the producer × replica axes; direct cells do not (both knobs are
-    /// pinned 0).
+    /// the producer × replica × qos axes; direct cells do not (all three
+    /// knobs are pinned off).
     pub fn n_cells(&self) -> usize {
         let fd_cells: usize = self
             .frontdoor
             .iter()
             .map(|&f| {
                 if f {
-                    self.producers.len().max(1) * self.replicas.len().max(1)
+                    self.producers.len().max(1)
+                        * self.replicas.len().max(1)
+                        * self.qos.len().max(1)
                 } else {
                     1
                 }
@@ -223,9 +246,10 @@ impl BenchMatrix {
 /// Narrow a matrix to the axis values selected by a `--filter` spec:
 /// comma-separated `key=value` pairs over `method`, `scenario`,
 /// `devices`, `batch`, `frontdoor` (`0/false/off` or `1/true/on`),
-/// `producers`, and `replicas` (the latter two front-door cells only).
-/// Unknown keys and filters that empty an axis are errors — a bench
-/// that silently ran zero cells would read as a clean pass.
+/// `producers`, `replicas`, and `qos` (the latter three front-door
+/// cells only). Unknown keys and filters that empty an axis are
+/// errors — a bench that silently ran zero cells would read as a clean
+/// pass.
 pub fn apply_filter(matrix: &mut BenchMatrix, spec: &str) -> Result<()> {
     let m = kv::parse_kv(spec);
     let mut keys: Vec<&String> = m.keys().collect();
@@ -270,9 +294,21 @@ pub fn apply_filter(matrix: &mut BenchMatrix, spec: &str) -> Result<()> {
                     .with_context(|| format!("bad replicas filter {val:?}"))?;
                 matrix.replicas.retain(|&x| x == n);
             }
+            "qos" => {
+                let want = match val.as_str() {
+                    "1" | "true" | "on" => true,
+                    "0" | "false" | "off" => false,
+                    _ => bail!(
+                        "bad qos filter {val:?} (use 0/false/off or \
+                         1/true/on)"
+                    ),
+                };
+                matrix.qos.retain(|&x| x == want);
+            }
             other => bail!(
                 "unknown filter key {other:?}; filterable axes: batch, \
-                 devices, frontdoor, method, producers, replicas, scenario"
+                 devices, frontdoor, method, producers, qos, replicas, \
+                 scenario"
             ),
         }
     }
@@ -338,6 +374,14 @@ pub struct BenchCell {
     pub fd_submit_p50_s: f64,
     /// Wall-clock p95 of individual `FrontDoor::submit` calls.
     pub fd_submit_p95_s: f64,
+    /// Whether the cell served under an armed [`QosConfig::tiered`]
+    /// (always false for direct cells).
+    pub qos: bool,
+    /// Per-class bytes charged by the front door's budget ledger
+    /// (premium|standard|best-effort order); empty when `qos` is off.
+    pub qos_charged: Vec<u64>,
+    /// Per-class bytes refunded at stream completion (same order).
+    pub qos_refunded: Vec<u64>,
 }
 
 /// A full matrix run.
@@ -350,9 +394,12 @@ pub struct BenchReport {
 /// default SLO classes with the queue bound tied to the batch size, so
 /// load-scaled surges (burst's 2× crowd) overflow into real typed
 /// rejections while steady cells admit everything.
-fn frontdoor_bench_cfg(batch: usize) -> FrontDoorConfig {
+fn frontdoor_bench_cfg(batch: usize, qos: bool) -> FrontDoorConfig {
     let mut cfg = FrontDoorConfig::default();
     cfg.queue_capacity = (batch * 3 / 2).max(2);
+    if qos {
+        cfg.qos = Some(QosConfig::tiered());
+    }
     cfg
 }
 
@@ -364,9 +411,12 @@ fn frontdoor_bench_cfg(batch: usize) -> FrontDoorConfig {
 /// fans the round's submissions out over that many threads (requests
 /// are pre-generated on the bench thread, so ids and content are
 /// identical at every producer count) and times each `submit` call.
-/// `producers` is ignored for direct cells (recorded as 0), and so is
-/// `replicas`; a front-door cell with `replicas > 1` serves through a
-/// replicated [`Fleet`] instead of a single engine.
+/// `producers` is ignored for direct cells (recorded as 0), and so are
+/// `replicas` and `qos`; a front-door cell with `replicas > 1` serves
+/// through a replicated [`Fleet`] instead of a single engine, and one
+/// with `qos` set arms [`QosConfig::tiered`] across the door's budget
+/// ledger and the residency stack's class-weighted hotness.
+#[allow(clippy::too_many_arguments)]
 pub fn run_cell(
     matrix: &BenchMatrix,
     method: &str,
@@ -376,7 +426,9 @@ pub fn run_cell(
     frontdoor: bool,
     producers: usize,
     replicas: usize,
+    qos: bool,
 ) -> Result<BenchCell> {
+    let qos = qos && frontdoor;
     if frontdoor && replicas > 1 {
         return run_fleet_cell(
             matrix,
@@ -386,11 +438,15 @@ pub fn run_cell(
             batch,
             producers.max(1),
             replicas,
+            qos,
         );
     }
     let preset = helpers::preset(&matrix.model)?;
     let sc = helpers::scenario(scenario_name)?;
-    let cfg = ServingConfig::default();
+    let mut cfg = ServingConfig::default();
+    if qos {
+        cfg.qos = Some(QosConfig::tiered());
+    }
     let dev = DeviceConfig::default();
     let first_profile = &sc.phases[0].profile;
     let backend = helpers::backend_with_devices(
@@ -427,7 +483,7 @@ pub fn run_cell(
     let replicas = if frontdoor { replicas.max(1) } else { 0 };
     let fd = if frontdoor {
         Some(
-            FrontDoor::new(frontdoor_bench_cfg(batch))
+            FrontDoor::new(frontdoor_bench_cfg(batch, qos))
                 .map_err(anyhow::Error::msg)?,
         )
     } else {
@@ -465,6 +521,12 @@ pub fn run_cell(
                     .tenant
                     .clone()
                     .unwrap_or_else(|| phase.profile.name.to_string());
+                if let Some(class) = phase.qos_class {
+                    // no-ops on an unarmed stack, so qos=off cells stay
+                    // byte-identical to the v4 bench
+                    fd.set_tenant_class(&tenant, class);
+                    engine.backend.set_active_class(class.index());
+                }
                 for _ in 0..phase.rounds {
                     let t0 = Instant::now();
                     let now = engine.now();
@@ -534,8 +596,10 @@ pub fn run_cell(
                         }
                     }
                     let (mut sched, reqs) = fd.take_scheduled();
+                    let ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
                     engine.serve_with(&mut sched, reqs);
                     fd.absorb(&sched);
+                    fd.settle(&ids);
                     samples.push(t0.elapsed().as_secs_f64());
                 }
             }
@@ -543,6 +607,10 @@ pub fn run_cell(
     }
     let wall_total_s = t_all.elapsed().as_secs_f64();
 
+    let (qos_charged, qos_refunded) = match &fd {
+        Some(fd) if fd.qos_armed() => (fd.qos_charged(), fd.qos_refunded()),
+        _ => (Vec::new(), Vec::new()),
+    };
     let (fd_adm, fd_rej, fd_miss, fd_p50, fd_p95) = match &fd {
         Some(fd) => (
             fd.stats().lane_admitted(),
@@ -604,6 +672,9 @@ pub fn run_cell(
         fd_lane_ttft_p95_s: fd_p95,
         fd_submit_p50_s: percentile(&submit_samples, 50.0),
         fd_submit_p95_s: percentile(&submit_samples, 95.0),
+        qos,
+        qos_charged,
+        qos_refunded,
     })
 }
 
@@ -612,6 +683,7 @@ pub fn run_cell(
 /// through the fleet's load/affinity router. Requests are pre-generated
 /// on the bench thread exactly like the single-engine path, so the
 /// submission stream is identical at every producer count.
+#[allow(clippy::too_many_arguments)]
 fn run_fleet_cell(
     matrix: &BenchMatrix,
     method: &str,
@@ -620,12 +692,13 @@ fn run_fleet_cell(
     batch: usize,
     producers: usize,
     replicas: usize,
+    qos: bool,
 ) -> Result<BenchCell> {
     let sc = helpers::scenario(scenario_name)?;
     let mut fleet_cfg = FleetConfig::default();
     fleet_cfg.replicas = replicas;
     fleet_cfg.devices_per_replica = devices;
-    let mut fleet = Fleet::builder()
+    let mut builder = Fleet::builder()
         .model(&matrix.model)
         .method(method)
         .workload(sc.phases[0].profile.name)
@@ -633,9 +706,12 @@ fn run_fleet_cell(
         .seed(matrix.seed)
         .warmup(matrix.warmup_rounds)
         .track_activation(false)
-        .frontdoor(frontdoor_bench_cfg(batch))
-        .fleet_cfg(fleet_cfg)
-        .build()?;
+        .frontdoor(frontdoor_bench_cfg(batch, false))
+        .fleet_cfg(fleet_cfg);
+    if qos {
+        builder = builder.qos(QosConfig::tiered());
+    }
+    let mut fleet = builder.build()?;
     let modeled_start = fleet.now();
     let start = fleet.snapshot();
     let transitions0 = fleet.transition_totals();
@@ -654,6 +730,9 @@ fn run_fleet_cell(
             .tenant
             .clone()
             .unwrap_or_else(|| phase.profile.name.to_string());
+        if let Some(class) = phase.qos_class {
+            fleet.set_qos_class(&tenant, class);
+        }
         let b = Scenario::scaled_batch(batch, phase.load);
         for _ in 0..phase.rounds {
             let t0 = Instant::now();
@@ -717,6 +796,11 @@ fn run_fleet_cell(
     let wall_total_s = t_all.elapsed().as_secs_f64();
 
     let fd = fleet.frontdoor();
+    let (qos_charged, qos_refunded) = if fd.qos_armed() {
+        (fd.qos_charged(), fd.qos_refunded())
+    } else {
+        (Vec::new(), Vec::new())
+    };
     let fd_adm = fd.stats().lane_admitted();
     let fd_rej = fd.stats().lane_rejected();
     let fd_miss = fd.stats().lane_deadline_miss();
@@ -766,6 +850,9 @@ fn run_fleet_cell(
         fd_lane_ttft_p95_s: fd_p95,
         fd_submit_p50_s: percentile(&submit_samples, 50.0),
         fd_submit_p95_s: percentile(&submit_samples, 95.0),
+        qos,
+        qos_charged,
+        qos_refunded,
     })
 }
 
@@ -783,34 +870,46 @@ pub fn run_matrix(
                 for &batch in &matrix.batches {
                     for &frontdoor in &matrix.frontdoor {
                         // direct cells have no admission path: one run,
-                        // producers and replicas pinned 0
-                        let fd_axis: Vec<(usize, usize)> = if frontdoor {
+                        // producers/replicas pinned 0 and qos pinned off
+                        let fd_axis: Vec<(usize, usize, bool)> = if frontdoor
+                        {
                             matrix
                                 .producers
                                 .iter()
                                 .flat_map(|&p| {
-                                    matrix.replicas.iter().map(move |&r| (p, r))
+                                    matrix.replicas.iter().flat_map(
+                                        move |&r| {
+                                            matrix
+                                                .qos
+                                                .iter()
+                                                .map(move |&q| (p, r, q))
+                                        },
+                                    )
                                 })
                                 .collect()
                         } else {
-                            vec![(0, 0)]
+                            vec![(0, 0, false)]
                         };
-                        for &(producers, replicas) in &fd_axis {
+                        for &(producers, replicas, qos) in &fd_axis {
                             let cell = run_cell(
                                 matrix, method, scenario, devices, batch,
-                                frontdoor, producers, replicas,
+                                frontdoor, producers, replicas, qos,
                             )
                             .with_context(|| {
                                 format!(
                                     "cell {method}×{scenario}×{devices}dev\
-                                     ×b{batch}×fd{}×p{producers}×r{replicas}",
-                                    frontdoor as u8
+                                     ×b{batch}×fd{}×p{producers}×r{replicas}\
+                                     ×q{}",
+                                    frontdoor as u8, qos as u8
                                 )
                             })?;
                             let fd_tag = if frontdoor {
-                                format!(" fd p{producers} r{replicas}")
+                                format!(
+                                    " fd p{producers} r{replicas} q{}",
+                                    qos as u8
+                                )
                             } else {
-                                "         ".to_string()
+                                "            ".to_string()
                             };
                             progress(&format!(
                                 "[{}/{total}] {method:<22} {scenario:<12} \
@@ -868,6 +967,10 @@ pub fn report_to_json(report: &BenchReport) -> String {
     );
     root.push("producers", u64_arr(&m.producers));
     root.push("replicas", u64_arr(&m.replicas));
+    root.push(
+        "qos_axis",
+        Json::Arr(m.qos.iter().map(|&b| Json::U64(b as u64)).collect()),
+    );
     let mut cells = Vec::with_capacity(report.cells.len());
     for c in &report.cells {
         let mut o = Json::obj();
@@ -906,6 +1009,9 @@ pub fn report_to_json(report: &BenchReport) -> String {
         o.push("fd_lane_ttft_p95_s", f64s(&c.fd_lane_ttft_p95_s));
         o.push("fd_submit_p50_s", Json::F64(c.fd_submit_p50_s));
         o.push("fd_submit_p95_s", Json::F64(c.fd_submit_p95_s));
+        o.push("qos", Json::U64(c.qos as u64));
+        o.push("qos_charged", u64s(&c.qos_charged));
+        o.push("qos_refunded", u64s(&c.qos_refunded));
         cells.push(o);
     }
     root.push("cells", Json::Arr(cells));
@@ -964,13 +1070,16 @@ pub fn validate_report_json(text: &str) -> Result<()> {
     let frontdoors = nums("frontdoors")?;
     let producers = nums("producers")?;
     let replicas = nums("replicas")?;
+    let qos_axis = nums("qos_axis")?;
     let cells =
         doc.get("cells").and_then(|v| v.as_arr()).context("missing cells")?;
     let fd_cells: usize = frontdoors
         .iter()
         .map(|&f| {
             if f != 0 {
-                producers.len().max(1) * replicas.len().max(1)
+                producers.len().max(1)
+                    * replicas.len().max(1)
+                    * qos_axis.len().max(1)
             } else {
                 1
             }
@@ -1001,7 +1110,8 @@ pub fn validate_report_json(text: &str) -> Result<()> {
                     v.as_f64().map_or(false, f64::is_finite)
                 }
                 "fd_lane_admitted" | "fd_lane_rejected"
-                | "fd_lane_deadline_miss" => v
+                | "fd_lane_deadline_miss" | "qos_charged"
+                | "qos_refunded" => v
                     .as_arr()
                     .map(|xs| xs.iter().all(|x| x.as_u64().is_some()))
                     .unwrap_or(false),
@@ -1023,6 +1133,7 @@ pub fn validate_report_json(text: &str) -> Result<()> {
         let fd = cell.get("frontdoor").unwrap().as_u64().unwrap();
         let prod = cell.get("producers").unwrap().as_u64().unwrap();
         let repl = cell.get("replicas").unwrap().as_u64().unwrap();
+        let qos = cell.get("qos").unwrap().as_u64().unwrap();
         if fd == 0 {
             if prod != 0 {
                 bail!(
@@ -1033,6 +1144,9 @@ pub fn validate_report_json(text: &str) -> Result<()> {
                 bail!(
                     "cell {i}: direct cell with replicas={repl} (must be 0)"
                 );
+            }
+            if qos != 0 {
+                bail!("cell {i}: direct cell with qos={qos} (must be 0)");
             }
         } else {
             if !producers.contains(&prod) {
@@ -1045,6 +1159,12 @@ pub fn validate_report_json(text: &str) -> Result<()> {
                 bail!(
                     "cell {i}: replicas={repl} outside the declared axis \
                      {replicas:?}"
+                );
+            }
+            if !qos_axis.contains(&qos) {
+                bail!(
+                    "cell {i}: qos={qos} outside the declared axis \
+                     {qos_axis:?}"
                 );
             }
         }
@@ -1064,6 +1184,17 @@ pub fn validate_report_json(text: &str) -> Result<()> {
                 );
             }
         }
+        // armed cells carry one ledger entry per class; others none
+        let want_classes = if qos != 0 { 3 } else { 0 };
+        for key in ["qos_charged", "qos_refunded"] {
+            let n = cell.get(key).unwrap().as_arr().unwrap().len();
+            if n != want_classes {
+                bail!(
+                    "cell {i}: {key} has {n} classes, expected \
+                     {want_classes} (qos={qos})"
+                );
+            }
+        }
         let coord = (
             cell.get("method").unwrap().as_str().unwrap().to_string(),
             cell.get("scenario").unwrap().as_str().unwrap().to_string(),
@@ -1072,6 +1203,7 @@ pub fn validate_report_json(text: &str) -> Result<()> {
             fd,
             prod,
             repl,
+            qos,
         );
         if !methods.contains(&coord.0)
             || !scenarios.contains(&coord.1)
@@ -1098,6 +1230,7 @@ pub fn render_table(report: &BenchReport) -> String {
         "fd",
         "prod",
         "repl",
+        "qos",
         "rounds",
         "wall p50/round",
         "wall p95/round",
@@ -1116,6 +1249,7 @@ pub fn render_table(report: &BenchReport) -> String {
             if c.frontdoor { "y".into() } else { "-".into() },
             if c.frontdoor { c.producers.to_string() } else { "-".into() },
             if c.frontdoor { c.replicas.to_string() } else { "-".into() },
+            if c.qos { "y".into() } else { "-".into() },
             c.rounds.to_string(),
             super::human(c.wall_p50_round_s),
             super::human(c.wall_p95_round_s),
@@ -1141,20 +1275,22 @@ mod tests {
     fn matrix_shapes() {
         let full = BenchMatrix::full("qwen30b-sim");
         // direct cells run once; fronted cells fan out over
-        // producers × replicas
+        // producers × replicas × qos
         assert_eq!(
             full.n_cells(),
             BENCH_METHODS.len()
                 * Scenario::names().len()
                 * 2
                 * 3
-                * (1 + BENCH_PRODUCERS.len() * BENCH_REPLICAS.len())
+                * (1 + BENCH_PRODUCERS.len()
+                    * BENCH_REPLICAS.len()
+                    * BENCH_QOS.len())
         );
         // smoke spans both sides of the front-door axis plus
-        // {serial, threaded} producers × {1, 2} fleet replicas on the
-        // fronted side: 1 + 2×2 = 5
+        // {serial, threaded} producers × {1, 2} fleet replicas ×
+        // {off, on} qos on the fronted side: 1 + 2×2×2 = 9
         let smoke = BenchMatrix::smoke("phi-sim");
-        assert_eq!(smoke.n_cells(), 5);
+        assert_eq!(smoke.n_cells(), 9);
     }
 
     #[test]
@@ -1166,14 +1302,17 @@ mod tests {
         assert_eq!(m.scenarios, vec!["steady".to_string()]);
         assert_eq!(m.batches, vec![8]);
         // 1 method × 1 scenario × 2 devices × 1 batch ×
-        // (1 direct + 2 producers × 2 replicas fronted) = 10
-        assert_eq!(m.n_cells(), 10);
-        // the producers and replicas axes narrow fronted cells only
+        // (1 direct + 2 producers × 2 replicas × 2 qos fronted) = 18
+        assert_eq!(m.n_cells(), 18);
+        // the producers/replicas/qos axes narrow fronted cells only
         apply_filter(&mut m, "producers=4").unwrap();
         assert_eq!(m.producers, vec![4]);
-        assert_eq!(m.n_cells(), 6);
+        assert_eq!(m.n_cells(), 10);
         apply_filter(&mut m, "replicas=1").unwrap();
         assert_eq!(m.replicas, vec![1]);
+        assert_eq!(m.n_cells(), 6);
+        apply_filter(&mut m, "qos=off").unwrap();
+        assert_eq!(m.qos, vec![false]);
         assert_eq!(m.n_cells(), 4);
         // a single cell
         apply_filter(&mut m, "devices=1,frontdoor=off").unwrap();
@@ -1190,6 +1329,8 @@ mod tests {
         assert!(err.contains("no cells"), "{err}");
         let mut m = BenchMatrix::full("qwen30b-sim");
         assert!(apply_filter(&mut m, "frontdoor=maybe").is_err());
+        let mut m = BenchMatrix::full("qwen30b-sim");
+        assert!(apply_filter(&mut m, "qos=maybe").is_err());
     }
 
     #[test]
@@ -1205,13 +1346,16 @@ mod tests {
         matrix.frontdoor = vec![false, true];
         matrix.producers = vec![1, 2];
         matrix.replicas = vec![1];
+        matrix.qos = vec![false];
         let direct =
-            run_cell(&matrix, "dynaexq", "steady", 1, 1, false, 0, 0)
+            run_cell(&matrix, "dynaexq", "steady", 1, 1, false, 0, 0, false)
                 .unwrap();
         let fronted =
-            run_cell(&matrix, "dynaexq", "steady", 1, 1, true, 1, 1).unwrap();
+            run_cell(&matrix, "dynaexq", "steady", 1, 1, true, 1, 1, false)
+                .unwrap();
         let threaded =
-            run_cell(&matrix, "dynaexq", "steady", 1, 1, true, 2, 1).unwrap();
+            run_cell(&matrix, "dynaexq", "steady", 1, 1, true, 2, 1, false)
+                .unwrap();
         assert!(direct.fd_lane_admitted.is_empty());
         assert_eq!(direct.producers, 0);
         assert_eq!(direct.replicas, 0);
@@ -1236,6 +1380,8 @@ mod tests {
         assert!(validate_report_json(&bad).is_err());
         let bad = good.replace("\"replicas\"", "\"repls\"");
         assert!(validate_report_json(&bad).is_err());
+        let bad = good.replace("\"qos_charged\"", "\"qos_ch\"");
+        assert!(validate_report_json(&bad).is_err());
     }
 
     #[test]
@@ -1247,8 +1393,9 @@ mod tests {
         matrix.frontdoor = vec![false];
         matrix.producers = vec![1];
         matrix.replicas = vec![1];
+        matrix.qos = vec![false];
         let cell =
-            run_cell(&matrix, "dynaexq", "steady", 1, 1, false, 0, 0)
+            run_cell(&matrix, "dynaexq", "steady", 1, 1, false, 0, 0, false)
                 .unwrap();
         let good = report_to_json(&BenchReport { matrix, cells: vec![cell] });
         validate_report_json(&good).unwrap();
@@ -1270,10 +1417,12 @@ mod tests {
         // outcomes across identical runs, and a full smoke matrix
         // (which includes the fleet fan-out) must validate.
         let matrix = BenchMatrix::smoke("phi-sim");
-        let a = run_cell(&matrix, "dynaexq", "steady", 1, 1, true, 1, 2)
-            .unwrap();
-        let b = run_cell(&matrix, "dynaexq", "steady", 1, 1, true, 1, 2)
-            .unwrap();
+        let a =
+            run_cell(&matrix, "dynaexq", "steady", 1, 1, true, 1, 2, false)
+                .unwrap();
+        let b =
+            run_cell(&matrix, "dynaexq", "steady", 1, 1, true, 1, 2, false)
+                .unwrap();
         assert_eq!(a.replicas, 2);
         assert!(a.decode_tokens > 0);
         assert_eq!(a.fd_lane_admitted.len(), 3);
@@ -1285,12 +1434,47 @@ mod tests {
         assert_eq!(a.transitions, b.transitions);
         assert_eq!(a.fd_lane_ttft_p50_s, b.fd_lane_ttft_p50_s);
         // threaded producers against the fleet door agree with serial
-        let c = run_cell(&matrix, "dynaexq", "steady", 1, 1, true, 2, 2)
-            .unwrap();
+        let c =
+            run_cell(&matrix, "dynaexq", "steady", 1, 1, true, 2, 2, false)
+                .unwrap();
         assert_eq!(a.fd_lane_admitted, c.fd_lane_admitted);
         assert_eq!(a.decode_tokens, c.decode_tokens);
         let report = run_matrix(&matrix, |_| {}).unwrap();
-        assert_eq!(report.cells.len(), 5);
+        assert_eq!(report.cells.len(), 9);
         validate_report_json(&report_to_json(&report)).unwrap();
+    }
+
+    #[test]
+    fn qos_cells_balance_the_ledger_and_match_unarmed_baseline() {
+        let matrix = BenchMatrix::smoke("phi-sim");
+        // single-engine fronted cell with the tiered config armed
+        let on =
+            run_cell(&matrix, "dynaexq", "steady", 1, 1, true, 1, 1, true)
+                .unwrap();
+        assert!(on.qos);
+        assert_eq!(on.qos_charged.len(), 3);
+        assert_eq!(on.qos_refunded.len(), 3);
+        // steady admits and completes every request un-chunked, so the
+        // per-class ledger balances exactly
+        assert_eq!(on.qos_charged, on.qos_refunded);
+        assert!(on.qos_charged.iter().sum::<u64>() > 0);
+        // arming QoS with a single scenario class must not change the
+        // modeled serving outcome (degenerate collapse at equal weights
+        // is covered by qos_props; here the armed cell still serves the
+        // same request stream)
+        let off =
+            run_cell(&matrix, "dynaexq", "steady", 1, 1, true, 1, 1, false)
+                .unwrap();
+        assert!(!off.qos);
+        assert!(off.qos_charged.is_empty());
+        assert_eq!(on.fd_lane_admitted, off.fd_lane_admitted);
+        assert_eq!(on.decode_tokens, off.decode_tokens);
+        // fleet variant balances too
+        let fleet_on =
+            run_cell(&matrix, "dynaexq", "steady", 1, 1, true, 1, 2, true)
+                .unwrap();
+        assert!(fleet_on.qos);
+        assert_eq!(fleet_on.qos_charged, fleet_on.qos_refunded);
+        assert!(fleet_on.qos_charged.iter().sum::<u64>() > 0);
     }
 }

@@ -81,6 +81,12 @@ pub enum LimitAction {
     Demote,
     /// Reject with `Rejected::TenantOverLimit`.
     Reject,
+    /// Admit, but demote the *tenant* to best-effort QoS pricing
+    /// (DESIGN.md §15). As a soft-limit action it behaves like
+    /// [`LimitAction::Warn`] plus the class demotion; as a QoS
+    /// budget-exhaustion action it admits instead of rejecting. Without
+    /// an armed [`super::qos::QosConfig`] it is exactly `Warn`.
+    Downgrade,
 }
 
 /// Per-tenant queue-occupancy limits (applied to every tenant; the
@@ -130,6 +136,11 @@ pub struct FrontDoorConfig {
     /// Order same-rank admissions least-served-tenant-first. Off, ties
     /// fall straight through to deadline/arrival order.
     pub fair_share: bool,
+    /// QoS classes that price precision (DESIGN.md §15): per-tenant class
+    /// pins, class hotness weights, and per-tenant precision budgets
+    /// charged at admission. `None` — or a degenerate config — keeps the
+    /// PR 8 front door byte-identically.
+    pub qos: Option<super::qos::QosConfig>,
 }
 
 impl Default for FrontDoorConfig {
@@ -152,6 +163,7 @@ impl Default for FrontDoorConfig {
             est_service_s: 0.0,
             starvation_age_s: 2.0,
             fair_share: true,
+            qos: None,
         }
     }
 }
@@ -173,6 +185,7 @@ impl FrontDoorConfig {
             est_service_s: 0.0,
             starvation_age_s: f64::INFINITY,
             fair_share: true,
+            qos: None,
         }
     }
 
@@ -227,6 +240,9 @@ impl FrontDoorConfig {
                  (infinite disables aging)",
                 self.starvation_age_s
             ));
+        }
+        if let Some(q) = &self.qos {
+            q.validate()?;
         }
         Ok(())
     }
@@ -336,6 +352,13 @@ mod tests {
         let mut c = FrontDoorConfig::default();
         c.starvation_age_s = 0.0;
         assert!(c.validate().unwrap_err().contains("starvation_age_s"));
+
+        let mut c = FrontDoorConfig::default();
+        c.qos = Some(
+            super::super::qos::QosConfig::degenerate()
+                .with_weight(super::super::qos::QosClass::Premium, -1.0),
+        );
+        assert!(c.validate().unwrap_err().contains("premium"));
     }
 
     #[test]

@@ -7,10 +7,12 @@
 pub mod fleet;
 pub mod frontdoor;
 pub mod kv;
+pub mod qos;
 pub mod shard;
 
 pub use fleet::FleetConfig;
 pub use frontdoor::{FrontDoorConfig, Lane};
+pub use qos::{QosClass, QosConfig};
 pub use shard::ShardPlan;
 
 use crate::model::{Precision, PrecisionLadder};
@@ -263,6 +265,10 @@ pub struct ServingConfig {
     /// Change-point detector parameters (consulted only when
     /// `adaptive_alpha` is set).
     pub drift: DriftConfig,
+    /// QoS class weighting for the waterfill (DESIGN.md §15). `None` — or
+    /// a [`QosConfig::is_degenerate`] config — keeps the classic
+    /// tenant-blind plan byte-identically.
+    pub qos: Option<QosConfig>,
 }
 
 impl Default for ServingConfig {
@@ -281,6 +287,7 @@ impl Default for ServingConfig {
             n_hi_override: None,
             adaptive_alpha: false,
             drift: DriftConfig::default(),
+            qos: None,
         }
     }
 }

@@ -1,0 +1,485 @@
+//! QoS classes that price precision (DESIGN.md §15).
+//!
+//! The Mixture-of-Experts-with-Mixture-of-Precisions framing (PAPERS.md)
+//! treats expert precision as a quality-of-service dial. A [`QosConfig`]
+//! couples the front door's per-tenant accounting (DESIGN.md §12) to the
+//! waterfill allocator (§5): every tenant belongs to a [`QosClass`] whose
+//! **hotness weight** scales its routed-token counts before the per-layer
+//! waterfill ranks experts, and whose optional **precision budget** caps
+//! the modeled hi-precision bytes the class's tenants may hold in flight
+//! at the front door.
+//!
+//! Two invariants shape the design:
+//!
+//! 1. **Degenerate collapse.** A config where every class has the *same*
+//!    weight and *no* class has a budget ([`QosConfig::is_degenerate`])
+//!    must be byte-identical to running with no QoS at all. Every consumer
+//!    therefore arms the QoS path only for non-degenerate configs — the
+//!    weighted score plane, the per-class resolve counters, and the
+//!    front-door ledger are *structurally absent*, never multiplied by 1.
+//! 2. **Determinism.** Class weights enter the plan only through the
+//!    per-expert score plane folded at the iteration boundary, so a fixed
+//!    request stream with fixed class tags yields a byte-stable residency
+//!    trajectory (the same contract the unweighted plan keeps).
+
+use super::frontdoor::LimitAction;
+
+/// A front-door tenant's service class, best first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum QosClass {
+    /// Paying traffic: hot experts win hi-precision residency.
+    Premium,
+    /// The default class for unpinned tenants.
+    Standard,
+    /// Discounted traffic that rides the base rung when contended.
+    BestEffort,
+}
+
+impl QosClass {
+    /// Every class, presentation order (also the index order used by the
+    /// per-class count planes and kv snapshot rows).
+    pub const ALL: [QosClass; 3] =
+        [QosClass::Premium, QosClass::Standard, QosClass::BestEffort];
+
+    /// Stable index into per-class tables.
+    pub fn index(self) -> usize {
+        match self {
+            QosClass::Premium => 0,
+            QosClass::Standard => 1,
+            QosClass::BestEffort => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QosClass::Premium => "premium",
+            QosClass::Standard => "standard",
+            QosClass::BestEffort => "best-effort",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<QosClass> {
+        match name {
+            "premium" => Some(QosClass::Premium),
+            "standard" => Some(QosClass::Standard),
+            "best-effort" => Some(QosClass::BestEffort),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for QosClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One class's pricing: how hard its traffic pulls on the waterfill and
+/// how many modeled hi-precision bytes its tenants may hold in flight.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClassSpec {
+    /// Multiplier on the class's routed-token counts before the EMA fold
+    /// feeding the waterfill. Must be finite and positive.
+    pub weight: f64,
+    /// Per-tenant cap on outstanding modeled hi-precision bytes at the
+    /// front door; `None` = unmetered.
+    pub budget_bytes: Option<u64>,
+}
+
+/// The validated QoS policy: per-class pricing plus tenant pins.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QosConfig {
+    /// Pricing per class, indexed by [`QosClass::index`].
+    pub classes: [ClassSpec; 3],
+    /// Explicit tenant → class pins; unpinned tenants get
+    /// [`QosConfig::default_class`].
+    pub tenants: Vec<(String, QosClass)>,
+    /// Class for tenants without a pin.
+    pub default_class: QosClass,
+    /// Modeled hi-precision bytes one in-flight token pins at the front
+    /// door — the unit the budget charge is denominated in. A request
+    /// costs `hi_bytes_per_token × (prompt_len + output_len)`.
+    pub hi_bytes_per_token: u64,
+    /// What budget exhaustion does: [`LimitAction::Reject`] surfaces
+    /// `Rejected::BudgetExhausted`; [`LimitAction::Downgrade`] demotes the
+    /// tenant to best-effort pricing and admits. `Warn`/`Demote` behave
+    /// like `Reject` (they have no budget meaning).
+    pub budget_action: LimitAction,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        Self::degenerate()
+    }
+}
+
+impl QosConfig {
+    /// The identity policy: one effective class, no budgets. Collapses
+    /// byte-identically to running without QoS ([`QosConfig::is_degenerate`]).
+    pub fn degenerate() -> Self {
+        Self {
+            classes: [ClassSpec { weight: 1.0, budget_bytes: None }; 3],
+            tenants: Vec::new(),
+            default_class: QosClass::Standard,
+            hi_bytes_per_token: 2048,
+            budget_action: LimitAction::Reject,
+        }
+    }
+
+    /// The canonical tiered policy: premium pulls 4× standard's weight,
+    /// best-effort a quarter. No budgets — pure precision pricing.
+    pub fn tiered() -> Self {
+        let mut q = Self::degenerate();
+        q.classes[QosClass::Premium.index()].weight = 4.0;
+        q.classes[QosClass::Standard.index()].weight = 1.0;
+        q.classes[QosClass::BestEffort.index()].weight = 0.25;
+        q
+    }
+
+    /// Set one class's weight (builder style).
+    pub fn with_weight(mut self, class: QosClass, weight: f64) -> Self {
+        self.classes[class.index()].weight = weight;
+        self
+    }
+
+    /// Set one class's budget (builder style).
+    pub fn with_budget(mut self, class: QosClass, bytes: u64) -> Self {
+        self.classes[class.index()].budget_bytes = Some(bytes);
+        self
+    }
+
+    /// Pin a tenant to a class (builder style).
+    pub fn pin(mut self, tenant: &str, class: QosClass) -> Self {
+        self.tenants.push((tenant.to_string(), class));
+        self
+    }
+
+    /// Set the budget-exhaustion action (builder style).
+    pub fn on_exhausted(mut self, action: LimitAction) -> Self {
+        self.budget_action = action;
+        self
+    }
+
+    /// Whether this config is the identity policy: every class weighted
+    /// equally and no class metered. Consumers treat a degenerate config
+    /// exactly like no config — the QoS path is structurally skipped, so
+    /// the collapse is byte-identical, not merely numerically close.
+    pub fn is_degenerate(&self) -> bool {
+        let w = self.classes[0].weight;
+        self.classes.iter().all(|c| c.weight == w)
+            && self.classes.iter().all(|c| c.budget_bytes.is_none())
+    }
+
+    /// The spec for `class`.
+    pub fn class(&self, class: QosClass) -> &ClassSpec {
+        &self.classes[class.index()]
+    }
+
+    /// The class `tenant` bills to: the last matching pin, else the
+    /// default class.
+    pub fn class_of(&self, tenant: &str) -> QosClass {
+        self.tenants
+            .iter()
+            .rev()
+            .find(|(t, _)| t == tenant)
+            .map(|&(_, c)| c)
+            .unwrap_or(self.default_class)
+    }
+
+    /// Per-class weights in [`QosClass::index`] order.
+    pub fn weights(&self) -> [f64; 3] {
+        [
+            self.classes[0].weight,
+            self.classes[1].weight,
+            self.classes[2].weight,
+        ]
+    }
+
+    /// Structural validity: finite positive weights, a positive charge
+    /// unit, positive budgets, no duplicate tenant pins.
+    pub fn validate(&self) -> Result<(), String> {
+        for class in QosClass::ALL {
+            let spec = self.class(class);
+            if !spec.weight.is_finite() || spec.weight <= 0.0 {
+                return Err(format!(
+                    "qos class {}: weight must be finite and positive, \
+                     got {}",
+                    class, spec.weight
+                ));
+            }
+            if spec.budget_bytes == Some(0) {
+                return Err(format!(
+                    "qos class {class}: budget must be positive bytes"
+                ));
+            }
+        }
+        if self.hi_bytes_per_token == 0 {
+            return Err(
+                "qos hi_bytes_per_token must be at least 1".to_string()
+            );
+        }
+        for (i, (t, _)) in self.tenants.iter().enumerate() {
+            if self.tenants[..i].iter().any(|(u, _)| u == t) {
+                return Err(format!("qos tenant {t:?} pinned twice"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Budgets must fit the serving envelope they price: a per-tenant cap
+    /// larger than the whole HBM budget can never bind and is almost
+    /// certainly a unit error.
+    pub fn validate_budgets(&self, envelope_bytes: u64) -> Result<(), String> {
+        for class in QosClass::ALL {
+            if let Some(b) = self.class(class).budget_bytes {
+                if b > envelope_bytes {
+                    return Err(format!(
+                        "qos class {class}: budget {b} B exceeds the HBM \
+                         envelope ({envelope_bytes} B)"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a CLI spec: comma-separated `class=weight[:budget_bytes]`
+    /// parts over the degenerate defaults, plus `default=<class>` and
+    /// `action=reject|downgrade`. Examples:
+    /// `premium=4`, `premium=4:2e9,best-effort=0.25,action=downgrade`.
+    pub fn parse_spec(spec: &str) -> Result<QosConfig, String> {
+        let mut q = QosConfig::degenerate();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, val) = part.split_once('=').ok_or_else(|| {
+                format!(
+                    "bad qos part {part:?}; expected class=weight[:budget], \
+                     default=<class>, or action=<reject|downgrade>"
+                )
+            })?;
+            let (key, val) = (key.trim(), val.trim());
+            if key == "action" {
+                q.budget_action = match val {
+                    "reject" => LimitAction::Reject,
+                    "downgrade" => LimitAction::Downgrade,
+                    other => {
+                        return Err(format!(
+                            "unknown qos action {other:?}; known actions: \
+                             reject, downgrade"
+                        ))
+                    }
+                };
+                continue;
+            }
+            if key == "default" {
+                q.default_class = QosClass::by_name(val).ok_or_else(|| {
+                    format!(
+                        "unknown qos class {val:?}; known classes: premium, \
+                         standard, best-effort"
+                    )
+                })?;
+                continue;
+            }
+            let class = QosClass::by_name(key).ok_or_else(|| {
+                format!(
+                    "unknown qos class {key:?}; known classes: premium, \
+                     standard, best-effort"
+                )
+            })?;
+            let (weight, budget) = match val.split_once(':') {
+                Some((w, b)) => (w, Some(b)),
+                None => (val, None),
+            };
+            let w: f64 = weight.parse().map_err(|_| {
+                format!("bad qos weight {weight:?} for class {class}")
+            })?;
+            q.classes[class.index()].weight = w;
+            if let Some(b) = budget {
+                let bytes: f64 = b.parse().map_err(|_| {
+                    format!("bad qos budget {b:?} for class {class}")
+                })?;
+                if !bytes.is_finite() || bytes < 1.0 {
+                    return Err(format!(
+                        "qos class {class}: budget must be at least 1 byte, \
+                         got {b:?}"
+                    ));
+                }
+                q.classes[class.index()].budget_bytes = Some(bytes as u64);
+            }
+        }
+        q.validate()?;
+        Ok(q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::Prop;
+
+    #[test]
+    fn classes_roundtrip_names_and_indices() {
+        for (i, c) in QosClass::ALL.into_iter().enumerate() {
+            assert_eq!(c.index(), i);
+            assert_eq!(QosClass::by_name(c.name()), Some(c));
+            assert_eq!(format!("{c}"), c.name());
+        }
+        assert_eq!(QosClass::by_name("platinum"), None);
+    }
+
+    #[test]
+    fn degenerate_and_tiered_shapes() {
+        let d = QosConfig::degenerate();
+        assert!(d.is_degenerate());
+        assert!(d.validate().is_ok());
+        // equal weights at any value stay degenerate; a budget never does
+        let scaled = QosConfig {
+            classes: [ClassSpec { weight: 3.0, budget_bytes: None }; 3],
+            ..QosConfig::degenerate()
+        };
+        assert!(scaled.is_degenerate());
+        let t = QosConfig::tiered();
+        assert!(!t.is_degenerate());
+        assert!(t.validate().is_ok());
+        assert!(t.class(QosClass::Premium).weight
+            > t.class(QosClass::BestEffort).weight);
+        let metered =
+            QosConfig::degenerate().with_budget(QosClass::Standard, 1 << 30);
+        assert!(!metered.is_degenerate());
+    }
+
+    #[test]
+    fn class_of_pins_and_defaults() {
+        let q = QosConfig::tiered()
+            .pin("acme", QosClass::Premium)
+            .pin("crawler", QosClass::BestEffort);
+        assert_eq!(q.class_of("acme"), QosClass::Premium);
+        assert_eq!(q.class_of("crawler"), QosClass::BestEffort);
+        assert_eq!(q.class_of("anyone-else"), QosClass::Standard);
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        let bad = QosConfig::degenerate().with_weight(QosClass::Premium, 0.0);
+        assert!(bad.validate().unwrap_err().contains("premium"));
+        let bad =
+            QosConfig::degenerate().with_weight(QosClass::BestEffort, -2.0);
+        assert!(bad.validate().unwrap_err().contains("best-effort"));
+        let bad = QosConfig::degenerate()
+            .with_weight(QosClass::Standard, f64::NAN);
+        assert!(bad.validate().is_err());
+        let mut bad = QosConfig::degenerate();
+        bad.hi_bytes_per_token = 0;
+        assert!(bad.validate().unwrap_err().contains("hi_bytes_per_token"));
+        let mut bad = QosConfig::degenerate();
+        bad.classes[0].budget_bytes = Some(0);
+        assert!(bad.validate().is_err());
+        let bad = QosConfig::degenerate()
+            .pin("a", QosClass::Premium)
+            .pin("a", QosClass::Standard);
+        assert!(bad.validate().unwrap_err().contains("pinned twice"));
+    }
+
+    #[test]
+    fn budget_envelope_check() {
+        let q = QosConfig::degenerate().with_budget(QosClass::Premium, 100);
+        assert!(q.validate_budgets(1000).is_ok());
+        let err = q.validate_budgets(10).unwrap_err();
+        assert!(err.contains("exceeds the HBM envelope"), "{err}");
+    }
+
+    #[test]
+    fn spec_parses_and_rejects() {
+        let q = QosConfig::parse_spec("premium=4").unwrap();
+        assert_eq!(q.class(QosClass::Premium).weight, 4.0);
+        assert!(!q.is_degenerate());
+        let q = QosConfig::parse_spec(
+            "premium=4:2e9, best-effort=0.25, action=downgrade, \
+             default=best-effort",
+        )
+        .unwrap();
+        assert_eq!(
+            q.class(QosClass::Premium).budget_bytes,
+            Some(2_000_000_000)
+        );
+        assert_eq!(q.class(QosClass::BestEffort).weight, 0.25);
+        assert_eq!(q.budget_action, LimitAction::Downgrade);
+        assert_eq!(q.default_class, QosClass::BestEffort);
+        // empty spec is the degenerate identity
+        assert!(QosConfig::parse_spec("").unwrap().is_degenerate());
+        // unknown names enumerate the valid set
+        let err = QosConfig::parse_spec("gold=2").unwrap_err();
+        assert!(err.contains("known classes"), "{err}");
+        let err = QosConfig::parse_spec("default=gold").unwrap_err();
+        assert!(err.contains("known classes"), "{err}");
+        let err = QosConfig::parse_spec("action=explode").unwrap_err();
+        assert!(err.contains("known actions"), "{err}");
+        assert!(QosConfig::parse_spec("premium").is_err());
+        assert!(QosConfig::parse_spec("premium=fast").is_err());
+        assert!(QosConfig::parse_spec("premium=4:lots").is_err());
+        assert!(QosConfig::parse_spec("premium=4:0.2").is_err());
+        // parsed weights still validate
+        assert!(QosConfig::parse_spec("premium=-1").is_err());
+        assert!(QosConfig::parse_spec("premium=0").is_err());
+    }
+
+    #[test]
+    fn prop_parse_spec_never_panics_and_errors_enumerate() {
+        // Seeded fuzz over near-miss specs: every outcome is Ok or a
+        // descriptive Err — no panic, and unknown class names always
+        // enumerate the valid set.
+        let mut prop = Prop::new("qos_parse_fuzz");
+        let classes = ["premium", "standard", "best-effort", "gold", ""];
+        let weights = ["1", "4.5", "-3", "0", "nan", "1e400", "x", ""];
+        let budgets = ["", ":1e9", ":0", ":-5", ":junk", ":9e18"];
+        prop.run(200, |rng| {
+            let mut parts = Vec::new();
+            for _ in 0..rng.below(4) {
+                let c = classes[rng.below(classes.len())];
+                let w = weights[rng.below(weights.len())];
+                let b = budgets[rng.below(budgets.len())];
+                parts.push(format!("{c}={w}{b}"));
+            }
+            let spec = parts.join(",");
+            match QosConfig::parse_spec(&spec) {
+                Ok(q) => assert!(q.validate().is_ok(), "spec {spec:?}"),
+                Err(e) => {
+                    assert!(!e.is_empty());
+                    if e.contains("unknown qos class") {
+                        assert!(e.contains(
+                            "premium, standard, best-effort"
+                        ));
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_validate_never_panics_on_random_configs() {
+        let mut prop = Prop::new("qos_validate_fuzz");
+        prop.run(200, |rng| {
+            let mut q = QosConfig::degenerate();
+            for c in QosClass::ALL {
+                q.classes[c.index()].weight = match rng.below(5) {
+                    0 => -rng.range_f64(0.0, 10.0),
+                    1 => 0.0,
+                    2 => f64::NAN,
+                    3 => f64::INFINITY,
+                    _ => rng.range_f64(0.1, 8.0),
+                };
+                if rng.below(3) == 0 {
+                    q.classes[c.index()].budget_bytes =
+                        Some(rng.below(1 << 20) as u64 * 1024);
+                }
+            }
+            q.hi_bytes_per_token = rng.below(4) as u64;
+            let _ = q.validate();
+            let _ = q.validate_budgets(1 << 30);
+            let _ = q.is_degenerate();
+        });
+    }
+}

@@ -171,6 +171,13 @@ pub struct HotnessShards {
     /// `shards[s][layer * n_experts + expert]`, same flat layout as the
     /// estimator's `counts`.
     shards: Vec<Vec<AtomicU64>>,
+    /// Optional per-QoS-class count planes (`class_shards[class][s][slot]`,
+    /// DESIGN.md §15): armed only by [`HotnessShards::with_classes`], so
+    /// the unclassed hot path carries zero extra work. Classed recording
+    /// bumps the raw shard *and* the active class's plane; the raw counts
+    /// keep feeding the estimator and drift detector unchanged, while the
+    /// class planes feed the coordinator's weighted score fold.
+    class_shards: Vec<Vec<Vec<AtomicU64>>>,
 }
 
 /// Process-wide round-robin assignment of recording threads to shard
@@ -201,7 +208,33 @@ impl HotnessShards {
             shards: (0..HOTNESS_SHARDS)
                 .map(|_| (0..n_slots).map(|_| AtomicU64::new(0)).collect())
                 .collect(),
+            class_shards: Vec::new(),
         }
+    }
+
+    /// Like [`HotnessShards::new`] but with `n_classes` per-class count
+    /// planes armed (the QoS-weighted coordinator path).
+    pub fn with_classes(
+        n_layers: usize,
+        n_experts: usize,
+        n_classes: usize,
+    ) -> Self {
+        let mut s = Self::new(n_layers, n_experts);
+        s.class_shards = (0..n_classes)
+            .map(|_| {
+                (0..HOTNESS_SHARDS)
+                    .map(|_| {
+                        (0..s.n_slots).map(|_| AtomicU64::new(0)).collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        s
+    }
+
+    /// Number of armed class planes (0 = classless).
+    pub fn n_classes(&self) -> usize {
+        self.class_shards.len()
     }
 
     /// The shard index the calling thread should record into.
@@ -228,6 +261,26 @@ impl HotnessShards {
         }
     }
 
+    /// [`HotnessShards::record_layer`] attributed to a QoS class: bumps
+    /// the raw shard and `class`'s plane in one pass (lock-free). Requires
+    /// armed class planes.
+    #[inline]
+    pub fn record_layer_classed(
+        &self,
+        shard: usize,
+        layer: usize,
+        experts: &[usize],
+        class: usize,
+    ) {
+        let row = &self.shards[shard];
+        let classed = &self.class_shards[class][shard];
+        let base = layer * self.n_experts;
+        for &e in experts {
+            row[base + e].fetch_add(1, Ordering::Relaxed);
+            classed[base + e].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     /// Iteration-boundary merge: drain every shard into the estimator's
     /// serial counters and zero the shards. The caller holds the hotness
     /// lock, so the merged counts become visible to the drift detector
@@ -243,6 +296,31 @@ impl HotnessShards {
                 let v = cell.swap(0, Ordering::Relaxed);
                 if v != 0 {
                     est.counts[i] += v;
+                }
+            }
+        }
+    }
+
+    /// Iteration-boundary merge of the class planes: drain every class's
+    /// shards into `planes[class][slot]` and zero them. Same visibility
+    /// contract as [`HotnessShards::merge_into`] — the caller performs
+    /// both merges under the hotness lock at the same boundary, so the
+    /// class split always sums to the raw counts the estimator folded.
+    pub fn merge_classes_into(&self, planes: &mut [Vec<u64>]) {
+        assert_eq!(
+            planes.len(),
+            self.class_shards.len(),
+            "class plane count mismatch"
+        );
+        for (class, shards) in self.class_shards.iter().enumerate() {
+            let plane = &mut planes[class];
+            assert_eq!(plane.len(), self.n_slots);
+            for shard in shards {
+                for (i, cell) in shard.iter().enumerate() {
+                    let v = cell.swap(0, Ordering::Relaxed);
+                    if v != 0 {
+                        plane[i] += v;
+                    }
                 }
             }
         }
@@ -456,6 +534,32 @@ mod tests {
         for l in 0..2 {
             assert_eq!(merged.layer_scores(l), direct.layer_scores(l));
         }
+    }
+
+    #[test]
+    fn classed_recording_splits_and_sums_to_raw() {
+        let shards = HotnessShards::with_classes(2, 4, 3);
+        assert_eq!(shards.n_classes(), 3);
+        shards.record_layer_classed(0, 0, &[0, 1, 1], 0);
+        shards.record_layer_classed(1 % HOTNESS_SHARDS, 0, &[1], 2);
+        shards.record_layer_classed(0, 1, &[3], 1);
+        // raw counts see everything, exactly as the classless path would
+        let mut est = HotnessEstimator::new(2, 4, 0.5);
+        shards.merge_into(&mut est);
+        assert_eq!(est.layer_counts(0), &[1, 3, 0, 0]);
+        assert_eq!(est.layer_counts(1), &[0, 0, 0, 1]);
+        // class planes partition the same selections
+        let mut planes = vec![vec![0u64; 8]; 3];
+        shards.merge_classes_into(&mut planes);
+        assert_eq!(&planes[0][..4], &[1, 2, 0, 0]);
+        assert_eq!(&planes[2][..4], &[0, 1, 0, 0]);
+        assert_eq!(&planes[1][4..], &[0, 0, 0, 1]);
+        // and the drain zeroed them
+        let mut again = vec![vec![0u64; 8]; 3];
+        shards.merge_classes_into(&mut again);
+        assert!(again.iter().flatten().all(|&v| v == 0));
+        // classless construction stays plane-free
+        assert_eq!(HotnessShards::new(1, 1).n_classes(), 0);
     }
 
     #[test]

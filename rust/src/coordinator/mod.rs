@@ -39,7 +39,9 @@ pub use policy::{
 pub use pools::{BlockPool, PoolAlloc};
 pub use ver::{ExpertKey, HandleTable, Residency};
 
-use crate::config::{DeviceConfig, ModelPreset, ServingConfig};
+use crate::config::{
+    DeviceConfig, ModelPreset, QosClass, ServingConfig,
+};
 use crate::model::Precision;
 use crate::sim::LogicalDims;
 
@@ -54,6 +56,32 @@ pub struct UpdateReport {
     /// The drift-aware hotness layer fired a change-point this update
     /// (always false without `ServingConfig::adaptive_alpha`).
     pub drift_detected: bool,
+}
+
+/// Armed QoS weighting (DESIGN.md §15): a class-weighted twin of the
+/// hotness score plane. Raw counts keep feeding the estimator and drift
+/// detector unchanged; the per-class planes merged at each boundary fold
+/// into `scores` with the *same* α the estimator used that interval, and
+/// the waterfill ranks experts by this plane instead of the raw one.
+/// Present only for a non-degenerate [`crate::config::QosConfig`] — the
+/// degenerate/absent case runs the classic plan byte-identically.
+struct QosWeighting {
+    /// Class hotness weights, [`QosClass::index`] order.
+    weights: [f64; 3],
+    /// Class attributed to selections recorded *now* (set by the serving
+    /// layer before each tagged phase; reads are relaxed — attribution
+    /// follows the same boundary-visibility contract as the counts).
+    active: std::sync::atomic::AtomicUsize,
+    state: std::sync::Mutex<QosScores>,
+}
+
+/// The serial fold state behind [`QosWeighting`].
+struct QosScores {
+    /// Per-class merged counts of the current interval
+    /// (`counts[class][layer * n_experts + expert]`).
+    counts: Vec<Vec<u64>>,
+    /// Class-weighted EMA score plane, same flat layout as the estimator.
+    scores: Vec<f64>,
 }
 
 /// The runtime-side of DynaExq for one model.
@@ -76,6 +104,9 @@ pub struct Coordinator {
     /// `cfg.adaptive_alpha` is off — the classic fixed-α stack).
     drift: std::sync::Mutex<Option<DriftDetector>>,
     next_update_s: std::sync::Mutex<f64>,
+    /// Class-weighted scoring (`None` without an armed QoS config — the
+    /// classic tenant-blind waterfill, byte-identically).
+    qos: Option<QosWeighting>,
 }
 
 impl Coordinator {
@@ -104,6 +135,9 @@ impl Coordinator {
             cfg.drift
                 .validate()
                 .map_err(|e| format!("adaptive hotness: {e}"))?;
+        }
+        if let Some(q) = &cfg.qos {
+            q.validate()?;
         }
         let ladder = preset.ladder.clone();
         let base = ladder.base_tier();
@@ -158,6 +192,31 @@ impl Coordinator {
             }
         }
 
+        // QoS weighting arms only for a non-degenerate config: the score
+        // plane, class count planes, and classed recording are otherwise
+        // structurally absent, so the collapse is byte-identical.
+        let n_classes = QosClass::ALL.len();
+        let slots = layers * preset.n_experts;
+        let qos = cfg
+            .qos
+            .as_ref()
+            .filter(|q| !q.is_degenerate())
+            .map(|q| QosWeighting {
+                weights: q.weights(),
+                active: std::sync::atomic::AtomicUsize::new(
+                    QosClass::Standard.index(),
+                ),
+                state: std::sync::Mutex::new(QosScores {
+                    counts: vec![vec![0; slots]; n_classes],
+                    scores: vec![0.0; slots],
+                }),
+            });
+        let shards = if qos.is_some() {
+            HotnessShards::with_classes(layers, preset.n_experts, n_classes)
+        } else {
+            HotnessShards::new(layers, preset.n_experts)
+        };
+
         let dims_for_bytes = dims.clone();
         let pipeline = TransitionPipeline::new(
             handles.clone(),
@@ -176,7 +235,7 @@ impl Coordinator {
             budget,
             pools,
             pipeline,
-            shards: HotnessShards::new(layers, preset.n_experts),
+            shards,
             hotness: std::sync::Mutex::new(HotnessEstimator::new(
                 layers,
                 preset.n_experts,
@@ -190,6 +249,7 @@ impl Coordinator {
             next_update_s: std::sync::Mutex::new(
                 cfg.update_interval_ms / 1e3,
             ),
+            qos,
         })
     }
 
@@ -243,7 +303,15 @@ impl Coordinator {
     /// interval-boundary merge (DESIGN.md §13).
     pub fn record_routing(&self, layer: usize, experts: &[usize]) {
         let shard = self.shards.shard_for_current_thread();
-        self.shards.record_layer(shard, layer, experts);
+        match &self.qos {
+            Some(q) => self.shards.record_layer_classed(
+                shard,
+                layer,
+                experts,
+                q.active.load(std::sync::atomic::Ordering::Relaxed),
+            ),
+            None => self.shards.record_layer(shard, layer, experts),
+        }
     }
 
     /// Feed several layers' router traces — the iteration-boundary flush
@@ -256,8 +324,51 @@ impl Coordinator {
         I: IntoIterator<Item = (usize, &'a [usize])>,
     {
         let shard = self.shards.shard_for_current_thread();
-        for (layer, experts) in batches {
-            self.shards.record_layer(shard, layer, experts);
+        match &self.qos {
+            Some(q) => {
+                let class =
+                    q.active.load(std::sync::atomic::Ordering::Relaxed);
+                for (layer, experts) in batches {
+                    self.shards
+                        .record_layer_classed(shard, layer, experts, class);
+                }
+            }
+            None => {
+                for (layer, experts) in batches {
+                    self.shards.record_layer(shard, layer, experts);
+                }
+            }
+        }
+    }
+
+    /// Whether class-weighted scoring is armed (a non-degenerate
+    /// `ServingConfig::qos`).
+    pub fn qos_armed(&self) -> bool {
+        self.qos.is_some()
+    }
+
+    /// Attribute subsequently recorded routing to `class` (DESIGN.md §15).
+    /// A no-op without an armed QoS config; out-of-range indices clamp to
+    /// best-effort. Relaxed store — attribution becomes visible with the
+    /// counts it tags, at the next interval boundary.
+    pub fn set_active_class(&self, class: usize) {
+        if let Some(q) = &self.qos {
+            q.active.store(
+                class.min(QosClass::ALL.len() - 1),
+                std::sync::atomic::Ordering::Relaxed,
+            );
+        }
+    }
+
+    /// The class-weighted score of one expert (diagnostics/tests); falls
+    /// back to the raw smoothed score when QoS is unarmed.
+    pub fn weighted_score(&self, layer: usize, expert: usize) -> f64 {
+        match &self.qos {
+            Some(q) => {
+                let qs = q.state.lock().unwrap();
+                qs.scores[layer * self.preset.n_experts + expert]
+            }
+            None => self.hotness_score(layer, expert),
         }
     }
 
@@ -298,6 +409,14 @@ impl Coordinator {
         // from them — are byte-identical to the old single-lock recording
         // path regardless of producer interleaving.
         self.shards.merge_into(&mut hot);
+        // QoS class planes merge at the same boundary, under the same
+        // hotness lock (DESIGN.md §15): the class split of this interval's
+        // counts is exactly the raw counts the estimator just absorbed.
+        let mut qos_state =
+            self.qos.as_ref().map(|q| q.state.lock().unwrap());
+        if let Some(qs) = qos_state.as_deref_mut() {
+            self.shards.merge_classes_into(&mut qs.counts);
+        }
         // Drift-aware α (DESIGN.md §10): the detector reads this
         // interval's raw counts before the fold; on a change-point the
         // stale scores shrink and the EMA runs at the reactive α for the
@@ -310,6 +429,14 @@ impl Coordinator {
             if det.observe(&hot) {
                 report.drift_detected = true;
                 hot.scale_scores(det.stale_decay());
+                // the weighted plane decays in lockstep — stale premium
+                // hotness must not outvote post-drift traffic either
+                if let Some(qs) = qos_state.as_deref_mut() {
+                    let decay = det.stale_decay();
+                    for s in &mut qs.scores {
+                        *s *= decay;
+                    }
+                }
             }
             // The recovery budget spans intervals *of traffic*: an idle
             // interval neither consumes reactive intervals nor folds at
@@ -323,6 +450,22 @@ impl Coordinator {
             hot.set_alpha(alpha);
         }
         hot.end_interval();
+        // Weighted fold: the same EMA recurrence as the estimator's, at
+        // the exact α it just folded with (adaptive drops included), over
+        // class-weighted counts — so the weighted plane tracks the raw
+        // one's dynamics and differs only by the class multipliers.
+        if let (Some(q), Some(qs)) = (&self.qos, qos_state.as_deref_mut()) {
+            let alpha = hot.alpha();
+            let QosScores { counts, scores } = qs;
+            for (i, s) in scores.iter_mut().enumerate() {
+                let mut c = 0.0;
+                for (class, plane) in counts.iter_mut().enumerate() {
+                    c += q.weights[class] * plane[i] as f64;
+                    plane[i] = 0;
+                }
+                *s = alpha * *s + (1.0 - alpha) * c;
+            }
+        }
         let layers = self.preset.n_layers_logical();
         // Effective assignment: the published rung from the lock-free
         // handle table, overridden by in-flight transition targets (from
@@ -338,10 +481,18 @@ impl Coordinator {
         // loop: a 48-layer update allocates nothing per layer.
         let mut scratch = LadderScratch::default();
         let mut plan = LadderPlan::default();
+        let n_experts = self.preset.n_experts;
         for l in 0..layers {
+            // Armed QoS substitutes the class-weighted plane for the raw
+            // scores; the waterfill itself is unchanged (premium traffic
+            // wins rungs purely by outscoring, per DESIGN.md §15).
+            let scores = match qos_state.as_deref() {
+                Some(qs) => &qs.scores[l * n_experts..(l + 1) * n_experts],
+                None => hot.layer_scores(l),
+            };
             plan_layer_ladder_into(
                 &mut scratch,
-                hot.layer_scores(l),
+                scores,
                 &eff[l],
                 &cum_caps,
                 self.cfg.hysteresis_margin,
@@ -736,5 +887,62 @@ mod tests {
         for p in &c.pools {
             assert!(p.consistent());
         }
+    }
+
+    #[test]
+    fn degenerate_qos_config_is_structurally_inert() {
+        let mut cfg = ServingConfig::default();
+        cfg.qos = Some(crate::config::QosConfig::degenerate());
+        let preset = ModelPreset::phi_sim();
+        let dev = DeviceConfig::default();
+        let c = Coordinator::new(&preset, &cfg, &dev).unwrap();
+        assert!(!c.qos_armed(), "degenerate config must not arm QoS");
+        c.set_active_class(0); // must be a no-op when unarmed
+        for _ in 0..50 {
+            c.record_routing(0, &[0, 1]);
+        }
+        c.tick(1.0);
+        assert!(c.hotness_score(0, 0) > 0.0);
+        // the weighted view collapses to the raw estimator exactly
+        assert_eq!(c.weighted_score(0, 0), c.hotness_score(0, 0));
+        // an invalid config is refused at construction, not at tick
+        cfg.qos = Some(
+            crate::config::QosConfig::tiered()
+                .with_weight(QosClass::Premium, -1.0),
+        );
+        let err = Coordinator::new(&preset, &cfg, &dev).unwrap_err();
+        assert!(err.contains("premium"), "{err}");
+    }
+
+    #[test]
+    fn premium_weight_wins_top_rung_at_equal_raw_hotness() {
+        let mut cfg = ServingConfig::default();
+        cfg.hysteresis_margin = 0.0;
+        cfg.ema_alpha = 0.0; // fully reactive for the test
+        cfg.max_inflight_promotions = 1024;
+        cfg.n_hi_override = Some(1); // a single contested top slot
+        cfg.qos = Some(crate::config::QosConfig::tiered());
+        let preset = ModelPreset::phi_sim();
+        let c = Coordinator::new(&preset, &cfg, &DeviceConfig::default())
+            .unwrap();
+        assert!(c.qos_armed());
+        // identical raw traffic from two classes: best-effort on expert 2,
+        // premium on expert 5 — the higher index loses index tie-breaks,
+        // so only the class weighting can hand it the top rung
+        c.set_active_class(QosClass::BestEffort.index());
+        for _ in 0..50 {
+            c.record_routing(0, &[2]);
+        }
+        c.set_active_class(QosClass::Premium.index());
+        for _ in 0..50 {
+            c.record_routing(0, &[5]);
+        }
+        c.tick(1.0);
+        c.pipeline.wait_staged();
+        c.tick(1e3);
+        assert!(c.weighted_score(0, 5) > c.weighted_score(0, 2));
+        assert_eq!(c.resolve(0, 5), Precision::Fp16);
+        assert_eq!(c.resolve(0, 2), Precision::Int4);
+        assert!(c.budget.within_envelope());
     }
 }

@@ -44,9 +44,27 @@ pub mod quality_exp {
     }
 }
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::cli::Args;
+
+/// Parse `--qos`: the canned `tiered` ladder (premium 4× / standard 1× /
+/// best-effort 0.25×) or a `class=weight[:budget_bytes]` spec list
+/// (DESIGN.md §15), e.g. `--qos premium=8:2000000000,best-effort=0.25`.
+/// Returns `None` when the flag is absent; the degenerate single-class
+/// config a spec can collapse to is still armed-off inside the stack.
+fn parse_qos_arg(args: &Args) -> Result<Option<crate::config::QosConfig>> {
+    use crate::config::QosConfig;
+    let Some(spec) = args.get("qos") else {
+        return Ok(None);
+    };
+    let q = if spec == "tiered" {
+        QosConfig::tiered()
+    } else {
+        QosConfig::parse_spec(spec).map_err(|e| anyhow!("--qos: {e}"))?
+    };
+    Ok(Some(q))
+}
 
 /// `dynaexq serve` — one serving session on the builder API.
 pub fn cmd_serve(args: &Args) -> Result<()> {
@@ -77,13 +95,18 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         // `--rounds` are ignored); per-phase boundary snapshots print as a
         // timeline, kv-encoded under --kv.
         let sc = helpers::scenario(sc_name)?;
-        let mut session = crate::serving::session::ServeSession::builder()
+        let mut builder = crate::serving::session::ServeSession::builder()
             .model(model)
             .method(method)
             .seed(seed)
             .warmup(warmup)
-            .devices(devices)
-            .build()?;
+            .devices(devices);
+        if let Some(q) = parse_qos_arg(args)? {
+            // Class-weighted hotness only — without a front door there is
+            // no budget ledger to charge.
+            builder = builder.qos(q);
+        }
+        let mut session = builder.build()?;
         println!(
             "model {model} | method {method} | scenario {sc_name} \
              ({} phases, {} rounds) | batch {batch} prompt {prompt} \
@@ -109,6 +132,12 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         }
         println!("{}", session.report());
         return Ok(());
+    }
+    if args.has("qos") {
+        bail!(
+            "--qos needs an allocation surface: add --frontdoor, \
+             --scenario, or --replicas"
+        );
     }
     let (session, report) = helpers::serve_session_with(
         model, method, workload, batch, prompt, output, rounds, seed, warmup,
@@ -156,15 +185,21 @@ fn cmd_serve_frontdoor(args: &Args) -> Result<()> {
             TenantLimits { soft_limit: cap, hard_limit: cap, ..cfg.tenant_limits };
     }
 
-    let mut session = crate::serving::session::ServeSession::builder()
+    let mut builder = crate::serving::session::ServeSession::builder()
         .model(model)
         .method(method)
         .workload(workload)
         .seed(seed)
         .warmup(warmup)
         .devices(devices)
-        .frontdoor(cfg)
-        .build()?;
+        .frontdoor(cfg);
+    if let Some(q) = parse_qos_arg(args)? {
+        // Arms the door's budget ledger and the class-weighted hotness
+        // fold together (the builder validates the spec against the HBM
+        // envelope before anything is constructed).
+        builder = builder.qos(q);
+    }
+    let mut session = builder.build()?;
 
     if let Some(sc_name) = args.get("scenario") {
         let sc = helpers::scenario(sc_name)?;
@@ -301,7 +336,7 @@ fn cmd_serve_fleet(args: &Args, replicas: usize) -> Result<()> {
         None => crate::workload::FaultPlan::none(),
     };
 
-    let mut fleet = Fleet::builder()
+    let mut builder = Fleet::builder()
         .model(model)
         .method(method)
         .workload(workload)
@@ -309,8 +344,11 @@ fn cmd_serve_fleet(args: &Args, replicas: usize) -> Result<()> {
         .seed(seed)
         .warmup(warmup)
         .fleet_cfg(fc)
-        .faults(faults)
-        .build()?;
+        .faults(faults);
+    if let Some(q) = parse_qos_arg(args)? {
+        builder = builder.qos(q);
+    }
+    let mut fleet = builder.build()?;
 
     let sc_name = args.get_or("scenario", "steady");
     let sc = helpers::scenario(sc_name)?;
@@ -453,6 +491,7 @@ pub fn cmd_report(args: &Args) -> Result<()> {
             "a8" => ablations::a8_tier_count(fast)?,
             "a9" => ablations::a9_sharding(fast)?,
             "a10" => ablations::a10_adaptive_drift(fast)?,
+            "a11" => ablations::a11_qos_frontier(fast)?,
             other => bail!("unknown experiment {other:?}"),
         })
     };
@@ -464,7 +503,7 @@ pub fn cmd_report(args: &Args) -> Result<()> {
         for id in [
             "t1", "t2", "f1", "f2", "f3", "t4", "f6", "f7", "f8", "f9",
             "f10", "a1", "a2", "a3", "a4", "a5", "a6", "a7", "a8", "a9",
-            "a10",
+            "a10", "a11",
         ] {
             if !numeric && matches!(id, "f3" | "t4" | "a5") {
                 println!(

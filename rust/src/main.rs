@@ -4,7 +4,7 @@
 //! * `serve`   — run a modeled serving session and print metrics
 //! * `bench`   — wall-clock serving benchmark matrix → BENCH_serving.json
 //! * `report`  — regenerate one paper table/figure (`--exp t1|t2|f1|f2|f3|
-//!   t4|f6|f7|f8|f9|f10|a1..a8`)
+//!   t4|f6|f7|f8|f9|f10|a1..a11`)
 //! * `quality` — numeric quality run for one model/method
 //! * `trace`   — dump routing-trace statistics for a workload
 //!
@@ -60,6 +60,14 @@ SUBCOMMANDS:
                             failover can catch them mid-stream)
                --parallel-drain  (serve fleet replicas on threads;
                             byte-identical to the serial path)
+               --qos tiered | class=weight[:budget_bytes][,...]
+                            (class-weighted allocation + per-tenant
+                            hi-precision budgets — DESIGN.md §15;
+                            classes premium|standard|best-effort, e.g.
+                            premium=8:2000000000,best-effort=0.25;
+                            `tiered` is the canned 4/1/0.25 ladder;
+                            needs --frontdoor, --scenario, or
+                            --replicas)
                --kv   (also print the machine-readable metrics snapshot)
     bench    Wall-clock serving benchmark matrix (DESIGN.md §11): every
              bench method × scripted scenario × {1,2}-device groups ×
@@ -67,8 +75,8 @@ SUBCOMMANDS:
              clock; emits the machine-readable perf trajectory
              BENCH_serving.json (front-door cells carry per-lane p50/p95
              TTFT, typed-rejection totals, and admission-path submit
-             p50/p95, fanned out over a producer-thread axis {1,4} and
-             a fleet-replica axis {1,2}).
+             p50/p95, fanned out over a producer-thread axis {1,4}, a
+             fleet-replica axis {1,2}, and a QoS axis {off, tiered}).
                --smoke  (smallest cell triple — the CI job)
                --model ...   (default qwen30b-sim; phi-sim under --smoke)
                --out path    (default BENCH_serving.json)
@@ -77,10 +85,10 @@ SUBCOMMANDS:
                             single count; front-door cells only)
                --filter key=value[,...]  (narrow axes: method, scenario,
                             devices, batch, frontdoor, producers,
-                            replicas — re-run single cells without the
-                            full matrix)
+                            replicas, qos — re-run single cells without
+                            the full matrix)
     report   Regenerate a paper table/figure.
-               --exp t1|t2|t4|f1|f2|f3|f6..f10|a1..a10|all  [--fast]
+               --exp t1|t2|t4|f1|f2|f3|f6..f10|a1..a11|all  [--fast]
     quality  Numeric quality run (real PJRT execution; needs a build with
              --features numeric).
                --model ... --method fp16|static|dynaexq

@@ -8,7 +8,7 @@
 
 use std::sync::{Arc, Mutex};
 
-use crate::config::{DeviceConfig, ModelPreset, ServingConfig};
+use crate::config::{DeviceConfig, ModelPreset, QosClass, ServingConfig};
 use crate::coordinator::{Coordinator, DeviceGroup, TransitionTotals};
 use crate::model::{Precision, PrecisionLadder};
 use crate::workload::Trace;
@@ -182,6 +182,19 @@ pub trait ResidencyBackend: Send {
     fn resident_overlap(&self, _layer: usize, _experts: &[usize]) -> usize {
         0
     }
+
+    /// Attribute subsequent routing records and resolutions to the QoS
+    /// class at `class` (an index into [`QosClass::ALL`]) — a no-op for
+    /// backends without an armed QoS config (DESIGN.md §15). Degenerate
+    /// configs never arm, so the classic stack takes this default.
+    fn set_active_class(&mut self, _class: usize) {}
+
+    /// Resolutions served per `[class][tier]` since boot (class order =
+    /// [`QosClass::ALL`], tier 0 first). Empty when QoS is unarmed, so
+    /// snapshots of the classic stack stay byte-identical.
+    fn class_tier_resolves(&self) -> Vec<Vec<u64>> {
+        Vec::new()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -197,6 +210,11 @@ pub struct DynaExqBackend {
     resolves: u64,
     /// Resolutions served per rung, tier 0 first.
     tier_resolves: Vec<u64>,
+    /// Per-`[class][tier]` resolution counts — `Some` iff the coordinator
+    /// armed a non-degenerate QoS config (DESIGN.md §15).
+    class_resolves: Option<Vec<Vec<u64>>>,
+    /// Class attributed to resolutions between `set_active_class` calls.
+    active_class: usize,
     /// Routing events buffered since the last boundary; flushed under one
     /// hotness lock in `tick`/`quiesce` (DESIGN.md §11).
     buf: RoutingBuffer,
@@ -217,12 +235,17 @@ impl DynaExqBackend {
     pub fn from_coordinator(coord: Coordinator, blocking: bool) -> Self {
         let n_tiers = coord.preset.ladder.n_tiers();
         let n_layers = coord.preset.n_layers_logical();
+        let class_resolves = coord
+            .qos_armed()
+            .then(|| vec![vec![0; n_tiers]; QosClass::ALL.len()]);
         Self {
             buf: RoutingBuffer::new(n_layers),
             coord,
             blocking,
             resolves: 0,
             tier_resolves: vec![0; n_tiers],
+            class_resolves,
+            active_class: QosClass::Standard.index(),
         }
     }
 
@@ -259,6 +282,9 @@ impl ResidencyBackend for DynaExqBackend {
         let tier = self.coord.resolve_tier(layer, expert);
         self.resolves += 1;
         self.tier_resolves[tier] += 1;
+        if let Some(cr) = &mut self.class_resolves {
+            cr[self.active_class][tier] += 1;
+        }
         (self.coord.preset.ladder.tier(tier), 0.0)
     }
 
@@ -354,6 +380,15 @@ impl ResidencyBackend for DynaExqBackend {
             .filter(|&&e| self.coord.resolve_tier(layer, e) == 0)
             .count()
     }
+
+    fn set_active_class(&mut self, class: usize) {
+        self.active_class = class.min(QosClass::ALL.len() - 1);
+        self.coord.set_active_class(class);
+    }
+
+    fn class_tier_resolves(&self) -> Vec<Vec<u64>> {
+        self.class_resolves.clone().unwrap_or_default()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -373,6 +408,11 @@ pub struct DynaExqShardedBackend {
     resolves: u64,
     /// Resolutions served per rung, tier 0 first.
     tier_resolves: Vec<u64>,
+    /// Per-`[class][tier]` resolution counts — `Some` iff the group's
+    /// devices armed a non-degenerate QoS config (DESIGN.md §15).
+    class_resolves: Option<Vec<Vec<u64>>>,
+    /// Class attributed to resolutions between `set_active_class` calls.
+    active_class: usize,
     /// Scratch: per-device local-id routing split.
     split: Vec<Vec<usize>>,
     /// Routing events buffered since the last boundary (global expert
@@ -398,6 +438,9 @@ impl DynaExqShardedBackend {
         let ladder = group.devices[0].preset.ladder.clone();
         let n_tiers = ladder.n_tiers();
         let n_layers = group.devices[0].preset.n_layers_logical();
+        let class_resolves = group.devices[0]
+            .qos_armed()
+            .then(|| vec![vec![0; n_tiers]; QosClass::ALL.len()]);
         Self {
             split: vec![Vec::new(); group.n_devices()],
             buf: RoutingBuffer::new(n_layers),
@@ -405,6 +448,8 @@ impl DynaExqShardedBackend {
             ladder,
             resolves: 0,
             tier_resolves: vec![0; n_tiers],
+            class_resolves,
+            active_class: QosClass::Standard.index(),
         }
     }
 
@@ -444,6 +489,9 @@ impl ResidencyBackend for DynaExqShardedBackend {
         let tier = self.group.resolve_tier(layer, expert);
         self.resolves += 1;
         self.tier_resolves[tier] += 1;
+        if let Some(cr) = &mut self.class_resolves {
+            cr[self.active_class][tier] += 1;
+        }
         (self.ladder.tier(tier), 0.0)
     }
 
@@ -530,6 +578,17 @@ impl ResidencyBackend for DynaExqShardedBackend {
             .iter()
             .filter(|&&e| self.group.resolve_tier(layer, e) == 0)
             .count()
+    }
+
+    fn set_active_class(&mut self, class: usize) {
+        self.active_class = class.min(QosClass::ALL.len() - 1);
+        for d in &self.group.devices {
+            d.set_active_class(class);
+        }
+    }
+
+    fn class_tier_resolves(&self) -> Vec<Vec<u64>> {
+        self.class_resolves.clone().unwrap_or_default()
     }
 }
 
@@ -687,6 +746,14 @@ impl ResidencyBackend for RecordingBackend {
 
     fn resident_overlap(&self, layer: usize, experts: &[usize]) -> usize {
         self.inner.resident_overlap(layer, experts)
+    }
+
+    fn set_active_class(&mut self, class: usize) {
+        self.inner.set_active_class(class)
+    }
+
+    fn class_tier_resolves(&self) -> Vec<Vec<u64>> {
+        self.inner.class_tier_resolves()
     }
 }
 
@@ -927,6 +994,44 @@ mod tests {
         assert!(s.group.devices[0].hotness_score(0, 0) > 0.0);
         assert!(s.group.devices[1].hotness_score(0, 0) > 0.0);
         assert!(s.transition_totals().promotions >= 2);
+    }
+
+    #[test]
+    fn qos_armed_backend_splits_resolves_by_class() {
+        let preset = ModelPreset::phi_sim();
+        let mut cfg = ServingConfig::default();
+        let dev = DeviceConfig::default();
+        // unarmed (default config): the per-class view stays empty and
+        // class switches are no-ops — the classic stack is untouched
+        let mut plain = DynaExqBackend::new(&preset, &cfg, &dev).unwrap();
+        plain.set_active_class(0);
+        plain.resolve(0, 0, 0.0);
+        assert!(plain.class_tier_resolves().is_empty());
+        // armed: every resolution lands on the active class's row
+        cfg.qos = Some(crate::config::QosConfig::tiered());
+        let mut b = DynaExqBackend::new(&preset, &cfg, &dev).unwrap();
+        b.set_active_class(QosClass::Premium.index());
+        b.resolve(0, 0, 0.0);
+        b.resolve(0, 1, 0.0);
+        b.set_active_class(QosClass::BestEffort.index());
+        b.resolve(0, 2, 0.0);
+        let cr = b.class_tier_resolves();
+        assert_eq!(cr.len(), QosClass::ALL.len());
+        assert_eq!(cr[QosClass::Premium.index()].iter().sum::<u64>(), 2);
+        assert_eq!(cr[QosClass::BestEffort.index()].iter().sum::<u64>(), 1);
+        assert_eq!(cr[QosClass::Standard.index()].iter().sum::<u64>(), 0);
+        assert_eq!(cr.iter().flatten().sum::<u64>(), 3, "fully accounted");
+        // the sharded flavour arms from the same config and forwards the
+        // class switch to every device
+        let mut s =
+            DynaExqShardedBackend::new(&preset, &cfg, &dev, 2).unwrap();
+        s.set_active_class(QosClass::Premium.index());
+        s.resolve(0, 0, 0.0);
+        let cr = s.class_tier_resolves();
+        assert_eq!(cr[QosClass::Premium.index()].iter().sum::<u64>(), 1);
+        for d in &s.group.devices {
+            assert!(d.qos_armed());
+        }
     }
 
     #[test]

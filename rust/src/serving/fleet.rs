@@ -43,13 +43,15 @@
 //! registry's `dynaexq-fleet` method — so the DXTR trace-replay
 //! conformance suite exercises replicated routing without an engine.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::fleet::FleetConfig;
 use crate::config::frontdoor::{FrontDoorConfig, Lane};
-use crate::config::{DeviceConfig, ModelPreset, ServingConfig};
+use crate::config::{
+    DeviceConfig, ModelPreset, QosClass, QosConfig, ServingConfig,
+};
 use crate::metrics::ServingMetrics;
 use crate::util::{mean, XorShiftRng};
 use crate::workload::{
@@ -361,6 +363,17 @@ impl Fleet {
         self.fd.submit(req, tenant, lane, now)
     }
 
+    /// Pin `tenant`'s QoS class at the shared front door and switch
+    /// every replica's hotness-attribution class (scenario phase
+    /// boundaries — DESIGN.md §15). Structurally a no-op when no
+    /// non-degenerate [`QosConfig`] is armed.
+    pub fn set_qos_class(&mut self, tenant: &str, class: QosClass) {
+        self.fd.set_tenant_class(tenant, class);
+        for e in &mut self.replicas {
+            e.backend.set_active_class(class.index());
+        }
+    }
+
     /// Administratively drain a replica (elastic scale-in): it takes no
     /// new work and its in-flight streams fail over immediately.
     pub fn drain_replica(&mut self, r: usize) {
@@ -391,9 +404,15 @@ impl Fleet {
             .into_iter()
             .map(|(name, _)| name)
             .collect();
+        let mut finished: Vec<u64> = Vec::new();
         for a in stranded {
             let remaining = a.req.output_len.saturating_sub(a.generated);
             if remaining == 0 {
+                // the stream completed on the dying replica — settle its
+                // QoS charge here since it will never re-enter a serve
+                // round (readmitted remainders settle at completion, so
+                // budget conservation holds exactly across failover)
+                finished.push(a.req.id);
                 continue;
             }
             let (tenant, lane) = self
@@ -408,6 +427,7 @@ impl Fleet {
             self.fd.readmit(req, name, lane);
             self.stats.readmitted += 1;
         }
+        self.fd.settle(&finished);
         self.stats.failovers += 1;
     }
 
@@ -472,6 +492,12 @@ impl Fleet {
         for (r, batch) in assignments.iter().enumerate() {
             self.served_by_replica[r] += batch.len() as u64;
         }
+        // every assigned request completes inside this round, so its QoS
+        // charge settles at the end of it (mirrors ServeSession::drain)
+        let completed: Vec<u64> = assignments
+            .iter()
+            .flat_map(|b| b.iter().map(|q| q.req.id))
+            .collect();
         if self.cfg.parallel_drain && self.replicas.len() > 1 {
             // Replicas are independent engines; serve them on scoped
             // threads and fold outcomes back in replica-index order, so
@@ -514,6 +540,7 @@ impl Fleet {
                 self.fd.absorb(&sched);
             }
         }
+        self.fd.settle(&completed);
         Ok(())
     }
 
@@ -559,12 +586,22 @@ impl Fleet {
                 sched.admission_log.push((tenant, lane));
                 self.served_by_replica[r] += 1;
             }
+            let before: Vec<u64> =
+                self.active[r].iter().map(|a| a.req.id).collect();
             for _ in 0..chunk {
                 if self.active[r].is_empty() {
                     break;
                 }
                 self.replicas[r].decode_round(&mut self.active[r]);
             }
+            // streams that left the active batch finished this round —
+            // settle their QoS charges (a readmitted remainder settles
+            // under its original id, refunding the original charge)
+            let still: HashSet<u64> =
+                self.active[r].iter().map(|a| a.req.id).collect();
+            let done: Vec<u64> =
+                before.into_iter().filter(|id| !still.contains(id)).collect();
+            self.fd.settle(&done);
             self.replicas[r].metrics.duration_s = self.replicas[r].now();
             self.fd.absorb(&sched);
         }
@@ -627,6 +664,9 @@ impl Fleet {
                 .tenant
                 .clone()
                 .unwrap_or_else(|| phase.profile.name.to_string());
+            if let Some(class) = phase.qos_class {
+                self.set_qos_class(&tenant, class);
+            }
             let b = Scenario::scaled_batch(batch, phase.load);
             for _ in 0..phase.rounds {
                 let now = self.now();
@@ -660,7 +700,19 @@ impl Fleet {
         device_resident: Vec<Vec<usize>>,
         promo_queue_depth: Vec<usize>,
         drift: (u64, u64),
+        qos_class_resolved: Vec<Vec<u64>>,
     ) -> MetricsSnapshot {
+        let (qos_charged, qos_refunded, qos_downgraded, qos_budget_rejected) =
+            if self.fd.qos_armed() {
+                (
+                    self.fd.qos_charged(),
+                    self.fd.qos_refunded(),
+                    self.fd.stats().qos_downgraded(),
+                    self.fd.stats().budget_exhausted(),
+                )
+            } else {
+                (Vec::new(), Vec::new(), 0, 0)
+            };
         MetricsSnapshot {
             model: self.model.clone(),
             method: self.method.clone(),
@@ -689,6 +741,11 @@ impl Fleet {
             fd_lane_admitted: self.fd.stats().lane_admitted(),
             fd_lane_rejected: self.fd.stats().lane_rejected(),
             fd_lane_deadline_miss: self.fd.stats().lane_deadline_miss(),
+            qos_class_resolved,
+            qos_charged,
+            qos_refunded,
+            qos_downgraded,
+            qos_budget_rejected,
             ..MetricsSnapshot::default()
         }
     }
@@ -708,6 +765,7 @@ impl Fleet {
             b.device_residency(),
             b.promo_queue_depth(),
             b.drift_stats(),
+            b.class_tier_resolves(),
         )
     }
 
@@ -726,6 +784,7 @@ impl Fleet {
         let mut promo: Vec<usize> = Vec::new();
         let mut drift = (0u64, 0u64);
         let mut hi = Vec::new();
+        let mut classed: Vec<Vec<u64>> = Vec::new();
         for e in &self.replicas {
             m.merge(&e.metrics);
             pre.extend_from_slice(&e.activation.prefill);
@@ -745,6 +804,18 @@ impl Fleet {
             let d = b.drift_stats();
             drift.0 += d.0;
             drift.1 += d.1;
+            // per-class tier counters sum element-wise, like the rungs
+            for (c, row) in b.class_tier_resolves().into_iter().enumerate() {
+                if classed.len() <= c {
+                    classed.resize(c + 1, Vec::new());
+                }
+                if classed[c].len() < row.len() {
+                    classed[c].resize(row.len(), 0);
+                }
+                for (t, n) in row.into_iter().enumerate() {
+                    classed[c][t] += n;
+                }
+            }
         }
         let mut s = self.compose_snapshot(
             &m,
@@ -755,6 +826,7 @@ impl Fleet {
             devres,
             promo,
             drift,
+            classed,
         );
         s.fleet_replicas = self.replicas.len() as u64;
         s.fleet_health =
@@ -783,6 +855,7 @@ pub struct FleetBuilder {
     frontdoor: FrontDoorConfig,
     fleet: FleetConfig,
     faults: FaultPlan,
+    qos: Option<QosConfig>,
 }
 
 impl Default for FleetBuilder {
@@ -801,6 +874,7 @@ impl Default for FleetBuilder {
             frontdoor: FrontDoorConfig::default(),
             fleet: FleetConfig::default(),
             faults: FaultPlan::none(),
+            qos: None,
         }
     }
 }
@@ -861,6 +935,14 @@ impl FleetBuilder {
         self
     }
 
+    /// Class-weighted allocation config (DESIGN.md §15): validated at
+    /// build time against the serving HBM envelope, shared by the front
+    /// door's budget ledger and every replica's coordinator.
+    pub fn qos(mut self, cfg: QosConfig) -> Self {
+        self.qos = Some(cfg);
+        self
+    }
+
     pub fn fleet_cfg(mut self, cfg: FleetConfig) -> Self {
         self.fleet = cfg;
         self
@@ -913,7 +995,16 @@ impl FleetBuilder {
         }
         let registry =
             self.registry.unwrap_or_else(BackendRegistry::with_builtins);
-        let fd = FrontDoor::new(self.frontdoor)
+        let mut serving_cfg = self.serving_cfg;
+        let mut frontdoor_cfg = self.frontdoor;
+        if let Some(q) = self.qos {
+            q.validate().map_err(|e| anyhow!("qos: {e}"))?;
+            q.validate_budgets(serving_cfg.hbm_budget_bytes)
+                .map_err(|e| anyhow!("qos: {e}"))?;
+            frontdoor_cfg.qos = Some(q.clone());
+            serving_cfg.qos = Some(q);
+        }
+        let fd = FrontDoor::new(frontdoor_cfg)
             .map_err(|e| anyhow!("front door: {e}"))?;
         let n = self.fleet.replicas;
         let mut replicas = Vec::with_capacity(n);
@@ -921,7 +1012,7 @@ impl FleetBuilder {
             let backend = registry
                 .build(
                     &self.method,
-                    &BackendCtx::new(&preset, &self.serving_cfg, &self.device)
+                    &BackendCtx::new(&preset, &serving_cfg, &self.device)
                         .with_profile(&profile)
                         .with_devices(self.fleet.devices_per_replica),
                 )
@@ -1188,6 +1279,30 @@ impl ResidencyBackend for FleetBackend {
     fn resident_overlap(&self, layer: usize, experts: &[usize]) -> usize {
         self.replicas[self.current].resident_overlap(layer, experts)
     }
+
+    fn set_active_class(&mut self, class: usize) {
+        for b in &mut self.replicas {
+            b.set_active_class(class);
+        }
+    }
+
+    fn class_tier_resolves(&self) -> Vec<Vec<u64>> {
+        let mut out: Vec<Vec<u64>> = Vec::new();
+        for b in &self.replicas {
+            for (c, row) in b.class_tier_resolves().into_iter().enumerate() {
+                if out.len() <= c {
+                    out.resize(c + 1, Vec::new());
+                }
+                if out[c].len() < row.len() {
+                    out[c].resize(row.len(), 0);
+                }
+                for (t, n) in row.into_iter().enumerate() {
+                    out[c][t] += n;
+                }
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -1316,6 +1431,55 @@ mod tests {
         let r0 = f.replica_snapshot(0);
         assert_eq!(r0.fleet_replicas, 0);
         assert_eq!(r0.decode_tokens, s.decode_tokens);
+    }
+
+    #[test]
+    fn qos_fleet_charges_settle_across_scenario_and_failover() {
+        use crate::config::{QosClass, QosConfig};
+        let mut fleet_cfg = FleetConfig::default();
+        fleet_cfg.replicas = 2;
+        fleet_cfg.stream_chunk = Some(1);
+        let mut f = Fleet::builder()
+            .model("phi-sim")
+            .method("dynaexq")
+            .seed(11)
+            .fleet_cfg(fleet_cfg)
+            .qos(QosConfig::tiered())
+            .build()
+            .unwrap();
+        assert!(f.frontdoor().qos_armed());
+        let sc = Scenario::multi_tenant()
+            .with_faults(FaultPlan::fail(1, 2).and_recover(1, 6));
+        let marks = f.run_scenario(&sc, 2, 16, 2).unwrap();
+        assert!(!marks.is_empty());
+        let s = f.snapshot();
+        // every admitted request finished (chunked phases flush), so the
+        // per-class ledger balances exactly — including the streams that
+        // failed over mid-decode and completed elsewhere
+        assert_eq!(s.qos_charged, s.qos_refunded);
+        assert!(s.qos_charged.iter().sum::<u64>() > 0);
+        assert_eq!(s.qos_class_resolved.len(), QosClass::ALL.len());
+        assert_eq!(MetricsSnapshot::decode(&s.encode()).unwrap(), s);
+        // degenerate configs never arm the fleet's ledger
+        let d = Fleet::builder()
+            .model("phi-sim")
+            .method("dynaexq")
+            .qos(QosConfig::degenerate())
+            .build()
+            .unwrap();
+        assert!(!d.frontdoor().qos_armed());
+        // budgets beyond the serving envelope are refused at build time
+        let err = Fleet::builder()
+            .model("phi-sim")
+            .qos(
+                QosConfig::tiered()
+                    .with_budget(QosClass::Premium, u64::MAX),
+            )
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("qos"), "{err}");
+        assert!(err.contains("envelope"), "{err}");
     }
 
     #[test]

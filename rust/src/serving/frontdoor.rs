@@ -38,6 +38,7 @@ use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::{Mutex, RwLock};
 
 use crate::config::frontdoor::{FrontDoorConfig, Lane, LimitAction};
+use crate::config::qos::{QosClass, QosConfig};
 use crate::workload::Request;
 
 use super::engine::{ActiveRequest, Engine};
@@ -54,6 +55,11 @@ pub enum Rejected {
     /// The submit-time completion estimate already exceeds the request's
     /// SLO deadline — admitting it could only waste service.
     DeadlineInfeasible,
+    /// The tenant's QoS class has no hi-precision budget left for this
+    /// request's modeled occupancy (and the configured budget action is
+    /// [`LimitAction::Reject`], or the best-effort fallback is exhausted
+    /// too). Only emitted with an armed [`QosConfig`] (DESIGN.md §15).
+    BudgetExhausted,
 }
 
 impl fmt::Display for Rejected {
@@ -62,6 +68,7 @@ impl fmt::Display for Rejected {
             Rejected::QueueFull => "queue-full",
             Rejected::TenantOverLimit => "tenant-over-limit",
             Rejected::DeadlineInfeasible => "deadline-infeasible",
+            Rejected::BudgetExhausted => "budget-exhausted",
         })
     }
 }
@@ -98,6 +105,8 @@ pub struct FrontDoorStats {
     soft_overages: AtomicU64,
     demoted: AtomicU64,
     readmitted: AtomicU64,
+    budget_exhausted: AtomicU64,
+    qos_downgraded: AtomicU64,
 }
 
 impl FrontDoorStats {
@@ -142,6 +151,20 @@ impl FrontDoorStats {
     pub fn readmitted(&self) -> u64 {
         self.readmitted.load(Relaxed)
     }
+
+    /// Submissions turned away as [`Rejected::BudgetExhausted`] — kept
+    /// out of [`FrontDoorStats::rejection_kinds`] so the classic
+    /// three-kind totals stay byte-stable without an armed QoS config.
+    pub fn budget_exhausted(&self) -> u64 {
+        self.budget_exhausted.load(Relaxed)
+    }
+
+    /// Admissions that demoted their tenant to best-effort pricing
+    /// ([`LimitAction::Downgrade`] — soft-limit or budget-exhaustion
+    /// flavour alike).
+    pub fn qos_downgraded(&self) -> u64 {
+        self.qos_downgraded.load(Relaxed)
+    }
 }
 
 /// Lock-free per-tenant accounting (first-appearance tenant table).
@@ -165,6 +188,61 @@ struct TenantTable {
     idx: HashMap<String, usize>,
 }
 
+/// Per-class precision-budget accounting (DESIGN.md §15), present only
+/// when a non-degenerate [`QosConfig`] armed the door. Every admitted
+/// request *charges* its modeled hi-precision occupancy —
+/// `hi_bytes_per_token × (prompt + output)` — against its tenant's class
+/// at submit time and *refunds* exactly that amount when the drain
+/// settles its completion; re-admissions never re-charge (the charge map
+/// is keyed by request id), so charges and refunds balance exactly
+/// across failover.
+struct QosLedger {
+    cfg: QosConfig,
+    /// Effective class per tenant index — seeded from the config's pins
+    /// on first touch, then mutated by `Downgrade` demotions and
+    /// scenario-phase pins.
+    class_of: HashMap<usize, QosClass>,
+    /// Bytes charged / refunded per class ([`QosClass::ALL`] order).
+    charged: [u64; 3],
+    refunded: [u64; 3],
+    /// Outstanding charges by request id → `(class index, bytes)`.
+    charges: HashMap<u64, (usize, u64)>,
+}
+
+impl QosLedger {
+    fn new(cfg: QosConfig) -> Self {
+        Self {
+            cfg,
+            class_of: HashMap::new(),
+            charged: [0; 3],
+            refunded: [0; 3],
+            charges: HashMap::new(),
+        }
+    }
+
+    /// Effective class of tenant `t` (first touch derives it from the
+    /// config's pins by name).
+    fn class(&mut self, t: usize, name: &str) -> QosClass {
+        let cfg = &self.cfg;
+        *self.class_of.entry(t).or_insert_with(|| cfg.class_of(name))
+    }
+
+    /// Would charging `cost` bytes to `class` exceed its budget?
+    /// Unbudgeted classes never exhaust.
+    fn exhausted(&self, class: QosClass, cost: u64) -> bool {
+        let i = class.index();
+        match self.cfg.class(class).budget_bytes {
+            Some(b) => self.charged[i] - self.refunded[i] + cost > b,
+            None => false,
+        }
+    }
+
+    fn charge(&mut self, id: u64, class: QosClass, cost: u64) {
+        self.charged[class.index()] += cost;
+        self.charges.insert(id, (class.index(), cost));
+    }
+}
+
 /// The bounded, fair, SLO-aware admission queue.
 ///
 /// Concurrency seam (DESIGN.md §13): every method takes `&self`, so
@@ -185,18 +263,28 @@ pub struct FrontDoor {
     /// ([`Lane::index`] order) — the bench per-lane p50/p95 source.
     /// Only the drain loop writes it; a plain mutex suffices.
     lane_ttft: Mutex<[Vec<f64>; 3]>,
+    /// Precision-budget ledger — `Some` iff the config carries a
+    /// non-degenerate [`QosConfig`]; structurally absent otherwise, so
+    /// the classic admission path is byte-identical (DESIGN.md §15).
+    qos: Option<Mutex<QosLedger>>,
 }
 
 impl FrontDoor {
     /// Validate the configuration and build an empty door.
     pub fn new(cfg: FrontDoorConfig) -> Result<Self, String> {
         cfg.validate()?;
+        let qos = cfg
+            .qos
+            .as_ref()
+            .filter(|q| !q.is_degenerate())
+            .map(|q| Mutex::new(QosLedger::new(q.clone())));
         Ok(Self {
             cfg,
             queue: Mutex::new(Vec::new()),
             tenants: RwLock::new(TenantTable::default()),
             stats: FrontDoorStats::default(),
             lane_ttft: Mutex::new([Vec::new(), Vec::new(), Vec::new()]),
+            qos,
         })
     }
 
@@ -265,16 +353,90 @@ impl FrontDoor {
             Rejected::QueueFull => &self.stats.queue_full,
             Rejected::TenantOverLimit => &self.stats.tenant_over_limit,
             Rejected::DeadlineInfeasible => &self.stats.deadline_infeasible,
+            Rejected::BudgetExhausted => &self.stats.budget_exhausted,
         };
         kind.fetch_add(1, Relaxed);
         why
     }
 
+    /// Whether a non-degenerate [`QosConfig`] armed the budget ledger.
+    pub fn qos_armed(&self) -> bool {
+        self.qos.is_some()
+    }
+
+    /// Bytes charged per class so far ([`QosClass::ALL`] order); empty
+    /// when QoS is unarmed.
+    pub fn qos_charged(&self) -> Vec<u64> {
+        self.qos
+            .as_ref()
+            .map(|q| q.lock().unwrap().charged.to_vec())
+            .unwrap_or_default()
+    }
+
+    /// Bytes refunded per class so far ([`QosClass::ALL`] order); empty
+    /// when QoS is unarmed.
+    pub fn qos_refunded(&self) -> Vec<u64> {
+        self.qos
+            .as_ref()
+            .map(|q| q.lock().unwrap().refunded.to_vec())
+            .unwrap_or_default()
+    }
+
+    /// Outstanding (charged − refunded) bytes per class; empty unarmed.
+    pub fn qos_outstanding(&self) -> Vec<u64> {
+        self.qos
+            .as_ref()
+            .map(|q| {
+                let q = q.lock().unwrap();
+                QosClass::ALL
+                    .iter()
+                    .map(|c| {
+                        q.charged[c.index()] - q.refunded[c.index()]
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Pin a tenant's effective QoS class — the scenario DSL's per-phase
+    /// class tags land here. A no-op when QoS is unarmed.
+    pub fn set_tenant_class(&self, tenant: &str, class: QosClass) {
+        if let Some(q) = &self.qos {
+            let t = self.tenant_id(tenant);
+            q.lock().unwrap().class_of.insert(t, class);
+        }
+    }
+
+    /// The tenant's current effective class (`None` when QoS is unarmed).
+    pub fn tenant_class(&self, tenant: &str) -> Option<QosClass> {
+        let q = self.qos.as_ref()?;
+        let t = self.tenant_id(tenant);
+        Some(q.lock().unwrap().class(t, tenant))
+    }
+
+    /// Drain-side settlement: refund the modeled hi-precision occupancy
+    /// of completed requests. Ids without an outstanding charge (already
+    /// settled, or admitted while QoS was unarmed) are ignored — combined
+    /// with charge-on-first-admission-only this keeps charges and refunds
+    /// exactly balanced across mid-stream failover re-admissions.
+    pub fn settle(&self, ids: &[u64]) {
+        if let Some(q) = &self.qos {
+            let mut q = q.lock().unwrap();
+            for id in ids {
+                if let Some((class, cost)) = q.charges.remove(id) {
+                    q.refunded[class] += cost;
+                }
+            }
+        }
+    }
+
     /// Non-blocking admission. Checks run in a fixed order so the
     /// rejection kind is deterministic: tenant hard limit → tenant soft
-    /// limit (configured action) → queue bound → deadline feasibility.
-    /// On success the request is queued under its effective lane (a
-    /// `Demote` soft action moves it to [`Lane::Batch`]).
+    /// limit (configured action) → queue bound → deadline feasibility →
+    /// QoS class budget (armed configs only). On success the request is
+    /// queued under its effective lane (a `Demote` soft action moves it
+    /// to [`Lane::Batch`]) and its modeled hi-precision occupancy is
+    /// charged to its tenant's class.
     ///
     /// Thread-safe: the whole check sequence runs under the queue lock,
     /// so concurrent producers serialize and every bound stays strict —
@@ -303,6 +465,7 @@ impl FrontDoor {
         let mut lane = lane;
         let mut soft_overage = false;
         let mut demoted = false;
+        let mut soft_downgrade = false;
         if occupancy >= limits.soft_limit {
             soft_overage = true;
             match limits.soft_action {
@@ -312,6 +475,12 @@ impl FrontDoor {
                         demoted = true;
                         lane = Lane::Batch;
                     }
+                }
+                LimitAction::Downgrade => {
+                    // keep the requested lane; the tenant's QoS class
+                    // drops to best-effort pricing instead — exactly
+                    // Warn when no QoS config is armed (DESIGN.md §15)
+                    soft_downgrade = true;
                 }
                 LimitAction::Reject => {
                     return Err(self.reject_with(
@@ -337,12 +506,59 @@ impl FrontDoor {
                 ));
             }
         }
+        // QoS budget — deliberately the LAST check: a submission rejected
+        // for any other reason is never charged, so conservation reduces
+        // to admitted-versus-settled (DESIGN.md §15).
+        let mut ledger = self.qos.as_ref().map(|q| q.lock().unwrap());
+        let mut charge = None;
+        let mut budget_downgrade = false;
+        if let Some(ql) = ledger.as_deref_mut() {
+            let mut class = ql.class(t, tenant);
+            if soft_downgrade {
+                class = QosClass::BestEffort;
+            }
+            let tokens = (req.prompt_len + req.output_len) as u64;
+            let cost = ql.cfg.hi_bytes_per_token * tokens;
+            if ql.exhausted(class, cost) {
+                let downgrade = ql.cfg.budget_action
+                    == LimitAction::Downgrade
+                    && class != QosClass::BestEffort;
+                if !downgrade {
+                    return Err(self.reject_with(
+                        ten,
+                        lane,
+                        Rejected::BudgetExhausted,
+                    ));
+                }
+                class = QosClass::BestEffort;
+                if ql.exhausted(class, cost) {
+                    return Err(self.reject_with(
+                        ten,
+                        lane,
+                        Rejected::BudgetExhausted,
+                    ));
+                }
+                budget_downgrade = true;
+            }
+            charge = Some((class, cost));
+        }
         if soft_overage {
             self.stats.soft_overages.fetch_add(1, Relaxed);
         }
         if demoted {
             self.stats.demoted.fetch_add(1, Relaxed);
         }
+        if let (Some(ql), Some((class, cost))) = (ledger.as_deref_mut(), charge)
+        {
+            if soft_downgrade || budget_downgrade {
+                // the demotion is persistent: future submissions price
+                // at best-effort until a phase pin restores the class
+                ql.class_of.insert(t, QosClass::BestEffort);
+                self.stats.qos_downgraded.fetch_add(1, Relaxed);
+            }
+            ql.charge(req.id, class, cost);
+        }
+        drop(ledger);
         ten.queued.fetch_add(1, Relaxed);
         self.stats.lanes[lane.index()].admitted.fetch_add(1, Relaxed);
         queue.push(QueuedRequest { req, tenant: t, lane, deadline_s });
@@ -692,6 +908,7 @@ mod tests {
             (Rejected::QueueFull, "queue-full"),
             (Rejected::TenantOverLimit, "tenant-over-limit"),
             (Rejected::DeadlineInfeasible, "deadline-infeasible"),
+            (Rejected::BudgetExhausted, "budget-exhausted"),
         ] {
             assert_eq!(r.to_string(), s);
         }
@@ -812,5 +1029,120 @@ mod tests {
         let cfg =
             FrontDoorConfig { queue_capacity: 0, ..FrontDoorConfig::default() };
         assert!(FrontDoor::new(cfg).unwrap_err().contains("queue_capacity"));
+    }
+
+    #[test]
+    fn degenerate_qos_config_never_arms_the_ledger() {
+        let cfg = FrontDoorConfig {
+            qos: Some(QosConfig::degenerate()),
+            ..FrontDoorConfig::default()
+        };
+        let fd = FrontDoor::new(cfg).unwrap();
+        assert!(!fd.qos_armed());
+        assert!(fd.qos_charged().is_empty());
+        assert_eq!(fd.tenant_class("a"), None);
+        let mut g = gen();
+        let req = g.request(8, 2, 0.0);
+        let id = req.id;
+        fd.submit(req, "a", Lane::Standard, 0.0).unwrap();
+        fd.settle(&[id]); // a no-op, never a panic
+        assert_eq!(fd.stats().budget_exhausted(), 0);
+        assert_eq!(fd.stats().qos_downgraded(), 0);
+    }
+
+    #[test]
+    fn qos_budget_charges_settles_and_rejects_typed() {
+        // hi_bytes_per_token 2048 × (8 + 2) tokens = 20480 per request;
+        // a premium budget of two requests' worth admits 2, rejects 1
+        let qos = QosConfig::tiered()
+            .with_budget(QosClass::Premium, 2 * 20480)
+            .pin("a", QosClass::Premium);
+        let cfg =
+            FrontDoorConfig { qos: Some(qos), ..FrontDoorConfig::default() };
+        let fd = FrontDoor::new(cfg).unwrap();
+        assert!(fd.qos_armed());
+        assert_eq!(fd.tenant_class("a"), Some(QosClass::Premium));
+        let mut g = gen();
+        fd.submit(g.request(8, 2, 0.0), "a", Lane::Standard, 0.0).unwrap();
+        fd.submit(g.request(8, 2, 0.0), "a", Lane::Standard, 0.0).unwrap();
+        let pi = QosClass::Premium.index();
+        assert_eq!(fd.qos_charged()[pi], 2 * 20480);
+        assert_eq!(
+            fd.submit(g.request(8, 2, 0.0), "a", Lane::Standard, 0.0),
+            Err(Rejected::BudgetExhausted)
+        );
+        assert_eq!(fd.stats().budget_exhausted(), 1);
+        // the classic three-kind totals never count the new kind
+        assert_eq!(fd.stats().rejection_kinds(), (0, 0, 0));
+        // rejected submissions were never charged
+        assert_eq!(fd.qos_charged()[pi], 2 * 20480);
+        // drain + settle refunds exactly what was charged
+        let (_, reqs) = fd.take_scheduled();
+        let ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        fd.settle(&ids);
+        assert_eq!(fd.qos_charged(), fd.qos_refunded());
+        assert_eq!(fd.qos_outstanding(), vec![0, 0, 0]);
+        // budget headroom is restored
+        fd.submit(g.request(8, 2, 0.0), "a", Lane::Standard, 0.0).unwrap();
+    }
+
+    #[test]
+    fn budget_downgrade_admits_at_best_effort_pricing() {
+        let qos = QosConfig::tiered()
+            .with_budget(QosClass::Premium, 20480)
+            .pin("a", QosClass::Premium)
+            .on_exhausted(LimitAction::Downgrade);
+        let cfg =
+            FrontDoorConfig { qos: Some(qos), ..FrontDoorConfig::default() };
+        let fd = FrontDoor::new(cfg).unwrap();
+        let mut g = gen();
+        fd.submit(g.request(8, 2, 0.0), "a", Lane::Standard, 0.0).unwrap();
+        // over budget: admitted anyway, demoted to best-effort pricing
+        fd.submit(g.request(8, 2, 0.0), "a", Lane::Standard, 0.0).unwrap();
+        assert_eq!(fd.stats().budget_exhausted(), 0);
+        assert_eq!(fd.stats().qos_downgraded(), 1);
+        assert_eq!(fd.tenant_class("a"), Some(QosClass::BestEffort));
+        assert_eq!(fd.qos_charged()[QosClass::Premium.index()], 20480);
+        assert_eq!(fd.qos_charged()[QosClass::BestEffort.index()], 20480);
+        // the demotion is persistent: the next submission prices at
+        // best-effort without touching the premium budget again
+        fd.submit(g.request(8, 2, 0.0), "a", Lane::Standard, 0.0).unwrap();
+        assert_eq!(fd.qos_charged()[QosClass::BestEffort.index()], 2 * 20480);
+        assert_eq!(fd.stats().qos_downgraded(), 1, "already demoted");
+    }
+
+    #[test]
+    fn soft_downgrade_keeps_lane_and_is_warn_without_qos() {
+        let limits = TenantLimits {
+            soft_limit: 1,
+            soft_action: LimitAction::Downgrade,
+            hard_limit: 10,
+        };
+        // unarmed: exactly Warn — same lane, only the overage counted
+        let cfg = FrontDoorConfig {
+            tenant_limits: limits,
+            ..FrontDoorConfig::default()
+        };
+        let fd = FrontDoor::new(cfg).unwrap();
+        let mut g = gen();
+        fd.submit(g.request(8, 2, 0.0), "a", Lane::Interactive, 0.0).unwrap();
+        fd.submit(g.request(8, 2, 0.0), "a", Lane::Interactive, 0.0).unwrap();
+        assert_eq!(fd.stats().lane_admitted(), vec![2, 0, 0]);
+        assert_eq!(fd.stats().soft_overages(), 1);
+        assert_eq!(fd.stats().demoted(), 0);
+        assert_eq!(fd.stats().qos_downgraded(), 0);
+        // armed: same lane, but the tenant drops to best-effort pricing
+        let cfg = FrontDoorConfig {
+            tenant_limits: limits,
+            qos: Some(QosConfig::tiered().pin("a", QosClass::Premium)),
+            ..FrontDoorConfig::default()
+        };
+        let fd = FrontDoor::new(cfg).unwrap();
+        fd.submit(g.request(8, 2, 0.0), "a", Lane::Interactive, 0.0).unwrap();
+        assert_eq!(fd.tenant_class("a"), Some(QosClass::Premium));
+        fd.submit(g.request(8, 2, 0.0), "a", Lane::Interactive, 0.0).unwrap();
+        assert_eq!(fd.stats().lane_admitted(), vec![2, 0, 0]);
+        assert_eq!(fd.stats().qos_downgraded(), 1);
+        assert_eq!(fd.tenant_class("a"), Some(QosClass::BestEffort));
     }
 }

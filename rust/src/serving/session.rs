@@ -21,7 +21,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::frontdoor::{FrontDoorConfig, Lane};
-use crate::config::{kv, DeviceConfig, ModelPreset, ServingConfig};
+use crate::config::{kv, DeviceConfig, ModelPreset, QosConfig, ServingConfig};
 use crate::metrics::ServingMetrics;
 use crate::workload::{Request, RequestGenerator, Scenario, WorkloadProfile};
 
@@ -86,6 +86,11 @@ pub trait SessionEngine {
     /// Switch the live workload profile (shift experiments).
     fn set_profile(&mut self, profile: &WorkloadProfile);
 
+    /// Attribute subsequent routing/resolution traffic to a QoS class
+    /// (index into [`crate::config::QosClass::ALL`]). Default no-op:
+    /// engines whose backend has no armed QoS config ignore it.
+    fn set_active_class(&mut self, _class: usize) {}
+
     fn metrics(&self) -> &ServingMetrics;
     fn reset_metrics(&mut self);
     fn backend(&self) -> &dyn ResidencyBackend;
@@ -137,6 +142,10 @@ impl SessionEngine for ModeledSession {
     fn set_profile(&mut self, profile: &WorkloadProfile) {
         self.engine.set_profile(profile);
         self.profile = profile.clone();
+    }
+
+    fn set_active_class(&mut self, class: usize) {
+        self.engine.backend.set_active_class(class);
     }
 
     fn metrics(&self) -> &ServingMetrics {
@@ -337,6 +346,21 @@ pub struct MetricsSnapshot {
     /// Requests re-admitted through the front door with token position
     /// preserved.
     pub fleet_readmitted: u64,
+    /// Expert resolutions per `[class][tier]` (class order =
+    /// `QosClass::ALL`, tier 0 first within each class). Encoded like
+    /// `device_resident` — classes `/`-separated, rungs `|`-separated.
+    /// Empty without an armed QoS config (DESIGN.md §15), so classic
+    /// snapshots stay byte-identical.
+    pub qos_class_resolved: Vec<Vec<u64>>,
+    /// Bytes of modeled hi-precision occupancy charged per class at
+    /// admission (`QosClass::ALL` order). Encoded `a|b|c`; empty unarmed.
+    pub qos_charged: Vec<u64>,
+    /// Bytes refunded per class at drain settlement (same encoding).
+    pub qos_refunded: Vec<u64>,
+    /// Admissions that demoted their tenant to best-effort pricing.
+    pub qos_downgraded: u64,
+    /// Submissions rejected as `Rejected::BudgetExhausted`.
+    pub qos_budget_rejected: u64,
 }
 
 impl MetricsSnapshot {
@@ -368,7 +392,9 @@ impl MetricsSnapshot {
              drift_events={};drift_recovery_ticks={};fd_queue_depth={};\
              fd_lane_admitted={};fd_lane_rejected={};\
              fd_lane_deadline_miss={};fleet_replicas={};fleet_health={};\
-             fleet_served={};fleet_failovers={};fleet_readmitted={}",
+             fleet_served={};fleet_failovers={};fleet_readmitted={};\
+             qos_class_resolved={};qos_charged={};qos_refunded={};\
+             qos_downgraded={};qos_budget_rejected={}",
             self.model,
             self.method,
             self.workload,
@@ -409,6 +435,15 @@ impl MetricsSnapshot {
             Self::encode_u64_list(&self.fleet_served),
             self.fleet_failovers,
             self.fleet_readmitted,
+            self.qos_class_resolved
+                .iter()
+                .map(|row| Self::encode_u64_list(row))
+                .collect::<Vec<_>>()
+                .join("/"),
+            Self::encode_u64_list(&self.qos_charged),
+            Self::encode_u64_list(&self.qos_refunded),
+            self.qos_downgraded,
+            self.qos_budget_rejected,
         )
     }
 
@@ -514,6 +549,25 @@ impl MetricsSnapshot {
             )?,
             fleet_failovers: num(&m, "fleet_failovers")?,
             fleet_readmitted: num(&m, "fleet_readmitted")?,
+            qos_class_resolved: {
+                let raw = text("qos_class_resolved")?;
+                raw.split('/')
+                    .filter(|s| !s.is_empty())
+                    .map(|row| {
+                        Self::decode_u64_list(row, "qos_class_resolved")
+                    })
+                    .collect::<Result<Vec<Vec<u64>>>>()?
+            },
+            qos_charged: Self::decode_u64_list(
+                &text("qos_charged")?,
+                "qos_charged",
+            )?,
+            qos_refunded: Self::decode_u64_list(
+                &text("qos_refunded")?,
+                "qos_refunded",
+            )?,
+            qos_downgraded: num(&m, "qos_downgraded")?,
+            qos_budget_rejected: num(&m, "qos_budget_rejected")?,
         })
     }
 
@@ -548,6 +602,7 @@ impl MetricsSnapshot {
             promo_queue_depth: backend.promo_queue_depth(),
             drift_events,
             drift_recovery_ticks,
+            qos_class_resolved: backend.class_tier_resolves(),
             ..Self::default()
         }
     }
@@ -629,6 +684,10 @@ impl ServeSession {
         for phase in &scenario.phases {
             self.inner.set_profile(&phase.profile);
             self.workload = phase.profile.name.to_string();
+            if let Some(class) = phase.qos_class {
+                // inert without an armed QoS config (trait default no-op)
+                self.inner.set_active_class(class.index());
+            }
             let b = Scenario::scaled_batch(batch, phase.load);
             for _ in 0..phase.rounds {
                 self.inner.serve_closed(b, prompt_len, output_len)?;
@@ -675,10 +734,14 @@ impl ServeSession {
             )
         })?;
         let (mut sched, reqs) = fd.take_scheduled();
+        let ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
         if !reqs.is_empty() {
             self.inner.serve_scheduled(&mut sched, reqs)?;
         }
         fd.absorb(&sched);
+        // every drained request ran to completion: refund its QoS charge
+        // (a no-op without an armed config)
+        fd.settle(&ids);
         Ok(self.inner.metrics())
     }
 
@@ -714,6 +777,15 @@ impl ServeSession {
                 .tenant
                 .clone()
                 .unwrap_or_else(|| phase.profile.name.to_string());
+            if let Some(class) = phase.qos_class {
+                // pin the phase's tenant to its class and attribute the
+                // phase's traffic to it — both inert without an armed
+                // QoS config (DESIGN.md §15)
+                if let Some(fd) = &self.frontdoor {
+                    fd.set_tenant_class(&tenant, class);
+                }
+                self.inner.set_active_class(class.index());
+            }
             let b = Scenario::scaled_batch(batch, phase.load);
             for _ in 0..phase.rounds {
                 let now = self.inner.now();
@@ -780,6 +852,16 @@ impl ServeSession {
             ),
             None => (0, Vec::new(), Vec::new(), Vec::new()),
         };
+        let (qos_charged, qos_refunded, qos_downgraded, qos_budget_rejected) =
+            match fd {
+                Some(fd) if fd.qos_armed() => (
+                    fd.qos_charged(),
+                    fd.qos_refunded(),
+                    fd.stats().qos_downgraded(),
+                    fd.stats().budget_exhausted(),
+                ),
+                _ => (Vec::new(), Vec::new(), 0, 0),
+            };
         MetricsSnapshot {
             model: self.model.clone(),
             method: self.method.clone(),
@@ -808,6 +890,11 @@ impl ServeSession {
             fd_lane_admitted: fd_adm,
             fd_lane_rejected: fd_rej,
             fd_lane_deadline_miss: fd_miss,
+            qos_class_resolved: b.class_tier_resolves(),
+            qos_charged,
+            qos_refunded,
+            qos_downgraded,
+            qos_budget_rejected,
             // fleet_* fields stay at their defaults: a bare session is
             // not a fleet (Fleet::snapshot fills them — DESIGN.md §14)
             ..MetricsSnapshot::default()
@@ -893,6 +980,7 @@ pub struct SessionBuilder {
     registry: Option<BackendRegistry>,
     devices: usize,
     frontdoor: Option<FrontDoorConfig>,
+    qos: Option<QosConfig>,
 }
 
 impl Default for SessionBuilder {
@@ -911,6 +999,7 @@ impl Default for SessionBuilder {
             registry: None,
             devices: 1,
             frontdoor: None,
+            qos: None,
         }
     }
 }
@@ -990,6 +1079,16 @@ impl SessionBuilder {
         self
     }
 
+    /// Class-weighted QoS allocation (DESIGN.md §15): the config lands on
+    /// both the coordinator's waterfill (class-weighted hotness) and the
+    /// front door's budget ledger, when the session has one. A
+    /// [`QosConfig::is_degenerate`] config never arms either — the
+    /// session stays byte-identical to the classic stack.
+    pub fn qos(mut self, cfg: QosConfig) -> Self {
+        self.qos = Some(cfg);
+        self
+    }
+
     /// Serve with an `n`-device expert-sharded group (DESIGN.md §9).
     /// Consumed by the sharded methods (`dynaexq-sharded`,
     /// `dynaexq-3tier-sharded`); single-device methods ignore it. A
@@ -1026,7 +1125,20 @@ impl SessionBuilder {
         }
         let registry =
             self.registry.unwrap_or_else(BackendRegistry::with_builtins);
-        let frontdoor = match self.frontdoor {
+        let mut serving_cfg = self.serving_cfg;
+        let mut frontdoor_cfg = self.frontdoor;
+        if let Some(q) = self.qos {
+            q.validate().map_err(|e| anyhow!("qos: {e}"))?;
+            // budgets check against the *full* session envelope here —
+            // the coordinator only sees per-device slices of it
+            q.validate_budgets(serving_cfg.hbm_budget_bytes)
+                .map_err(|e| anyhow!("qos: {e}"))?;
+            if let Some(fd) = &mut frontdoor_cfg {
+                fd.qos = Some(q.clone());
+            }
+            serving_cfg.qos = Some(q);
+        }
+        let frontdoor = match frontdoor_cfg {
             Some(cfg) => {
                 if self.kind != EngineKind::Modeled {
                     bail!(
@@ -1046,7 +1158,7 @@ impl SessionBuilder {
                         &self.method,
                         &BackendCtx::new(
                             &preset,
-                            &self.serving_cfg,
+                            &serving_cfg,
                             &self.device,
                         )
                         .with_profile(&profile)
@@ -1085,7 +1197,7 @@ impl SessionBuilder {
                         &self.method,
                         &BackendCtx::new(
                             &exec,
-                            &self.serving_cfg,
+                            &serving_cfg,
                             &self.device,
                         )
                         .with_profile(&profile)
@@ -1168,11 +1280,16 @@ mod tests {
             fleet_served: vec![41, 19],
             fleet_failovers: 1,
             fleet_readmitted: 3,
+            qos_class_resolved: vec![vec![9, 1], vec![4, 6], vec![0, 12]],
+            qos_charged: vec![40960, 20480, 0],
+            qos_refunded: vec![40960, 0, 0],
+            qos_downgraded: 2,
+            qos_budget_rejected: 1,
         };
         let decoded = MetricsSnapshot::decode(&s.encode()).unwrap();
         assert_eq!(decoded, s);
         // backends without a residency table (and sessions without a
-        // front door or fleet) encode empty lists
+        // front door, fleet, or armed QoS config) encode empty lists
         let mut none = s.clone();
         none.tier_resident = Vec::new();
         none.device_resident = Vec::new();
@@ -1182,6 +1299,9 @@ mod tests {
         none.fd_lane_deadline_miss = Vec::new();
         none.fleet_health = Vec::new();
         none.fleet_served = Vec::new();
+        none.qos_class_resolved = Vec::new();
+        none.qos_charged = Vec::new();
+        none.qos_refunded = Vec::new();
         assert_eq!(MetricsSnapshot::decode(&none.encode()).unwrap(), none);
     }
 
@@ -1262,6 +1382,21 @@ mod tests {
                     .collect(),
                 fleet_failovers: rng.next_u64() % 100,
                 fleet_readmitted: rng.next_u64() % 1000,
+                qos_class_resolved: (0..rng.below(4))
+                    .map(|_| {
+                        (0..tiers.max(1))
+                            .map(|_| rng.next_u64() % 10_000)
+                            .collect()
+                    })
+                    .collect(),
+                qos_charged: (0..rng.below(4))
+                    .map(|_| rng.next_u64() % (1 << 40))
+                    .collect(),
+                qos_refunded: (0..rng.below(4))
+                    .map(|_| rng.next_u64() % (1 << 40))
+                    .collect(),
+                qos_downgraded: rng.next_u64() % 1000,
+                qos_budget_rejected: rng.next_u64() % 1000,
             };
             assert_eq!(MetricsSnapshot::decode(&s.encode()).unwrap(), s);
         });
@@ -1491,6 +1626,70 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("modeled"), "{err}");
+    }
+
+    #[test]
+    fn qos_session_charges_and_reports() {
+        use crate::config::QosClass;
+        let mut s = ServeSession::builder()
+            .model("phi-sim")
+            .method("dynaexq")
+            .seed(9)
+            .frontdoor(FrontDoorConfig::default())
+            .qos(QosConfig::tiered().pin("t0", QosClass::Premium))
+            .build()
+            .unwrap();
+        assert!(s.frontdoor().unwrap().qos_armed());
+        let mut gen = RequestGenerator::new(WorkloadProfile::text(), 5);
+        for _ in 0..3 {
+            let now = s.now();
+            let outcome = s
+                .submit(gen.request(16, 2, now), "t0", Lane::Standard)
+                .unwrap();
+            assert_eq!(outcome, Ok(()));
+        }
+        s.drain().unwrap();
+        let snap = s.snapshot();
+        let pi = QosClass::Premium.index();
+        // charged at admission, refunded in full by the drain settlement
+        assert_eq!(snap.qos_charged[pi], 3 * 2048 * 18);
+        assert_eq!(snap.qos_charged, snap.qos_refunded);
+        // every resolution is attributed to some class
+        let b = s.backend();
+        let per_class: u64 =
+            snap.qos_class_resolved.iter().flatten().sum();
+        let hi: f64 = b.hi_fraction(); // just touch the backend view
+        assert!(hi >= 0.0);
+        assert!(per_class > 0, "{snap:?}");
+        assert_eq!(MetricsSnapshot::decode(&snap.encode()).unwrap(), snap);
+
+        // degenerate configs never arm: snapshot QoS fields stay empty
+        let mut d = ServeSession::builder()
+            .model("phi-sim")
+            .method("dynaexq")
+            .seed(9)
+            .frontdoor(FrontDoorConfig::default())
+            .qos(QosConfig::degenerate())
+            .build()
+            .unwrap();
+        assert!(!d.frontdoor().unwrap().qos_armed());
+        d.serve_closed(2, 16, 2).unwrap();
+        let dsnap = d.snapshot();
+        assert!(dsnap.qos_class_resolved.is_empty());
+        assert!(dsnap.qos_charged.is_empty());
+
+        // invalid configs are refused at build time with the qos prefix
+        let err = ServeSession::builder()
+            .model("phi-sim")
+            .qos(
+                QosConfig::tiered()
+                    .with_budget(QosClass::Premium, u64::MAX),
+            )
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("qos"), "{err}");
+        assert!(err.contains("envelope"), "{err}");
     }
 
     #[test]

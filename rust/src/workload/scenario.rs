@@ -26,6 +26,7 @@
 use super::profile::WorkloadProfile;
 use super::traces::Trace;
 use crate::config::frontdoor::Lane;
+use crate::config::qos::QosClass;
 use crate::util::XorShiftRng;
 
 /// One scripted phase: a routing distribution held for `rounds` serving
@@ -48,6 +49,12 @@ pub struct ScenarioPhase {
     /// Priority lane for front-door submissions; ignored by the classic
     /// closed-batch path.
     pub lane: Lane,
+    /// QoS class the phase's traffic bills to (DESIGN.md §15): pins the
+    /// tenant's class at the front door and sets the coordinator's
+    /// active attribution class for the phase. `None` leaves both alone,
+    /// so scenarios without class tags stay byte-identical whether or
+    /// not a [`crate::config::QosConfig`] is armed.
+    pub qos_class: Option<QosClass>,
 }
 
 /// What a scripted fault does to a replica's heartbeat.
@@ -215,6 +222,7 @@ impl Scenario {
             load,
             tenant: None,
             lane: Lane::Standard,
+            qos_class: None,
         });
         self
     }
@@ -234,6 +242,17 @@ impl Scenario {
         let last = self.phases.last_mut().unwrap();
         last.tenant = Some(tenant.to_string());
         last.lane = lane;
+        self
+    }
+
+    /// Tag the most recently appended phase with a QoS class (front-door
+    /// consumers only; the closed-batch path ignores it).
+    pub fn classed(mut self, class: QosClass) -> Self {
+        let last = self
+            .phases
+            .last_mut()
+            .expect("classed() needs at least one phase");
+        last.qos_class = Some(class);
         self
     }
 
@@ -311,33 +330,50 @@ impl Scenario {
     /// Multi-tenant interleave: text/math/code tenants alternate in short
     /// slices, so the union working set cycles through disjoint heads.
     /// Each tenant is pinned to a distinct priority lane (text →
-    /// interactive, math → standard, code → batch), which is what the
-    /// front-door fairness/no-starvation invariants exercise.
+    /// interactive, math → standard, code → batch) and a distinct QoS
+    /// class (premium / standard / best-effort in the same order), which
+    /// is what the front-door fairness and class-weighted-allocation
+    /// invariants exercise.
     pub fn multi_tenant() -> Self {
         let mut sc = Self::named("multi-tenant");
         for rep in 0..2 {
             for (i, w) in WorkloadProfile::all().into_iter().enumerate() {
                 let tenant = w.name;
                 let lane = Lane::ALL[i % Lane::ALL.len()];
-                sc = sc.phase_tagged(
-                    &format!("{}-{rep}", w.name),
-                    w,
-                    2,
-                    1.0,
-                    tenant,
-                    lane,
-                );
+                let class = QosClass::ALL[i % QosClass::ALL.len()];
+                sc = sc
+                    .phase_tagged(
+                        &format!("{}-{rep}", w.name),
+                        w,
+                        2,
+                        1.0,
+                        tenant,
+                        lane,
+                    )
+                    .classed(class);
             }
         }
         sc
     }
 
     /// Diurnal load ramp: one workload, batch load 0.5 → 1 → 2 → 1 → 0.5.
+    /// The class tags follow the ramp (off-peak best-effort, peak
+    /// premium), so an armed QoS config shifts attribution with load
+    /// while the load/batch schedule itself stays untouched.
     pub fn diurnal() -> Self {
         let w = WorkloadProfile::text();
+        let classes = [
+            QosClass::BestEffort,
+            QosClass::Standard,
+            QosClass::Premium,
+            QosClass::Standard,
+            QosClass::BestEffort,
+        ];
         let mut sc = Self::named("diurnal");
         for (i, load) in [0.5, 1.0, 2.0, 1.0, 0.5].into_iter().enumerate() {
-            sc = sc.phase_loaded(&format!("t{i}"), w.clone(), 2, load);
+            sc = sc
+                .phase_loaded(&format!("t{i}"), w.clone(), 2, load)
+                .classed(classes[i]);
         }
         sc
     }
@@ -443,7 +479,9 @@ mod tests {
         let sc = Scenario::steady();
         assert_eq!(sc.phases[0].tenant, None);
         assert_eq!(sc.phases[0].lane, Lane::Standard);
-        // multi-tenant pins one tenant and a distinct lane per workload
+        assert_eq!(sc.phases[0].qos_class, None);
+        // multi-tenant pins one tenant, a distinct lane, and a distinct
+        // QoS class per workload
         let mt = Scenario::multi_tenant();
         for p in &mt.phases {
             assert_eq!(p.tenant.as_deref(), Some(p.profile.name));
@@ -451,11 +489,38 @@ mod tests {
         let lanes: Vec<Lane> =
             mt.phases.iter().take(3).map(|p| p.lane).collect();
         assert_eq!(lanes, Lane::ALL.to_vec());
-        // the burst surge rides the interactive lane as its own tenant
+        let classes: Vec<Option<QosClass>> =
+            mt.phases.iter().take(3).map(|p| p.qos_class).collect();
+        assert_eq!(
+            classes,
+            QosClass::ALL.iter().copied().map(Some).collect::<Vec<_>>()
+        );
+        // the burst surge rides the interactive lane as its own tenant,
+        // with no class tag (QoS stays inert on burst)
         let burst = Scenario::burst();
         assert_eq!(burst.phases[1].tenant.as_deref(), Some("crowd"));
         assert_eq!(burst.phases[1].lane, Lane::Interactive);
         assert_eq!(burst.phases[0].tenant, None);
+        assert!(burst.phases.iter().all(|p| p.qos_class.is_none()));
+        // diurnal follows the ramp: off-peak best-effort, peak premium
+        let di = Scenario::diurnal();
+        let tags: Vec<Option<QosClass>> =
+            di.phases.iter().map(|p| p.qos_class).collect();
+        assert_eq!(
+            tags,
+            vec![
+                Some(QosClass::BestEffort),
+                Some(QosClass::Standard),
+                Some(QosClass::Premium),
+                Some(QosClass::Standard),
+                Some(QosClass::BestEffort),
+            ]
+        );
+        // tagging is a builder on the last phase
+        let one = Scenario::named("one")
+            .phase("a", WorkloadProfile::text(), 1)
+            .classed(QosClass::Premium);
+        assert_eq!(one.phases[0].qos_class, Some(QosClass::Premium));
     }
 
     #[test]

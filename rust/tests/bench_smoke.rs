@@ -9,7 +9,8 @@
 use dynaexq::bench::json;
 use dynaexq::bench::runtime::{
     report_to_json, run_cell, run_matrix, validate_report_json, BenchMatrix,
-    BENCH_BATCHES, BENCH_DEVICES, BENCH_METHODS, BENCH_PRODUCERS, CELL_KEYS,
+    BENCH_BATCHES, BENCH_DEVICES, BENCH_METHODS, BENCH_PRODUCERS,
+    BENCH_QOS, BENCH_REPLICAS, CELL_KEYS,
 };
 use dynaexq::serving::registry::BackendRegistry;
 use dynaexq::util::XorShiftRng;
@@ -19,10 +20,10 @@ use dynaexq::workload::{RoutingSampler, Scenario, WorkloadProfile};
 fn smoke_cell_emits_schema_valid_bench_json() {
     let matrix = BenchMatrix::smoke("phi-sim");
     let report = run_matrix(&matrix, |_| {}).expect("smoke matrix runs");
-    // the smoke matrix is one cell on every axis except the front door
-    // and producer knobs: a direct cell plus a serial (p=1) and a
-    // threaded (p=2) front-door twin
-    assert_eq!(report.cells.len(), 3);
+    // the smoke matrix is one cell on every axis except the front-door
+    // knobs: a direct cell plus {serial, threaded} producers × {1, 2}
+    // fleet replicas × {off, on} qos fronted twins: 1 + 2×2×2 = 9
+    assert_eq!(report.cells.len(), 9);
     let text = report_to_json(&report);
 
     // The schema self-check the CLI runs before writing the file.
@@ -33,14 +34,16 @@ fn smoke_cell_emits_schema_valid_bench_json() {
     let doc = json::parse(&text).expect("BENCH_serving.json parses");
     assert_eq!(
         doc.get("schema").and_then(|v| v.as_str()),
-        Some("dynaexq-bench-serving/v3")
+        Some("dynaexq-bench-serving/v5")
     );
     let cells = doc.get("cells").and_then(|v| v.as_arr()).unwrap();
-    // front door then producers are the innermost axes: cells[0] direct,
-    // cells[1] fronted p=1, cells[2] fronted p=2
+    // the fronted fan-out nests producers → replicas → qos innermost:
+    // cells[0] direct, cells[1] p1 r1 q0, cells[2] p1 r1 q1,
+    // cells[3..5] p1 r2, cells[5] p2 r1 q0, …
     let cell = &cells[0];
     assert_eq!(cell.get("frontdoor").unwrap().as_u64(), Some(0));
     assert_eq!(cell.get("producers").unwrap().as_u64(), Some(0));
+    assert_eq!(cell.get("qos").unwrap().as_u64(), Some(0));
     for &key in CELL_KEYS {
         assert!(cell.get(key).is_some(), "cell missing required key {key:?}");
     }
@@ -63,15 +66,31 @@ fn smoke_cell_emits_schema_valid_bench_json() {
 
     // The fronted twins conserve the token totals and carry live
     // per-lane counters: steady admits everything on the standard lane.
-    // The threaded twin must agree with the serial reference on every
-    // modeled value — only wall-clock may differ.
-    for (idx, producers) in [(1usize, 1u64), (2, 2)] {
-        let fronted = &cells[idx];
+    // Every twin — threaded, replicated, or qos-armed — must agree with
+    // the serial reference on every modeled token total; only wall-clock
+    // may differ.
+    let coords: [(u64, u64, u64); 8] = [
+        (1, 1, 0),
+        (1, 1, 1),
+        (1, 2, 0),
+        (1, 2, 1),
+        (2, 1, 0),
+        (2, 1, 1),
+        (2, 2, 0),
+        (2, 2, 1),
+    ];
+    for (i, &(producers, replicas, qos)) in coords.iter().enumerate() {
+        let fronted = &cells[i + 1];
         assert_eq!(fronted.get("frontdoor").unwrap().as_u64(), Some(1));
         assert_eq!(
             fronted.get("producers").unwrap().as_u64(),
             Some(producers)
         );
+        assert_eq!(
+            fronted.get("replicas").unwrap().as_u64(),
+            Some(replicas)
+        );
+        assert_eq!(fronted.get("qos").unwrap().as_u64(), Some(qos));
         assert_eq!(fronted.get("decode_tokens").unwrap().as_u64(), Some(24));
         let lane_sum = |key: &str| -> u64 {
             fronted
@@ -96,6 +115,24 @@ fn smoke_cell_emits_schema_valid_bench_json() {
             fronted.get("fd_submit_p95_s").unwrap().as_f64().unwrap()
                 >= fronted.get("fd_submit_p50_s").unwrap().as_f64().unwrap()
         );
+        // qos-armed cells settle every charge they admit; unarmed cells
+        // carry no ledger at all (the degenerate-collapse contract)
+        let ledger_sum = |key: &str| -> (usize, u64) {
+            let arr = fronted.get(key).unwrap().as_arr().unwrap();
+            let sum = arr.iter().map(|v| v.as_u64().unwrap()).sum();
+            (arr.len(), sum)
+        };
+        let (charged_len, charged) = ledger_sum("qos_charged");
+        let (refunded_len, refunded) = ledger_sum("qos_refunded");
+        if qos == 1 {
+            assert_eq!(charged_len, 3);
+            assert_eq!(refunded_len, 3);
+            assert_eq!(charged, refunded, "qos ledger failed to settle");
+            assert!(charged > 0, "qos cell admitted nothing chargeable");
+        } else {
+            assert_eq!(charged_len, 0);
+            assert_eq!(refunded_len, 0);
+        }
     }
 }
 
@@ -113,15 +150,19 @@ fn full_matrix_axes_cover_registry_and_canned_scenarios() {
     assert_eq!(full.devices, BENCH_DEVICES);
     assert_eq!(full.batches, BENCH_BATCHES);
     assert_eq!(full.producers, BENCH_PRODUCERS);
+    assert_eq!(full.replicas, BENCH_REPLICAS);
+    assert_eq!(full.qos, BENCH_QOS);
     // methods × scenarios × 2 device widths × 3 batches × (1 direct +
-    // one fronted cell per producer count)
+    // one fronted cell per producer × replica × qos coordinate)
     assert_eq!(
         full.n_cells(),
         BENCH_METHODS.len()
             * Scenario::names().len()
             * 2
             * 3
-            * (1 + BENCH_PRODUCERS.len())
+            * (1 + BENCH_PRODUCERS.len()
+                * BENCH_REPLICAS.len()
+                * BENCH_QOS.len())
     );
 }
 
@@ -134,16 +175,25 @@ fn bench_runs_a_sharded_and_an_adaptive_cell() {
     matrix.prompt_len = 16;
     matrix.output_len = 2;
     let sharded =
-        run_cell(&matrix, "dynaexq-sharded", "swap", 2, 2, false, 0)
+        run_cell(&matrix, "dynaexq-sharded", "swap", 2, 2, false, 0, 0, false)
             .unwrap();
     assert_eq!(sharded.devices, 2);
     assert_eq!(sharded.rounds, Scenario::swap().total_rounds());
     assert!(sharded.migrated_bytes > 0, "sharded cell migrated nothing");
     // direct cells carry no per-lane counters
     assert!(sharded.fd_lane_admitted.is_empty());
-    let adaptive =
-        run_cell(&matrix, "dynaexq-adaptive", "steady", 1, 1, false, 0)
-            .unwrap();
+    let adaptive = run_cell(
+        &matrix,
+        "dynaexq-adaptive",
+        "steady",
+        1,
+        1,
+        false,
+        0,
+        0,
+        false,
+    )
+    .unwrap();
     assert_eq!(adaptive.drift_events, 0, "steady traffic must not drift");
 }
 
@@ -155,7 +205,9 @@ fn frontdoor_burst_cell_records_typed_rejections() {
     let mut matrix = BenchMatrix::smoke("phi-sim");
     matrix.prompt_len = 16;
     matrix.output_len = 2;
-    let cell = run_cell(&matrix, "dynaexq", "burst", 1, 4, true, 1).unwrap();
+    let cell =
+        run_cell(&matrix, "dynaexq", "burst", 1, 4, true, 1, 1, false)
+            .unwrap();
     assert!(cell.frontdoor);
     assert_eq!(cell.producers, 1);
     assert_eq!(cell.fd_lane_admitted.len(), 3);

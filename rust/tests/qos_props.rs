@@ -1,0 +1,385 @@
+//! Property tests for QoS class-weighted allocation (DESIGN.md §15):
+//! degenerate byte-identity with the classless stack across registry
+//! methods, device widths, and fleet replica counts; premium-dominance
+//! monotonicity at equal raw hotness; per-tenant budget conservation
+//! through submit/drain/readmit including mid-stream failover; seeded
+//! fuzz over config validation and the CLI spec parser; and kv snapshot
+//! roundtrips for every `qos_*` field.
+
+use dynaexq::config::fleet::FleetConfig;
+use dynaexq::config::frontdoor::{FrontDoorConfig, Lane, LimitAction};
+use dynaexq::config::{
+    DeviceConfig, ModelPreset, QosClass, QosConfig, ServingConfig,
+};
+use dynaexq::coordinator::Coordinator;
+use dynaexq::serving::fleet::Fleet;
+use dynaexq::serving::session::MetricsSnapshot;
+use dynaexq::testutil::prop::Prop;
+use dynaexq::workload::{FaultPlan, RequestGenerator, Scenario, WorkloadProfile};
+use dynaexq::ServeSession;
+
+/// One fronted session over the class-tagged multi-tenant scenario,
+/// returning the encoded snapshot (the byte-identity unit).
+fn fronted_snapshot(
+    method: &str,
+    devices: usize,
+    qos: Option<QosConfig>,
+) -> String {
+    let mut b = ServeSession::builder()
+        .model("phi-sim")
+        .method(method)
+        .workload("text")
+        .seed(0x9905)
+        .warmup(1)
+        .devices(devices)
+        .frontdoor(FrontDoorConfig::default());
+    if let Some(q) = qos {
+        b = b.qos(q);
+    }
+    let mut s = b.build().unwrap();
+    s.run_scenario_frontdoor(&Scenario::multi_tenant(), 4, 24, 4).unwrap();
+    s.snapshot().encode()
+}
+
+#[test]
+fn degenerate_qos_is_byte_identical_across_methods_and_devices() {
+    // The collapse contract: a degenerate QosConfig (equal weights, no
+    // budgets) must leave the whole stack byte-identical to running with
+    // no QoS at all — even though the scenario's phases carry class tags.
+    // Equal weights at a *scaled* value are just as degenerate.
+    for method in ["dynaexq", "dynaexq-adaptive", "dynaexq-sharded", "static"]
+    {
+        for devices in [1usize, 2] {
+            let base = fronted_snapshot(method, devices, None);
+            let degen = fronted_snapshot(
+                method,
+                devices,
+                Some(QosConfig::degenerate()),
+            );
+            assert_eq!(
+                base, degen,
+                "{method} x{devices}dev: degenerate config diverged"
+            );
+            let scaled = fronted_snapshot(
+                method,
+                devices,
+                Some(
+                    QosConfig::degenerate()
+                        .with_weight(QosClass::Premium, 3.0)
+                        .with_weight(QosClass::Standard, 3.0)
+                        .with_weight(QosClass::BestEffort, 3.0),
+                ),
+            );
+            assert_eq!(
+                base, scaled,
+                "{method} x{devices}dev: scaled-equal weights diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn degenerate_qos_is_byte_identical_across_fleet_replicas() {
+    let run = |replicas: usize, qos: Option<QosConfig>| -> String {
+        let mut fc = FleetConfig::default();
+        fc.replicas = replicas;
+        fc.devices_per_replica = 1;
+        let mut b = Fleet::builder()
+            .model("phi-sim")
+            .method("dynaexq")
+            .workload("text")
+            .max_batch(4)
+            .seed(0x9906)
+            .warmup(1)
+            .fleet_cfg(fc);
+        if let Some(q) = qos {
+            b = b.qos(q);
+        }
+        let mut f = b.build().unwrap();
+        f.run_scenario(&Scenario::multi_tenant(), 4, 24, 4).unwrap();
+        f.snapshot().encode()
+    };
+    for replicas in [1usize, 2] {
+        let base = run(replicas, None);
+        let degen = run(replicas, Some(QosConfig::degenerate()));
+        assert_eq!(base, degen, "{replicas} replicas: degenerate diverged");
+        assert!(base.contains("qos_charged="), "snapshot lost qos keys");
+    }
+}
+
+#[test]
+fn prop_premium_never_resolves_below_best_effort_at_equal_hotness() {
+    // Monotonicity of the class-weighted waterfill: for every expert pair
+    // fed *identical* raw routed-token counts — one under the premium
+    // class, one under best-effort — the premium expert's resolved rung
+    // is never lower (never a larger tier index). Premium experts sit at
+    // the higher index of each pair, so index tie-breaks work against
+    // them: only the weighting can secure the rung.
+    let mut prop = Prop::new("qos_premium_dominance");
+    prop.run(12, |rng| {
+        let preset = ModelPreset::phi_sim();
+        let mut cfg = ServingConfig::default();
+        cfg.hysteresis_margin = 0.0;
+        cfg.ema_alpha = 0.0; // fully reactive: scores = this interval
+        cfg.max_inflight_promotions = 1024;
+        cfg.qos = Some(QosConfig::tiered());
+        let c =
+            Coordinator::new(&preset, &cfg, &DeviceConfig::default()).unwrap();
+        assert!(c.qos_armed());
+        let layer = rng.below(preset.n_layers_logical());
+        let pairs: Vec<(usize, usize, usize)> = (0..preset.n_experts / 2)
+            .map(|i| (2 * i, 2 * i + 1, 1 + rng.below(60)))
+            .collect();
+        for &(be, _, count) in &pairs {
+            c.set_active_class(QosClass::BestEffort.index());
+            for _ in 0..count {
+                c.record_routing(layer, &[be]);
+            }
+        }
+        for &(_, prem, count) in &pairs {
+            c.set_active_class(QosClass::Premium.index());
+            for _ in 0..count {
+                c.record_routing(layer, &[prem]);
+            }
+        }
+        c.tick(1.0);
+        c.pipeline.wait_staged();
+        c.tick(1e3);
+        for &(be, prem, count) in &pairs {
+            assert!(
+                c.weighted_score(layer, prem) > c.weighted_score(layer, be),
+                "pair ({be},{prem}) count {count}: weighting lost"
+            );
+            assert!(
+                c.resolve_tier(layer, prem) <= c.resolve_tier(layer, be),
+                "pair ({be},{prem}) count {count}: premium resolved at \
+                 tier {} below best-effort's {}",
+                c.resolve_tier(layer, prem),
+                c.resolve_tier(layer, be),
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_fleet_budget_charges_conserved_through_failover() {
+    // Conservation: every modeled hi-precision byte charged at admission
+    // is refunded exactly once when the stream completes — including
+    // streams stranded by a mid-scenario replica failure, re-admitted
+    // under their original ids, and finished elsewhere.
+    let mut prop = Prop::new("qos_budget_conservation");
+    prop.run(6, |rng| {
+        let mut fc = FleetConfig::default();
+        fc.replicas = 2;
+        fc.devices_per_replica = 1;
+        fc.stream_chunk = Some(1); // keep streams in flight across rounds
+        let mut f = Fleet::builder()
+            .model("phi-sim")
+            .method("dynaexq")
+            .workload("text")
+            .max_batch(4)
+            .seed(rng.next_u64())
+            .warmup(1)
+            .fleet_cfg(fc)
+            .faults(FaultPlan::fail(1, 2).and_recover(1, 6))
+            .qos(QosConfig::tiered().with_budget(QosClass::Premium, 1 << 26))
+            .build()
+            .unwrap();
+        let prompt = 8 + rng.below(24);
+        let output = 2 + rng.below(4);
+        f.run_scenario(&Scenario::multi_tenant(), 4, prompt, output)
+            .unwrap();
+        assert!(f.stats().failovers >= 1, "fault plan never fired");
+        let fd = f.frontdoor();
+        assert!(fd.qos_armed());
+        let charged = fd.qos_charged();
+        let refunded = fd.qos_refunded();
+        assert_eq!(charged, refunded, "ledger out of balance");
+        assert!(charged.iter().sum::<u64>() > 0, "nothing was charged");
+        assert!(
+            fd.qos_outstanding().iter().all(|&o| o == 0),
+            "outstanding bytes after full drain: {:?}",
+            fd.qos_outstanding()
+        );
+        // the snapshot mirrors the ledger and survives a kv roundtrip
+        let snap = f.snapshot();
+        assert_eq!(snap.qos_charged, charged);
+        let dec = MetricsSnapshot::decode(&snap.encode()).unwrap();
+        assert_eq!(dec.encode(), snap.encode());
+    });
+}
+
+#[test]
+fn budget_exhaustion_rejects_then_refunds_balance() {
+    // Premium budget admits two in-flight requests at this shape
+    // (2048 B/token × 20 tokens = 40960 B each); the rest of the round's
+    // submissions surface `Rejected::BudgetExhausted` and are never
+    // charged — so after drain the ledger still balances exactly.
+    let q = QosConfig::tiered()
+        .with_budget(QosClass::Premium, 100_000)
+        .pin("acme", QosClass::Premium);
+    let mut s = ServeSession::builder()
+        .model("phi-sim")
+        .seed(0xB4D6)
+        .warmup(0)
+        .frontdoor(FrontDoorConfig::unbounded())
+        .qos(q)
+        .build()
+        .unwrap();
+    let mut gen = RequestGenerator::new(WorkloadProfile::text(), 0xB4D6);
+    let mut rejected = 0u64;
+    for _ in 0..2 {
+        let now = s.now();
+        for _ in 0..5 {
+            let req = gen.request(16, 4, now);
+            if s.submit(req, "acme", Lane::Standard).unwrap().is_err() {
+                rejected += 1;
+            }
+        }
+        s.drain().unwrap();
+    }
+    assert_eq!(rejected, 6, "3 of 5 submissions per round over budget");
+    let snap = s.snapshot();
+    assert_eq!(snap.qos_budget_rejected, 6);
+    assert_eq!(snap.qos_downgraded, 0);
+    assert_eq!(snap.qos_charged, snap.qos_refunded);
+    let pi = QosClass::Premium.index();
+    assert_eq!(snap.qos_charged[pi], 2 * 2 * 40960);
+}
+
+#[test]
+fn budget_exhaustion_downgrade_demotes_instead_of_rejecting() {
+    // Same shape, `action=downgrade`: the third submission demotes the
+    // tenant to best-effort pricing and admits — nothing is rejected,
+    // and post-demotion traffic bills (unmetered) to the new class.
+    let q = QosConfig::tiered()
+        .with_budget(QosClass::Premium, 100_000)
+        .pin("acme", QosClass::Premium)
+        .on_exhausted(LimitAction::Downgrade);
+    let mut s = ServeSession::builder()
+        .model("phi-sim")
+        .seed(0xB4D7)
+        .warmup(0)
+        .frontdoor(FrontDoorConfig::unbounded())
+        .qos(q)
+        .build()
+        .unwrap();
+    let mut gen = RequestGenerator::new(WorkloadProfile::text(), 0xB4D7);
+    let now = s.now();
+    for _ in 0..5 {
+        let req = gen.request(16, 4, now);
+        assert!(s.submit(req, "acme", Lane::Standard).unwrap().is_ok());
+    }
+    s.drain().unwrap();
+    assert_eq!(
+        s.frontdoor().unwrap().tenant_class("acme"),
+        Some(QosClass::BestEffort),
+        "demotion must be sticky"
+    );
+    let snap = s.snapshot();
+    assert_eq!(snap.qos_budget_rejected, 0);
+    assert!(snap.qos_downgraded >= 1);
+    assert_eq!(snap.qos_charged, snap.qos_refunded);
+    assert!(snap.qos_charged[QosClass::BestEffort.index()] > 0);
+}
+
+#[test]
+fn prop_invalid_qos_configs_are_refused_at_build_and_never_panic() {
+    // Builder-level fuzz: zero/negative weights, budgets exceeding the
+    // HBM envelope, and duplicate pins are all rejected with a "qos"-
+    // prefixed error before any backend is constructed.
+    let mut prop = Prop::new("qos_build_fuzz");
+    prop.run(30, |rng| {
+        let mut q = QosConfig::tiered();
+        let kind = rng.below(4);
+        let class = QosClass::ALL[rng.below(QosClass::ALL.len())];
+        match kind {
+            0 => q = q.with_weight(class, 0.0),
+            1 => q = q.with_weight(class, -rng.range_f64(0.1, 5.0)),
+            2 => q = q.with_budget(class, u64::MAX),
+            _ => {
+                let t = format!("t{}", rng.below(3));
+                q = q.pin(&t, QosClass::Premium).pin(&t, QosClass::Standard);
+            }
+        }
+        let err = ServeSession::builder()
+            .model("phi-sim")
+            .frontdoor(FrontDoorConfig::default())
+            .qos(q)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("qos"), "kind {kind}: {err}");
+        if kind == 2 {
+            assert!(err.contains("exceeds the HBM envelope"), "{err}");
+        }
+    });
+}
+
+#[test]
+fn cli_spec_parser_enumerates_valid_names_on_rejection() {
+    let err = QosConfig::parse_spec("gold=2").unwrap_err();
+    assert!(err.contains("premium, standard, best-effort"), "{err}");
+    let err = QosConfig::parse_spec("default=bronze").unwrap_err();
+    assert!(err.contains("premium, standard, best-effort"), "{err}");
+    let err = QosConfig::parse_spec("action=explode").unwrap_err();
+    assert!(err.contains("reject, downgrade"), "{err}");
+    // weight/budget near-misses carry the offending class and token
+    let err = QosConfig::parse_spec("premium=fast").unwrap_err();
+    assert!(err.contains("premium"), "{err}");
+    let err = QosConfig::parse_spec("premium=4:lots").unwrap_err();
+    assert!(err.contains("budget"), "{err}");
+}
+
+#[test]
+fn qos_snapshot_kv_roundtrips_and_rejects_missing_fields() {
+    let q = QosConfig::tiered().pin("t0", QosClass::Premium);
+    let mut s = ServeSession::builder()
+        .model("phi-sim")
+        .seed(0x51ED)
+        .warmup(0)
+        .frontdoor(FrontDoorConfig::default())
+        .qos(q)
+        .build()
+        .unwrap();
+    let mut gen = RequestGenerator::new(WorkloadProfile::text(), 0x51ED);
+    for _ in 0..3 {
+        let now = s.now();
+        for i in 0..4u64 {
+            let req = gen.request(16, 4, now);
+            s.submit(req, &format!("t{}", i % 2), Lane::Standard)
+                .unwrap()
+                .unwrap();
+        }
+        s.drain().unwrap();
+    }
+    let snap = s.snapshot();
+    assert!(!snap.qos_charged.is_empty(), "armed session must report qos");
+    let enc = snap.encode();
+    let dec = MetricsSnapshot::decode(&enc).unwrap();
+    assert_eq!(dec.encode(), enc, "roundtrip not stable");
+    assert_eq!(dec.qos_class_resolved, snap.qos_class_resolved);
+    assert_eq!(dec.qos_charged, snap.qos_charged);
+    assert_eq!(dec.qos_refunded, snap.qos_refunded);
+    assert_eq!(dec.qos_downgraded, snap.qos_downgraded);
+    assert_eq!(dec.qos_budget_rejected, snap.qos_budget_rejected);
+    // a snapshot missing any qos_* key is rejected, not defaulted
+    for key in [
+        "qos_class_resolved",
+        "qos_charged",
+        "qos_refunded",
+        "qos_downgraded",
+        "qos_budget_rejected",
+    ] {
+        let prefix = format!("{key}=");
+        let stripped: Vec<&str> = enc
+            .split(';')
+            .filter(|part| !part.starts_with(&prefix))
+            .collect();
+        let stripped = stripped.join(";");
+        assert!(
+            MetricsSnapshot::decode(&stripped).is_err(),
+            "decode accepted a snapshot missing {key}"
+        );
+    }
+}

@@ -15,6 +15,14 @@
 //! intervals than the fixed-α baseline, on both 1- and 2-device groups —
 //! and writes `target/drift_recovery_report.txt` (recovery ticks per
 //! method × scenario), which CI uploads next to the conformance trace.
+//!
+//! The class-tagged scenarios (multi-tenant, diurnal) run once more under
+//! an armed QoS config (DESIGN.md §15), re-checking the invariants per
+//! class at every phase boundary: per-class tier fractions still form a
+//! distribution, residency stays fully accounted under class-weighted
+//! scores, the class planes partition the stream monotonically, and
+//! every boundary snapshot remains kv-stable with the `qos_*` fields
+//! live.
 
 use std::io::Write;
 
@@ -27,8 +35,8 @@ use dynaexq::workload::{Scenario, WorkloadProfile};
 use dynaexq::ServeSession;
 
 /// The scenario families the matrix pins down (the drift suite's four
-/// canonical regimes; multi-tenant and diurnal ride through A10 and the
-/// example sweep).
+/// canonical regimes; the class-tagged multi-tenant and diurnal
+/// scenarios get their own QoS invariant pass below).
 const SCENARIOS: &[&str] = &["steady", "swap", "rotation", "burst"];
 
 #[test]
@@ -287,6 +295,94 @@ fn repeat_runs_snapshot_byte_identical_under_concurrent_hot_path() {
                 first, second,
                 "{method} × {sc_name} × {devices}dev: repeat run diverged"
             );
+        }
+    }
+}
+
+#[test]
+fn qos_tagged_scenarios_hold_class_invariants_at_phase_boundaries() {
+    use dynaexq::config::frontdoor::FrontDoorConfig;
+    use dynaexq::config::{QosClass, QosConfig};
+
+    let preset = ModelPreset::phi_sim();
+    let layers = preset.n_layers_logical();
+    for sc_name in ["multi-tenant", "diurnal"] {
+        let sc = Scenario::by_name(sc_name).unwrap();
+        // every phase of the tagged scenarios carries a class tag
+        assert!(
+            sc.phases.iter().all(|p| p.qos_class.is_some()),
+            "{sc_name}: untagged phase"
+        );
+        let mut s = ServeSession::builder()
+            .model("phi-sim")
+            .method("dynaexq")
+            .workload("text")
+            .seed(0x905A)
+            .warmup(1)
+            .frontdoor(FrontDoorConfig::default())
+            .qos(QosConfig::tiered())
+            .build()
+            .unwrap();
+        let marks = s.run_scenario_frontdoor(&sc, 4, 16, 4).unwrap();
+        assert_eq!(marks.len(), sc.phases.len());
+        let mut prev: Vec<Vec<u64>> = Vec::new();
+        for ((phase, snap), spec) in marks.iter().zip(&sc.phases) {
+            let classed = &snap.qos_class_resolved;
+            assert_eq!(
+                classed.len(),
+                QosClass::ALL.len(),
+                "{sc_name}/{phase}: class plane count"
+            );
+            // (I3 per class) tier fractions form a distribution wherever
+            // the class saw traffic
+            for (c, row) in classed.iter().enumerate() {
+                let total: u64 = row.iter().sum();
+                if total > 0 {
+                    let sum: f64 = row
+                        .iter()
+                        .map(|&v| v as f64 / total as f64)
+                        .sum();
+                    assert!(
+                        (sum - 1.0).abs() < 1e-9,
+                        "{sc_name}/{phase}: class {c} fractions sum {sum}"
+                    );
+                }
+            }
+            // (I2 under weighting) residency stays fully accounted while
+            // the waterfill runs on class-weighted scores
+            assert_eq!(
+                snap.tier_resident.iter().sum::<usize>(),
+                layers * preset.n_experts,
+                "{sc_name}/{phase}: residency leak under class weighting"
+            );
+            // the class planes partition the stream: counters are
+            // monotone across boundaries, and the phase's tagged class
+            // billed the phase's traffic
+            if !prev.is_empty() {
+                for (c, row) in classed.iter().enumerate() {
+                    for (t, &v) in row.iter().enumerate() {
+                        assert!(
+                            v >= prev[c][t],
+                            "{sc_name}/{phase}: class {c} tier {t} counter \
+                             went backwards"
+                        );
+                    }
+                }
+            }
+            let class = spec.qos_class.unwrap();
+            let prev_sum: u64 = prev
+                .get(class.index())
+                .map(|r| r.iter().sum())
+                .unwrap_or(0);
+            let cur_sum: u64 = classed[class.index()].iter().sum();
+            assert!(
+                cur_sum > prev_sum,
+                "{sc_name}/{phase}: tagged class {class} billed no traffic"
+            );
+            prev = classed.clone();
+            // boundary snapshots stay kv-stable with the qos fields live
+            let dec = MetricsSnapshot::decode(&snap.encode()).unwrap();
+            assert_eq!(&dec, snap, "{sc_name}/{phase}: kv roundtrip");
         }
     }
 }
