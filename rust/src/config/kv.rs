@@ -1,11 +1,12 @@
 //! Minimal `key=value` / `key=value;key=value` parsing used by the artifact
 //! manifest and CLI overrides (the offline crate set has no serde/TOML).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Parse `a=1;b=x` (or comma-separated) into a map. Empty segments ignored.
-pub fn parse_kv(s: &str) -> HashMap<String, String> {
-    let mut m = HashMap::new();
+/// Ordered map so that any serialization of the result is deterministic.
+pub fn parse_kv(s: &str) -> BTreeMap<String, String> {
+    let mut m = BTreeMap::new();
     for part in s.split([';', ',']) {
         let part = part.trim();
         if part.is_empty() {
@@ -20,7 +21,7 @@ pub fn parse_kv(s: &str) -> HashMap<String, String> {
 
 /// Fetch + parse a typed value from a kv map.
 pub fn get_parse<T: std::str::FromStr>(
-    m: &HashMap<String, String>,
+    m: &BTreeMap<String, String>,
     key: &str,
 ) -> Option<T> {
     m.get(key).and_then(|v| v.parse().ok())

@@ -46,17 +46,17 @@ impl BudgetTracker {
     pub fn try_reserve(&self, tier: usize, bytes: usize) -> bool {
         let used = &self.used[tier];
         let cap = self.caps[tier];
-        let mut cur = used.load(Ordering::Relaxed);
+        let mut cur = used.load(Ordering::Relaxed); // relaxed-ok: CAS loop seed, retried on mismatch
         loop {
             if cur + bytes > cap {
-                self.failed_reservations.fetch_add(1, Ordering::Relaxed);
+                self.failed_reservations.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
                 return false;
             }
             match used.compare_exchange_weak(
                 cur,
                 cur + bytes,
                 Ordering::AcqRel,
-                Ordering::Relaxed,
+                Ordering::Relaxed, // relaxed-ok: CAS failure path just reloads
             ) {
                 Ok(_) => return true,
                 Err(now) => cur = now,
@@ -71,7 +71,7 @@ impl BudgetTracker {
     }
 
     pub fn used(&self, tier: usize) -> usize {
-        self.used[tier].load(Ordering::Relaxed)
+        self.used[tier].load(Ordering::Relaxed) // relaxed-ok: advisory usage read
     }
 
     pub fn cap(&self, tier: usize) -> usize {
@@ -322,7 +322,7 @@ mod tests {
         b.release_hi(60);
         assert_eq!(b.hi_used(), 40);
         assert!(b.within_envelope());
-        assert_eq!(b.failed_reservations.load(Ordering::Relaxed), 1);
+        assert_eq!(b.failed_reservations.load(Ordering::Relaxed), 1); // relaxed-ok: test assertion
     }
 
     #[test]

@@ -258,7 +258,7 @@ impl DeviceGroup {
     pub fn migrated_bytes(&self) -> u64 {
         self.devices
             .iter()
-            .map(|c| c.pipeline.stats.migrated_bytes.load(Ordering::Relaxed))
+            .map(|c| c.pipeline.stats.migrated_bytes.load(Ordering::Relaxed)) // relaxed-ok: stat counter
             .sum()
     }
 
@@ -403,7 +403,7 @@ mod tests {
             }
             assert_eq!(solo.handles.tier_counts(), group.tier_counts());
             assert_eq!(
-                solo.pipeline.stats.migrated_bytes.load(Ordering::Relaxed),
+                solo.pipeline.stats.migrated_bytes.load(Ordering::Relaxed), // relaxed-ok: test assertion
                 group.migrated_bytes()
             );
             assert!(group.within_envelope());

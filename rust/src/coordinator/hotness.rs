@@ -192,7 +192,7 @@ fn shard_slot() -> usize {
     SLOT.with(|s| {
         let mut v = s.get();
         if v == usize::MAX {
-            v = NEXT_SLOT.fetch_add(1, Ordering::Relaxed);
+            v = NEXT_SLOT.fetch_add(1, Ordering::Relaxed); // relaxed-ok: unique slot draw, no ordering needed
             s.set(v);
         }
         v
@@ -247,7 +247,7 @@ impl HotnessShards {
     #[inline]
     pub fn record(&self, shard: usize, layer: usize, expert: usize) {
         self.shards[shard][layer * self.n_experts + expert]
-            .fetch_add(1, Ordering::Relaxed);
+            .fetch_add(1, Ordering::Relaxed); // relaxed-ok: count visible at boundary merge under hotness lock
     }
 
     /// Record a batch of selections for one layer into `shard`
@@ -257,7 +257,7 @@ impl HotnessShards {
         let row = &self.shards[shard];
         let base = layer * self.n_experts;
         for &e in experts {
-            row[base + e].fetch_add(1, Ordering::Relaxed);
+            row[base + e].fetch_add(1, Ordering::Relaxed); // relaxed-ok: count visible at boundary merge under hotness lock
         }
     }
 
@@ -276,8 +276,8 @@ impl HotnessShards {
         let classed = &self.class_shards[class][shard];
         let base = layer * self.n_experts;
         for &e in experts {
-            row[base + e].fetch_add(1, Ordering::Relaxed);
-            classed[base + e].fetch_add(1, Ordering::Relaxed);
+            row[base + e].fetch_add(1, Ordering::Relaxed); // relaxed-ok: count visible at boundary merge under hotness lock
+            classed[base + e].fetch_add(1, Ordering::Relaxed); // relaxed-ok: count visible at boundary merge under hotness lock
         }
     }
 
@@ -293,7 +293,7 @@ impl HotnessShards {
         );
         for shard in &self.shards {
             for (i, cell) in shard.iter().enumerate() {
-                let v = cell.swap(0, Ordering::Relaxed);
+                let v = cell.swap(0, Ordering::Relaxed); // relaxed-ok: drain serialized by the hotness lock
                 if v != 0 {
                     est.counts[i] += v;
                 }
@@ -317,7 +317,7 @@ impl HotnessShards {
             assert_eq!(plane.len(), self.n_slots);
             for shard in shards {
                 for (i, cell) in shard.iter().enumerate() {
-                    let v = cell.swap(0, Ordering::Relaxed);
+                    let v = cell.swap(0, Ordering::Relaxed); // relaxed-ok: drain serialized by the hotness lock
                     if v != 0 {
                         plane[i] += v;
                     }
@@ -331,7 +331,7 @@ impl HotnessShards {
         self.shards
             .iter()
             .flat_map(|s| s.iter())
-            .map(|c| c.load(Ordering::Relaxed))
+            .map(|c| c.load(Ordering::Relaxed)) // relaxed-ok: diagnostic sum
             .sum()
     }
 }

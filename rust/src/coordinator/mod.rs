@@ -44,6 +44,7 @@ use crate::config::{
 };
 use crate::model::Precision;
 use crate::sim::LogicalDims;
+use crate::util::lockorder::{LockRank, OrderedMutex};
 
 /// Summary of one policy update (returned by [`Coordinator::tick`]).
 #[derive(Debug, Default, Clone)]
@@ -72,7 +73,7 @@ struct QosWeighting {
     /// layer before each tagged phase; reads are relaxed — attribution
     /// follows the same boundary-visibility contract as the counts).
     active: std::sync::atomic::AtomicUsize,
-    state: std::sync::Mutex<QosScores>,
+    state: OrderedMutex<QosScores>,
 }
 
 /// The serial fold state behind [`QosWeighting`].
@@ -99,11 +100,11 @@ pub struct Coordinator {
     /// (DESIGN.md §13). The mutex below only guards the serial
     /// fold/plan state, never the record path.
     shards: HotnessShards,
-    hotness: std::sync::Mutex<HotnessEstimator>,
+    hotness: OrderedMutex<HotnessEstimator>,
     /// Change-point detector of the adaptive-α mode (`None` when
     /// `cfg.adaptive_alpha` is off — the classic fixed-α stack).
-    drift: std::sync::Mutex<Option<DriftDetector>>,
-    next_update_s: std::sync::Mutex<f64>,
+    drift: OrderedMutex<Option<DriftDetector>>,
+    next_update_s: OrderedMutex<f64>,
     /// Class-weighted scoring (`None` without an armed QoS config — the
     /// classic tenant-blind waterfill, byte-identically).
     qos: Option<QosWeighting>,
@@ -206,10 +207,13 @@ impl Coordinator {
                 active: std::sync::atomic::AtomicUsize::new(
                     QosClass::Standard.index(),
                 ),
-                state: std::sync::Mutex::new(QosScores {
-                    counts: vec![vec![0; slots]; n_classes],
-                    scores: vec![0.0; slots],
-                }),
+                state: OrderedMutex::new(
+                    LockRank::QosScores,
+                    QosScores {
+                        counts: vec![vec![0; slots]; n_classes],
+                        scores: vec![0.0; slots],
+                    },
+                ),
             });
         let shards = if qos.is_some() {
             HotnessShards::with_classes(layers, preset.n_experts, n_classes)
@@ -236,17 +240,24 @@ impl Coordinator {
             pools,
             pipeline,
             shards,
-            hotness: std::sync::Mutex::new(HotnessEstimator::new(
-                layers,
-                preset.n_experts,
-                cfg.ema_alpha,
-            )),
-            drift: std::sync::Mutex::new(if cfg.adaptive_alpha {
-                Some(DriftDetector::new(layers, preset.n_experts, &cfg.drift))
-            } else {
-                None
-            }),
-            next_update_s: std::sync::Mutex::new(
+            hotness: OrderedMutex::new(
+                LockRank::Hotness,
+                HotnessEstimator::new(layers, preset.n_experts, cfg.ema_alpha),
+            ),
+            drift: OrderedMutex::new(
+                LockRank::Drift,
+                if cfg.adaptive_alpha {
+                    Some(DriftDetector::new(
+                        layers,
+                        preset.n_experts,
+                        &cfg.drift,
+                    ))
+                } else {
+                    None
+                },
+            ),
+            next_update_s: OrderedMutex::new(
+                LockRank::UpdateClock,
                 cfg.update_interval_ms / 1e3,
             ),
             qos,
@@ -308,7 +319,7 @@ impl Coordinator {
                 shard,
                 layer,
                 experts,
-                q.active.load(std::sync::atomic::Ordering::Relaxed),
+                q.active.load(std::sync::atomic::Ordering::Relaxed), // relaxed-ok: boundary-visibility attribution tag
             ),
             None => self.shards.record_layer(shard, layer, experts),
         }
@@ -327,7 +338,7 @@ impl Coordinator {
         match &self.qos {
             Some(q) => {
                 let class =
-                    q.active.load(std::sync::atomic::Ordering::Relaxed);
+                    q.active.load(std::sync::atomic::Ordering::Relaxed); // relaxed-ok: boundary-visibility attribution tag
                 for (layer, experts) in batches {
                     self.shards
                         .record_layer_classed(shard, layer, experts, class);
@@ -355,7 +366,7 @@ impl Coordinator {
         if let Some(q) = &self.qos {
             q.active.store(
                 class.min(QosClass::ALL.len() - 1),
-                std::sync::atomic::Ordering::Relaxed,
+                std::sync::atomic::Ordering::Relaxed, // relaxed-ok: boundary-visibility attribution tag
             );
         }
     }
@@ -365,7 +376,7 @@ impl Coordinator {
     pub fn weighted_score(&self, layer: usize, expert: usize) -> f64 {
         match &self.qos {
             Some(q) => {
-                let qs = q.state.lock().unwrap();
+                let qs = q.state.lock();
                 qs.scores[layer * self.preset.n_experts + expert]
             }
             None => self.hotness_score(layer, expert),
@@ -383,7 +394,7 @@ impl Coordinator {
     /// this to skip thread spawns on the per-round ticks that would gate
     /// out anyway.
     pub fn update_due(&self, now_s: f64) -> bool {
-        now_s >= *self.next_update_s.lock().unwrap()
+        now_s >= *self.next_update_s.lock()
     }
 
     /// Iteration boundary: publish finished transitions; if the update
@@ -393,7 +404,7 @@ impl Coordinator {
         report.published = self.pipeline.poll(now_s).len();
 
         {
-            let mut next = self.next_update_s.lock().unwrap();
+            let mut next = self.next_update_s.lock();
             if now_s < *next {
                 return report;
             }
@@ -401,7 +412,7 @@ impl Coordinator {
         }
         report.ran = true;
 
-        let mut hot = self.hotness.lock().unwrap();
+        let mut hot = self.hotness.lock();
         // Iteration-boundary merge (DESIGN.md §13): drain the sharded
         // atomic counters into the serial estimator *before* the drift
         // detector reads raw counts and before the EMA fold. u64 sums are
@@ -412,8 +423,7 @@ impl Coordinator {
         // QoS class planes merge at the same boundary, under the same
         // hotness lock (DESIGN.md §15): the class split of this interval's
         // counts is exactly the raw counts the estimator just absorbed.
-        let mut qos_state =
-            self.qos.as_ref().map(|q| q.state.lock().unwrap());
+        let mut qos_state = self.qos.as_ref().map(|q| q.state.lock());
         if let Some(qs) = qos_state.as_deref_mut() {
             self.shards.merge_classes_into(&mut qs.counts);
         }
@@ -423,7 +433,7 @@ impl Coordinator {
         // configured recovery span. Off (the default) this block is
         // skipped entirely and behaviour is byte-identical to the classic
         // fixed-α stack.
-        if let Some(det) = self.drift.lock().unwrap().as_mut() {
+        if let Some(det) = self.drift.lock().as_mut() {
             let idle = hot.interval_idle();
             // (observe() is itself a no-op on an idle interval)
             if det.observe(&hot) {
@@ -528,12 +538,12 @@ impl Coordinator {
 
     /// Smoothed hotness score (diagnostics/benches).
     pub fn hotness_score(&self, layer: usize, expert: usize) -> f64 {
-        self.hotness.lock().unwrap().score(layer, expert)
+        self.hotness.lock().score(layer, expert)
     }
 
     /// Top-n hottest experts of a layer (diagnostics/benches).
     pub fn hottest(&self, layer: usize, n: usize) -> Vec<usize> {
-        self.hotness.lock().unwrap().top_n(layer, n)
+        self.hotness.lock().top_n(layer, n)
     }
 
     /// `(change-point triggers, recovery intervals)` observed by the
@@ -541,7 +551,6 @@ impl Coordinator {
     pub fn drift_stats(&self) -> (u64, u64) {
         self.drift
             .lock()
-            .unwrap()
             .as_ref()
             .map(|d| (d.drift_events(), d.recovery_ticks()))
             .unwrap_or((0, 0))

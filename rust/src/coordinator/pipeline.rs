@@ -20,11 +20,12 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::model::{Precision, PrecisionLadder};
 use crate::sim::Stream;
+use crate::util::lockorder::{LockRank, OrderedMutex};
 
 use super::budget::BudgetTracker;
 use super::pools::{BlockPool, PoolAlloc};
@@ -112,7 +113,7 @@ pub struct PipelineStats {
 impl PipelineStats {
     /// Plain-value snapshot of the counters (bench/metrics export).
     pub fn totals(&self) -> TransitionTotals {
-        let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        let ld = |a: &AtomicU64| a.load(Ordering::Relaxed); // relaxed-ok: stat counter snapshot
         TransitionTotals {
             promotions: ld(&self.promotions),
             demotions: ld(&self.demotions),
@@ -197,7 +198,7 @@ pub struct TransitionPipeline {
     bytes_of: Box<dyn Fn(Precision) -> usize + Send + Sync>,
     max_inflight: usize,
 
-    inner: Mutex<PipelineInner>,
+    inner: OrderedMutex<PipelineInner>,
     next_id: AtomicU64,
     pub stats: PipelineStats,
 
@@ -241,11 +242,14 @@ impl TransitionPipeline {
             secs_per_byte,
             bytes_of,
             max_inflight,
-            inner: Mutex::new(PipelineInner {
-                migration: Stream::new(),
-                inflight: Vec::new(),
-                evictions: VecDeque::new(),
-            }),
+            inner: OrderedMutex::new(
+                LockRank::PipelineInner,
+                PipelineInner {
+                    migration: Stream::new(),
+                    inflight: Vec::new(),
+                    evictions: VecDeque::new(),
+                },
+            ),
             next_id: AtomicU64::new(1),
             stats: PipelineStats::default(),
             stage_tx: Some(tx),
@@ -273,7 +277,7 @@ impl TransitionPipeline {
             // Off-ladder target: reject with no side effects instead of
             // aborting the process mid-serve on a caller's mis-sized
             // rung index.
-            self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            self.stats.rejected.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
             return Admission::Rejected;
         }
 
@@ -282,7 +286,7 @@ impl TransitionPipeline {
         // bookkeeping all happen under a single acquisition, so a
         // concurrent submitter can never interleave between the decision
         // and its side effects.
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
 
         // Reclaim superseded buffers first — eviction priority under
         // pressure increases the feasible set for this admission.
@@ -298,7 +302,7 @@ impl TransitionPipeline {
         };
 
         if inner.inflight.len() >= self.max_inflight {
-            self.stats.deferred.fetch_add(1, Ordering::Relaxed);
+            self.stats.deferred.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
             return Admission::Deferred;
         }
 
@@ -308,7 +312,7 @@ impl TransitionPipeline {
         let dev_bytes = (self.bytes_of)(target_precision);
         let reserve_bytes = if to == base { 0 } else { dev_bytes };
         if reserve_bytes > 0 && !self.budget.try_reserve(to, reserve_bytes) {
-            self.stats.deferred.fetch_add(1, Ordering::Relaxed);
+            self.stats.deferred.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
             return Admission::Deferred;
         }
 
@@ -318,7 +322,7 @@ impl TransitionPipeline {
             if reserve_bytes > 0 {
                 self.budget.release(to, reserve_bytes);
             }
-            self.stats.deferred.fetch_add(1, Ordering::Relaxed);
+            self.stats.deferred.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
             return Admission::Deferred;
         };
 
@@ -328,7 +332,7 @@ impl TransitionPipeline {
             entry.residency = Residency::Transitioning { from, to };
             entry.pending_alloc = Some(new_alloc);
         }
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed); // relaxed-ok: unique id draw, no ordering needed
         let staged = Arc::new(AtomicBool::new(false));
         if let Some(tx) = &self.stage_tx {
             tx.send((
@@ -342,11 +346,11 @@ impl TransitionPipeline {
             .schedule(now, dev_bytes as f64 * self.secs_per_byte);
         self.stats
             .migrated_bytes
-            .fetch_add(dev_bytes as u64, Ordering::Relaxed);
+            .fetch_add(dev_bytes as u64, Ordering::Relaxed); // relaxed-ok: stat counter
         if to < from {
-            self.stats.promotions.fetch_add(1, Ordering::Relaxed);
+            self.stats.promotions.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
         } else {
-            self.stats.demotions.fetch_add(1, Ordering::Relaxed);
+            self.stats.demotions.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
         }
         inner.inflight.push(Inflight {
             id,
@@ -367,7 +371,7 @@ impl TransitionPipeline {
     pub fn poll(&self, now: f64) -> Vec<(ExpertKey, Precision)> {
         let base = self.ladder.base_tier();
         let mut published = Vec::new();
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         let mut i = 0;
         while i < inner.inflight.len() {
             let ready = inner.inflight[i].done_at <= now
@@ -385,7 +389,7 @@ impl TransitionPipeline {
             entry.residency = Residency::Resident(job.to);
             drop(entry);
             self.handles.publish(job.key, job.to);
-            self.stats.published.fetch_add(1, Ordering::Relaxed);
+            self.stats.published.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
             // ...then the superseded version is reclaimed in the background.
             if let Some(alloc) = old_alloc {
                 let release_bytes = if job.from == base {
@@ -407,7 +411,7 @@ impl TransitionPipeline {
 
     /// Reclaim superseded buffers (the eviction queue of §3.4).
     pub fn drain_evictions(&self) {
-        self.drain_locked(&mut self.inner.lock().unwrap());
+        self.drain_locked(&mut self.inner.lock());
     }
 
     /// The drain body, for callers already holding the pipeline lock.
@@ -417,23 +421,23 @@ impl TransitionPipeline {
             if ev.release_bytes > 0 {
                 self.budget.release(ev.tier, ev.release_bytes);
             }
-            self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+            self.stats.evictions.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
         }
     }
 
     /// Modeled time at which all queued migration work completes.
     pub fn migration_tail(&self) -> f64 {
-        self.inner.lock().unwrap().migration.tail()
+        self.inner.lock().migration.tail()
     }
 
     /// Total modeled migration busy time (bandwidth accounting).
     pub fn migration_busy(&self) -> f64 {
-        self.inner.lock().unwrap().migration.busy()
+        self.inner.lock().migration.busy()
     }
 
     /// Number of in-flight transitions.
     pub fn inflight_count(&self) -> usize {
-        self.inner.lock().unwrap().inflight.len()
+        self.inner.lock().inflight.len()
     }
 
     /// The in-flight (key, from, to) moves (policy planning input — avoids
@@ -441,7 +445,6 @@ impl TransitionPipeline {
     pub fn inflight_transitions(&self) -> Vec<(ExpertKey, usize, usize)> {
         self.inner
             .lock()
-            .unwrap()
             .inflight
             .iter()
             .map(|j| (j.key, j.from, j.to))
@@ -452,7 +455,6 @@ impl TransitionPipeline {
     pub fn promoting_keys(&self) -> Vec<ExpertKey> {
         self.inner
             .lock()
-            .unwrap()
             .inflight
             .iter()
             .filter(|j| j.to < j.from)
@@ -464,7 +466,6 @@ impl TransitionPipeline {
     pub fn demoting_keys(&self) -> Vec<ExpertKey> {
         self.inner
             .lock()
-            .unwrap()
             .inflight
             .iter()
             .filter(|j| j.to > j.from)
@@ -478,7 +479,6 @@ impl TransitionPipeline {
             let all = self
                 .inner
                 .lock()
-                .unwrap()
                 .inflight
                 .iter()
                 .all(|j| j.staged.load(Ordering::Acquire));
@@ -691,14 +691,14 @@ mod tests {
         assert!(matches!(p.submit(k, PROMOTE, 0.0), Admission::Admitted { .. }));
         // same expert, pipeline full → Redundant, deferred stat untouched
         assert_eq!(p.submit(k, PROMOTE, 0.0), Admission::Redundant);
-        assert_eq!(p.stats.deferred.load(Ordering::Relaxed), 0);
+        assert_eq!(p.stats.deferred.load(Ordering::Relaxed), 0); // relaxed-ok: test assertion
         // a *different* expert against the full pipeline is real
         // backpressure and is the only thing `deferred` counts
         assert_eq!(
             p.submit(ExpertKey::new(0, 1), PROMOTE, 0.0),
             Admission::Deferred
         );
-        assert_eq!(p.stats.deferred.load(Ordering::Relaxed), 1);
+        assert_eq!(p.stats.deferred.load(Ordering::Relaxed), 1); // relaxed-ok: test assertion
     }
 
     #[test]
@@ -710,7 +710,7 @@ mod tests {
         let k = ExpertKey::new(0, 2);
         let adm = p.submit(k, TransitionKind::ToTier(99), 0.0);
         assert_eq!(adm, Admission::Rejected);
-        assert_eq!(p.stats.rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(p.stats.rejected.load(Ordering::Relaxed), 1); // relaxed-ok: test assertion
         assert_eq!(p.inflight_count(), 0);
         assert_eq!(b.hi_used(), 0, "no reservation leaked");
         assert_eq!(h.resolve(k), Precision::Int4, "residency untouched");

@@ -8,7 +8,7 @@
 //! transitions cannot inject allocator jitter into the token critical path,
 //! and the address space cannot fragment.
 
-use std::sync::Mutex;
+use crate::util::lockorder::{LockRank, OrderedMutex};
 
 /// A block allocation; freeing requires returning it to the same pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -43,7 +43,7 @@ pub struct BlockPool {
     name: &'static str,
     block_bytes: usize,
     n_blocks: usize,
-    inner: Mutex<PoolInner>,
+    inner: OrderedMutex<PoolInner>,
 }
 
 const NO_BLOCK: usize = usize::MAX;
@@ -61,12 +61,15 @@ impl BlockPool {
             name,
             block_bytes,
             n_blocks,
-            inner: Mutex::new(PoolInner {
-                free: (0..n_blocks).rev().collect(),
-                blocks_used: 0,
-                next: vec![NO_BLOCK; n_blocks],
-                stats: PoolStats::default(),
-            }),
+            inner: OrderedMutex::new(
+                LockRank::Pool,
+                PoolInner {
+                    free: (0..n_blocks).rev().collect(),
+                    blocks_used: 0,
+                    next: vec![NO_BLOCK; n_blocks],
+                    stats: PoolStats::default(),
+                },
+            ),
         }
     }
 
@@ -75,7 +78,7 @@ impl BlockPool {
     /// must have failed admission earlier — see BudgetTracker).
     pub fn alloc(&self, bytes: usize) -> Option<PoolAlloc> {
         let need = crate::util::ceil_div(bytes.max(1), self.block_bytes);
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         if g.free.len() < need {
             g.stats.failures += 1;
             return None;
@@ -97,7 +100,7 @@ impl BlockPool {
 
     /// Return an allocation's blocks to the free list. O(n_blocks).
     pub fn free(&self, alloc: PoolAlloc) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         let mut b = alloc.first_block;
         let mut returned = 0;
         while b != NO_BLOCK && returned < alloc.n_blocks {
@@ -113,11 +116,11 @@ impl BlockPool {
     }
 
     pub fn blocks_free(&self) -> usize {
-        self.inner.lock().unwrap().free.len()
+        self.inner.lock().free.len()
     }
 
     pub fn blocks_used(&self) -> usize {
-        self.inner.lock().unwrap().blocks_used
+        self.inner.lock().blocks_used
     }
 
     pub fn capacity_blocks(&self) -> usize {
@@ -129,12 +132,12 @@ impl BlockPool {
     }
 
     pub fn stats(&self) -> PoolStats {
-        self.inner.lock().unwrap().stats.clone()
+        self.inner.lock().stats.clone()
     }
 
     /// Invariant: used + free == capacity (no leaked blocks).
     pub fn consistent(&self) -> bool {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock();
         g.blocks_used + g.free.len() == self.n_blocks
     }
 }

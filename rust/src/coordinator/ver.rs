@@ -13,9 +13,9 @@
 //! complete, resident weight version at some rung of the ladder.**
 
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
-use std::sync::Mutex;
 
 use crate::model::{Precision, PrecisionLadder};
+use crate::util::lockorder::{LockRank, OrderedMutex, OrderedMutexGuard};
 
 use super::pools::PoolAlloc;
 
@@ -86,7 +86,7 @@ pub struct HandleTable {
     ladder: PrecisionLadder,
     active: Vec<AtomicU8>,
     resolves: AtomicU64,
-    state: Vec<Mutex<EntryState>>,
+    state: Vec<OrderedMutex<EntryState>>,
 }
 
 impl HandleTable {
@@ -107,12 +107,15 @@ impl HandleTable {
             resolves: AtomicU64::new(0),
             state: (0..n)
                 .map(|_| {
-                    Mutex::new(EntryState {
-                        residency: Residency::Resident(base),
-                        active_alloc: None,
-                        pending_alloc: None,
-                        pending_job: None,
-                    })
+                    OrderedMutex::new(
+                        LockRank::HandleEntry,
+                        EntryState {
+                            residency: Residency::Resident(base),
+                            active_alloc: None,
+                            pending_alloc: None,
+                            pending_job: None,
+                        },
+                    )
                 })
                 .collect(),
         }
@@ -141,13 +144,13 @@ impl HandleTable {
     /// HOT PATH: resolve a stable handle to the active version's rung.
     #[inline]
     pub fn resolve_tier(&self, key: ExpertKey) -> usize {
-        self.resolves.fetch_add(1, Ordering::Relaxed);
+        self.resolves.fetch_add(1, Ordering::Relaxed); // relaxed-ok: hot-path stat counter
         self.active[key.flat(self.n_experts)].load(Ordering::Acquire) as usize
     }
 
     /// Number of hot-path resolves so far (overhead accounting).
     pub fn resolve_count(&self) -> u64 {
-        self.resolves.load(Ordering::Relaxed)
+        self.resolves.load(Ordering::Relaxed) // relaxed-ok: stat counter
     }
 
     /// PUBLISH: atomically switch the active version to rung `tier`.
@@ -159,12 +162,11 @@ impl HandleTable {
             .store(tier as u8, Ordering::Release);
     }
 
-    /// Lock an entry's transition state (never taken on the compute path).
-    pub fn entry(
-        &self,
-        key: ExpertKey,
-    ) -> std::sync::MutexGuard<'_, EntryState> {
-        self.state[key.flat(self.n_experts)].lock().unwrap()
+    /// Lock an entry's transition state (never taken on the compute
+    /// path). Rank [`LockRank::HandleEntry`]: taken under the pipeline
+    /// lock, and never two entries at once.
+    pub fn entry(&self, key: ExpertKey) -> OrderedMutexGuard<'_, EntryState> {
+        self.state[key.flat(self.n_experts)].lock()
     }
 
     /// Published rung of every expert of one layer (policy input).
@@ -210,7 +212,7 @@ impl HandleTable {
     pub fn count_residency(&self, r: Residency) -> usize {
         self.state
             .iter()
-            .filter(|s| s.lock().unwrap().residency == r)
+            .filter(|s| s.lock().residency == r)
             .count()
     }
 }

@@ -6,7 +6,7 @@
 //! expert_int4_t16	expert_int4_t16.hlo.txt	op=expert_ffn;precision=int4;tokens=16
 //! ```
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
@@ -18,7 +18,7 @@ use crate::config::kv::parse_kv;
 pub struct ArtifactMeta {
     pub name: String,
     pub file: PathBuf,
-    pub meta: HashMap<String, String>,
+    pub meta: BTreeMap<String, String>,
 }
 
 impl ArtifactMeta {
@@ -34,8 +34,8 @@ impl ArtifactMeta {
 /// Parsed manifest: all units + the core dims they were compiled for.
 #[derive(Clone, Debug)]
 pub struct Manifest {
-    pub units: HashMap<String, ArtifactMeta>,
-    pub dims: HashMap<String, String>,
+    pub units: BTreeMap<String, ArtifactMeta>,
+    pub dims: BTreeMap<String, String>,
 }
 
 impl Manifest {
@@ -48,8 +48,8 @@ impl Manifest {
     }
 
     pub fn parse(text: &str, dir: &Path) -> Result<Self> {
-        let mut units = HashMap::new();
-        let mut dims = HashMap::new();
+        let mut units = BTreeMap::new();
+        let mut dims = BTreeMap::new();
         for (ln, line) in text.lines().enumerate() {
             let line = line.trim();
             if line.is_empty() {

@@ -12,9 +12,11 @@ pub mod artifacts;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
+
+use crate::util::lockorder::{LockRank, OrderedMutex};
 
 pub use artifacts::{ArtifactMeta, Manifest};
 
@@ -29,9 +31,9 @@ pub struct RuntimeStats {
 impl RuntimeStats {
     pub fn snapshot(&self) -> (u64, u64, f64) {
         (
-            self.compiles.load(Ordering::Relaxed),
-            self.executions.load(Ordering::Relaxed),
-            self.exec_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            self.compiles.load(Ordering::Relaxed), // relaxed-ok: stat counter snapshot
+            self.executions.load(Ordering::Relaxed), // relaxed-ok: stat counter snapshot
+            self.exec_nanos.load(Ordering::Relaxed) as f64 / 1e9, // relaxed-ok: stat counter snapshot
         )
     }
 }
@@ -42,7 +44,7 @@ pub struct Runtime {
     pub manifest: Manifest,
     #[allow(dead_code)] // artifact root, kept for diagnostics
     dir: PathBuf,
-    exes: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    exes: OrderedMutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
     pub stats: RuntimeStats,
 }
 
@@ -57,7 +59,7 @@ impl Runtime {
             client,
             manifest,
             dir: dir.to_path_buf(),
-            exes: Mutex::new(HashMap::new()),
+            exes: OrderedMutex::new(LockRank::RuntimeExes, HashMap::new()),
             stats: RuntimeStats::default(),
         })
     }
@@ -74,7 +76,7 @@ impl Runtime {
         &self,
         name: &str,
     ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.exes.lock().unwrap().get(name) {
+        if let Some(exe) = self.exes.lock().get(name) {
             return Ok(exe.clone());
         }
         let meta = self.manifest.get(name)?;
@@ -88,8 +90,8 @@ impl Runtime {
         let exe = Arc::new(self.client.compile(&comp).map_err(|e| {
             anyhow::anyhow!("compiling {name}: {e:?}")
         })?);
-        self.stats.compiles.fetch_add(1, Ordering::Relaxed);
-        self.exes.lock().unwrap().insert(name.to_string(), exe.clone());
+        self.stats.compiles.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
+        self.exes.lock().insert(name.to_string(), exe.clone());
         Ok(exe)
     }
 
@@ -119,10 +121,10 @@ impl Runtime {
         let lit = result[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow::anyhow!("fetching {name} result: {e:?}"))?;
-        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        self.stats.executions.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
         self.stats
             .exec_nanos
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed); // relaxed-ok: stat counter
         lit.to_tuple()
             .map_err(|e| anyhow::anyhow!("untupling {name}: {e:?}"))
     }
@@ -143,10 +145,10 @@ impl Runtime {
         let lit = result[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow::anyhow!("fetching {name} result: {e:?}"))?;
-        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        self.stats.executions.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
         self.stats
             .exec_nanos
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed); // relaxed-ok: stat counter
         lit.to_tuple()
             .map_err(|e| anyhow::anyhow!("untupling {name}: {e:?}"))
     }
@@ -194,7 +196,7 @@ impl Runtime {
 
     /// Number of compiled (cached) executables.
     pub fn compiled_count(&self) -> usize {
-        self.exes.lock().unwrap().len()
+        self.exes.lock().len()
     }
 
     /// Pre-compile a set of units (warmup; avoids first-request jitter).

@@ -6,11 +6,12 @@
 //! resolution incurred (0 for DynaExq and static PTQ; fetch-wait time for
 //! offloading systems when the expert is not resident).
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::config::{DeviceConfig, ModelPreset, QosClass, ServingConfig};
 use crate::coordinator::{Coordinator, DeviceGroup, TransitionTotals};
 use crate::model::{Precision, PrecisionLadder};
+use crate::util::lockorder::{LockRank, OrderedMutex};
 use crate::workload::Trace;
 
 /// Per-layer routing events buffered between iteration boundaries.
@@ -308,7 +309,7 @@ impl ResidencyBackend for DynaExqBackend {
             .pipeline
             .stats
             .migrated_bytes
-            .load(std::sync::atomic::Ordering::Relaxed)
+            .load(std::sync::atomic::Ordering::Relaxed) // relaxed-ok: stat counter
     }
 
     fn hi_fraction(&self) -> f64 {
@@ -602,7 +603,7 @@ impl ResidencyBackend for DynaExqShardedBackend {
 /// replay side lives in [`crate::workload::traces`]).
 pub struct RecordingBackend {
     inner: Box<dyn ResidencyBackend>,
-    trace: Arc<Mutex<Trace>>,
+    trace: Arc<OrderedMutex<Trace>>,
     /// Routing events of the current iteration, appended to the shared
     /// trace under one lock at the next tick. Unlike [`RoutingBuffer`]
     /// this keeps the exact per-call event sequence (duplicates and empty
@@ -621,8 +622,11 @@ impl RecordingBackend {
         inner: Box<dyn ResidencyBackend>,
         n_layers: usize,
         n_experts: usize,
-    ) -> (Self, Arc<Mutex<Trace>>) {
-        let trace = Arc::new(Mutex::new(Trace::new(n_layers, n_experts)));
+    ) -> (Self, Arc<OrderedMutex<Trace>>) {
+        let trace = Arc::new(OrderedMutex::new(
+            LockRank::Trace,
+            Trace::new(n_layers, n_experts),
+        ));
         (
             Self {
                 inner,
@@ -639,7 +643,7 @@ impl RecordingBackend {
     /// boundary marker, and recycle the event buffers.
     fn flush_pending(&mut self, add_tick: bool) {
         {
-            let mut t = self.trace.lock().unwrap();
+            let mut t = self.trace.lock();
             for (layer, experts) in &self.pending {
                 t.record(*layer, experts);
             }
@@ -1047,7 +1051,7 @@ mod tests {
         assert_eq!(b.tick(0.5), 0.0);
         b.record_routing(2, &[7]);
         b.tick(1.0);
-        let t = trace.lock().unwrap();
+        let t = trace.lock();
         assert_eq!(t.selections(), 4);
         assert_eq!(
             t.events

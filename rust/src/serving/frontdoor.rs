@@ -35,10 +35,10 @@
 use std::collections::HashMap;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
-use std::sync::{Mutex, RwLock};
 
 use crate::config::frontdoor::{FrontDoorConfig, Lane, LimitAction};
 use crate::config::qos::{QosClass, QosConfig};
+use crate::util::lockorder::{LockRank, OrderedMutex, OrderedRwLock};
 use crate::workload::Request;
 
 use super::engine::{ActiveRequest, Engine};
@@ -112,58 +112,58 @@ pub struct FrontDoorStats {
 impl FrontDoorStats {
     /// Requests admitted to the queue per lane ([`Lane::index`] order).
     pub fn lane_admitted(&self) -> Vec<u64> {
-        self.lanes.iter().map(|l| l.admitted.load(Relaxed)).collect()
+        self.lanes.iter().map(|l| l.admitted.load(Relaxed)).collect() // relaxed-ok: stat counter
     }
 
     /// Requests rejected per lane ([`Lane::index`] order).
     pub fn lane_rejected(&self) -> Vec<u64> {
-        self.lanes.iter().map(|l| l.rejected.load(Relaxed)).collect()
+        self.lanes.iter().map(|l| l.rejected.load(Relaxed)).collect() // relaxed-ok: stat counter
     }
 
     /// Served requests whose TTFT blew the lane deadline, per lane.
     pub fn lane_deadline_miss(&self) -> Vec<u64> {
-        self.lanes.iter().map(|l| l.deadline_miss.load(Relaxed)).collect()
+        self.lanes.iter().map(|l| l.deadline_miss.load(Relaxed)).collect() // relaxed-ok: stat counter
     }
 
     /// Rejection totals by kind:
     /// `(queue_full, tenant_over_limit, deadline_infeasible)`.
     pub fn rejection_kinds(&self) -> (u64, u64, u64) {
         (
-            self.queue_full.load(Relaxed),
-            self.tenant_over_limit.load(Relaxed),
-            self.deadline_infeasible.load(Relaxed),
+            self.queue_full.load(Relaxed), // relaxed-ok: stat counter
+            self.tenant_over_limit.load(Relaxed), // relaxed-ok: stat counter
+            self.deadline_infeasible.load(Relaxed), // relaxed-ok: stat counter
         )
     }
 
     /// Soft-limit overages observed (warn/demote/reject alike).
     pub fn soft_overages(&self) -> u64 {
-        self.soft_overages.load(Relaxed)
+        self.soft_overages.load(Relaxed) // relaxed-ok: stat counter
     }
 
     /// Admissions demoted to the batch lane by [`LimitAction::Demote`].
     pub fn demoted(&self) -> u64 {
-        self.demoted.load(Relaxed)
+        self.demoted.load(Relaxed) // relaxed-ok: stat counter
     }
 
     /// Mid-stream failover re-admissions ([`FrontDoor::readmit`]) — these
     /// are *not* counted in the per-lane `admitted` totals (the request
     /// was admitted exactly once, at first submission).
     pub fn readmitted(&self) -> u64 {
-        self.readmitted.load(Relaxed)
+        self.readmitted.load(Relaxed) // relaxed-ok: stat counter
     }
 
     /// Submissions turned away as [`Rejected::BudgetExhausted`] — kept
     /// out of [`FrontDoorStats::rejection_kinds`] so the classic
     /// three-kind totals stay byte-stable without an armed QoS config.
     pub fn budget_exhausted(&self) -> u64 {
-        self.budget_exhausted.load(Relaxed)
+        self.budget_exhausted.load(Relaxed) // relaxed-ok: stat counter
     }
 
     /// Admissions that demoted their tenant to best-effort pricing
     /// ([`LimitAction::Downgrade`] — soft-limit or budget-exhaustion
     /// flavour alike).
     pub fn qos_downgraded(&self) -> u64 {
-        self.qos_downgraded.load(Relaxed)
+        self.qos_downgraded.load(Relaxed) // relaxed-ok: stat counter
     }
 }
 
@@ -256,17 +256,17 @@ impl QosLedger {
 /// path.
 pub struct FrontDoor {
     cfg: FrontDoorConfig,
-    queue: Mutex<Vec<QueuedRequest>>,
-    tenants: RwLock<TenantTable>,
+    queue: OrderedMutex<Vec<QueuedRequest>>,
+    tenants: OrderedRwLock<TenantTable>,
     stats: FrontDoorStats,
     /// Per-lane TTFT samples absorbed from drained schedulers
     /// ([`Lane::index`] order) — the bench per-lane p50/p95 source.
     /// Only the drain loop writes it; a plain mutex suffices.
-    lane_ttft: Mutex<[Vec<f64>; 3]>,
+    lane_ttft: OrderedMutex<[Vec<f64>; 3]>,
     /// Precision-budget ledger — `Some` iff the config carries a
     /// non-degenerate [`QosConfig`]; structurally absent otherwise, so
     /// the classic admission path is byte-identical (DESIGN.md §15).
-    qos: Option<Mutex<QosLedger>>,
+    qos: Option<OrderedMutex<QosLedger>>,
 }
 
 impl FrontDoor {
@@ -277,13 +277,21 @@ impl FrontDoor {
             .qos
             .as_ref()
             .filter(|q| !q.is_degenerate())
-            .map(|q| Mutex::new(QosLedger::new(q.clone())));
+            .map(|q| {
+                OrderedMutex::new(LockRank::QosLedger, QosLedger::new(q.clone()))
+            });
         Ok(Self {
             cfg,
-            queue: Mutex::new(Vec::new()),
-            tenants: RwLock::new(TenantTable::default()),
+            queue: OrderedMutex::new(LockRank::FrontDoorQueue, Vec::new()),
+            tenants: OrderedRwLock::new(
+                LockRank::FrontDoorTenants,
+                TenantTable::default(),
+            ),
             stats: FrontDoorStats::default(),
-            lane_ttft: Mutex::new([Vec::new(), Vec::new(), Vec::new()]),
+            lane_ttft: OrderedMutex::new(
+                LockRank::LaneTtft,
+                [Vec::new(), Vec::new(), Vec::new()],
+            ),
             qos,
         })
     }
@@ -294,7 +302,7 @@ impl FrontDoor {
 
     /// Current admission-queue depth.
     pub fn depth(&self) -> usize {
-        self.queue.lock().unwrap().len()
+        self.queue.lock().len()
     }
 
     pub fn stats(&self) -> &FrontDoorStats {
@@ -303,7 +311,7 @@ impl FrontDoor {
 
     /// TTFT samples served on a lane so far (drained rounds only).
     pub fn lane_ttft(&self, lane: Lane) -> Vec<f64> {
-        self.lane_ttft.lock().unwrap()[lane.index()].clone()
+        self.lane_ttft.lock()[lane.index()].clone()
     }
 
     /// Cumulative engine admissions per tenant, in first-appearance
@@ -311,10 +319,9 @@ impl FrontDoor {
     pub fn tenant_served(&self) -> Vec<(String, u64)> {
         self.tenants
             .read()
-            .unwrap()
             .list
             .iter()
-            .map(|t| (t.name.clone(), t.served.load(Relaxed)))
+            .map(|t| (t.name.clone(), t.served.load(Relaxed))) // relaxed-ok: stat counter
             .collect()
     }
 
@@ -323,10 +330,10 @@ impl FrontDoor {
     /// before, with a re-check under it (two threads racing the same new
     /// name must agree on one index).
     fn tenant_id(&self, name: &str) -> usize {
-        if let Some(&i) = self.tenants.read().unwrap().idx.get(name) {
+        if let Some(&i) = self.tenants.read().idx.get(name) {
             return i;
         }
-        let mut tab = self.tenants.write().unwrap();
+        let mut tab = self.tenants.write();
         if let Some(&i) = tab.idx.get(name) {
             return i;
         }
@@ -347,15 +354,15 @@ impl FrontDoor {
         lane: Lane,
         why: Rejected,
     ) -> Rejected {
-        tenant.rejected.fetch_add(1, Relaxed);
-        self.stats.lanes[lane.index()].rejected.fetch_add(1, Relaxed);
+        tenant.rejected.fetch_add(1, Relaxed); // relaxed-ok: stat counter
+        self.stats.lanes[lane.index()].rejected.fetch_add(1, Relaxed); // relaxed-ok: stat counter
         let kind = match why {
             Rejected::QueueFull => &self.stats.queue_full,
             Rejected::TenantOverLimit => &self.stats.tenant_over_limit,
             Rejected::DeadlineInfeasible => &self.stats.deadline_infeasible,
             Rejected::BudgetExhausted => &self.stats.budget_exhausted,
         };
-        kind.fetch_add(1, Relaxed);
+        kind.fetch_add(1, Relaxed); // relaxed-ok: stat counter
         why
     }
 
@@ -369,7 +376,7 @@ impl FrontDoor {
     pub fn qos_charged(&self) -> Vec<u64> {
         self.qos
             .as_ref()
-            .map(|q| q.lock().unwrap().charged.to_vec())
+            .map(|q| q.lock().charged.to_vec())
             .unwrap_or_default()
     }
 
@@ -378,7 +385,7 @@ impl FrontDoor {
     pub fn qos_refunded(&self) -> Vec<u64> {
         self.qos
             .as_ref()
-            .map(|q| q.lock().unwrap().refunded.to_vec())
+            .map(|q| q.lock().refunded.to_vec())
             .unwrap_or_default()
     }
 
@@ -387,7 +394,7 @@ impl FrontDoor {
         self.qos
             .as_ref()
             .map(|q| {
-                let q = q.lock().unwrap();
+                let q = q.lock();
                 QosClass::ALL
                     .iter()
                     .map(|c| {
@@ -403,7 +410,7 @@ impl FrontDoor {
     pub fn set_tenant_class(&self, tenant: &str, class: QosClass) {
         if let Some(q) = &self.qos {
             let t = self.tenant_id(tenant);
-            q.lock().unwrap().class_of.insert(t, class);
+            q.lock().class_of.insert(t, class);
         }
     }
 
@@ -411,7 +418,7 @@ impl FrontDoor {
     pub fn tenant_class(&self, tenant: &str) -> Option<QosClass> {
         let q = self.qos.as_ref()?;
         let t = self.tenant_id(tenant);
-        Some(q.lock().unwrap().class(t, tenant))
+        Some(q.lock().class(t, tenant))
     }
 
     /// Drain-side settlement: refund the modeled hi-precision occupancy
@@ -421,7 +428,7 @@ impl FrontDoor {
     /// exactly balanced across mid-stream failover re-admissions.
     pub fn settle(&self, ids: &[u64]) {
         if let Some(q) = &self.qos {
-            let mut q = q.lock().unwrap();
+            let mut q = q.lock();
             for id in ids {
                 if let Some((class, cost)) = q.charges.remove(id) {
                     q.refunded[class] += cost;
@@ -450,10 +457,10 @@ impl FrontDoor {
         now_s: f64,
     ) -> Result<(), Rejected> {
         let t = self.tenant_id(tenant);
-        let tenants = self.tenants.read().unwrap();
+        let tenants = self.tenants.read();
         let ten = &tenants.list[t];
-        let mut queue = self.queue.lock().unwrap();
-        let occupancy = ten.queued.load(Relaxed) as usize;
+        let mut queue = self.queue.lock();
+        let occupancy = ten.queued.load(Relaxed) as usize; // relaxed-ok: writes serialized by queue lock
         let limits = self.cfg.tenant_limits;
         if occupancy >= limits.hard_limit {
             return Err(self.reject_with(ten, lane, Rejected::TenantOverLimit));
@@ -509,7 +516,7 @@ impl FrontDoor {
         // QoS budget — deliberately the LAST check: a submission rejected
         // for any other reason is never charged, so conservation reduces
         // to admitted-versus-settled (DESIGN.md §15).
-        let mut ledger = self.qos.as_ref().map(|q| q.lock().unwrap());
+        let mut ledger = self.qos.as_ref().map(|q| q.lock());
         let mut charge = None;
         let mut budget_downgrade = false;
         if let Some(ql) = ledger.as_deref_mut() {
@@ -543,10 +550,10 @@ impl FrontDoor {
             charge = Some((class, cost));
         }
         if soft_overage {
-            self.stats.soft_overages.fetch_add(1, Relaxed);
+            self.stats.soft_overages.fetch_add(1, Relaxed); // relaxed-ok: stat counter
         }
         if demoted {
-            self.stats.demoted.fetch_add(1, Relaxed);
+            self.stats.demoted.fetch_add(1, Relaxed); // relaxed-ok: stat counter
         }
         if let (Some(ql), Some((class, cost))) = (ledger.as_deref_mut(), charge)
         {
@@ -554,13 +561,13 @@ impl FrontDoor {
                 // the demotion is persistent: future submissions price
                 // at best-effort until a phase pin restores the class
                 ql.class_of.insert(t, QosClass::BestEffort);
-                self.stats.qos_downgraded.fetch_add(1, Relaxed);
+                self.stats.qos_downgraded.fetch_add(1, Relaxed); // relaxed-ok: stat counter
             }
             ql.charge(req.id, class, cost);
         }
         drop(ledger);
-        ten.queued.fetch_add(1, Relaxed);
-        self.stats.lanes[lane.index()].admitted.fetch_add(1, Relaxed);
+        ten.queued.fetch_add(1, Relaxed); // relaxed-ok: updated under queue lock
+        self.stats.lanes[lane.index()].admitted.fetch_add(1, Relaxed); // relaxed-ok: stat counter
         queue.push(QueuedRequest { req, tenant: t, lane, deadline_s });
         Ok(())
     }
@@ -576,12 +583,12 @@ impl FrontDoor {
     /// across failover depends on this path never dropping a request.
     pub fn readmit(&self, req: Request, tenant: &str, lane: Lane) {
         let t = self.tenant_id(tenant);
-        let tenants = self.tenants.read().unwrap();
+        let tenants = self.tenants.read();
         let ten = &tenants.list[t];
-        let mut queue = self.queue.lock().unwrap();
+        let mut queue = self.queue.lock();
         let deadline_s = self.cfg.deadline(lane, req.arrival_s);
-        ten.queued.fetch_add(1, Relaxed);
-        self.stats.readmitted.fetch_add(1, Relaxed);
+        ten.queued.fetch_add(1, Relaxed); // relaxed-ok: updated under queue lock
+        self.stats.readmitted.fetch_add(1, Relaxed); // relaxed-ok: stat counter
         queue.push(QueuedRequest { req, tenant: t, lane, deadline_s });
     }
 
@@ -604,13 +611,13 @@ impl FrontDoor {
     /// the whole batch straight back is byte-identical to
     /// `take_scheduled`.
     pub fn take_queued(&self) -> (Vec<QueuedRequest>, Vec<u64>) {
-        let queued = std::mem::take(&mut *self.queue.lock().unwrap());
-        let tenants = self.tenants.read().unwrap();
+        let queued = std::mem::take(&mut *self.queue.lock());
+        let tenants = self.tenants.read();
         for q in &queued {
-            tenants.list[q.tenant].queued.fetch_sub(1, Relaxed);
+            tenants.list[q.tenant].queued.fetch_sub(1, Relaxed); // relaxed-ok: balanced under queue lock's drain
         }
         let served: Vec<u64> =
-            tenants.list.iter().map(|t| t.served.load(Relaxed)).collect();
+            tenants.list.iter().map(|t| t.served.load(Relaxed)).collect(); // relaxed-ok: stat counter
         (queued, served)
     }
 
@@ -633,20 +640,20 @@ impl FrontDoor {
     /// door's cumulative accounting (per-tenant service, per-lane TTFT
     /// samples, deadline misses).
     pub fn absorb(&self, sched: &SloScheduler) {
-        let tenants = self.tenants.read().unwrap();
+        let tenants = self.tenants.read();
         for (t, &n) in sched.served_by_tenant.iter().enumerate() {
             if t < tenants.list.len() {
-                tenants.list[t].served.fetch_add(n, Relaxed);
+                tenants.list[t].served.fetch_add(n, Relaxed); // relaxed-ok: stat counter
             }
         }
         drop(tenants);
-        let mut ttft = self.lane_ttft.lock().unwrap();
+        let mut ttft = self.lane_ttft.lock();
         for lane in Lane::ALL {
             let i = lane.index();
             ttft[i].extend_from_slice(&sched.lane_ttft[i]);
             self.stats.lanes[i]
                 .deadline_miss
-                .fetch_add(sched.deadline_miss[i], Relaxed);
+                .fetch_add(sched.deadline_miss[i], Relaxed); // relaxed-ok: stat counter
         }
     }
 }

@@ -458,7 +458,7 @@ impl MetricsSnapshot {
             m.get(key).cloned().ok_or_else(|| anyhow!("missing key {key:?}"))
         };
         fn num<T: std::str::FromStr>(
-            m: &std::collections::HashMap<String, String>,
+            m: &std::collections::BTreeMap<String, String>,
             key: &str,
         ) -> Result<T> {
             kv::get_parse(m, key)

@@ -1,0 +1,509 @@
+//! Ranked lock-order enforcement (DESIGN.md §16).
+//!
+//! Every blocking lock in this crate is an [`OrderedMutex`] or
+//! [`OrderedRwLock`] carrying a [`LockRank`]. The rank table below is the
+//! *canonical, machine-checked* form of the DESIGN.md §13 lock table: a
+//! thread may only acquire a lock whose rank is **strictly greater** than
+//! every rank it already holds. In audited builds (`debug_assertions` or
+//! the `lock-audit` feature) any out-of-order or re-entrant acquisition
+//! panics at the acquisition site with the full held-rank stack, turning
+//! what used to be a prose contract — and a latent deadlock — into an
+//! immediate, attributable failure. In unaudited release builds the
+//! wrappers compile down to the bare `std::sync` primitives plus one
+//! branch on a `const`.
+//!
+//! The `dynaexq-lint` static-analysis binary (tools/lint) closes the
+//! loop: constructing a raw `std::sync::Mutex`/`RwLock` anywhere outside
+//! this module fails the `static-analysis` CI job, so new shared state
+//! cannot silently opt out of the rank discipline.
+//!
+//! ## Poison policy
+//!
+//! All acquisitions recover from poisoning via
+//! [`PoisonError::into_inner`] instead of panicking. Rationale: every
+//! critical section in this crate either (a) guards monotone counters and
+//! append-only sample buffers, for which a panicked writer leaves valid
+//! (at worst slightly stale) state, or (b) performs multi-step updates
+//! whose intermediate states are themselves valid values of the guarded
+//! type (queue pushes, map inserts, free-list splices). Propagating the
+//! poison instead would let one panicked producer thread permanently
+//! wedge the front door's admission queue — the exact availability
+//! failure §12's non-blocking contract forbids. Recoveries are counted
+//! ([`poison_recoveries`]) so a test or operator can still observe that a
+//! panic happened under a lock.
+
+use std::cell::RefCell;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{
+    Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard,
+    RwLockWriteGuard,
+};
+
+/// Whether acquisitions are rank-checked in this build. True under
+/// `debug_assertions` or the `lock-audit` cargo feature; release builds
+/// without the feature skip the thread-local bookkeeping entirely.
+pub const AUDIT: bool = cfg!(any(debug_assertions, feature = "lock-audit"));
+
+/// The canonical lock ranks (DESIGN.md §16), in required acquisition
+/// order: a thread holding rank `r` may only acquire ranks `> r`.
+///
+/// The ordering follows the real nesting chains of the serving stack:
+///
+/// * admission: `FrontDoorTenants` (read) → `FrontDoorQueue` →
+///   `QosLedger`; the drain side adds `LaneTtft` after the tenant read
+///   guard is released;
+/// * policy tick: `UpdateClock` → `Hotness` → `QosScores` → `Drift`,
+///   then — still under the hotness/score guards — the transition
+///   pipeline: `PipelineInner` → `HandleEntry` / `Pool`;
+/// * `Trace` and `RuntimeExes` are leaf locks never held across another
+///   acquisition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum LockRank {
+    /// `serving::frontdoor` tenant table (`OrderedRwLock`): read on every
+    /// submission, written once per first-appearing tenant name.
+    FrontDoorTenants = 0,
+    /// `serving::frontdoor` bounded admission queue — the single
+    /// serialization point of the whole check chain (DESIGN.md §12).
+    FrontDoorQueue = 1,
+    /// `serving::frontdoor` per-class precision-budget ledger
+    /// (DESIGN.md §15), charged under the queue lock.
+    QosLedger = 2,
+    /// `serving::frontdoor` per-lane TTFT sample buffers (drain side).
+    LaneTtft = 3,
+    /// Reserved for `serving::fleet` health/replica state (DESIGN.md
+    /// §14). The fleet's checker and replica tables are exclusively
+    /// owned (`&mut`) today; this rank pins their position in the order
+    /// for when cross-thread fleet state appears (the GEMQ-style global
+    /// budgeting plane on the roadmap).
+    FleetHealth = 4,
+    /// `coordinator` update-interval gate (`next_update_s`).
+    UpdateClock = 5,
+    /// `coordinator` hotness estimator — the serial fold/plan state the
+    /// sharded counters merge into at each boundary (DESIGN.md §13).
+    Hotness = 6,
+    /// `coordinator` class-weighted score plane (DESIGN.md §15), folded
+    /// under the hotness guard at the same boundary.
+    QosScores = 7,
+    /// `coordinator` drift detector (DESIGN.md §10), consulted under the
+    /// hotness + score guards.
+    Drift = 8,
+    /// The transition pipeline's migration stream / in-flight list /
+    /// eviction queue (`Mutex<PipelineInner>`, DESIGN.md §13).
+    PipelineInner = 9,
+    /// Per-expert residency entry state (`HandleTable`), taken under the
+    /// pipeline lock during admission and publication.
+    HandleEntry = 10,
+    /// Per-rung block-pool free lists, taken under the pipeline lock on
+    /// the eviction-drain and allocation paths.
+    Pool = 11,
+    /// The recording backend's shared `DXTR` trace (leaf).
+    Trace = 12,
+    /// The PJRT runtime's lazy executable cache (leaf; `numeric` builds).
+    RuntimeExes = 13,
+}
+
+thread_local! {
+    /// Ranks currently held by this thread, in acquisition order.
+    static HELD: RefCell<Vec<LockRank>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Poisoned acquisitions recovered so far, process-wide.
+static POISON_RECOVERIES: AtomicU64 = AtomicU64::new(0);
+
+/// How many poisoned lock acquisitions the poison policy has recovered
+/// (observability: a non-zero value means some thread panicked while
+/// holding an ordered lock and the state was adopted as-is).
+pub fn poison_recoveries() -> u64 {
+    POISON_RECOVERIES.load(Ordering::Relaxed) // relaxed-ok: monotone diagnostic counter
+}
+
+/// The calling thread's held-rank stack (diagnostics/tests). Empty in
+/// unaudited builds.
+pub fn held_ranks() -> Vec<LockRank> {
+    if !AUDIT {
+        return Vec::new();
+    }
+    HELD.with(|h| h.borrow().clone())
+}
+
+/// Rank-check an acquisition and push it onto the thread's stack.
+/// Panics (audited builds) on any acquisition that is not strictly
+/// ascending — including re-entrant acquisition of the same rank, which
+/// would self-deadlock on a non-reentrant `std` lock.
+fn acquire(rank: LockRank) {
+    if !AUDIT {
+        return;
+    }
+    HELD.with(|h| {
+        let mut held = h.borrow_mut();
+        if let Some(&worst) = held.iter().find(|&&r| r >= rank) {
+            if worst == rank {
+                panic!(
+                    "lock-order violation: re-entrant acquisition of \
+                     {rank:?} (held: {:?})",
+                    &**held
+                );
+            }
+            panic!(
+                "lock-order violation: acquiring {rank:?} while holding \
+                 {worst:?} (held: {:?})",
+                &**held
+            );
+        }
+        held.push(rank);
+    });
+}
+
+/// Pop the most recent occurrence of `rank` from the thread's stack.
+/// Guards may drop in any order, so this removes by value, not LIFO.
+/// Never panics — it runs from `Drop`, possibly during unwinding.
+fn release(rank: LockRank) {
+    if !AUDIT {
+        return;
+    }
+    HELD.with(|h| {
+        let mut held = h.borrow_mut();
+        if let Some(pos) = held.iter().rposition(|&r| r == rank) {
+            held.remove(pos);
+        }
+    });
+}
+
+/// A `std::sync::Mutex` that enforces the [`LockRank`] acquisition order
+/// and the crate poison policy (recover-and-continue; see module docs).
+pub struct OrderedMutex<T> {
+    rank: LockRank,
+    inner: Mutex<T>,
+}
+
+impl<T> OrderedMutex<T> {
+    pub fn new(rank: LockRank, value: T) -> Self {
+        Self { rank, inner: Mutex::new(value) }
+    }
+
+    /// Acquire the lock. Audited builds panic on a rank violation
+    /// *before* blocking, so an inversion is reported even when it
+    /// happens not to deadlock in this interleaving.
+    pub fn lock(&self) -> OrderedMutexGuard<'_, T> {
+        acquire(self.rank);
+        let inner = self.inner.lock().unwrap_or_else(|e| {
+            // relaxed-ok: monotone diagnostic counter
+            POISON_RECOVERIES.fetch_add(1, Ordering::Relaxed); // relaxed-ok: monotone diagnostic counter
+            e.into_inner()
+        });
+        OrderedMutexGuard { inner, rank: self.rank }
+    }
+
+    pub fn rank(&self) -> LockRank {
+        self.rank
+    }
+
+    /// Consume the lock, returning the inner value (poison recovered).
+    pub fn into_inner(self) -> T {
+        self.inner.into_inner().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+pub struct OrderedMutexGuard<'a, T> {
+    inner: MutexGuard<'a, T>,
+    rank: LockRank,
+}
+
+impl<T> Deref for OrderedMutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T> DerefMut for OrderedMutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+}
+
+impl<T> Drop for OrderedMutexGuard<'_, T> {
+    fn drop(&mut self) {
+        release(self.rank);
+    }
+}
+
+/// A `std::sync::RwLock` under the same rank discipline. Read and write
+/// acquisitions are checked identically: a read-under-read re-entry on
+/// the same rank panics too, since a writer queued between the two reads
+/// deadlocks exactly like a mutex re-entry.
+pub struct OrderedRwLock<T> {
+    rank: LockRank,
+    inner: RwLock<T>,
+}
+
+impl<T> OrderedRwLock<T> {
+    pub fn new(rank: LockRank, value: T) -> Self {
+        Self { rank, inner: RwLock::new(value) }
+    }
+
+    pub fn read(&self) -> OrderedReadGuard<'_, T> {
+        acquire(self.rank);
+        let inner = self.inner.read().unwrap_or_else(|e| {
+            // relaxed-ok: monotone diagnostic counter
+            POISON_RECOVERIES.fetch_add(1, Ordering::Relaxed); // relaxed-ok: monotone diagnostic counter
+            e.into_inner()
+        });
+        OrderedReadGuard { inner, rank: self.rank }
+    }
+
+    pub fn write(&self) -> OrderedWriteGuard<'_, T> {
+        acquire(self.rank);
+        let inner = self.inner.write().unwrap_or_else(|e| {
+            // relaxed-ok: monotone diagnostic counter
+            POISON_RECOVERIES.fetch_add(1, Ordering::Relaxed); // relaxed-ok: monotone diagnostic counter
+            e.into_inner()
+        });
+        OrderedWriteGuard { inner, rank: self.rank }
+    }
+
+    pub fn rank(&self) -> LockRank {
+        self.rank
+    }
+}
+
+pub struct OrderedReadGuard<'a, T> {
+    inner: RwLockReadGuard<'a, T>,
+    rank: LockRank,
+}
+
+impl<T> Deref for OrderedReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T> Drop for OrderedReadGuard<'_, T> {
+    fn drop(&mut self) {
+        release(self.rank);
+    }
+}
+
+pub struct OrderedWriteGuard<'a, T> {
+    inner: RwLockWriteGuard<'a, T>,
+    rank: LockRank,
+}
+
+impl<T> Deref for OrderedWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T> DerefMut for OrderedWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+}
+
+impl<T> Drop for OrderedWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        release(self.rank);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    // The should-panic cases only fire in audited builds; `cargo test
+    // --release` without `lock-audit` compiles the checks out, so they
+    // are ignored there rather than failing.
+    macro_rules! audited {
+        () => {
+            if !AUDIT {
+                return;
+            }
+        };
+    }
+
+    #[test]
+    fn correct_order_succeeds_and_derefs() {
+        let a = OrderedMutex::new(LockRank::FrontDoorQueue, vec![1u32]);
+        let b = OrderedMutex::new(LockRank::PipelineInner, 7u32);
+        {
+            let mut ga = a.lock();
+            ga.push(2);
+            let mut gb = b.lock();
+            *gb += 1;
+            assert_eq!(*gb, 8);
+            assert_eq!(ga.len(), 2);
+            if AUDIT {
+                assert_eq!(
+                    held_ranks(),
+                    vec![LockRank::FrontDoorQueue, LockRank::PipelineInner]
+                );
+            }
+        }
+        assert!(held_ranks().is_empty(), "stack must unwind on drop");
+        // sequential re-acquisition after release is not re-entrancy
+        assert_eq!(a.lock().len(), 2);
+        assert_eq!(a.rank(), LockRank::FrontDoorQueue);
+        assert_eq!(a.into_inner(), vec![1, 2]);
+    }
+
+    #[test]
+    fn inversion_panics_under_audit() {
+        audited!();
+        let low = OrderedMutex::new(LockRank::Hotness, ());
+        let high = OrderedMutex::new(LockRank::PipelineInner, ());
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            let _g_high = high.lock();
+            let _g_low = low.lock(); // descending: must panic
+        }))
+        .expect_err("inverted acquisition must panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(
+            msg.contains("lock-order violation")
+                && msg.contains("Hotness")
+                && msg.contains("PipelineInner"),
+            "unexpected panic message: {msg}"
+        );
+        assert!(held_ranks().is_empty(), "unwind must clear the stack");
+    }
+
+    #[test]
+    fn reentrancy_panics_under_audit() {
+        audited!();
+        // two *distinct* locks of the same rank model the real hazard:
+        // e.g. two per-expert HandleEntry locks held at once.
+        let a = OrderedMutex::new(LockRank::HandleEntry, ());
+        let b = OrderedMutex::new(LockRank::HandleEntry, ());
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            let _ga = a.lock();
+            let _gb = b.lock();
+        }))
+        .expect_err("same-rank nesting must panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("re-entrant"), "unexpected message: {msg}");
+        assert!(held_ranks().is_empty());
+    }
+
+    #[test]
+    fn rwlock_read_read_reentry_panics_under_audit() {
+        audited!();
+        let t = OrderedRwLock::new(LockRank::FrontDoorTenants, 1u32);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            let _r1 = t.read();
+            let _r2 = t.read(); // a queued writer between these deadlocks
+        }))
+        .expect_err("read-under-read must panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("re-entrant"), "unexpected message: {msg}");
+    }
+
+    #[test]
+    fn rwlock_ascending_read_then_lock_ok() {
+        let t = OrderedRwLock::new(LockRank::FrontDoorTenants, 5u32);
+        let q = OrderedMutex::new(LockRank::FrontDoorQueue, 0u32);
+        {
+            let r = t.read();
+            let mut g = q.lock();
+            *g += *r;
+        }
+        {
+            let mut w = t.write();
+            *w += 1;
+        }
+        assert_eq!(*t.read(), 6);
+        assert_eq!(*q.lock(), 5);
+        assert_eq!(t.rank(), LockRank::FrontDoorTenants);
+        assert!(held_ranks().is_empty());
+    }
+
+    #[test]
+    fn rank_stack_unwinds_when_a_guard_holder_panics() {
+        audited!();
+        let m = OrderedMutex::new(LockRank::Pool, 0u32);
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let _g = m.lock();
+            panic!("holder dies");
+        }));
+        assert!(held_ranks().is_empty(), "guard drop must pop its rank");
+        // the poison policy adopts the state; a lower rank is acquirable
+        // again because the stack really unwound
+        let low = OrderedMutex::new(LockRank::UpdateClock, ());
+        let _g = low.lock();
+        assert_eq!(*m.lock(), 0);
+    }
+
+    #[test]
+    fn poison_is_recovered_and_counted() {
+        let m = std::sync::Arc::new(OrderedMutex::new(LockRank::Trace, 3u32));
+        let before = poison_recoveries();
+        let m2 = m.clone();
+        let joined = std::thread::spawn(move || {
+            let mut g = m2.lock();
+            *g = 4;
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(joined.is_err());
+        // recover-and-continue: the write that completed before the
+        // panic is adopted, nothing wedges
+        assert_eq!(*m.lock(), 4);
+        assert!(poison_recoveries() > before, "recovery must be counted");
+    }
+
+    #[test]
+    fn out_of_order_drop_releases_correct_ranks() {
+        let a = OrderedMutex::new(LockRank::UpdateClock, ());
+        let b = OrderedMutex::new(LockRank::Hotness, ());
+        let ga = a.lock();
+        let gb = b.lock();
+        drop(ga); // drop in acquisition order, not reverse
+        if AUDIT {
+            assert_eq!(held_ranks(), vec![LockRank::Hotness]);
+        }
+        // Drift > Hotness is still acquirable
+        let c = OrderedMutex::new(LockRank::Drift, ());
+        let _gc = c.lock();
+        drop(gb);
+        if AUDIT {
+            assert_eq!(held_ranks(), vec![LockRank::Drift]);
+        }
+    }
+
+    #[test]
+    fn rank_table_is_strictly_ordered() {
+        use LockRank::*;
+        let table = [
+            FrontDoorTenants,
+            FrontDoorQueue,
+            QosLedger,
+            LaneTtft,
+            FleetHealth,
+            UpdateClock,
+            Hotness,
+            QosScores,
+            Drift,
+            PipelineInner,
+            HandleEntry,
+            Pool,
+            Trace,
+            RuntimeExes,
+        ];
+        for w in table.windows(2) {
+            assert!(w[0] < w[1], "{:?} must rank below {:?}", w[0], w[1]);
+        }
+    }
+}

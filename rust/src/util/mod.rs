@@ -1,5 +1,7 @@
-//! Small shared utilities: deterministic RNG, bucket selection, math.
+//! Small shared utilities: deterministic RNG, bucket selection, math,
+//! ranked lock wrappers.
 
+pub mod lockorder;
 pub mod rng;
 
 pub use rng::XorShiftRng;

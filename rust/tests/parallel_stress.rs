@@ -17,6 +17,12 @@
 //!    `drift_detected` flag cannot say which shard drifted;
 //!    `DeviceGroup::device_drift_stats` must attribute a one-shard swap
 //!    to that device alone, without the quiet shards masking it.
+//! 5. **Rank discipline under contention** — with the lock-order audit
+//!    armed (debug builds, or `--features lock-audit` in release: CI's
+//!    `parallel-stress` job), racing the lock-heaviest paths — group
+//!    ticks, front-door admission, fleet failover — must never trip a
+//!    rank-violation panic, and every thread must unwind to an empty
+//!    held-rank stack.
 //!
 //! CI's `parallel-stress` job elevates the case counts through
 //! `PARALLEL_STRESS_ITERS`; the default keeps the suite fast enough for
@@ -306,7 +312,7 @@ fn prop_concurrent_submit_holds_bounds_and_conservation() {
                             match fd.submit(req, &name, lane, 0.0) {
                                 Ok(()) => mine.push(tenant),
                                 Err(_) => {
-                                    rejected.fetch_add(1, Ordering::Relaxed);
+                                    rejected.fetch_add(1, Ordering::Relaxed); // relaxed-ok: test counter
                                 }
                             }
                         }
@@ -321,7 +327,7 @@ fn prop_concurrent_submit_holds_bounds_and_conservation() {
         });
         let admitted: u64 =
             admitted_by.iter().map(|v| v.len() as u64).sum();
-        let rejected = rejected.load(Ordering::Relaxed);
+        let rejected = rejected.load(Ordering::Relaxed); // relaxed-ok: read after join
         assert_eq!(admitted + rejected, offered, "requests lost in the race");
         assert_eq!(fd.depth() as u64, admitted, "queue depth out of sync");
         assert!(
@@ -350,4 +356,106 @@ fn prop_concurrent_submit_holds_bounds_and_conservation() {
         assert_eq!(reqs.len() as u64, admitted);
         assert_eq!(fd.depth(), 0);
     });
+}
+
+#[test]
+fn concurrent_tick_submit_failover_holds_rank_discipline() {
+    // The lock-audit acceptance case (DESIGN.md §16): every OrderedMutex/
+    // OrderedRwLock acquisition panics on a rank inversion when the audit
+    // is armed, so it suffices to race the three lock-heaviest paths and
+    // demand that (a) no thread panics and (b) every participant unwinds
+    // to an empty held-rank stack. The three paths cover the full rank
+    // table: group ticks walk UpdateClock → Hotness → QosScores → Drift →
+    // PipelineInner → HandleEntry/Pool, front-door traffic walks
+    // FrontDoorTenants → FrontDoorQueue → LaneTtft, and the failover
+    // fleet exercises both through its own door and replica engines.
+    use dynaexq::config::fleet::FleetConfig;
+    use dynaexq::serving::fleet::Fleet;
+    use dynaexq::util::lockorder::held_ranks;
+    use dynaexq::workload::{FaultPlan, Scenario};
+
+    let preset = ModelPreset::phi_sim();
+    let (n_layers, n_experts) = (preset.n_layers, preset.n_experts);
+    let mut cfg = ServingConfig::default();
+    cfg.update_interval_ms = 1.0;
+    cfg.adaptive_alpha = true; // arms the Drift rank inside the tick walk
+    let group =
+        DeviceGroup::new(&preset, &cfg, &DeviceConfig::default(), 2).unwrap();
+
+    let mut fd_cfg = FrontDoorConfig::unbounded();
+    fd_cfg.queue_capacity = 64;
+    let fd = FrontDoor::new(fd_cfg).unwrap();
+
+    let rounds = stress_cases(10) as usize;
+    std::thread::scope(|s| {
+        // two producers tick the shared group on interleaved time bases
+        for t in 0..2u64 {
+            let group = &group;
+            s.spawn(move || {
+                for i in 0..rounds * 20 {
+                    group.record_routing(
+                        i % n_layers,
+                        &[i % n_experts, (3 * i + 1) % n_experts],
+                    );
+                    if i % 5 == t as usize {
+                        group.wait_staged();
+                        group.tick(0.0011 * (i as f64 + t as f64 / 2.0));
+                    }
+                }
+                assert!(
+                    held_ranks().is_empty(),
+                    "group producer left ranks held: {:?}",
+                    held_ranks()
+                );
+            });
+        }
+        // two producers hammer the shared front door; one also drains
+        for t in 0..2u64 {
+            let fd = &fd;
+            s.spawn(move || {
+                let mut gen = RequestGenerator::new(
+                    WorkloadProfile::text(),
+                    0xA0D17 + t,
+                );
+                for i in 0..rounds * 20 {
+                    let req = gen.request(8, 2, 0.0);
+                    let lane = Lane::ALL[i % 3];
+                    let _ = fd.submit(req, &format!("t{}", i % 3), lane, 0.0);
+                    if t == 0 && i % 7 == 0 {
+                        let _ = fd.take_scheduled();
+                    }
+                }
+                assert!(
+                    held_ranks().is_empty(),
+                    "door producer left ranks held: {:?}",
+                    held_ranks()
+                );
+            });
+        }
+        // main thread: a 2-replica fleet through a mid-stream failover
+        let mut fleet = Fleet::builder()
+            .model("phi-sim")
+            .method("dynaexq")
+            .seed(0xD15C)
+            .warmup(0)
+            .fleet_cfg(FleetConfig {
+                replicas: 2,
+                stream_chunk: Some(1),
+                ..FleetConfig::default()
+            })
+            .build()
+            .unwrap();
+        let sc = Scenario::steady().with_faults(FaultPlan::fail(0, 2));
+        fleet.run_scenario(&sc, 4, 16, 4).unwrap();
+        assert!(fleet.stats().failovers >= 1, "fault script never fired");
+    });
+    assert!(
+        held_ranks().is_empty(),
+        "driver left ranks held: {:?}",
+        held_ranks()
+    );
+    // drain what the races left behind so the door ends consistent
+    let (_, reqs) = fd.take_scheduled();
+    assert!(reqs.len() <= 64);
+    assert_eq!(fd.depth(), 0);
 }

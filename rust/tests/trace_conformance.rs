@@ -34,7 +34,7 @@ fn recorded_trace(preset: &ModelPreset) -> Trace {
     );
     e.serve_uniform(&w, 4, 24, 16);
     e.serve_uniform(&w, 2, 16, 8);
-    let trace = handle.lock().unwrap().clone();
+    let trace = handle.lock().clone();
     trace
 }
 

@@ -1,0 +1,17 @@
+//! Fixture: conformant code — ranked lock wrappers, BTreeMap, annotated
+//! Relaxed. Must produce zero findings under every module path.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct State {
+    counts: BTreeMap<String, u64>,
+    hits: AtomicU64,
+}
+
+impl State {
+    pub fn observe(&mut self, key: &str) {
+        *self.counts.entry(key.to_string()).or_insert(0) += 1;
+        self.hits.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
+    }
+}

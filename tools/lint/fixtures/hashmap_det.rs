@@ -1,0 +1,10 @@
+//! Fixture: `HashMap` in a module (fires `hashmap-det` only when the
+//! file path is one of the snapshot/kv/trace modules).
+
+use std::collections::HashMap;
+
+pub fn snapshot() -> HashMap<String, u64> {
+    let mut m = HashMap::new();
+    m.insert("k".to_string(), 1);
+    m
+}

@@ -1,0 +1,13 @@
+//! Fixture: raw `std::sync` lock construction (fires `raw-lock` three
+//! times — two `Mutex` lines, one `RwLock` line). Mentioning Mutex here
+//! in the doc comment must NOT fire.
+
+pub struct Holder {
+    slot: std::sync::Mutex<u32>,
+}
+
+pub fn build() -> Holder {
+    let rw = std::sync::RwLock::new(0u32);
+    let _ = rw.read();
+    Holder { slot: std::sync::Mutex::new(7) }
+}

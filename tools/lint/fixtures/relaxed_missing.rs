@@ -1,0 +1,10 @@
+//! Fixture: `Ordering::Relaxed` without a same-line reason (fires
+//! `relaxed-ok` exactly once — the import line and the annotated line
+//! are exempt).
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+pub fn bump(c: &AtomicU64, d: &AtomicU64) {
+    c.fetch_add(1, Relaxed);
+    d.fetch_add(1, Relaxed); // relaxed-ok: stat counter
+}

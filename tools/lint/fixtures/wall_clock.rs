@@ -1,0 +1,9 @@
+//! Fixture: wall-clock reads (fires `wall-clock` three times — Instant,
+//! SystemTime, thread::sleep — everywhere except bench/runtime.rs).
+
+pub fn toll() -> u128 {
+    let t0 = std::time::Instant::now();
+    std::thread::sleep(std::time::Duration::from_millis(1));
+    let _ = std::time::SystemTime::UNIX_EPOCH;
+    t0.elapsed().as_nanos()
+}

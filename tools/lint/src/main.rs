@@ -1,0 +1,619 @@
+//! `dynaexq-lint`: the concurrency-conformance linter (DESIGN.md §16).
+//!
+//! A zero-dependency lexical scanner over `rust/src` that enforces the
+//! invariants the type system cannot:
+//!
+//! * **raw-lock** — `std::sync::Mutex` / `RwLock` may only be named inside
+//!   `util/lockorder.rs`; everything else goes through the ranked
+//!   [`OrderedMutex`]/[`OrderedRwLock`] wrappers, so the lock-order audit
+//!   cannot be bypassed by construction.
+//! * **wall-clock** — `Instant` / `SystemTime` / `thread::sleep` are
+//!   banned outside `bench/runtime.rs`: the simulated stack is driven by
+//!   virtual time, and a stray wall-clock read silently breaks replay
+//!   determinism.
+//! * **hashmap-det** — modules that emit snapshots, traces, or kv text
+//!   must use `BTreeMap`; `HashMap` iteration order would leak hash-seed
+//!   nondeterminism into golden artifacts.
+//! * **relaxed-ok** — every `Ordering::Relaxed` must carry a same-line
+//!   `// relaxed-ok: <reason>` comment naming why relaxed suffices.
+//!
+//! The scanner strips comments, strings, and char literals before token
+//! matching (same spirit as the serde-free `bench::json` parser), so prose
+//! mentioning `Mutex` never fires. Intentional exceptions live in the
+//! checked-in whitelist (`tools/lint/lint.allow`), one `<path-suffix>
+//! <rule>` pair per line.
+//!
+//! Exit status: 0 when clean, 1 with findings, 2 on usage/IO errors.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Modules whose output must be byte-stable across runs (snapshot / kv /
+/// trace emitters): `HashMap` is banned here, `BTreeMap` required.
+const DETERMINISTIC_MODULES: &[&str] = &[
+    "config/kv.rs",
+    "serving/session.rs",
+    "serving/backend.rs",
+    "bench/json.rs",
+    "workload/traces.rs",
+    "metrics/mod.rs",
+];
+
+/// The one module allowed to name raw `std::sync` locks (it wraps them).
+const LOCKORDER_MODULE: &str = "util/lockorder.rs";
+
+/// The one module allowed to read wall-clock time (bench harness timing).
+const WALLCLOCK_MODULE: &str = "bench/runtime.rs";
+
+#[derive(Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct Finding {
+    path: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// One whitelist entry: suppresses `rule` findings in files whose
+/// repo-relative path ends with `path_suffix`.
+#[derive(Debug)]
+struct Allow {
+    path_suffix: String,
+    rule: String,
+    used: std::cell::Cell<bool>,
+}
+
+fn parse_allowlist(text: &str) -> Result<Vec<Allow>, String> {
+    let mut out = Vec::new();
+    for (n, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        match (parts.next(), parts.next(), parts.next()) {
+            (Some(p), Some(r), None) => out.push(Allow {
+                path_suffix: p.to_string(),
+                rule: r.to_string(),
+                used: std::cell::Cell::new(false),
+            }),
+            _ => {
+                return Err(format!(
+                    "lint.allow line {}: expected `<path-suffix> <rule>`, \
+                     got {line:?}",
+                    n + 1
+                ))
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Blank out comments, string/char literals, and raw strings, preserving
+/// line structure (stripped chars become spaces, newlines survive), so
+/// token matching only ever sees code.
+fn strip_noncode(src: &str) -> String {
+    let cs: Vec<char> = src.chars().collect();
+    let mut out = String::with_capacity(src.len());
+    let mut prev_ident = false; // last emitted char was an identifier char
+    let mut i = 0;
+    let blank = |out: &mut String, c: char| {
+        out.push(if c == '\n' { '\n' } else { ' ' })
+    };
+    while i < cs.len() {
+        let c = cs[i];
+        // line comment
+        if c == '/' && cs.get(i + 1) == Some(&'/') {
+            while i < cs.len() && cs[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            prev_ident = false;
+            continue;
+        }
+        // block comment (Rust block comments nest)
+        if c == '/' && cs.get(i + 1) == Some(&'*') {
+            let mut depth = 0;
+            while i < cs.len() {
+                if cs[i] == '/' && cs.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    blank(&mut out, cs[i]);
+                    blank(&mut out, cs[i + 1]);
+                    i += 2;
+                } else if cs[i] == '*' && cs.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    blank(&mut out, cs[i]);
+                    blank(&mut out, cs[i + 1]);
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    blank(&mut out, cs[i]);
+                    i += 1;
+                }
+            }
+            prev_ident = false;
+            continue;
+        }
+        // raw (byte) string: r"..." / r#"..."# / br"..."
+        if !prev_ident && (c == 'r' || (c == 'b' && cs.get(i + 1) == Some(&'r')))
+        {
+            let start = if c == 'b' { i + 2 } else { i + 1 };
+            let mut hashes = 0;
+            while cs.get(start + hashes) == Some(&'#') {
+                hashes += 1;
+            }
+            if cs.get(start + hashes) == Some(&'"') {
+                // emit the prefix as spaces, then skip to the terminator
+                for &pc in &cs[i..start + hashes + 1] {
+                    blank(&mut out, pc);
+                }
+                i = start + hashes + 1;
+                'raw: while i < cs.len() {
+                    if cs[i] == '"' {
+                        let mut ok = true;
+                        for h in 0..hashes {
+                            if cs.get(i + 1 + h) != Some(&'#') {
+                                ok = false;
+                                break;
+                            }
+                        }
+                        if ok {
+                            for k in 0..=hashes {
+                                blank(&mut out, cs[i + k]);
+                            }
+                            i += hashes + 1;
+                            break 'raw;
+                        }
+                    }
+                    blank(&mut out, cs[i]);
+                    i += 1;
+                }
+                prev_ident = false;
+                continue;
+            }
+        }
+        // ordinary (byte) string literal
+        if c == '"' || (c == 'b' && cs.get(i + 1) == Some(&'"') && !prev_ident)
+        {
+            if c == 'b' {
+                blank(&mut out, c);
+                i += 1;
+            }
+            blank(&mut out, cs[i]); // opening quote
+            i += 1;
+            while i < cs.len() {
+                if cs[i] == '\\' {
+                    blank(&mut out, cs[i]);
+                    if i + 1 < cs.len() {
+                        blank(&mut out, cs[i + 1]);
+                    }
+                    i += 2;
+                    continue;
+                }
+                let done = cs[i] == '"';
+                blank(&mut out, cs[i]);
+                i += 1;
+                if done {
+                    break;
+                }
+            }
+            prev_ident = false;
+            continue;
+        }
+        // char literal vs lifetime: 'x' / '\n' are literals; 'a in a type
+        // position has no closing quote right after the name
+        if c == '\'' {
+            let is_literal = match cs.get(i + 1) {
+                Some('\\') => true,
+                Some(&n) if n != '\'' => cs.get(i + 2) == Some(&'\''),
+                _ => false,
+            };
+            if is_literal {
+                blank(&mut out, c);
+                i += 1;
+                while i < cs.len() {
+                    if cs[i] == '\\' {
+                        blank(&mut out, cs[i]);
+                        if i + 1 < cs.len() {
+                            blank(&mut out, cs[i + 1]);
+                        }
+                        i += 2;
+                        continue;
+                    }
+                    let done = cs[i] == '\'';
+                    blank(&mut out, cs[i]);
+                    i += 1;
+                    if done {
+                        break;
+                    }
+                }
+                prev_ident = false;
+                continue;
+            }
+        }
+        out.push(c);
+        prev_ident = c.is_alphanumeric() || c == '_';
+        i += 1;
+    }
+    out
+}
+
+/// Whether `tok` occurs in `line` as a whole token: the characters on
+/// both sides (if any) are not identifier characters, so `Mutex` never
+/// matches inside `OrderedMutex` or `MutexGuard`.
+fn has_token(line: &str, tok: &str) -> bool {
+    let bytes = line.as_bytes();
+    let is_ident =
+        |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    let mut from = 0;
+    while let Some(pos) = line[from..].find(tok) {
+        let start = from + pos;
+        let end = start + tok.len();
+        let left_ok = start == 0 || !is_ident(bytes[start - 1]);
+        let right_ok = end >= bytes.len() || !is_ident(bytes[end]);
+        if left_ok && right_ok {
+            return true;
+        }
+        from = start + 1;
+    }
+    false
+}
+
+/// Scan one source file. `rel_path` is the repo-relative path with `/`
+/// separators (rule applicability is decided by path suffix).
+fn scan_file(rel_path: &str, src: &str) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let code = strip_noncode(src);
+    let in_module = |m: &str| rel_path.ends_with(m);
+    let deterministic =
+        DETERMINISTIC_MODULES.iter().any(|m| in_module(m));
+    for ((n, code_line), raw_line) in
+        code.lines().enumerate().zip(src.lines())
+    {
+        let line = n + 1;
+        let mut push = |rule: &'static str, msg: String| {
+            findings.push(Finding {
+                path: rel_path.to_string(),
+                line,
+                rule,
+                msg,
+            })
+        };
+        if !in_module(LOCKORDER_MODULE) {
+            for tok in ["Mutex", "RwLock"] {
+                if has_token(code_line, tok) {
+                    push(
+                        "raw-lock",
+                        format!(
+                            "raw std::sync::{tok} outside util::lockorder; \
+                             use Ordered{tok} with a LockRank"
+                        ),
+                    );
+                }
+            }
+        }
+        if !in_module(WALLCLOCK_MODULE) {
+            for tok in ["Instant", "SystemTime", "thread::sleep"] {
+                if has_token(code_line, tok) {
+                    push(
+                        "wall-clock",
+                        format!(
+                            "{tok} outside bench::runtime breaks \
+                             virtual-time determinism"
+                        ),
+                    );
+                }
+            }
+        }
+        if deterministic && has_token(code_line, "HashMap") {
+            push(
+                "hashmap-det",
+                "HashMap in a snapshot/kv/trace module; use BTreeMap \
+                 for stable iteration order"
+                    .to_string(),
+            );
+        }
+        if has_token(code_line, "Relaxed")
+            && !code_line.trim_start().starts_with("use ")
+            && !raw_line.contains("relaxed-ok:")
+        {
+            push(
+                "relaxed-ok",
+                "Ordering::Relaxed without a same-line \
+                 `// relaxed-ok: <reason>` comment"
+                    .to_string(),
+            );
+        }
+    }
+    findings
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for stable output.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> =
+        fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn run(root: &Path, allow_path: &Path) -> Result<Vec<Finding>, String> {
+    let allows = match fs::read_to_string(allow_path) {
+        Ok(text) => parse_allowlist(&text)?,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+        Err(e) => {
+            return Err(format!("reading {}: {e}", allow_path.display()))
+        }
+    };
+    let src_root = root.join("rust").join("src");
+    let mut files = Vec::new();
+    collect_rs(&src_root, &mut files)
+        .map_err(|e| format!("walking {}: {e}", src_root.display()))?;
+    let mut findings = Vec::new();
+    for file in &files {
+        let rel = file
+            .strip_prefix(root)
+            .unwrap_or(file)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(file)
+            .map_err(|e| format!("reading {}: {e}", file.display()))?;
+        for f in scan_file(&rel, &src) {
+            let allowed = allows.iter().any(|a| {
+                let hit = f.rule == a.rule
+                    && f.path.ends_with(&a.path_suffix);
+                if hit {
+                    a.used.set(true);
+                }
+                hit
+            });
+            if !allowed {
+                findings.push(f);
+            }
+        }
+    }
+    for a in &allows {
+        if !a.used.get() {
+            eprintln!(
+                "warning: unused lint.allow entry `{} {}`",
+                a.path_suffix, a.rule
+            );
+        }
+    }
+    findings.sort();
+    Ok(findings)
+}
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut allow: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = PathBuf::from(v),
+                None => {
+                    eprintln!("--root needs a directory");
+                    return ExitCode::from(2);
+                }
+            },
+            "--allow" => match args.next() {
+                Some(v) => allow = Some(PathBuf::from(v)),
+                None => {
+                    eprintln!("--allow needs a file");
+                    return ExitCode::from(2);
+                }
+            },
+            other => {
+                eprintln!(
+                    "usage: dynaexq-lint [--root DIR] [--allow FILE] \
+                     (unknown arg {other:?})"
+                );
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let allow = allow
+        .unwrap_or_else(|| root.join("tools").join("lint").join("lint.allow"));
+    match run(&root, &allow) {
+        Ok(findings) if findings.is_empty() => {
+            println!("dynaexq-lint: clean");
+            ExitCode::SUCCESS
+        }
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            println!("dynaexq-lint: {} finding(s)", findings.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("dynaexq-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(name: &str) -> String {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("fixtures")
+            .join(name);
+        fs::read_to_string(&p)
+            .unwrap_or_else(|e| panic!("fixture {}: {e}", p.display()))
+    }
+
+    fn rules(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn raw_lock_fires_outside_lockorder() {
+        let src = fixture("raw_mutex.rs");
+        let f = scan_file("rust/src/serving/somewhere.rs", &src);
+        assert!(rules(&f).contains(&"raw-lock"), "{f:?}");
+        // both Mutex and RwLock lines are caught
+        assert_eq!(
+            f.iter().filter(|x| x.rule == "raw-lock").count(),
+            3,
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn raw_lock_allowed_inside_lockorder() {
+        let src = fixture("raw_mutex.rs");
+        let f = scan_file("rust/src/util/lockorder.rs", &src);
+        assert!(!rules(&f).contains(&"raw-lock"), "{f:?}");
+    }
+
+    #[test]
+    fn wall_clock_fires_outside_bench_runtime() {
+        let src = fixture("wall_clock.rs");
+        let f = scan_file("rust/src/coordinator/mod.rs", &src);
+        assert_eq!(
+            f.iter().filter(|x| x.rule == "wall-clock").count(),
+            3,
+            "{f:?}"
+        );
+        let f = scan_file("rust/src/bench/runtime.rs", &src);
+        assert!(!rules(&f).contains(&"wall-clock"), "{f:?}");
+    }
+
+    #[test]
+    fn hashmap_fires_only_in_deterministic_modules() {
+        let src = fixture("hashmap_det.rs");
+        let f = scan_file("rust/src/config/kv.rs", &src);
+        assert!(rules(&f).contains(&"hashmap-det"), "{f:?}");
+        let f = scan_file("rust/src/coordinator/mod.rs", &src);
+        assert!(!rules(&f).contains(&"hashmap-det"), "{f:?}");
+    }
+
+    #[test]
+    fn relaxed_requires_same_line_reason() {
+        let src = fixture("relaxed_missing.rs");
+        let f = scan_file("rust/src/coordinator/mod.rs", &src);
+        // one bare Relaxed fires; the annotated one and the use-line don't
+        assert_eq!(
+            f.iter().filter(|x| x.rule == "relaxed-ok").count(),
+            1,
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn clean_fixture_is_clean_everywhere() {
+        let src = fixture("clean.rs");
+        for path in [
+            "rust/src/config/kv.rs",
+            "rust/src/coordinator/mod.rs",
+            "rust/src/serving/backend.rs",
+        ] {
+            let f = scan_file(path, &src);
+            assert!(f.is_empty(), "{path}: {f:?}");
+        }
+    }
+
+    #[test]
+    fn tokens_in_comments_and_strings_are_ignored() {
+        let src = r##"
+//! Mutex in a doc comment, HashMap too, Instant::now().
+// line comment: RwLock, Ordering::Relaxed
+/* block /* nested */ Mutex */
+fn f() -> &'static str {
+    let _lifetime: Option<&'static str> = None;
+    let _c = 'M';
+    let s = "Mutex<HashMap> Instant Relaxed";
+    let r = r#"SystemTime RwLock"#;
+    s
+}
+"##;
+        let f = scan_file("rust/src/config/kv.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn token_boundaries_exclude_wrappers() {
+        let src = "type A = OrderedMutex<u8>;\n\
+                   type B = MutexGuard<u8>;\n\
+                   type C = OrderedRwLock<u8>;\n\
+                   type D = RwLockReadGuard<u8>;\n";
+        let f = scan_file("rust/src/serving/x.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn allowlist_suppresses_by_suffix_and_rule() {
+        let allows =
+            parse_allowlist("# comment\nbench/mod.rs wall-clock\n").unwrap();
+        let f = Finding {
+            path: "rust/src/bench/mod.rs".into(),
+            line: 1,
+            rule: "wall-clock",
+            msg: String::new(),
+        };
+        assert!(allows
+            .iter()
+            .any(|a| f.rule == a.rule && f.path.ends_with(&a.path_suffix)));
+        // same path, different rule: not suppressed
+        assert!(!allows
+            .iter()
+            .any(|a| "raw-lock" == a.rule
+                && f.path.ends_with(&a.path_suffix)));
+    }
+
+    #[test]
+    fn allowlist_rejects_malformed_lines() {
+        assert!(parse_allowlist("just-one-field\n").is_err());
+        assert!(parse_allowlist("a b c\n").is_err());
+        assert!(parse_allowlist("\n# only comments\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn strip_preserves_line_numbers() {
+        let src = "line1\n/* a\nb\nc */ Mutex::new(())\n";
+        let f = scan_file("rust/src/x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 4, "{f:?}");
+    }
+
+    #[test]
+    fn whole_tree_is_clean() {
+        // The real tree with the real whitelist: the CI contract.
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("..")
+            .join("..");
+        if !root.join("rust").join("src").is_dir() {
+            return; // packaged standalone; nothing to scan
+        }
+        let allow = root.join("tools").join("lint").join("lint.allow");
+        let findings = run(&root, &allow).unwrap();
+        assert!(
+            findings.is_empty(),
+            "tree has unexempted findings:\n{}",
+            findings
+                .iter()
+                .map(|f| f.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}
